@@ -1,0 +1,100 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run once via ``make artifacts``; the Rust runtime loads the text with
+``HloModuleProto::from_text_file`` and compiles it on its own PJRT CPU
+client. HLO text (not serialized proto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id
+protos, while the text parser reassigns ids (see aot_recipe /
+/opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH = 256
+
+# Mirrors rust/src/model/config.rs (§6.2 of the paper).
+DATASETS = {
+    "banking": {"active_dim": 57, "group_dims": [3, 20], "hidden": 64},
+    "adult": {"active_dim": 27, "group_dims": [63, 16], "hidden": 64},
+    "taobao": {"active_dim": 197, "group_dims": [11, 6], "hidden": 128},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_dataset(name, cfg, out_dir):
+    """Lower all graphs for one dataset; returns the manifest entry."""
+    b = BATCH
+    h = cfg["hidden"]
+    d0 = cfg["active_dim"]
+    arts = {}
+
+    def emit(key, fn, *specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{key}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        arts[key] = fname
+
+    # active-party forward: x@w + bias + mask
+    emit("fwd_active", model.party_fwd_bias, f32(b, d0), f32(d0, h), f32(h), f32(b, h))
+    # active-party backward: (xT@dz + mw, sum(dz) + mb)
+    emit("bwd_active", model.party_bwd_bias, f32(b, d0), f32(b, h), f32(d0, h), f32(h))
+    for g, dg in enumerate(cfg["group_dims"]):
+        emit(f"fwd_g{g}", model.party_fwd, f32(b, dg), f32(dg, h), f32(b, h))
+        emit(f"bwd_g{g}", model.party_bwd, f32(b, dg), f32(b, h), f32(dg, h))
+    # aggregator global module: fused fwd+bwd
+    emit("global_step", model.global_step, f32(b, h), f32(h, 1), f32(1), f32(b))
+    # testing phase: probabilities only
+    emit("predict", model.predict, f32(b, h), f32(h, 1), f32(1))
+
+    return {
+        "active_dim": d0,
+        "group_dims": cfg["group_dims"],
+        "hidden": h,
+        "artifacts": arts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--datasets", nargs="*", default=list(DATASETS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"batch": BATCH, "datasets": {}}
+    for name in args.datasets:
+        cfg = DATASETS[name]
+        manifest["datasets"][name] = lower_dataset(name, cfg, args.out_dir)
+        print(f"lowered {name}: {len(manifest['datasets'][name]['artifacts'])} artifacts")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['datasets'])} datasets to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

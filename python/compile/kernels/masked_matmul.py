@@ -1,0 +1,110 @@
+"""Layer-1 Pallas kernel: fused masked matmul.
+
+The compute hot-spot of the protocol's forward/backward passes is a
+party-local ``x @ W (+ b) + mask`` (Eq. 2 / Eq. 6 of the paper): a dense
+matmul immediately followed by the secure-aggregation mask addition.
+Fusing the mask-add into the matmul's epilogue means the masked
+activation never exists unfused in HBM — one pass, one kernel.
+
+TPU-style design notes (DESIGN.md §Hardware-Adaptation):
+  * BlockSpec tiles of (128, k) x (k, n_block) keep each grid step's
+    working set ≤ ~0.5 MiB of VMEM (k ≤ 256, n ≤ 128 for every config
+    in the paper), far under the ~16 MiB budget.
+  * the inner ``jnp.dot`` targets the MXU with
+    ``preferred_element_type=float32`` so a bf16 x/w variant would still
+    accumulate in f32.
+  * masks stream in through the same tiling as the output tile, so the
+    HBM↔VMEM schedule is exactly one read of x, W, mask and one write.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (see /opt/xla-example
+README). The BlockSpec structure is unchanged; on a real TPU the same
+code lowers to Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-row tile. 128 matches the MXU systolic dimension.
+BLOCK_M = 128
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref):
+    """o = x @ w + m for one (BLOCK_M, n) output tile."""
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + m_ref[...]
+    )
+
+
+def _masked_matmul_bias_kernel(x_ref, w_ref, b_ref, m_ref, o_ref):
+    """o = x @ w + b + m for one (BLOCK_M, n) output tile."""
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+        + m_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def masked_matmul(x, w, mask):
+    """``x @ w + mask`` with the mask fused into the matmul epilogue.
+
+    x: (B, k) f32 — party features (B a multiple of BLOCK_M, or ≤ it)
+    w: (k, n) f32 — party weight module
+    mask: (B, n) f32 — decoded secure-aggregation mask (zeros when the
+          coordinator masks in the exact ℤ₂⁶⁴ domain instead)
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert mask.shape == (b, n)
+    block_m = BLOCK_M if b % BLOCK_M == 0 else b  # odd row counts: one tile
+    grid = (b // block_m,)
+    return pl.pallas_call(
+        _masked_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, w, mask)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def masked_matmul_bias(x, w, bias, mask):
+    """``x @ w + bias + mask`` (active-party variant; §6.2: only the
+    active party's module is biased)."""
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    assert bias.shape == (n,)
+    assert mask.shape == (b, n)
+    block_m = BLOCK_M if b % BLOCK_M == 0 else b
+    grid = (b // block_m,)
+    return pl.pallas_call(
+        _masked_matmul_bias_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, w, bias, mask)
+
+
+def vmem_footprint_bytes(b, k, n):
+    """Estimated per-grid-step VMEM working set (DESIGN.md §Perf)."""
+    block_m = BLOCK_M if b % BLOCK_M == 0 else b
+    return 4 * (block_m * k + k * n + 2 * block_m * n + n)

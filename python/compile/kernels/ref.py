@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model graphs.
+
+Every kernel/graph in this package has a reference twin here; pytest
+asserts allclose between the two under hypothesis-driven shape sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(x, w, mask):
+    return jnp.dot(x, w) + mask
+
+
+def masked_matmul_bias_ref(x, w, bias, mask):
+    return jnp.dot(x, w) + bias[None, :] + mask
+
+
+def party_bwd_ref(x, dz, mask):
+    return jnp.dot(x.T, dz) + mask
+
+
+def global_step_ref(z, wg, bg, y):
+    """Reference forward+backward of the aggregator's global module."""
+    h1 = jnp.maximum(z, 0.0)
+    logits = jnp.dot(h1, wg)[:, 0] + bg[0]
+    # numerically stable BCE on logits
+    loss = jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    probs = 1.0 / (1.0 + jnp.exp(-logits))
+    batch = z.shape[0]
+    dlogit = (probs - y) / batch  # (B,)
+    dwg = jnp.dot(h1.T, dlogit[:, None])  # (h, 1)
+    dbg = jnp.sum(dlogit)[None]
+    dh1 = dlogit[:, None] * wg[None, :, 0]  # (B, h)
+    dz = jnp.where(z > 0.0, dh1, 0.0)
+    return loss, probs, dz, dwg, dbg

@@ -1,0 +1,76 @@
+"""Layer-2 JAX model: the per-party and global compute graphs of the
+paper's VFL architecture (§3, §6.2), built on the Layer-1 Pallas kernel.
+
+These functions are traced once by ``aot.py`` and lowered to HLO text;
+the Rust coordinator executes the compiled artifacts on its PJRT client.
+Python never runs on the request path.
+
+Graphs (B = batch, d = party input width, h = hidden):
+  party_fwd        (x, w, mask)        -> x@w + mask              (Eq. 2)
+  party_fwd_bias   (x, w, b, mask)     -> x@w + b + mask          (active)
+  party_bwd        (x, dz, mask)       -> xT@dz + mask            (Eq. 6)
+  party_bwd_bias   (x, dz, mw, mb)     -> (xT@dz + mw, sum(dz) + mb)
+  global_step      (z, wg, bg, y)      -> loss, probs, dz, dwg, dbg
+  predict          (z, wg, bg)         -> probs                   (§4.0.3)
+
+The ``mask`` inputs take the float-decoded secure-aggregation masks; in
+the default exact-ℤ₂⁶⁴ protocol mode the coordinator passes zeros and
+masks the fixed-point encoding instead (DESIGN.md §Masking).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.masked_matmul import masked_matmul, masked_matmul_bias
+
+
+def party_fwd(x, w, mask):
+    """Passive-party contribution to the summed embedding (Eq. 2)."""
+    return masked_matmul(x, w, mask)
+
+
+def party_fwd_bias(x, w, b, mask):
+    """Active-party contribution (biased module, §6.2)."""
+    return masked_matmul_bias(x, w, b, mask)
+
+
+def party_bwd(x, dz, mask):
+    """Party weight gradient given the broadcast dz (Eq. 6): xᵀ@dz."""
+    # reuse the fused kernel on the transposed operand; d×B @ B×h
+    return masked_matmul(x.T, dz, mask)
+
+
+def party_bwd_bias(x, dz, mask_w, mask_b):
+    """Active party: weight and bias gradients, both masked."""
+    dw = masked_matmul(x.T, dz, mask_w)
+    db = jnp.sum(dz, axis=0) + mask_b
+    return dw, db
+
+
+def global_step(z, wg, bg, y):
+    """Aggregator global module: forward, loss, and backward.
+
+    z:  (B, h) summed embedding (masks already cancelled)
+    wg: (h, 1) global weights;  bg: (1,) bias;  y: (B,) labels
+    Returns (loss, probs, dz, dwg, dbg).
+    """
+    h1 = jnp.maximum(z, 0.0)  # ReLU on the *summed* embedding (§6.2)
+    logits = jnp.dot(h1, wg)[:, 0] + bg[0]
+    loss = jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    probs = jax.nn.sigmoid(logits)
+    batch = z.shape[0]
+    dlogit = (probs - y) / batch
+    dwg = jnp.dot(h1.T, dlogit[:, None])
+    dbg = jnp.sum(dlogit)[None]
+    dh1 = dlogit[:, None] * wg[None, :, 0]
+    dz = jnp.where(z > 0.0, dh1, 0.0)
+    return loss, probs, dz, dwg, dbg
+
+
+def predict(z, wg, bg):
+    """Testing-phase forward (§4.0.3): probabilities only."""
+    h1 = jnp.maximum(z, 0.0)
+    logits = jnp.dot(h1, wg)[:, 0] + bg[0]
+    return jax.nn.sigmoid(logits)

@@ -1,0 +1,70 @@
+"""AOT path: every graph lowers to parseable HLO text with the right
+parameter/result shapes, for every dataset config."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def lower_text(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+class TestLowering:
+    def test_all_datasets_lower(self, tmp_path):
+        for name, cfg in aot.DATASETS.items():
+            entry = aot.lower_dataset(name, cfg, str(tmp_path))
+            assert len(entry["artifacts"]) == 8, name
+            for fname in entry["artifacts"].values():
+                text = (tmp_path / fname).read_text()
+                assert "ENTRY" in text, f"{fname} must be HLO text"
+                assert "ROOT" in text
+
+    def test_hlo_is_tuple_rooted(self):
+        # return_tuple=True → root is a tuple (what the Rust loader expects)
+        b, d, h = 256, 57, 64
+        text = lower_text(
+            model.party_fwd,
+            aot.f32(b, d),
+            aot.f32(d, h),
+            aot.f32(b, h),
+        )
+        assert "tuple(" in text.replace(" ", "").lower() or "(f32[256,64]{1,0})" in text
+
+    def test_global_step_has_five_outputs(self):
+        b, h = 256, 64
+        text = lower_text(
+            model.global_step, aot.f32(b, h), aot.f32(h, 1), aot.f32(1), aot.f32(b)
+        )
+        # loss scalar, probs (256), dz (256,64), dwg (64,1), dbg (1)
+        assert "f32[256,64]" in text
+        assert "f32[64,1]" in text
+
+    def test_batch_constant(self):
+        assert aot.BATCH == 256  # the paper's batch size
+
+    def test_dataset_dims_match_rust(self):
+        # mirror of rust/src/model/config.rs tests
+        assert aot.DATASETS["banking"] == {"active_dim": 57, "group_dims": [3, 20], "hidden": 64}
+        assert aot.DATASETS["adult"] == {"active_dim": 27, "group_dims": [63, 16], "hidden": 64}
+        assert aot.DATASETS["taobao"] == {"active_dim": 197, "group_dims": [11, 6], "hidden": 128}
+
+
+class TestManifest:
+    def test_manifest_written(self, tmp_path):
+        import json
+        import sys
+
+        argv = sys.argv
+        sys.argv = ["aot", "--out-dir", str(tmp_path), "--datasets", "banking"]
+        try:
+            aot.main()
+        finally:
+            sys.argv = argv
+        m = json.loads((tmp_path / "manifest.json").read_text())
+        assert m["batch"] == 256
+        assert "banking" in m["datasets"]
+        assert len(m["datasets"]["banking"]["artifacts"]) == 8

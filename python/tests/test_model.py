@@ -1,0 +1,112 @@
+"""L2 correctness: global_step gradients vs jax.grad, model shapes, and
+end-to-end consistency of the lowered graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestGlobalStep:
+    @settings(max_examples=20, deadline=None)
+    @given(b=st.integers(2, 64), h=st.integers(1, 32), seed=st.integers(0, 2**31))
+    def test_matches_ref(self, b, h, seed):
+        kz, kw, ky = keys(seed, 3)
+        z, wg = rand(kz, b, h), rand(kw, h, 1)
+        bg = jnp.array([0.1], dtype=jnp.float32)
+        y = (jax.random.uniform(ky, (b,)) > 0.5).astype(jnp.float32)
+        got = model.global_step(z, wg, bg, y)
+        want = ref.global_step_ref(z, wg, bg, y)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(2, 32), h=st.integers(1, 16), seed=st.integers(0, 2**31))
+    def test_gradients_match_autodiff(self, b, h, seed):
+        kz, kw, ky = keys(seed, 3)
+        z, wg = rand(kz, b, h), rand(kw, h, 1)
+        bg = jnp.array([-0.2], dtype=jnp.float32)
+        y = (jax.random.uniform(ky, (b,)) > 0.5).astype(jnp.float32)
+
+        def loss_fn(z, wg, bg):
+            return model.global_step(z, wg, bg, y)[0]
+
+        az, awg, abg = jax.grad(loss_fn, argnums=(0, 1, 2))(z, wg, bg)
+        _, _, dz, dwg, dbg = model.global_step(z, wg, bg, y)
+        np.testing.assert_allclose(dz, az, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(dwg, awg, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(dbg, abg, rtol=1e-4, atol=1e-6)
+
+    def test_loss_decreases_under_sgd(self):
+        kz, kw, ky = keys(42, 3)
+        b, h = 64, 16
+        z = rand(kz, b, h)
+        wg = rand(kw, h, 1) * 0.1
+        bg = jnp.zeros(1, dtype=jnp.float32)
+        y = (z[:, 0] > 0).astype(jnp.float32)
+        loss0 = None
+        for _ in range(100):
+            loss, probs, dz, dwg, dbg = model.global_step(z, wg, bg, y)
+            if loss0 is None:
+                loss0 = loss
+            wg = wg - 1.0 * dwg
+            bg = bg - 1.0 * dbg
+        loss1 = model.global_step(z, wg, bg, y)[0]
+        assert loss1 < loss0 * 0.8, f"{loss0} -> {loss1}"
+
+    def test_predict_matches_global_step_probs(self):
+        kz, kw, ky = keys(3, 3)
+        z, wg = rand(kz, 32, 8), rand(kw, 8, 1)
+        bg = jnp.array([0.3], dtype=jnp.float32)
+        y = jnp.zeros(32, dtype=jnp.float32)
+        probs_step = model.global_step(z, wg, bg, y)[1]
+        probs_pred = model.predict(z, wg, bg)
+        np.testing.assert_allclose(probs_pred, probs_step, rtol=1e-6)
+
+
+class TestPartyGraphs:
+    def test_fwd_composition_equals_centralized(self):
+        # sum of party forwards == centralized x_full @ w_full (+ bias)
+        k = keys(9, 6)
+        b, h = 128, 16
+        d0, d1, d2 = 5, 3, 4
+        x0, x1, x2 = rand(k[0], b, d0), rand(k[1], b, d1), rand(k[2], b, d2)
+        w0, w1, w2 = rand(k[3], d0, h), rand(k[4], d1, h), rand(k[5], d2, h)
+        bias = jnp.ones(h, dtype=jnp.float32) * 0.5
+        zeros = jnp.zeros((b, h))
+        z = (
+            model.party_fwd_bias(x0, w0, bias, zeros)
+            + model.party_fwd(x1, w1, zeros)
+            + model.party_fwd(x2, w2, zeros)
+        )
+        x_full = jnp.concatenate([x0, x1, x2], axis=1)
+        w_full = jnp.concatenate([w0, w1, w2], axis=0)
+        np.testing.assert_allclose(z, x_full @ w_full + bias, rtol=1e-4, atol=1e-5)
+
+    def test_bwd_bias_sums_dz(self):
+        k = keys(10, 2)
+        x, dz = rand(k[0], 128, 6), rand(k[1], 128, 8)
+        mw, mb = jnp.zeros((6, 8)), jnp.zeros(8)
+        dw, db = model.party_bwd_bias(x, dz, mw, mb)
+        np.testing.assert_allclose(dw, x.T @ dz, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(db, dz.sum(0), rtol=1e-4, atol=1e-5)
+
+    def test_masked_bwd_masks_add(self):
+        k = keys(11, 3)
+        x, dz, m = rand(k[0], 128, 4), rand(k[1], 128, 8), rand(k[2], 4, 8)
+        np.testing.assert_allclose(
+            model.party_bwd(x, dz, m), x.T @ dz + m, rtol=1e-4, atol=1e-5
+        )

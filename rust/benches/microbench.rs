@@ -1,0 +1,107 @@
+//! Microbenchmarks of the hot-path primitives (the §Perf inventory):
+//! mask PRG expansion, fixed-point codec, AEAD seal/open, X25519,
+//! Paillier/BFV primitive ops, and the PJRT party-forward execution.
+//!
+//!     cargo bench --bench microbench
+
+use vfl::bench::{bench_ms, pm};
+use vfl::crypto::aead;
+use vfl::crypto::bfv::{Bfv, BfvParams};
+use vfl::crypto::paillier::PrivateKey;
+use vfl::crypto::prg;
+use vfl::crypto::rng::DetRng;
+use vfl::crypto::x25519::SecretKey;
+use vfl::model::linalg::Mat;
+use vfl::model::{ModelConfig, PartyParams};
+use vfl::runtime::Engine;
+use vfl::secagg::FixedPoint;
+
+fn main() -> anyhow::Result<()> {
+    println!("microbenchmarks (hot-path primitives)\n");
+    let mut rng = DetRng::from_seed(1);
+
+    // mask PRG: one banking activation (256×64) against 4 peers
+    let secrets: Vec<(usize, [u8; 32])> = (1..5)
+        .map(|i| {
+            let mut s = [0u8; 32];
+            rng.fill(&mut s);
+            (i, s)
+        })
+        .collect();
+    let s = bench_ms(50, || {
+        std::hint::black_box(prg::total_mask(&secrets, 0, 1, 0, 256 * 64));
+    });
+    println!("mask PRG  256x64 vs 4 peers : {} ms", pm(&s));
+
+    // fixed-point encode+decode of the same tensor
+    let fp = FixedPoint::default();
+    let vals = vec![0.123f32; 256 * 64];
+    let s = bench_ms(50, || {
+        let w = fp.encode_vec(&vals);
+        std::hint::black_box(fp.decode_vec(&w));
+    });
+    println!("fixed-point codec 256x64    : {} ms", pm(&s));
+
+    // AEAD: seal + trial-open of a 512-entry ID batch
+    let key = [7u8; 32];
+    let s = bench_ms(20, || {
+        for seq in 0..512u32 {
+            let n = aead::make_nonce(0, 1, seq);
+            let sealed = aead::seal(&key, &n, b"aad", &(seq as u64).to_le_bytes());
+            std::hint::black_box(aead::open(&key, &n, b"aad", &sealed));
+        }
+    });
+    println!("AEAD seal+open 512 IDs      : {} ms", pm(&s));
+
+    // X25519: one DH (per-peer setup cost)
+    let sk = SecretKey::from_bytes([9u8; 32]);
+    let pk = SecretKey::from_bytes([8u8; 32]).public_key();
+    let s = bench_ms(20, || {
+        std::hint::black_box(sk.diffie_hellman(&pk));
+    });
+    println!("X25519 shared secret        : {} ms", pm(&s));
+
+    // Paillier primitive (1024-bit): encrypt + scalar-mul + decrypt
+    let mut krng = DetRng::from_seed(2).as_fill_fn();
+    let sk_p = PrivateKey::generate(1024, &mut krng);
+    let mut erng = DetRng::from_seed(3).as_fill_fn();
+    let s = bench_ms(5, || {
+        let c = sk_p.public.encrypt_i64(12345, &mut erng);
+        let c2 = sk_p.public.mul_plain_i64(&c, 77);
+        std::hint::black_box(sk_p.decrypt_i64(&c2));
+    });
+    println!("Paillier-1024 enc+mul+dec   : {} ms", pm(&s));
+
+    // BFV primitive (n=4096): encrypt + scalar-mul + decrypt
+    let mut brng = DetRng::from_seed(4).as_fill_fn();
+    let bfv = Bfv::keygen(BfvParams::default_4096(), &mut brng);
+    let mut berng = DetRng::from_seed(5).as_fill_fn();
+    let s = bench_ms(5, || {
+        let c = bfv.encrypt(&bfv.encode_scalar(12345), &mut berng);
+        let c2 = bfv.mul_scalar(&c, 77);
+        std::hint::black_box(bfv.decode_scalar(&bfv.decrypt(&c2)));
+    });
+    println!("BFV-4096 enc+mul+dec        : {} ms", pm(&s));
+
+    // PJRT party forward (banking active, batch 256)
+    if std::path::Path::new("artifacts/banking_fwd_active.hlo.txt").exists() {
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let engine = Engine::load("artifacts", &cfg)?;
+        let backend = vfl::coordinator::Backend::Pjrt(&engine);
+        let x = Mat::from_vec(256, 57, vec![0.5; 256 * 57]);
+        let params =
+            PartyParams { w: Mat::from_vec(57, 64, vec![0.01; 57 * 64]), b: Some(vec![0.0; 64]) };
+        let s = bench_ms(30, || {
+            std::hint::black_box(backend.party_fwd("fwd_active", &x, &params, None).unwrap());
+        });
+        println!("PJRT fwd_active (256x57x64) : {} ms", pm(&s));
+        let refb = vfl::coordinator::Backend::Reference;
+        let s = bench_ms(30, || {
+            std::hint::black_box(refb.party_fwd("fwd_active", &x, &params, None).unwrap());
+        });
+        println!("ref  fwd_active (256x57x64) : {} ms", pm(&s));
+    } else {
+        println!("PJRT fwd_active             : skipped (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate the paper's **Table 1** (CPU time in ms, active /
+//! passive × training / testing, total + security overhead), averaged
+//! over 10 repetitions of {1 setup phase + 5 training rounds + testing}
+//! with batch 256 and key rotation K=5 — the paper's §6.3 setup.
+//!
+//!     cargo bench --bench table1_cpu_time
+//!     (VFL_BENCH_REFERENCE=1 to skip the PJRT backend,
+//!      VFL_BENCH_REPS=n to change repetitions)
+
+use vfl::bench::tables;
+use vfl::model::ModelConfig;
+use vfl::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let reference = std::env::var("VFL_BENCH_REFERENCE").is_ok();
+    let reps: usize =
+        std::env::var("VFL_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let mut rows = Vec::new();
+    for ds in ["banking", "adult", "taobao"] {
+        let engine = if reference {
+            None
+        } else {
+            Some(Engine::load("artifacts", &ModelConfig::for_dataset(ds).unwrap())?)
+        };
+        eprintln!(
+            "running {ds} ({reps} reps, backend {})...",
+            if reference { "reference" } else { "pjrt" }
+        );
+        rows.push(tables::table1(ds, reps, engine.as_ref())?);
+    }
+    tables::print_table1(&rows);
+    println!("\npaper's Table 1 for comparison (their testbed, Flower VCE):");
+    println!("  Banking  active 1162±527/198±12 train, 325±15/197±12 test; passive 152±6/116±7, 139±6/114±7");
+    println!("  Adult    active  814±496/202±9  train, 292±12/200±10 test; passive 165±14/120±13, 148±16/118±13");
+    println!("  Taobao   active 2007±649/185±3  train, 429±7/184±3  test; passive 142±9/106±3, 127±5/105±3");
+    Ok(())
+}

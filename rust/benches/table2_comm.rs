@@ -1,0 +1,30 @@
+//! Bench: regenerate the paper's **Table 2** (data transmission in
+//! bytes, active / passive × training / testing, total + overhead).
+//! Byte counts are deterministic per configuration, so one secure/plain
+//! pair per dataset suffices; overhead = secure − plain, the paper's
+//! definition.
+//!
+//!     cargo bench --bench table2_comm
+
+use vfl::bench::tables;
+use vfl::model::ModelConfig;
+use vfl::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let reference = std::env::var("VFL_BENCH_REFERENCE").is_ok();
+    let mut rows = Vec::new();
+    for ds in ["banking", "adult", "taobao"] {
+        let engine = if reference {
+            None
+        } else {
+            Some(Engine::load("artifacts", &ModelConfig::for_dataset(ds).unwrap())?)
+        };
+        rows.push(tables::table2(ds, engine.as_ref())?);
+    }
+    tables::print_table2(&rows);
+    println!("\npaper's Table 2 for comparison (their serialization, Flower VCE):");
+    println!("  Banking  active 959702/144826 train, 597762/144826 test; passive 823803/135541, 464243/135541");
+    println!("  Adult    active 1031382/144826 train, 597762/144826 test; passive 895483/135541, 464243/135541");
+    println!("  Taobao   active 1629142/144826 train, 925442/144826 test; passive 1493243/135541, 791923/135541");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Benchmark utilities (criterion is not vendored in this sandbox, so
+//! the `harness = false` bench targets use these helpers for timing,
+//! statistics, and paper-style table printing).
+
+use std::time::Instant;
+
+/// Summary statistics over repeated measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+pub fn stats(samples: &[f64]) -> Stats {
+    assert!(!samples.is_empty());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Stats {
+        mean,
+        std: var.sqrt(),
+        min: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max: samples.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        n,
+    }
+}
+
+/// Time one invocation in milliseconds.
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64() * 1e3, out)
+}
+
+/// Run `reps` timed repetitions (plus one warmup) and return stats in ms.
+pub fn bench_ms(reps: usize, mut f: impl FnMut()) -> Stats {
+    f(); // warmup
+    let samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let (ms, _) = time_ms(&mut f);
+            ms
+        })
+        .collect();
+    stats(&samples)
+}
+
+/// Format `mean ± std` the way the paper's tables do.
+pub fn pm(s: &Stats) -> String {
+    if s.mean >= 100.0 {
+        format!("{:.0} ± {:.0}", s.mean, s.std)
+    } else if s.mean >= 1.0 {
+        format!("{:.1} ± {:.1}", s.mean, s.std)
+    } else {
+        format!("{:.3} ± {:.3}", s.mean, s.std)
+    }
+}
+
+/// Print a markdown-ish table row.
+pub fn row(cells: &[String]) -> String {
+    format!("| {} |", cells.join(" | "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.std - 1.0).abs() < 1e-9);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = stats(&[5.0]);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench_ms(3, || count += 1);
+        assert_eq!(count, 4); // warmup + 3
+        assert_eq!(s.n, 3);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(pm(&stats(&[1162.0, 1162.0])), "1162 ± 0");
+        assert!(pm(&stats(&[1.5, 2.5])).starts_with("2.0"));
+    }
+}
+
+pub mod fig2;
+pub mod tables;

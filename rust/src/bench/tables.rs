@@ -1,0 +1,212 @@
+//! Table 1 & Table 2 harness: runs the paper's exact experiment shape
+//! (1 setup phase + 5 training rounds + a testing pass, batch 256, key
+//! rotation every 5 iterations, repeated N times) and prints the same
+//! rows the paper reports.
+
+use anyhow::Result;
+
+use crate::coordinator::{run_experiment, BackendKind, RunConfig, RunReport, SecurityMode};
+use crate::net::{Addr, Phase};
+use crate::runtime::Engine;
+
+use super::{pm, stats, Stats};
+
+/// One dataset's Table-1 row (all ms): active/passive × train/test,
+/// total + overhead.
+pub struct Table1Row {
+    pub dataset: String,
+    pub active_train_total: Stats,
+    pub active_train_overhead: Stats,
+    pub active_test_total: Stats,
+    pub active_test_overhead: Stats,
+    pub passive_train_total: Stats,
+    pub passive_train_overhead: Stats,
+    pub passive_test_total: Stats,
+    pub passive_test_overhead: Stats,
+}
+
+/// One dataset's Table-2 row (bytes per run).
+pub struct Table2Row {
+    pub dataset: String,
+    pub active_train: u64,
+    pub active_train_overhead: u64,
+    pub active_test: u64,
+    pub active_test_overhead: u64,
+    pub passive_train: u64,
+    pub passive_train_overhead: u64,
+    pub passive_test: u64,
+    pub passive_test_overhead: u64,
+}
+
+fn paper_cfg(dataset: &str, mode: SecurityMode, engine: Option<&Engine>) -> RunConfig {
+    let mut cfg = RunConfig::paper(dataset).expect("dataset");
+    cfg.security = mode;
+    cfg.backend = if engine.is_some() { BackendKind::Pjrt } else { BackendKind::Reference };
+    cfg
+}
+
+fn passive_nodes(report: &RunReport) -> Vec<usize> {
+    // passive clients are 1..n_clients; metrics node index = client + 1
+    (2..=report.net.n_clients()).collect()
+}
+
+/// Run one secure experiment and return (report, plain-twin report).
+fn run_pair(dataset: &str, engine: Option<&Engine>, seed: u64) -> Result<(RunReport, RunReport)> {
+    let mut sc = paper_cfg(dataset, SecurityMode::SecureExact, engine);
+    sc.seed = seed;
+    let mut pc = paper_cfg(dataset, SecurityMode::Plain, engine);
+    pc.seed = seed;
+    Ok((run_experiment(sc, engine)?, run_experiment(pc, engine)?))
+}
+
+/// Table 1: CPU time (ms), averaged over `reps` repetitions.
+/// "Total" is the secure run; "overhead" is the directly metered
+/// security-op time (cross-checked against secure − plain in tests).
+pub fn table1(dataset: &str, reps: usize, engine: Option<&Engine>) -> Result<Table1Row> {
+    let mut at_t = vec![];
+    let mut at_o = vec![];
+    let mut ae_t = vec![];
+    let mut ae_o = vec![];
+    let mut pt_t = vec![];
+    let mut pt_o = vec![];
+    let mut pe_t = vec![];
+    let mut pe_o = vec![];
+    for rep in 0..reps {
+        let (secure, _plain) = run_pair(dataset, engine, 7 + rep as u64)?;
+        let m = &secure.metrics;
+        // setup is part of the training phase the paper reports
+        // (1 setup phase + 5 training rounds)
+        let active = 1usize; // node index of client 0
+        at_t.push(m.total_ms(active, Phase::Training) + m.total_ms(active, Phase::Setup));
+        at_o.push(m.overhead_ms(active, Phase::Training) + m.overhead_ms(active, Phase::Setup));
+        ae_t.push(m.total_ms(active, Phase::Testing));
+        ae_o.push(m.overhead_ms(active, Phase::Testing));
+        let passives = passive_nodes(&secure);
+        let (t, o) = m.avg_ms(&passives, Phase::Training);
+        let (ts, os) = m.avg_ms(&passives, Phase::Setup);
+        pt_t.push(t + ts);
+        pt_o.push(o + os);
+        let (t, o) = m.avg_ms(&passives, Phase::Testing);
+        pe_t.push(t);
+        pe_o.push(o);
+    }
+    Ok(Table1Row {
+        dataset: dataset.into(),
+        active_train_total: stats(&at_t),
+        active_train_overhead: stats(&at_o),
+        active_test_total: stats(&ae_t),
+        active_test_overhead: stats(&ae_o),
+        passive_train_total: stats(&pt_t),
+        passive_train_overhead: stats(&pt_o),
+        passive_test_total: stats(&pe_t),
+        passive_test_overhead: stats(&pe_o),
+    })
+}
+
+/// Table 2: transmission bytes. Byte counts are deterministic per
+/// config, so a single secure/plain pair suffices; overhead = secure −
+/// plain, exactly as the paper defines it.
+pub fn table2(dataset: &str, engine: Option<&Engine>) -> Result<Table2Row> {
+    let (secure, plain) = run_pair(dataset, engine, 7)?;
+    let tx = |r: &RunReport, node: Addr, ph: Phase| r.net.transmission_bytes(node, ph);
+    let active = Addr::Client(0);
+    // setup traffic counts toward the training phase (paper reports
+    // "1 setup phase and 5 training rounds" as one number)
+    let a_train_s = tx(&secure, active, Phase::Training) + tx(&secure, active, Phase::Setup);
+    let a_train_p = tx(&plain, active, Phase::Training);
+    let a_test_s = tx(&secure, active, Phase::Testing);
+    let a_test_p = tx(&plain, active, Phase::Testing);
+
+    let n_passive = secure.net.n_clients() - 1; // minus the active party
+    let avg_passive = |r: &RunReport, ph: Phase| -> u64 {
+        (1..=n_passive)
+            .map(|i| tx(r, Addr::Client(i), ph))
+            .sum::<u64>()
+            / n_passive as u64
+    };
+    let p_train_s = avg_passive(&secure, Phase::Training)
+        + (1..=n_passive).map(|i| tx(&secure, Addr::Client(i), Phase::Setup)).sum::<u64>()
+            / n_passive as u64;
+    let p_train_p = avg_passive(&plain, Phase::Training);
+    let p_test_s = avg_passive(&secure, Phase::Testing);
+    let p_test_p = avg_passive(&plain, Phase::Testing);
+
+    Ok(Table2Row {
+        dataset: dataset.into(),
+        active_train: a_train_s,
+        active_train_overhead: a_train_s - a_train_p,
+        active_test: a_test_s,
+        active_test_overhead: a_test_s - a_test_p,
+        passive_train: p_train_s,
+        passive_train_overhead: p_train_s - p_train_p,
+        passive_test: p_test_s,
+        passive_test_overhead: p_test_s - p_test_p,
+    })
+}
+
+/// Print Table 1 in the paper's layout.
+pub fn print_table1(rows: &[Table1Row]) {
+    println!("\nTable 1 — CPU time (ms) with secure aggregation on VFL");
+    println!("{:<14} | {:>14} {:>12} | {:>14} {:>12} | {:>14} {:>12} | {:>14} {:>12}",
+        "", "Active/train", "overhead", "Active/test", "overhead",
+        "Passive/train", "overhead", "Passive/test", "overhead");
+    for r in rows {
+        println!(
+            "{:<14} | {:>14} {:>12} | {:>14} {:>12} | {:>14} {:>12} | {:>14} {:>12}",
+            r.dataset,
+            pm(&r.active_train_total),
+            pm(&r.active_train_overhead),
+            pm(&r.active_test_total),
+            pm(&r.active_test_overhead),
+            pm(&r.passive_train_total),
+            pm(&r.passive_train_overhead),
+            pm(&r.passive_test_total),
+            pm(&r.passive_test_overhead),
+        );
+    }
+}
+
+/// Print Table 2 in the paper's layout.
+pub fn print_table2(rows: &[Table2Row]) {
+    println!("\nTable 2 — data transmission (bytes) with secure aggregation on VFL");
+    println!("{:<14} | {:>12} {:>10} | {:>12} {:>10} | {:>13} {:>10} | {:>12} {:>10}",
+        "", "Active/train", "overhead", "Active/test", "overhead",
+        "Passive/train", "overhead", "Passive/test", "overhead");
+    for r in rows {
+        println!(
+            "{:<14} | {:>12} {:>10} | {:>12} {:>10} | {:>13} {:>10} | {:>12} {:>10}",
+            r.dataset,
+            r.active_train,
+            r.active_train_overhead,
+            r.active_test,
+            r.active_test_overhead,
+            r.passive_train,
+            r.passive_train_overhead,
+            r.passive_test,
+            r.passive_test_overhead,
+        );
+    }
+}
+
+/// E5: scalability sweep — setup+round cost vs number of passive
+/// parties (the §5.2 discussion). Uses a synthetic schema so the party
+/// count can grow beyond the paper's 4.
+pub fn scaling(parties: &[usize]) -> Result<Vec<(usize, f64, u64)>> {
+    use crate::crypto::rng::DetRng;
+    use crate::secagg::setup_all;
+    let mut out = Vec::new();
+    for &n in parties {
+        // measure the SA fabric directly: setup + one masked round for
+        // n clients on a 256×64 activation
+        let mut rng = DetRng::from_seed(n as u64);
+        let (ms, sessions) = super::time_ms(|| setup_all(n, 0, &mut rng));
+        let len = 256 * 64;
+        let t = vec![0.5f32; len];
+        let (mask_ms, masked) = super::time_ms(|| {
+            sessions.iter().map(|s| s.mask_tensor(&t, 0, 0)).collect::<Vec<_>>()
+        });
+        let bytes: u64 = masked.iter().map(|m| m.len() as u64 * 8).sum();
+        out.push((n, ms + mask_ms, bytes));
+    }
+    Ok(out)
+}

@@ -1,0 +1,267 @@
+//! Compute backend: PJRT artifacts (production) or pure-Rust reference.
+//!
+//! Parties call through this enum so the protocol code is agnostic to
+//! where the math runs. The PJRT path executes the AOT-lowered L2
+//! graphs (which embed the L1 Pallas kernel); the reference path runs
+//! `model::reference`. A test asserts the two agree.
+
+use anyhow::Result;
+
+use crate::model::linalg::Mat;
+use crate::model::reference;
+use crate::model::PartyParams;
+use crate::runtime::Engine;
+
+/// Output of the aggregator's global step.
+pub struct GlobalStepOut {
+    pub loss: f32,
+    pub probs: Vec<f32>,
+    pub dz: Mat,
+    pub d_global_w: Vec<f32>,
+    pub d_global_b: f32,
+}
+
+pub enum Backend<'e> {
+    Reference,
+    Pjrt(&'e Engine),
+}
+
+impl<'e> Backend<'e> {
+    /// Party forward: x·W (+ b) + float-mask (Eq. 2's unmasked core when
+    /// `mask` is zeros — the exact-ℤ₂⁶⁴ mode masks after this call).
+    /// `graph` is the artifact key, e.g. "fwd_active" / "fwd_g0".
+    pub fn party_fwd(
+        &self,
+        graph: &str,
+        x: &Mat,
+        params: &PartyParams,
+        mask: Option<&[f32]>,
+    ) -> Result<Mat> {
+        let h = params.w.cols;
+        match self {
+            Backend::Reference => {
+                let mut z = reference::party_forward(x, params);
+                if let Some(m) = mask {
+                    for (v, m) in z.data.iter_mut().zip(m) {
+                        *v += m;
+                    }
+                }
+                Ok(z)
+            }
+            Backend::Pjrt(engine) => {
+                let b = x.rows;
+                let d = x.cols;
+                let zeros;
+                let m: &[f32] = match mask {
+                    Some(m) => m,
+                    None => {
+                        zeros = vec![0.0f32; b * h];
+                        &zeros
+                    }
+                };
+                let out = if let Some(bias) = &params.b {
+                    engine.execute(
+                        graph,
+                        &[
+                            (&x.data, &[b as i64, d as i64]),
+                            (&params.w.data, &[d as i64, h as i64]),
+                            (bias, &[h as i64]),
+                            (m, &[b as i64, h as i64]),
+                        ],
+                    )?
+                } else {
+                    engine.execute(
+                        graph,
+                        &[
+                            (&x.data, &[b as i64, d as i64]),
+                            (&params.w.data, &[d as i64, h as i64]),
+                            (m, &[b as i64, h as i64]),
+                        ],
+                    )?
+                };
+                Ok(Mat::from_vec(b, h, out.into_iter().next().unwrap()))
+            }
+        }
+    }
+
+    /// Party backward: xᵀ·dz (+ Σdz bias grad when `bias`), Eq. 6's core.
+    pub fn party_bwd(
+        &self,
+        graph: &str,
+        x: &Mat,
+        dz: &Mat,
+        bias: bool,
+    ) -> Result<(Mat, Option<Vec<f32>>)> {
+        match self {
+            Backend::Reference => Ok(reference::party_backward(x, dz, bias)),
+            Backend::Pjrt(engine) => {
+                let (b, d, h) = (x.rows, x.cols, dz.cols);
+                if bias {
+                    let mw = vec![0.0f32; d * h];
+                    let mb = vec![0.0f32; h];
+                    let out = engine.execute(
+                        graph,
+                        &[
+                            (&x.data, &[b as i64, d as i64]),
+                            (&dz.data, &[b as i64, h as i64]),
+                            (&mw, &[d as i64, h as i64]),
+                            (&mb, &[h as i64]),
+                        ],
+                    )?;
+                    let mut it = out.into_iter();
+                    let dw = Mat::from_vec(d, h, it.next().unwrap());
+                    let db = it.next().unwrap();
+                    Ok((dw, Some(db)))
+                } else {
+                    let m = vec![0.0f32; d * h];
+                    let out = engine.execute(
+                        graph,
+                        &[
+                            (&x.data, &[b as i64, d as i64]),
+                            (&dz.data, &[b as i64, h as i64]),
+                            (&m, &[d as i64, h as i64]),
+                        ],
+                    )?;
+                    Ok((Mat::from_vec(d, h, out.into_iter().next().unwrap()), None))
+                }
+            }
+        }
+    }
+
+    /// Aggregator global module: fused forward + loss + backward.
+    pub fn global_step(&self, z: &Mat, wg: &[f32], bg: f32, y: &[f32]) -> Result<GlobalStepOut> {
+        let (b, h) = (z.rows, z.cols);
+        match self {
+            Backend::Reference => {
+                let params = crate::model::ModelParams {
+                    active: PartyParams { w: Mat::zeros(1, 1), b: None },
+                    groups: vec![],
+                    global: crate::model::GlobalParams {
+                        w: Mat::from_vec(h, 1, wg.to_vec()),
+                        b: bg,
+                    },
+                };
+                let fwd = reference::global_forward(&params, z, y);
+                let bwd = reference::global_backward(&params, z, &fwd, y);
+                Ok(GlobalStepOut {
+                    loss: fwd.loss,
+                    probs: fwd.probs.data,
+                    dz: bwd.dz,
+                    d_global_w: bwd.d_global_w.data,
+                    d_global_b: bwd.d_global_b,
+                })
+            }
+            Backend::Pjrt(engine) => {
+                let out = engine.execute(
+                    "global_step",
+                    &[
+                        (&z.data, &[b as i64, h as i64]),
+                        (wg, &[h as i64, 1]),
+                        (&[bg], &[1]),
+                        (y, &[b as i64]),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                let loss = it.next().unwrap()[0];
+                let probs = it.next().unwrap();
+                let dz = Mat::from_vec(b, h, it.next().unwrap());
+                let d_global_w = it.next().unwrap();
+                let d_global_b = it.next().unwrap()[0];
+                Ok(GlobalStepOut { loss, probs, dz, d_global_w, d_global_b })
+            }
+        }
+    }
+
+    /// Testing-phase forward: probabilities only (§4.0.3).
+    pub fn predict(&self, z: &Mat, wg: &[f32], bg: f32) -> Result<Vec<f32>> {
+        let (b, h) = (z.rows, z.cols);
+        match self {
+            Backend::Reference => {
+                let h1 = crate::model::linalg::relu(z);
+                let wgm = Mat::from_vec(h, 1, wg.to_vec());
+                let mut logits = crate::model::linalg::matmul(&h1, &wgm);
+                for v in logits.data.iter_mut() {
+                    *v += bg;
+                }
+                Ok(crate::model::linalg::sigmoid(&logits).data)
+            }
+            Backend::Pjrt(engine) => {
+                let out = engine.execute(
+                    "predict",
+                    &[(&z.data, &[b as i64, h as i64]), (wg, &[h as i64, 1]), (&[bg], &[1])],
+                )?;
+                Ok(out.into_iter().next().unwrap())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+    use crate::model::ModelConfig;
+    use crate::runtime::ARTIFACT_BATCH;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn rand_mat(rows: usize, cols: usize, rng: &mut DetRng) -> Mat {
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.next_f64() as f32 - 0.5).collect())
+    }
+
+    #[test]
+    fn pjrt_and_reference_agree_end_to_end() {
+        if !artifacts_dir().join("banking_global_step.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let engine = Engine::load(artifacts_dir(), &cfg).unwrap();
+        let pjrt = Backend::Pjrt(&engine);
+        let refb = Backend::Reference;
+        let mut rng = DetRng::from_seed(1);
+        let b = ARTIFACT_BATCH;
+
+        // fwd active
+        let x = rand_mat(b, cfg.active_dim, &mut rng);
+        let params = PartyParams {
+            w: rand_mat(cfg.active_dim, cfg.hidden, &mut rng),
+            b: Some((0..cfg.hidden).map(|_| rng.next_f64() as f32).collect()),
+        };
+        let mask: Vec<f32> = (0..b * cfg.hidden).map(|_| rng.next_f64() as f32).collect();
+        let zp = pjrt.party_fwd("fwd_active", &x, &params, Some(&mask)).unwrap();
+        let zr = refb.party_fwd("fwd_active", &x, &params, Some(&mask)).unwrap();
+        for (a, c) in zp.data.iter().zip(&zr.data) {
+            assert!((a - c).abs() < 1e-3, "fwd {a} vs {c}");
+        }
+
+        // bwd group
+        let xg = rand_mat(b, cfg.group_dims[1], &mut rng);
+        let dz = rand_mat(b, cfg.hidden, &mut rng);
+        let (gp, _) = pjrt.party_bwd("bwd_g1", &xg, &dz, false).unwrap();
+        let (gr, _) = refb.party_bwd("bwd_g1", &xg, &dz, false).unwrap();
+        for (a, c) in gp.data.iter().zip(&gr.data) {
+            assert!((a - c).abs() < 1e-2, "bwd {a} vs {c}");
+        }
+
+        // global step
+        let z = rand_mat(b, cfg.hidden, &mut rng);
+        let wg: Vec<f32> = (0..cfg.hidden).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+        let op = pjrt.global_step(&z, &wg, 0.1, &y).unwrap();
+        let or = refb.global_step(&z, &wg, 0.1, &y).unwrap();
+        assert!((op.loss - or.loss).abs() < 1e-4);
+        for (a, c) in op.dz.data.iter().zip(&or.dz.data) {
+            assert!((a - c).abs() < 1e-5);
+        }
+        // predict
+        let pp = pjrt.predict(&z, &wg, 0.1).unwrap();
+        let pr = refb.predict(&z, &wg, 0.1).unwrap();
+        for (a, c) in pp.iter().zip(&pr) {
+            assert!((a - c).abs() < 1e-5);
+        }
+    }
+}

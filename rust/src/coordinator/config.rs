@@ -1,0 +1,73 @@
+//! Run configuration for a VFL experiment.
+
+use crate::model::ModelConfig;
+
+/// How activations/gradients are protected in transit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SecurityMode {
+    /// Bonawitz-style pairwise masks in ℤ₂⁶⁴ over fixed-point encodings
+    /// (exact cancellation) + AEAD-sealed sample IDs. The default.
+    SecureExact,
+    /// Pairwise float masks (exact payload-size parity with the
+    /// unsecured baseline; cancellation up to float addition order).
+    SecureFloat,
+    /// Unsecured VFL: plaintext IDs and tensors — the baseline the
+    /// paper's "overhead" columns are measured against.
+    Plain,
+}
+
+impl SecurityMode {
+    pub fn is_secure(&self) -> bool {
+        !matches!(self, SecurityMode::Plain)
+    }
+}
+
+/// Which compute engine the parties use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled HLO artifacts on the PJRT CPU client (production).
+    Pjrt,
+    /// Pure-Rust reference math (tests / artifact-less runs).
+    Reference,
+}
+
+/// A full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    /// Rows of synthetic data to generate.
+    pub n_rows: usize,
+    /// Training rounds (mini-batch steps). Paper's tables: 5.
+    pub train_rounds: usize,
+    /// Testing-phase batches to run. Paper's tables: per test pass.
+    pub test_rounds: usize,
+    pub security: SecurityMode,
+    pub backend: BackendKind,
+    /// RNG seed for data, init, and key generation.
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// The paper's experimental setup for a dataset (§6.3): batch 256,
+    /// lr 0.01, key rotation every 5 rounds, 5 training rounds.
+    pub fn paper(dataset: &str) -> Option<RunConfig> {
+        let model = ModelConfig::for_dataset(dataset)?;
+        Some(RunConfig {
+            model,
+            n_rows: 4096,
+            train_rounds: 5,
+            test_rounds: 1,
+            security: SecurityMode::SecureExact,
+            backend: BackendKind::Pjrt,
+            seed: 7,
+        })
+    }
+
+    /// Small/fast configuration for tests.
+    pub fn test(dataset: &str) -> Option<RunConfig> {
+        let mut cfg = Self::paper(dataset)?;
+        cfg.n_rows = 2048;
+        cfg.backend = BackendKind::Reference;
+        Some(cfg)
+    }
+}

@@ -1,0 +1,346 @@
+//! Protocol messages (§4 of the paper) and their wire encoding.
+//!
+//! Secure and plain (unsecured-VFL baseline) variants are distinct
+//! message types so the transport's byte counters cleanly attribute the
+//! communication overhead (Table 2).
+
+use anyhow::{bail, Result};
+
+use crate::net::wire::{Reader, Writer};
+
+/// One client's published per-peer X25519 public keys (`pk_i^{(j)}`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireKeys {
+    pub from: u16,
+    /// Index j: key intended for peer j; `None` at the own slot.
+    pub keys: Vec<Option<[u8; 32]>>,
+}
+
+/// Protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    // ---- setup phase (§4.0.1) ----
+    /// Aggregator asks every client for fresh keys (key rotation, §5.1).
+    RequestKeys { epoch: u64 },
+    /// Client → aggregator: per-peer public keys.
+    PublishKeys(WireKeys),
+    /// Aggregator → client: everyone's published keys.
+    KeyDirectory { epoch: u64, all: Vec<WireKeys> },
+
+    // ---- training phase (§4.0.2) ----
+    /// Active → aggregator: updated flat party weights (after SGD).
+    WeightsUpdate { round: u32, flat: Vec<f32> },
+    /// Aggregator → passive: its group's weight block.
+    GroupWeights { round: u32, group: u8, flat: Vec<f32> },
+    /// Active → aggregator: labels + per-sample sealed IDs
+    /// (entry = AEAD(id) under the holder's pairwise key).
+    BatchSelect { round: u32, labels: Vec<f32>, entries: Vec<Vec<u8>> },
+    /// Aggregator → every passive: the sealed ID broadcast.
+    BatchRelay { round: u32, entries: Vec<Vec<u8>> },
+    /// Unsecured baseline: plaintext IDs.
+    PlainBatch { round: u32, labels: Vec<f32>, ids: Vec<u64> },
+    PlainBatchRelay { round: u32, ids: Vec<u64> },
+    /// Client → aggregator: masked activation (Eq. 2), ℤ₂⁶⁴ words.
+    MaskedActivation { round: u32, from: u16, words: Vec<u64> },
+    /// Client → aggregator: float-mask or plain activation.
+    FloatActivation { round: u32, from: u16, vals: Vec<f32> },
+    /// Aggregator → clients: ∂L/∂z broadcast for the backward pass.
+    DzBroadcast { round: u32, dz: Vec<f32> },
+    /// Passive → aggregator: masked full-length gradient (Eq. 6).
+    MaskedGradient { round: u32, from: u16, words: Vec<u64> },
+    FloatGradient { round: u32, from: u16, vals: Vec<f32> },
+    /// Aggregator → active: Σ passive masked gradients (still masked by
+    /// the active party's own total mask — §4.0.2's privacy argument).
+    GradientSum { round: u32, words: Vec<u64> },
+    FloatGradientSum { round: u32, vals: Vec<f32> },
+
+    // ---- testing phase (§4.0.3) ----
+    /// Aggregator → active: predictions for the requested batch.
+    Predictions { round: u32, probs: Vec<f32> },
+}
+
+const T_REQUEST_KEYS: u8 = 1;
+const T_PUBLISH_KEYS: u8 = 2;
+const T_KEY_DIRECTORY: u8 = 3;
+const T_WEIGHTS_UPDATE: u8 = 4;
+const T_GROUP_WEIGHTS: u8 = 5;
+const T_BATCH_SELECT: u8 = 6;
+const T_BATCH_RELAY: u8 = 7;
+const T_PLAIN_BATCH: u8 = 8;
+const T_PLAIN_BATCH_RELAY: u8 = 9;
+const T_MASKED_ACTIVATION: u8 = 10;
+const T_FLOAT_ACTIVATION: u8 = 11;
+const T_DZ_BROADCAST: u8 = 12;
+const T_MASKED_GRADIENT: u8 = 13;
+const T_FLOAT_GRADIENT: u8 = 14;
+const T_GRADIENT_SUM: u8 = 15;
+const T_FLOAT_GRADIENT_SUM: u8 = 16;
+const T_PREDICTIONS: u8 = 17;
+
+fn write_wire_keys(w: &mut Writer, k: &WireKeys) {
+    w.u16(k.from);
+    w.u32(k.keys.len() as u32);
+    for key in &k.keys {
+        match key {
+            None => w.u8(0),
+            Some(pk) => {
+                w.u8(1);
+                w.fixed(pk);
+            }
+        }
+    }
+}
+
+fn read_wire_keys(r: &mut Reader) -> Result<WireKeys> {
+    let from = r.u16()?;
+    let n = r.u32()? as usize;
+    // cap: never pre-allocate more than the buffer could possibly hold
+    let mut keys = Vec::with_capacity(n.min(r.remaining()));
+    for _ in 0..n {
+        keys.push(match r.u8()? {
+            0 => None,
+            1 => Some(r.fixed::<32>()?),
+            t => bail!("bad key tag {t}"),
+        });
+    }
+    Ok(WireKeys { from, keys })
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Msg::RequestKeys { epoch } => {
+                w.u8(T_REQUEST_KEYS);
+                w.u64(*epoch);
+            }
+            Msg::PublishKeys(k) => {
+                w.u8(T_PUBLISH_KEYS);
+                write_wire_keys(&mut w, k);
+            }
+            Msg::KeyDirectory { epoch, all } => {
+                w.u8(T_KEY_DIRECTORY);
+                w.u64(*epoch);
+                w.u32(all.len() as u32);
+                for k in all {
+                    write_wire_keys(&mut w, k);
+                }
+            }
+            Msg::WeightsUpdate { round, flat } => {
+                w.u8(T_WEIGHTS_UPDATE);
+                w.u32(*round);
+                w.f32s(flat);
+            }
+            Msg::GroupWeights { round, group, flat } => {
+                w.u8(T_GROUP_WEIGHTS);
+                w.u32(*round);
+                w.u8(*group);
+                w.f32s(flat);
+            }
+            Msg::BatchSelect { round, labels, entries } => {
+                w.u8(T_BATCH_SELECT);
+                w.u32(*round);
+                w.f32s(labels);
+                w.u32(entries.len() as u32);
+                for e in entries {
+                    w.bytes(e);
+                }
+            }
+            Msg::BatchRelay { round, entries } => {
+                w.u8(T_BATCH_RELAY);
+                w.u32(*round);
+                w.u32(entries.len() as u32);
+                for e in entries {
+                    w.bytes(e);
+                }
+            }
+            Msg::PlainBatch { round, labels, ids } => {
+                w.u8(T_PLAIN_BATCH);
+                w.u32(*round);
+                w.f32s(labels);
+                w.u64s(ids);
+            }
+            Msg::PlainBatchRelay { round, ids } => {
+                w.u8(T_PLAIN_BATCH_RELAY);
+                w.u32(*round);
+                w.u64s(ids);
+            }
+            Msg::MaskedActivation { round, from, words } => {
+                w.u8(T_MASKED_ACTIVATION);
+                w.u32(*round);
+                w.u16(*from);
+                w.u64s(words);
+            }
+            Msg::FloatActivation { round, from, vals } => {
+                w.u8(T_FLOAT_ACTIVATION);
+                w.u32(*round);
+                w.u16(*from);
+                w.f32s(vals);
+            }
+            Msg::DzBroadcast { round, dz } => {
+                w.u8(T_DZ_BROADCAST);
+                w.u32(*round);
+                w.f32s(dz);
+            }
+            Msg::MaskedGradient { round, from, words } => {
+                w.u8(T_MASKED_GRADIENT);
+                w.u32(*round);
+                w.u16(*from);
+                w.u64s(words);
+            }
+            Msg::FloatGradient { round, from, vals } => {
+                w.u8(T_FLOAT_GRADIENT);
+                w.u32(*round);
+                w.u16(*from);
+                w.f32s(vals);
+            }
+            Msg::GradientSum { round, words } => {
+                w.u8(T_GRADIENT_SUM);
+                w.u32(*round);
+                w.u64s(words);
+            }
+            Msg::FloatGradientSum { round, vals } => {
+                w.u8(T_FLOAT_GRADIENT_SUM);
+                w.u32(*round);
+                w.f32s(vals);
+            }
+            Msg::Predictions { round, probs } => {
+                w.u8(T_PREDICTIONS);
+                w.u32(*round);
+                w.f32s(probs);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let msg = match tag {
+            T_REQUEST_KEYS => Msg::RequestKeys { epoch: r.u64()? },
+            T_PUBLISH_KEYS => Msg::PublishKeys(read_wire_keys(&mut r)?),
+            T_KEY_DIRECTORY => {
+                let epoch = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut all = Vec::with_capacity(n.min(r.remaining()));
+                for _ in 0..n {
+                    all.push(read_wire_keys(&mut r)?);
+                }
+                Msg::KeyDirectory { epoch, all }
+            }
+            T_WEIGHTS_UPDATE => Msg::WeightsUpdate { round: r.u32()?, flat: r.f32s()? },
+            T_GROUP_WEIGHTS => {
+                Msg::GroupWeights { round: r.u32()?, group: r.u8()?, flat: r.f32s()? }
+            }
+            T_BATCH_SELECT => {
+                let round = r.u32()?;
+                let labels = r.f32s()?;
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(r.remaining()));
+                for _ in 0..n {
+                    entries.push(r.bytes()?);
+                }
+                Msg::BatchSelect { round, labels, entries }
+            }
+            T_BATCH_RELAY => {
+                let round = r.u32()?;
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(r.remaining()));
+                for _ in 0..n {
+                    entries.push(r.bytes()?);
+                }
+                Msg::BatchRelay { round, entries }
+            }
+            T_PLAIN_BATCH => {
+                Msg::PlainBatch { round: r.u32()?, labels: r.f32s()?, ids: r.u64s()? }
+            }
+            T_PLAIN_BATCH_RELAY => Msg::PlainBatchRelay { round: r.u32()?, ids: r.u64s()? },
+            T_MASKED_ACTIVATION => {
+                Msg::MaskedActivation { round: r.u32()?, from: r.u16()?, words: r.u64s()? }
+            }
+            T_FLOAT_ACTIVATION => {
+                Msg::FloatActivation { round: r.u32()?, from: r.u16()?, vals: r.f32s()? }
+            }
+            T_DZ_BROADCAST => Msg::DzBroadcast { round: r.u32()?, dz: r.f32s()? },
+            T_MASKED_GRADIENT => {
+                Msg::MaskedGradient { round: r.u32()?, from: r.u16()?, words: r.u64s()? }
+            }
+            T_FLOAT_GRADIENT => {
+                Msg::FloatGradient { round: r.u32()?, from: r.u16()?, vals: r.f32s()? }
+            }
+            T_GRADIENT_SUM => Msg::GradientSum { round: r.u32()?, words: r.u64s()? },
+            T_FLOAT_GRADIENT_SUM => Msg::FloatGradientSum { round: r.u32()?, vals: r.f32s()? },
+            T_PREDICTIONS => Msg::Predictions { round: r.u32()?, probs: r.f32s()? },
+            t => bail!("unknown message tag {t}"),
+        };
+        if !r.done() {
+            bail!("trailing bytes in message (tag {tag}, {} left)", r.remaining());
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let enc = m.encode();
+        let dec = Msg::decode(&enc).unwrap();
+        assert_eq!(m, dec);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Msg::RequestKeys { epoch: 3 });
+        roundtrip(Msg::PublishKeys(WireKeys {
+            from: 2,
+            keys: vec![Some([1u8; 32]), None, Some([3u8; 32])],
+        }));
+        roundtrip(Msg::KeyDirectory {
+            epoch: 1,
+            all: vec![
+                WireKeys { from: 0, keys: vec![None, Some([7u8; 32])] },
+                WireKeys { from: 1, keys: vec![Some([8u8; 32]), None] },
+            ],
+        });
+        roundtrip(Msg::WeightsUpdate { round: 4, flat: vec![1.0, -2.0] });
+        roundtrip(Msg::GroupWeights { round: 4, group: 1, flat: vec![0.5; 7] });
+        roundtrip(Msg::BatchSelect {
+            round: 9,
+            labels: vec![1.0, 0.0],
+            entries: vec![vec![1, 2, 3], vec![], vec![9; 24]],
+        });
+        roundtrip(Msg::BatchRelay { round: 9, entries: vec![vec![4; 24]] });
+        roundtrip(Msg::PlainBatch { round: 1, labels: vec![0.0], ids: vec![42, 43] });
+        roundtrip(Msg::PlainBatchRelay { round: 1, ids: vec![u64::MAX] });
+        roundtrip(Msg::MaskedActivation { round: 2, from: 3, words: vec![u64::MAX, 0, 7] });
+        roundtrip(Msg::FloatActivation { round: 2, from: 3, vals: vec![1.5, -0.5] });
+        roundtrip(Msg::DzBroadcast { round: 2, dz: vec![0.25; 10] });
+        roundtrip(Msg::MaskedGradient { round: 2, from: 1, words: vec![5; 9] });
+        roundtrip(Msg::FloatGradient { round: 2, from: 1, vals: vec![-1.0; 3] });
+        roundtrip(Msg::GradientSum { round: 2, words: vec![11, 12] });
+        roundtrip(Msg::FloatGradientSum { round: 2, vals: vec![3.0] });
+        roundtrip(Msg::Predictions { round: 5, probs: vec![0.9, 0.1] });
+    }
+
+    #[test]
+    fn corrupt_messages_rejected() {
+        let enc = Msg::RequestKeys { epoch: 1 }.encode();
+        assert!(Msg::decode(&enc[..enc.len() - 1]).is_err());
+        assert!(Msg::decode(&[99, 0, 0]).is_err());
+        // trailing garbage
+        let mut e2 = Msg::DzBroadcast { round: 0, dz: vec![] }.encode();
+        e2.push(0);
+        assert!(Msg::decode(&e2).is_err());
+    }
+
+    #[test]
+    fn masked_activation_size_is_8b_per_word() {
+        let m = Msg::MaskedActivation { round: 0, from: 0, words: vec![0; 1000] };
+        // 1 tag + 4 round + 2 from + 4 len + 8000
+        assert_eq!(m.encode().len(), 1 + 4 + 2 + 4 + 8000);
+        let f = Msg::FloatActivation { round: 0, from: 0, vals: vec![0.0; 1000] };
+        assert_eq!(f.encode().len(), 1 + 4 + 2 + 4 + 4000);
+    }
+}

@@ -1,0 +1,123 @@
+//! CPU-time accounting per (node, phase), with a separate bucket for
+//! security overhead — the measurement behind Table 1.
+//!
+//! "Overhead" is the time spent in operations that exist only because
+//! of the security modules: mask PRG expansion + fixed-point encoding,
+//! AEAD sealing / trial decryption of sample IDs, and key
+//! agreement/rotation. The unsecured baseline run provides the
+//! cross-check (secure total − plain total ≈ overhead bucket).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::net::Phase;
+
+/// Node index: 0 = aggregator, i+1 = client i (active party = client 0).
+pub type Node = usize;
+
+pub const AGGREGATOR: Node = 0;
+
+pub fn client(i: usize) -> Node {
+    i + 1
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuEntry {
+    pub total_ns: u128,
+    pub overhead_ns: u128,
+}
+
+/// CPU meters for one experiment run.
+#[derive(Default)]
+pub struct Metrics {
+    entries: HashMap<(Node, Phase), CpuEntry>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a unit of ordinary (non-security) work.
+    pub fn time<T>(&mut self, node: Node, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_nanos();
+        self.entries.entry((node, phase)).or_default().total_ns += dt;
+        out
+    }
+
+    /// Time a security operation: counts toward both total and overhead.
+    pub fn time_overhead<T>(&mut self, node: Node, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_nanos();
+        let e = self.entries.entry((node, phase)).or_default();
+        e.total_ns += dt;
+        e.overhead_ns += dt;
+        out
+    }
+
+    pub fn get(&self, node: Node, phase: Phase) -> CpuEntry {
+        self.entries.get(&(node, phase)).copied().unwrap_or_default()
+    }
+
+    /// Milliseconds helpers for reporting.
+    pub fn total_ms(&self, node: Node, phase: Phase) -> f64 {
+        self.get(node, phase).total_ns as f64 / 1e6
+    }
+
+    pub fn overhead_ms(&self, node: Node, phase: Phase) -> f64 {
+        self.get(node, phase).overhead_ns as f64 / 1e6
+    }
+
+    /// Average totals over a set of nodes (e.g. all passive parties).
+    pub fn avg_ms(&self, nodes: &[Node], phase: Phase) -> (f64, f64) {
+        if nodes.is_empty() {
+            return (0.0, 0.0);
+        }
+        let (mut t, mut o) = (0.0, 0.0);
+        for &n in nodes {
+            t += self.total_ms(n, phase);
+            o += self.overhead_ms(n, phase);
+        }
+        (t / nodes.len() as f64, o / nodes.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_accumulate() {
+        let mut m = Metrics::new();
+        m.time(client(0), Phase::Training, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        m.time_overhead(client(0), Phase::Training, || {
+            std::thread::sleep(std::time::Duration::from_millis(1))
+        });
+        let e = m.get(client(0), Phase::Training);
+        assert!(e.total_ns >= 3_000_000, "total {}", e.total_ns);
+        assert!(e.overhead_ns >= 1_000_000 && e.overhead_ns < e.total_ns);
+        // other cells untouched
+        assert_eq!(m.get(AGGREGATOR, Phase::Training).total_ns, 0);
+        assert_eq!(m.get(client(0), Phase::Testing).total_ns, 0);
+    }
+
+    #[test]
+    fn averages() {
+        let mut m = Metrics::new();
+        m.time(client(1), Phase::Testing, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        m.time(client(2), Phase::Testing, || std::thread::sleep(std::time::Duration::from_millis(3)));
+        let (t, o) = m.avg_ms(&[client(1), client(2)], Phase::Testing);
+        assert!(t >= 2.0, "avg total {t}");
+        assert_eq!(o, 0.0);
+    }
+
+    #[test]
+    fn node_indexing() {
+        assert_eq!(AGGREGATOR, 0);
+        assert_eq!(client(0), 1);
+        assert_eq!(client(4), 5);
+    }
+}

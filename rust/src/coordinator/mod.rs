@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`messages`] — the §4 protocol messages and wire encoding.
+//! * [`parties`] — active / passive / aggregator state machines.
+//! * [`trainer`] — the orchestrator running setup → training (with key
+//!   rotation) → testing over the byte-metered network.
+//! * [`backend`] — PJRT-artifact or pure-Rust compute.
+//! * [`metrics`] — per-(node, phase) CPU accounting with the security-
+//!   overhead bucket (Table 1).
+//! * [`config`] — experiment configuration (§6.3's setup).
+
+pub mod backend;
+pub mod config;
+pub mod messages;
+pub mod metrics;
+pub mod parties;
+pub mod trainer;
+
+pub use backend::Backend;
+pub use config::{BackendKind, RunConfig, SecurityMode};
+pub use messages::Msg;
+pub use metrics::Metrics;
+pub use trainer::{run_experiment, Experiment, RunReport};

@@ -1,0 +1,567 @@
+//! Party state machines: the active party, passive parties, and the
+//! aggregator (§4 of the paper).
+//!
+//! All parties are driven by the single-threaded orchestrator in
+//! [`super::trainer`]; every inter-party byte flows through the
+//! byte-metered [`Network`](crate::net::Network), and every security
+//! operation runs inside a [`Metrics`](super::metrics::Metrics)
+//! overhead timer.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::crypto::aead;
+use crate::crypto::rng::DetRng;
+use crate::data::partition::{ActiveData, PassiveData};
+use crate::model::linalg::Mat;
+use crate::model::{ModelConfig, ModelParams};
+use crate::net::wire::Writer;
+use crate::secagg::{ClientSession, FixedPoint, PublishedKeys};
+
+use super::config::SecurityMode;
+use super::messages::{Msg, WireKeys};
+
+/// Gradient-vector layout: every party reports a full-length flat
+/// gradient (Eq. 6's indicator zeroing what it doesn't own), so the
+/// pairwise masks — which must be identically shaped across parties —
+/// telescope over the whole vector.
+#[derive(Clone, Debug)]
+pub struct GradLayout {
+    pub active_w: (usize, usize), // (offset, len)
+    pub active_b: (usize, usize),
+    pub groups: Vec<(usize, usize)>,
+    pub total: usize,
+}
+
+impl GradLayout {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let h = cfg.hidden;
+        let mut off = 0usize;
+        let active_w = (off, cfg.active_dim * h);
+        off += active_w.1;
+        let active_b = (off, h);
+        off += h;
+        let groups = cfg
+            .group_dims
+            .iter()
+            .map(|&d| {
+                let e = (off, d * h);
+                off += d * h;
+                e
+            })
+            .collect();
+        GradLayout { active_w, active_b, groups, total: off }
+    }
+}
+
+/// Convert a ClientSession publication to the wire representation.
+pub fn keys_to_wire(pk: &PublishedKeys) -> WireKeys {
+    WireKeys {
+        from: pk.from as u16,
+        keys: pk.keys.iter().map(|k| k.map(|p| p.0)).collect(),
+    }
+}
+
+/// Rebuild `PublishedKeys` from the wire.
+pub fn keys_from_wire(wk: &WireKeys) -> PublishedKeys {
+    PublishedKeys {
+        from: wk.from as usize,
+        keys: wk.keys.iter().map(|k| k.map(crate::crypto::x25519::PublicKey)).collect(),
+    }
+}
+
+/// AAD used for sample-ID sealing.
+const BATCH_AAD: &[u8] = b"vfl-sa/batch-id/v1";
+
+/// Seal one 8-byte sample ID for a holder under the pairwise channel
+/// key. Nonce binds (active=0, round, seq), so entries are never
+/// nonce-reused within a key epoch (rotation refreshes keys).
+pub fn seal_id(key: &[u8; 32], round: u32, seq: u32, id: u64) -> Vec<u8> {
+    let nonce = aead::make_nonce(0, round, seq);
+    aead::seal(key, &nonce, BATCH_AAD, &id.to_le_bytes())
+}
+
+/// Attempt to open a sealed ID (returns None if not ours).
+pub fn open_id(key: &[u8; 32], round: u32, seq: u32, sealed: &[u8]) -> Option<u64> {
+    let nonce = aead::make_nonce(0, round, seq);
+    let pt = aead::open(key, &nonce, BATCH_AAD, sealed)?;
+    Some(u64::from_le_bytes(pt.try_into().ok()?))
+}
+
+// ---------------------------------------------------------------------------
+// Active party
+// ---------------------------------------------------------------------------
+
+pub struct ActiveParty {
+    /// Client index (always 0).
+    pub id: usize,
+    pub data: ActiveData,
+    /// All party weights (active module + every group module). The
+    /// active party owns initialization and the SGD step (§4.0.2).
+    pub params: ModelParams,
+    /// Per group: sample id → holder client index (from PSI alignment).
+    pub holders: Vec<HashMap<u64, usize>>,
+    pub session: Option<ClientSession>,
+    pub cfg: ModelConfig,
+    pub security: SecurityMode,
+    pub layout: GradLayout,
+    /// id → row index (for feature/label lookup).
+    index: HashMap<u64, usize>,
+    /// Cached per-round state for the backward pass.
+    last_batch_x: Option<Mat>,
+}
+
+impl ActiveParty {
+    pub fn new(
+        data: ActiveData,
+        holders: Vec<HashMap<u64, usize>>,
+        cfg: ModelConfig,
+        security: SecurityMode,
+        seed: u64,
+    ) -> Self {
+        let params = ModelParams::init(&cfg, seed);
+        let layout = GradLayout::new(&cfg);
+        let index = data.ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        ActiveParty {
+            id: 0,
+            data,
+            params,
+            holders,
+            session: None,
+            cfg,
+            security,
+            layout,
+            index,
+            last_batch_x: None,
+        }
+    }
+
+    /// Begin a setup epoch: generate per-peer keypairs.
+    pub fn begin_setup(&mut self, n_clients: usize, epoch: u64, rng: &mut DetRng) -> Msg {
+        let s = ClientSession::new(self.id, n_clients, epoch, rng);
+        let msg = Msg::PublishKeys(keys_to_wire(&s.published_keys()));
+        self.session = Some(s);
+        msg
+    }
+
+    pub fn finish_setup(&mut self, all: &[WireKeys]) {
+        let keys: Vec<PublishedKeys> = all.iter().map(keys_from_wire).collect();
+        self.session.as_mut().expect("setup started").derive_secrets(&keys);
+    }
+
+    /// Seal one mini-batch's IDs for their holders (training phase:
+    /// includes labels, which the paper deems safe to share, §4.0.2).
+    pub fn make_batch(&self, ids: &[u64], round: u32) -> Msg {
+        let labels: Vec<f32> = ids.iter().map(|id| self.data.labels[self.index[id]]).collect();
+        self.make_batch_inner(ids, labels, round)
+    }
+
+    /// Testing-phase variant (§4.0.3): no labels leave the active party.
+    pub fn make_batch_unlabeled(&self, ids: &[u64], round: u32) -> Msg {
+        self.make_batch_inner(ids, Vec::new(), round)
+    }
+
+    fn make_batch_inner(&self, ids: &[u64], labels: Vec<f32>, round: u32) -> Msg {
+        if self.security.is_secure() {
+            let session = self.session.as_ref().expect("setup done");
+            let batch = ids.len();
+            let n_groups = self.holders.len();
+            let mut entries = Vec::with_capacity(batch * n_groups);
+            for (g, holder_map) in self.holders.iter().enumerate() {
+                for (pos, &id) in ids.iter().enumerate() {
+                    let holder = *holder_map.get(&id).expect("holder known via PSI");
+                    let key = session.channel_key(holder);
+                    let seq = (g * batch + pos) as u32;
+                    entries.push(seal_id(&key, round, seq, id));
+                }
+            }
+            Msg::BatchSelect { round, labels, entries }
+        } else {
+            Msg::PlainBatch { round, labels, ids: ids.to_vec() }
+        }
+    }
+
+    /// The flat party weights to redistribute this round.
+    pub fn group_weights_flat(&self) -> Vec<f32> {
+        self.params.flatten()
+    }
+
+    /// Build this round's feature matrix for the selected batch.
+    pub fn batch_features(&mut self, ids: &[u64]) -> Mat {
+        let d = self.data.dim;
+        let mut x = Mat::zeros(ids.len(), d);
+        for (r, id) in ids.iter().enumerate() {
+            let i = self.index[id];
+            x.data[r * d..(r + 1) * d].copy_from_slice(&self.data.x[i]);
+        }
+        self.last_batch_x = Some(x.clone());
+        x
+    }
+
+    /// Mask an activation for upload (Eq. 2). Returns the message.
+    pub fn masked_activation(&self, round: u32, z: &Mat) -> Msg {
+        match self.security {
+            SecurityMode::SecureExact => {
+                let words =
+                    self.session.as_ref().unwrap().mask_tensor(&z.data, round as u64, 0);
+                Msg::MaskedActivation { round, from: self.id as u16, words }
+            }
+            SecurityMode::SecureFloat => {
+                let vals =
+                    self.session.as_ref().unwrap().mask_tensor_f32(&z.data, round as u64, 0);
+                Msg::FloatActivation { round, from: self.id as u16, vals }
+            }
+            SecurityMode::Plain => {
+                Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }
+            }
+        }
+    }
+
+    /// The cached batch features (for the backward pass).
+    pub fn last_x(&self) -> &Mat {
+        self.last_batch_x.as_ref().expect("forward ran")
+    }
+
+    /// The active party's own full-length gradient contribution,
+    /// masked with its total mask n₀ (Eq. 3). Adding this to the
+    /// aggregator's passive sum cancels every mask — the full gradient
+    /// becomes visible ONLY here (§4.0.2's privacy argument).
+    pub fn own_grad_contribution(&self, round: u32, own_dw: &Mat, own_db: &[f32]) -> GradSum {
+        let l = self.layout.total;
+        let mut own = vec![0.0f32; l];
+        own[self.layout.active_w.0..self.layout.active_w.0 + self.layout.active_w.1]
+            .copy_from_slice(&own_dw.data);
+        own[self.layout.active_b.0..self.layout.active_b.0 + self.layout.active_b.1]
+            .copy_from_slice(own_db);
+        match self.security {
+            SecurityMode::SecureExact => {
+                GradSum::Words(self.session.as_ref().unwrap().mask_tensor(&own, round as u64, 1))
+            }
+            SecurityMode::SecureFloat => GradSum::Floats(
+                self.session.as_ref().unwrap().mask_tensor_f32(&own, round as u64, 1),
+            ),
+            SecurityMode::Plain => GradSum::Floats(own),
+        }
+    }
+
+    /// Unmask the full gradient (aggregator sum + own contribution) and
+    /// apply SGD. Returns the new flat party weights.
+    pub fn apply_gradients(&mut self, grad_sum: GradSum, own: GradSum, lr: f32) -> Result<Vec<f32>> {
+        let l = self.layout.total;
+        let full: Vec<f32> = match (grad_sum, own) {
+            (GradSum::Words(words), GradSum::Words(own_w)) => {
+                if words.len() != l {
+                    bail!("gradient sum length {} != {}", words.len(), l);
+                }
+                let fp = FixedPoint::default();
+                let mut acc = words;
+                for (a, w) in acc.iter_mut().zip(&own_w) {
+                    *a = a.wrapping_add(*w);
+                }
+                fp.decode_vec(&acc)
+            }
+            (GradSum::Floats(vals), GradSum::Floats(own_f)) => {
+                vals.iter().zip(&own_f).map(|(a, b)| a + b).collect()
+            }
+            _ => bail!("gradient sum domain mismatch"),
+        };
+
+        // SGD on all party weights
+        let (ow, lw) = self.layout.active_w;
+        for (w, g) in self.params.active.w.data.iter_mut().zip(&full[ow..ow + lw]) {
+            *w -= lr * g;
+        }
+        let (ob, lb) = self.layout.active_b;
+        if let Some(b) = self.params.active.b.as_mut() {
+            for (w, g) in b.iter_mut().zip(&full[ob..ob + lb]) {
+                *w -= lr * g;
+            }
+        }
+        for (gi, &(og, lg)) in self.layout.groups.iter().enumerate() {
+            for (w, g) in self.params.groups[gi].w.data.iter_mut().zip(&full[og..og + lg]) {
+                *w -= lr * g;
+            }
+        }
+        Ok(self.params.flatten())
+    }
+}
+
+/// The aggregator→active gradient sum, in either mask domain.
+pub enum GradSum {
+    Words(Vec<u64>),
+    Floats(Vec<f32>),
+}
+
+// ---------------------------------------------------------------------------
+// Passive party
+// ---------------------------------------------------------------------------
+
+pub struct PassiveParty {
+    /// Client index (1-based among clients; active is 0).
+    pub id: usize,
+    pub group: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub data: PassiveData,
+    pub session: Option<ClientSession>,
+    pub security: SecurityMode,
+    pub layout: GradLayout,
+    /// Current group weights (distributed by the aggregator).
+    pub weights: Mat,
+    /// Cached batch features for the backward pass.
+    last_batch_x: Option<Mat>,
+}
+
+impl PassiveParty {
+    pub fn new(
+        id: usize,
+        data: PassiveData,
+        cfg: &ModelConfig,
+        security: SecurityMode,
+    ) -> Self {
+        let group = data.group;
+        let dim = data.dim;
+        PassiveParty {
+            id,
+            group,
+            dim,
+            hidden: cfg.hidden,
+            data,
+            session: None,
+            security,
+            layout: GradLayout::new(cfg),
+            weights: Mat::zeros(dim, cfg.hidden),
+            last_batch_x: None,
+        }
+    }
+
+    pub fn begin_setup(&mut self, n_clients: usize, epoch: u64, rng: &mut DetRng) -> Msg {
+        let s = ClientSession::new(self.id, n_clients, epoch, rng);
+        let msg = Msg::PublishKeys(keys_to_wire(&s.published_keys()));
+        self.session = Some(s);
+        msg
+    }
+
+    pub fn finish_setup(&mut self, all: &[WireKeys]) {
+        let keys: Vec<PublishedKeys> = all.iter().map(keys_from_wire).collect();
+        self.session.as_mut().expect("setup started").derive_secrets(&keys);
+    }
+
+    /// Decrypt what we can from the sealed ID broadcast (§4.0.2): every
+    /// entry is tried; only those sealed under our pairwise key open.
+    /// Returns (position-in-batch, id) pairs.
+    pub fn resolve_batch(&self, round: u32, entries: &[Vec<u8>], batch: usize) -> Vec<(usize, u64)> {
+        let session = self.session.as_ref().expect("setup done");
+        let key = session.channel_key(0); // channel with the active party
+        let mut out = Vec::new();
+        for (seq, sealed) in entries.iter().enumerate() {
+            if let Some(id) = open_id(&key, round, seq as u32, sealed) {
+                if self.data.rows.contains_key(&id) {
+                    out.push((seq % batch, id));
+                }
+            }
+        }
+        out
+    }
+
+    /// Plain-mode batch resolution.
+    pub fn resolve_plain(&self, ids: &[u64]) -> Vec<(usize, u64)> {
+        ids.iter()
+            .enumerate()
+            .filter(|(_, id)| self.data.rows.contains_key(id))
+            .map(|(p, &id)| (p, id))
+            .collect()
+    }
+
+    /// Build the (B × d) feature matrix, zero rows for absent samples
+    /// (Eq. 2's indicator function).
+    pub fn batch_features(&mut self, resolved: &[(usize, u64)], batch: usize) -> Mat {
+        let mut x = Mat::zeros(batch, self.dim);
+        for &(pos, id) in resolved {
+            let row = &self.data.rows[&id];
+            x.data[pos * self.dim..(pos + 1) * self.dim].copy_from_slice(row);
+        }
+        self.last_batch_x = Some(x.clone());
+        x
+    }
+
+    pub fn last_x(&self) -> &Mat {
+        self.last_batch_x.as_ref().expect("forward ran")
+    }
+
+    /// Mask an activation for upload (Eq. 2).
+    pub fn masked_activation(&self, round: u32, z: &Mat) -> Msg {
+        match self.security {
+            SecurityMode::SecureExact => {
+                let words =
+                    self.session.as_ref().unwrap().mask_tensor(&z.data, round as u64, 0);
+                Msg::MaskedActivation { round, from: self.id as u16, words }
+            }
+            SecurityMode::SecureFloat => {
+                let vals =
+                    self.session.as_ref().unwrap().mask_tensor_f32(&z.data, round as u64, 0);
+                Msg::FloatActivation { round, from: self.id as u16, vals }
+            }
+            SecurityMode::Plain => {
+                Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }
+            }
+        }
+    }
+
+    /// Embed the local weight gradient into the full-length layout and
+    /// mask it (Eq. 6).
+    pub fn masked_gradient(&self, round: u32, dw: &Mat) -> Msg {
+        let l = self.layout.total;
+        let (off, len) = self.layout.groups[self.group];
+        assert_eq!(dw.data.len(), len);
+        let mut full = vec![0.0f32; l];
+        full[off..off + len].copy_from_slice(&dw.data);
+        match self.security {
+            SecurityMode::SecureExact => {
+                let words = self.session.as_ref().unwrap().mask_tensor(&full, round as u64, 1);
+                Msg::MaskedGradient { round, from: self.id as u16, words }
+            }
+            SecurityMode::SecureFloat => {
+                let vals =
+                    self.session.as_ref().unwrap().mask_tensor_f32(&full, round as u64, 1);
+                Msg::FloatGradient { round, from: self.id as u16, vals }
+            }
+            SecurityMode::Plain => {
+                Msg::FloatGradient { round, from: self.id as u16, vals: full }
+            }
+        }
+    }
+
+    /// Install redistributed group weights.
+    pub fn set_weights(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.dim * self.hidden, "group weight size");
+        self.weights = Mat::from_vec(self.dim, self.hidden, flat.to_vec());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aggregator
+// ---------------------------------------------------------------------------
+
+/// The aggregator: relays traffic, owns the global module, sums masked
+/// vectors (masks cancel per Eq. 4-5), and never sees an individual
+/// party's plaintext tensor.
+pub struct Aggregator {
+    pub n_clients: usize,
+    pub hidden: usize,
+    /// Global module Linear(hidden, 1) — lives here per §6.2.
+    pub global_w: Vec<f32>,
+    pub global_b: f32,
+    pub fp: FixedPoint,
+}
+
+impl Aggregator {
+    pub fn new(cfg: &ModelConfig, seed: u64) -> Self {
+        // aggregator receives the initial global module from the active
+        // party's init (same seed → same init as ModelParams::init)
+        let params = ModelParams::init(cfg, seed);
+        Aggregator {
+            n_clients: cfg.n_clients(),
+            hidden: cfg.hidden,
+            global_w: params.global.w.data,
+            global_b: params.global.b,
+            fp: FixedPoint::default(),
+        }
+    }
+
+    /// Sum masked activations into the clear aggregate z (Eq. 5).
+    pub fn sum_activations_exact(&self, batch: usize, parts: &[Vec<u64>]) -> Mat {
+        assert_eq!(parts.len(), self.n_clients, "need every client's share");
+        let mut acc = vec![0u64; batch * self.hidden];
+        for p in parts {
+            assert_eq!(p.len(), acc.len());
+            for (a, v) in acc.iter_mut().zip(p) {
+                *a = a.wrapping_add(*v);
+            }
+        }
+        Mat::from_vec(batch, self.hidden, self.fp.decode_vec(&acc))
+    }
+
+    pub fn sum_activations_float(&self, batch: usize, parts: &[Vec<f32>]) -> Mat {
+        assert_eq!(parts.len(), self.n_clients);
+        let mut acc = vec![0.0f32; batch * self.hidden];
+        for p in parts {
+            for (a, v) in acc.iter_mut().zip(p) {
+                *a += v;
+            }
+        }
+        Mat::from_vec(batch, self.hidden, acc)
+    }
+
+    /// Sum the passives' masked gradients. The result is still masked
+    /// by the active party's total mask (its share is absent), so the
+    /// aggregator learns nothing (§4.0.2).
+    pub fn sum_gradients_exact(&self, parts: &[Vec<u64>]) -> Vec<u64> {
+        let l = parts[0].len();
+        let mut acc = vec![0u64; l];
+        for p in parts {
+            assert_eq!(p.len(), l);
+            for (a, v) in acc.iter_mut().zip(p) {
+                *a = a.wrapping_add(*v);
+            }
+        }
+        acc
+    }
+
+    pub fn sum_gradients_float(&self, parts: &[Vec<f32>]) -> Vec<f32> {
+        let l = parts[0].len();
+        let mut acc = vec![0.0f32; l];
+        for p in parts {
+            for (a, v) in acc.iter_mut().zip(p) {
+                *a += v;
+            }
+        }
+        acc
+    }
+
+    /// Apply the global-module SGD update (the aggregator computes
+    /// dwg/dbg itself from the clear z — which is legitimately public
+    /// to it under the protocol).
+    pub fn update_global(&mut self, d_w: &[f32], d_b: f32, lr: f32) {
+        for (w, g) in self.global_w.iter_mut().zip(d_w) {
+            *w -= lr * g;
+        }
+        self.global_b -= lr * d_b;
+    }
+}
+
+/// Helper: serialize a message and return (encoded, byte length).
+pub fn encode_msg(m: &Msg) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.buf = m.encode();
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_layout_offsets() {
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let l = GradLayout::new(&cfg);
+        assert_eq!(l.active_w, (0, 57 * 64));
+        assert_eq!(l.active_b, (57 * 64, 64));
+        assert_eq!(l.groups[0], (57 * 64 + 64, 3 * 64));
+        assert_eq!(l.groups[1], (57 * 64 + 64 + 3 * 64, 20 * 64));
+        assert_eq!(l.total, 57 * 64 + 64 + 3 * 64 + 20 * 64);
+    }
+
+    #[test]
+    fn seal_open_id() {
+        let key = [9u8; 32];
+        let sealed = seal_id(&key, 3, 17, 0xdeadbeef);
+        assert_eq!(sealed.len(), 8 + 16); // id + tag
+        assert_eq!(open_id(&key, 3, 17, &sealed), Some(0xdeadbeef));
+        // wrong seq / round / key → None
+        assert_eq!(open_id(&key, 3, 18, &sealed), None);
+        assert_eq!(open_id(&key, 4, 17, &sealed), None);
+        assert_eq!(open_id(&[8u8; 32], 3, 17, &sealed), None);
+    }
+}

@@ -1,0 +1,611 @@
+//! The orchestrator: runs the full §4 protocol — setup, training
+//! rounds (with key rotation), and the testing phase — over the
+//! byte-metered network, timing every party's compute.
+//!
+//! Single-threaded by design: parties only interact through serialized
+//! [`Msg`]s routed via [`Network`], so the byte counters are exact and
+//! per-party CPU attribution is deterministic (the same reason the
+//! paper simulates with Flower's VCE rather than real sockets).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::crypto::rng::DetRng;
+use crate::data::{generate, partition, by_name};
+use crate::model::linalg::Mat;
+use crate::model::ModelParams;
+use crate::net::{Addr, Network, Phase};
+use crate::runtime::Engine;
+
+use super::backend::Backend;
+use super::config::{BackendKind, RunConfig};
+use super::messages::Msg;
+use super::metrics::{client, Metrics, AGGREGATOR};
+use super::parties::{ActiveParty, Aggregator, GradSum, PassiveParty};
+
+/// Everything a run produces.
+pub struct RunReport {
+    pub losses: Vec<f32>,
+    /// Test-set accuracy (threshold 0.5).
+    pub test_accuracy: f64,
+    /// Test-phase predictions (for equivalence checks).
+    pub predictions: Vec<f32>,
+    /// Ground-truth labels aligned with `predictions` (for metrics).
+    pub prediction_labels: Vec<f32>,
+    pub final_params: ModelParams,
+    pub metrics: Metrics,
+    pub net: Network,
+    /// Number of setup phases executed (1 + rotations).
+    pub setups: usize,
+}
+
+/// A fully wired experiment.
+pub struct Experiment<'e> {
+    pub cfg: RunConfig,
+    backend: Backend<'e>,
+    active: ActiveParty,
+    passives: Vec<PassiveParty>,
+    aggregator: Aggregator,
+    pub net: Network,
+    pub metrics: Metrics,
+    rng: DetRng,
+    train_ids: Vec<u64>,
+    test_ids: Vec<u64>,
+    test_labels: HashMap<u64, f32>,
+    cursor: usize,
+    epoch: u64,
+    setups: usize,
+}
+
+impl<'e> Experiment<'e> {
+    /// Generate data, partition it, and wire up all parties.
+    pub fn new(cfg: RunConfig, engine: Option<&'e Engine>) -> Result<Self> {
+        let backend = match cfg.backend {
+            BackendKind::Reference => Backend::Reference,
+            BackendKind::Pjrt => {
+                Backend::Pjrt(engine.context("PJRT backend requires a loaded Engine")?)
+            }
+        };
+        let (schema, spec, _) =
+            by_name(&cfg.model.dataset).context("unknown dataset")?;
+        let data = generate(&schema, cfg.n_rows, cfg.seed);
+        let vertical = partition(&data, &spec);
+
+        let batch = cfg.model.batch_size;
+        let n_train = ((cfg.n_rows as f32) * 0.8) as usize;
+        if n_train < batch || cfg.n_rows - n_train < batch {
+            bail!("need ≥ {batch} rows in both train and test splits");
+        }
+        let train_ids = data.ids[..n_train].to_vec();
+        let test_ids = data.ids[n_train..].to_vec();
+        let test_labels: HashMap<u64, f32> = data.ids[n_train..]
+            .iter()
+            .zip(&data.labels[n_train..])
+            .map(|(&i, &l)| (i, l))
+            .collect();
+
+        // holder maps: per group, id → client index of the holding party
+        let holders: Vec<HashMap<u64, usize>> = (0..spec.groups.len())
+            .map(|g| {
+                let mut m = HashMap::new();
+                for p in vertical.passives.iter().filter(|p| p.group == g) {
+                    for &id in p.rows.keys() {
+                        m.insert(id, p.party_id + 1); // client idx (active = 0)
+                    }
+                }
+                m
+            })
+            .collect();
+
+        let active =
+            ActiveParty::new(vertical.active, holders, cfg.model.clone(), cfg.security, cfg.seed);
+        let passives: Vec<PassiveParty> = vertical
+            .passives
+            .into_iter()
+            .map(|pd| PassiveParty::new(pd.party_id + 1, pd, &cfg.model, cfg.security))
+            .collect();
+        let aggregator = Aggregator::new(&cfg.model, cfg.seed);
+        let n_clients = cfg.model.n_clients();
+        let rng = DetRng::from_seed(cfg.seed ^ 0x5eed_0f_5a);
+
+        Ok(Experiment {
+            cfg,
+            backend,
+            active,
+            passives,
+            aggregator,
+            net: Network::new(n_clients),
+            metrics: Metrics::new(),
+            rng,
+            train_ids,
+            test_ids,
+            test_labels,
+            cursor: 0,
+            epoch: 0,
+            setups: 0,
+        })
+    }
+
+    /// §4.0.1 setup phase (also §5.1 key rotation when called again).
+    pub fn run_setup(&mut self) -> Result<()> {
+        if !self.cfg.security.is_secure() {
+            return Ok(()); // unsecured VFL has no setup
+        }
+        let epoch = self.epoch;
+        let n = self.cfg.model.n_clients();
+        // aggregator requests keys
+        for i in 0..n {
+            self.net.send(Addr::Aggregator, Addr::Client(i), Msg::RequestKeys { epoch }.encode());
+        }
+        // clients generate keypairs and publish
+        for i in 0..n {
+            let _ = self.net.recv_one(Addr::Client(i));
+            let msg = if i == 0 {
+                let rng = &mut self.rng;
+                let a = &mut self.active;
+                self.metrics
+                    .time_overhead(client(0), self.net.phase, || a.begin_setup(n, epoch, rng))
+            } else {
+                let rng = &mut self.rng;
+                let p = &mut self.passives[i - 1];
+                self.metrics
+                    .time_overhead(client(i), self.net.phase, || p.begin_setup(n, epoch, rng))
+            };
+            self.net.send(Addr::Client(i), Addr::Aggregator, msg.encode());
+        }
+        // aggregator assembles the directory and relays it
+        let mut all = Vec::with_capacity(n);
+        for (_, raw) in self.net.deliver(Addr::Aggregator) {
+            match Msg::decode(&raw)? {
+                Msg::PublishKeys(k) => all.push(k),
+                m => bail!("unexpected setup message {m:?}"),
+            }
+        }
+        all.sort_by_key(|k| k.from);
+        let dir = Msg::KeyDirectory { epoch, all };
+        for i in 0..n {
+            self.net.send(Addr::Aggregator, Addr::Client(i), dir.encode());
+        }
+        // clients derive pairwise secrets
+        for i in 0..n {
+            let (_, raw) = self.net.recv_one(Addr::Client(i)).context("directory missing")?;
+            let Msg::KeyDirectory { all, .. } = Msg::decode(&raw)? else {
+                bail!("expected directory")
+            };
+            if i == 0 {
+                let a = &mut self.active;
+                self.metrics
+                    .time_overhead(client(0), self.net.phase, || a.finish_setup(&all));
+            } else {
+                let p = &mut self.passives[i - 1];
+                self.metrics
+                    .time_overhead(client(i), self.net.phase, || p.finish_setup(&all));
+            }
+        }
+        self.epoch += 1;
+        self.setups += 1;
+        Ok(())
+    }
+
+    /// Pick the next training batch ids (sequential, wrapping).
+    fn next_train_batch(&mut self) -> Vec<u64> {
+        let b = self.cfg.model.batch_size;
+        let n = self.train_ids.len();
+        let ids: Vec<u64> = (0..b).map(|k| self.train_ids[(self.cursor + k) % n]).collect();
+        self.cursor = (self.cursor + b) % n;
+        ids
+    }
+
+    /// One §4.0.2 training round. Returns the batch loss.
+    pub fn train_round(&mut self, round: u32) -> Result<f32> {
+        self.net.phase = Phase::Training;
+        let secure = self.cfg.security.is_secure();
+        let batch = self.cfg.model.batch_size;
+        let n = self.cfg.model.n_clients();
+        let lr = self.cfg.model.lr;
+
+        // key rotation (§5.1): re-run setup every K rounds
+        if secure && round as usize % self.cfg.model.rotation_period == 0 {
+            self.run_setup()?;
+        }
+
+        // 1. active: batch selection + sealing, weights redistribution
+        let ids = self.next_train_batch();
+        let batch_msg = {
+            let a = &mut self.active;
+            let ids = &ids;
+            if secure {
+                self.metrics
+                    .time_overhead(client(0), Phase::Training, || a.make_batch(ids, round))
+            } else {
+                self.metrics.time(client(0), Phase::Training, || a.make_batch(ids, round))
+            }
+        };
+        let weights_msg = Msg::WeightsUpdate { round, flat: self.active.group_weights_flat() };
+        self.net.send(Addr::Client(0), Addr::Aggregator, batch_msg.encode());
+        self.net.send(Addr::Client(0), Addr::Aggregator, weights_msg.encode());
+
+        // 2. aggregator relays batch + per-group weights
+        let mut relay_entries: Option<Vec<Vec<u8>>> = None;
+        let mut relay_ids: Option<Vec<u64>> = None;
+        let mut labels: Vec<f32> = Vec::new();
+        let mut group_flats: Vec<Vec<f32>> = Vec::new();
+        for (_, raw) in self.net.deliver(Addr::Aggregator) {
+            match Msg::decode(&raw)? {
+                Msg::BatchSelect { labels: l, entries, .. } => {
+                    labels = l;
+                    relay_entries = Some(entries);
+                }
+                Msg::PlainBatch { labels: l, ids, .. } => {
+                    labels = l;
+                    relay_ids = Some(ids);
+                }
+                Msg::WeightsUpdate { flat, .. } => {
+                    group_flats = self.split_group_weights(&flat);
+                }
+                m => bail!("unexpected message {m:?}"),
+            }
+        }
+        for p in 0..self.passives.len() {
+            let ci = self.passives[p].id;
+            let relay = match (&relay_entries, &relay_ids) {
+                (Some(e), _) => Msg::BatchRelay { round, entries: e.clone() },
+                (_, Some(ids)) => Msg::PlainBatchRelay { round, ids: ids.clone() },
+                _ => bail!("no batch message received"),
+            };
+            self.net.send(Addr::Aggregator, Addr::Client(ci), relay.encode());
+            let g = self.passives[p].group;
+            let gw = Msg::GroupWeights { round, group: g as u8, flat: group_flats[g].clone() };
+            self.net.send(Addr::Aggregator, Addr::Client(ci), gw.encode());
+        }
+
+        // 3. passive forward passes
+        for p in 0..self.passives.len() {
+            let ci = self.passives[p].id;
+            let msgs = self.net.deliver(Addr::Client(ci));
+            let mut resolved: Vec<(usize, u64)> = Vec::new();
+            for (_, raw) in msgs {
+                match Msg::decode(&raw)? {
+                    Msg::BatchRelay { entries, round: r } => {
+                        let pp = &self.passives[p];
+                        resolved = self.metrics.time_overhead(client(ci), Phase::Training, || {
+                            pp.resolve_batch(r, &entries, batch)
+                        });
+                    }
+                    Msg::PlainBatchRelay { ids, .. } => {
+                        resolved = self.passives[p].resolve_plain(&ids);
+                    }
+                    Msg::GroupWeights { flat, .. } => self.passives[p].set_weights(&flat),
+                    m => bail!("unexpected message {m:?}"),
+                }
+            }
+            let x = self.passives[p].batch_features(&resolved, batch);
+            let graph = format!("fwd_g{}", self.passives[p].group);
+            let weights = crate::model::PartyParams {
+                w: self.passives[p].weights.clone(),
+                b: None,
+            };
+            let backend = &self.backend;
+            let z = self.metrics.time(client(ci), Phase::Training, || {
+                backend.party_fwd(&graph, &x, &weights, None)
+            })?;
+            let pp = &self.passives[p];
+            let msg = if secure {
+                self.metrics
+                    .time_overhead(client(ci), Phase::Training, || pp.masked_activation(round, &z))
+            } else {
+                self.metrics.time(client(ci), Phase::Training, || pp.masked_activation(round, &z))
+            };
+            self.net.send(Addr::Client(ci), Addr::Aggregator, msg.encode());
+        }
+
+        // 4. active forward pass
+        let xa = self.active.batch_features(&ids);
+        let a_params = crate::model::PartyParams {
+            w: self.active.params.active.w.clone(),
+            b: self.active.params.active.b.clone(),
+        };
+        let backend = &self.backend;
+        let za = self.metrics.time(client(0), Phase::Training, || {
+            backend.party_fwd("fwd_active", &xa, &a_params, None)
+        })?;
+        let a = &self.active;
+        let msg = if secure {
+            self.metrics
+                .time_overhead(client(0), Phase::Training, || a.masked_activation(round, &za))
+        } else {
+            self.metrics.time(client(0), Phase::Training, || a.masked_activation(round, &za))
+        };
+        self.net.send(Addr::Client(0), Addr::Aggregator, msg.encode());
+
+        // 5. aggregator: unmask-by-summation, global step, dz broadcast
+        let mut exact_parts: Vec<Vec<u64>> = Vec::new();
+        let mut float_parts: Vec<Vec<f32>> = Vec::new();
+        for (_, raw) in self.net.deliver(Addr::Aggregator) {
+            match Msg::decode(&raw)? {
+                Msg::MaskedActivation { words, .. } => exact_parts.push(words),
+                Msg::FloatActivation { vals, .. } => float_parts.push(vals),
+                m => bail!("unexpected activation message {m:?}"),
+            }
+        }
+        let agg = &self.aggregator;
+        let z = self.metrics.time(AGGREGATOR, Phase::Training, || {
+            if !exact_parts.is_empty() {
+                agg.sum_activations_exact(batch, &exact_parts)
+            } else {
+                agg.sum_activations_float(batch, &float_parts)
+            }
+        });
+        let (gw, gb) = (self.aggregator.global_w.clone(), self.aggregator.global_b);
+        let out = self.metrics.time(AGGREGATOR, Phase::Training, || {
+            backend.global_step(&z, &gw, gb, &labels)
+        })?;
+        self.aggregator.update_global(&out.d_global_w, out.d_global_b, lr);
+        let dz_msg = Msg::DzBroadcast { round, dz: out.dz.data.clone() };
+        for i in 0..n {
+            self.net.send(Addr::Aggregator, Addr::Client(i), dz_msg.encode());
+        }
+
+        // 6. passive backward passes
+        let h = self.cfg.model.hidden;
+        for p in 0..self.passives.len() {
+            let ci = self.passives[p].id;
+            let (_, raw) = self.net.recv_one(Addr::Client(ci)).context("dz missing")?;
+            let Msg::DzBroadcast { dz, .. } = Msg::decode(&raw)? else { bail!("expected dz") };
+            let dzm = Mat::from_vec(batch, h, dz);
+            let graph = format!("bwd_g{}", self.passives[p].group);
+            let x = self.passives[p].last_x().clone();
+            let backend = &self.backend;
+            let (dw, _) = self.metrics.time(client(ci), Phase::Training, || {
+                backend.party_bwd(&graph, &x, &dzm, false)
+            })?;
+            let pp = &self.passives[p];
+            let msg = if secure {
+                self.metrics
+                    .time_overhead(client(ci), Phase::Training, || pp.masked_gradient(round, &dw))
+            } else {
+                self.metrics.time(client(ci), Phase::Training, || pp.masked_gradient(round, &dw))
+            };
+            self.net.send(Addr::Client(ci), Addr::Aggregator, msg.encode());
+        }
+
+        // 7. aggregator sums passive gradients → still masked → active
+        let (_, raw) = self.net.recv_one(Addr::Client(0)).context("dz missing")?;
+        let Msg::DzBroadcast { dz, .. } = Msg::decode(&raw)? else { bail!("expected dz") };
+        let dzm = Mat::from_vec(batch, h, dz);
+
+        let mut gexact: Vec<Vec<u64>> = Vec::new();
+        let mut gfloat: Vec<Vec<f32>> = Vec::new();
+        for (_, raw) in self.net.deliver(Addr::Aggregator) {
+            match Msg::decode(&raw)? {
+                Msg::MaskedGradient { words, .. } => gexact.push(words),
+                Msg::FloatGradient { vals, .. } => gfloat.push(vals),
+                m => bail!("unexpected gradient message {m:?}"),
+            }
+        }
+        let agg = &self.aggregator;
+        let gsum_msg = self.metrics.time(AGGREGATOR, Phase::Training, || {
+            if !gexact.is_empty() {
+                Msg::GradientSum { round, words: agg.sum_gradients_exact(&gexact) }
+            } else {
+                Msg::FloatGradientSum { round, vals: agg.sum_gradients_float(&gfloat) }
+            }
+        });
+        self.net.send(Addr::Aggregator, Addr::Client(0), gsum_msg.encode());
+
+        // 8. active: own backward + unmask + SGD
+        let xa = self.active.last_x().clone();
+        let backend = &self.backend;
+        let (own_dw, own_db) = self.metrics.time(client(0), Phase::Training, || {
+            backend.party_bwd("bwd_active", &xa, &dzm, true)
+        })?;
+        let (_, raw) = self.net.recv_one(Addr::Client(0)).context("gradient sum missing")?;
+        let gsum = match Msg::decode(&raw)? {
+            Msg::GradientSum { words, .. } => GradSum::Words(words),
+            Msg::FloatGradientSum { vals, .. } => GradSum::Floats(vals),
+            m => bail!("unexpected message {m:?}"),
+        };
+        let a = &mut self.active;
+        let own_db = own_db.unwrap();
+        let own = if secure {
+            self.metrics.time_overhead(client(0), Phase::Training, || {
+                a.own_grad_contribution(round, &own_dw, &own_db)
+            })
+        } else {
+            self.metrics
+                .time(client(0), Phase::Training, || a.own_grad_contribution(round, &own_dw, &own_db))
+        };
+        let a = &mut self.active;
+        self.metrics
+            .time(client(0), Phase::Training, || a.apply_gradients(gsum, own, lr))?;
+
+        Ok(out.loss)
+    }
+
+    fn split_group_weights(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        // flat is ModelParams::flatten(); extract the group blocks
+        let cfg = &self.cfg.model;
+        let h = cfg.hidden;
+        let mut off = cfg.active_dim * h + h;
+        cfg.group_dims
+            .iter()
+            .map(|&d| {
+                let s = flat[off..off + d * h].to_vec();
+                off += d * h;
+                s
+            })
+            .collect()
+    }
+
+    /// §4.0.3 testing phase over one batch of test ids; returns probs.
+    pub fn test_batch(&mut self, round: u32, ids: &[u64]) -> Result<Vec<f32>> {
+        self.net.phase = Phase::Testing;
+        let secure = self.cfg.security.is_secure();
+        let batch = self.cfg.model.batch_size;
+        assert_eq!(ids.len(), batch);
+
+        // active: sealed batch + masked activation (no labels in testing)
+        let a = &mut self.active;
+        let batch_msg = if secure {
+            self.metrics.time_overhead(client(0), Phase::Testing, || a.make_batch_unlabeled(ids, round))
+        } else {
+            self.metrics.time(client(0), Phase::Testing, || a.make_batch_unlabeled(ids, round))
+        };
+        self.net.send(Addr::Client(0), Addr::Aggregator, batch_msg.encode());
+        let xa = self.active.batch_features(ids);
+        let a_params = crate::model::PartyParams {
+            w: self.active.params.active.w.clone(),
+            b: self.active.params.active.b.clone(),
+        };
+        let backend = &self.backend;
+        let za = self.metrics.time(client(0), Phase::Testing, || {
+            backend.party_fwd("fwd_active", &xa, &a_params, None)
+        })?;
+        let a = &self.active;
+        let act_msg = if secure {
+            self.metrics.time_overhead(client(0), Phase::Testing, || a.masked_activation(round, &za))
+        } else {
+            self.metrics.time(client(0), Phase::Testing, || a.masked_activation(round, &za))
+        };
+        self.net.send(Addr::Client(0), Addr::Aggregator, act_msg.encode());
+
+        // aggregator relays the batch to passives
+        let mut relay_entries: Option<Vec<Vec<u8>>> = None;
+        let mut relay_ids: Option<Vec<u64>> = None;
+        let mut exact_parts: Vec<Vec<u64>> = Vec::new();
+        let mut float_parts: Vec<Vec<f32>> = Vec::new();
+        for (_, raw) in self.net.deliver(Addr::Aggregator) {
+            match Msg::decode(&raw)? {
+                Msg::BatchSelect { entries, .. } => relay_entries = Some(entries),
+                Msg::PlainBatch { ids, .. } => relay_ids = Some(ids),
+                Msg::MaskedActivation { words, .. } => exact_parts.push(words),
+                Msg::FloatActivation { vals, .. } => float_parts.push(vals),
+                m => bail!("unexpected message {m:?}"),
+            }
+        }
+        for p in 0..self.passives.len() {
+            let ci = self.passives[p].id;
+            let relay = match (&relay_entries, &relay_ids) {
+                (Some(e), _) => Msg::BatchRelay { round, entries: e.clone() },
+                (_, Some(ids)) => Msg::PlainBatchRelay { round, ids: ids.clone() },
+                _ => bail!("no batch message"),
+            };
+            self.net.send(Addr::Aggregator, Addr::Client(ci), relay.encode());
+        }
+
+        // passive forwards
+        for p in 0..self.passives.len() {
+            let ci = self.passives[p].id;
+            let mut resolved = Vec::new();
+            for (_, raw) in self.net.deliver(Addr::Client(ci)) {
+                match Msg::decode(&raw)? {
+                    Msg::BatchRelay { entries, round: r } => {
+                        let pp = &self.passives[p];
+                        resolved = self.metrics.time_overhead(client(ci), Phase::Testing, || {
+                            pp.resolve_batch(r, &entries, batch)
+                        });
+                    }
+                    Msg::PlainBatchRelay { ids, .. } => {
+                        resolved = self.passives[p].resolve_plain(&ids);
+                    }
+                    m => bail!("unexpected message {m:?}"),
+                }
+            }
+            let x = self.passives[p].batch_features(&resolved, batch);
+            let graph = format!("fwd_g{}", self.passives[p].group);
+            let weights =
+                crate::model::PartyParams { w: self.passives[p].weights.clone(), b: None };
+            let backend = &self.backend;
+            let z = self.metrics.time(client(ci), Phase::Testing, || {
+                backend.party_fwd(&graph, &x, &weights, None)
+            })?;
+            let pp = &self.passives[p];
+            let msg = if secure {
+                self.metrics
+                    .time_overhead(client(ci), Phase::Testing, || pp.masked_activation(round, &z))
+            } else {
+                self.metrics.time(client(ci), Phase::Testing, || pp.masked_activation(round, &z))
+            };
+            self.net.send(Addr::Client(ci), Addr::Aggregator, msg.encode());
+        }
+
+        // aggregator: sum + predict
+        for (_, raw) in self.net.deliver(Addr::Aggregator) {
+            match Msg::decode(&raw)? {
+                Msg::MaskedActivation { words, .. } => exact_parts.push(words),
+                Msg::FloatActivation { vals, .. } => float_parts.push(vals),
+                m => bail!("unexpected message {m:?}"),
+            }
+        }
+        let agg = &self.aggregator;
+        let z = self.metrics.time(AGGREGATOR, Phase::Testing, || {
+            if !exact_parts.is_empty() {
+                agg.sum_activations_exact(batch, &exact_parts)
+            } else {
+                agg.sum_activations_float(batch, &float_parts)
+            }
+        });
+        let (gw, gb) = (self.aggregator.global_w.clone(), self.aggregator.global_b);
+        let backend = &self.backend;
+        let probs =
+            self.metrics.time(AGGREGATOR, Phase::Testing, || backend.predict(&z, &gw, gb))?;
+        self.net
+            .send(Addr::Aggregator, Addr::Client(0), Msg::Predictions { round, probs: probs.clone() }.encode());
+        let _ = self.net.recv_one(Addr::Client(0));
+        Ok(probs)
+    }
+
+    /// Run the full experiment per the configuration.
+    pub fn run(mut self) -> Result<RunReport> {
+        // initial setup (counted under Phase::Setup)
+        self.net.phase = Phase::Setup;
+        self.run_setup()?;
+
+        let mut losses = Vec::with_capacity(self.cfg.train_rounds);
+        for r in 0..self.cfg.train_rounds {
+            losses.push(self.train_round(r as u32)?);
+        }
+
+        // testing phase
+        let batch = self.cfg.model.batch_size;
+        let mut predictions = Vec::new();
+        let mut prediction_labels = Vec::new();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for t in 0..self.cfg.test_rounds {
+            let start = t * batch;
+            if start + batch > self.test_ids.len() {
+                break;
+            }
+            let ids: Vec<u64> = self.test_ids[start..start + batch].to_vec();
+            let probs = self.test_batch(self.cfg.train_rounds as u32 + t as u32, &ids)?;
+            for (id, p) in ids.iter().zip(&probs) {
+                let y = self.test_labels[id];
+                prediction_labels.push(y);
+                if (*p > 0.5) == (y == 1.0) {
+                    correct += 1;
+                }
+                total += 1;
+            }
+            predictions.extend(probs);
+        }
+        let test_accuracy = if total > 0 { correct as f64 / total as f64 } else { 0.0 };
+
+        Ok(RunReport {
+            losses,
+            test_accuracy,
+            predictions,
+            prediction_labels,
+            final_params: self.active.params.clone(),
+            metrics: self.metrics,
+            net: self.net,
+            setups: self.setups,
+        })
+    }
+}
+
+/// Convenience: build and run in one call.
+pub fn run_experiment(cfg: RunConfig, engine: Option<&Engine>) -> Result<RunReport> {
+    Experiment::new(cfg, engine)?.run()
+}

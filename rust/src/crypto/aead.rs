@@ -1,0 +1,143 @@
+//! ChaCha20-Poly1305 AEAD (RFC 8439 §2.8), from scratch.
+//!
+//! This is the cipher the active party uses to encrypt sample IDs per
+//! passive party during mini-batch selection (§4.0.2): each ID batch is
+//! sealed under the pairwise key derived from the X25519 shared secret,
+//! so only the party holding that secret can recover the IDs.
+
+use super::chacha20::ChaCha20;
+use super::hmac::ct_eq;
+use super::poly1305::Poly1305;
+
+/// Authentication tag length in bytes.
+pub const TAG_LEN: usize = 16;
+/// Nonce length in bytes.
+pub const NONCE_LEN: usize = 12;
+
+fn mac(otk: &[u8; 32], aad: &[u8], ct: &[u8]) -> [u8; 16] {
+    let mut p = Poly1305::new(otk);
+    p.update(aad);
+    if aad.len() % 16 != 0 {
+        p.update(&vec![0u8; 16 - aad.len() % 16]);
+    }
+    p.update(ct);
+    if ct.len() % 16 != 0 {
+        p.update(&vec![0u8; 16 - ct.len() % 16]);
+    }
+    p.update(&(aad.len() as u64).to_le_bytes());
+    p.update(&(ct.len() as u64).to_le_bytes());
+    p.finalize()
+}
+
+fn one_time_key(key: &[u8; 32], nonce: &[u8; 12]) -> [u8; 32] {
+    let block0 = ChaCha20::new(key, nonce, 0).block(0);
+    let mut otk = [0u8; 32];
+    otk.copy_from_slice(&block0[..32]);
+    otk
+}
+
+/// Encrypt `plaintext` with additional data `aad`; returns ciphertext
+/// with the 16-byte tag appended.
+pub fn seal(key: &[u8; 32], nonce: &[u8; 12], aad: &[u8], plaintext: &[u8]) -> Vec<u8> {
+    let mut ct = plaintext.to_vec();
+    ChaCha20::new(key, nonce, 1).apply_keystream(&mut ct);
+    let tag = mac(&one_time_key(key, nonce), aad, &ct);
+    ct.extend_from_slice(&tag);
+    ct
+}
+
+/// Decrypt and verify; returns `None` if the tag does not authenticate.
+pub fn open(key: &[u8; 32], nonce: &[u8; 12], aad: &[u8], sealed: &[u8]) -> Option<Vec<u8>> {
+    if sealed.len() < TAG_LEN {
+        return None;
+    }
+    let (ct, tag) = sealed.split_at(sealed.len() - TAG_LEN);
+    let expect = mac(&one_time_key(key, nonce), aad, ct);
+    if !ct_eq(&expect, tag) {
+        return None;
+    }
+    let mut pt = ct.to_vec();
+    ChaCha20::new(key, nonce, 1).apply_keystream(&mut pt);
+    Some(pt)
+}
+
+/// Deterministic per-message nonce from a round counter and sender id.
+/// Uniqueness under a fixed key is guaranteed as long as the same
+/// (sender, round, seq) triple is never reused, which the coordinator's
+/// key-rotation schedule enforces (§5.1: keys regenerated every K rounds).
+pub fn make_nonce(sender: u16, round: u32, seq: u32) -> [u8; 12] {
+    let mut n = [0u8; 12];
+    n[0..2].copy_from_slice(&sender.to_le_bytes());
+    n[2..6].copy_from_slice(&round.to_le_bytes());
+    n[6..10].copy_from_slice(&seq.to_le_bytes());
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unhex(s: &str) -> Vec<u8> {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        (0..s.len()).step_by(2).map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap()).collect()
+    }
+
+    // RFC 8439 §2.8.2 AEAD test vector.
+    #[test]
+    fn rfc8439_seal() {
+        let key: [u8; 32] =
+            unhex("808182838485868788898a8b8c8d8e8f909192939495969798999a9b9c9d9e9f").try_into().unwrap();
+        let nonce: [u8; 12] = unhex("070000004041424344454647").try_into().unwrap();
+        let aad = unhex("50515253c0c1c2c3c4c5c6c7");
+        let pt = b"Ladies and Gentlemen of the class of '99: If I could offer you only one tip for the future, sunscreen would be it.";
+        let sealed = seal(&key, &nonce, &aad, pt);
+        let expected_ct = unhex(
+            "d31a8d34648e60db7b86afbc53ef7ec2a4aded51296e08fea9e2b5a736ee62d6\
+             3dbea45e8ca9671282fafb69da92728b1a71de0a9e060b2905d6a5b67ecd3b36\
+             92ddbd7f2d778b8c9803aee328091b58fab324e4fad675945585808b4831d7bc\
+             3ff4def08e4b7a9de576d26586cec64b6116",
+        );
+        let expected_tag = unhex("1ae10b594f09e26a7e902ecbd0600691");
+        assert_eq!(&sealed[..sealed.len() - 16], &expected_ct[..]);
+        assert_eq!(&sealed[sealed.len() - 16..], &expected_tag[..]);
+    }
+
+    #[test]
+    fn roundtrip_and_tamper() {
+        let key = [0x42u8; 32];
+        let nonce = make_nonce(1, 7, 3);
+        let aad = b"batch=7";
+        let pt = b"sample-ids: 1,5,9";
+        let mut sealed = seal(&key, &nonce, aad, pt);
+        assert_eq!(open(&key, &nonce, aad, &sealed).as_deref(), Some(&pt[..]));
+        // flip one ciphertext bit
+        sealed[0] ^= 1;
+        assert!(open(&key, &nonce, aad, &sealed).is_none());
+        sealed[0] ^= 1;
+        // wrong aad
+        assert!(open(&key, &nonce, b"batch=8", &sealed).is_none());
+        // wrong key
+        assert!(open(&[0x43u8; 32], &nonce, aad, &sealed).is_none());
+        // truncated
+        assert!(open(&key, &nonce, aad, &sealed[..10]).is_none());
+    }
+
+    #[test]
+    fn empty_plaintext_authenticates_aad() {
+        let key = [1u8; 32];
+        let nonce = make_nonce(0, 0, 0);
+        let sealed = seal(&key, &nonce, b"header", b"");
+        assert_eq!(sealed.len(), TAG_LEN);
+        assert_eq!(open(&key, &nonce, b"header", &sealed).as_deref(), Some(&b""[..]));
+        assert!(open(&key, &nonce, b"Header", &sealed).is_none());
+    }
+
+    #[test]
+    fn nonce_uniqueness() {
+        let n1 = make_nonce(1, 2, 3);
+        let n2 = make_nonce(1, 2, 4);
+        let n3 = make_nonce(2, 2, 3);
+        assert_ne!(n1, n2);
+        assert_ne!(n1, n3);
+    }
+}

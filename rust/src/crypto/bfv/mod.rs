@@ -1,0 +1,364 @@
+//! BFV leveled homomorphic encryption, from scratch — the
+//! Microsoft-SEAL comparator of the paper's Figure-2 ablation.
+//!
+//! Single-modulus RLWE BFV over R_q = ℤ_q[x]/(xⁿ+1):
+//! * keygen: ternary secret `s`, public key `(b, a)` with
+//!   `b = −(a·s + e)`,
+//! * `Enc(m) = (b·u + e₁ + Δ·m, a·u + e₂)` with Δ = ⌊q/t⌋,
+//! * `Dec(c) = ⌈t·(c₀ + c₁·s)/q⌋ mod t`,
+//! * homomorphic ct+ct addition and ct×plaintext multiplication — the
+//!   two operations the encrypted dot-product workload needs.
+//!
+//! The Figure-2 workload encrypts scalars as degree-0 plaintexts
+//! (mirroring the paper's un-batched SEAL-Python loops) but the scheme
+//! itself is full-ring, and [`Bfv::dot_packed`] shows the
+//! coefficient-packing optimization SEAL users would apply.
+
+pub mod ntt;
+
+use ntt::{addmod, mulmod, submod, NttContext};
+
+/// BFV parameter set.
+pub struct BfvParams {
+    /// Ring dimension (power of two).
+    pub n: usize,
+    /// Ciphertext modulus (NTT-friendly prime < 2⁶¹).
+    pub q: u64,
+    /// Plaintext modulus.
+    pub t: u64,
+    /// Δ = ⌊q/t⌋.
+    pub delta: u64,
+}
+
+impl BfvParams {
+    /// SEAL-like defaults: n = 4096, 61-bit q, t = 2³².
+    pub fn default_4096() -> Self {
+        Self::new(4096, 1 << 32)
+    }
+
+    /// Smaller ring for tests.
+    pub fn new(n: usize, t: u64) -> Self {
+        let q = ntt::find_ntt_prime(2 * n as u64);
+        BfvParams { n, q, t, delta: q / t }
+    }
+}
+
+/// A plaintext polynomial (coefficients mod t).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Plaintext(pub Vec<u64>);
+
+/// A ciphertext pair (c0, c1) ∈ R_q².
+#[derive(Clone, Debug)]
+pub struct BfvCiphertext {
+    pub c0: Vec<u64>,
+    pub c1: Vec<u64>,
+}
+
+/// The BFV context: parameters + NTT tables + keys.
+pub struct Bfv {
+    pub params: BfvParams,
+    ntt: NttContext,
+    secret: Vec<u64>,  // ternary in {q-1, 0, 1}
+    pk_b: Vec<u64>,
+    pk_a: Vec<u64>,
+}
+
+fn sample_ternary(n: usize, q: u64, rng: &mut dyn FnMut(&mut [u8])) -> Vec<u64> {
+    let mut buf = vec![0u8; n];
+    rng(&mut buf);
+    buf.iter()
+        .map(|&b| match b % 3 {
+            0 => 0u64,
+            1 => 1u64,
+            _ => q - 1, // −1
+        })
+        .collect()
+}
+
+/// Centered binomial error, σ ≈ 3.2 (η = 21 paired bits).
+fn sample_error(n: usize, q: u64, rng: &mut dyn FnMut(&mut [u8])) -> Vec<u64> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = vec![0u8; n * 6]; // 48 bits per coefficient: 21+21 used
+    rng(&mut buf);
+    for i in 0..n {
+        let bits = u64::from_le_bytes({
+            let mut b = [0u8; 8];
+            b[..6].copy_from_slice(&buf[6 * i..6 * i + 6]);
+            b
+        });
+        let a = (bits & ((1 << 21) - 1)).count_ones() as i64;
+        let b = ((bits >> 21) & ((1 << 21) - 1)).count_ones() as i64;
+        let e = a - b;
+        out.push(if e >= 0 { e as u64 } else { q - (-e) as u64 });
+    }
+    out
+}
+
+fn sample_uniform(n: usize, q: u64, rng: &mut dyn FnMut(&mut [u8])) -> Vec<u64> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = vec![0u8; n * 8];
+    rng(&mut buf);
+    for i in 0..n {
+        let v = u64::from_le_bytes(buf[8 * i..8 * i + 8].try_into().unwrap());
+        out.push(v % q); // negligible bias for q near 2^61
+    }
+    out
+}
+
+impl Bfv {
+    /// Generate keys.
+    pub fn keygen(params: BfvParams, rng: &mut dyn FnMut(&mut [u8])) -> Self {
+        let ntt = NttContext::new(params.n, params.q);
+        let q = params.q;
+        let n = params.n;
+        let secret = sample_ternary(n, q, rng);
+        let pk_a = sample_uniform(n, q, rng);
+        let e = sample_error(n, q, rng);
+        // b = -(a*s + e)
+        let as_ = ntt.multiply(&pk_a, &secret);
+        let pk_b: Vec<u64> = (0..n).map(|i| submod(0, addmod(as_[i], e[i], q), q)).collect();
+        Bfv { params, ntt, secret, pk_b, pk_a }
+    }
+
+    /// Encode a signed scalar as a degree-0 plaintext (mod t).
+    pub fn encode_scalar(&self, v: i64) -> Plaintext {
+        let t = self.params.t;
+        let mut poly = vec![0u64; self.params.n];
+        poly[0] = if v >= 0 { (v as u64) % t } else { t - ((-v) as u64 % t) };
+        Plaintext(poly)
+    }
+
+    /// Decode coefficient 0 as a signed scalar.
+    pub fn decode_scalar(&self, pt: &Plaintext) -> i64 {
+        let t = self.params.t;
+        let v = pt.0[0] % t;
+        if v > t / 2 {
+            -((t - v) as i64)
+        } else {
+            v as i64
+        }
+    }
+
+    /// Encode a signed vector into polynomial coefficients (packing).
+    pub fn encode_coeffs(&self, vs: &[i64]) -> Plaintext {
+        assert!(vs.len() <= self.params.n);
+        let t = self.params.t;
+        let mut poly = vec![0u64; self.params.n];
+        for (i, &v) in vs.iter().enumerate() {
+            poly[i] = if v >= 0 { (v as u64) % t } else { t - ((-v) as u64 % t) };
+        }
+        Plaintext(poly)
+    }
+
+    pub fn encrypt(&self, pt: &Plaintext, rng: &mut dyn FnMut(&mut [u8])) -> BfvCiphertext {
+        let q = self.params.q;
+        let n = self.params.n;
+        let u = sample_ternary(n, q, rng);
+        let e1 = sample_error(n, q, rng);
+        let e2 = sample_error(n, q, rng);
+        let bu = self.ntt.multiply(&self.pk_b, &u);
+        let au = self.ntt.multiply(&self.pk_a, &u);
+        // SEAL-style exact scaling ⌈m·q/t⌋ (plain Δ=⌊q/t⌋ injects an
+        // m·(q mod t)/q rounding error that breaks large plaintexts)
+        let t = self.params.t;
+        let scale = |m: u64| -> u64 {
+            (((m % t) as u128 * q as u128 + (t as u128) / 2) / t as u128) as u64 % q
+        };
+        let c0: Vec<u64> = (0..n)
+            .map(|i| addmod(addmod(bu[i], e1[i], q), scale(pt.0[i]), q))
+            .collect();
+        let c1: Vec<u64> = (0..n).map(|i| addmod(au[i], e2[i], q)).collect();
+        BfvCiphertext { c0, c1 }
+    }
+
+    pub fn decrypt(&self, ct: &BfvCiphertext) -> Plaintext {
+        let q = self.params.q;
+        let t = self.params.t;
+        let n = self.params.n;
+        let c1s = self.ntt.multiply(&ct.c1, &self.secret);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let v = addmod(ct.c0[i], c1s[i], q);
+            // m = round(t * v / q) mod t
+            let m = (((v as u128) * (t as u128) + (q as u128) / 2) / (q as u128)) as u64 % t;
+            out.push(m);
+        }
+        Plaintext(out)
+    }
+
+    /// Homomorphic ciphertext addition.
+    pub fn add(&self, a: &BfvCiphertext, b: &BfvCiphertext) -> BfvCiphertext {
+        let q = self.params.q;
+        BfvCiphertext {
+            c0: a.c0.iter().zip(&b.c0).map(|(&x, &y)| addmod(x, y, q)).collect(),
+            c1: a.c1.iter().zip(&b.c1).map(|(&x, &y)| addmod(x, y, q)).collect(),
+        }
+    }
+
+    /// Homomorphic ct × plaintext multiplication. Plaintext coefficients
+    /// in [0, t) are lifted to *signed* representatives mod q — treating
+    /// t−|w| as a literal (≈2³²) multiplier would blow up the noise.
+    pub fn mul_plain(&self, a: &BfvCiphertext, pt: &Plaintext) -> BfvCiphertext {
+        let t = self.params.t;
+        let q = self.params.q;
+        let lifted: Vec<u64> = pt
+            .0
+            .iter()
+            .map(|&c| {
+                let c = c % t;
+                if c > t / 2 {
+                    q - (t - c)
+                } else {
+                    c
+                }
+            })
+            .collect();
+        BfvCiphertext {
+            c0: self.ntt.multiply(&a.c0, &lifted),
+            c1: self.ntt.multiply(&a.c1, &lifted),
+        }
+    }
+
+    /// Scalar ct × k (degree-0 fast path: coefficient-wise scaling).
+    pub fn mul_scalar(&self, a: &BfvCiphertext, k: i64) -> BfvCiphertext {
+        let q = self.params.q;
+        let ku = if k >= 0 { (k as u64) % q } else { q - ((-k) as u64 % q) };
+        BfvCiphertext {
+            c0: a.c0.iter().map(|&x| mulmod(x, ku, q)).collect(),
+            c1: a.c1.iter().map(|&x| mulmod(x, ku, q)).collect(),
+        }
+    }
+
+    /// Encrypted dot product, naive per-element layout (one ciphertext
+    /// per scalar) — this is what the paper benchmarks against.
+    pub fn dot_naive(&self, enc_x: &[BfvCiphertext], w: &[i64]) -> BfvCiphertext {
+        assert_eq!(enc_x.len(), w.len());
+        let mut acc = self.mul_scalar(&enc_x[0], w[0]);
+        for i in 1..enc_x.len() {
+            acc = self.add(&acc, &self.mul_scalar(&enc_x[i], w[i]));
+        }
+        acc
+    }
+
+    /// Encrypted dot product with coefficient packing: x packed as
+    /// Σ xᵢ·xⁱ, w packed reversed; the product's coefficient (d−1)
+    /// equals the dot product. One ciphertext per *vector*.
+    pub fn dot_packed(&self, enc_x: &BfvCiphertext, w: &[i64], d: usize) -> (BfvCiphertext, usize) {
+        // w_poly = Σ w_{d-1-j} x^j so coeff d-1 of product = Σ x_i w_i
+        let mut wrev: Vec<i64> = vec![0; d];
+        for j in 0..d {
+            wrev[j] = w[d - 1 - j];
+        }
+        let pt = self.encode_coeffs(&wrev);
+        (self.mul_plain(enc_x, &pt), d - 1)
+    }
+
+    /// Decode a signed value from a specific coefficient.
+    pub fn decode_coeff(&self, pt: &Plaintext, idx: usize) -> i64 {
+        let t = self.params.t;
+        let v = pt.0[idx] % t;
+        if v > t / 2 {
+            -((t - v) as i64)
+        } else {
+            v as i64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+
+    fn ctx(n: usize) -> Bfv {
+        let mut rng = DetRng::from_seed(n as u64 + 1).as_fill_fn();
+        Bfv::keygen(BfvParams::new(n, 1 << 32), &mut rng)
+    }
+
+    #[test]
+    fn encrypt_decrypt_scalar() {
+        let bfv = ctx(256);
+        let mut rng = DetRng::from_seed(2).as_fill_fn();
+        for v in [0i64, 1, -1, 4096, -99999, (1 << 30), -(1 << 30)] {
+            let ct = bfv.encrypt(&bfv.encode_scalar(v), &mut rng);
+            let pt = bfv.decrypt(&ct);
+            assert_eq!(bfv.decode_scalar(&pt), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn homomorphic_add() {
+        let bfv = ctx(256);
+        let mut rng = DetRng::from_seed(3).as_fill_fn();
+        let a = bfv.encrypt(&bfv.encode_scalar(1234), &mut rng);
+        let b = bfv.encrypt(&bfv.encode_scalar(-234), &mut rng);
+        let c = bfv.add(&a, &b);
+        assert_eq!(bfv.decode_scalar(&bfv.decrypt(&c)), 1000);
+    }
+
+    #[test]
+    fn scalar_mul() {
+        let bfv = ctx(256);
+        let mut rng = DetRng::from_seed(4).as_fill_fn();
+        let a = bfv.encrypt(&bfv.encode_scalar(37), &mut rng);
+        assert_eq!(bfv.decode_scalar(&bfv.decrypt(&bfv.mul_scalar(&a, 100))), 3700);
+        assert_eq!(bfv.decode_scalar(&bfv.decrypt(&bfv.mul_scalar(&a, -3))), -111);
+    }
+
+    #[test]
+    fn dot_naive_matches_plain() {
+        let bfv = ctx(256);
+        let mut rng = DetRng::from_seed(5).as_fill_fn();
+        let x = [3i64, -1, 4, 1, -5, 9, 2, -6];
+        let w = [2i64, 7, -1, 8, 2, -8, 1, 8];
+        let enc: Vec<BfvCiphertext> =
+            x.iter().map(|&v| bfv.encrypt(&bfv.encode_scalar(v), &mut rng)).collect();
+        let ct = bfv.dot_naive(&enc, &w);
+        let want: i64 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert_eq!(bfv.decode_scalar(&bfv.decrypt(&ct)), want);
+    }
+
+    #[test]
+    fn dot_packed_matches_plain() {
+        let bfv = ctx(256);
+        let mut rng = DetRng::from_seed(6).as_fill_fn();
+        let x = [31i64, -17, 42, 11, -53, 97, 23, -61];
+        let w = [12i64, 75, -13, 85, 20, -83, 17, 86];
+        let enc_x = bfv.encrypt(&bfv.encode_coeffs(&x), &mut rng);
+        let (ct, idx) = bfv.dot_packed(&enc_x, &w, x.len());
+        let want: i64 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert_eq!(bfv.decode_coeff(&bfv.decrypt(&ct), idx), want);
+    }
+
+    #[test]
+    fn fixed_point_dot_survives_noise() {
+        // the ablation's actual workload shape: scale-2^12 fixed point,
+        // 8-element dot products
+        let bfv = ctx(512);
+        let mut rng = DetRng::from_seed(7).as_fill_fn();
+        let scale = 1i64 << 12;
+        let xf = [0.5f64, -0.25, 1.5, 0.125, -2.0, 0.75, 0.3, -0.6];
+        let wf = [1.0f64, -1.5, 0.5, 2.0, 0.25, -0.125, 0.8, 0.4];
+        let x: Vec<i64> = xf.iter().map(|v| (v * scale as f64) as i64).collect();
+        let w: Vec<i64> = wf.iter().map(|v| (v * scale as f64) as i64).collect();
+        let enc: Vec<BfvCiphertext> =
+            x.iter().map(|&v| bfv.encrypt(&bfv.encode_scalar(v), &mut rng)).collect();
+        let ct = bfv.dot_naive(&enc, &w);
+        let got = bfv.decode_scalar(&bfv.decrypt(&ct));
+        let want: i64 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert_eq!(got, want);
+        // and the decoded float is close to the real dot product
+        let approx = got as f64 / (scale as f64 * scale as f64);
+        let real: f64 = xf.iter().zip(&wf).map(|(a, b)| a * b).sum();
+        assert!((approx - real).abs() < 1e-3, "approx={approx} real={real}");
+    }
+
+    #[test]
+    fn default_params_shape() {
+        let p = BfvParams::default_4096();
+        assert_eq!(p.n, 4096);
+        assert!(ntt::is_prime_u64(p.q));
+        assert_eq!((p.q - 1) % 8192, 0);
+        assert!(p.delta > 1 << 28);
+    }
+}

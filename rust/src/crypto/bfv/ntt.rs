@@ -1,0 +1,318 @@
+//! Number-theoretic transform over ℤ_q for negacyclic polynomial
+//! multiplication in R_q = ℤ_q[x]/(xⁿ+1), from scratch.
+//!
+//! Forward/inverse NTT with ψ-premultiplication (ψ a primitive 2n-th
+//! root of unity), giving O(n log n) negacyclic convolution — the same
+//! core trick Microsoft SEAL uses.
+
+/// Modular multiplication in u64 via u128 widening.
+#[inline(always)]
+pub fn mulmod(a: u64, b: u64, q: u64) -> u64 {
+    ((a as u128 * b as u128) % q as u128) as u64
+}
+
+#[inline(always)]
+pub fn addmod(a: u64, b: u64, q: u64) -> u64 {
+    let s = a + b;
+    if s >= q {
+        s - q
+    } else {
+        s
+    }
+}
+
+#[inline(always)]
+pub fn submod(a: u64, b: u64, q: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + q - b
+    }
+}
+
+pub fn powmod(mut base: u64, mut exp: u64, q: u64) -> u64 {
+    let mut acc = 1u64;
+    base %= q;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mulmod(acc, base, q);
+        }
+        base = mulmod(base, base, q);
+        exp >>= 1;
+    }
+    acc
+}
+
+pub fn invmod(a: u64, q: u64) -> u64 {
+    powmod(a, q - 2, q) // q prime
+}
+
+/// Deterministic Miller–Rabin for u64 (complete witness set).
+pub fn is_prime_u64(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0;
+    while d % 2 == 0 {
+        d /= 2;
+        s += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = powmod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mulmod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Find the largest prime q < 2⁶¹ with q ≡ 1 (mod 2n).
+pub fn find_ntt_prime(two_n: u64) -> u64 {
+    let mut q = (1u64 << 61) - ((1u64 << 61) % two_n) + 1;
+    loop {
+        if q < (1 << 60) {
+            panic!("no NTT prime found");
+        }
+        if is_prime_u64(q) {
+            return q;
+        }
+        q -= two_n;
+    }
+}
+
+/// NTT context for ring dimension n (power of two) and prime q ≡ 1 mod 2n.
+pub struct NttContext {
+    pub n: usize,
+    pub q: u64,
+    psi_pows: Vec<u64>,     // ψ^i for i in 0..n
+    psi_inv_pows: Vec<u64>, // ψ^{-i}
+    omega_pows: Vec<u64>,   // ω^i, ω = ψ²
+    omega_inv_pows: Vec<u64>,
+    n_inv: u64,
+}
+
+impl NttContext {
+    pub fn new(n: usize, q: u64) -> Self {
+        assert!(n.is_power_of_two());
+        assert_eq!((q - 1) % (2 * n as u64), 0, "q must be ≡ 1 mod 2n");
+        // find ψ: primitive 2n-th root. Take x^((q-1)/2n); it's primitive iff ψ^n = -1.
+        let exp = (q - 1) / (2 * n as u64);
+        let mut x = 3u64;
+        let psi = loop {
+            let cand = powmod(x, exp, q);
+            if powmod(cand, n as u64, q) == q - 1 {
+                break cand;
+            }
+            x += 1;
+            assert!(x < 10_000, "no primitive root found");
+        };
+        let psi_inv = invmod(psi, q);
+        let omega = mulmod(psi, psi, q);
+        let omega_inv = invmod(omega, q);
+        let mut psi_pows = Vec::with_capacity(n);
+        let mut psi_inv_pows = Vec::with_capacity(n);
+        let mut omega_pows = Vec::with_capacity(n);
+        let mut omega_inv_pows = Vec::with_capacity(n);
+        let (mut a, mut b, mut c, mut d) = (1u64, 1u64, 1u64, 1u64);
+        for _ in 0..n {
+            psi_pows.push(a);
+            psi_inv_pows.push(b);
+            omega_pows.push(c);
+            omega_inv_pows.push(d);
+            a = mulmod(a, psi, q);
+            b = mulmod(b, psi_inv, q);
+            c = mulmod(c, omega, q);
+            d = mulmod(d, omega_inv, q);
+        }
+        let n_inv = invmod(n as u64, q);
+        NttContext { n, q, psi_pows, psi_inv_pows, omega_pows, omega_inv_pows, n_inv }
+    }
+
+    fn bit_reverse(a: &mut [u64]) {
+        let n = a.len();
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            if i < j {
+                a.swap(i, j);
+            }
+        }
+    }
+
+    fn ntt_in_place(&self, a: &mut [u64], pows: &[u64]) {
+        let n = self.n;
+        let q = self.q;
+        Self::bit_reverse(a);
+        let mut len = 2;
+        while len <= n {
+            let step = n / len;
+            for start in (0..n).step_by(len) {
+                for k in 0..len / 2 {
+                    let w = pows[k * step];
+                    let u = a[start + k];
+                    let v = mulmod(a[start + k + len / 2], w, q);
+                    a[start + k] = addmod(u, v, q);
+                    a[start + k + len / 2] = submod(u, v, q);
+                }
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Forward negacyclic NTT (ψ-premultiplied).
+    pub fn forward(&self, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
+        for i in 0..self.n {
+            a[i] = mulmod(a[i], self.psi_pows[i], self.q);
+        }
+        self.ntt_in_place(a, &self.omega_pows.clone());
+    }
+
+    /// Inverse negacyclic NTT.
+    pub fn inverse(&self, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
+        self.ntt_in_place(a, &self.omega_inv_pows.clone());
+        for i in 0..self.n {
+            a[i] = mulmod(mulmod(a[i], self.n_inv, self.q), self.psi_inv_pows[i], self.q);
+        }
+    }
+
+    /// Negacyclic polynomial product via NTT.
+    pub fn multiply(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut fa = a.to_vec();
+        let mut fb = b.to_vec();
+        self.forward(&mut fa);
+        self.forward(&mut fb);
+        for i in 0..self.n {
+            fa[i] = mulmod(fa[i], fb[i], self.q);
+        }
+        self.inverse(&mut fa);
+        fa
+    }
+}
+
+/// Schoolbook negacyclic multiplication (test oracle, O(n²)).
+pub fn negacyclic_mul_naive(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    let n = a.len();
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        for j in 0..n {
+            let prod = mulmod(a[i], b[j], q);
+            let k = i + j;
+            if k < n {
+                out[k] = addmod(out[k], prod, q);
+            } else {
+                out[k - n] = submod(out[k - n], prod, q); // x^n = -1
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+
+    #[test]
+    fn prime_finder() {
+        let q = find_ntt_prime(8192);
+        assert!(is_prime_u64(q));
+        assert_eq!((q - 1) % 8192, 0);
+        assert!(q > (1 << 60));
+    }
+
+    #[test]
+    fn known_primes() {
+        assert!(is_prime_u64(2));
+        assert!(is_prime_u64((1 << 61) - 1)); // Mersenne
+        assert!(!is_prime_u64(1));
+        assert!(!is_prime_u64((1u64 << 61) - 3)); // 2305843009213693949 = ?
+        assert!(is_prime_u64(65537));
+        assert!(!is_prime_u64(65536));
+        // strong pseudoprime check: 3215031751 fools bases {2,3,5,7}? It's composite.
+        assert!(!is_prime_u64(3215031751));
+    }
+
+    #[test]
+    fn ntt_roundtrip() {
+        for n in [8usize, 64, 1024] {
+            let q = find_ntt_prime(2 * n as u64);
+            let ctx = NttContext::new(n, q);
+            let mut rng = DetRng::from_seed(n as u64);
+            let orig: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+            let mut a = orig.clone();
+            ctx.forward(&mut a);
+            assert_ne!(a, orig);
+            ctx.inverse(&mut a);
+            assert_eq!(a, orig, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ntt_mul_matches_naive() {
+        for n in [8usize, 32, 128] {
+            let q = find_ntt_prime(2 * n as u64);
+            let ctx = NttContext::new(n, q);
+            let mut rng = DetRng::from_seed(7 + n as u64);
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+            assert_eq!(ctx.multiply(&a, &b), negacyclic_mul_naive(&a, &b, q), "n={n}");
+        }
+    }
+
+    #[test]
+    fn negacyclic_wraparound_sign() {
+        // (x^{n-1}) * x = x^n = -1
+        let n = 8;
+        let q = find_ntt_prime(16);
+        let ctx = NttContext::new(n, q);
+        let mut a = vec![0u64; n];
+        a[n - 1] = 1;
+        let mut b = vec![0u64; n];
+        b[1] = 1;
+        let c = ctx.multiply(&a, &b);
+        let mut want = vec![0u64; n];
+        want[0] = q - 1; // -1
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 64;
+        let q = find_ntt_prime(128);
+        let ctx = NttContext::new(n, q);
+        let mut rng = DetRng::from_seed(3);
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+        let c: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+        // (a+b)*c == a*c + b*c
+        let ab: Vec<u64> = (0..n).map(|i| addmod(a[i], b[i], q)).collect();
+        let lhs = ctx.multiply(&ab, &c);
+        let ac = ctx.multiply(&a, &c);
+        let bc = ctx.multiply(&b, &c);
+        let rhs: Vec<u64> = (0..n).map(|i| addmod(ac[i], bc[i], q)).collect();
+        assert_eq!(lhs, rhs);
+    }
+}

@@ -1,0 +1,901 @@
+//! Arbitrary-precision unsigned integer arithmetic, from scratch.
+//!
+//! This is the substrate under the Paillier baseline (§6.5's `phe`
+//! comparator) and the DH-PSI module: little-endian `u64` limbs,
+//! schoolbook multiplication, Knuth Algorithm-D division (on 32-bit
+//! half-limbs), CIOS Montgomery multiplication for modular
+//! exponentiation, extended Euclid for modular inverses, and
+//! Miller–Rabin prime generation.
+
+use std::cmp::Ordering;
+
+/// An arbitrary-precision unsigned integer (little-endian u64 limbs,
+/// normalized: no trailing zero limbs; zero is the empty limb vector).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUint {
+    pub(crate) limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![v] }
+        }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        BigUint { limbs: vec![lo, hi] }.normalized()
+    }
+
+    fn normalized(mut self) -> Self {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+        self
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map_or(true, |l| l & 1 == 0)
+    }
+
+    /// Number of significant bits.
+    pub fn bits(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&hi) => 64 * (self.limbs.len() - 1) + (64 - hi.leading_zeros() as usize),
+        }
+    }
+
+    /// Test bit `i` (little-endian).
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map_or(false, |l| (l >> off) & 1 == 1)
+    }
+
+    pub fn to_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0]),
+            _ => None,
+        }
+    }
+
+    /// Parse big-endian bytes.
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len() / 8 + 1);
+        let mut cur: u64 = 0;
+        let mut n = 0;
+        for &b in bytes.iter().rev() {
+            cur |= (b as u64) << (8 * n);
+            n += 1;
+            if n == 8 {
+                limbs.push(cur);
+                cur = 0;
+                n = 0;
+            }
+        }
+        if n > 0 {
+            limbs.push(cur);
+        }
+        BigUint { limbs }.normalized()
+    }
+
+    /// Serialize to big-endian bytes (minimal length; zero → empty).
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for (i, &l) in self.limbs.iter().enumerate().rev() {
+            let b = l.to_be_bytes();
+            if i == self.limbs.len() - 1 {
+                // strip leading zeros of the top limb
+                let nz = b.iter().position(|&x| x != 0).unwrap_or(7);
+                out.extend_from_slice(&b[nz..]);
+            } else {
+                out.extend_from_slice(&b);
+            }
+        }
+        out
+    }
+
+    pub fn from_hex(s: &str) -> Self {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        let s = if s.len() % 2 == 1 { format!("0{s}") } else { s };
+        let bytes: Vec<u8> =
+            (0..s.len()).step_by(2).map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap()).collect();
+        Self::from_bytes_be(&bytes)
+    }
+
+    pub fn to_hex(&self) -> String {
+        if self.is_zero() {
+            return "0".into();
+        }
+        let bytes = self.to_bytes_be();
+        let mut s: String = bytes.iter().map(|b| format!("{b:02x}")).collect();
+        while s.len() > 1 && s.starts_with('0') {
+            s.remove(0);
+        }
+        s
+    }
+
+    pub fn cmp_big(&self, other: &Self) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let (a, b) = if self.limbs.len() >= other.limbs.len() { (self, other) } else { (other, self) };
+        let mut out = Vec::with_capacity(a.limbs.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..a.limbs.len() {
+            let bi = b.limbs.get(i).copied().unwrap_or(0);
+            let (s1, c1) = a.limbs[i].overflowing_add(bi);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry != 0 {
+            out.push(carry);
+        }
+        BigUint { limbs: out }.normalized()
+    }
+
+    /// Subtraction; panics if `other > self`.
+    pub fn sub(&self, other: &Self) -> Self {
+        debug_assert!(self.cmp_big(other) != Ordering::Less, "BigUint underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let bi = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(bi);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        BigUint { limbs: out }.normalized()
+    }
+
+    pub fn mul(&self, other: &Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + (a as u128) * (b as u128) + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        BigUint { limbs: out }.normalized()
+    }
+
+    pub fn shl_bits(&self, n: usize) -> Self {
+        if self.is_zero() {
+            return Self::zero();
+        }
+        let (limb_shift, bit_shift) = (n / 64, n % 64);
+        let mut out = vec![0u64; self.limbs.len() + limb_shift + 1];
+        for (i, &l) in self.limbs.iter().enumerate() {
+            out[i + limb_shift] |= l << bit_shift;
+            if bit_shift > 0 {
+                out[i + limb_shift + 1] |= l >> (64 - bit_shift);
+            }
+        }
+        BigUint { limbs: out }.normalized()
+    }
+
+    pub fn shr_bits(&self, n: usize) -> Self {
+        let (limb_shift, bit_shift) = (n / 64, n % 64);
+        if limb_shift >= self.limbs.len() {
+            return Self::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() - limb_shift);
+        for i in limb_shift..self.limbs.len() {
+            let mut v = self.limbs[i] >> bit_shift;
+            if bit_shift > 0 && i + 1 < self.limbs.len() {
+                v |= self.limbs[i + 1] << (64 - bit_shift);
+            }
+            out.push(v);
+        }
+        BigUint { limbs: out }.normalized()
+    }
+
+    /// Quotient and remainder (Knuth Algorithm D on 32-bit half-limbs).
+    pub fn div_rem(&self, divisor: &Self) -> (Self, Self) {
+        assert!(!divisor.is_zero(), "division by zero");
+        if self.cmp_big(divisor) == Ordering::Less {
+            return (Self::zero(), self.clone());
+        }
+        let num = to_u32_limbs(&self.limbs);
+        let den = to_u32_limbs(&divisor.limbs);
+        let (q, r) = if den.len() == 1 {
+            div_rem_small(&num, den[0])
+        } else {
+            div_rem_knuth(&num, &den)
+        };
+        (
+            BigUint { limbs: from_u32_limbs(&q) }.normalized(),
+            BigUint { limbs: from_u32_limbs(&r) }.normalized(),
+        )
+    }
+
+    pub fn rem(&self, modulus: &Self) -> Self {
+        self.div_rem(modulus).1
+    }
+
+    pub fn add_mod(&self, other: &Self, m: &Self) -> Self {
+        self.add(other).rem(m)
+    }
+
+    pub fn sub_mod(&self, other: &Self, m: &Self) -> Self {
+        let a = self.rem(m);
+        let b = other.rem(m);
+        if a.cmp_big(&b) == Ordering::Less {
+            a.add(m).sub(&b)
+        } else {
+            a.sub(&b)
+        }
+    }
+
+    pub fn mul_mod(&self, other: &Self, m: &Self) -> Self {
+        self.mul(other).rem(m)
+    }
+
+    /// Modular exponentiation. Uses Montgomery CIOS when the modulus is
+    /// odd (the common case: RSA/Paillier moduli), plain square-and-
+    /// multiply with division otherwise.
+    pub fn mod_pow(&self, exponent: &Self, modulus: &Self) -> Self {
+        assert!(!modulus.is_zero());
+        if modulus.is_one() {
+            return Self::zero();
+        }
+        if !modulus.is_even() {
+            let ctx = MontCtx::new(modulus);
+            return ctx.pow(self, exponent);
+        }
+        // fallback
+        let mut base = self.rem(modulus);
+        let mut result = Self::one();
+        for i in 0..exponent.bits() {
+            if exponent.bit(i) {
+                result = result.mul_mod(&base, modulus);
+            }
+            base = base.mul_mod(&base, modulus);
+        }
+        result
+    }
+
+    /// Modular inverse via extended Euclid; `None` if gcd ≠ 1.
+    pub fn mod_inverse(&self, modulus: &Self) -> Option<Self> {
+        // iterative extended Euclid with signed coefficients
+        let mut r0 = modulus.clone();
+        let mut r1 = self.rem(modulus);
+        // t coefficients with sign
+        let mut t0 = (Self::zero(), false); // (magnitude, negative?)
+        let mut t1 = (Self::one(), false);
+        while !r1.is_zero() {
+            let (q, r2) = r0.div_rem(&r1);
+            // t2 = t0 - q * t1
+            let qt1 = q.mul(&t1.0);
+            let t2 = signed_sub(&t0, &(qt1, t1.1));
+            r0 = r1;
+            r1 = r2;
+            t0 = t1;
+            t1 = t2;
+        }
+        if !r0.is_one() {
+            return None;
+        }
+        let (mag, neg) = t0;
+        let mag = mag.rem(modulus);
+        Some(if neg && !mag.is_zero() { modulus.sub(&mag) } else { mag })
+    }
+
+    pub fn gcd(&self, other: &Self) -> Self {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        while !b.is_zero() {
+            let r = a.rem(&b);
+            a = b;
+            b = r;
+        }
+        a
+    }
+
+    /// Uniform random value in `[0, bound)` using the supplied RNG.
+    pub fn random_below(bound: &Self, rng: &mut dyn FnMut(&mut [u8])) -> Self {
+        assert!(!bound.is_zero());
+        let bytes = (bound.bits() + 7) / 8;
+        let top_bits = bound.bits() % 8;
+        loop {
+            let mut buf = vec![0u8; bytes];
+            rng(&mut buf);
+            if top_bits > 0 {
+                buf[0] &= (1u8 << top_bits) - 1;
+            }
+            let v = Self::from_bytes_be(&buf);
+            if v.cmp_big(bound) == Ordering::Less {
+                return v;
+            }
+        }
+    }
+
+    /// Miller–Rabin probabilistic primality test with `rounds` random bases.
+    pub fn is_probable_prime(&self, rounds: usize, rng: &mut dyn FnMut(&mut [u8])) -> bool {
+        if self.is_zero() || self.is_one() {
+            return false;
+        }
+        if let Some(v) = self.to_u64() {
+            if v < 4 {
+                return v == 2 || v == 3;
+            }
+        }
+        if self.is_even() {
+            return false;
+        }
+        for &p in SMALL_PRIMES {
+            let pb = Self::from_u64(p);
+            if self.cmp_big(&pb) == Ordering::Equal {
+                return true;
+            }
+            if self.rem(&pb).is_zero() {
+                return false;
+            }
+        }
+        // write n-1 = d * 2^s
+        let n1 = self.sub(&Self::one());
+        let s = {
+            let mut s = 0usize;
+            while !n1.bit(s) {
+                s += 1;
+            }
+            s
+        };
+        let d = n1.shr_bits(s);
+        let two = Self::from_u64(2);
+        let lo = two.clone();
+        let hi = self.sub(&two); // bases in [2, n-2]
+        'witness: for _ in 0..rounds {
+            let a = loop {
+                let c = Self::random_below(&hi, rng);
+                if c.cmp_big(&lo) != Ordering::Less {
+                    break c;
+                }
+            };
+            let mut x = a.mod_pow(&d, self);
+            if x.is_one() || x.cmp_big(&n1) == Ordering::Equal {
+                continue 'witness;
+            }
+            for _ in 0..s - 1 {
+                x = x.mul_mod(&x, self);
+                if x.cmp_big(&n1) == Ordering::Equal {
+                    continue 'witness;
+                }
+            }
+            return false;
+        }
+        true
+    }
+
+    /// Generate a random prime with exactly `bits` bits.
+    pub fn gen_prime(bits: usize, rng: &mut dyn FnMut(&mut [u8])) -> Self {
+        assert!(bits >= 8);
+        loop {
+            let bytes = (bits + 7) / 8;
+            let mut buf = vec![0u8; bytes];
+            rng(&mut buf);
+            // force exact bit-length and oddness
+            let top = (bits - 1) % 8;
+            buf[0] &= (1u8 << (top + 1)) - 1;
+            buf[0] |= 1 << top;
+            if top > 0 {
+                buf[0] |= 1 << (top - 1); // top-two bits set: products have full length
+            }
+            buf[bytes - 1] |= 1;
+            let cand = Self::from_bytes_be(&buf);
+            if cand.is_probable_prime(16, rng) {
+                return cand;
+            }
+        }
+    }
+}
+
+fn signed_sub(a: &(BigUint, bool), b: &(BigUint, bool)) -> (BigUint, bool) {
+    // compute a - b over signed magnitudes
+    match (a.1, b.1) {
+        (false, true) => (a.0.add(&b.0), false),  // a - (-b) = a + b
+        (true, false) => (a.0.add(&b.0), true),   // -a - b = -(a+b)
+        (an, _) => {
+            // same sign: |a| - |b| with sign fix
+            if a.0.cmp_big(&b.0) != Ordering::Less {
+                (a.0.sub(&b.0), an)
+            } else {
+                (b.0.sub(&a.0), !an)
+            }
+        }
+    }
+}
+
+const SMALL_PRIMES: &[u64] = &[
+    2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89, 97,
+    101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151, 157, 163, 167, 173, 179, 181, 191, 193,
+    197, 199, 211, 223, 227, 229, 233, 239, 241, 251, 257, 263, 269, 271, 277, 281, 283, 293, 307,
+    311, 313, 317, 331, 337, 347, 349,
+];
+
+fn to_u32_limbs(limbs: &[u64]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(limbs.len() * 2);
+    for &l in limbs {
+        out.push(l as u32);
+        out.push((l >> 32) as u32);
+    }
+    while out.last() == Some(&0) {
+        out.pop();
+    }
+    out
+}
+
+fn from_u32_limbs(limbs: &[u32]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(limbs.len() / 2 + 1);
+    for chunk in limbs.chunks(2) {
+        let lo = chunk[0] as u64;
+        let hi = chunk.get(1).copied().unwrap_or(0) as u64;
+        out.push(lo | (hi << 32));
+    }
+    out
+}
+
+fn div_rem_small(num: &[u32], den: u32) -> (Vec<u32>, Vec<u32>) {
+    let mut q = vec![0u32; num.len()];
+    let mut rem: u64 = 0;
+    for i in (0..num.len()).rev() {
+        let cur = (rem << 32) | num[i] as u64;
+        q[i] = (cur / den as u64) as u32;
+        rem = cur % den as u64;
+    }
+    (q, vec![rem as u32])
+}
+
+/// Knuth TAOCP vol.2 Algorithm D, base 2³².
+fn div_rem_knuth(num: &[u32], den: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let n = den.len();
+    let m = num.len() - n;
+    // D1: normalize
+    let shift = den[n - 1].leading_zeros();
+    let mut v = shl32(den, shift);
+    debug_assert_eq!(v.len(), n);
+    let mut u = shl32(num, shift);
+    if u.len() == num.len() {
+        u.push(0);
+    }
+    let mut q = vec![0u32; m + 1];
+    let b: u64 = 1 << 32;
+
+    for j in (0..=m).rev() {
+        // D3: estimate qhat (u128 to avoid overflow: qhat may start ≥ 2³²)
+        let top = ((u[j + n] as u128) << 32) | u[j + n - 1] as u128;
+        let vn1 = v[n - 1] as u128;
+        let mut qhat128 = top / vn1;
+        let mut rhat = top % vn1;
+        loop {
+            if qhat128 >= b as u128
+                || qhat128 * (v[n - 2] as u128) > (rhat << 32) + u[j + n - 2] as u128
+            {
+                qhat128 -= 1;
+                rhat += vn1;
+                if rhat < b as u128 {
+                    continue;
+                }
+            }
+            break;
+        }
+        let mut qhat = qhat128 as u64; // < 2^32 after correction
+        // D4: multiply and subtract
+        let mut borrow: i64 = 0;
+        let mut carry: u64 = 0;
+        for i in 0..n {
+            let p = qhat * v[i] as u64 + carry;
+            carry = p >> 32;
+            let t = u[j + i] as i64 - borrow - (p as u32) as i64;
+            u[j + i] = t as u32;
+            borrow = if t < 0 { 1 } else { 0 };
+        }
+        let t = u[j + n] as i64 - borrow - carry as i64;
+        u[j + n] = t as u32;
+        if t < 0 {
+            // D6: add back
+            qhat -= 1;
+            let mut carry: u64 = 0;
+            for i in 0..n {
+                let s = u[j + i] as u64 + v[i] as u64 + carry;
+                u[j + i] = s as u32;
+                carry = s >> 32;
+            }
+            u[j + n] = u[j + n].wrapping_add(carry as u32);
+        }
+        q[j] = qhat as u32;
+    }
+    // D8: unnormalize remainder
+    v.clear();
+    let r = shr32(&u[..n], shift);
+    (q, r)
+}
+
+fn shl32(x: &[u32], shift: u32) -> Vec<u32> {
+    if shift == 0 {
+        return x.to_vec();
+    }
+    let mut out = vec![0u32; x.len() + 1];
+    for (i, &l) in x.iter().enumerate() {
+        out[i] |= l << shift;
+        out[i + 1] |= (l as u64 >> (32 - shift)) as u32;
+    }
+    while out.len() > x.len() && out.last() == Some(&0) {
+        out.pop();
+    }
+    out
+}
+
+fn shr32(x: &[u32], shift: u32) -> Vec<u32> {
+    if shift == 0 {
+        return x.to_vec();
+    }
+    let mut out = vec![0u32; x.len()];
+    for i in 0..x.len() {
+        out[i] = x[i] >> shift;
+        if i + 1 < x.len() {
+            out[i] |= ((x[i + 1] as u64) << (32 - shift)) as u32;
+        }
+    }
+    out
+}
+
+/// Montgomery context for an odd modulus: CIOS multiplication.
+pub struct MontCtx {
+    m: Vec<u64>,       // modulus limbs, len k
+    n0inv: u64,        // -m^{-1} mod 2^64
+    r2: BigUint,       // 2^{128k} mod m
+    k: usize,
+}
+
+impl MontCtx {
+    pub fn new(modulus: &BigUint) -> Self {
+        assert!(!modulus.is_even() && !modulus.is_zero());
+        let k = modulus.limbs.len();
+        // n0inv via Newton: x_{i+1} = x_i * (2 - m0 * x_i) mod 2^64
+        let m0 = modulus.limbs[0];
+        let mut inv: u64 = 1;
+        for _ in 0..6 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(m0.wrapping_mul(inv)));
+        }
+        let n0inv = inv.wrapping_neg();
+        let r2 = BigUint::one().shl_bits(128 * k).rem(modulus);
+        MontCtx { m: modulus.limbs.clone(), n0inv, r2, k }
+    }
+
+    fn mont_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let k = self.k;
+        let mut t = vec![0u64; k + 2];
+        for i in 0..k {
+            let ai = a.get(i).copied().unwrap_or(0);
+            // t += a[i] * b
+            let mut carry: u128 = 0;
+            for j in 0..k {
+                let bj = b.get(j).copied().unwrap_or(0);
+                let sum = t[j] as u128 + (ai as u128) * (bj as u128) + carry;
+                t[j] = sum as u64;
+                carry = sum >> 64;
+            }
+            let sum = t[k] as u128 + carry;
+            t[k] = sum as u64;
+            t[k + 1] = t[k + 1].wrapping_add((sum >> 64) as u64);
+            // reduce
+            let mu = t[0].wrapping_mul(self.n0inv);
+            let mut carry: u128 = (t[0] as u128 + (mu as u128) * (self.m[0] as u128)) >> 64;
+            for j in 1..k {
+                let sum = t[j] as u128 + (mu as u128) * (self.m[j] as u128) + carry;
+                t[j - 1] = sum as u64;
+                carry = sum >> 64;
+            }
+            let sum = t[k] as u128 + carry;
+            t[k - 1] = sum as u64;
+            t[k] = t[k + 1].wrapping_add((sum >> 64) as u64);
+            t[k + 1] = 0;
+        }
+        t.truncate(k + 1);
+        // conditional subtract m
+        let mut res = BigUint { limbs: t }.normalized();
+        let m = BigUint { limbs: self.m.clone() };
+        while res.cmp_big(&m) != Ordering::Less {
+            res = res.sub(&m);
+        }
+        let mut limbs = res.limbs;
+        limbs.resize(k, 0);
+        limbs
+    }
+
+    fn to_mont(&self, x: &BigUint) -> Vec<u64> {
+        let xr = x.rem(&BigUint { limbs: self.m.clone() });
+        let mut xl = xr.limbs;
+        xl.resize(self.k, 0);
+        let mut r2 = self.r2.limbs.clone();
+        r2.resize(self.k, 0);
+        self.mont_mul(&xl, &r2)
+    }
+
+    fn from_mont(&self, x: &[u64]) -> BigUint {
+        let one = {
+            let mut v = vec![0u64; self.k];
+            v[0] = 1;
+            v
+        };
+        BigUint { limbs: self.mont_mul(x, &one) }.normalized()
+    }
+
+    /// `base^exp mod m` via 4-bit fixed-window exponentiation.
+    pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        if exp.is_zero() {
+            return BigUint::one().rem(&BigUint { limbs: self.m.clone() });
+        }
+        let bm = self.to_mont(base);
+        // precompute base^0..base^15 in Montgomery form
+        let one_m = self.to_mont(&BigUint::one());
+        let mut table = Vec::with_capacity(16);
+        table.push(one_m.clone());
+        table.push(bm.clone());
+        for i in 2..16 {
+            let prev: &Vec<u64> = &table[i - 1];
+            table.push(self.mont_mul(prev, &bm));
+        }
+        let nbits = exp.bits();
+        let nwindows = (nbits + 3) / 4;
+        let mut acc = one_m;
+        let mut started = false;
+        for w in (0..nwindows).rev() {
+            if started {
+                acc = self.mont_mul(&acc, &acc);
+                acc = self.mont_mul(&acc, &acc);
+                acc = self.mont_mul(&acc, &acc);
+                acc = self.mont_mul(&acc, &acc);
+            }
+            let mut window = 0usize;
+            for b in 0..4 {
+                if exp.bit(4 * w + b) {
+                    window |= 1 << b;
+                }
+            }
+            if window != 0 {
+                acc = self.mont_mul(&acc, &table[window]);
+                started = true;
+            } else if started {
+                // nothing to multiply
+            }
+            if !started && window == 0 {
+                continue;
+            }
+            started = true;
+        }
+        self.from_mont(&acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+
+    fn b(v: u64) -> BigUint {
+        BigUint::from_u64(v)
+    }
+
+    #[test]
+    fn add_sub_small() {
+        assert_eq!(b(2).add(&b(3)), b(5));
+        assert_eq!(b(5).sub(&b(3)), b(2));
+        assert_eq!(b(5).sub(&b(5)), BigUint::zero());
+    }
+
+    #[test]
+    fn add_carries_across_limbs() {
+        let x = BigUint::from_hex("ffffffffffffffffffffffffffffffff");
+        let y = x.add(&BigUint::one());
+        assert_eq!(y.to_hex(), "100000000000000000000000000000000");
+        assert_eq!(y.sub(&BigUint::one()), x);
+    }
+
+    #[test]
+    fn mul_known() {
+        let x = BigUint::from_hex("ffffffffffffffff");
+        let y = x.mul(&x);
+        assert_eq!(y.to_hex(), "fffffffffffffffe0000000000000001");
+        assert_eq!(b(0).mul(&x), BigUint::zero());
+    }
+
+    #[test]
+    fn div_rem_small_cases() {
+        let (q, r) = b(17).div_rem(&b(5));
+        assert_eq!((q, r), (b(3), b(2)));
+        let (q, r) = b(4).div_rem(&b(9));
+        assert_eq!((q, r), (BigUint::zero(), b(4)));
+    }
+
+    #[test]
+    fn div_rem_multi_limb() {
+        let x = BigUint::from_hex("123456789abcdef0123456789abcdef0123456789abcdef0");
+        let y = BigUint::from_hex("fedcba9876543210fedcba98");
+        let (q, r) = x.div_rem(&y);
+        // verify x == q*y + r and r < y
+        assert_eq!(q.mul(&y).add(&r), x);
+        assert_eq!(r.cmp_big(&y), Ordering::Less);
+    }
+
+    #[test]
+    fn div_rem_randomized_invariant() {
+        let mut rng = DetRng::from_seed(42);
+        for _ in 0..200 {
+            let xb = rng.next_range(1, 40) as usize;
+            let yb = rng.next_range(1, 24) as usize;
+            let mut xv = vec![0u8; xb];
+            let mut yv = vec![0u8; yb];
+            rng.fill(&mut xv);
+            rng.fill(&mut yv);
+            let x = BigUint::from_bytes_be(&xv);
+            let y = BigUint::from_bytes_be(&yv);
+            if y.is_zero() {
+                continue;
+            }
+            let (q, r) = x.div_rem(&y);
+            assert_eq!(q.mul(&y).add(&r), x);
+            assert_eq!(r.cmp_big(&y), Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn shifts() {
+        let x = BigUint::from_hex("1234");
+        assert_eq!(x.shl_bits(8).to_hex(), "123400");
+        assert_eq!(x.shl_bits(64).shr_bits(64), x);
+        assert_eq!(x.shr_bits(100), BigUint::zero());
+    }
+
+    #[test]
+    fn mod_pow_small() {
+        // 3^7 mod 10 = 2187 mod 10 = 7  (even modulus path)
+        assert_eq!(b(3).mod_pow(&b(7), &b(10)), b(7));
+        // odd modulus path via Montgomery
+        assert_eq!(b(3).mod_pow(&b(7), &b(11)), b(9)); // 2187 = 198*11+9
+        assert_eq!(b(2).mod_pow(&b(0), &b(7)), b(1));
+        assert_eq!(b(5).mod_pow(&b(117), &b(19)), b(1)); // fermat: 5^18=1, 117=6*18+9 → 5^9 mod 19 = 1? check: 5^2=6,5^4=36=17,5^8=17^2=289=4,5^9=20=1 yes
+    }
+
+    #[test]
+    fn mod_pow_matches_naive_randomized() {
+        let mut rng = DetRng::from_seed(7);
+        for _ in 0..30 {
+            let mut bb = [0u8; 12];
+            let mut ee = [0u8; 4];
+            let mut mm = [0u8; 10];
+            rng.fill(&mut bb);
+            rng.fill(&mut ee);
+            rng.fill(&mut mm);
+            mm[9] |= 1; // odd modulus
+            let base = BigUint::from_bytes_be(&bb);
+            let exp = BigUint::from_bytes_be(&ee[..2]);
+            let m = BigUint::from_bytes_be(&mm);
+            if m.is_zero() || m.is_one() {
+                continue;
+            }
+            // naive
+            let mut want = BigUint::one();
+            let br = base.rem(&m);
+            for i in (0..exp.bits()).rev() {
+                want = want.mul_mod(&want, &m);
+                if exp.bit(i) {
+                    want = want.mul_mod(&br, &m);
+                }
+            }
+            assert_eq!(base.mod_pow(&exp, &m), want);
+        }
+    }
+
+    #[test]
+    fn mod_inverse_works() {
+        let m = b(101);
+        for a in 1..100u64 {
+            let inv = b(a).mod_inverse(&m).unwrap();
+            assert_eq!(b(a).mul_mod(&inv, &m), BigUint::one(), "a={a}");
+        }
+        assert!(b(6).mod_inverse(&b(9)).is_none()); // gcd = 3
+    }
+
+    #[test]
+    fn probable_primes() {
+        let mut rng_f = DetRng::from_seed(1).as_fill_fn();
+        for p in [2u64, 3, 5, 7, 65537, 2147483647] {
+            assert!(b(p).is_probable_prime(16, &mut rng_f), "{p} should be prime");
+        }
+        for c in [1u64, 4, 100, 65541, 2147483649] {
+            assert!(!b(c).is_probable_prime(16, &mut rng_f), "{c} should be composite");
+        }
+        // known 128-bit prime: 2^127 - 1 (Mersenne)
+        let m127 = BigUint::one().shl_bits(127).sub(&BigUint::one());
+        assert!(m127.is_probable_prime(16, &mut rng_f));
+    }
+
+    #[test]
+    fn gen_prime_has_exact_bits() {
+        let mut rng_f = DetRng::from_seed(99).as_fill_fn();
+        let p = BigUint::gen_prime(96, &mut rng_f);
+        assert_eq!(p.bits(), 96);
+        assert!(p.is_probable_prime(16, &mut rng_f));
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let x = BigUint::from_hex("0123456789abcdef00ff");
+        assert_eq!(BigUint::from_bytes_be(&x.to_bytes_be()), x);
+        assert_eq!(BigUint::zero().to_bytes_be(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for s in ["0", "1", "ff", "123456789abcdef", "deadbeefdeadbeefdeadbeefdeadbeef1"] {
+            assert_eq!(BigUint::from_hex(s).to_hex(), s.to_string());
+        }
+    }
+
+    #[test]
+    fn random_below_in_range() {
+        let mut rng_f = DetRng::from_seed(5).as_fill_fn();
+        let bound = BigUint::from_hex("10000000001");
+        for _ in 0..50 {
+            let v = BigUint::random_below(&bound, &mut rng_f);
+            assert_eq!(v.cmp_big(&bound), Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn mont_pow_large_modulus() {
+        // Fermat test as a self-check of Montgomery: a^(p-1) ≡ 1 mod p
+        let p = BigUint::from_hex("ffffffffffffffffffffffffffffff61"); // 2^128 - 159, prime
+        let a = BigUint::from_hex("123456789");
+        let e = p.sub(&BigUint::one());
+        assert_eq!(a.mod_pow(&e, &p), BigUint::one());
+    }
+}

@@ -1,0 +1,231 @@
+//! ChaCha20 stream cipher (RFC 8439), from scratch.
+//!
+//! Dual use in this system:
+//! * the symmetric cipher under ChaCha20-Poly1305 AEAD for sample-ID
+//!   encryption during mini-batch selection (§4.0.2), and
+//! * the PRG for pairwise secure-aggregation masks (Eq. 3) via
+//!   [`crate::crypto::prg`].
+
+/// The ChaCha20 block function state.
+#[derive(Clone)]
+pub struct ChaCha20 {
+    key: [u32; 8],
+    nonce: [u32; 3],
+    counter: u32,
+}
+
+#[inline(always)]
+fn quarter_round(state: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] ^= state[a];
+    state[d] = state[d].rotate_left(16);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] ^= state[c];
+    state[b] = state[b].rotate_left(12);
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] ^= state[a];
+    state[d] = state[d].rotate_left(8);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] ^= state[c];
+    state[b] = state[b].rotate_left(7);
+}
+
+impl ChaCha20 {
+    /// Create a cipher instance with a 256-bit key and 96-bit nonce,
+    /// starting at block `counter`.
+    pub fn new(key: &[u8; 32], nonce: &[u8; 12], counter: u32) -> Self {
+        let mut k = [0u32; 8];
+        for i in 0..8 {
+            k[i] = u32::from_le_bytes([key[4 * i], key[4 * i + 1], key[4 * i + 2], key[4 * i + 3]]);
+        }
+        let mut n = [0u32; 3];
+        for i in 0..3 {
+            n[i] = u32::from_le_bytes([nonce[4 * i], nonce[4 * i + 1], nonce[4 * i + 2], nonce[4 * i + 3]]);
+        }
+        ChaCha20 { key: k, nonce: n, counter }
+    }
+
+    /// The 16 output words for block index `counter`. Fully unrolled
+    /// with named locals (no array bounds checks on the hot path) —
+    /// the PRG that expands every pairwise mask runs through here.
+    #[inline]
+    pub fn block_words(&self, counter: u32) -> [u32; 16] {
+        let (i0, i1, i2, i3) = (0x61707865u32, 0x3320646eu32, 0x79622d32u32, 0x6b206574u32);
+        let [k0, k1, k2, k3, k4, k5, k6, k7] = self.key;
+        let [n0, n1, n2] = self.nonce;
+        let (mut x0, mut x1, mut x2, mut x3) = (i0, i1, i2, i3);
+        let (mut x4, mut x5, mut x6, mut x7) = (k0, k1, k2, k3);
+        let (mut x8, mut x9, mut x10, mut x11) = (k4, k5, k6, k7);
+        let (mut x12, mut x13, mut x14, mut x15) = (counter, n0, n1, n2);
+
+        macro_rules! qr {
+            ($a:ident, $b:ident, $c:ident, $d:ident) => {
+                $a = $a.wrapping_add($b);
+                $d = ($d ^ $a).rotate_left(16);
+                $c = $c.wrapping_add($d);
+                $b = ($b ^ $c).rotate_left(12);
+                $a = $a.wrapping_add($b);
+                $d = ($d ^ $a).rotate_left(8);
+                $c = $c.wrapping_add($d);
+                $b = ($b ^ $c).rotate_left(7);
+            };
+        }
+        for _ in 0..10 {
+            qr!(x0, x4, x8, x12);
+            qr!(x1, x5, x9, x13);
+            qr!(x2, x6, x10, x14);
+            qr!(x3, x7, x11, x15);
+            qr!(x0, x5, x10, x15);
+            qr!(x1, x6, x11, x12);
+            qr!(x2, x7, x8, x13);
+            qr!(x3, x4, x9, x14);
+        }
+        [
+            x0.wrapping_add(i0), x1.wrapping_add(i1), x2.wrapping_add(i2), x3.wrapping_add(i3),
+            x4.wrapping_add(k0), x5.wrapping_add(k1), x6.wrapping_add(k2), x7.wrapping_add(k3),
+            x8.wrapping_add(k4), x9.wrapping_add(k5), x10.wrapping_add(k6), x11.wrapping_add(k7),
+            x12.wrapping_add(counter), x13.wrapping_add(n0), x14.wrapping_add(n1), x15.wrapping_add(n2),
+        ]
+    }
+
+    /// Produce the 64-byte keystream block for block index `counter`.
+    pub fn block(&self, counter: u32) -> [u8; 64] {
+        let words = self.block_words(counter);
+        let mut out = [0u8; 64];
+        for (i, w) in words.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Fill a `u64` buffer with keystream words directly (the mask-PRG
+    /// fast path: skips the byte-array round-trip).
+    pub fn keystream_u64(&self, out: &mut [u64]) {
+        let mut counter = self.counter;
+        for chunk in out.chunks_mut(8) {
+            let w = self.block_words(counter);
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = (w[2 * j] as u64) | ((w[2 * j + 1] as u64) << 32);
+            }
+            counter = counter.wrapping_add(1);
+        }
+    }
+
+    /// XOR the keystream into `data` in place (encrypt == decrypt).
+    pub fn apply_keystream(&self, data: &mut [u8]) {
+        let mut counter = self.counter;
+        for chunk in data.chunks_mut(64) {
+            let ks = self.block(counter);
+            for (b, k) in chunk.iter_mut().zip(ks.iter()) {
+                *b ^= k;
+            }
+            counter = counter.wrapping_add(1);
+        }
+    }
+
+    /// Fill `out` with raw keystream bytes (PRG mode).
+    pub fn keystream(&self, out: &mut [u8]) {
+        out.fill(0);
+        self.apply_keystream(out);
+    }
+}
+
+/// One-shot encryption (RFC 8439 §2.4): XOR `data` with the keystream
+/// starting at block counter 1 (block 0 is reserved for the Poly1305
+/// one-time key in the AEAD construction).
+pub fn chacha20_xor(key: &[u8; 32], nonce: &[u8; 12], counter: u32, data: &mut [u8]) {
+    ChaCha20::new(key, nonce, counter).apply_keystream(data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unhex(s: &str) -> Vec<u8> {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        (0..s.len()).step_by(2).map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap()).collect()
+    }
+
+    // RFC 8439 §2.3.2 block function test vector.
+    #[test]
+    fn rfc8439_block() {
+        let key: [u8; 32] = core::array::from_fn(|i| i as u8);
+        let nonce: [u8; 12] = [0, 0, 0, 9, 0, 0, 0, 0x4a, 0, 0, 0, 0];
+        let c = ChaCha20::new(&key, &nonce, 1);
+        let block = c.block(1);
+        let expected = unhex(
+            "10f1e7e4d13b5915500fdd1fa32071c4c7d1f4c733c068030422aa9ac3d46c4e\
+             d2826446079faa0914c2d705d98b02a2b5129cd1de164eb9cbd083e8a2503c4e",
+        );
+        assert_eq!(&block[..], &expected[..]);
+    }
+
+    // RFC 8439 §2.4.2 encryption test vector.
+    #[test]
+    fn rfc8439_encrypt() {
+        let key: [u8; 32] = core::array::from_fn(|i| i as u8);
+        let nonce: [u8; 12] = [0, 0, 0, 0, 0, 0, 0, 0x4a, 0, 0, 0, 0];
+        let mut msg = b"Ladies and Gentlemen of the class of '99: If I could offer you only one tip for the future, sunscreen would be it.".to_vec();
+        chacha20_xor(&key, &nonce, 1, &mut msg);
+        let expected = unhex(
+            "6e2e359a2568f98041ba0728dd0d6981e97e7aec1d4360c20a27afccfd9fae0b\
+             f91b65c5524733ab8f593dabcd62b3571639d624e65152ab8f530c359f0861d8\
+             07ca0dbf500d6a6156a38e088a22b65e52bc514d16ccf806818ce91ab7793736\
+             5af90bbf74a35be6b40b8eedf2785e42874d",
+        );
+        assert_eq!(msg, expected);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let key = [7u8; 32];
+        let nonce = [3u8; 12];
+        let plain: Vec<u8> = (0..300u32).map(|i| (i % 256) as u8).collect();
+        let mut data = plain.clone();
+        chacha20_xor(&key, &nonce, 1, &mut data);
+        assert_ne!(data, plain);
+        chacha20_xor(&key, &nonce, 1, &mut data);
+        assert_eq!(data, plain);
+    }
+
+    #[test]
+    fn keystream_matches_xor_of_zeros() {
+        let key = [1u8; 32];
+        let nonce = [2u8; 12];
+        let c = ChaCha20::new(&key, &nonce, 0);
+        let mut a = [0u8; 130];
+        c.keystream(&mut a);
+        let mut b = [0u8; 130];
+        c.apply_keystream(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn keystream_u64_matches_byte_path() {
+        let key: [u8; 32] = core::array::from_fn(|i| (i * 11 + 3) as u8);
+        let nonce = [5u8; 12];
+        let c = ChaCha20::new(&key, &nonce, 0);
+        let mut bytes = [0u8; 200 * 8];
+        c.keystream(&mut bytes);
+        let want: Vec<u64> =
+            bytes.chunks_exact(8).map(|ch| u64::from_le_bytes(ch.try_into().unwrap())).collect();
+        let mut words = [0u64; 200];
+        c.keystream_u64(&mut words);
+        assert_eq!(&words[..], &want[..]);
+    }
+
+    #[test]
+    fn counter_advances_across_chunks() {
+        // applying to one 128-byte buffer == two 64-byte buffers with counters 0,1
+        let key = [9u8; 32];
+        let nonce = [4u8; 12];
+        let mut whole = [0xabu8; 128];
+        ChaCha20::new(&key, &nonce, 0).apply_keystream(&mut whole);
+        let mut lo = [0xabu8; 64];
+        let mut hi = [0xabu8; 64];
+        ChaCha20::new(&key, &nonce, 0).apply_keystream(&mut lo);
+        ChaCha20::new(&key, &nonce, 1).apply_keystream(&mut hi);
+        assert_eq!(&whole[..64], &lo[..]);
+        assert_eq!(&whole[64..], &hi[..]);
+    }
+}

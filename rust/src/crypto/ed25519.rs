@@ -1,0 +1,385 @@
+//! Ed25519 signatures (RFC 8032), from scratch.
+//!
+//! The paper (§5.1) notes the honest-but-curious protocol extends to
+//! *malicious* settings via a PKI that authenticates senders
+//! (Bonawitz et al., 2017). This module provides that PKI primitive:
+//! every protocol message can be signed by its sender and verified
+//! against a registered identity key.
+
+use super::bigint::BigUint;
+use super::field25519::{sqrt_m1, Fe};
+use super::sha512::sha512;
+
+/// Edwards curve point in extended homogeneous coordinates (X:Y:Z:T),
+/// x = X/Z, y = Y/Z, xy = T/Z.
+#[derive(Clone, Copy)]
+pub struct Point {
+    x: Fe,
+    y: Fe,
+    z: Fe,
+    t: Fe,
+}
+
+fn fe_d() -> Fe {
+    // d = -121665/121666 mod p
+    let num = Fe::from_u64(121665).neg();
+    let den = Fe::from_u64(121666);
+    num.mul(den.invert())
+}
+
+fn basepoint() -> Point {
+    // B = (x, 4/5) with x "positive" (even)
+    let y = Fe::from_u64(4).mul(Fe::from_u64(5).invert());
+    decompress_y(&y, false).expect("basepoint decompression")
+}
+
+impl Point {
+    pub fn identity() -> Point {
+        Point { x: Fe::ZERO, y: Fe::ONE, z: Fe::ONE, t: Fe::ZERO }
+    }
+
+    /// Point doubling (dbl-2008-hwcd, a = −1 twist).
+    pub fn double(&self) -> Point {
+        let a = self.x.square();
+        let b = self.y.square();
+        let c = self.z.square().mul_small(2);
+        let d = a.neg(); // a = -1
+        let e = self.x.add(self.y).square().sub(a).sub(b);
+        let g = d.add(b);
+        let f = g.sub(c);
+        let h = d.sub(b);
+        Point { x: e.mul(f), y: g.mul(h), z: f.mul(g), t: e.mul(h) }
+    }
+
+    /// Point addition (add-2008-hwcd-3, a = −1).
+    pub fn add(&self, other: &Point) -> Point {
+        let d2 = fe_d().mul_small(2);
+        let a = self.y.sub(self.x).mul(other.y.sub(other.x));
+        let b = self.y.add(self.x).mul(other.y.add(other.x));
+        let c = self.t.mul(d2).mul(other.t);
+        let dd = self.z.mul_small(2).mul(other.z);
+        let e = b.sub(a);
+        let f = dd.sub(c);
+        let g = dd.add(c);
+        let h = b.add(a);
+        Point { x: e.mul(f), y: g.mul(h), z: f.mul(g), t: e.mul(h) }
+    }
+
+    /// Scalar multiplication (double-and-add over the scalar bits).
+    pub fn scalar_mul(&self, scalar_le: &[u8; 32]) -> Point {
+        let mut acc = Point::identity();
+        for i in (0..256).rev() {
+            acc = acc.double();
+            if (scalar_le[i / 8] >> (i % 8)) & 1 == 1 {
+                acc = acc.add(self);
+            }
+        }
+        acc
+    }
+
+    /// Compress to 32 bytes: y with the sign of x in the top bit.
+    pub fn compress(&self) -> [u8; 32] {
+        let zinv = self.z.invert();
+        let x = self.x.mul(zinv);
+        let y = self.y.mul(zinv);
+        let mut out = y.to_bytes();
+        if x.is_negative() {
+            out[31] |= 0x80;
+        }
+        out
+    }
+
+    /// Projective equality: x1·z2 == x2·z1 ∧ y1·z2 == y2·z1.
+    pub fn equals(&self, other: &Point) -> bool {
+        self.x.mul(other.z).equals(other.x.mul(self.z))
+            && self.y.mul(other.z).equals(other.y.mul(self.z))
+    }
+}
+
+/// Decompress from a y coordinate and an x-sign bit.
+fn decompress_y(y: &Fe, x_negative: bool) -> Option<Point> {
+    // x^2 = (y^2 - 1) / (d*y^2 + 1)
+    let yy = y.square();
+    let u = yy.sub(Fe::ONE);
+    let v = fe_d().mul(yy).add(Fe::ONE);
+    // candidate root: x = u * v^3 * (u * v^7)^((p-5)/8)
+    let v3 = v.square().mul(v);
+    let v7 = v3.square().mul(v);
+    let mut x = u.mul(v3).mul(u.mul(v7).pow_p58());
+    let vxx = v.mul(x.square());
+    if !vxx.equals(u) {
+        if vxx.equals(u.neg()) {
+            x = x.mul(sqrt_m1());
+        } else {
+            return None;
+        }
+    }
+    if x.is_zero() && x_negative {
+        return None; // -0 is invalid
+    }
+    if x.is_negative() != x_negative {
+        x = x.neg();
+    }
+    Some(Point { x, y: *y, z: Fe::ONE, t: x.mul(*y) })
+}
+
+/// Decompress a 32-byte encoded point.
+pub fn decompress(bytes: &[u8; 32]) -> Option<Point> {
+    let x_neg = bytes[31] & 0x80 != 0;
+    let mut yb = *bytes;
+    yb[31] &= 0x7f;
+    let y = Fe::from_bytes(&yb);
+    // reject non-canonical y
+    if y.to_bytes() != yb {
+        return None;
+    }
+    decompress_y(&y, x_neg)
+}
+
+fn group_order() -> BigUint {
+    // L = 2^252 + 27742317777372353535851937790883648493
+    BigUint::from_hex("1000000000000000000000000000000014def9dea2f79cd65812631a5cf5d3ed")
+}
+
+/// Reduce a little-endian byte string modulo the group order L,
+/// returning 32 little-endian bytes.
+fn reduce_mod_l(bytes_le: &[u8]) -> [u8; 32] {
+    let mut be = bytes_le.to_vec();
+    be.reverse();
+    let v = BigUint::from_bytes_be(&be).rem(&group_order());
+    let mut out_be = v.to_bytes_be();
+    out_be.reverse(); // now little-endian
+    let mut out = [0u8; 32];
+    out[..out_be.len()].copy_from_slice(&out_be);
+    out
+}
+
+/// (a·b + c) mod L over little-endian 32-byte scalars.
+fn muladd_mod_l(a: &[u8; 32], b: &[u8; 32], c: &[u8; 32]) -> [u8; 32] {
+    let le_to_big = |x: &[u8; 32]| {
+        let mut be = x.to_vec();
+        be.reverse();
+        BigUint::from_bytes_be(&be)
+    };
+    let l = group_order();
+    let v = le_to_big(a).mul(&le_to_big(b)).add(&le_to_big(c)).rem(&l);
+    let mut out_be = v.to_bytes_be();
+    out_be.reverse();
+    let mut out = [0u8; 32];
+    out[..out_be.len()].copy_from_slice(&out_be);
+    out
+}
+
+/// An Ed25519 signing key (seed + cached expansion).
+#[derive(Clone)]
+pub struct SigningKey {
+    seed: [u8; 32],
+    scalar: [u8; 32],
+    prefix: [u8; 32],
+    public: [u8; 32],
+}
+
+/// An Ed25519 verifying (public) key.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct VerifyingKey(pub [u8; 32]);
+
+/// A 64-byte signature.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Signature(pub [u8; 64]);
+
+impl SigningKey {
+    pub fn from_seed(seed: [u8; 32]) -> Self {
+        let h = sha512(&seed);
+        let mut scalar = [0u8; 32];
+        scalar.copy_from_slice(&h[..32]);
+        scalar[0] &= 248;
+        scalar[31] &= 127;
+        scalar[31] |= 64;
+        let mut prefix = [0u8; 32];
+        prefix.copy_from_slice(&h[32..]);
+        let public = basepoint().scalar_mul(&scalar).compress();
+        SigningKey { seed, scalar, prefix, public }
+    }
+
+    pub fn verifying_key(&self) -> VerifyingKey {
+        VerifyingKey(self.public)
+    }
+
+    pub fn seed(&self) -> &[u8; 32] {
+        &self.seed
+    }
+
+    pub fn sign(&self, msg: &[u8]) -> Signature {
+        // r = H(prefix || msg) mod L
+        let mut h = super::sha512::Sha512::new();
+        h.update(&self.prefix);
+        h.update(msg);
+        let r = reduce_mod_l(&h.finalize());
+        let r_point = basepoint().scalar_mul(&r).compress();
+        // k = H(R || A || msg) mod L
+        let mut h = super::sha512::Sha512::new();
+        h.update(&r_point);
+        h.update(&self.public);
+        h.update(msg);
+        let k = reduce_mod_l(&h.finalize());
+        // s = (r + k·scalar) mod L
+        let s = muladd_mod_l(&k, &self.scalar, &r);
+        let mut sig = [0u8; 64];
+        sig[..32].copy_from_slice(&r_point);
+        sig[32..].copy_from_slice(&s);
+        Signature(sig)
+    }
+}
+
+impl VerifyingKey {
+    /// Verify a signature: checks `s·B == R + k·A`.
+    pub fn verify(&self, msg: &[u8], sig: &Signature) -> bool {
+        let r_bytes: [u8; 32] = sig.0[..32].try_into().unwrap();
+        let s_bytes: [u8; 32] = sig.0[32..].try_into().unwrap();
+        // s must be canonical (< L), per RFC 8032 §5.1.7
+        {
+            let mut be = s_bytes.to_vec();
+            be.reverse();
+            let s = BigUint::from_bytes_be(&be);
+            if s.cmp_big(&group_order()) != std::cmp::Ordering::Less {
+                return false;
+            }
+        }
+        let a = match decompress(&self.0) {
+            Some(p) => p,
+            None => return false,
+        };
+        let r = match decompress(&r_bytes) {
+            Some(p) => p,
+            None => return false,
+        };
+        let mut h = super::sha512::Sha512::new();
+        h.update(&r_bytes);
+        h.update(&self.0);
+        h.update(msg);
+        let k = reduce_mod_l(&h.finalize());
+        let lhs = basepoint().scalar_mul(&s_bytes);
+        let rhs = r.add(&a.scalar_mul(&k));
+        lhs.equals(&rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unhex(s: &str) -> Vec<u8> {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        (0..s.len()).step_by(2).map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap()).collect()
+    }
+
+    // RFC 8032 §7.1 TEST 1 (empty message).
+    #[test]
+    fn rfc8032_test1() {
+        let seed: [u8; 32] =
+            unhex("9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60").try_into().unwrap();
+        let sk = SigningKey::from_seed(seed);
+        assert_eq!(
+            sk.verifying_key().0.to_vec(),
+            unhex("d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a")
+        );
+        let sig = sk.sign(b"");
+        assert_eq!(
+            sig.0.to_vec(),
+            unhex(
+                "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e06522490155\
+                 5fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b"
+            )
+        );
+        assert!(sk.verifying_key().verify(b"", &sig));
+    }
+
+    // RFC 8032 §7.1 TEST 2 (one-byte message).
+    #[test]
+    fn rfc8032_test2() {
+        let seed: [u8; 32] =
+            unhex("4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb").try_into().unwrap();
+        let sk = SigningKey::from_seed(seed);
+        assert_eq!(
+            sk.verifying_key().0.to_vec(),
+            unhex("3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c")
+        );
+        let msg = unhex("72");
+        let sig = sk.sign(&msg);
+        assert_eq!(
+            sig.0.to_vec(),
+            unhex(
+                "92a009a9f0d4cab8720e820b5f642540a2b27b5416503f8fb3762223ebdb69da\
+                 085ac1e43e15996e458f3613d0f11d8c387b2eaeb4302aeeb00d291612bb0c00"
+            )
+        );
+        assert!(sk.verifying_key().verify(&msg, &sig));
+    }
+
+    // RFC 8032 §7.1 TEST 3 (two-byte message).
+    #[test]
+    fn rfc8032_test3() {
+        let seed: [u8; 32] =
+            unhex("c5aa8df43f9f837bedb7442f31dcb7b166d38535076f094b85ce3a2e0b4458f7").try_into().unwrap();
+        let sk = SigningKey::from_seed(seed);
+        let msg = unhex("af82");
+        let sig = sk.sign(&msg);
+        assert_eq!(
+            sig.0.to_vec(),
+            unhex(
+                "6291d657deec24024827e69c3abe01a30ce548a284743a445e3680d7db5ac3ac\
+                 18ff9b538d16f290ae67f760984dc6594a7c15e9716ed28dc027beceea1ec40a"
+            )
+        );
+        assert!(sk.verifying_key().verify(&msg, &sig));
+    }
+
+    #[test]
+    fn reject_tampered() {
+        let sk = SigningKey::from_seed([7u8; 32]);
+        let vk = sk.verifying_key();
+        let sig = sk.sign(b"round=1 payload");
+        assert!(vk.verify(b"round=1 payload", &sig));
+        assert!(!vk.verify(b"round=2 payload", &sig));
+        let mut bad = sig;
+        bad.0[3] ^= 1;
+        assert!(!vk.verify(b"round=1 payload", &bad));
+        // wrong key
+        let vk2 = SigningKey::from_seed([8u8; 32]).verifying_key();
+        assert!(!vk2.verify(b"round=1 payload", &sig));
+    }
+
+    #[test]
+    fn point_arithmetic_consistency() {
+        let b = basepoint();
+        // 2B via double == B + B
+        assert!(b.double().equals(&b.add(&b)));
+        // 3B = 2B + B == B + 2B
+        let b2 = b.double();
+        assert!(b2.add(&b).equals(&b.add(&b2)));
+        // B + identity == B
+        assert!(b.add(&Point::identity()).equals(&b));
+        // L·B == identity
+        let l = group_order();
+        let mut le = l.to_bytes_be();
+        le.reverse();
+        let mut sc = [0u8; 32];
+        sc[..le.len()].copy_from_slice(&le);
+        assert!(b.scalar_mul(&sc).equals(&Point::identity()));
+    }
+
+    #[test]
+    fn compress_decompress_roundtrip() {
+        let b = basepoint();
+        for k in 1u8..6 {
+            let p = b.scalar_mul(&{
+                let mut s = [0u8; 32];
+                s[0] = k;
+                s
+            });
+            let c = p.compress();
+            let q = decompress(&c).expect("valid point");
+            assert!(p.equals(&q));
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! Field arithmetic over GF(2²⁵⁵ − 19), from scratch.
+//!
+//! Radix-2⁵¹ representation (five 51-bit limbs in `u64`), the classic
+//! donna/ref10 layout. Shared by the X25519 Montgomery ladder
+//! ([`crate::crypto::x25519`]) and the Ed25519 Edwards-curve signature
+//! scheme ([`crate::crypto::ed25519`]).
+
+/// An element of GF(2²⁵⁵−19); limbs may be loosely reduced (< 2⁵² each).
+#[derive(Clone, Copy, Debug)]
+pub struct Fe(pub [u64; 5]);
+
+const MASK51: u64 = (1u64 << 51) - 1;
+
+impl Fe {
+    pub const ZERO: Fe = Fe([0; 5]);
+    pub const ONE: Fe = Fe([1, 0, 0, 0, 0]);
+
+    /// Load from 32 little-endian bytes (top bit ignored, per RFC 7748).
+    pub fn from_bytes(b: &[u8; 32]) -> Fe {
+        let lo = |i: usize| -> u64 { u64::from_le_bytes(b[i..i + 8].try_into().unwrap()) };
+        let f0 = lo(0) & MASK51;
+        let f1 = (lo(6) >> 3) & MASK51;
+        let f2 = (lo(12) >> 6) & MASK51;
+        let f3 = (lo(19) >> 1) & MASK51;
+        let f4 = (lo(24) >> 12) & MASK51;
+        Fe([f0, f1, f2, f3, f4])
+    }
+
+    /// Serialize to 32 little-endian bytes with full canonical reduction.
+    pub fn to_bytes(self) -> [u8; 32] {
+        let mut t = self.reduce_limbs().0;
+        // canonical reduction: compute t + 19, if it carries past 2^255 then subtract p
+        // standard trick: q = (t + 19) >> 255
+        let mut q = (t[0] + 19) >> 51;
+        q = (t[1] + q) >> 51;
+        q = (t[2] + q) >> 51;
+        q = (t[3] + q) >> 51;
+        q = (t[4] + q) >> 51;
+        t[0] += 19 * q;
+        let mut carry = t[0] >> 51;
+        t[0] &= MASK51;
+        t[1] += carry;
+        carry = t[1] >> 51;
+        t[1] &= MASK51;
+        t[2] += carry;
+        carry = t[2] >> 51;
+        t[2] &= MASK51;
+        t[3] += carry;
+        carry = t[3] >> 51;
+        t[3] &= MASK51;
+        t[4] += carry;
+        t[4] &= MASK51;
+
+        let mut out = [0u8; 32];
+        let lo0 = t[0] | (t[1] << 51);
+        let lo1 = (t[1] >> 13) | (t[2] << 38);
+        let lo2 = (t[2] >> 26) | (t[3] << 25);
+        let lo3 = (t[3] >> 39) | (t[4] << 12);
+        out[0..8].copy_from_slice(&lo0.to_le_bytes());
+        out[8..16].copy_from_slice(&lo1.to_le_bytes());
+        out[16..24].copy_from_slice(&lo2.to_le_bytes());
+        out[24..32].copy_from_slice(&lo3.to_le_bytes());
+        out
+    }
+
+    /// Carry-propagate so every limb is < 2⁵¹ (plus the ×19 folding).
+    pub fn reduce_limbs(self) -> Fe {
+        let mut t = self.0;
+        let mut c: u64;
+        c = t[0] >> 51;
+        t[0] &= MASK51;
+        t[1] += c;
+        c = t[1] >> 51;
+        t[1] &= MASK51;
+        t[2] += c;
+        c = t[2] >> 51;
+        t[2] &= MASK51;
+        t[3] += c;
+        c = t[3] >> 51;
+        t[3] &= MASK51;
+        t[4] += c;
+        c = t[4] >> 51;
+        t[4] &= MASK51;
+        t[0] += c * 19;
+        c = t[0] >> 51;
+        t[0] &= MASK51;
+        t[1] += c;
+        Fe(t)
+    }
+
+    pub fn add(self, rhs: Fe) -> Fe {
+        let a = self.0;
+        let b = rhs.0;
+        Fe([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3], a[4] + b[4]]).reduce_limbs()
+    }
+
+    pub fn sub(self, rhs: Fe) -> Fe {
+        // add 2p to avoid underflow (limbs are < 2^52)
+        let a = self.0;
+        let b = rhs.0;
+        Fe([
+            a[0] + 0xfffffffffffda - b[0],
+            a[1] + 0xffffffffffffe - b[1],
+            a[2] + 0xffffffffffffe - b[2],
+            a[3] + 0xffffffffffffe - b[3],
+            a[4] + 0xffffffffffffe - b[4],
+        ])
+        .reduce_limbs()
+    }
+
+    pub fn neg(self) -> Fe {
+        Fe::ZERO.sub(self)
+    }
+
+    pub fn mul(self, rhs: Fe) -> Fe {
+        let a = self.reduce_limbs().0;
+        let b = rhs.reduce_limbs().0;
+        let m = |x: u64, y: u64| -> u128 { (x as u128) * (y as u128) };
+        let b1_19 = b[1] * 19;
+        let b2_19 = b[2] * 19;
+        let b3_19 = b[3] * 19;
+        let b4_19 = b[4] * 19;
+
+        let c0 = m(a[0], b[0]) + m(a[1], b4_19) + m(a[2], b3_19) + m(a[3], b2_19) + m(a[4], b1_19);
+        let c1 = m(a[0], b[1]) + m(a[1], b[0]) + m(a[2], b4_19) + m(a[3], b3_19) + m(a[4], b2_19);
+        let c2 = m(a[0], b[2]) + m(a[1], b[1]) + m(a[2], b[0]) + m(a[3], b4_19) + m(a[4], b3_19);
+        let c3 = m(a[0], b[3]) + m(a[1], b[2]) + m(a[2], b[1]) + m(a[3], b[0]) + m(a[4], b4_19);
+        let c4 = m(a[0], b[4]) + m(a[1], b[3]) + m(a[2], b[2]) + m(a[3], b[1]) + m(a[4], b[0]);
+
+        Self::carry_wide([c0, c1, c2, c3, c4])
+    }
+
+    pub fn square(self) -> Fe {
+        self.mul(self)
+    }
+
+    fn carry_wide(mut c: [u128; 5]) -> Fe {
+        let mut t = [0u64; 5];
+        let mut carry: u128 = 0;
+        for i in 0..5 {
+            c[i] += carry;
+            t[i] = (c[i] as u64) & MASK51;
+            carry = c[i] >> 51;
+        }
+        t[0] += (carry as u64) * 19;
+        Fe(t).reduce_limbs()
+    }
+
+    /// Multiply by a small scalar.
+    pub fn mul_small(self, k: u64) -> Fe {
+        let a = self.reduce_limbs().0;
+        let c: [u128; 5] = core::array::from_fn(|i| (a[i] as u128) * (k as u128));
+        Self::carry_wide(c)
+    }
+
+    /// Raise to an arbitrary power given big-endian exponent bits.
+    fn pow_bits(self, bits: &[u8]) -> Fe {
+        let mut acc = Fe::ONE;
+        for &bit in bits {
+            acc = acc.square();
+            if bit == 1 {
+                acc = acc.mul(self);
+            }
+        }
+        acc
+    }
+
+    fn exponent_bits(bytes_le: &[u8; 32]) -> Vec<u8> {
+        let mut bits = Vec::with_capacity(256);
+        for i in (0..32).rev() {
+            for j in (0..8).rev() {
+                bits.push((bytes_le[i] >> j) & 1);
+            }
+        }
+        // strip leading zeros
+        let first_one = bits.iter().position(|&b| b == 1).unwrap_or(bits.len());
+        bits.split_off(first_one)
+    }
+
+    /// Multiplicative inverse via Fermat: self^(p−2).
+    pub fn invert(self) -> Fe {
+        // p - 2 = 2^255 - 21
+        let mut e = [0xffu8; 32];
+        e[0] = 0xeb; // 0xed - 2
+        e[31] = 0x7f;
+        self.pow_bits(&Self::exponent_bits(&e))
+    }
+
+    /// self^((p−5)/8), used for square roots (ref10 `pow22523`).
+    pub fn pow_p58(self) -> Fe {
+        // (p-5)/8 = (2^255 - 24)/8 = 2^252 - 3
+        let mut e = [0xffu8; 32];
+        e[0] = 0xfd;
+        e[31] = 0x0f;
+        self.pow_bits(&Self::exponent_bits(&e))
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.to_bytes() == [0u8; 32]
+    }
+
+    /// Parity of the canonical representation (bit 0).
+    pub fn is_negative(self) -> bool {
+        self.to_bytes()[0] & 1 == 1
+    }
+
+    pub fn equals(self, rhs: Fe) -> bool {
+        self.to_bytes() == rhs.to_bytes()
+    }
+
+    /// Constant-time conditional swap.
+    pub fn cswap(a: &mut Fe, b: &mut Fe, swap: u64) {
+        let mask = 0u64.wrapping_sub(swap);
+        for i in 0..5 {
+            let x = mask & (a.0[i] ^ b.0[i]);
+            a.0[i] ^= x;
+            b.0[i] ^= x;
+        }
+    }
+
+    /// Small-constant constructor.
+    pub fn from_u64(v: u64) -> Fe {
+        Fe([v & MASK51, v >> 51, 0, 0, 0])
+    }
+}
+
+/// √−1 mod p (for Ed25519 point decompression).
+pub fn sqrt_m1() -> Fe {
+    // 2^((p-1)/4)
+    let two = Fe::from_u64(2);
+    // (p-1)/4 = (2^255 - 20) / 4 = 2^253 - 5
+    let mut e = [0xffu8; 32];
+    e[0] = 0xfb;
+    e[31] = 0x1f;
+    let mut bits = Vec::with_capacity(256);
+    for i in (0..32).rev() {
+        for j in (0..8).rev() {
+            bits.push((e[i] >> j) & 1);
+        }
+    }
+    let first_one = bits.iter().position(|&b| b == 1).unwrap();
+    let bits = &bits[first_one..];
+    let mut acc = Fe::ONE;
+    for &bit in bits {
+        acc = acc.square();
+        if bit == 1 {
+            acc = acc.mul(two);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fe(v: u64) -> Fe {
+        Fe::from_u64(v)
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = fe(123456789);
+        let b = fe(987654321);
+        assert!(a.add(b).sub(b).equals(a));
+        assert!(a.sub(b).add(b).equals(a));
+    }
+
+    #[test]
+    fn mul_matches_small_ints() {
+        assert!(fe(7).mul(fe(6)).equals(fe(42)));
+        assert!(fe(1 << 30).mul(fe(1 << 30)).equals(Fe([0, 0x200, 0, 0, 0]))); // 2^60
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let a = fe(0xdeadbeefcafe);
+        let inv = a.invert();
+        assert!(a.mul(inv).equals(Fe::ONE));
+    }
+
+    #[test]
+    fn neg_and_sub() {
+        let a = fe(5);
+        assert!(a.add(a.neg()).is_zero());
+    }
+
+    #[test]
+    fn sqrt_m1_squares_to_minus_one() {
+        let i = sqrt_m1();
+        let m1 = Fe::ZERO.sub(Fe::ONE);
+        assert!(i.square().equals(m1));
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut b = [0u8; 32];
+        for i in 0..32 {
+            b[i] = (i as u8).wrapping_mul(37).wrapping_add(1);
+        }
+        b[31] &= 0x7f;
+        let f = Fe::from_bytes(&b);
+        // from_bytes . to_bytes is canonical-reduce; applying twice is stable
+        let c = f.to_bytes();
+        let f2 = Fe::from_bytes(&c);
+        assert_eq!(f2.to_bytes(), c);
+    }
+
+    #[test]
+    fn p_reduces_to_zero() {
+        // p = 2^255 - 19 in little-endian bytes
+        let mut p = [0xffu8; 32];
+        p[0] = 0xed;
+        p[31] = 0x7f;
+        let f = Fe::from_bytes(&p);
+        assert!(f.is_zero());
+    }
+
+    #[test]
+    fn cswap_works() {
+        let mut a = fe(1);
+        let mut b = fe(2);
+        Fe::cswap(&mut a, &mut b, 0);
+        assert!(a.equals(fe(1)));
+        Fe::cswap(&mut a, &mut b, 1);
+        assert!(a.equals(fe(2)) && b.equals(fe(1)));
+    }
+
+    #[test]
+    fn distributive_law() {
+        let a = fe(0x123456789abcd);
+        let b = fe(0xfedcba987654);
+        let c = fe(0x1111111111111);
+        let lhs = a.mul(b.add(c));
+        let rhs = a.mul(b).add(a.mul(c));
+        assert!(lhs.equals(rhs));
+    }
+}

@@ -1,0 +1,105 @@
+//! HKDF-SHA256 (RFC 5869), from scratch.
+//!
+//! The setup phase derives, from each raw X25519 shared secret, the
+//! per-pair AEAD key (sample-ID encryption) and the per-pair PRG seed
+//! (pairwise masks) with domain-separating `info` labels.
+
+use super::hmac::hmac_sha256;
+
+/// HKDF-Extract.
+pub fn extract(salt: &[u8], ikm: &[u8]) -> [u8; 32] {
+    hmac_sha256(salt, ikm)
+}
+
+/// HKDF-Expand. Panics if `out.len() > 255 * 32`.
+pub fn expand(prk: &[u8; 32], info: &[u8], out: &mut [u8]) {
+    assert!(out.len() <= 255 * 32, "HKDF-Expand output too long");
+    let mut t: Vec<u8> = Vec::new();
+    let mut written = 0usize;
+    let mut counter = 1u8;
+    while written < out.len() {
+        let mut msg = Vec::with_capacity(t.len() + info.len() + 1);
+        msg.extend_from_slice(&t);
+        msg.extend_from_slice(info);
+        msg.push(counter);
+        let block = hmac_sha256(prk, &msg);
+        let take = (out.len() - written).min(32);
+        out[written..written + take].copy_from_slice(&block[..take]);
+        written += take;
+        t = block.to_vec();
+        counter = counter.wrapping_add(1);
+    }
+}
+
+/// One-shot HKDF (extract + expand).
+pub fn hkdf(salt: &[u8], ikm: &[u8], info: &[u8], out: &mut [u8]) {
+    let prk = extract(salt, ikm);
+    expand(&prk, info, out);
+}
+
+/// Convenience: derive a 32-byte key.
+pub fn derive_key32(salt: &[u8], ikm: &[u8], info: &[u8]) -> [u8; 32] {
+    let mut out = [0u8; 32];
+    hkdf(salt, ikm, info, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(b: &[u8]) -> String {
+        b.iter().map(|x| format!("{x:02x}")).collect()
+    }
+
+    fn unhex(s: &str) -> Vec<u8> {
+        (0..s.len()).step_by(2).map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap()).collect()
+    }
+
+    // RFC 5869 Test Case 1.
+    #[test]
+    fn rfc5869_case1() {
+        let ikm = [0x0bu8; 22];
+        let salt = unhex("000102030405060708090a0b0c");
+        let info = unhex("f0f1f2f3f4f5f6f7f8f9");
+        let prk = extract(&salt, &ikm);
+        assert_eq!(hex(&prk), "077709362c2e32df0ddc3f0dc47bba6390b6c73bb50f9c3122ec844ad7c2b3e5");
+        let mut okm = [0u8; 42];
+        expand(&prk, &info, &mut okm);
+        assert_eq!(
+            hex(&okm),
+            "3cb25f25faacd57a90434f64d0362f2a2d2d0a90cf1a5a4c5db02d56ecc4c5bf34007208d5b887185865"
+        );
+    }
+
+    // RFC 5869 Test Case 3 (zero-length salt/info).
+    #[test]
+    fn rfc5869_case3() {
+        let ikm = [0x0bu8; 22];
+        let prk = extract(&[], &ikm);
+        let mut okm = [0u8; 42];
+        expand(&prk, &[], &mut okm);
+        assert_eq!(
+            hex(&okm),
+            "8da4e775a563c18f715f802a063c5a31b8a11f5c5ee1879ec3454e5f3c738d2d9d201395faa4b61a96c8"
+        );
+    }
+
+    #[test]
+    fn distinct_infos_give_distinct_keys() {
+        let a = derive_key32(b"salt", b"secret", b"aead");
+        let b = derive_key32(b"salt", b"secret", b"prg");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn long_output() {
+        let mut out = [0u8; 255 * 32];
+        hkdf(b"s", b"ikm", b"info", &mut out);
+        // first block must match a manual expand
+        let prk = extract(b"s", b"ikm");
+        let mut first = [0u8; 32];
+        expand(&prk, b"info", &mut first);
+        assert_eq!(&out[..32], &first);
+    }
+}

@@ -1,0 +1,24 @@
+//! From-scratch cryptographic substrates.
+//!
+//! Nothing in this module depends on external crates: the paper's
+//! protocol (X25519 ECDH, ChaCha20-Poly1305 AEAD, HKDF, mask PRG) and
+//! its baselines (Paillier, BFV) are all implemented here, with RFC /
+//! NIST test vectors in each module's unit tests.
+
+pub mod aead;
+pub mod bfv;
+pub mod bigint;
+pub mod chacha20;
+pub mod ed25519;
+pub mod field25519;
+pub mod hkdf;
+pub mod hmac;
+pub mod paillier;
+pub mod poly1305;
+pub mod prg;
+pub mod psi;
+pub mod rng;
+pub mod sha256;
+pub mod sha512;
+pub mod shamir;
+pub mod x25519;

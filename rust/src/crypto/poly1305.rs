@@ -1,0 +1,238 @@
+//! Poly1305 one-time authenticator (RFC 8439), from scratch.
+//!
+//! 26-bit-limb implementation (poly1305-donna style) over the prime
+//! 2¹³⁰ − 5.
+
+/// Poly1305 incremental MAC.
+pub struct Poly1305 {
+    r: [u64; 5],
+    s: [u64; 5], // r[i] * 5 for i>=1, used in the reduction
+    pad: [u32; 4],
+    h: [u64; 5],
+    buf: [u8; 16],
+    buf_len: usize,
+}
+
+#[inline]
+fn le32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+impl Poly1305 {
+    pub fn new(key: &[u8; 32]) -> Self {
+        let r0 = (le32(&key[0..4]) & 0x3ffffff) as u64;
+        let r1 = ((le32(&key[3..7]) >> 2) & 0x3ffff03) as u64;
+        let r2 = ((le32(&key[6..10]) >> 4) & 0x3ffc0ff) as u64;
+        let r3 = ((le32(&key[9..13]) >> 6) & 0x3f03fff) as u64;
+        let r4 = ((le32(&key[12..16]) >> 8) & 0x00fffff) as u64;
+        Poly1305 {
+            r: [r0, r1, r2, r3, r4],
+            s: [0, r1 * 5, r2 * 5, r3 * 5, r4 * 5],
+            pad: [le32(&key[16..20]), le32(&key[20..24]), le32(&key[24..28]), le32(&key[28..32])],
+            h: [0; 5],
+            buf: [0u8; 16],
+            buf_len: 0,
+        }
+    }
+
+    fn block(&mut self, block: &[u8; 16], hibit: u64) {
+        let [r0, r1, r2, r3, r4] = self.r;
+        let [_, s1, s2, s3, s4] = self.s;
+
+        // h += m
+        let mut h0 = self.h[0] + ((le32(&block[0..4]) & 0x3ffffff) as u64);
+        let mut h1 = self.h[1] + (((le32(&block[3..7]) >> 2) & 0x3ffffff) as u64);
+        let mut h2 = self.h[2] + (((le32(&block[6..10]) >> 4) & 0x3ffffff) as u64);
+        let mut h3 = self.h[3] + (((le32(&block[9..13]) >> 6) & 0x3ffffff) as u64);
+        let mut h4 = self.h[4] + (((le32(&block[12..16]) >> 8) as u64) | (hibit << 24));
+
+        // h *= r (mod 2^130 - 5), schoolbook with delayed carries
+        let d0 = (h0 as u128) * (r0 as u128) + (h1 as u128) * (s4 as u128) + (h2 as u128) * (s3 as u128) + (h3 as u128) * (s2 as u128) + (h4 as u128) * (s1 as u128);
+        let d1 = (h0 as u128) * (r1 as u128) + (h1 as u128) * (r0 as u128) + (h2 as u128) * (s4 as u128) + (h3 as u128) * (s3 as u128) + (h4 as u128) * (s2 as u128);
+        let d2 = (h0 as u128) * (r2 as u128) + (h1 as u128) * (r1 as u128) + (h2 as u128) * (r0 as u128) + (h3 as u128) * (s4 as u128) + (h4 as u128) * (s3 as u128);
+        let d3 = (h0 as u128) * (r3 as u128) + (h1 as u128) * (r2 as u128) + (h2 as u128) * (r1 as u128) + (h3 as u128) * (r0 as u128) + (h4 as u128) * (s4 as u128);
+        let d4 = (h0 as u128) * (r4 as u128) + (h1 as u128) * (r3 as u128) + (h2 as u128) * (r2 as u128) + (h3 as u128) * (r1 as u128) + (h4 as u128) * (r0 as u128);
+
+        let mut c: u64;
+        c = (d0 >> 26) as u64;
+        h0 = (d0 as u64) & 0x3ffffff;
+        let d1 = d1 + c as u128;
+        c = (d1 >> 26) as u64;
+        h1 = (d1 as u64) & 0x3ffffff;
+        let d2 = d2 + c as u128;
+        c = (d2 >> 26) as u64;
+        h2 = (d2 as u64) & 0x3ffffff;
+        let d3 = d3 + c as u128;
+        c = (d3 >> 26) as u64;
+        h3 = (d3 as u64) & 0x3ffffff;
+        let d4 = d4 + c as u128;
+        c = (d4 >> 26) as u64;
+        h4 = (d4 as u64) & 0x3ffffff;
+        h0 += c * 5;
+        c = h0 >> 26;
+        h0 &= 0x3ffffff;
+        h1 += c;
+
+        self.h = [h0, h1, h2, h3, h4];
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        if self.buf_len > 0 {
+            let take = (16 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 16 {
+                let b = self.buf;
+                self.block(&b, 1);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 16 {
+            let mut b = [0u8; 16];
+            b.copy_from_slice(&data[..16]);
+            self.block(&b, 1);
+            data = &data[16..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> [u8; 16] {
+        if self.buf_len > 0 {
+            // pad final partial block with 0x01 then zeros; hibit = 0
+            let mut b = [0u8; 16];
+            b[..self.buf_len].copy_from_slice(&self.buf[..self.buf_len]);
+            b[self.buf_len] = 1;
+            self.block(&b, 0);
+        }
+        let [mut h0, mut h1, mut h2, mut h3, mut h4] = self.h;
+
+        // fully carry h
+        let mut c;
+        c = h1 >> 26;
+        h1 &= 0x3ffffff;
+        h2 += c;
+        c = h2 >> 26;
+        h2 &= 0x3ffffff;
+        h3 += c;
+        c = h3 >> 26;
+        h3 &= 0x3ffffff;
+        h4 += c;
+        c = h4 >> 26;
+        h4 &= 0x3ffffff;
+        h0 += c * 5;
+        c = h0 >> 26;
+        h0 &= 0x3ffffff;
+        h1 += c;
+
+        // compute h + -p
+        let mut g0 = h0.wrapping_add(5);
+        c = g0 >> 26;
+        g0 &= 0x3ffffff;
+        let mut g1 = h1.wrapping_add(c);
+        c = g1 >> 26;
+        g1 &= 0x3ffffff;
+        let mut g2 = h2.wrapping_add(c);
+        c = g2 >> 26;
+        g2 &= 0x3ffffff;
+        let mut g3 = h3.wrapping_add(c);
+        c = g3 >> 26;
+        g3 &= 0x3ffffff;
+        let g4 = h4.wrapping_add(c).wrapping_sub(1 << 26);
+
+        // select h if h < p, else h - p
+        let mask = (g4 >> 63).wrapping_sub(1); // all ones if h >= p
+        let h0 = (h0 & !mask) | (g0 & mask);
+        let h1 = (h1 & !mask) | (g1 & mask);
+        let h2 = (h2 & !mask) | (g2 & mask);
+        let h3 = (h3 & !mask) | (g3 & mask);
+        let h4 = (h4 & !mask) | (g4 & mask);
+
+        // h = h % 2^128, serialize to 4 u32 words
+        let w0 = (h0 | (h1 << 26)) as u32;
+        let w1 = ((h1 >> 6) | (h2 << 20)) as u32;
+        let w2 = ((h2 >> 12) | (h3 << 14)) as u32;
+        let w3 = ((h3 >> 18) | (h4 << 8)) as u32;
+
+        // tag = (h + pad) % 2^128
+        let mut f: u64;
+        let mut out = [0u8; 16];
+        f = (w0 as u64) + (self.pad[0] as u64);
+        out[0..4].copy_from_slice(&(f as u32).to_le_bytes());
+        f = (w1 as u64) + (self.pad[1] as u64) + (f >> 32);
+        out[4..8].copy_from_slice(&(f as u32).to_le_bytes());
+        f = (w2 as u64) + (self.pad[2] as u64) + (f >> 32);
+        out[8..12].copy_from_slice(&(f as u32).to_le_bytes());
+        f = (w3 as u64) + (self.pad[3] as u64) + (f >> 32);
+        out[12..16].copy_from_slice(&(f as u32).to_le_bytes());
+        out
+    }
+}
+
+/// One-shot Poly1305 MAC.
+pub fn poly1305(key: &[u8; 32], msg: &[u8]) -> [u8; 16] {
+    let mut p = Poly1305::new(key);
+    p.update(msg);
+    p.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unhex(s: &str) -> Vec<u8> {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        (0..s.len()).step_by(2).map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap()).collect()
+    }
+
+    fn hex(b: &[u8]) -> String {
+        b.iter().map(|x| format!("{x:02x}")).collect()
+    }
+
+    // RFC 8439 §2.5.2.
+    #[test]
+    fn rfc8439_vector() {
+        let key: [u8; 32] = unhex("85d6be7857556d337f4452fe42d506a80103808afb0db2fd4abff6af4149f51b")
+            .try_into()
+            .unwrap();
+        let tag = poly1305(&key, b"Cryptographic Forum Research Group");
+        assert_eq!(hex(&tag), "a8061dc1305136c6c22b8baf0c0127a9");
+    }
+
+    // RFC 8439 Appendix A.3 test vector #1 (all-zero key and message).
+    #[test]
+    fn zero_key_zero_msg() {
+        let key = [0u8; 32];
+        let tag = poly1305(&key, &[0u8; 64]);
+        assert_eq!(hex(&tag), "00000000000000000000000000000000");
+    }
+
+    // RFC 8439 A.3 #3: r = all-ones-ish clamped, tests the h >= p path.
+    #[test]
+    fn wrap_around_p() {
+        // A.3 #5: R = 2 with F0.. message: 2^130-5 + 4 ≡ 4 mod p... use the documented vector:
+        let mut key = [0u8; 32];
+        key[0] = 0x02;
+        let msg = unhex("ffffffffffffffffffffffffffffffff");
+        // h = 2^128-1 + 2^128 (hibit) ; h*2 mod p then +pad(0)
+        let tag = poly1305(&key, &msg);
+        assert_eq!(hex(&tag), "03000000000000000000000000000000");
+    }
+
+    #[test]
+    fn incremental_equals_oneshot() {
+        let key: [u8; 32] = core::array::from_fn(|i| (i * 7 + 1) as u8);
+        let data: Vec<u8> = (0..217u32).map(|i| (i % 256) as u8).collect();
+        let oneshot = poly1305(&key, &data);
+        for chunk in [1usize, 5, 15, 16, 17, 100] {
+            let mut p = Poly1305::new(&key);
+            for c in data.chunks(chunk) {
+                p.update(c);
+            }
+            assert_eq!(p.finalize(), oneshot, "chunk size {chunk}");
+        }
+    }
+}

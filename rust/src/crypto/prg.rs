@@ -1,0 +1,150 @@
+//! The pairwise-mask PRG of the secure-aggregation protocol (Eq. 3–4).
+//!
+//! Each pair of clients (i, j) shares a secret `ss_ij`; per round and
+//! per tensor they expand it into a pseudo-random mask vector. Client
+//! i adds `+PRG(ss_ij)` if `j > i` and `−PRG(ss_ij)` if `j < i`, so the
+//! sum over all clients telescopes to zero (Eq. 4).
+//!
+//! Masks live in ℤ₂⁶⁴ (wrapping arithmetic) so cancellation is *exact*;
+//! the fixed-point codec in [`crate::secagg`] maps float tensors into
+//! that domain and back.
+
+use super::chacha20::ChaCha20;
+use super::hkdf;
+
+/// Expand a shared secret into `len` uniform u64 mask words for a given
+/// (round, tensor-tag) context. The context is bound into the nonce so
+/// every round and tensor gets an independent mask stream.
+pub fn mask_words(shared_secret: &[u8; 32], round: u64, tensor_tag: u32, len: usize) -> Vec<u64> {
+    // Domain-separate the PRG key from other uses of the shared secret.
+    let key = hkdf::derive_key32(b"vfl-sa/prg/v1", shared_secret, b"mask");
+    let mut nonce = [0u8; 12];
+    nonce[..8].copy_from_slice(&round.to_le_bytes());
+    nonce[8..12].copy_from_slice(&tensor_tag.to_le_bytes());
+    let cipher = ChaCha20::new(&key, &nonce, 0);
+    let mut words = vec![0u64; len];
+    cipher.keystream_u64(&mut words);
+    words
+}
+
+/// The signed pairwise mask for client `me` against peer `peer`
+/// (Eq. 3): added when `peer > me`, subtracted when `peer < me`.
+/// Returns the delta to add (already signed in ℤ₂⁶⁴).
+pub fn pairwise_mask(
+    shared_secret: &[u8; 32],
+    me: usize,
+    peer: usize,
+    round: u64,
+    tensor_tag: u32,
+    len: usize,
+) -> Vec<u64> {
+    assert_ne!(me, peer);
+    let words = mask_words(shared_secret, round, tensor_tag, len);
+    if peer > me {
+        words
+    } else {
+        words.into_iter().map(|w| w.wrapping_neg()).collect()
+    }
+}
+
+/// Accumulate the total mask for client `me` over all peers (Eq. 3).
+pub fn total_mask(
+    secrets: &[(usize, [u8; 32])], // (peer index, shared secret)
+    me: usize,
+    round: u64,
+    tensor_tag: u32,
+    len: usize,
+) -> Vec<u64> {
+    let mut acc = vec![0u64; len];
+    for (peer, ss) in secrets {
+        let delta = pairwise_mask(ss, me, *peer, round, tensor_tag, len);
+        for (a, d) in acc.iter_mut().zip(delta.iter()) {
+            *a = a.wrapping_add(*d);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ss(i: usize, j: usize) -> [u8; 32] {
+        // symmetric synthetic shared secret for the pair {i, j}
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let mut s = [0u8; 32];
+        s[0] = lo as u8;
+        s[1] = hi as u8;
+        s[2] = 0xA5;
+        s
+    }
+
+    #[test]
+    fn masks_cancel_over_all_parties(){
+        // Eq. 4: sum over all clients of their total mask == 0
+        for n in [2usize, 3, 5, 8] {
+            let len = 37;
+            let mut sum = vec![0u64; len];
+            for me in 0..n {
+                let secrets: Vec<(usize, [u8; 32])> =
+                    (0..n).filter(|&p| p != me).map(|p| (p, ss(me, p))).collect();
+                let m = total_mask(&secrets, me, 12, 3, len);
+                for (s, v) in sum.iter_mut().zip(m.iter()) {
+                    *s = s.wrapping_add(*v);
+                }
+            }
+            assert!(sum.iter().all(|&v| v == 0), "masks must cancel for n={n}");
+        }
+    }
+
+    #[test]
+    fn masks_differ_per_round_and_tensor() {
+        let s = ss(0, 1);
+        let a = mask_words(&s, 1, 0, 8);
+        let b = mask_words(&s, 2, 0, 8);
+        let c = mask_words(&s, 1, 1, 8);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn pairwise_antisymmetry() {
+        let s = ss(3, 7);
+        let m37 = pairwise_mask(&s, 3, 7, 5, 0, 16);
+        let m73 = pairwise_mask(&s, 7, 3, 5, 0, 16);
+        for (a, b) in m37.iter().zip(m73.iter()) {
+            assert_eq!(a.wrapping_add(*b), 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_secret() {
+        let s = ss(1, 2);
+        assert_eq!(mask_words(&s, 9, 4, 100), mask_words(&s, 9, 4, 100));
+    }
+
+    #[test]
+    fn masked_sum_reveals_only_total() {
+        // secure aggregation end-to-end in Z_2^64: three parties, values xi;
+        // aggregator sees only xi + mi, sum equals sum(xi).
+        let n = 3;
+        let len = 10;
+        let values: Vec<Vec<u64>> = (0..n)
+            .map(|i| (0..len).map(|j| (i * 1000 + j) as u64).collect())
+            .collect();
+        let mut agg = vec![0u64; len];
+        for me in 0..n {
+            let secrets: Vec<(usize, [u8; 32])> =
+                (0..n).filter(|&p| p != me).map(|p| (p, ss(me, p))).collect();
+            let mask = total_mask(&secrets, me, 0, 0, len);
+            for j in 0..len {
+                let masked = values[me][j].wrapping_add(mask[j]);
+                // the masked value must differ from the raw value (whp)
+                assert_ne!(masked, values[me][j]);
+                agg[j] = agg[j].wrapping_add(masked);
+            }
+        }
+        let want: Vec<u64> = (0..len).map(|j| (0..n).map(|i| (i * 1000 + j) as u64).sum()).collect();
+        assert_eq!(agg, want);
+    }
+}

@@ -1,0 +1,183 @@
+//! Diffie–Hellman Private Set Intersection, from scratch.
+//!
+//! §4.0.2 of the paper assumes sample alignment "can be realized by
+//! Private Set Intersection (Lu & Ding, 2020)". This module implements
+//! the classic semi-honest DH-PSI: both parties hash their IDs into a
+//! prime-order group and blind them with secret exponents; commutativity
+//! of exponentiation lets them match doubly-blinded values without
+//! revealing non-intersecting IDs.
+//!
+//! Group: the quadratic-residue subgroup of ℤ_p* for the 1536-bit MODP
+//! prime of RFC 3526 (group 5); hashing into the group squares the
+//! SHA-256-expanded digest.
+
+use super::bigint::BigUint;
+use super::sha256::Sha256;
+
+/// RFC 3526 1536-bit MODP prime.
+const MODP_1536: &str = "\
+FFFFFFFFFFFFFFFFC90FDAA22168C234C4C6628B80DC1CD129024E088A67CC74\
+020BBEA63B139B22514A08798E3404DDEF9519B3CD3A431B302B0A6DF25F1437\
+4FE1356D6D51C245E485B576625E7EC6F44C42E9A637ED6B0BFF5CB6F406B7ED\
+EE386BFB5A899FA5AE9F24117C4B1FE649286651ECE45B3DC2007CB8A163BF05\
+98DA48361C55D39A69163FA8FD24CF5F83655D23DCA3AD961C62F356208552BB\
+9ED529077096966D670C354E4ABC9804F1746C08CA237327FFFFFFFFFFFFFFFF";
+
+/// PSI group context (shared, public parameters).
+pub struct PsiGroup {
+    pub p: BigUint,
+    /// (p-1)/2, the order of the QR subgroup.
+    pub q: BigUint,
+}
+
+impl Default for PsiGroup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PsiGroup {
+    pub fn new() -> Self {
+        let p = BigUint::from_hex(MODP_1536);
+        let q = p.sub(&BigUint::one()).shr_bits(1);
+        PsiGroup { p, q }
+    }
+
+    /// Hash an identifier into the QR subgroup: H(id) expanded to the
+    /// modulus width, reduced mod p, then squared.
+    pub fn hash_to_group(&self, id: &[u8]) -> BigUint {
+        // expand SHA-256(id || counter) to 192 bytes
+        let mut bytes = Vec::with_capacity(192);
+        let mut counter = 0u32;
+        while bytes.len() < 192 {
+            let mut h = Sha256::new();
+            h.update(b"vfl-sa/psi/v1");
+            h.update(id);
+            h.update(&counter.to_be_bytes());
+            bytes.extend_from_slice(&h.finalize());
+            counter += 1;
+        }
+        let x = BigUint::from_bytes_be(&bytes).rem(&self.p);
+        x.mul_mod(&x, &self.p) // square → QR subgroup
+    }
+
+    /// Sample a secret exponent in [1, q).
+    pub fn random_exponent(&self, rng: &mut dyn FnMut(&mut [u8])) -> BigUint {
+        loop {
+            let e = BigUint::random_below(&self.q, rng);
+            if !e.is_zero() && !e.is_one() {
+                return e;
+            }
+        }
+    }
+
+    /// Blind a group element with a secret exponent.
+    pub fn blind(&self, elem: &BigUint, exp: &BigUint) -> BigUint {
+        elem.mod_pow(exp, &self.p)
+    }
+}
+
+/// One PSI participant holding an ID set and a secret exponent.
+pub struct PsiParty {
+    pub ids: Vec<Vec<u8>>,
+    exp: BigUint,
+}
+
+impl PsiParty {
+    pub fn new(ids: Vec<Vec<u8>>, group: &PsiGroup, rng: &mut dyn FnMut(&mut [u8])) -> Self {
+        PsiParty { ids, exp: group.random_exponent(rng) }
+    }
+
+    /// Round 1: H(id)^a for each own id.
+    pub fn blind_own(&self, group: &PsiGroup) -> Vec<BigUint> {
+        self.ids.iter().map(|id| group.blind(&group.hash_to_group(id), &self.exp)).collect()
+    }
+
+    /// Round 2: raise the peer's blinded values to our exponent.
+    pub fn blind_peer(&self, group: &PsiGroup, peer_blinded: &[BigUint]) -> Vec<BigUint> {
+        peer_blinded.iter().map(|e| group.blind(e, &self.exp)).collect()
+    }
+}
+
+/// Compute the intersection (as indices into `a_ids`) given both
+/// double-blinded sets. `a_double[i]` must correspond to `a_ids[i]`.
+pub fn intersect_indices(a_double: &[BigUint], b_double: &[BigUint]) -> Vec<usize> {
+    use std::collections::HashSet;
+    let b_set: HashSet<Vec<u8>> = b_double.iter().map(|e| e.to_bytes_be()).collect();
+    a_double
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| b_set.contains(&e.to_bytes_be()))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Full two-party PSI exchange (driver used by tests and the sample-
+/// alignment phase of the coordinator).
+pub fn run_psi(a: &PsiParty, b: &PsiParty, group: &PsiGroup) -> (Vec<usize>, Vec<usize>) {
+    let a1 = a.blind_own(group);
+    let b1 = b.blind_own(group);
+    // each raises the other's to their own exponent: H(id)^(ab)
+    let a2 = b.blind_peer(group, &a1); // a's ids double-blinded
+    let b2 = a.blind_peer(group, &b1); // b's ids double-blinded
+    (intersect_indices(&a2, &b2), intersect_indices(&b2, &a2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+
+    fn ids(v: &[&str]) -> Vec<Vec<u8>> {
+        v.iter().map(|s| s.as_bytes().to_vec()).collect()
+    }
+
+    #[test]
+    fn intersection_found() {
+        let group = PsiGroup::new();
+        let mut rng = DetRng::from_seed(1).as_fill_fn();
+        let a = PsiParty::new(ids(&["alice", "bob", "carol", "dave"]), &group, &mut rng);
+        let b = PsiParty::new(ids(&["eve", "bob", "dave", "frank", "grace"]), &group, &mut rng);
+        let (ia, ib) = run_psi(&a, &b, &group);
+        let got_a: Vec<&[u8]> = ia.iter().map(|&i| a.ids[i].as_slice()).collect();
+        assert_eq!(got_a, vec![b"bob".as_slice(), b"dave".as_slice()]);
+        let got_b: Vec<&[u8]> = ib.iter().map(|&i| b.ids[i].as_slice()).collect();
+        assert_eq!(got_b.len(), 2);
+        assert!(got_b.contains(&b"bob".as_slice()) && got_b.contains(&b"dave".as_slice()));
+    }
+
+    #[test]
+    fn empty_intersection() {
+        let group = PsiGroup::new();
+        let mut rng = DetRng::from_seed(2).as_fill_fn();
+        let a = PsiParty::new(ids(&["x1", "x2"]), &group, &mut rng);
+        let b = PsiParty::new(ids(&["y1", "y2"]), &group, &mut rng);
+        let (ia, ib) = run_psi(&a, &b, &group);
+        assert!(ia.is_empty() && ib.is_empty());
+    }
+
+    #[test]
+    fn blinding_hides_ids() {
+        // the same id blinded under different exponents must differ
+        let group = PsiGroup::new();
+        let mut rng = DetRng::from_seed(3).as_fill_fn();
+        let a = PsiParty::new(ids(&["secret-id"]), &group, &mut rng);
+        let b = PsiParty::new(ids(&["secret-id"]), &group, &mut rng);
+        let ba = a.blind_own(&group);
+        let bb = b.blind_own(&group);
+        assert_ne!(ba[0], bb[0]);
+        // ...but double-blinding commutes
+        let (ia, _) = run_psi(&a, &b, &group);
+        assert_eq!(ia, vec![0]);
+    }
+
+    #[test]
+    fn hash_to_group_is_deterministic_and_spread() {
+        let group = PsiGroup::new();
+        let h1 = group.hash_to_group(b"id-1");
+        let h2 = group.hash_to_group(b"id-1");
+        let h3 = group.hash_to_group(b"id-2");
+        assert_eq!(h1, h2);
+        assert_ne!(h1, h3);
+    }
+}

@@ -1,0 +1,184 @@
+//! Randomness utilities.
+//!
+//! * [`OsRng`] pulls entropy from `/dev/urandom` (key generation).
+//! * [`DetRng`] is a deterministic ChaCha20-based generator used for
+//!   reproducible experiments and property-style tests.
+
+use super::chacha20::ChaCha20;
+
+/// Fill `buf` with OS entropy from `/dev/urandom`.
+pub fn os_random(buf: &mut [u8]) {
+    use std::io::Read;
+    let mut f = std::fs::File::open("/dev/urandom").expect("open /dev/urandom");
+    f.read_exact(buf).expect("read /dev/urandom");
+}
+
+/// Generate a random 32-byte array from the OS.
+pub fn os_random32() -> [u8; 32] {
+    let mut b = [0u8; 32];
+    os_random(&mut b);
+    b
+}
+
+/// Deterministic ChaCha20-CTR random generator.
+#[derive(Clone)]
+pub struct DetRng {
+    cipher: ChaCha20,
+    counter: u32,
+    buf: [u8; 64],
+    pos: usize,
+}
+
+impl DetRng {
+    /// Seed from a 32-byte key.
+    pub fn new(seed: [u8; 32]) -> Self {
+        let cipher = ChaCha20::new(&seed, &[0u8; 12], 0);
+        DetRng { cipher, counter: 0, buf: [0u8; 64], pos: 64 }
+    }
+
+    /// Seed from a u64 (convenience for tests/experiments).
+    pub fn from_seed(seed: u64) -> Self {
+        let mut key = [0u8; 32];
+        key[..8].copy_from_slice(&seed.to_le_bytes());
+        key[8..16].copy_from_slice(&seed.wrapping_mul(0x9e3779b97f4a7c15).to_le_bytes());
+        Self::new(key)
+    }
+
+    fn refill(&mut self) {
+        self.buf = self.cipher.block(self.counter);
+        self.counter = self.counter.wrapping_add(1);
+        self.pos = 0;
+    }
+
+    pub fn fill(&mut self, out: &mut [u8]) {
+        for b in out.iter_mut() {
+            if self.pos == 64 {
+                self.refill();
+            }
+            *b = self.buf[self.pos];
+            self.pos += 1;
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut b = [0u8; 8];
+        self.fill(&mut b);
+        u64::from_le_bytes(b)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let mut b = [0u8; 4];
+        self.fill(&mut b);
+        u32::from_le_bytes(b)
+    }
+
+    /// Uniform in `[lo, hi)` (unbiased via rejection).
+    pub fn next_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi);
+        let span = hi - lo;
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + v % span;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            let u2 = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            if u1 > 0.0 {
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Uniform float in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Adapt into the `FnMut(&mut [u8])` shape `bigint` expects.
+    pub fn as_fill_fn(self) -> impl FnMut(&mut [u8]) {
+        let mut rng = self;
+        move |buf: &mut [u8]| rng.fill(buf)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_range(0, (i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = DetRng::from_seed(1);
+        let mut b = DetRng::from_seed(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = DetRng::from_seed(2);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = DetRng::from_seed(3);
+        for _ in 0..1000 {
+            let v = r.next_range(10, 20);
+            assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn uniformity_coarse() {
+        let mut r = DetRng::from_seed(4);
+        let mut buckets = [0usize; 10];
+        let n = 10_000;
+        for _ in 0..n {
+            buckets[r.next_range(0, 10) as usize] += 1;
+        }
+        for &c in &buckets {
+            assert!((800..1200).contains(&c), "bucket count {c} out of tolerance");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = DetRng::from_seed(5);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = DetRng::from_seed(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely to be identity
+    }
+
+    #[test]
+    fn os_random_nonzero() {
+        let a = os_random32();
+        let b = os_random32();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,249 @@
+//! Shamir t-of-n secret sharing over GF(2⁶¹−1), from scratch.
+//!
+//! Bonawitz et al. (2017) make secure aggregation robust to client
+//! dropouts by secret-sharing each client's PRG seed among all peers;
+//! if a client drops mid-round, any t surviving peers can reconstruct
+//! its pairwise masks so the aggregate still cancels. The paper (§5.1)
+//! positions this as the path to the malicious/robust setting; our
+//! [`crate::secagg::dropout`] module builds on this primitive.
+
+/// The Mersenne prime 2⁶¹ − 1 (field modulus).
+pub const P: u64 = (1u64 << 61) - 1;
+
+#[inline]
+fn add(a: u64, b: u64) -> u64 {
+    let s = a + b; // < 2^62, no overflow
+    if s >= P {
+        s - P
+    } else {
+        s
+    }
+}
+
+#[inline]
+fn sub(a: u64, b: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + P - b
+    }
+}
+
+#[inline]
+fn mul(a: u64, b: u64) -> u64 {
+    let t = (a as u128) * (b as u128);
+    // fast Mersenne reduction: t = hi*2^61 + lo ≡ hi + lo (mod 2^61-1)
+    let lo = (t & ((1u128 << 61) - 1)) as u64;
+    let hi = (t >> 61) as u64;
+    let mut r = lo + hi;
+    if r >= P {
+        r -= P;
+    }
+    // one more fold possible when hi is large
+    if r >= P {
+        r -= P;
+    }
+    r
+}
+
+fn pow(mut base: u64, mut exp: u64) -> u64 {
+    let mut acc = 1u64;
+    base %= P;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mul(acc, base);
+        }
+        base = mul(base, base);
+        exp >>= 1;
+    }
+    acc
+}
+
+#[inline]
+fn inv(a: u64) -> u64 {
+    assert!(a % P != 0, "no inverse of zero");
+    pow(a, P - 2)
+}
+
+/// One share: the evaluation point x (party index + 1) and value y.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Share {
+    pub x: u64,
+    pub y: u64,
+}
+
+/// Split `secret` (< P) into `n` shares with threshold `t`
+/// (any `t` shares reconstruct; fewer reveal nothing).
+pub fn split(secret: u64, t: usize, n: usize, rng: &mut dyn FnMut(&mut [u8])) -> Vec<Share> {
+    assert!(t >= 1 && t <= n, "invalid threshold");
+    assert!(secret < P, "secret out of field");
+    // random polynomial of degree t-1 with a_0 = secret
+    let mut coeffs = vec![secret];
+    for _ in 1..t {
+        let mut b = [0u8; 8];
+        loop {
+            rng(&mut b);
+            let v = u64::from_le_bytes(b) & ((1u64 << 61) - 1);
+            if v < P {
+                coeffs.push(v);
+                break;
+            }
+        }
+    }
+    (1..=n as u64)
+        .map(|x| {
+            // Horner evaluation
+            let mut y = 0u64;
+            for &c in coeffs.iter().rev() {
+                y = add(mul(y, x), c);
+            }
+            Share { x, y }
+        })
+        .collect()
+}
+
+/// Reconstruct the secret from at least `t` distinct shares via
+/// Lagrange interpolation at x = 0.
+pub fn reconstruct(shares: &[Share]) -> u64 {
+    assert!(!shares.is_empty());
+    let mut secret = 0u64;
+    for (i, si) in shares.iter().enumerate() {
+        let mut num = 1u64;
+        let mut den = 1u64;
+        for (j, sj) in shares.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            assert_ne!(si.x, sj.x, "duplicate share x");
+            num = mul(num, sj.x % P);
+            den = mul(den, sub(sj.x % P, si.x % P));
+        }
+        let li = mul(num, inv(den));
+        secret = add(secret, mul(si.y, li));
+    }
+    secret
+}
+
+/// Split an arbitrary byte string into per-chunk shares (each 60-bit
+/// chunk shared independently). Returns one `Vec<Share>` per party.
+pub fn split_bytes(data: &[u8], t: usize, n: usize, rng: &mut dyn FnMut(&mut [u8])) -> Vec<Vec<Share>> {
+    let chunks = chunk_bytes(data);
+    let mut per_party: Vec<Vec<Share>> = vec![Vec::with_capacity(chunks.len()); n];
+    for &c in &chunks {
+        let shares = split(c, t, n, rng);
+        for (p, s) in shares.into_iter().enumerate() {
+            per_party[p].push(s);
+        }
+    }
+    per_party
+}
+
+/// Reconstruct bytes previously shared with [`split_bytes`].
+/// `party_shares` holds each participating party's full share vector;
+/// `len` is the original byte length.
+pub fn reconstruct_bytes(party_shares: &[Vec<Share>], len: usize) -> Vec<u8> {
+    assert!(!party_shares.is_empty());
+    let n_chunks = party_shares[0].len();
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for c in 0..n_chunks {
+        let shares: Vec<Share> = party_shares.iter().map(|p| p[c]).collect();
+        chunks.push(reconstruct(&shares));
+    }
+    unchunk_bytes(&chunks, len)
+}
+
+fn chunk_bytes(data: &[u8]) -> Vec<u64> {
+    // 7 bytes (56 bits) per chunk: always < P
+    data.chunks(7)
+        .map(|c| {
+            let mut b = [0u8; 8];
+            b[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(b)
+        })
+        .collect()
+}
+
+fn unchunk_bytes(chunks: &[u64], len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(len);
+    for &c in chunks {
+        out.extend_from_slice(&c.to_le_bytes()[..7]);
+    }
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+
+    #[test]
+    fn field_ops_sane() {
+        assert_eq!(add(P - 1, 1), 0);
+        assert_eq!(sub(0, 1), P - 1);
+        assert_eq!(mul(P - 1, P - 1), 1); // (-1)^2
+        for a in [1u64, 2, 12345, P - 2] {
+            assert_eq!(mul(a, inv(a)), 1, "a={a}");
+        }
+    }
+
+    #[test]
+    fn split_reconstruct_roundtrip() {
+        let mut rng = DetRng::from_seed(1).as_fill_fn();
+        for (t, n) in [(1usize, 1usize), (2, 3), (3, 5), (5, 5), (4, 10)] {
+            let secret = 0x0123_4567_89ab_cdefu64 % P;
+            let shares = split(secret, t, n, &mut rng);
+            assert_eq!(shares.len(), n);
+            // exactly t shares suffice
+            assert_eq!(reconstruct(&shares[..t]), secret, "t={t} n={n}");
+            // any t-subset suffices (take the last t)
+            assert_eq!(reconstruct(&shares[n - t..]), secret);
+            // all shares also work
+            assert_eq!(reconstruct(&shares), secret);
+        }
+    }
+
+    #[test]
+    fn fewer_than_t_shares_do_not_reconstruct() {
+        let mut rng = DetRng::from_seed(2).as_fill_fn();
+        let secret = 42u64;
+        let shares = split(secret, 3, 5, &mut rng);
+        // 2 shares interpolate to something else (whp)
+        let wrong = reconstruct(&shares[..2]);
+        assert_ne!(wrong, secret);
+    }
+
+    #[test]
+    fn shares_leak_nothing_statistically_coarse() {
+        // share y-values of two different secrets should not be equal
+        let mut rng_a = DetRng::from_seed(3).as_fill_fn();
+        let mut rng_b = DetRng::from_seed(3).as_fill_fn(); // same coin flips!
+        let sa = split(1, 2, 3, &mut rng_a);
+        let sb = split(2, 2, 3, &mut rng_b);
+        // same randomness, different secret → different shares
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = DetRng::from_seed(4).as_fill_fn();
+        let secret: Vec<u8> = (0..32u8).collect(); // e.g. an X25519 seed
+        let parties = split_bytes(&secret, 3, 5, &mut rng);
+        assert_eq!(parties.len(), 5);
+        let rec = reconstruct_bytes(&parties[1..4], secret.len());
+        assert_eq!(rec, secret);
+    }
+
+    #[test]
+    fn randomized_roundtrip_many() {
+        let mut seed_rng = DetRng::from_seed(5);
+        for _ in 0..50 {
+            let secret = seed_rng.next_u64() % P;
+            let n = seed_rng.next_range(1, 9) as usize;
+            let t = seed_rng.next_range(1, n as u64 + 1) as usize;
+            let mut rng = DetRng::from_seed(seed_rng.next_u64()).as_fill_fn();
+            let shares = split(secret, t, n, &mut rng);
+            assert_eq!(reconstruct(&shares[..t]), secret, "t={t} n={n}");
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! X25519 Diffie–Hellman key agreement (RFC 7748), from scratch.
+//!
+//! The setup phase (§4.0.1 of the paper) has every client generate one
+//! keypair per peer; the aggregator relays public keys, and each pair
+//! (i, j) derives a shared secret `ss_ij = ss_ji` used for both the
+//! sample-ID AEAD key and the pairwise mask PRG seed.
+
+use super::field25519::Fe;
+
+/// A clamped X25519 secret key (32 bytes).
+#[derive(Clone)]
+pub struct SecretKey(pub [u8; 32]);
+
+/// An X25519 public key (32 bytes, u-coordinate).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct PublicKey(pub [u8; 32]);
+
+/// RFC 7748 scalar clamping.
+pub fn clamp(mut k: [u8; 32]) -> [u8; 32] {
+    k[0] &= 248;
+    k[31] &= 127;
+    k[31] |= 64;
+    k
+}
+
+/// The X25519 function: scalar multiplication on the Montgomery curve
+/// via the constant-time Montgomery ladder.
+pub fn x25519(scalar: &[u8; 32], u: &[u8; 32]) -> [u8; 32] {
+    let k = clamp(*scalar);
+    let x1 = Fe::from_bytes(u);
+    let mut x2 = Fe::ONE;
+    let mut z2 = Fe::ZERO;
+    let mut x3 = x1;
+    let mut z3 = Fe::ONE;
+    let mut swap = 0u64;
+
+    for t in (0..255).rev() {
+        let kt = ((k[t / 8] >> (t % 8)) & 1) as u64;
+        swap ^= kt;
+        Fe::cswap(&mut x2, &mut x3, swap);
+        Fe::cswap(&mut z2, &mut z3, swap);
+        swap = kt;
+
+        let a = x2.add(z2);
+        let aa = a.square();
+        let b = x2.sub(z2);
+        let bb = b.square();
+        let e = aa.sub(bb);
+        let c = x3.add(z3);
+        let d = x3.sub(z3);
+        let da = d.mul(a);
+        let cb = c.mul(b);
+        x3 = da.add(cb).square();
+        z3 = x1.mul(da.sub(cb).square());
+        x2 = aa.mul(bb);
+        z2 = e.mul(aa.add(e.mul_small(121665)));
+    }
+    Fe::cswap(&mut x2, &mut x3, swap);
+    Fe::cswap(&mut z2, &mut z3, swap);
+
+    x2.mul(z2.invert()).to_bytes()
+}
+
+/// The canonical base point u = 9.
+pub const BASEPOINT: [u8; 32] = {
+    let mut b = [0u8; 32];
+    b[0] = 9;
+    b
+};
+
+impl SecretKey {
+    /// Create a secret key from raw entropy (clamped on use).
+    pub fn from_bytes(b: [u8; 32]) -> Self {
+        SecretKey(b)
+    }
+
+    /// Derive the public key `sk·G`.
+    pub fn public_key(&self) -> PublicKey {
+        PublicKey(x25519(&self.0, &BASEPOINT))
+    }
+
+    /// Compute the raw shared secret with a peer's public key.
+    pub fn diffie_hellman(&self, peer: &PublicKey) -> [u8; 32] {
+        x25519(&self.0, &peer.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unhex32(s: &str) -> [u8; 32] {
+        let v: Vec<u8> =
+            (0..64).step_by(2).map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap()).collect();
+        v.try_into().unwrap()
+    }
+
+    // RFC 7748 §5.2 test vector 1.
+    #[test]
+    fn rfc7748_vector1() {
+        let k = unhex32("a546e36bf0527c9d3b16154b82465edd62144c0ac1fc5a18506a2244ba449ac4");
+        let u = unhex32("e6db6867583030db3594c1a424b15f7c726624ec26b3353b10a903a6d0ab1c4c");
+        let out = x25519(&k, &u);
+        assert_eq!(out, unhex32("c3da55379de9c6908e94ea4df28d084f32eccf03491c71f754b4075577a28552"));
+    }
+
+    // RFC 7748 §5.2 test vector 2.
+    #[test]
+    fn rfc7748_vector2() {
+        let k = unhex32("4b66e9d4d1b4673c5ad22691957d6af5c11b6421e0ea01d42ca4169e7918ba0d");
+        let u = unhex32("e5210f12786811d3f4b7959d0538ae2c31dbe7106fc03c3efc4cd549c715a493");
+        let out = x25519(&k, &u);
+        assert_eq!(out, unhex32("95cbde9476e8907d7aade45cb4b873f88b595a68799fa152e6f8f7647aac7957"));
+    }
+
+    // RFC 7748 §5.2 iterated vector (1 and 1000 iterations).
+    #[test]
+    fn rfc7748_iterated() {
+        let mut k = unhex32("0900000000000000000000000000000000000000000000000000000000000000");
+        let mut u = k;
+        for _ in 0..1 {
+            let out = x25519(&k, &u);
+            u = k;
+            k = out;
+        }
+        assert_eq!(k, unhex32("422c8e7a6227d7bca1350b3e2bb7279f7897b87bb6854b783c60e80311ae3079"));
+        for _ in 1..1000 {
+            let out = x25519(&k, &u);
+            u = k;
+            k = out;
+        }
+        assert_eq!(k, unhex32("684cf59ba83309552800ef566f2f4d3c1c3887c49360e3875f2eb94d99532c51"));
+    }
+
+    // RFC 7748 §6.1 Diffie-Hellman test.
+    #[test]
+    fn rfc7748_dh() {
+        let alice_sk = SecretKey::from_bytes(unhex32(
+            "77076d0a7318a57d3c16c17251b26645df4c2f87ebc0992ab177fba51db92c2a",
+        ));
+        let bob_sk = SecretKey::from_bytes(unhex32(
+            "5dab087e624a8a4b79e17f8b83800ee66f3bb1292618b6fd1c2f8b27ff88e0eb",
+        ));
+        let alice_pk = alice_sk.public_key();
+        let bob_pk = bob_sk.public_key();
+        assert_eq!(alice_pk.0, unhex32("8520f0098930a754748b7ddcb43ef75a0dbf3a0d26381af4eba4a98eaa9b4e6a"));
+        assert_eq!(bob_pk.0, unhex32("de9edb7d7b7dc1b4d35b61c2ece435373f8343c85b78674dadfc7e146f882b4f"));
+        let ss_a = alice_sk.diffie_hellman(&bob_pk);
+        let ss_b = bob_sk.diffie_hellman(&alice_pk);
+        assert_eq!(ss_a, ss_b);
+        assert_eq!(ss_a, unhex32("4a5d9d5ba4ce2de1728e3bf480350f25e07e21c947d19e3376f09b3c1e161742"));
+    }
+
+    #[test]
+    fn shared_secret_symmetry_random() {
+        // deterministic pseudo-random keys
+        for seed in 0u8..8 {
+            let a = SecretKey::from_bytes(core::array::from_fn(|i| (i as u8).wrapping_mul(3).wrapping_add(seed)));
+            let b = SecretKey::from_bytes(core::array::from_fn(|i| (i as u8).wrapping_mul(7).wrapping_add(seed + 1)));
+            assert_eq!(a.diffie_hellman(&b.public_key()), b.diffie_hellman(&a.public_key()));
+        }
+    }
+}

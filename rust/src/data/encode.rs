@@ -1,0 +1,124 @@
+//! Feature encoding: raw rows → dense f32 vectors.
+//!
+//! Categoricals are one-hot encoded; numerics are min-max normalized to
+//! [0, 1]. Column layout follows schema order, which is what the
+//! per-party Linear modules in the paper consume (e.g. Banking active
+//! party = 57 encoded columns → Linear(57, 64)).
+
+use super::schema::{FeatureKind, RawValue, Schema};
+
+/// Encode a full row against its schema.
+pub fn encode_row(schema: &Schema, row: &[RawValue]) -> Vec<f32> {
+    assert_eq!(row.len(), schema.features.len(), "row arity mismatch");
+    let mut out = Vec::with_capacity(schema.encoded_width());
+    for (f, v) in schema.features.iter().zip(row) {
+        match (&f.kind, v) {
+            (FeatureKind::Categorical(c), RawValue::Cat(idx)) => {
+                assert!(idx < c, "category {idx} out of range for {}", f.name);
+                let start = out.len();
+                out.resize(start + c, 0.0);
+                out[start + idx] = 1.0;
+            }
+            (FeatureKind::Numeric { min, max }, RawValue::Num(x)) => {
+                out.push(((x - min) / (max - min)).clamp(0.0, 1.0));
+            }
+            _ => panic!("value kind mismatch for feature {}", f.name),
+        }
+    }
+    out
+}
+
+/// Encode only a named subset of features (a party's view), in schema
+/// order. Returns the encoded sub-vector.
+pub fn encode_subset(schema: &Schema, row: &[RawValue], names: &[&str]) -> Vec<f32> {
+    let mut out = Vec::new();
+    for (f, v) in schema.features.iter().zip(row) {
+        if !names.contains(&f.name.as_str()) {
+            continue;
+        }
+        match (&f.kind, v) {
+            (FeatureKind::Categorical(c), RawValue::Cat(idx)) => {
+                assert!(idx < c);
+                let start = out.len();
+                out.resize(start + c, 0.0);
+                out[start + idx] = 1.0;
+            }
+            (FeatureKind::Numeric { min, max }, RawValue::Num(x)) => {
+                out.push(((x - min) / (max - min)).clamp(0.0, 1.0));
+            }
+            _ => panic!("value kind mismatch for feature {}", f.name),
+        }
+    }
+    out
+}
+
+/// Encode a batch of subset views into a row-major (B × d) matrix.
+pub fn encode_batch(schema: &Schema, rows: &[&[RawValue]], names: &[&str]) -> Vec<f32> {
+    let mut out = Vec::new();
+    for row in rows {
+        out.extend(encode_subset(schema, row, names));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::Feature;
+
+    fn schema() -> Schema {
+        Schema::new(
+            "t",
+            vec![Feature::cat("c", 3), Feature::num("n", 10.0, 20.0), Feature::cat("d", 2)],
+        )
+    }
+
+    #[test]
+    fn one_hot_layout() {
+        let s = schema();
+        let row = [RawValue::Cat(1), RawValue::Num(15.0), RawValue::Cat(0)];
+        assert_eq!(encode_row(&s, &row), vec![0.0, 1.0, 0.0, 0.5, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn numeric_clamped() {
+        let s = schema();
+        let row = [RawValue::Cat(0), RawValue::Num(25.0), RawValue::Cat(1)];
+        let e = encode_row(&s, &row);
+        assert_eq!(e[3], 1.0);
+    }
+
+    #[test]
+    fn subset_matches_full_projection() {
+        let s = schema();
+        let row = [RawValue::Cat(2), RawValue::Num(12.5), RawValue::Cat(1)];
+        let full = encode_row(&s, &row);
+        let sub = encode_subset(&s, &row, &["c", "d"]);
+        assert_eq!(sub, vec![full[0], full[1], full[2], full[4], full[5]]);
+        let sub_n = encode_subset(&s, &row, &["n"]);
+        assert_eq!(sub_n, vec![full[3]]);
+    }
+
+    #[test]
+    fn subset_ignores_order_of_names() {
+        let s = schema();
+        let row = [RawValue::Cat(0), RawValue::Num(11.0), RawValue::Cat(1)];
+        // schema order governs, not the order of `names`
+        assert_eq!(encode_subset(&s, &row, &["d", "c"]), encode_subset(&s, &row, &["c", "d"]));
+    }
+
+    #[test]
+    fn batch_is_row_major() {
+        let s = schema();
+        let r1 = [RawValue::Cat(0), RawValue::Num(10.0), RawValue::Cat(0)];
+        let r2 = [RawValue::Cat(1), RawValue::Num(20.0), RawValue::Cat(1)];
+        let b = encode_batch(&s, &[&r1, &r2], &["n", "d"]);
+        assert_eq!(b, vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        encode_row(&schema(), &[RawValue::Cat(0)]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dataset substrate: schemas, synthetic generation, encoding, and the
+//! vertical feature/sample partitioning of §6.1–6.2.
+
+pub mod csv;
+pub mod datasets;
+pub mod encode;
+pub mod partition;
+pub mod schema;
+pub mod synth;
+
+pub use datasets::{adult_partition, adult_schema, banking_partition, banking_schema, by_name, hidden_dim, taobao_partition, taobao_schema};
+pub use partition::{partition, GroupSpec, PartitionSpec, VerticalDataset};
+pub use schema::{Feature, FeatureKind, RawValue, Schema};
+pub use synth::{generate, Dataset};

@@ -1,0 +1,198 @@
+//! Vertical feature partitioning (§6.2 of the paper).
+//!
+//! Features are split between one *active* party (which also holds the
+//! labels) and several *passive-party groups*. All parties in a group
+//! share a feature set but hold **disjoint sample subsets** — exactly
+//! the paper's "multiple passive parties can hold different samples
+//! with the same feature set".
+
+use std::collections::HashMap;
+
+use super::encode::encode_subset;
+use super::synth::Dataset;
+
+/// One passive-party group: a feature set replicated across `n_parties`
+/// parties that each hold a disjoint slice of the samples.
+#[derive(Clone, Debug)]
+pub struct GroupSpec {
+    pub features: Vec<String>,
+    pub n_parties: usize,
+}
+
+/// A full vertical partition specification.
+#[derive(Clone, Debug)]
+pub struct PartitionSpec {
+    pub active_features: Vec<String>,
+    pub groups: Vec<GroupSpec>,
+}
+
+impl PartitionSpec {
+    pub fn total_passive_parties(&self) -> usize {
+        self.groups.iter().map(|g| g.n_parties).sum()
+    }
+}
+
+/// The active party's materialized view.
+pub struct ActiveData {
+    /// Sample IDs in dataset order.
+    pub ids: Vec<u64>,
+    /// Row-major (n × d_active) encoded features.
+    pub x: Vec<Vec<f32>>,
+    pub labels: Vec<f32>,
+    pub dim: usize,
+}
+
+/// One passive party's materialized view.
+pub struct PassiveData {
+    /// Global passive-party index (0-based across all groups).
+    pub party_id: usize,
+    /// Which group this party belongs to.
+    pub group: usize,
+    /// Encoded width of this party's features.
+    pub dim: usize,
+    /// id → encoded feature vector, only for samples this party holds.
+    pub rows: HashMap<u64, Vec<f32>>,
+}
+
+/// The fully partitioned dataset.
+pub struct VerticalDataset {
+    pub active: ActiveData,
+    pub passives: Vec<PassiveData>,
+    pub spec: PartitionSpec,
+}
+
+/// Materialize a vertical split of `data` according to `spec`.
+/// Within a group, sample row `i` goes to party `i % n_parties`.
+pub fn partition(data: &Dataset, spec: &PartitionSpec) -> VerticalDataset {
+    let schema = &data.schema;
+    let active_names: Vec<&str> = spec.active_features.iter().map(|s| s.as_str()).collect();
+    let active_dim = schema.encoded_width_of(&active_names);
+    assert!(active_dim > 0, "active party has no features");
+
+    let active = ActiveData {
+        ids: data.ids.clone(),
+        x: data.rows.iter().map(|r| encode_subset(schema, r, &active_names)).collect(),
+        labels: data.labels.clone(),
+        dim: active_dim,
+    };
+
+    let mut passives = Vec::new();
+    let mut party_id = 0usize;
+    for (g, group) in spec.groups.iter().enumerate() {
+        let names: Vec<&str> = group.features.iter().map(|s| s.as_str()).collect();
+        let dim = schema.encoded_width_of(&names);
+        assert!(dim > 0, "group {g} has no encoded features");
+        let mut maps: Vec<HashMap<u64, Vec<f32>>> =
+            (0..group.n_parties).map(|_| HashMap::new()).collect();
+        for (i, (row, &id)) in data.rows.iter().zip(&data.ids).enumerate() {
+            let owner = i % group.n_parties;
+            maps[owner].insert(id, encode_subset(schema, row, &names));
+        }
+        for map in maps {
+            passives.push(PassiveData { party_id, group: g, dim, rows: map });
+            party_id += 1;
+        }
+    }
+    VerticalDataset { active, passives, spec: spec.clone() }
+}
+
+impl VerticalDataset {
+    /// Total number of clients (active + passives).
+    pub fn n_clients(&self) -> usize {
+        1 + self.passives.len()
+    }
+
+    /// The summed per-group dims (what the aggregated embedding covers).
+    pub fn group_dims(&self) -> Vec<usize> {
+        self.spec
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(g, _)| self.passives.iter().find(|p| p.group == g).map(|p| p.dim).unwrap_or(0))
+            .collect()
+    }
+
+    /// Which passive party (global index) holds sample `id` for group `g`.
+    pub fn holder_of(&self, g: usize, id: u64) -> Option<usize> {
+        self.passives
+            .iter()
+            .filter(|p| p.group == g)
+            .find(|p| p.rows.contains_key(&id))
+            .map(|p| p.party_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::{Feature, Schema};
+    use crate::data::synth::generate;
+
+    fn setup() -> (Dataset, PartitionSpec) {
+        let schema = Schema::new(
+            "t",
+            vec![
+                Feature::cat("a", 3),
+                Feature::num("b", 0.0, 1.0),
+                Feature::cat("c", 4),
+                Feature::num("d", -1.0, 1.0),
+            ],
+        );
+        let data = generate(&schema, 101, 9);
+        let spec = PartitionSpec {
+            active_features: vec!["a".into(), "b".into()],
+            groups: vec![
+                GroupSpec { features: vec!["c".into()], n_parties: 2 },
+                GroupSpec { features: vec!["d".into()], n_parties: 2 },
+            ],
+        };
+        (data, spec)
+    }
+
+    #[test]
+    fn dims_and_counts() {
+        let (data, spec) = setup();
+        let v = partition(&data, &spec);
+        assert_eq!(v.active.dim, 4); // 3 + 1
+        assert_eq!(v.passives.len(), 4);
+        assert_eq!(v.passives[0].dim, 4);
+        assert_eq!(v.passives[2].dim, 1);
+        assert_eq!(v.n_clients(), 5);
+        assert_eq!(v.group_dims(), vec![4, 1]);
+    }
+
+    #[test]
+    fn group_samples_disjoint_and_complete() {
+        let (data, spec) = setup();
+        let v = partition(&data, &spec);
+        for g in 0..2 {
+            let parties: Vec<&PassiveData> = v.passives.iter().filter(|p| p.group == g).collect();
+            let total: usize = parties.iter().map(|p| p.rows.len()).sum();
+            assert_eq!(total, data.len(), "group {g} must cover all samples");
+            // disjoint
+            for id in &data.ids {
+                let holders = parties.iter().filter(|p| p.rows.contains_key(id)).count();
+                assert_eq!(holders, 1, "sample {id} must have exactly one holder in group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn holder_lookup() {
+        let (data, spec) = setup();
+        let v = partition(&data, &spec);
+        let id = data.ids[3];
+        let h = v.holder_of(0, id).unwrap();
+        assert!(v.passives[h].rows.contains_key(&id));
+        assert_eq!(v.holder_of(0, 0xdead_beef), None);
+    }
+
+    #[test]
+    fn encoded_features_match_full_row() {
+        let (data, spec) = setup();
+        let v = partition(&data, &spec);
+        // active view row 0 equals the subset encoding of raw row 0
+        let want = encode_subset(&data.schema, &data.rows[0], &["a", "b"]);
+        assert_eq!(v.active.x[0], want);
+    }
+}

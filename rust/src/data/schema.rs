@@ -1,0 +1,101 @@
+//! Dataset schemas: typed feature descriptions with one-hot encoded
+//! widths, used by the synthetic generators and the vertical
+//! partitioner.
+
+/// The type of a feature column.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FeatureKind {
+    /// Categorical with the given cardinality (one-hot encoded).
+    Categorical(usize),
+    /// Numeric in [min, max] (min-max normalized to one column).
+    Numeric { min: f32, max: f32 },
+}
+
+/// A named feature column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Feature {
+    pub name: String,
+    pub kind: FeatureKind,
+}
+
+impl Feature {
+    pub fn cat(name: &str, cardinality: usize) -> Self {
+        assert!(cardinality >= 2, "categorical needs ≥ 2 levels");
+        Feature { name: name.into(), kind: FeatureKind::Categorical(cardinality) }
+    }
+
+    pub fn num(name: &str, min: f32, max: f32) -> Self {
+        assert!(max > min);
+        Feature { name: name.into(), kind: FeatureKind::Numeric { min, max } }
+    }
+
+    /// Encoded width: cardinality for categoricals, 1 for numerics.
+    pub fn encoded_width(&self) -> usize {
+        match self.kind {
+            FeatureKind::Categorical(c) => c,
+            FeatureKind::Numeric { .. } => 1,
+        }
+    }
+}
+
+/// One raw cell value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RawValue {
+    Cat(usize),
+    Num(f32),
+}
+
+/// A dataset schema: ordered features + binary label.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    pub name: String,
+    pub features: Vec<Feature>,
+}
+
+impl Schema {
+    pub fn new(name: &str, features: Vec<Feature>) -> Self {
+        Schema { name: name.into(), features }
+    }
+
+    /// Total one-hot encoded width of all features.
+    pub fn encoded_width(&self) -> usize {
+        self.features.iter().map(|f| f.encoded_width()).sum()
+    }
+
+    /// Encoded width of a named subset, in schema order.
+    pub fn encoded_width_of(&self, names: &[&str]) -> usize {
+        self.features
+            .iter()
+            .filter(|f| names.contains(&f.name.as_str()))
+            .map(|f| f.encoded_width())
+            .sum()
+    }
+
+    pub fn feature_index(&self, name: &str) -> Option<usize> {
+        self.features.iter().position(|f| f.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoded_widths() {
+        let s = Schema::new(
+            "t",
+            vec![Feature::cat("color", 3), Feature::num("age", 0.0, 100.0), Feature::cat("yn", 2)],
+        );
+        assert_eq!(s.encoded_width(), 6);
+        assert_eq!(s.encoded_width_of(&["color", "age"]), 4);
+        assert_eq!(s.encoded_width_of(&["yn"]), 2);
+        assert_eq!(s.feature_index("age"), Some(1));
+        assert_eq!(s.feature_index("nope"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cat_needs_two_levels() {
+        Feature::cat("bad", 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Synthetic tabular data generation.
+//!
+//! The sandbox has no network access to the UCI/Taobao sources, so the
+//! three evaluation datasets are generated synthetically against their
+//! published schemas (same columns, cardinalities, row counts — see
+//! DESIGN.md §Substitutions). Labels are planted through a logistic
+//! ground-truth model over the one-hot encoding so that training has
+//! real signal and the "no accuracy impact" claim (secure ≡ unsecured)
+//! can be checked on a learnable task.
+
+use super::encode::encode_row;
+use super::schema::{FeatureKind, RawValue, Schema};
+use crate::crypto::rng::DetRng;
+
+/// A generated dataset: raw rows, binary labels, and stable sample IDs.
+#[derive(Clone)]
+pub struct Dataset {
+    pub schema: Schema,
+    pub rows: Vec<Vec<RawValue>>,
+    pub labels: Vec<f32>,
+    /// Stable 8-byte sample identifiers (shared across parties; §4.0.2).
+    pub ids: Vec<u64>,
+}
+
+/// Generate `n_rows` rows with a planted logistic labelling.
+pub fn generate(schema: &Schema, n_rows: usize, seed: u64) -> Dataset {
+    let mut rng = DetRng::from_seed(seed);
+    // ground-truth weights over the encoded space
+    let width = schema.encoded_width();
+    let w: Vec<f32> = (0..width).map(|_| (rng.next_gaussian() as f32) * 1.5).collect();
+    let b: f32 = rng.next_gaussian() as f32 * 0.25;
+
+    let mut rows = Vec::with_capacity(n_rows);
+    let mut labels = Vec::with_capacity(n_rows);
+    let mut ids = Vec::with_capacity(n_rows);
+    for i in 0..n_rows {
+        let row: Vec<RawValue> = schema
+            .features
+            .iter()
+            .map(|f| match f.kind {
+                FeatureKind::Categorical(c) => RawValue::Cat(rng.next_range(0, c as u64) as usize),
+                FeatureKind::Numeric { min, max } => {
+                    RawValue::Num(min + (max - min) * rng.next_f64() as f32)
+                }
+            })
+            .collect();
+        let x = encode_row(schema, &row);
+        let logit: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>() + b;
+        let p = 1.0 / (1.0 + (-logit).exp());
+        let y = if (rng.next_f64() as f32) < p { 1.0 } else { 0.0 };
+        rows.push(row);
+        labels.push(y);
+        // non-sequential, unique IDs (simulating real account numbers)
+        ids.push(((i as u64) << 20) | (rng.next_u64() & 0xfffff));
+        let _ = i;
+    }
+    Dataset { schema: schema.clone(), rows, labels, ids }
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Train/test split by fraction (deterministic, no shuffle — rows
+    /// are already i.i.d. by construction).
+    pub fn split(&self, train_frac: f32) -> (Dataset, Dataset) {
+        let k = ((self.len() as f32) * train_frac) as usize;
+        let take = |lo: usize, hi: usize| Dataset {
+            schema: self.schema.clone(),
+            rows: self.rows[lo..hi].to_vec(),
+            labels: self.labels[lo..hi].to_vec(),
+            ids: self.ids[lo..hi].to_vec(),
+        };
+        (take(0, k), take(k, self.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::Feature;
+
+    fn schema() -> Schema {
+        Schema::new(
+            "test",
+            vec![Feature::cat("c1", 4), Feature::num("n1", -1.0, 1.0), Feature::cat("c2", 2)],
+        )
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = schema();
+        let a = generate(&s, 100, 7);
+        let b = generate(&s, 100, 7);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.ids, b.ids);
+        let c = generate(&s, 100, 8);
+        assert_ne!(a.rows, c.rows);
+    }
+
+    #[test]
+    fn values_respect_schema() {
+        let s = schema();
+        let d = generate(&s, 500, 1);
+        for row in &d.rows {
+            match row[0] {
+                RawValue::Cat(v) => assert!(v < 4),
+                _ => panic!("c1 should be categorical"),
+            }
+            match row[1] {
+                RawValue::Num(v) => assert!((-1.0..=1.0).contains(&v)),
+                _ => panic!("n1 should be numeric"),
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_binary_and_balanced_ish() {
+        let d = generate(&schema(), 2000, 3);
+        let pos: usize = d.labels.iter().filter(|&&y| y == 1.0).count();
+        assert!(d.labels.iter().all(|&y| y == 0.0 || y == 1.0));
+        // planted logistic labels shouldn't be degenerate
+        assert!(pos > 200 && pos < 1800, "pos={pos}");
+    }
+
+    #[test]
+    fn ids_unique() {
+        let d = generate(&schema(), 5000, 4);
+        let mut ids = d.ids.clone();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 5000);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = generate(&schema(), 100, 5);
+        let (tr, te) = d.split(0.8);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.ids[0], d.ids[0]);
+        assert_eq!(te.ids[0], d.ids[80]);
+    }
+
+    #[test]
+    fn labels_learnable_signal() {
+        // a trivial logistic fit on the encoded features should beat chance
+        let s = schema();
+        let d = generate(&s, 3000, 6);
+        let width = s.encoded_width();
+        let xs: Vec<Vec<f32>> = d.rows.iter().map(|r| encode_row(&s, r)).collect();
+        let mut w = vec![0.0f32; width];
+        let mut b = 0.0f32;
+        let lr = 0.5;
+        for _ in 0..200 {
+            let mut gw = vec![0.0f32; width];
+            let mut gb = 0.0;
+            for (x, &y) in xs.iter().zip(&d.labels) {
+                let z: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>() + b;
+                let p = 1.0 / (1.0 + (-z).exp());
+                let g = p - y;
+                for (gwi, xi) in gw.iter_mut().zip(x) {
+                    *gwi += g * xi;
+                }
+                gb += g;
+            }
+            for (wi, gwi) in w.iter_mut().zip(&gw) {
+                *wi -= lr * gwi / xs.len() as f32;
+            }
+            b -= lr * gb / xs.len() as f32;
+        }
+        let correct: usize = xs
+            .iter()
+            .zip(&d.labels)
+            .filter(|(x, &y)| {
+                let z: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>() + b;
+                (z > 0.0) == (y == 1.0)
+            })
+            .count();
+        let acc = correct as f32 / xs.len() as f32;
+        assert!(acc > 0.65, "planted signal should be learnable, acc={acc}");
+    }
+}

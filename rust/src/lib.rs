@@ -1,0 +1,35 @@
+//! # vfl — Efficient Vertical Federated Learning with Secure Aggregation
+//!
+//! A full reproduction of *"Efficient Vertical Federated Learning with
+//! Secure Aggregation"* (Qiu, Pan, et al., FLSys @ MLSys 2023).
+//!
+//! The crate is organised as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the coordination protocol: X25519 key
+//!   agreement, encrypted mini-batch selection, Bonawitz-style pairwise
+//!   masking, the aggregator / active-party / passive-party state
+//!   machines, a byte-metered simulated network, and the training loop.
+//! * **Layer 2 (JAX, build time)** — per-party and global compute graphs
+//!   lowered once to HLO text (`python/compile/`), loaded here through
+//!   [`runtime`].
+//! * **Layer 1 (Pallas, build time)** — the fused masked-matmul kernel
+//!   the L2 graphs call.
+//!
+//! Everything the paper depends on is implemented from scratch in this
+//! crate: the crypto stack ([`crypto`]), the secure-aggregation core
+//! ([`secagg`]), the dataset substrate ([`data`]), the model substrate
+//! ([`model`]), the simulated network ([`net`]) and the homomorphic
+//! encryption baselines (Paillier and BFV) used by the Figure-2
+//! ablation.
+
+pub mod bench;
+pub mod coordinator;
+pub mod crypto;
+pub mod data;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod secagg;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,169 @@
+//! `vfl-sa` — launcher for the VFL + secure-aggregation system.
+//!
+//! Subcommands (hand-rolled parser; clap is not vendored here):
+//!   train    --dataset <banking|adult|taobao> [--rounds N] [--rows N]
+//!            [--plain|--float] [--reference] [--seed N]
+//!   bench    table1|table2|fig2|scaling [--reps N] [--quick] [--reference]
+//!   info     print dataset/model configurations
+//!
+//! `train` and `bench` default to the PJRT backend and expect
+//! `make artifacts` to have produced `artifacts/`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use vfl::bench::{fig2, tables};
+use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+use vfl::model::ModelConfig;
+use vfl::net::{Addr, Phase};
+use vfl::runtime::Engine;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".into());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn load_engine(dataset: &str) -> Result<Engine> {
+    let cfg = ModelConfig::for_dataset(dataset).context("unknown dataset")?;
+    Engine::load("artifacts", &cfg)
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let dataset = flags.get("dataset").map(String::as_str).unwrap_or("banking");
+    let mut cfg = RunConfig::paper(dataset).context("unknown dataset")?;
+    if let Some(r) = flags.get("rounds") {
+        cfg.train_rounds = r.parse()?;
+    }
+    if let Some(r) = flags.get("rows") {
+        cfg.n_rows = r.parse()?;
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    if flags.contains_key("plain") {
+        cfg.security = SecurityMode::Plain;
+    } else if flags.contains_key("float") {
+        cfg.security = SecurityMode::SecureFloat;
+    }
+    let reference = flags.contains_key("reference");
+    if reference {
+        cfg.backend = BackendKind::Reference;
+    }
+    cfg.test_rounds = flags.get("test-rounds").map(|v| v.parse()).transpose()?.unwrap_or(1);
+
+    println!(
+        "training {dataset}: {} rounds, {} rows, {:?}, backend {:?}",
+        cfg.train_rounds, cfg.n_rows, cfg.security, cfg.backend
+    );
+    let engine = if reference { None } else { Some(load_engine(dataset)?) };
+    let report = run_experiment(cfg, engine.as_ref())?;
+    for (i, l) in report.losses.iter().enumerate() {
+        println!("round {i:>4}  loss {l:.5}");
+    }
+    println!("test accuracy: {:.4}", report.test_accuracy);
+    println!("setups (1 + rotations): {}", report.setups);
+    println!(
+        "active tx bytes: setup {} / train {} / test {}",
+        report.net.transmission_bytes(Addr::Client(0), Phase::Setup),
+        report.net.transmission_bytes(Addr::Client(0), Phase::Training),
+        report.net.transmission_bytes(Addr::Client(0), Phase::Testing),
+    );
+    println!(
+        "active CPU ms: train {:.1} (overhead {:.1}) / test {:.1} (overhead {:.1})",
+        report.metrics.total_ms(1, Phase::Training),
+        report.metrics.overhead_ms(1, Phase::Training),
+        report.metrics.total_ms(1, Phase::Testing),
+        report.metrics.overhead_ms(1, Phase::Testing),
+    );
+    Ok(())
+}
+
+fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let which = pos.first().map(String::as_str).unwrap_or("table1");
+    let reference = flags.contains_key("reference");
+    let reps: usize = flags.get("reps").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let quick = flags.contains_key("quick");
+    match which {
+        "table1" => {
+            let mut rows = Vec::new();
+            for ds in ["banking", "adult", "taobao"] {
+                let engine = if reference { None } else { Some(load_engine(ds)?) };
+                rows.push(tables::table1(ds, reps, engine.as_ref())?);
+            }
+            tables::print_table1(&rows);
+        }
+        "table2" => {
+            let mut rows = Vec::new();
+            for ds in ["banking", "adult", "taobao"] {
+                let engine = if reference { None } else { Some(load_engine(ds)?) };
+                rows.push(tables::table2(ds, engine.as_ref())?);
+            }
+            tables::print_table2(&rows);
+        }
+        "fig2" => {
+            let batches = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+            let pts = fig2::sweep(&batches, quick);
+            fig2::print_sweep(&pts);
+        }
+        "scaling" => {
+            let pts = tables::scaling(&[2, 4, 8, 16, 32])?;
+            println!("\nE5 — SA fabric scaling (setup + one masked 256×64 round)");
+            println!("{:<10} {:>12} {:>14}", "clients", "cpu_ms", "masked_bytes");
+            for (n, ms, bytes) in pts {
+                println!("{n:<10} {ms:>12.2} {bytes:>14}");
+            }
+        }
+        w => bail!("unknown bench {w} (table1|table2|fig2|scaling)"),
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("dataset configurations (§6.2 of the paper):");
+    for ds in ["banking", "adult", "taobao"] {
+        let c = ModelConfig::for_dataset(ds).unwrap();
+        println!(
+            "  {ds:<10} active-dim {:>3}  groups {:?}  hidden {:>3}  clients {}  params {}",
+            c.active_dim,
+            c.group_dims,
+            c.hidden,
+            c.n_clients(),
+            c.n_params()
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    match pos.first().map(String::as_str) {
+        Some("train") => cmd_train(&flags),
+        Some("bench") => cmd_bench(&pos[1..], &flags),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: vfl-sa <train|bench|info> [flags]");
+            eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference]");
+            eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
+            Ok(())
+        }
+    }
+}

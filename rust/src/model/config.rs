@@ -1,0 +1,111 @@
+//! Model configuration: ties a dataset's vertical partition to the
+//! per-party Linear-module shapes of §6.2.
+
+use crate::data::{by_name, hidden_dim, PartitionSpec, Schema};
+
+/// Full model + training configuration for one experiment.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub dataset: String,
+    /// Active party input width (encoded).
+    pub active_dim: usize,
+    /// One entry per passive group: encoded input width.
+    pub group_dims: Vec<usize>,
+    /// Parties per group.
+    pub group_parties: Vec<usize>,
+    pub hidden: usize,
+    /// Learning rate (paper: 0.01).
+    pub lr: f32,
+    /// Batch size (paper: 256).
+    pub batch_size: usize,
+    /// Key-rotation period in rounds (paper experiments: 5).
+    pub rotation_period: usize,
+}
+
+impl ModelConfig {
+    /// Build the paper's configuration for a named dataset.
+    pub fn for_dataset(name: &str) -> Option<ModelConfig> {
+        let (schema, spec, _rows) = by_name(name)?;
+        Some(Self::from_parts(name, &schema, &spec))
+    }
+
+    pub fn from_parts(name: &str, schema: &Schema, spec: &PartitionSpec) -> ModelConfig {
+        let a: Vec<&str> = spec.active_features.iter().map(|s| s.as_str()).collect();
+        let active_dim = schema.encoded_width_of(&a);
+        let group_dims = spec
+            .groups
+            .iter()
+            .map(|g| {
+                let names: Vec<&str> = g.features.iter().map(|s| s.as_str()).collect();
+                schema.encoded_width_of(&names)
+            })
+            .collect();
+        let group_parties = spec.groups.iter().map(|g| g.n_parties).collect();
+        ModelConfig {
+            dataset: name.to_string(),
+            active_dim,
+            group_dims,
+            group_parties,
+            hidden: hidden_dim(name),
+            lr: 0.01,
+            batch_size: 256,
+            rotation_period: 5,
+        }
+    }
+
+    /// Total number of clients (1 active + passives).
+    pub fn n_clients(&self) -> usize {
+        1 + self.group_parties.iter().sum::<usize>()
+    }
+
+    /// The combined input width (what a centralized model would see).
+    pub fn total_dim(&self) -> usize {
+        self.active_dim + self.group_dims.iter().sum::<usize>()
+    }
+
+    /// Trainable parameter count.
+    pub fn n_params(&self) -> usize {
+        self.active_dim * self.hidden
+            + self.hidden // active bias
+            + self.group_dims.iter().map(|d| d * self.hidden).sum::<usize>()
+            + self.hidden // global weight (hidden x 1)
+            + 1 // global bias
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banking_config_matches_paper() {
+        let c = ModelConfig::for_dataset("banking").unwrap();
+        assert_eq!(c.active_dim, 57);
+        assert_eq!(c.group_dims, vec![3, 20]);
+        assert_eq!(c.hidden, 64);
+        assert_eq!(c.total_dim(), 80);
+        assert_eq!(c.n_clients(), 5);
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.batch_size, 256);
+    }
+
+    #[test]
+    fn adult_and_taobao() {
+        let a = ModelConfig::for_dataset("adult").unwrap();
+        assert_eq!((a.active_dim, a.total_dim(), a.hidden), (27, 106, 64));
+        let t = ModelConfig::for_dataset("taobao").unwrap();
+        assert_eq!((t.active_dim, t.total_dim(), t.hidden), (197, 214, 128));
+    }
+
+    #[test]
+    fn param_counts() {
+        let c = ModelConfig::for_dataset("banking").unwrap();
+        // 57*64 + 64 + (3+20)*64 + 64 + 1
+        assert_eq!(c.n_params(), 57 * 64 + 64 + 23 * 64 + 64 + 1);
+    }
+
+    #[test]
+    fn unknown_dataset() {
+        assert!(ModelConfig::for_dataset("none").is_none());
+    }
+}

@@ -1,0 +1,186 @@
+//! Evaluation metrics for the testing phase: accuracy, ROC-AUC,
+//! log-loss, confusion counts. Used by the examples and the experiment
+//! reports (the paper's datasets are heavily imbalanced — bank
+//! marketing ~12% positives — so AUC is the metric practitioners
+//! actually read).
+
+/// Binary confusion counts at a threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+impl Confusion {
+    pub fn from_preds(probs: &[f32], labels: &[f32], threshold: f32) -> Self {
+        assert_eq!(probs.len(), labels.len());
+        let mut c = Confusion { tp: 0, fp: 0, tn: 0, fn_: 0 };
+        for (&p, &y) in probs.iter().zip(labels) {
+            match (p > threshold, y == 1.0) {
+                (true, true) => c.tp += 1,
+                (true, false) => c.fp += 1,
+                (false, false) => c.tn += 1,
+                (false, true) => c.fn_ += 1,
+            }
+        }
+        c
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let n = self.tp + self.fp + self.tn + self.fn_;
+        if n == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / n as f64
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fp) as f64
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fn_) as f64
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            return 0.0;
+        }
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// ROC-AUC via the rank statistic (Mann–Whitney U), ties handled by
+/// midranks. O(n log n).
+pub fn roc_auc(probs: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y == 1.0).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[a].partial_cmp(&probs[b]).unwrap());
+    // midrank assignment
+    let mut ranks = vec![0.0f64; probs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && probs[idx[j + 1]] == probs[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 =
+        labels.iter().zip(&ranks).filter(|(&y, _)| y == 1.0).map(|(_, &r)| r).sum();
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Mean log-loss (same definition as the training objective).
+pub fn log_loss(probs: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let eps = 1e-7f64;
+    let s: f64 = probs
+        .iter()
+        .zip(labels)
+        .map(|(&p, &y)| {
+            let p = (p as f64).clamp(eps, 1.0 - eps);
+            -(y as f64 * p.ln() + (1.0 - y as f64) * (1.0 - p).ln())
+        })
+        .sum();
+    s / probs.len() as f64
+}
+
+/// Full evaluation summary.
+#[derive(Clone, Copy, Debug)]
+pub struct Evaluation {
+    pub accuracy: f64,
+    pub auc: f64,
+    pub log_loss: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+pub fn evaluate(probs: &[f32], labels: &[f32]) -> Evaluation {
+    let c = Confusion::from_preds(probs, labels, 0.5);
+    Evaluation {
+        accuracy: c.accuracy(),
+        auc: roc_auc(probs, labels),
+        log_loss: log_loss(probs, labels),
+        precision: c.precision(),
+        recall: c.recall(),
+        f1: c.f1(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_counts() {
+        let probs = [0.9, 0.8, 0.2, 0.1];
+        let labels = [1.0, 0.0, 1.0, 0.0];
+        let c = Confusion::from_preds(&probs, &labels, 0.5);
+        assert_eq!(c, Confusion { tp: 1, fp: 1, tn: 1, fn_: 1 });
+        assert_eq!(c.accuracy(), 0.5);
+        assert_eq!(c.precision(), 0.5);
+        assert_eq!(c.recall(), 0.5);
+        assert_eq!(c.f1(), 0.5);
+    }
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(roc_auc(&[0.1, 0.2, 0.8, 0.9], &labels), 1.0);
+        assert_eq!(roc_auc(&[0.9, 0.8, 0.2, 0.1], &labels), 0.0);
+        assert_eq!(roc_auc(&[0.5, 0.5, 0.5, 0.5], &labels), 0.5);
+    }
+
+    #[test]
+    fn auc_with_ties_midrank() {
+        // one tie crossing classes: AUC = 0.5 contribution for that pair
+        let labels = [0.0, 1.0, 0.0, 1.0];
+        let probs = [0.3, 0.3, 0.1, 0.9];
+        // pairs: (0.3n,0.3p)=0.5, (0.3n,0.9p)=1, (0.1n,0.3p)=1, (0.1n,0.9p)=1 → 3.5/4
+        assert!((roc_auc(&probs, &labels) - 0.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_labels() {
+        assert_eq!(roc_auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+        assert_eq!(roc_auc(&[0.1, 0.9], &[0.0, 0.0]), 0.5);
+    }
+
+    #[test]
+    fn log_loss_matches_manual() {
+        let ll = log_loss(&[0.5, 0.5], &[1.0, 0.0]);
+        assert!((ll - 0.6931472).abs() < 1e-5);
+        assert!(log_loss(&[1.0, 0.0], &[1.0, 0.0]) < 1e-5);
+    }
+
+    #[test]
+    fn evaluate_bundle() {
+        let e = evaluate(&[0.9, 0.1, 0.7, 0.3], &[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(e.accuracy, 1.0);
+        assert_eq!(e.auc, 1.0);
+        assert!(e.log_loss < 0.4);
+        assert_eq!(e.f1, 1.0);
+    }
+}

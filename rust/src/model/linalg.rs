@@ -1,0 +1,222 @@
+//! Minimal dense linear algebra on row-major `Vec<f32>` matrices.
+//!
+//! This is the *reference* math used by tests (as the oracle for both
+//! the PJRT artifacts and the masked protocol), by the HE ablation
+//! (which needs plain dot products to compare against), and as a
+//! fallback compute engine when artifacts are absent.
+
+/// Row-major matrix view: data.len() == rows * cols.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// C = A · B  ((m×k) · (k×n) → (m×n)), ikj loop order for locality.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a.at(i, p);
+            if aip == 0.0 {
+                continue; // one-hot rows are mostly zero
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · B  ((m×k)ᵀ · (m×n) → (k×n)) — the backward-pass product.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(k, n);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a.at(i, p);
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b.data[i * n..(i + 1) * n];
+            let crow = &mut c.data[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ  ((m×k) · (n×k)ᵀ → (m×n)).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            let arow = &a.data[i * k..(i + 1) * k];
+            let brow = &b.data[j * k..(j + 1) * k];
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            *c.at_mut(i, j) = acc;
+        }
+    }
+    c
+}
+
+pub fn add_inplace(a: &mut Mat, b: &Mat) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+pub fn add_row_vector(a: &mut Mat, bias: &[f32]) {
+    assert_eq!(a.cols, bias.len());
+    for r in 0..a.rows {
+        for c in 0..a.cols {
+            *a.at_mut(r, c) += bias[c];
+        }
+    }
+}
+
+pub fn relu(a: &Mat) -> Mat {
+    Mat { rows: a.rows, cols: a.cols, data: a.data.iter().map(|&v| v.max(0.0)).collect() }
+}
+
+/// Elementwise ReLU-gate: out = g ⊙ 1[z > 0].
+pub fn relu_grad(z: &Mat, g: &Mat) -> Mat {
+    assert_eq!((z.rows, z.cols), (g.rows, g.cols));
+    Mat {
+        rows: z.rows,
+        cols: z.cols,
+        data: z.data.iter().zip(&g.data).map(|(&z, &g)| if z > 0.0 { g } else { 0.0 }).collect(),
+    }
+}
+
+pub fn sigmoid(a: &Mat) -> Mat {
+    Mat { rows: a.rows, cols: a.cols, data: a.data.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect() }
+}
+
+/// Mean binary cross-entropy of probabilities `p` against labels `y`.
+pub fn bce_loss(p: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(p.len(), y.len());
+    let eps = 1e-7f32;
+    let s: f32 = p
+        .iter()
+        .zip(y)
+        .map(|(&p, &y)| {
+            let p = p.clamp(eps, 1.0 - eps);
+            -(y * p.ln() + (1.0 - y) * (1.0 - p).ln())
+        })
+        .sum();
+    s / p.len() as f32
+}
+
+/// Column sums (for bias gradients).
+pub fn col_sums(a: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.cols];
+    for r in 0..a.rows {
+        for c in 0..a.cols {
+            out[c] += a.at(r, c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let t = matmul_tn(&a, &b);
+        // Aᵀ(2x3)·B(3x2): [[1,3,5],[2,4,6]]·[[7,8],[9,10],[11,12]]
+        assert_eq!(t.data, vec![1.*7.+3.*9.+5.*11., 1.*8.+3.*10.+5.*12., 2.*7.+4.*9.+6.*11., 2.*8.+4.*10.+6.*12.]);
+    }
+
+    #[test]
+    fn matmul_nt_matches() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(2, 3, vec![1., 0., 1., 0., 1., 0.]);
+        let c = matmul_nt(&a, &b);
+        assert_eq!(c.data, vec![4., 2., 10., 5.]);
+    }
+
+    #[test]
+    fn relu_and_grad() {
+        let z = Mat::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
+        assert_eq!(relu(&z).data, vec![0.0, 0.0, 2.0, 0.0]);
+        let g = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(relu_grad(&z, &g).data, vec![0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn sigmoid_bounds() {
+        let z = Mat::from_vec(1, 3, vec![-100.0, 0.0, 100.0]);
+        let p = sigmoid(&z);
+        assert!(p.data[0] < 1e-6);
+        assert_eq!(p.data[1], 0.5);
+        assert!(p.data[2] > 1.0 - 1e-6);
+    }
+
+    #[test]
+    fn bce_perfect_and_wrong() {
+        assert!(bce_loss(&[1.0, 0.0], &[1.0, 0.0]) < 1e-5);
+        assert!(bce_loss(&[0.0, 1.0], &[1.0, 0.0]) > 10.0);
+        let half = bce_loss(&[0.5, 0.5], &[1.0, 0.0]);
+        assert!((half - 0.6931).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bias_and_colsums() {
+        let mut a = Mat::zeros(2, 3);
+        add_row_vector(&mut a, &[1.0, 2.0, 3.0]);
+        assert_eq!(a.data, vec![1., 2., 3., 1., 2., 3.]);
+        assert_eq!(col_sums(&a), vec![2.0, 4.0, 6.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Model substrate: configuration, parameters, reference math (the
+//! oracle for the PJRT artifacts and the masked protocol), and SGD.
+
+pub mod config;
+pub mod eval;
+pub mod linalg;
+pub mod params;
+pub mod reference;
+
+pub use config::ModelConfig;
+pub use linalg::Mat;
+pub use params::{GlobalParams, ModelGrads, ModelParams, PartyParams};

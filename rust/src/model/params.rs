@@ -1,0 +1,152 @@
+//! Model parameters: per-party embedding modules + the aggregator's
+//! global module, with Xavier init and flat (de)serialization for the
+//! wire.
+
+use super::config::ModelConfig;
+use super::linalg::Mat;
+use crate::crypto::rng::DetRng;
+
+/// One party's linear module: W (in_dim × hidden), optional bias.
+/// Per §6.2 only the active party's module is biased.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartyParams {
+    pub w: Mat,
+    pub b: Option<Vec<f32>>,
+}
+
+/// The aggregator's global module: Linear(hidden, 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobalParams {
+    pub w: Mat, // hidden × 1
+    pub b: f32,
+}
+
+/// The complete model state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelParams {
+    pub active: PartyParams,
+    /// One weight matrix per *group* (parties in a group share weights,
+    /// since they hold the same feature set over disjoint samples).
+    pub groups: Vec<PartyParams>,
+    pub global: GlobalParams,
+}
+
+fn xavier(rows: usize, cols: usize, rng: &mut DetRng) -> Mat {
+    let bound = (6.0 / (rows + cols) as f64).sqrt();
+    let data =
+        (0..rows * cols).map(|_| ((rng.next_f64() * 2.0 - 1.0) * bound) as f32).collect();
+    Mat { rows, cols, data }
+}
+
+impl ModelParams {
+    /// Xavier-initialized parameters for a configuration.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = DetRng::from_seed(seed);
+        let active = PartyParams {
+            w: xavier(cfg.active_dim, cfg.hidden, &mut rng),
+            b: Some(vec![0.0; cfg.hidden]),
+        };
+        let groups = cfg
+            .group_dims
+            .iter()
+            .map(|&d| PartyParams { w: xavier(d, cfg.hidden, &mut rng), b: None })
+            .collect();
+        let global = GlobalParams { w: xavier(cfg.hidden, 1, &mut rng), b: 0.0 };
+        ModelParams { active, groups, global }
+    }
+
+    /// Flatten all parameters to a single vector (wire format /
+    /// artifact input order: active W, active b, group Ws, global W, global b).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&self.active.w.data);
+        out.extend_from_slice(self.active.b.as_ref().expect("active bias"));
+        for g in &self.groups {
+            out.extend_from_slice(&g.w.data);
+        }
+        out.extend_from_slice(&self.global.w.data);
+        out.push(self.global.b);
+        out
+    }
+
+    /// Inverse of [`flatten`].
+    pub fn unflatten(cfg: &ModelConfig, flat: &[f32]) -> Self {
+        let h = cfg.hidden;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| {
+            let s = flat[*pos..*pos + n].to_vec();
+            *pos += n;
+            s
+        };
+        let aw = Mat::from_vec(cfg.active_dim, h, take(&mut pos, cfg.active_dim * h));
+        let ab = take(&mut pos, h);
+        let groups = cfg
+            .group_dims
+            .iter()
+            .map(|&d| PartyParams { w: Mat::from_vec(d, h, take(&mut pos, d * h)), b: None })
+            .collect();
+        let gw = Mat::from_vec(h, 1, take(&mut pos, h));
+        let gb = take(&mut pos, 1)[0];
+        assert_eq!(pos, flat.len(), "flat length mismatch");
+        ModelParams {
+            active: PartyParams { w: aw, b: Some(ab) },
+            groups,
+            global: GlobalParams { w: gw, b: gb },
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.flatten().len()
+    }
+}
+
+/// Gradients, same shape as the parameters.
+#[derive(Clone, Debug)]
+pub struct ModelGrads {
+    pub active_w: Mat,
+    pub active_b: Vec<f32>,
+    pub group_ws: Vec<Mat>,
+    pub global_w: Mat,
+    pub global_b: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes() {
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let p = ModelParams::init(&cfg, 1);
+        assert_eq!((p.active.w.rows, p.active.w.cols), (57, 64));
+        assert_eq!(p.active.b.as_ref().unwrap().len(), 64);
+        assert_eq!(p.groups.len(), 2);
+        assert_eq!((p.groups[0].w.rows, p.groups[1].w.rows), (3, 20));
+        assert!(p.groups.iter().all(|g| g.b.is_none()));
+        assert_eq!((p.global.w.rows, p.global.w.cols), (64, 1));
+        assert_eq!(p.n_params(), cfg.n_params());
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let cfg = ModelConfig::for_dataset("adult").unwrap();
+        let p = ModelParams::init(&cfg, 7);
+        let flat = p.flatten();
+        let q = ModelParams::unflatten(&cfg, &flat);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn init_deterministic_and_bounded() {
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let a = ModelParams::init(&cfg, 3);
+        let b = ModelParams::init(&cfg, 3);
+        assert_eq!(a, b);
+        let c = ModelParams::init(&cfg, 4);
+        assert_ne!(a, c);
+        let bound = (6.0f64 / (57 + 64) as f64).sqrt() as f32;
+        assert!(a.active.w.data.iter().all(|v| v.abs() <= bound));
+        // bias starts at zero
+        assert!(a.active.b.unwrap().iter().all(|&v| v == 0.0));
+    }
+}

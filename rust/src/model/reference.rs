@@ -1,0 +1,242 @@
+//! Pure-Rust reference implementation of the paper's model (§3, §6.2):
+//! per-party linear embeddings, summed at the aggregator, ReLU, global
+//! Linear(h, 1), sigmoid + BCE.
+//!
+//! This is (a) the numerical oracle the PJRT artifacts and the masked
+//! protocol are tested against, and (b) the fallback compute engine
+//! when `artifacts/` has not been built.
+
+use super::linalg::{
+    add_row_vector, bce_loss, col_sums, matmul, matmul_nt, matmul_tn, relu, relu_grad, sigmoid,
+    Mat,
+};
+use super::params::{ModelGrads, ModelParams, PartyParams};
+
+/// A party's contribution to the summed embedding: x·W (+ b for the
+/// active party). This is the quantity that gets masked in Eq. 2.
+pub fn party_forward(x: &Mat, p: &PartyParams) -> Mat {
+    let mut z = matmul(x, &p.w);
+    if let Some(b) = &p.b {
+        add_row_vector(&mut z, b);
+    }
+    z
+}
+
+/// Outputs of the aggregator's global module.
+pub struct GlobalForward {
+    /// ReLU(z) — kept for the backward pass.
+    pub h1: Mat,
+    /// σ(h1·Wg + bg), shape (B, 1).
+    pub probs: Mat,
+    pub loss: f32,
+}
+
+/// Global module forward + loss.
+pub fn global_forward(params: &ModelParams, z: &Mat, y: &[f32]) -> GlobalForward {
+    let h1 = relu(z);
+    let mut logits = matmul(&h1, &params.global.w);
+    for v in logits.data.iter_mut() {
+        *v += params.global.b;
+    }
+    let probs = sigmoid(&logits);
+    let loss = bce_loss(&probs.data, y);
+    GlobalForward { h1, probs, loss }
+}
+
+/// Gradient of the loss w.r.t. the summed embedding `z`, plus global-
+/// module gradients. `dz` is what the aggregator broadcasts (the paper's
+/// backward pass); per-party weight grads are then x_pᵀ·dz.
+pub struct GlobalBackward {
+    pub dz: Mat,
+    pub d_global_w: Mat,
+    pub d_global_b: f32,
+}
+
+pub fn global_backward(params: &ModelParams, z: &Mat, fwd: &GlobalForward, y: &[f32]) -> GlobalBackward {
+    let batch = z.rows as f32;
+    // dlogit = (p - y) / B
+    let dlogit = Mat {
+        rows: z.rows,
+        cols: 1,
+        data: fwd.probs.data.iter().zip(y).map(|(&p, &y)| (p - y) / batch).collect(),
+    };
+    let d_global_w = matmul_tn(&fwd.h1, &dlogit);
+    let d_global_b: f32 = dlogit.data.iter().sum();
+    // dh1 = dlogit · Wgᵀ ; dz = dh1 ⊙ 1[z>0]
+    let dh1 = matmul_nt(&dlogit, &params.global.w);
+    let dz = relu_grad(z, &dh1);
+    GlobalBackward { dz, d_global_w, d_global_b }
+}
+
+/// A party's weight gradient given the broadcast `dz` (Eq. 6): xᵀ·dz,
+/// plus the bias gradient for the active party.
+pub fn party_backward(x: &Mat, dz: &Mat, has_bias: bool) -> (Mat, Option<Vec<f32>>) {
+    let dw = matmul_tn(x, dz);
+    let db = if has_bias { Some(col_sums(dz)) } else { None };
+    (dw, db)
+}
+
+/// One full centralized training step (the §3 "centralized solution"
+/// upper bound): returns loss, probabilities and all gradients.
+/// `x_groups[g]` is the (B × d_g) feature block of group g.
+pub fn full_step(params: &ModelParams, x_active: &Mat, x_groups: &[Mat], y: &[f32]) -> (f32, Mat, ModelGrads) {
+    let mut z = party_forward(x_active, &params.active);
+    for (x, p) in x_groups.iter().zip(&params.groups) {
+        let zg = party_forward(x, p);
+        super::linalg::add_inplace(&mut z, &zg);
+    }
+    let fwd = global_forward(params, &z, y);
+    let bwd = global_backward(params, &z, &fwd, y);
+    let (active_w, active_b) = party_backward(x_active, &bwd.dz, true);
+    let group_ws: Vec<Mat> =
+        x_groups.iter().map(|x| party_backward(x, &bwd.dz, false).0).collect();
+    let grads = ModelGrads {
+        active_w,
+        active_b: active_b.unwrap(),
+        group_ws,
+        global_w: bwd.d_global_w,
+        global_b: bwd.d_global_b,
+    };
+    (fwd.loss, fwd.probs, grads)
+}
+
+/// In-place SGD update.
+pub fn sgd_step(params: &mut ModelParams, grads: &ModelGrads, lr: f32) {
+    for (w, g) in params.active.w.data.iter_mut().zip(&grads.active_w.data) {
+        *w -= lr * g;
+    }
+    if let Some(b) = params.active.b.as_mut() {
+        for (b, g) in b.iter_mut().zip(&grads.active_b) {
+            *b -= lr * g;
+        }
+    }
+    for (p, gw) in params.groups.iter_mut().zip(&grads.group_ws) {
+        for (w, g) in p.w.data.iter_mut().zip(&gw.data) {
+            *w -= lr * g;
+        }
+    }
+    for (w, g) in params.global.w.data.iter_mut().zip(&grads.global_w.data) {
+        *w -= lr * g;
+    }
+    params.global.b -= lr * grads.global_b;
+}
+
+/// Inference: probabilities for a batch.
+pub fn predict(params: &ModelParams, x_active: &Mat, x_groups: &[Mat]) -> Vec<f32> {
+    let mut z = party_forward(x_active, &params.active);
+    for (x, p) in x_groups.iter().zip(&params.groups) {
+        super::linalg::add_inplace(&mut z, &party_forward(x, p));
+    }
+    let h1 = relu(&z);
+    let mut logits = matmul(&h1, &params.global.w);
+    for v in logits.data.iter_mut() {
+        *v += params.global.b;
+    }
+    sigmoid(&logits).data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+    use crate::model::config::ModelConfig;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            dataset: "tiny".into(),
+            active_dim: 4,
+            group_dims: vec![3, 2],
+            group_parties: vec![2, 2],
+            hidden: 8,
+            lr: 0.1,
+            batch_size: 16,
+            rotation_period: 5,
+        }
+    }
+
+    fn rand_mat(rows: usize, cols: usize, rng: &mut DetRng) -> Mat {
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.next_f64() as f32 - 0.5).collect())
+    }
+
+    #[test]
+    fn party_forward_bias_only_for_active() {
+        let cfg = tiny_cfg();
+        let p = ModelParams::init(&cfg, 1);
+        let x = Mat::zeros(2, 4);
+        let z = party_forward(&x, &p.active);
+        // zero input → bias rows (which init to 0)
+        assert!(z.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let cfg = tiny_cfg();
+        let mut rng = DetRng::from_seed(2);
+        let params = ModelParams::init(&cfg, 3);
+        let x_active = rand_mat(6, 4, &mut rng);
+        let xg: Vec<Mat> = vec![rand_mat(6, 3, &mut rng), rand_mat(6, 2, &mut rng)];
+        let y: Vec<f32> = (0..6).map(|i| (i % 2) as f32).collect();
+        let (_, _, grads) = full_step(&params, &x_active, &xg, &y);
+
+        let eps = 1e-3f32;
+        let loss_at = |p: &ModelParams| full_step(p, &x_active, &xg, &y).0;
+
+        // check a handful of weights in every tensor
+        let check = |get: &dyn Fn(&ModelParams) -> f32,
+                         set: &dyn Fn(&mut ModelParams, f32),
+                         analytic: f32,
+                         what: &str| {
+            let mut p_plus = params.clone();
+            set(&mut p_plus, get(&params) + eps);
+            let mut p_minus = params.clone();
+            set(&mut p_minus, get(&params) - eps);
+            let numeric = (loss_at(&p_plus) - loss_at(&p_minus)) / (2.0 * eps);
+            assert!(
+                (numeric - analytic).abs() < 2e-2 * (1.0 + analytic.abs()),
+                "{what}: numeric={numeric} analytic={analytic}"
+            );
+        };
+
+        check(&|p| p.active.w.data[5], &|p, v| p.active.w.data[5] = v, grads.active_w.data[5], "active w");
+        check(
+            &|p| p.active.b.as_ref().unwrap()[2],
+            &|p, v| p.active.b.as_mut().unwrap()[2] = v,
+            grads.active_b[2],
+            "active b",
+        );
+        check(&|p| p.groups[0].w.data[7], &|p, v| p.groups[0].w.data[7] = v, grads.group_ws[0].data[7], "group0 w");
+        check(&|p| p.groups[1].w.data[3], &|p, v| p.groups[1].w.data[3] = v, grads.group_ws[1].data[3], "group1 w");
+        check(&|p| p.global.w.data[4], &|p, v| p.global.w.data[4] = v, grads.global_w.data[4], "global w");
+        check(&|p| p.global.b, &|p, v| p.global.b = v, grads.global_b, "global b");
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let cfg = tiny_cfg();
+        let mut rng = DetRng::from_seed(5);
+        let mut params = ModelParams::init(&cfg, 5);
+        let x_active = rand_mat(32, 4, &mut rng);
+        let xg: Vec<Mat> = vec![rand_mat(32, 3, &mut rng), rand_mat(32, 2, &mut rng)];
+        // learnable labels: function of the first feature
+        let y: Vec<f32> = (0..32).map(|i| if x_active.at(i, 0) > 0.0 { 1.0 } else { 0.0 }).collect();
+        let (loss0, _, _) = full_step(&params, &x_active, &xg, &y);
+        for _ in 0..200 {
+            let (_, _, grads) = full_step(&params, &x_active, &xg, &y);
+            sgd_step(&mut params, &grads, 0.5);
+        }
+        let (loss1, _, _) = full_step(&params, &x_active, &xg, &y);
+        assert!(loss1 < loss0 * 0.5, "loss should halve: {loss0} → {loss1}");
+    }
+
+    #[test]
+    fn predict_matches_forward_probs() {
+        let cfg = tiny_cfg();
+        let mut rng = DetRng::from_seed(6);
+        let params = ModelParams::init(&cfg, 6);
+        let x_active = rand_mat(4, 4, &mut rng);
+        let xg: Vec<Mat> = vec![rand_mat(4, 3, &mut rng), rand_mat(4, 2, &mut rng)];
+        let y = vec![0.0; 4];
+        let (_, probs, _) = full_step(&params, &x_active, &xg, &y);
+        assert_eq!(predict(&params, &x_active, &xg), probs.data);
+    }
+}

@@ -1,0 +1,7 @@
+//! Simulated network substrate: wire format + byte-metered transport.
+
+pub mod transport;
+pub mod wire;
+
+pub use transport::{Addr, Network, Phase};
+pub use wire::{Reader, Writer};

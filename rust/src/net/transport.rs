@@ -1,0 +1,198 @@
+//! Simulated star-topology network with byte accounting.
+//!
+//! All protocol traffic flows through the aggregator (the paper's
+//! topology). The transport delivers serialized messages between
+//! in-process endpoints and meters every byte per (party, phase,
+//! direction) — these counters *are* Table 2.
+
+use std::collections::VecDeque;
+
+/// Protocol phases, matching the paper's reporting granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Setup,
+    Training,
+    Testing,
+}
+
+/// Node address: the aggregator or a client id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Addr {
+    Aggregator,
+    Client(usize),
+}
+
+/// Per-node traffic counters, indexed by phase.
+#[derive(Clone, Debug, Default)]
+pub struct Traffic {
+    pub sent: u64,
+    pub received: u64,
+}
+
+/// The simulated network.
+pub struct Network {
+    n_clients: usize,
+    pub phase: Phase,
+    queue: VecDeque<(Addr, Addr, Vec<u8>)>,
+    /// [phase][node] — node 0 = aggregator, node i+1 = client i.
+    traffic: Vec<Vec<Traffic>>,
+    /// Total messages delivered (for diagnostics).
+    pub messages: u64,
+}
+
+fn phase_idx(p: Phase) -> usize {
+    match p {
+        Phase::Setup => 0,
+        Phase::Training => 1,
+        Phase::Testing => 2,
+    }
+}
+
+impl Network {
+    pub fn new(n_clients: usize) -> Self {
+        Network {
+            n_clients,
+            phase: Phase::Setup,
+            queue: VecDeque::new(),
+            traffic: vec![vec![Traffic::default(); n_clients + 1]; 3],
+            messages: 0,
+        }
+    }
+
+    fn node_idx(&self, a: Addr) -> usize {
+        match a {
+            Addr::Aggregator => 0,
+            Addr::Client(i) => {
+                assert!(i < self.n_clients, "client {i} out of range");
+                i + 1
+            }
+        }
+    }
+
+    /// Send serialized bytes; counts them against the current phase.
+    pub fn send(&mut self, from: Addr, to: Addr, payload: Vec<u8>) {
+        let p = phase_idx(self.phase);
+        let fi = self.node_idx(from);
+        let ti = self.node_idx(to);
+        self.traffic[p][fi].sent += payload.len() as u64;
+        self.traffic[p][ti].received += payload.len() as u64;
+        self.messages += 1;
+        self.queue.push_back((from, to, payload));
+    }
+
+    /// Deliver all queued messages addressed to `to` (FIFO).
+    pub fn deliver(&mut self, to: Addr) -> Vec<(Addr, Vec<u8>)> {
+        let mut out = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some((f, t, m)) = self.queue.pop_front() {
+            if t == to {
+                out.push((f, m));
+            } else {
+                rest.push_back((f, t, m));
+            }
+        }
+        self.queue = rest;
+        out
+    }
+
+    /// Pop exactly one message for `to`, if any.
+    pub fn recv_one(&mut self, to: Addr) -> Option<(Addr, Vec<u8>)> {
+        let pos = self.queue.iter().position(|(_, t, _)| *t == to)?;
+        let (f, _, m) = self.queue.remove(pos).unwrap();
+        Some((f, m))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Bytes sent by a node in a phase.
+    pub fn sent_bytes(&self, node: Addr, phase: Phase) -> u64 {
+        self.traffic[phase_idx(phase)][self.node_idx(node)].sent
+    }
+
+    pub fn received_bytes(&self, node: Addr, phase: Phase) -> u64 {
+        self.traffic[phase_idx(phase)][self.node_idx(node)].received
+    }
+
+    /// Total transmission (sent + received) — the paper's Table 2 metric.
+    pub fn transmission_bytes(&self, node: Addr, phase: Phase) -> u64 {
+        self.sent_bytes(node, phase) + self.received_bytes(node, phase)
+    }
+
+    /// Number of client nodes (excluding the aggregator).
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    pub fn reset_counters(&mut self) {
+        for p in self.traffic.iter_mut() {
+            for t in p.iter_mut() {
+                *t = Traffic::default();
+            }
+        }
+        self.messages = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_and_deliver() {
+        let mut net = Network::new(2);
+        net.send(Addr::Client(0), Addr::Aggregator, vec![1, 2, 3]);
+        net.send(Addr::Client(1), Addr::Aggregator, vec![4]);
+        net.send(Addr::Aggregator, Addr::Client(0), vec![5, 6]);
+        let msgs = net.deliver(Addr::Aggregator);
+        assert_eq!(msgs.len(), 2);
+        assert_eq!(msgs[0], (Addr::Client(0), vec![1, 2, 3]));
+        assert_eq!(net.pending(), 1);
+        let m = net.recv_one(Addr::Client(0)).unwrap();
+        assert_eq!(m.1, vec![5, 6]);
+        assert_eq!(net.pending(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_per_phase() {
+        let mut net = Network::new(1);
+        net.phase = Phase::Setup;
+        net.send(Addr::Client(0), Addr::Aggregator, vec![0; 10]);
+        net.phase = Phase::Training;
+        net.send(Addr::Client(0), Addr::Aggregator, vec![0; 100]);
+        net.send(Addr::Aggregator, Addr::Client(0), vec![0; 7]);
+        assert_eq!(net.sent_bytes(Addr::Client(0), Phase::Setup), 10);
+        assert_eq!(net.sent_bytes(Addr::Client(0), Phase::Training), 100);
+        assert_eq!(net.received_bytes(Addr::Client(0), Phase::Training), 7);
+        assert_eq!(net.transmission_bytes(Addr::Client(0), Phase::Training), 107);
+        assert_eq!(net.sent_bytes(Addr::Aggregator, Phase::Training), 7);
+        assert_eq!(net.transmission_bytes(Addr::Client(0), Phase::Testing), 0);
+    }
+
+    #[test]
+    fn fifo_order_per_destination() {
+        let mut net = Network::new(1);
+        for i in 0..5u8 {
+            net.send(Addr::Aggregator, Addr::Client(0), vec![i]);
+        }
+        let msgs = net.deliver(Addr::Client(0));
+        let seq: Vec<u8> = msgs.iter().map(|(_, m)| m[0]).collect();
+        assert_eq!(seq, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reset() {
+        let mut net = Network::new(1);
+        net.send(Addr::Aggregator, Addr::Client(0), vec![0; 9]);
+        net.reset_counters();
+        assert_eq!(net.transmission_bytes(Addr::Client(0), Phase::Setup), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_client() {
+        let mut net = Network::new(1);
+        net.send(Addr::Client(5), Addr::Aggregator, vec![]);
+    }
+}

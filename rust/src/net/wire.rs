@@ -1,0 +1,197 @@
+//! Minimal binary wire format (no external serde in this sandbox).
+//!
+//! Little-endian, length-prefixed. Every protocol message in
+//! [`crate::coordinator::messages`] encodes through these primitives,
+//! and the transport's byte counters (Table 2) meter exactly these
+//! bytes.
+
+use anyhow::{bail, Result};
+
+/// Append-only encoder.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn fixed<const N: usize>(&mut self, v: &[u8; N]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn u64s(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor-based decoder.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("wire: truncated message (want {n} at {}, len {})", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn fixed<const N: usize>(&mut self) -> Result<[u8; N]> {
+        Ok(self.take(N)?.try_into().unwrap())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u16(300);
+        w.u32(70_000);
+        w.u64(1 << 40);
+        w.f32(-1.5);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn vectors_roundtrip() {
+        let mut w = Writer::new();
+        w.bytes(b"hello");
+        w.f32s(&[1.0, -2.0, 3.5]);
+        w.u64s(&[u64::MAX, 0, 42]);
+        w.fixed(&[9u8; 32]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.bytes().unwrap(), b"hello");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, -2.0, 3.5]);
+        assert_eq!(r.u64s().unwrap(), vec![u64::MAX, 0, 42]);
+        assert_eq!(r.fixed::<32>().unwrap(), [9u8; 32]);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut w = Writer::new();
+        w.u64s(&[1, 2, 3]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf[..buf.len() - 1]);
+        assert!(r.u64s().is_err());
+        let mut r2 = Reader::new(&[]);
+        assert!(r2.u32().is_err());
+    }
+
+    #[test]
+    fn sizes_are_tight() {
+        let mut w = Writer::new();
+        w.f32s(&[0.0; 100]);
+        assert_eq!(w.finish().len(), 4 + 400);
+        let mut w = Writer::new();
+        w.u64s(&[0; 100]);
+        assert_eq!(w.finish().len(), 4 + 800);
+    }
+}

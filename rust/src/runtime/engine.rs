@@ -1,0 +1,251 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the coordinator's hot path.
+//!
+//! `make artifacts` (Python, build-time only) lowers the L2 graphs to
+//! `artifacts/<dataset>_<graph>.hlo.txt`; this engine parses the text
+//! with `HloModuleProto::from_text_file`, compiles each module once on
+//! a PJRT CPU client, and serves `execute` calls with zero Python
+//! involvement.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+
+/// The fixed batch size the artifacts are lowered with (== aot.py BATCH).
+pub const ARTIFACT_BATCH: usize = 256;
+
+/// A named, compiled executable set for one dataset.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub dataset: String,
+    pub batch: usize,
+}
+
+/// The artifact keys every dataset provides.
+pub fn artifact_keys(n_groups: usize) -> Vec<String> {
+    let mut keys = vec!["fwd_active".to_string(), "bwd_active".to_string()];
+    for g in 0..n_groups {
+        keys.push(format!("fwd_g{g}"));
+        keys.push(format!("bwd_g{g}"));
+    }
+    keys.push("global_step".to_string());
+    keys.push("predict".to_string());
+    keys
+}
+
+impl Engine {
+    /// Load and compile all artifacts for `cfg.dataset` from `dir`.
+    pub fn load(dir: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Engine> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut execs = HashMap::new();
+        for key in artifact_keys(cfg.group_dims.len()) {
+            let path: PathBuf = dir.join(format!("{}_{}.hlo.txt", cfg.dataset, key));
+            if !path.exists() {
+                bail!(
+                    "artifact {} missing — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {}", path.display()))?;
+            execs.insert(key, exe);
+        }
+        Ok(Engine { client, execs, dataset: cfg.dataset.clone(), batch: ARTIFACT_BATCH })
+    }
+
+    /// Whether a graph is available.
+    pub fn has(&self, key: &str) -> bool {
+        self.execs.contains_key(key)
+    }
+
+    pub fn keys(&self) -> Vec<&str> {
+        self.execs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a graph. `inputs` are (flat f32 data, dims) pairs in the
+    /// graph's parameter order; returns the flattened tuple outputs.
+    pub fn execute(&self, key: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.execs.get(key).with_context(|| format!("unknown graph {key}"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let n: i64 = dims.iter().product();
+                assert_eq!(n as usize, data.len(), "shape/data mismatch for {key}");
+                xla::Literal::vec1(data).reshape(dims).map_err(anyhow::Error::from)
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // graphs are lowered with return_tuple=True
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DetRng;
+    use crate::model::linalg::Mat;
+    use crate::model::params::ModelParams;
+    use crate::model::reference;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("banking_global_step.hlo.txt").exists()
+    }
+
+    fn rand_vec(n: usize, rng: &mut DetRng) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f64() as f32 - 0.5).collect()
+    }
+
+    #[test]
+    fn load_all_datasets() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        for ds in ["banking", "adult", "taobao"] {
+            let cfg = ModelConfig::for_dataset(ds).unwrap();
+            let e = Engine::load(artifacts_dir(), &cfg).unwrap();
+            assert_eq!(e.keys().len(), 8, "{ds}");
+            assert!(e.has("global_step"));
+        }
+    }
+
+    #[test]
+    fn fwd_active_matches_reference() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let e = Engine::load(artifacts_dir(), &cfg).unwrap();
+        let (b, d, h) = (ARTIFACT_BATCH, cfg.active_dim, cfg.hidden);
+        let mut rng = DetRng::from_seed(1);
+        let x = rand_vec(b * d, &mut rng);
+        let w = rand_vec(d * h, &mut rng);
+        let bias = rand_vec(h, &mut rng);
+        let mask = vec![0.0f32; b * h];
+        let out = e
+            .execute(
+                "fwd_active",
+                &[
+                    (&x, &[b as i64, d as i64]),
+                    (&w, &[d as i64, h as i64]),
+                    (&bias, &[h as i64]),
+                    (&mask, &[b as i64, h as i64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        // reference
+        let xm = Mat::from_vec(b, d, x);
+        let wm = Mat::from_vec(d, h, w);
+        let pp = crate::model::PartyParams { w: wm, b: Some(bias) };
+        let want = reference::party_forward(&xm, &pp);
+        for (g, w) in out[0].iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-3, "pjrt={g} ref={w}");
+        }
+    }
+
+    #[test]
+    fn global_step_matches_reference() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let e = Engine::load(artifacts_dir(), &cfg).unwrap();
+        let (b, h) = (ARTIFACT_BATCH, cfg.hidden);
+        let mut rng = DetRng::from_seed(2);
+        let z = rand_vec(b * h, &mut rng);
+        let wg = rand_vec(h, &mut rng);
+        let bg = vec![0.125f32];
+        let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+        let out = e
+            .execute(
+                "global_step",
+                &[
+                    (&z, &[b as i64, h as i64]),
+                    (&wg, &[h as i64, 1]),
+                    (&bg, &[1]),
+                    (&y, &[b as i64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 5, "loss, probs, dz, dwg, dbg");
+        // reference comparison
+        let params = {
+            let mut p = ModelParams::init(&cfg, 3);
+            p.global.w = Mat::from_vec(h, 1, wg.clone());
+            p.global.b = bg[0];
+            p
+        };
+        let zm = Mat::from_vec(b, h, z);
+        let fwd = reference::global_forward(&params, &zm, &y);
+        let bwd = reference::global_backward(&params, &zm, &fwd, &y);
+        assert!((out[0][0] - fwd.loss).abs() < 1e-4, "loss {} vs {}", out[0][0], fwd.loss);
+        for (g, w) in out[1].iter().zip(&fwd.probs.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+        for (g, w) in out[2].iter().zip(&bwd.dz.data) {
+            assert!((g - w).abs() < 1e-5);
+        }
+        for (g, w) in out[3].iter().zip(&bwd.d_global_w.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+        assert!((out[4][0] - bwd.d_global_b).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bwd_group_matches_reference() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = ModelConfig::for_dataset("adult").unwrap();
+        let e = Engine::load(artifacts_dir(), &cfg).unwrap();
+        let (b, d, h) = (ARTIFACT_BATCH, cfg.group_dims[0], cfg.hidden);
+        let mut rng = DetRng::from_seed(3);
+        let x = rand_vec(b * d, &mut rng);
+        let dz = rand_vec(b * h, &mut rng);
+        let mask = vec![0.0f32; d * h];
+        let out = e
+            .execute(
+                "bwd_g0",
+                &[
+                    (&x, &[b as i64, d as i64]),
+                    (&dz, &[b as i64, h as i64]),
+                    (&mask, &[d as i64, h as i64]),
+                ],
+            )
+            .unwrap();
+        let xm = Mat::from_vec(b, d, x);
+        let dzm = Mat::from_vec(b, h, dz);
+        let (want, _) = reference::party_backward(&xm, &dzm, false);
+        for (g, w) in out[0].iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn unknown_graph_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = ModelConfig::for_dataset("banking").unwrap();
+        let e = Engine::load(artifacts_dir(), &cfg).unwrap();
+        assert!(e.execute("nope", &[]).is_err());
+    }
+}

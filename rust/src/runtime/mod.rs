@@ -1,0 +1,6 @@
+//! PJRT runtime layer: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+
+pub mod engine;
+
+pub use engine::{artifact_keys, Engine, ARTIFACT_BATCH};

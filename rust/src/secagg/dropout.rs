@@ -1,0 +1,203 @@
+//! Dropout recovery for secure aggregation (Bonawitz et al. 2017).
+//!
+//! The base protocol of the paper assumes all parties stay online for a
+//! round: if one drops after peers have already added pairwise masks
+//! against it, the aggregate no longer cancels. The classic fix, which
+//! the paper cites as its security foundation, is to have each client
+//! Shamir-share its per-peer DH secret keys among all clients at setup;
+//! if client d drops mid-round, any t surviving clients hand the
+//! aggregator their shares, the aggregator reconstructs d's key,
+//! re-derives the pairwise secrets and subtracts d's missing mask
+//! contributions.
+//!
+//! This module implements that extension end-to-end on top of
+//! [`ClientSession`](super::session::ClientSession) + [`shamir`].
+
+use crate::crypto::rng::DetRng;
+use crate::crypto::shamir::{self, Share};
+use crate::crypto::{hkdf, prg};
+
+use super::session::{ClientSession, PublishedKeys};
+
+/// Shares of one client's session seed, one bundle per recipient peer.
+pub struct SeedShares {
+    pub owner: usize,
+    /// `bundles[j]` is the share vector entrusted to client j.
+    pub bundles: Vec<Vec<Share>>,
+}
+
+/// A client session extended with dropout-recovery material.
+pub struct RobustClientSession {
+    pub inner: ClientSession,
+    /// The seed from which this client's per-peer secret keys derive.
+    seed: [u8; 32],
+    /// Shares received from every peer (`held[i]` = shares of client i's seed).
+    held: Vec<Option<Vec<Share>>>,
+    threshold: usize,
+}
+
+impl RobustClientSession {
+    /// Create a session whose per-peer keys derive deterministically
+    /// from a single 32-byte seed (so sharing the seed shares the keys).
+    pub fn new(id: usize, n: usize, epoch: u64, threshold: usize, rng: &mut DetRng) -> Self {
+        let mut seed = [0u8; 32];
+        rng.fill(&mut seed);
+        let mut seeded = DetRng::new(seed);
+        let inner = ClientSession::new(id, n, epoch, &mut seeded);
+        RobustClientSession { inner, seed, held: vec![None; n], threshold }
+    }
+
+    /// Shamir-share our seed for distribution (t-of-n).
+    pub fn share_seed(&self, rng: &mut DetRng) -> SeedShares {
+        let n = self.inner.n_clients;
+        let mut fill = {
+            let r = rng.clone();
+            r.as_fill_fn()
+        };
+        // advance caller rng state equivalently
+        let mut skip = vec![0u8; 64];
+        rng.fill(&mut skip);
+        let bundles = shamir::split_bytes(&self.seed, self.threshold, n, &mut fill);
+        SeedShares { owner: self.inner.id, bundles }
+    }
+
+    /// Store the share bundle entrusted to us by peer `owner`.
+    pub fn receive_share(&mut self, owner: usize, bundle: Vec<Share>) {
+        self.held[owner] = Some(bundle);
+    }
+
+    /// Surrender our share of a dropped peer's seed.
+    pub fn surrender_share(&self, dropped: usize) -> Option<&Vec<Share>> {
+        self.held[dropped].as_ref()
+    }
+}
+
+/// Aggregator-side recovery: reconstruct the dropped client's seed from
+/// ≥ t shares, rebuild its session, and compute the total mask it would
+/// have added for (round, tag, len) so it can be subtracted.
+pub fn recover_dropped_mask(
+    dropped: usize,
+    n: usize,
+    epoch: u64,
+    shares: &[Vec<Share>],
+    all_keys: &[PublishedKeys],
+    round: u64,
+    tensor_tag: u32,
+    len: usize,
+) -> Vec<u64> {
+    let seed_bytes = shamir::reconstruct_bytes(shares, 32);
+    let seed: [u8; 32] = seed_bytes.try_into().expect("32-byte seed");
+    let mut seeded = DetRng::new(seed);
+    let mut session = ClientSession::new(dropped, n, epoch, &mut seeded);
+    session.derive_secrets(all_keys);
+    let secrets: Vec<(usize, [u8; 32])> = (0..n)
+        .filter(|&j| j != dropped)
+        .map(|j| (j, *session.shared_secret(j)))
+        .collect();
+    prg::total_mask(&secrets, dropped, round ^ (epoch << 32), tensor_tag, len)
+}
+
+/// Convenience wrapper used in docs/tests: derive a deterministic
+/// "commitment" to a seed (what a verifying aggregator would pin).
+pub fn seed_commitment(seed: &[u8; 32]) -> [u8; 32] {
+    hkdf::derive_key32(b"vfl-sa/seed-commit/v1", seed, b"commit")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::secagg::fixedpoint::FixedPoint;
+
+    /// Full dropout scenario: n clients mask tensors, one drops after
+    /// masking was committed by peers; t survivors reconstruct and the
+    /// aggregator subtracts the missing masks.
+    #[test]
+    fn dropout_recovery_end_to_end() {
+        let n = 5;
+        let t = 3;
+        let dropped = 2usize;
+        let epoch = 0u64;
+        let round = 4u64;
+        let tag = 9u32;
+        let len = 32usize;
+        let mut rng = DetRng::from_seed(42);
+
+        let mut clients: Vec<RobustClientSession> =
+            (0..n).map(|i| RobustClientSession::new(i, n, epoch, t, &mut rng)).collect();
+
+        // setup: exchange public keys
+        let keys: Vec<PublishedKeys> = clients.iter().map(|c| c.inner.published_keys()).collect();
+        for c in clients.iter_mut() {
+            c.inner.derive_secrets(&keys);
+        }
+        // setup: distribute seed shares
+        let all_shares: Vec<SeedShares> = clients.iter().map(|c| c.share_seed(&mut rng)).collect();
+        for s in &all_shares {
+            for (j, bundle) in s.bundles.iter().enumerate() {
+                clients[j].receive_share(s.owner, bundle.clone());
+            }
+        }
+
+        // round: every client except `dropped` sends its masked tensor
+        let tensors: Vec<Vec<f32>> = (0..n).map(|i| vec![(i + 1) as f32; len]).collect();
+        let masked: Vec<Vec<u64>> = (0..n)
+            .filter(|&i| i != dropped)
+            .map(|i| clients[i].inner.mask_tensor(&tensors[i], round, tag))
+            .collect();
+
+        // aggregate the survivors: garbage (dropped's pairwise masks dangle)
+        let fp = FixedPoint::default();
+        let mut acc = vec![0u64; len];
+        for m in &masked {
+            for (a, v) in acc.iter_mut().zip(m) {
+                *a = a.wrapping_add(*v);
+            }
+        }
+        let garbage = fp.decode_vec(&acc);
+        let want_sum: f32 = (0..n).filter(|&i| i != dropped).map(|i| (i + 1) as f32).sum();
+        assert!((garbage[0] - want_sum).abs() > 1.0, "sum should be masked before recovery");
+
+        // recovery: t survivors surrender their share of dropped's seed
+        let surrendered: Vec<Vec<Share>> = (0..n)
+            .filter(|&i| i != dropped)
+            .take(t)
+            .map(|i| clients[i].surrender_share(dropped).unwrap().clone())
+            .collect();
+        let missing =
+            recover_dropped_mask(dropped, n, epoch, &surrendered, &keys, round, tag, len);
+
+        // subtract the dropped client's would-be mask: sum now decodes
+        for (a, m) in acc.iter_mut().zip(&missing) {
+            *a = a.wrapping_add(*m); // peers added ±PRG *against* dropped;
+                                     // dropped's own total mask is the exact
+                                     // negation of those danglers
+        }
+        let fixed = fp.decode_vec(&acc);
+        for v in &fixed {
+            assert!((v - want_sum).abs() < 1e-3, "recovered {v} want {want_sum}");
+        }
+    }
+
+    #[test]
+    fn recovery_needs_threshold_shares() {
+        let n = 4;
+        let t = 3;
+        let mut rng = DetRng::from_seed(7);
+        let client = RobustClientSession::new(0, n, 0, t, &mut rng);
+        let shares = client.share_seed(&mut rng);
+        // t-1 shares reconstruct the wrong seed (whp)
+        let partial = &shares.bundles[..t - 1];
+        let rec = shamir::reconstruct_bytes(partial, 32);
+        assert_ne!(rec.as_slice(), client.seed.as_slice());
+        // t shares reconstruct exactly
+        let full = &shares.bundles[..t];
+        let rec = shamir::reconstruct_bytes(full, 32);
+        assert_eq!(rec.as_slice(), client.seed.as_slice());
+    }
+
+    #[test]
+    fn commitments_bind_seeds() {
+        assert_ne!(seed_commitment(&[1u8; 32]), seed_commitment(&[2u8; 32]));
+        assert_eq!(seed_commitment(&[3u8; 32]), seed_commitment(&[3u8; 32]));
+    }
+}

@@ -1,0 +1,16 @@
+//! Secure-aggregation core (§4 of the paper).
+//!
+//! * [`fixedpoint`] — the f32 ⇄ ℤ₂⁶⁴ codec that makes pairwise masks
+//!   cancel exactly.
+//! * [`session`] — the setup phase (per-peer X25519 keypairs, pairwise
+//!   secret derivation, key rotation epochs) and per-round tensor
+//!   masking (Eq. 2–6).
+//! * [`dropout`] — the Bonawitz'17 Shamir-based dropout recovery
+//!   extension (§5.1's robustness discussion).
+
+pub mod dropout;
+pub mod fixedpoint;
+pub mod session;
+
+pub use fixedpoint::FixedPoint;
+pub use session::{aggregate, setup_all, ClientSession, PublishedKeys};

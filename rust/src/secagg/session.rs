@@ -1,0 +1,280 @@
+//! A secure-aggregation session: the paper's setup phase (§4.0.1) plus
+//! the per-round masking machinery used by the training phase (§4.0.2).
+//!
+//! A session binds a set of clients. Each client generates one X25519
+//! keypair *per peer* (exactly as §4.0.1 describes), public keys are
+//! relayed through the aggregator, and every ordered pair (i, j)
+//! derives `ss_ij = ss_ji`. From that shared secret we derive, with
+//! domain separation: the pairwise AEAD key (sample-ID encryption) and
+//! the pairwise mask-PRG seed. Key rotation (§5.1) is re-running this
+//! setup every K rounds; the session tracks its `epoch` so rotated
+//! sessions produce fresh, unrelated masks.
+
+use crate::crypto::hkdf;
+use crate::crypto::prg;
+use crate::crypto::rng::DetRng;
+use crate::crypto::x25519::{PublicKey, SecretKey};
+
+use super::fixedpoint::FixedPoint;
+
+/// Per-client state for one secure-aggregation epoch.
+pub struct ClientSession {
+    pub id: usize,
+    pub n_clients: usize,
+    pub epoch: u64,
+    /// One secret key per peer (index: peer id). `None` at our own slot.
+    secret_keys: Vec<Option<SecretKey>>,
+    /// Derived pairwise shared secrets (raw X25519 output run through
+    /// HKDF-extract). `None` at our own slot until setup completes.
+    shared: Vec<Option<[u8; 32]>>,
+    pub fp: FixedPoint,
+}
+
+/// The public keys a client publishes: element j is the key intended
+/// for peer j (`pk_i^{(j)}` in the paper).
+#[derive(Clone)]
+pub struct PublishedKeys {
+    pub from: usize,
+    pub keys: Vec<Option<PublicKey>>,
+}
+
+impl ClientSession {
+    /// Phase 1: generate one keypair per peer.
+    pub fn new(id: usize, n_clients: usize, epoch: u64, rng: &mut DetRng) -> Self {
+        assert!(id < n_clients);
+        let mut secret_keys = Vec::with_capacity(n_clients);
+        for j in 0..n_clients {
+            if j == id {
+                secret_keys.push(None);
+            } else {
+                let mut seed = [0u8; 32];
+                rng.fill(&mut seed);
+                secret_keys.push(Some(SecretKey::from_bytes(seed)));
+            }
+        }
+        ClientSession {
+            id,
+            n_clients,
+            epoch,
+            secret_keys,
+            shared: vec![None; n_clients],
+            fp: FixedPoint::default(),
+        }
+    }
+
+    /// Public keys to upload to the aggregator.
+    pub fn published_keys(&self) -> PublishedKeys {
+        PublishedKeys {
+            from: self.id,
+            keys: self.secret_keys.iter().map(|sk| sk.as_ref().map(|s| s.public_key())).collect(),
+        }
+    }
+
+    /// Phase 2: after the aggregator relays everyone's published keys,
+    /// derive the pairwise shared secrets. `all_keys[i]` is client i's
+    /// `PublishedKeys`.
+    pub fn derive_secrets(&mut self, all_keys: &[PublishedKeys]) {
+        assert_eq!(all_keys.len(), self.n_clients);
+        for j in 0..self.n_clients {
+            if j == self.id {
+                continue;
+            }
+            // peer j published pk_j^{(id)} for us; we use sk_id^{(j)}
+            let peer_pk = all_keys[j].keys[self.id].expect("peer key for us");
+            let my_sk = self.secret_keys[j].as_ref().expect("our key for peer");
+            let raw = my_sk.diffie_hellman(&peer_pk);
+            // bind the epoch so rotated sessions derive fresh secrets
+            let mut info = Vec::with_capacity(16);
+            info.extend_from_slice(b"ss");
+            info.extend_from_slice(&self.epoch.to_le_bytes());
+            self.shared[j] = Some(hkdf::derive_key32(b"vfl-sa/setup/v1", &raw, &info));
+        }
+    }
+
+    /// The pairwise shared secret with peer `j` (post-setup).
+    pub fn shared_secret(&self, j: usize) -> &[u8; 32] {
+        self.shared[j].as_ref().expect("setup incomplete")
+    }
+
+    /// AEAD key for the (self, j) channel, independent of direction.
+    pub fn channel_key(&self, j: usize) -> [u8; 32] {
+        hkdf::derive_key32(b"vfl-sa/channel/v1", self.shared_secret(j), b"aead")
+    }
+
+    /// Mask and fixed-point-encode a float tensor for a round
+    /// (Eq. 2 / Eq. 6): returns the ℤ₂⁶⁴ words to send.
+    pub fn mask_tensor(&self, values: &[f32], round: u64, tensor_tag: u32) -> Vec<u64> {
+        let mut words = self.fp.encode_vec(values);
+        let secrets: Vec<(usize, [u8; 32])> = (0..self.n_clients)
+            .filter(|&j| j != self.id)
+            .map(|j| (j, *self.shared_secret(j)))
+            .collect();
+        let mask = prg::total_mask(&secrets, self.id, round ^ (self.epoch << 32), tensor_tag, words.len());
+        for (w, m) in words.iter_mut().zip(mask.iter()) {
+            *w = w.wrapping_add(*m);
+        }
+        words
+    }
+
+    /// Float-domain masking (SecurityMode::SecureFloat): pairwise ±f32
+    /// masks added directly to the values. Payload stays 4 B/element
+    /// (size parity with unsecured VFL); cancellation is exact up to
+    /// float addition order (≤ a few ulps of the mask magnitude).
+    pub fn mask_tensor_f32(&self, values: &[f32], round: u64, tensor_tag: u32) -> Vec<f32> {
+        let mut out = values.to_vec();
+        for j in 0..self.n_clients {
+            if j == self.id {
+                continue;
+            }
+            let words = prg::mask_words(
+                self.shared_secret(j),
+                round ^ (self.epoch << 32),
+                tensor_tag,
+                values.len(),
+            );
+            let sign = if j > self.id { 1.0f32 } else { -1.0f32 };
+            for (v, w) in out.iter_mut().zip(words.iter()) {
+                // uniform in [-8, 8)
+                let m = ((*w as f64 / 2f64.powi(64)) * 16.0 - 8.0) as f32;
+                *v += sign * m;
+            }
+        }
+        out
+    }
+
+    /// Pairwise mask contribution for a single dropped peer (used by
+    /// dropout recovery to subtract a missing client's masks).
+    pub fn pairwise_mask_with(&self, peer: usize, round: u64, tensor_tag: u32, len: usize) -> Vec<u64> {
+        prg::pairwise_mask(
+            self.shared_secret(peer),
+            self.id,
+            peer,
+            round ^ (self.epoch << 32),
+            tensor_tag,
+            len,
+        )
+    }
+}
+
+/// Aggregator-side combine: wrap-add all masked vectors and decode.
+/// With every client present the masks telescope to zero (Eq. 4-5).
+pub fn aggregate(fp: &FixedPoint, masked: &[Vec<u64>]) -> Vec<f32> {
+    assert!(!masked.is_empty());
+    let len = masked[0].len();
+    let mut acc = vec![0u64; len];
+    for m in masked {
+        assert_eq!(m.len(), len, "masked vectors must be equal length");
+        for (a, v) in acc.iter_mut().zip(m.iter()) {
+            *a = a.wrapping_add(*v);
+        }
+    }
+    fp.decode_vec(&acc)
+}
+
+/// Run the full setup phase for n clients in-process (used by tests,
+/// examples and the simulated coordinator).
+pub fn setup_all(n: usize, epoch: u64, rng: &mut DetRng) -> Vec<ClientSession> {
+    let mut sessions: Vec<ClientSession> =
+        (0..n).map(|i| ClientSession::new(i, n, epoch, rng)).collect();
+    let keys: Vec<PublishedKeys> = sessions.iter().map(|s| s.published_keys()).collect();
+    for s in sessions.iter_mut() {
+        s.derive_secrets(&keys);
+    }
+    sessions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_secrets_symmetric() {
+        let mut rng = DetRng::from_seed(1);
+        let sessions = setup_all(4, 0, &mut rng);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    assert_eq!(
+                        sessions[i].shared_secret(j),
+                        sessions[j].shared_secret(i),
+                        "ss_{i}{j} != ss_{j}{i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn secrets_distinct_across_pairs_and_epochs() {
+        let mut rng = DetRng::from_seed(2);
+        let s0 = setup_all(3, 0, &mut rng);
+        assert_ne!(s0[0].shared_secret(1), s0[0].shared_secret(2));
+        let mut rng2 = DetRng::from_seed(2); // same entropy!
+        let s1 = setup_all(3, 1, &mut rng2);
+        // same DH output, different epoch → different derived secret
+        assert_ne!(s0[0].shared_secret(1), s1[0].shared_secret(1));
+    }
+
+    #[test]
+    fn masked_aggregation_matches_plain_sum() {
+        let mut rng = DetRng::from_seed(3);
+        let n = 5;
+        let len = 64;
+        let sessions = setup_all(n, 0, &mut rng);
+        let tensors: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..len).map(|j| ((i * len + j) as f32) * 0.125 - 20.0).collect())
+            .collect();
+        let masked: Vec<Vec<u64>> =
+            sessions.iter().zip(&tensors).map(|(s, t)| s.mask_tensor(t, 7, 1)).collect();
+        let got = aggregate(&FixedPoint::default(), &masked);
+        for j in 0..len {
+            let want: f32 = tensors.iter().map(|t| t[j]).sum();
+            assert!((got[j] - want).abs() < 1e-4, "j={j} got={} want={want}", got[j]);
+        }
+    }
+
+    #[test]
+    fn single_masked_vector_is_garbage() {
+        // one masked tensor alone decodes to noise, not the plaintext
+        let mut rng = DetRng::from_seed(4);
+        let sessions = setup_all(3, 0, &mut rng);
+        let t = vec![1.0f32; 16];
+        let masked = sessions[0].mask_tensor(&t, 0, 0);
+        let decoded = FixedPoint::default().decode_vec(&masked);
+        let close = decoded.iter().filter(|&&v| (v - 1.0).abs() < 1.0).count();
+        assert!(close <= 1, "masked vector leaks plaintext: {decoded:?}");
+    }
+
+    #[test]
+    fn masks_fresh_per_round() {
+        let mut rng = DetRng::from_seed(5);
+        let sessions = setup_all(2, 0, &mut rng);
+        let t = vec![0.0f32; 8];
+        assert_ne!(sessions[0].mask_tensor(&t, 1, 0), sessions[0].mask_tensor(&t, 2, 0));
+    }
+
+    #[test]
+    fn channel_keys_symmetric_and_domain_separated() {
+        let mut rng = DetRng::from_seed(6);
+        let sessions = setup_all(3, 0, &mut rng);
+        assert_eq!(sessions[0].channel_key(1), sessions[1].channel_key(0));
+        assert_ne!(sessions[0].channel_key(1), *sessions[0].shared_secret(1));
+    }
+
+    #[test]
+    fn aggregation_with_two_to_sixteen_parties() {
+        for n in [2usize, 3, 8, 16] {
+            let mut rng = DetRng::from_seed(100 + n as u64);
+            let sessions = setup_all(n, 0, &mut rng);
+            let tensors: Vec<Vec<f32>> =
+                (0..n).map(|i| vec![i as f32 + 0.5; 4]).collect();
+            let masked: Vec<Vec<u64>> =
+                sessions.iter().zip(&tensors).map(|(s, t)| s.mask_tensor(t, 0, 0)).collect();
+            let got = aggregate(&FixedPoint::default(), &masked);
+            let want: f32 = (0..n).map(|i| i as f32 + 0.5).sum();
+            for v in got {
+                assert!((v - want).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+}

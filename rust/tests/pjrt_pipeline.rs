@@ -1,0 +1,99 @@
+//! Full-stack integration: the secure protocol running on the AOT
+//! PJRT artifacts (L1 Pallas kernel → L2 JAX graphs → L3 coordinator).
+//!
+//! These tests require `make artifacts`; they skip gracefully when the
+//! artifacts are absent so `cargo test` works on a fresh checkout.
+
+use std::path::PathBuf;
+
+use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+use vfl::model::ModelConfig;
+use vfl::runtime::Engine;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("banking_global_step.hlo.txt").exists()
+}
+
+fn cfg(dataset: &str, mode: SecurityMode, backend: BackendKind) -> RunConfig {
+    let mut c = RunConfig::test(dataset).unwrap();
+    c.security = mode;
+    c.backend = backend;
+    c.train_rounds = 5;
+    c.test_rounds = 1;
+    c
+}
+
+#[test]
+fn pjrt_secure_run_matches_reference_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = ModelConfig::for_dataset("banking").unwrap();
+    let engine = Engine::load(artifacts_dir(), &model).unwrap();
+
+    let pjrt = run_experiment(
+        cfg("banking", SecurityMode::SecureExact, BackendKind::Pjrt),
+        Some(&engine),
+    )
+    .unwrap();
+    let refr =
+        run_experiment(cfg("banking", SecurityMode::SecureExact, BackendKind::Reference), None)
+            .unwrap();
+
+    assert_eq!(pjrt.losses.len(), refr.losses.len());
+    for (i, (a, b)) in pjrt.losses.iter().zip(&refr.losses).enumerate() {
+        assert!((a - b).abs() < 1e-2, "round {i}: pjrt {a} vs reference {b}");
+    }
+    let fa = pjrt.final_params.flatten();
+    let fb = refr.final_params.flatten();
+    let max_diff = fa.iter().zip(&fb).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-2, "max param diff {max_diff}");
+}
+
+#[test]
+fn pjrt_secure_equals_pjrt_plain() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = ModelConfig::for_dataset("banking").unwrap();
+    let engine = Engine::load(artifacts_dir(), &model).unwrap();
+    let secure = run_experiment(
+        cfg("banking", SecurityMode::SecureExact, BackendKind::Pjrt),
+        Some(&engine),
+    )
+    .unwrap();
+    let plain =
+        run_experiment(cfg("banking", SecurityMode::Plain, BackendKind::Pjrt), Some(&engine))
+            .unwrap();
+    for (s, p) in secure.losses.iter().zip(&plain.losses) {
+        assert!((s - p).abs() < 1e-3, "secure {s} vs plain {p}");
+    }
+    for (s, p) in secure.predictions.iter().zip(&plain.predictions) {
+        assert!((s - p).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn pjrt_all_three_datasets_train() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for ds in ["banking", "adult", "taobao"] {
+        let model = ModelConfig::for_dataset(ds).unwrap();
+        let engine = Engine::load(artifacts_dir(), &model).unwrap();
+        let r = run_experiment(
+            cfg(ds, SecurityMode::SecureExact, BackendKind::Pjrt),
+            Some(&engine),
+        )
+        .unwrap();
+        assert_eq!(r.losses.len(), 5, "{ds}");
+        assert!(r.losses.iter().all(|l| l.is_finite()), "{ds}: {:?}", r.losses);
+    }
+}

@@ -1,0 +1,282 @@
+//! Property-style tests (proptest is not vendored in this sandbox, so
+//! these are driven by the in-crate deterministic ChaCha20 RNG with
+//! many iterations — same idea, reproducible seeds).
+
+use vfl::coordinator::messages::{Msg, WireKeys};
+use vfl::coordinator::parties::GradLayout;
+use vfl::crypto::rng::DetRng;
+use vfl::crypto::{prg, shamir};
+use vfl::data::{encode, generate, partition, Feature, GroupSpec, PartitionSpec, Schema};
+use vfl::model::ModelConfig;
+use vfl::net::wire::{Reader, Writer};
+use vfl::secagg::{aggregate, setup_all, FixedPoint};
+
+const ITERS: usize = 200;
+
+/// Wire primitives: encode ∘ decode = id for arbitrary payloads.
+#[test]
+fn prop_wire_roundtrip() {
+    let mut rng = DetRng::from_seed(1);
+    for _ in 0..ITERS {
+        let nf = rng.next_range(0, 50) as usize;
+        let f32s: Vec<f32> = (0..nf).map(|_| rng.next_f64() as f32 * 1e3 - 500.0).collect();
+        let nu = rng.next_range(0, 50) as usize;
+        let u64s: Vec<u64> = (0..nu).map(|_| rng.next_u64()).collect();
+        let nb = rng.next_range(0, 100) as usize;
+        let mut bytes = vec![0u8; nb];
+        rng.fill(&mut bytes);
+
+        let mut w = Writer::new();
+        w.f32s(&f32s);
+        w.u64s(&u64s);
+        w.bytes(&bytes);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.f32s().unwrap(), f32s);
+        assert_eq!(r.u64s().unwrap(), u64s);
+        assert_eq!(r.bytes().unwrap(), bytes);
+        assert!(r.done());
+    }
+}
+
+/// Random bytes must never panic the message decoder (it may error).
+#[test]
+fn prop_msg_decode_never_panics() {
+    let mut rng = DetRng::from_seed(2);
+    for _ in 0..2000 {
+        let n = rng.next_range(0, 200) as usize;
+        let mut buf = vec![0u8; n];
+        rng.fill(&mut buf);
+        let _ = Msg::decode(&buf); // Result, not panic
+    }
+    // truncations of a valid message must also be handled
+    let m = Msg::MaskedActivation { round: 1, from: 2, words: vec![1, 2, 3, 4] };
+    let enc = m.encode();
+    for cut in 0..enc.len() {
+        let _ = Msg::decode(&enc[..cut]);
+    }
+}
+
+/// Message roundtrip with randomized contents.
+#[test]
+fn prop_msg_roundtrip_randomized() {
+    let mut rng = DetRng::from_seed(3);
+    for _ in 0..ITERS {
+        let n = rng.next_range(0, 20) as usize;
+        let words: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let m = Msg::MaskedGradient {
+            round: rng.next_u32(),
+            from: rng.next_range(0, 100) as u16,
+            words,
+        };
+        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+
+        let keys: Vec<Option<[u8; 32]>> = (0..rng.next_range(1, 6))
+            .map(|_| {
+                if rng.next_f64() < 0.3 {
+                    None
+                } else {
+                    let mut k = [0u8; 32];
+                    rng.fill(&mut k);
+                    Some(k)
+                }
+            })
+            .collect();
+        let m = Msg::PublishKeys(WireKeys { from: rng.next_range(0, 10) as u16, keys });
+        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+    }
+}
+
+/// SA invariant: for any party count, tensor length, round and tag,
+/// the masked sum equals the plain sum (within fixed-point tolerance)
+/// and every proper subset stays masked.
+#[test]
+fn prop_secagg_sum_invariant() {
+    let mut rng = DetRng::from_seed(4);
+    for it in 0..40 {
+        let n = rng.next_range(2, 9) as usize;
+        let len = rng.next_range(1, 300) as usize;
+        let round = rng.next_u64() & 0xffff;
+        let tag = rng.next_u32() & 0xff;
+        let sessions = setup_all(n, it as u64, &mut rng);
+        let tensors: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.next_f64() as f32 * 20.0 - 10.0).collect())
+            .collect();
+        let masked: Vec<Vec<u64>> =
+            sessions.iter().zip(&tensors).map(|(s, t)| s.mask_tensor(t, round, tag)).collect();
+        let got = aggregate(&FixedPoint::default(), &masked);
+        for j in 0..len {
+            let want: f32 = tensors.iter().map(|t| t[j]).sum();
+            assert!((got[j] - want).abs() < 1e-3, "n={n} len={len} j={j}");
+        }
+    }
+}
+
+/// Pairwise masks telescope for arbitrary subsets of pairs (Eq. 4 on
+/// the full set; any single pair i<j cancels on its own).
+#[test]
+fn prop_pairwise_mask_cancellation() {
+    let mut rng = DetRng::from_seed(5);
+    for _ in 0..ITERS {
+        let mut ss = [0u8; 32];
+        rng.fill(&mut ss);
+        let i = rng.next_range(0, 10) as usize;
+        let j = {
+            let mut j = rng.next_range(0, 10) as usize;
+            while j == i {
+                j = rng.next_range(0, 10) as usize;
+            }
+            j
+        };
+        let len = rng.next_range(1, 64) as usize;
+        let round = rng.next_u64();
+        let a = prg::pairwise_mask(&ss, i, j, round, 0, len);
+        let b = prg::pairwise_mask(&ss, j, i, round, 0, len);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.wrapping_add(*y), 0);
+        }
+    }
+}
+
+/// Shamir: t-of-n reconstruction for random parameters and secrets,
+/// with shares permuted arbitrarily.
+#[test]
+fn prop_shamir_reconstruction() {
+    let mut rng = DetRng::from_seed(6);
+    for _ in 0..100 {
+        let n = rng.next_range(1, 10) as usize;
+        let t = rng.next_range(1, n as u64 + 1) as usize;
+        let secret = rng.next_u64() % shamir::P;
+        let mut fill = DetRng::from_seed(rng.next_u64()).as_fill_fn();
+        let mut shares = shamir::split(secret, t, n, &mut fill);
+        // shuffle
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let shuffled: Vec<shamir::Share> = order.iter().map(|&i| shares[i]).collect();
+        assert_eq!(shamir::reconstruct(&shuffled[..t]), secret, "t={t} n={n}");
+        shares.clear();
+    }
+}
+
+/// Fixed-point: encode/decode error bounded for random magnitudes, and
+/// wrap-add homomorphism holds for random pairs.
+#[test]
+fn prop_fixed_point() {
+    let fp = FixedPoint::default();
+    let mut rng = DetRng::from_seed(7);
+    for _ in 0..2000 {
+        let v = (rng.next_f64() as f32 - 0.5) * 1e6;
+        let r = fp.decode(fp.encode(v));
+        assert!((r - v).abs() <= 1.0 / fp.scale() as f32 + v.abs() * 1e-6, "{v} {r}");
+        let a = (rng.next_f64() as f32 - 0.5) * 100.0;
+        let b = (rng.next_f64() as f32 - 0.5) * 100.0;
+        let s = fp.decode(fp.encode(a).wrapping_add(fp.encode(b)));
+        assert!((s - (a + b)).abs() < 1e-4);
+    }
+}
+
+/// One-hot encoding: every subset view is an exact projection of the
+/// full encoding, for random schemas and rows.
+#[test]
+fn prop_encoding_projection() {
+    let mut rng = DetRng::from_seed(8);
+    for it in 0..50 {
+        let n_feat = rng.next_range(2, 8) as usize;
+        let features: Vec<Feature> = (0..n_feat)
+            .map(|i| {
+                if rng.next_f64() < 0.5 {
+                    Feature::cat(&format!("c{i}"), rng.next_range(2, 12) as usize)
+                } else {
+                    Feature::num(&format!("n{i}"), 0.0, 1.0 + rng.next_f64() as f32)
+                }
+            })
+            .collect();
+        let schema = Schema::new(&format!("s{it}"), features);
+        let data = generate(&schema, 5, it as u64);
+        for row in &data.rows {
+            let full = encode::encode_row(&schema, row);
+            assert_eq!(full.len(), schema.encoded_width());
+            // random subset
+            let names: Vec<&str> = schema
+                .features
+                .iter()
+                .filter(|_| rng.next_f64() < 0.6)
+                .map(|f| f.name.as_str())
+                .collect();
+            let sub = encode::encode_subset(&schema, row, &names);
+            assert_eq!(sub.len(), schema.encoded_width_of(&names));
+            // subset values appear in order within the full encoding
+            let mut fi = 0usize;
+            for v in &sub {
+                while fi < full.len() && full[fi] != *v {
+                    fi += 1;
+                }
+                assert!(fi < full.len(), "subset value {v} not found in order");
+                fi += 1;
+            }
+        }
+    }
+}
+
+/// Vertical partitioning: group coverage/disjointness for random specs.
+#[test]
+fn prop_partition_coverage() {
+    let mut rng = DetRng::from_seed(9);
+    for it in 0..20 {
+        let schema = Schema::new(
+            "p",
+            vec![
+                Feature::cat("a", 3),
+                Feature::num("b", 0.0, 1.0),
+                Feature::cat("c", 5),
+                Feature::num("d", -2.0, 2.0),
+                Feature::cat("e", 2),
+            ],
+        );
+        let rows = rng.next_range(10, 200) as usize;
+        let data = generate(&schema, rows, it as u64);
+        let spec = PartitionSpec {
+            active_features: vec!["a".into()],
+            groups: vec![
+                GroupSpec {
+                    features: vec!["b".into(), "c".into()],
+                    n_parties: rng.next_range(1, 5) as usize,
+                },
+                GroupSpec {
+                    features: vec!["d".into(), "e".into()],
+                    n_parties: rng.next_range(1, 4) as usize,
+                },
+            ],
+        };
+        let v = partition(&data, &spec);
+        for g in 0..2 {
+            let total: usize =
+                v.passives.iter().filter(|p| p.group == g).map(|p| p.rows.len()).sum();
+            assert_eq!(total, rows);
+            for &id in &data.ids {
+                assert!(v.holder_of(g, id).is_some());
+            }
+        }
+    }
+}
+
+/// GradLayout: blocks tile the full vector exactly, no gaps/overlap.
+#[test]
+fn prop_grad_layout_tiles() {
+    for ds in ["banking", "adult", "taobao"] {
+        let cfg = ModelConfig::for_dataset(ds).unwrap();
+        let l = GradLayout::new(&cfg);
+        let mut cover = vec![0u8; l.total];
+        let mut mark = |off: usize, len: usize| {
+            for c in &mut cover[off..off + len] {
+                *c += 1;
+            }
+        };
+        mark(l.active_w.0, l.active_w.1);
+        mark(l.active_b.0, l.active_b.1);
+        for &(o, n) in &l.groups {
+            mark(o, n);
+        }
+        assert!(cover.iter().all(|&c| c == 1), "{ds}: layout must tile exactly once");
+    }
+}

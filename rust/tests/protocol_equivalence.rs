@@ -1,0 +1,127 @@
+//! Integration tests for the full §4 protocol: the paper's central
+//! correctness claim is that secure aggregation does not change the
+//! training outcome ("our method does not impact training performance").
+//!
+//! We verify it literally: a secure run and an unsecured run with the
+//! same seed must produce (near-)identical losses, parameters, and
+//! predictions — differing only by the fixed-point quantization the
+//! masks ride on.
+
+use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+
+fn cfg(dataset: &str, mode: SecurityMode) -> RunConfig {
+    let mut c = RunConfig::test(dataset).unwrap();
+    c.security = mode;
+    c.backend = BackendKind::Reference;
+    c.train_rounds = 6; // crosses one key-rotation boundary (K = 5)
+    c.test_rounds = 1;
+    c
+}
+
+#[test]
+fn secure_exact_matches_plain_banking() {
+    let secure = run_experiment(cfg("banking", SecurityMode::SecureExact), None).unwrap();
+    let plain = run_experiment(cfg("banking", SecurityMode::Plain), None).unwrap();
+
+    assert_eq!(secure.losses.len(), plain.losses.len());
+    for (i, (s, p)) in secure.losses.iter().zip(&plain.losses).enumerate() {
+        assert!(
+            (s - p).abs() < 1e-3,
+            "round {i}: secure loss {s} vs plain {p} — masks must not affect training"
+        );
+    }
+    // final parameters agree to fixed-point tolerance
+    let sf = secure.final_params.flatten();
+    let pf = plain.final_params.flatten();
+    let max_diff =
+        sf.iter().zip(&pf).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "max param diff {max_diff}");
+    // predictions agree
+    for (s, p) in secure.predictions.iter().zip(&plain.predictions) {
+        assert!((s - p).abs() < 1e-3, "prediction {s} vs {p}");
+    }
+    // and training actually happened (loss went down)
+    assert!(
+        secure.losses.last().unwrap() < secure.losses.first().unwrap(),
+        "loss should decrease: {:?}",
+        secure.losses
+    );
+}
+
+#[test]
+fn secure_float_matches_plain_banking() {
+    let secure = run_experiment(cfg("banking", SecurityMode::SecureFloat), None).unwrap();
+    let plain = run_experiment(cfg("banking", SecurityMode::Plain), None).unwrap();
+    for (s, p) in secure.losses.iter().zip(&plain.losses) {
+        assert!((s - p).abs() < 1e-2, "float-mask loss {s} vs plain {p}");
+    }
+}
+
+#[test]
+fn secure_exact_matches_plain_adult() {
+    let secure = run_experiment(cfg("adult", SecurityMode::SecureExact), None).unwrap();
+    let plain = run_experiment(cfg("adult", SecurityMode::Plain), None).unwrap();
+    for (s, p) in secure.losses.iter().zip(&plain.losses) {
+        assert!((s - p).abs() < 1e-3, "secure {s} vs plain {p}");
+    }
+}
+
+#[test]
+fn key_rotation_preserves_equivalence() {
+    // rotate every round (K=1): maximal churn, same training outcome
+    let mut c = cfg("banking", SecurityMode::SecureExact);
+    c.model.rotation_period = 1;
+    let secure = run_experiment(c, None).unwrap();
+    let plain = run_experiment(cfg("banking", SecurityMode::Plain), None).unwrap();
+    for (s, p) in secure.losses.iter().zip(&plain.losses) {
+        assert!((s - p).abs() < 1e-3);
+    }
+    assert_eq!(secure.setups, 7, "initial + 6 rotations (one per round)");
+}
+
+#[test]
+fn communication_accounting_sane() {
+    use vfl::net::{Addr, Phase};
+    let secure = run_experiment(cfg("banking", SecurityMode::SecureExact), None).unwrap();
+    let plain = run_experiment(cfg("banking", SecurityMode::Plain), None).unwrap();
+
+    // every party transmitted something in both phases
+    for i in 0..5 {
+        assert!(secure.net.transmission_bytes(Addr::Client(i), Phase::Training) > 0);
+        assert!(secure.net.transmission_bytes(Addr::Client(i), Phase::Testing) > 0);
+    }
+    // secure transmits strictly more than plain (masks are 8B vs 4B,
+    // sealed IDs carry tags)
+    let st = secure.net.transmission_bytes(Addr::Client(0), Phase::Training);
+    let pt = plain.net.transmission_bytes(Addr::Client(0), Phase::Training);
+    assert!(st > pt, "secure {st} vs plain {pt}");
+    // training moves more bytes than testing (backward pass exists)
+    let tr = secure.net.transmission_bytes(Addr::Client(1), Phase::Training);
+    let te = secure.net.transmission_bytes(Addr::Client(1), Phase::Testing);
+    assert!(tr > te, "training {tr} vs testing {te}");
+    // plain mode has no setup traffic; secure does
+    assert_eq!(plain.net.transmission_bytes(Addr::Client(0), Phase::Setup), 0);
+    assert!(secure.net.transmission_bytes(Addr::Client(0), Phase::Setup) > 0);
+}
+
+#[test]
+fn cpu_metrics_populated_with_overhead() {
+    use vfl::net::Phase;
+    let secure = run_experiment(cfg("banking", SecurityMode::SecureExact), None).unwrap();
+    // active party: total > overhead > 0 in training
+    let t = secure.metrics.total_ms(1, Phase::Training); // node 1 = client 0
+    let o = secure.metrics.overhead_ms(1, Phase::Training);
+    assert!(t > 0.0 && o > 0.0 && o < t, "total {t} overhead {o}");
+    // plain run has zero overhead
+    let plain = run_experiment(cfg("banking", SecurityMode::Plain), None).unwrap();
+    assert_eq!(plain.metrics.overhead_ms(1, Phase::Training), 0.0);
+    assert!(plain.metrics.total_ms(1, Phase::Training) > 0.0);
+}
+
+#[test]
+fn taobao_runs_end_to_end() {
+    let r = run_experiment(cfg("taobao", SecurityMode::SecureExact), None).unwrap();
+    assert_eq!(r.losses.len(), 6);
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    assert!(r.test_accuracy > 0.3, "accuracy {}", r.test_accuracy);
+}

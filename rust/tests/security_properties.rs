@@ -1,0 +1,167 @@
+//! Security-property tests for the §5.1 threat model: what each party
+//! actually observes during a protocol run, and what the extensions
+//! (PKI signatures, PSI alignment, dropout recovery) guarantee.
+
+use std::collections::HashMap;
+
+use vfl::coordinator::parties::{open_id, seal_id};
+use vfl::crypto::ed25519::SigningKey;
+use vfl::crypto::psi::{run_psi, PsiGroup, PsiParty};
+use vfl::crypto::rng::DetRng;
+use vfl::secagg::{aggregate, setup_all, FixedPoint};
+
+/// Honest-but-curious aggregator: individual masked activations must be
+/// statistically unrelated to the plaintext; only the sum decodes.
+#[test]
+fn aggregator_view_reveals_only_the_sum() {
+    let mut rng = DetRng::from_seed(1);
+    let n = 5;
+    let len = 256;
+    let sessions = setup_all(n, 0, &mut rng);
+    let tensors: Vec<Vec<f32>> =
+        (0..n).map(|i| (0..len).map(|j| (i * j % 17) as f32 * 0.25).collect()).collect();
+    let masked: Vec<Vec<u64>> =
+        sessions.iter().zip(&tensors).map(|(s, t)| s.mask_tensor(t, 3, 0)).collect();
+
+    let fp = FixedPoint::default();
+    // (a) individual vectors decode to noise: no element within 1.0 of
+    //     its plaintext except by chance (P ≈ 2^-59 per element)
+    for (m, t) in masked.iter().zip(&tensors) {
+        let close = fp
+            .decode_vec(m)
+            .iter()
+            .zip(t)
+            .filter(|(d, v)| (*d - *v).abs() < 1.0)
+            .count();
+        assert!(close <= 2, "masked vector correlates with plaintext ({close} hits)");
+    }
+    // (b) pairwise partial sums (colluding aggregator + one client
+    //     removed) still don't decode: masks against remaining clients dangle
+    let partial: Vec<Vec<u64>> = masked[..n - 1].to_vec();
+    let partial_sum = aggregate(&fp, &partial);
+    let want_partial: Vec<f32> =
+        (0..len).map(|j| (0..n - 1).map(|i| tensors[i][j]).sum()).collect();
+    let close = partial_sum.iter().zip(&want_partial).filter(|(a, b)| (*a - *b).abs() < 1.0).count();
+    assert!(close <= 2, "partial sums must stay masked");
+    // (c) the full sum decodes exactly
+    let full = aggregate(&fp, &masked);
+    for (j, v) in full.iter().enumerate() {
+        let want: f32 = (0..n).map(|i| tensors[i][j]).sum();
+        assert!((v - want).abs() < 1e-3, "j={j}");
+    }
+}
+
+/// Mini-batch privacy (§4.0.2): a passive party can decrypt only the
+/// sample IDs it holds; other parties' entries are indistinguishable.
+#[test]
+fn batch_ids_readable_only_by_holder() {
+    let mut rng = DetRng::from_seed(2);
+    let sessions = setup_all(3, 0, &mut rng); // active=0, passives 1, 2
+    let ids_for_1 = [11u64, 12, 13];
+    let ids_for_2 = [21u64, 22];
+
+    let mut entries = Vec::new();
+    let mut seq = 0u32;
+    for &id in &ids_for_1 {
+        entries.push((seq, seal_id(&sessions[0].channel_key(1), 0, seq, id)));
+        seq += 1;
+    }
+    for &id in &ids_for_2 {
+        entries.push((seq, seal_id(&sessions[0].channel_key(2), 0, seq, id)));
+        seq += 1;
+    }
+
+    // party 1 can open exactly its ids
+    let opened_1: Vec<u64> = entries
+        .iter()
+        .filter_map(|(s, e)| open_id(&sessions[1].channel_key(0), 0, *s, e))
+        .collect();
+    assert_eq!(opened_1, ids_for_1);
+    // party 2 likewise
+    let opened_2: Vec<u64> = entries
+        .iter()
+        .filter_map(|(s, e)| open_id(&sessions[2].channel_key(0), 0, *s, e))
+        .collect();
+    assert_eq!(opened_2, ids_for_2);
+    // party 2 cannot open party 1's entries even with key reuse attempts
+    let cross: Vec<u64> = entries[..3]
+        .iter()
+        .filter_map(|(s, e)| open_id(&sessions[2].channel_key(0), 0, *s, e))
+        .collect();
+    assert!(cross.is_empty());
+}
+
+/// Key rotation (§5.1): masks from different epochs are unrelated, so a
+/// compromised epoch key cannot unmask earlier rounds.
+#[test]
+fn rotation_isolates_epochs() {
+    let mut rng_a = DetRng::from_seed(3);
+    let mut rng_b = DetRng::from_seed(3); // identical entropy
+    let e0 = setup_all(3, 0, &mut rng_a);
+    let e1 = setup_all(3, 1, &mut rng_b);
+    let t = vec![1.0f32; 32];
+    let m0 = e0[1].mask_tensor(&t, 5, 0);
+    let m1 = e1[1].mask_tensor(&t, 5, 0);
+    assert_ne!(m0, m1, "same round+tag, different epoch → different masks");
+}
+
+/// The §5.1 malicious-setting extension: PKI-signed protocol messages.
+#[test]
+fn pki_detects_spoofed_messages() {
+    let identity: Vec<SigningKey> = (0..3u8).map(|i| SigningKey::from_seed([i; 32])).collect();
+    let registry: Vec<_> = identity.iter().map(|k| k.verifying_key()).collect();
+
+    let payload = b"MaskedActivation round=3 from=1";
+    let sig = identity[1].sign(payload);
+    assert!(registry[1].verify(payload, &sig));
+    // an adversary replaying client 1's message as client 2 fails
+    assert!(!registry[2].verify(payload, &sig));
+    // tampered payload fails
+    assert!(!registry[1].verify(b"MaskedActivation round=3 from=2", &sig));
+}
+
+/// Sample alignment via DH-PSI (§4.0.2's assumed substrate): the active
+/// party learns which samples a passive party shares without either side
+/// revealing non-intersecting IDs.
+#[test]
+fn psi_aligns_samples_for_batch_selection() {
+    let group = PsiGroup::new();
+    let mut rng = DetRng::from_seed(4).as_fill_fn();
+    let active_ids: Vec<Vec<u8>> = (0..20u64).map(|i| i.to_le_bytes().to_vec()).collect();
+    let passive_ids: Vec<Vec<u8>> =
+        (10..25u64).map(|i| i.to_le_bytes().to_vec()).collect();
+    let a = PsiParty::new(active_ids.clone(), &group, &mut rng);
+    let b = PsiParty::new(passive_ids, &group, &mut rng);
+    let (ia, _) = run_psi(&a, &b, &group);
+    let got: Vec<u64> = ia
+        .iter()
+        .map(|&i| u64::from_le_bytes(active_ids[i].as_slice().try_into().unwrap()))
+        .collect();
+    assert_eq!(got, (10..20).collect::<Vec<u64>>());
+}
+
+/// End-to-end holder-map construction from PSI results, as the
+/// coordinator consumes it.
+#[test]
+fn psi_builds_holder_maps() {
+    let group = PsiGroup::new();
+    let mut rng = DetRng::from_seed(5).as_fill_fn();
+    let all: Vec<u64> = (0..12).collect();
+    let active = PsiParty::new(all.iter().map(|i| i.to_le_bytes().to_vec()).collect(), &group, &mut rng);
+    // two passive parties of one group hold disjoint halves
+    let p1: Vec<u64> = all.iter().copied().filter(|i| i % 2 == 0).collect();
+    let p2: Vec<u64> = all.iter().copied().filter(|i| i % 2 == 1).collect();
+    let mut holders: HashMap<u64, usize> = HashMap::new();
+    for (pid, ids) in [(1usize, &p1), (2usize, &p2)] {
+        let party =
+            PsiParty::new(ids.iter().map(|i| i.to_le_bytes().to_vec()).collect(), &group, &mut rng);
+        let (ia, _) = run_psi(&active, &party, &group);
+        for i in ia {
+            let id = u64::from_le_bytes(active.ids[i].as_slice().try_into().unwrap());
+            assert!(holders.insert(id, pid).is_none(), "disjoint holders");
+        }
+    }
+    assert_eq!(holders.len(), 12);
+    assert_eq!(holders[&4], 1);
+    assert_eq!(holders[&5], 2);
+}
