@@ -1,13 +1,21 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
 //! Runs the full secure VFL protocol (setup → 5 training rounds with
-//! key rotation → testing) on the Banking configuration and prints the
-//! loss curve. Uses the pure-Rust reference backend so it works before
-//! `make artifacts`; pass `--pjrt` to run on the compiled artifacts.
+//! key rotation → testing) on the Banking configuration, twice: once
+//! on the deterministic byte-metered simulation and once with every
+//! party on its own OS thread. The same event-driven `Party` state
+//! machines run in both cases — only the `Transport` changes — and the
+//! two runs produce bit-identical losses and predictions.
+//!
+//! Uses the pure-Rust reference backend so it works before
+//! `make artifacts`; pass `--pjrt` to run on the compiled artifacts
+//! (requires a `--features pjrt` build).
 //!
 //!     cargo run --release --example quickstart [-- --pjrt]
 
-use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+use vfl::coordinator::{
+    run_experiment, BackendKind, RunConfig, SecurityMode, TransportKind,
+};
 use vfl::model::ModelConfig;
 use vfl::runtime::Engine;
 
@@ -28,12 +36,29 @@ fn main() -> anyhow::Result<()> {
 
     println!("VFL + secure aggregation, banking dataset, 5 parties");
     println!("backend: {:?}\n", cfg.backend);
-    let report = run_experiment(cfg, engine.as_ref())?;
 
-    for (i, loss) in report.losses.iter().enumerate() {
+    // 1. the paper's measurement setup: single-threaded simulation
+    //    over the byte-metered network
+    cfg.transport = TransportKind::Sim;
+    let sim = run_experiment(cfg.clone(), engine.as_ref())?;
+    for (i, loss) in sim.losses.iter().enumerate() {
         println!("round {i}: loss {loss:.5}");
     }
-    println!("\ntest accuracy: {:.4}", report.test_accuracy);
-    println!("setup phases run (1 initial + rotations): {}", report.setups);
+    println!("\ntest accuracy: {:.4}", sim.test_accuracy);
+    println!("setup phases run (1 initial + rotations): {}", sim.setups);
+
+    // 2. the same parties, one OS thread each — identical results
+    //    (reference backend only: a PJRT engine is not shared across
+    //    party threads)
+    if pjrt {
+        println!("\n(threaded comparison skipped under --pjrt)");
+        return Ok(());
+    }
+    cfg.transport = TransportKind::Threaded;
+    let threaded = run_experiment(cfg, None)?;
+    assert_eq!(sim.losses, threaded.losses, "transports must agree bit-for-bit");
+    assert_eq!(sim.predictions, threaded.predictions);
+    println!("\nthreaded transport reproduced the run bit-for-bit");
+    println!("(for a multi-process run, see `vfl-sa serve` / `vfl-sa join`)");
     Ok(())
 }

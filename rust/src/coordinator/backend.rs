@@ -21,12 +21,24 @@ pub struct GlobalStepOut {
     pub d_global_b: f32,
 }
 
+/// Cheap-to-copy handle: parties each hold one, so the same machine
+/// code runs on either backend under any transport.
+#[derive(Clone, Copy)]
 pub enum Backend<'e> {
     Reference,
     Pjrt(&'e Engine),
 }
 
 impl<'e> Backend<'e> {
+    /// Whether this backend may be driven from several party threads
+    /// at once. The PJRT engine is shared by reference and the `xla`
+    /// wrapper is not audited for concurrent use, so only the
+    /// reference backend qualifies — `ThreadedTransport` enforces
+    /// this before spawning.
+    pub fn concurrent_safe(&self) -> bool {
+        matches!(self, Backend::Reference)
+    }
+
     /// Party forward: x·W (+ b) + float-mask (Eq. 2's unmasked core when
     /// `mask` is zeros — the exact-ℤ₂⁶⁴ mode masks after this call).
     /// `graph` is the artifact key, e.g. "fwd_active" / "fwd_g0".
@@ -214,8 +226,12 @@ mod tests {
 
     #[test]
     fn pjrt_and_reference_agree_end_to_end() {
+        if !crate::runtime::pjrt_enabled() {
+            eprintln!("skipping: built without the `pjrt` feature");
+            return;
+        }
         if !artifacts_dir().join("banking_global_step.hlo.txt").exists() {
-            eprintln!("skipping: artifacts not built");
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
             return;
         }
         let cfg = ModelConfig::for_dataset("banking").unwrap();

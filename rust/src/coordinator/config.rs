@@ -31,6 +31,22 @@ pub enum BackendKind {
     Reference,
 }
 
+/// Which transport carries the protocol messages.
+///
+/// Both run the identical [`Party`](super::party::Party) machines and
+/// produce bit-identical reports; they differ only in who schedules
+/// the work. (Cross-process TCP runs use `vfl-sa serve`/`join`, which
+/// split one party set across processes instead of configuring it
+/// here.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Single-threaded deterministic simulation with exact byte
+    /// metering — the paper's measurement setup. The default.
+    Sim,
+    /// One OS thread per party, channels in between.
+    Threaded,
+}
+
 /// A full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -43,6 +59,7 @@ pub struct RunConfig {
     pub test_rounds: usize,
     pub security: SecurityMode,
     pub backend: BackendKind,
+    pub transport: TransportKind,
     /// RNG seed for data, init, and key generation.
     pub seed: u64,
 }
@@ -59,6 +76,7 @@ impl RunConfig {
             test_rounds: 1,
             security: SecurityMode::SecureExact,
             backend: BackendKind::Pjrt,
+            transport: TransportKind::Sim,
             seed: 7,
         })
     }

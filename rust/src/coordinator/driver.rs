@@ -1,0 +1,306 @@
+//! The driver: builds the party set, precomputes the round schedule,
+//! and pumps it through whichever [`Transport`] the run configures.
+//!
+//! This is all that remains of the old ~600-line hand-threaded
+//! orchestrator: protocol logic lives in the [`Party`] machines
+//! ([`parties`](super::parties)), message routing in the transports
+//! ([`net`](crate::net)). The driver only decides *what* rounds happen
+//! (setup → training with §5.1 key rotation → testing) and assembles a
+//! [`RunReport`] from the notes the parties emit.
+//!
+//! The schedule is fully static: batch ids are a deterministic
+//! function of the seed, so the same `RunConfig` yields the same
+//! schedule in every process — which is what lets `vfl-sa serve` and
+//! `vfl-sa join` agree on the experiment without exchanging it.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{by_name, generate, partition};
+use crate::model::ModelParams;
+use crate::net::{Network, Phase, SimTransport, ThreadedTransport, Transport};
+use crate::runtime::Engine;
+
+use super::backend::Backend;
+use super::config::{BackendKind, RunConfig, TransportKind};
+use super::metrics::Metrics;
+use super::parties::{ActiveParty, Aggregator, PassiveParty};
+use super::party::{Note, Party, RoundKind, RoundSpec, SETUP_ROUND};
+
+/// Everything a run produces.
+pub struct RunReport {
+    pub losses: Vec<f32>,
+    /// Test-set accuracy (threshold 0.5).
+    pub test_accuracy: f64,
+    /// Test-phase predictions (for equivalence checks).
+    pub predictions: Vec<f32>,
+    /// Ground-truth labels aligned with `predictions` (for metrics).
+    pub prediction_labels: Vec<f32>,
+    pub final_params: ModelParams,
+    pub metrics: Metrics,
+    pub net: Network,
+    /// Number of setup phases executed (1 + rotations).
+    pub setups: usize,
+}
+
+/// A wired party set plus the static round schedule — ready for any
+/// transport (or for `serve`/`join` to split across processes).
+pub struct Built<'e> {
+    /// Indexed by node: `[aggregator, client 0 (active), client 1, …]`.
+    pub parties: Vec<Box<dyn Party + 'e>>,
+    pub schedule: Vec<RoundSpec>,
+    pub test_labels: HashMap<u64, f32>,
+    /// Setup phases the schedule will execute (initial + rotations).
+    pub setups: usize,
+}
+
+/// Generate data, partition it, wire up all parties, and lay out the
+/// round schedule.
+pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e>> {
+    let backend = match cfg.backend {
+        BackendKind::Reference => Backend::Reference,
+        BackendKind::Pjrt => {
+            Backend::Pjrt(engine.context("PJRT backend requires a loaded Engine")?)
+        }
+    };
+    let (schema, spec, _) = by_name(&cfg.model.dataset).context("unknown dataset")?;
+    let data = generate(&schema, cfg.n_rows, cfg.seed);
+    let mut vertical = partition(&data, &spec);
+    vertical.passives.sort_by_key(|p| p.party_id);
+
+    let batch = cfg.model.batch_size;
+    let n_train = ((cfg.n_rows as f32) * 0.8) as usize;
+    if n_train < batch || cfg.n_rows - n_train < batch {
+        bail!("need ≥ {batch} rows in both train and test splits");
+    }
+    let train_ids = data.ids[..n_train].to_vec();
+    let test_ids = data.ids[n_train..].to_vec();
+    let test_labels: HashMap<u64, f32> = data.ids[n_train..]
+        .iter()
+        .zip(&data.labels[n_train..])
+        .map(|(&i, &l)| (i, l))
+        .collect();
+
+    // holder maps: per group, id → client index of the holding party
+    let holders: Vec<HashMap<u64, usize>> = (0..spec.groups.len())
+        .map(|g| {
+            let mut m = HashMap::new();
+            for p in vertical.passives.iter().filter(|p| p.group == g) {
+                for &id in p.rows.keys() {
+                    m.insert(id, p.party_id + 1); // client idx (active = 0)
+                }
+            }
+            m
+        })
+        .collect();
+    let groups: Vec<usize> = vertical.passives.iter().map(|p| p.group).collect();
+
+    let mut parties: Vec<Box<dyn Party + 'e>> = Vec::with_capacity(cfg.model.n_clients() + 1);
+    parties.push(Box::new(Aggregator::new(&cfg.model, cfg.seed, backend, groups)));
+    parties.push(Box::new(ActiveParty::new(
+        vertical.active,
+        holders,
+        cfg.model.clone(),
+        cfg.security,
+        cfg.seed,
+        backend,
+    )));
+    for pd in vertical.passives {
+        parties.push(Box::new(PassiveParty::new(
+            pd.party_id + 1,
+            pd,
+            &cfg.model,
+            cfg.security,
+            cfg.seed,
+            backend,
+        )));
+    }
+
+    let (schedule, setups) = build_schedule(cfg, &train_ids, &test_ids);
+    Ok(Built { parties, schedule, test_labels, setups })
+}
+
+/// Lay out the full run: initial setup (secure modes only), training
+/// rounds with key rotation every `rotation_period` rounds (round 0
+/// included — matching §5.1's "every K iterations"), then full-batch
+/// testing rounds.
+fn build_schedule(cfg: &RunConfig, train_ids: &[u64], test_ids: &[u64]) -> (Vec<RoundSpec>, usize) {
+    let secure = cfg.security.is_secure();
+    let batch = cfg.model.batch_size;
+    let mut schedule = Vec::new();
+    let mut setups = 0usize;
+    if secure {
+        schedule.push(RoundSpec {
+            round: SETUP_ROUND,
+            kind: RoundKind::Setup,
+            rotate: false,
+            phase: Phase::Setup,
+            ids: Vec::new(),
+        });
+        setups += 1;
+    }
+    let n = train_ids.len();
+    let mut cursor = 0usize;
+    for r in 0..cfg.train_rounds {
+        let rotate = secure && r % cfg.model.rotation_period == 0;
+        if rotate {
+            setups += 1;
+        }
+        let ids: Vec<u64> = (0..batch).map(|k| train_ids[(cursor + k) % n]).collect();
+        cursor = (cursor + batch) % n;
+        schedule.push(RoundSpec {
+            round: r as u32,
+            kind: RoundKind::Train,
+            rotate,
+            phase: Phase::Training,
+            ids,
+        });
+    }
+    for t in 0..cfg.test_rounds {
+        let start = t * batch;
+        if start + batch > test_ids.len() {
+            break;
+        }
+        schedule.push(RoundSpec {
+            round: (cfg.train_rounds + t) as u32,
+            kind: RoundKind::Test,
+            rotate: false,
+            phase: Phase::Testing,
+            ids: test_ids[start..start + batch].to_vec(),
+        });
+    }
+    (schedule, setups)
+}
+
+/// The training/testing results reconstructable from a run's notes.
+pub struct Summary {
+    pub losses: Vec<f32>,
+    pub predictions: Vec<f32>,
+    pub prediction_labels: Vec<f32>,
+    pub test_accuracy: f64,
+}
+
+/// Fold a run's notes against its schedule: losses in round order,
+/// predictions matched to each test round's ids.
+pub fn summarize(
+    schedule: &[RoundSpec],
+    test_labels: &HashMap<u64, f32>,
+    notes: &[Note],
+) -> Summary {
+    let mut losses: Vec<(u32, f32)> = notes
+        .iter()
+        .filter_map(|n| match n {
+            Note::Loss { round, loss } => Some((*round, *loss)),
+            _ => None,
+        })
+        .collect();
+    losses.sort_by_key(|(r, _)| *r);
+    let losses: Vec<f32> = losses.into_iter().map(|(_, l)| l).collect();
+
+    let mut predictions = Vec::new();
+    let mut prediction_labels = Vec::new();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for spec in schedule.iter().filter(|s| s.kind == RoundKind::Test) {
+        let probs = notes.iter().find_map(|n| match n {
+            Note::Predictions { round, probs } if *round == spec.round => Some(probs),
+            _ => None,
+        });
+        let Some(probs) = probs else { continue };
+        for (id, p) in spec.ids.iter().zip(probs) {
+            let y = test_labels[id];
+            prediction_labels.push(y);
+            if (*p > 0.5) == (y == 1.0) {
+                correct += 1;
+            }
+            total += 1;
+        }
+        predictions.extend_from_slice(probs);
+    }
+    let test_accuracy = if total > 0 { correct as f64 / total as f64 } else { 0.0 };
+    Summary { losses, predictions, prediction_labels, test_accuracy }
+}
+
+/// A fully wired experiment: parties + schedule + configured transport.
+pub struct Experiment<'e> {
+    pub cfg: RunConfig,
+    built: Built<'e>,
+}
+
+impl<'e> Experiment<'e> {
+    /// Generate data, partition it, and wire up all parties.
+    pub fn new(cfg: RunConfig, engine: Option<&'e Engine>) -> Result<Self> {
+        let built = build(&cfg, engine)?;
+        Ok(Experiment { cfg, built })
+    }
+
+    /// Run the full experiment on the configured transport.
+    pub fn run(self) -> Result<RunReport> {
+        let Experiment { cfg, built } = self;
+        let Built { parties, schedule, test_labels, setups } = built;
+        let n_clients = cfg.model.n_clients();
+        let outcome = match cfg.transport {
+            TransportKind::Sim => SimTransport::new(n_clients).execute(parties, &schedule)?,
+            TransportKind::Threaded => {
+                ThreadedTransport::new(n_clients).execute(parties, &schedule)?
+            }
+        };
+        let s = summarize(&schedule, &test_labels, &outcome.notes);
+        Ok(RunReport {
+            losses: s.losses,
+            test_accuracy: s.test_accuracy,
+            predictions: s.predictions,
+            prediction_labels: s.prediction_labels,
+            final_params: outcome.final_params,
+            metrics: outcome.metrics,
+            net: outcome.net,
+            setups,
+        })
+    }
+}
+
+/// Convenience: build and run in one call.
+pub fn run_experiment(cfg: RunConfig, engine: Option<&Engine>) -> Result<RunReport> {
+    Experiment::new(cfg, engine)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SecurityMode;
+
+    fn cfg() -> RunConfig {
+        RunConfig::test("banking").unwrap()
+    }
+
+    #[test]
+    fn schedule_shape_secure() {
+        let mut c = cfg();
+        c.train_rounds = 6; // K = 5 → rotations at rounds 0 and 5
+        let train: Vec<u64> = (0..1024).collect();
+        let test: Vec<u64> = (1024..1024 + 512).collect();
+        let (sched, setups) = build_schedule(&c, &train, &test);
+        assert_eq!(setups, 3, "initial + rotations at r0 and r5");
+        assert_eq!(sched.len(), 1 + 6 + 1);
+        assert_eq!(sched[0].kind, RoundKind::Setup);
+        assert!(sched[1].rotate && !sched[2].rotate && sched[6].rotate);
+        assert_eq!(sched[7].kind, RoundKind::Test);
+        assert_eq!(sched[7].round, 6);
+        assert_eq!(sched[7].ids.len(), c.model.batch_size);
+        // batch ids wrap deterministically
+        assert_eq!(sched[1].ids[0], 0);
+        assert_eq!(sched[2].ids[0], c.model.batch_size as u64);
+    }
+
+    #[test]
+    fn schedule_shape_plain() {
+        let mut c = cfg();
+        c.security = SecurityMode::Plain;
+        let train: Vec<u64> = (0..1024).collect();
+        let test: Vec<u64> = (1024..1024 + 512).collect();
+        let (sched, setups) = build_schedule(&c, &train, &test);
+        assert_eq!(setups, 0, "plain mode never runs setup");
+        assert!(sched.iter().all(|s| s.kind != RoundKind::Setup && !s.rotate));
+    }
+}

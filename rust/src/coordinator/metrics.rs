@@ -38,12 +38,21 @@ impl Metrics {
         Self::default()
     }
 
+    /// Record an already-measured duration. `overhead` marks security
+    /// operations, which count toward both buckets.
+    pub fn record(&mut self, node: Node, phase: Phase, ns: u128, overhead: bool) {
+        let e = self.entries.entry((node, phase)).or_default();
+        e.total_ns += ns;
+        if overhead {
+            e.overhead_ns += ns;
+        }
+    }
+
     /// Time a unit of ordinary (non-security) work.
     pub fn time<T>(&mut self, node: Node, phase: Phase, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        let dt = t0.elapsed().as_nanos();
-        self.entries.entry((node, phase)).or_default().total_ns += dt;
+        self.record(node, phase, t0.elapsed().as_nanos(), false);
         out
     }
 
@@ -51,11 +60,18 @@ impl Metrics {
     pub fn time_overhead<T>(&mut self, node: Node, phase: Phase, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        let dt = t0.elapsed().as_nanos();
-        let e = self.entries.entry((node, phase)).or_default();
-        e.total_ns += dt;
-        e.overhead_ns += dt;
+        self.record(node, phase, t0.elapsed().as_nanos(), true);
         out
+    }
+
+    /// Fold another party's meters into this one (used by the driver to
+    /// assemble one run-wide view from per-party meters).
+    pub fn merge(&mut self, other: Metrics) {
+        for ((node, phase), e) in other.entries {
+            let slot = self.entries.entry((node, phase)).or_default();
+            slot.total_ns += e.total_ns;
+            slot.overhead_ns += e.overhead_ns;
+        }
     }
 
     pub fn get(&self, node: Node, phase: Phase) -> CpuEntry {

@@ -1,23 +1,33 @@
-//! Layer-3 coordinator: the paper's system contribution.
+//! Layer-3 coordinator: the paper's system contribution, organised as
+//! event-driven party state machines over pluggable transports.
 //!
+//! * [`party`] — the [`Party`] trait (`on_round_start` / `on_message`
+//!   → [`Outbox`]), round schedule types, and driver notes.
+//! * [`parties`] — the §4 machines: [`parties::ActiveParty`],
+//!   [`parties::PassiveParty`], [`parties::Aggregator`]. The same
+//!   machines run on every transport.
 //! * [`messages`] — the §4 protocol messages and wire encoding.
-//! * [`parties`] — active / passive / aggregator state machines.
-//! * [`trainer`] — the orchestrator running setup → training (with key
-//!   rotation) → testing over the byte-metered network.
+//! * [`driver`] — builds the party set, lays out the static round
+//!   schedule (setup → training with §5.1 key rotation → testing),
+//!   pumps the configured [`Transport`](crate::net::Transport), and
+//!   assembles a [`RunReport`].
 //! * [`backend`] — PJRT-artifact or pure-Rust compute.
 //! * [`metrics`] — per-(node, phase) CPU accounting with the security-
 //!   overhead bucket (Table 1).
-//! * [`config`] — experiment configuration (§6.3's setup).
+//! * [`config`] — experiment configuration (§6.3's setup) including
+//!   the transport selection.
 
 pub mod backend;
 pub mod config;
+pub mod driver;
 pub mod messages;
 pub mod metrics;
 pub mod parties;
-pub mod trainer;
+pub mod party;
 
 pub use backend::Backend;
-pub use config::{BackendKind, RunConfig, SecurityMode};
+pub use config::{BackendKind, RunConfig, SecurityMode, TransportKind};
+pub use driver::{build, run_experiment, summarize, Built, Experiment, RunReport, Summary};
 pub use messages::Msg;
 pub use metrics::Metrics;
-pub use trainer::{run_experiment, Experiment, RunReport};
+pub use party::{Note, Outbox, Party, RoundKind, RoundSpec, SETUP_ROUND};

@@ -1,26 +1,39 @@
 //! Party state machines: the active party, passive parties, and the
-//! aggregator (§4 of the paper).
+//! aggregator (§4 of the paper), as event-driven [`Party`]
+//! implementations.
 //!
-//! All parties are driven by the single-threaded orchestrator in
-//! [`super::trainer`]; every inter-party byte flows through the
-//! byte-metered [`Network`](crate::net::Network), and every security
-//! operation runs inside a [`Metrics`](super::metrics::Metrics)
-//! overhead timer.
+//! Each machine owns its deterministic RNG, its CPU meters, and its
+//! protocol state, and reacts to round-boundary hooks plus incoming
+//! [`Msg`]s by pushing outgoing messages into an [`Outbox`]. Nothing
+//! here knows which [`Transport`](crate::net::Transport) is routing the
+//! bytes — the same machines run single-threaded inside the
+//! byte-metered simulation, one-thread-per-party, or over TCP sockets.
+//!
+//! Cross-transport determinism: wherever the §4 protocol fans in
+//! (activation sums, gradient sums, key directories), the aggregator
+//! buffers contributions keyed by sender and combines them in client
+//! order, so float addition order — and therefore every output bit —
+//! is independent of message arrival order.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::crypto::aead;
 use crate::crypto::rng::DetRng;
 use crate::data::partition::{ActiveData, PassiveData};
 use crate::model::linalg::Mat;
-use crate::model::{ModelConfig, ModelParams};
+use crate::model::{ModelConfig, ModelParams, PartyParams};
 use crate::net::wire::Writer;
+use crate::net::{Addr, Phase};
 use crate::secagg::{ClientSession, FixedPoint, PublishedKeys};
 
+use super::backend::Backend;
 use super::config::SecurityMode;
 use super::messages::{Msg, WireKeys};
+use super::metrics::{client, Metrics, AGGREGATOR};
+use super::party::{Note, Outbox, Party, RoundKind, RoundSpec};
 
 /// Gradient-vector layout: every party reports a full-length flat
 /// gradient (Eq. 6's indicator zeroing what it doesn't own), so the
@@ -71,6 +84,15 @@ pub fn keys_from_wire(wk: &WireKeys) -> PublishedKeys {
     }
 }
 
+/// Deterministic per-party RNG: every party derives its own stream
+/// from (run seed, client index), so key generation does not depend on
+/// the order a transport schedules parties in.
+pub fn party_rng(seed: u64, client_idx: usize) -> DetRng {
+    DetRng::from_seed(
+        seed ^ 0x5eed_0f5a ^ (client_idx as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+    )
+}
+
 /// AAD used for sample-ID sealing.
 const BATCH_AAD: &[u8] = b"vfl-sa/batch-id/v1";
 
@@ -93,7 +115,7 @@ pub fn open_id(key: &[u8; 32], round: u32, seq: u32, sealed: &[u8]) -> Option<u6
 // Active party
 // ---------------------------------------------------------------------------
 
-pub struct ActiveParty {
+pub struct ActiveParty<'e> {
     /// Client index (always 0).
     pub id: usize,
     pub data: ActiveData,
@@ -106,19 +128,32 @@ pub struct ActiveParty {
     pub cfg: ModelConfig,
     pub security: SecurityMode,
     pub layout: GradLayout,
+    backend: Backend<'e>,
+    metrics: Metrics,
+    rng: DetRng,
     /// id → row index (for feature/label lookup).
     index: HashMap<u64, usize>,
     /// Cached per-round state for the backward pass.
     last_batch_x: Option<Mat>,
+    // --- event-driven round state ---
+    phase: Phase,
+    kind: RoundKind,
+    round: u32,
+    batch_ids: Vec<u64>,
+    /// Waiting for a key directory before opening the round.
+    await_setup: bool,
+    own: Option<GradSum>,
+    pending_gsum: Option<GradSum>,
 }
 
-impl ActiveParty {
+impl<'e> ActiveParty<'e> {
     pub fn new(
         data: ActiveData,
         holders: Vec<HashMap<u64, usize>>,
         cfg: ModelConfig,
         security: SecurityMode,
         seed: u64,
+        backend: Backend<'e>,
     ) -> Self {
         let params = ModelParams::init(&cfg, seed);
         let layout = GradLayout::new(&cfg);
@@ -132,14 +167,29 @@ impl ActiveParty {
             cfg,
             security,
             layout,
+            backend,
+            metrics: Metrics::new(),
+            rng: party_rng(seed, 0),
             index,
             last_batch_x: None,
+            phase: Phase::Setup,
+            kind: RoundKind::Setup,
+            round: 0,
+            batch_ids: Vec::new(),
+            await_setup: false,
+            own: None,
+            pending_gsum: None,
         }
     }
 
+    /// Record elapsed time against this party's current phase.
+    fn rec(&mut self, t0: Instant, overhead: bool) {
+        self.metrics.record(client(self.id), self.phase, t0.elapsed().as_nanos(), overhead);
+    }
+
     /// Begin a setup epoch: generate per-peer keypairs.
-    pub fn begin_setup(&mut self, n_clients: usize, epoch: u64, rng: &mut DetRng) -> Msg {
-        let s = ClientSession::new(self.id, n_clients, epoch, rng);
+    pub fn begin_setup(&mut self, n_clients: usize, epoch: u64) -> Msg {
+        let s = ClientSession::new(self.id, n_clients, epoch, &mut self.rng);
         let msg = Msg::PublishKeys(keys_to_wire(&s.published_keys()));
         self.session = Some(s);
         msg
@@ -285,6 +335,158 @@ impl ActiveParty {
         }
         Ok(self.params.flatten())
     }
+
+    /// Open a training round: sealed batch + weights redistribution +
+    /// own masked forward activation.
+    fn start_train_round(&mut self, out: &mut Outbox) -> Result<()> {
+        let ids = self.batch_ids.clone();
+        let round = self.round;
+        let t0 = Instant::now();
+        let batch_msg = self.make_batch(&ids, round);
+        self.rec(t0, self.security.is_secure());
+        out.send(Addr::Aggregator, batch_msg);
+        out.send(Addr::Aggregator, Msg::WeightsUpdate { round, flat: self.group_weights_flat() });
+        self.forward_and_upload(&ids, out)
+    }
+
+    /// Open a testing round: unlabeled sealed batch + masked activation.
+    fn start_test_round(&mut self, out: &mut Outbox) -> Result<()> {
+        let ids = self.batch_ids.clone();
+        let round = self.round;
+        let t0 = Instant::now();
+        let batch_msg = self.make_batch_unlabeled(&ids, round);
+        self.rec(t0, self.security.is_secure());
+        out.send(Addr::Aggregator, batch_msg);
+        self.forward_and_upload(&ids, out)
+    }
+
+    fn forward_and_upload(&mut self, ids: &[u64], out: &mut Outbox) -> Result<()> {
+        let xa = self.batch_features(ids);
+        let a_params = PartyParams {
+            w: self.params.active.w.clone(),
+            b: self.params.active.b.clone(),
+        };
+        let t0 = Instant::now();
+        let za = self.backend.party_fwd("fwd_active", &xa, &a_params, None);
+        self.rec(t0, false);
+        let za = za?;
+        let t0 = Instant::now();
+        let msg = self.masked_activation(self.round, &za);
+        self.rec(t0, self.security.is_secure());
+        out.send(Addr::Aggregator, msg);
+        Ok(())
+    }
+
+    fn on_grad_sum(&mut self, gsum: GradSum, out: &mut Outbox) -> Result<()> {
+        if self.own.is_some() {
+            self.finish_train_round(gsum, out)
+        } else {
+            // defensive: tolerate the sum overtaking the dz broadcast
+            self.pending_gsum = Some(gsum);
+            Ok(())
+        }
+    }
+
+    fn finish_train_round(&mut self, gsum: GradSum, out: &mut Outbox) -> Result<()> {
+        let own = self.own.take().context("own gradient contribution missing")?;
+        let lr = self.cfg.lr;
+        let t0 = Instant::now();
+        let res = self.apply_gradients(gsum, own, lr);
+        self.rec(t0, false);
+        res?;
+        out.note(Note::RoundDone { round: self.round });
+        Ok(())
+    }
+}
+
+impl<'e> Party for ActiveParty<'e> {
+    fn addr(&self) -> Addr {
+        Addr::Client(self.id)
+    }
+
+    fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()> {
+        self.round = spec.round;
+        self.kind = spec.kind;
+        self.phase = spec.phase;
+        self.batch_ids = spec.ids.clone();
+        self.own = None;
+        self.pending_gsum = None;
+        match spec.kind {
+            // The aggregator opens setup with RequestKeys; we respond.
+            RoundKind::Setup => self.await_setup = true,
+            RoundKind::Train => {
+                self.await_setup = spec.rotate;
+                if !spec.rotate {
+                    self.start_train_round(out)?;
+                }
+            }
+            RoundKind::Test => self.start_test_round(out)?,
+        }
+        Ok(())
+    }
+
+    fn on_message(&mut self, _from: Addr, msg: Msg, out: &mut Outbox) -> Result<()> {
+        match msg {
+            Msg::RequestKeys { epoch } => {
+                let n = self.cfg.n_clients();
+                let t0 = Instant::now();
+                let reply = self.begin_setup(n, epoch);
+                self.rec(t0, true);
+                out.send(Addr::Aggregator, reply);
+            }
+            Msg::KeyDirectory { all, .. } => {
+                let t0 = Instant::now();
+                self.finish_setup(&all);
+                self.rec(t0, true);
+                if self.await_setup {
+                    self.await_setup = false;
+                    match self.kind {
+                        RoundKind::Setup => out.note(Note::RoundDone { round: self.round }),
+                        RoundKind::Train => self.start_train_round(out)?,
+                        RoundKind::Test => bail!("testing rounds do not rotate keys"),
+                    }
+                }
+            }
+            Msg::DzBroadcast { dz, .. } => {
+                let batch = self.cfg.batch_size;
+                let h = self.cfg.hidden;
+                let dzm = Mat::from_vec(batch, h, dz);
+                let xa = self.last_x().clone();
+                let t0 = Instant::now();
+                let bwd = self.backend.party_bwd("bwd_active", &xa, &dzm, true);
+                self.rec(t0, false);
+                let (own_dw, own_db) = bwd?;
+                let own_db = own_db.context("bias gradient missing")?;
+                let t0 = Instant::now();
+                let own = self.own_grad_contribution(self.round, &own_dw, &own_db);
+                self.rec(t0, self.security.is_secure());
+                self.own = Some(own);
+                if let Some(gsum) = self.pending_gsum.take() {
+                    self.finish_train_round(gsum, out)?;
+                }
+            }
+            Msg::GradientSum { words, .. } => self.on_grad_sum(GradSum::Words(words), out)?,
+            Msg::FloatGradientSum { vals, .. } => self.on_grad_sum(GradSum::Floats(vals), out)?,
+            Msg::Predictions { round, probs } => {
+                out.note(Note::Predictions { round, probs });
+                out.note(Note::RoundDone { round: self.round });
+            }
+            m => bail!("active party: unexpected message {m:?}"),
+        }
+        Ok(())
+    }
+
+    fn concurrent_safe(&self) -> bool {
+        self.backend.concurrent_safe()
+    }
+
+    fn take_metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
+
+    fn final_params(&mut self) -> Option<ModelParams> {
+        Some(self.params.clone())
+    }
 }
 
 /// The aggregator→active gradient sum, in either mask domain.
@@ -297,7 +499,7 @@ pub enum GradSum {
 // Passive party
 // ---------------------------------------------------------------------------
 
-pub struct PassiveParty {
+pub struct PassiveParty<'e> {
     /// Client index (1-based among clients; active is 0).
     pub id: usize,
     pub group: usize,
@@ -309,16 +511,28 @@ pub struct PassiveParty {
     pub layout: GradLayout,
     /// Current group weights (distributed by the aggregator).
     pub weights: Mat,
+    backend: Backend<'e>,
+    metrics: Metrics,
+    rng: DetRng,
+    batch_size: usize,
+    n_clients: usize,
     /// Cached batch features for the backward pass.
     last_batch_x: Option<Mat>,
+    // --- event-driven round state ---
+    phase: Phase,
+    kind: RoundKind,
+    round: u32,
+    resolved: Option<Vec<(usize, u64)>>,
 }
 
-impl PassiveParty {
+impl<'e> PassiveParty<'e> {
     pub fn new(
         id: usize,
         data: PassiveData,
         cfg: &ModelConfig,
         security: SecurityMode,
+        seed: u64,
+        backend: Backend<'e>,
     ) -> Self {
         let group = data.group;
         let dim = data.dim;
@@ -332,12 +546,25 @@ impl PassiveParty {
             security,
             layout: GradLayout::new(cfg),
             weights: Mat::zeros(dim, cfg.hidden),
+            backend,
+            metrics: Metrics::new(),
+            rng: party_rng(seed, id),
+            batch_size: cfg.batch_size,
+            n_clients: cfg.n_clients(),
             last_batch_x: None,
+            phase: Phase::Setup,
+            kind: RoundKind::Setup,
+            round: 0,
+            resolved: None,
         }
     }
 
-    pub fn begin_setup(&mut self, n_clients: usize, epoch: u64, rng: &mut DetRng) -> Msg {
-        let s = ClientSession::new(self.id, n_clients, epoch, rng);
+    fn rec(&mut self, t0: Instant, overhead: bool) {
+        self.metrics.record(client(self.id), self.phase, t0.elapsed().as_nanos(), overhead);
+    }
+
+    pub fn begin_setup(&mut self, n_clients: usize, epoch: u64) -> Msg {
+        let s = ClientSession::new(self.id, n_clients, epoch, &mut self.rng);
         let msg = Msg::PublishKeys(keys_to_wire(&s.published_keys()));
         self.session = Some(s);
         msg
@@ -438,6 +665,105 @@ impl PassiveParty {
         assert_eq!(flat.len(), self.dim * self.hidden, "group weight size");
         self.weights = Mat::from_vec(self.dim, self.hidden, flat.to_vec());
     }
+
+    /// Run the group forward pass on the resolved batch and upload the
+    /// masked activation.
+    fn forward_and_upload(&mut self, out: &mut Outbox) -> Result<()> {
+        let batch = self.batch_size;
+        let resolved = self.resolved.take().context("batch relay not yet received")?;
+        let x = self.batch_features(&resolved, batch);
+        let graph = format!("fwd_g{}", self.group);
+        let weights = PartyParams { w: self.weights.clone(), b: None };
+        let t0 = Instant::now();
+        let z = self.backend.party_fwd(&graph, &x, &weights, None);
+        self.rec(t0, false);
+        let z = z?;
+        let t0 = Instant::now();
+        let msg = self.masked_activation(self.round, &z);
+        self.rec(t0, self.security.is_secure());
+        out.send(Addr::Aggregator, msg);
+        Ok(())
+    }
+}
+
+impl<'e> Party for PassiveParty<'e> {
+    fn addr(&self) -> Addr {
+        Addr::Client(self.id)
+    }
+
+    fn on_round_start(&mut self, spec: &RoundSpec, _out: &mut Outbox) -> Result<()> {
+        self.round = spec.round;
+        self.kind = spec.kind;
+        self.phase = spec.phase;
+        self.resolved = None;
+        Ok(())
+    }
+
+    fn on_message(&mut self, _from: Addr, msg: Msg, out: &mut Outbox) -> Result<()> {
+        match msg {
+            Msg::RequestKeys { epoch } => {
+                let n = self.n_clients;
+                let t0 = Instant::now();
+                let reply = self.begin_setup(n, epoch);
+                self.rec(t0, true);
+                out.send(Addr::Aggregator, reply);
+            }
+            Msg::KeyDirectory { all, .. } => {
+                let t0 = Instant::now();
+                self.finish_setup(&all);
+                self.rec(t0, true);
+            }
+            Msg::BatchRelay { entries, round } => {
+                let batch = self.batch_size;
+                let t0 = Instant::now();
+                let resolved = self.resolve_batch(round, &entries, batch);
+                self.rec(t0, true);
+                self.resolved = Some(resolved);
+                // testing rounds carry no weights; forward immediately
+                if self.kind == RoundKind::Test {
+                    self.forward_and_upload(out)?;
+                }
+            }
+            Msg::PlainBatchRelay { ids, .. } => {
+                self.resolved = Some(self.resolve_plain(&ids));
+                if self.kind == RoundKind::Test {
+                    self.forward_and_upload(out)?;
+                }
+            }
+            Msg::GroupWeights { flat, .. } => {
+                self.set_weights(&flat);
+                // training: the weights follow the relay (per-sender
+                // FIFO), so the batch is resolved by now
+                if self.kind == RoundKind::Train {
+                    self.forward_and_upload(out)?;
+                }
+            }
+            Msg::DzBroadcast { dz, .. } => {
+                let batch = self.batch_size;
+                let dzm = Mat::from_vec(batch, self.hidden, dz);
+                let graph = format!("bwd_g{}", self.group);
+                let x = self.last_x().clone();
+                let t0 = Instant::now();
+                let bwd = self.backend.party_bwd(&graph, &x, &dzm, false);
+                self.rec(t0, false);
+                let (dw, _) = bwd?;
+                let t0 = Instant::now();
+                let msg = self.masked_gradient(self.round, &dw);
+                self.rec(t0, self.security.is_secure());
+                out.send(Addr::Aggregator, msg);
+            }
+            m => bail!("passive party {}: unexpected message {m:?}", self.id),
+        }
+        Ok(())
+    }
+
+    fn concurrent_safe(&self) -> bool {
+        self.backend.concurrent_safe()
+    }
+
+    fn take_metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -447,27 +773,75 @@ impl PassiveParty {
 /// The aggregator: relays traffic, owns the global module, sums masked
 /// vectors (masks cancel per Eq. 4-5), and never sees an individual
 /// party's plaintext tensor.
-pub struct Aggregator {
+///
+/// Fan-in points buffer contributions in [`BTreeMap`]s keyed by sender
+/// so sums run in client order regardless of arrival order — the
+/// transport-independence invariant.
+pub struct Aggregator<'e> {
     pub n_clients: usize,
     pub hidden: usize,
     /// Global module Linear(hidden, 1) — lives here per §6.2.
     pub global_w: Vec<f32>,
     pub global_b: f32,
     pub fp: FixedPoint,
+    backend: Backend<'e>,
+    cfg: ModelConfig,
+    /// `groups[i]` = feature group held by client `i + 1`.
+    groups: Vec<usize>,
+    metrics: Metrics,
+    // --- event-driven round state ---
+    phase: Phase,
+    kind: RoundKind,
+    round: u32,
+    /// Setup epochs completed (drives RequestKeys numbering).
+    epoch: u64,
+    keys: Vec<WireKeys>,
+    labels: Vec<f32>,
+    relay_entries: Option<Vec<Vec<u8>>>,
+    relay_ids: Option<Vec<u64>>,
+    group_flats: Option<Vec<Vec<f32>>>,
+    relayed: bool,
+    acts_exact: BTreeMap<u16, Vec<u64>>,
+    acts_float: BTreeMap<u16, Vec<f32>>,
+    grads_exact: BTreeMap<u16, Vec<u64>>,
+    grads_float: BTreeMap<u16, Vec<f32>>,
 }
 
-impl Aggregator {
-    pub fn new(cfg: &ModelConfig, seed: u64) -> Self {
+impl<'e> Aggregator<'e> {
+    pub fn new(cfg: &ModelConfig, seed: u64, backend: Backend<'e>, groups: Vec<usize>) -> Self {
         // aggregator receives the initial global module from the active
         // party's init (same seed → same init as ModelParams::init)
         let params = ModelParams::init(cfg, seed);
+        assert_eq!(groups.len(), cfg.n_clients() - 1, "one group per passive client");
         Aggregator {
             n_clients: cfg.n_clients(),
             hidden: cfg.hidden,
             global_w: params.global.w.data,
             global_b: params.global.b,
             fp: FixedPoint::default(),
+            backend,
+            cfg: cfg.clone(),
+            groups,
+            metrics: Metrics::new(),
+            phase: Phase::Setup,
+            kind: RoundKind::Setup,
+            round: 0,
+            epoch: 0,
+            keys: Vec::new(),
+            labels: Vec::new(),
+            relay_entries: None,
+            relay_ids: None,
+            group_flats: None,
+            relayed: false,
+            acts_exact: BTreeMap::new(),
+            acts_float: BTreeMap::new(),
+            grads_exact: BTreeMap::new(),
+            grads_float: BTreeMap::new(),
         }
+    }
+
+    fn rec(&mut self, t0: Instant, overhead: bool) {
+        self.metrics.record(AGGREGATOR, self.phase, t0.elapsed().as_nanos(), overhead);
     }
 
     /// Sum masked activations into the clear aggregate z (Eq. 5).
@@ -529,6 +903,200 @@ impl Aggregator {
         }
         self.global_b -= lr * d_b;
     }
+
+    /// Extract the per-group weight blocks from a flat ModelParams.
+    fn split_group_weights(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        let cfg = &self.cfg;
+        let h = cfg.hidden;
+        let mut off = cfg.active_dim * h + h;
+        cfg.group_dims
+            .iter()
+            .map(|&d| {
+                let s = flat[off..off + d * h].to_vec();
+                off += d * h;
+                s
+            })
+            .collect()
+    }
+
+    /// Relay the sealed batch (and, in training, each group's weights)
+    /// to every passive party once the prerequisites arrived.
+    fn maybe_relay(&mut self, out: &mut Outbox) {
+        if self.relayed {
+            return;
+        }
+        let have_batch = self.relay_entries.is_some() || self.relay_ids.is_some();
+        let need_weights = self.kind == RoundKind::Train;
+        if !have_batch || (need_weights && self.group_flats.is_none()) {
+            return;
+        }
+        let round = self.round;
+        for ci in 1..self.n_clients {
+            let relay = if let Some(e) = &self.relay_entries {
+                Msg::BatchRelay { round, entries: e.clone() }
+            } else {
+                Msg::PlainBatchRelay { round, ids: self.relay_ids.clone().unwrap() }
+            };
+            out.send(Addr::Client(ci), relay);
+            if need_weights {
+                let g = self.groups[ci - 1];
+                let flat = self.group_flats.as_ref().unwrap()[g].clone();
+                out.send(Addr::Client(ci), Msg::GroupWeights { round, group: g as u8, flat });
+            }
+        }
+        self.relayed = true;
+    }
+
+    /// Once every client's masked activation is in: unmask by
+    /// summation, then either run the global training step and
+    /// broadcast ∂L/∂z, or (testing) predict and reply to the active
+    /// party.
+    fn maybe_sum_activations(&mut self, out: &mut Outbox) -> Result<()> {
+        if self.acts_exact.len() + self.acts_float.len() < self.n_clients {
+            return Ok(());
+        }
+        let batch = self.cfg.batch_size;
+        // BTreeMap order = client order: float addition order (and thus
+        // every output bit) is the same on every transport.
+        let exact: Vec<Vec<u64>> = std::mem::take(&mut self.acts_exact).into_values().collect();
+        let float: Vec<Vec<f32>> = std::mem::take(&mut self.acts_float).into_values().collect();
+        let t0 = Instant::now();
+        let z = if !exact.is_empty() {
+            self.sum_activations_exact(batch, &exact)
+        } else {
+            self.sum_activations_float(batch, &float)
+        };
+        self.rec(t0, false);
+        let (gw, gb) = (self.global_w.clone(), self.global_b);
+        match self.kind {
+            RoundKind::Train => {
+                let labels = std::mem::take(&mut self.labels);
+                let t0 = Instant::now();
+                let step = self.backend.global_step(&z, &gw, gb, &labels);
+                self.rec(t0, false);
+                let step = step?;
+                self.update_global(&step.d_global_w, step.d_global_b, self.cfg.lr);
+                out.note(Note::Loss { round: self.round, loss: step.loss });
+                let dz = Msg::DzBroadcast { round: self.round, dz: step.dz.data };
+                for i in 0..self.n_clients {
+                    out.send(Addr::Client(i), dz.clone());
+                }
+            }
+            RoundKind::Test => {
+                let t0 = Instant::now();
+                let probs = self.backend.predict(&z, &gw, gb);
+                self.rec(t0, false);
+                out.send(Addr::Client(0), Msg::Predictions { round: self.round, probs: probs? });
+            }
+            RoundKind::Setup => bail!("activation received during a setup round"),
+        }
+        Ok(())
+    }
+
+    /// Once every passive's masked gradient is in: sum (still masked by
+    /// the active party's total mask) and forward to the active party.
+    fn maybe_sum_gradients(&mut self, out: &mut Outbox) {
+        let n_passive = self.n_clients - 1;
+        if n_passive == 0 || self.grads_exact.len() + self.grads_float.len() < n_passive {
+            return;
+        }
+        let exact: Vec<Vec<u64>> = std::mem::take(&mut self.grads_exact).into_values().collect();
+        let float: Vec<Vec<f32>> = std::mem::take(&mut self.grads_float).into_values().collect();
+        let round = self.round;
+        let t0 = Instant::now();
+        let msg = if !exact.is_empty() {
+            Msg::GradientSum { round, words: self.sum_gradients_exact(&exact) }
+        } else {
+            Msg::FloatGradientSum { round, vals: self.sum_gradients_float(&float) }
+        };
+        self.rec(t0, false);
+        out.send(Addr::Client(0), msg);
+    }
+}
+
+impl<'e> Party for Aggregator<'e> {
+    fn addr(&self) -> Addr {
+        Addr::Aggregator
+    }
+
+    fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()> {
+        self.round = spec.round;
+        self.kind = spec.kind;
+        self.phase = spec.phase;
+        self.labels.clear();
+        self.relay_entries = None;
+        self.relay_ids = None;
+        self.group_flats = None;
+        self.relayed = false;
+        self.acts_exact.clear();
+        self.acts_float.clear();
+        self.grads_exact.clear();
+        self.grads_float.clear();
+        if spec.kind == RoundKind::Setup || spec.rotate {
+            self.keys.clear();
+            for i in 0..self.n_clients {
+                out.send(Addr::Client(i), Msg::RequestKeys { epoch: self.epoch });
+            }
+        }
+        Ok(())
+    }
+
+    fn on_message(&mut self, _from: Addr, msg: Msg, out: &mut Outbox) -> Result<()> {
+        match msg {
+            Msg::PublishKeys(k) => {
+                self.keys.push(k);
+                if self.keys.len() == self.n_clients {
+                    let mut all = std::mem::take(&mut self.keys);
+                    all.sort_by_key(|k| k.from);
+                    let dir = Msg::KeyDirectory { epoch: self.epoch, all };
+                    for i in 0..self.n_clients {
+                        out.send(Addr::Client(i), dir.clone());
+                    }
+                    self.epoch += 1;
+                }
+            }
+            Msg::BatchSelect { labels, entries, .. } => {
+                self.labels = labels;
+                self.relay_entries = Some(entries);
+                self.maybe_relay(out);
+            }
+            Msg::PlainBatch { labels, ids, .. } => {
+                self.labels = labels;
+                self.relay_ids = Some(ids);
+                self.maybe_relay(out);
+            }
+            Msg::WeightsUpdate { flat, .. } => {
+                self.group_flats = Some(self.split_group_weights(&flat));
+                self.maybe_relay(out);
+            }
+            Msg::MaskedActivation { from, words, .. } => {
+                self.acts_exact.insert(from, words);
+                self.maybe_sum_activations(out)?;
+            }
+            Msg::FloatActivation { from, vals, .. } => {
+                self.acts_float.insert(from, vals);
+                self.maybe_sum_activations(out)?;
+            }
+            Msg::MaskedGradient { from, words, .. } => {
+                self.grads_exact.insert(from, words);
+                self.maybe_sum_gradients(out);
+            }
+            Msg::FloatGradient { from, vals, .. } => {
+                self.grads_float.insert(from, vals);
+                self.maybe_sum_gradients(out);
+            }
+            m => bail!("aggregator: unexpected message {m:?}"),
+        }
+        Ok(())
+    }
+
+    fn concurrent_safe(&self) -> bool {
+        self.backend.concurrent_safe()
+    }
+
+    fn take_metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
 }
 
 /// Helper: serialize a message and return (encoded, byte length).
@@ -563,5 +1131,15 @@ mod tests {
         assert_eq!(open_id(&key, 3, 18, &sealed), None);
         assert_eq!(open_id(&key, 4, 17, &sealed), None);
         assert_eq!(open_id(&[8u8; 32], 3, 17, &sealed), None);
+    }
+
+    #[test]
+    fn party_rng_streams_distinct() {
+        let mut a = party_rng(7, 0);
+        let mut b = party_rng(7, 1);
+        let mut a2 = party_rng(7, 0);
+        assert_ne!(a.next_u64(), b.next_u64(), "distinct parties, distinct streams");
+        let mut a = party_rng(7, 0);
+        assert_eq!(a.next_u64(), a2.next_u64(), "same party, same stream");
     }
 }

@@ -1,0 +1,272 @@
+//! The event-driven party abstraction the whole coordination layer is
+//! built on.
+//!
+//! Every protocol participant — [`Aggregator`](super::parties::Aggregator),
+//! [`ActiveParty`](super::parties::ActiveParty),
+//! [`PassiveParty`](super::parties::PassiveParty) — implements [`Party`]:
+//! a state machine that reacts to round-boundary hooks and incoming
+//! [`Msg`]s by pushing outgoing messages and driver notes into an
+//! [`Outbox`]. Parties never block and never talk to a transport
+//! directly, so the *same* state machines run under the byte-metered
+//! [`SimTransport`](crate::net::SimTransport), the multi-threaded
+//! [`ThreadedTransport`](crate::net::ThreadedTransport), and the TCP
+//! `serve`/`join` plumbing in `main.rs`.
+//!
+//! Determinism contract: a party's behaviour may depend only on its own
+//! state and the per-sender-FIFO message streams it receives — never on
+//! cross-sender arrival order. (The aggregator, for instance, buffers
+//! masked shares keyed by sender and combines them in client order.)
+//! That is what makes sim and threaded runs bit-identical.
+
+use anyhow::Result;
+
+use crate::model::ModelParams;
+use crate::net::wire::{Reader, Writer};
+use crate::net::{Addr, Phase};
+
+use super::messages::Msg;
+use super::metrics::Metrics;
+
+/// What kind of work a scheduled round performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundKind {
+    /// §4.0.1 key agreement only (the initial setup phase).
+    Setup,
+    /// §4.0.2 training round (forward, global step, backward, SGD).
+    Train,
+    /// §4.0.3 testing round (forward + predict, no labels leave the
+    /// active party).
+    Test,
+}
+
+/// One scheduled protocol round, announced to every party by the
+/// driver through [`Party::on_round_start`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundSpec {
+    /// Protocol round counter (test rounds continue the training
+    /// numbering; the initial setup uses [`SETUP_ROUND`]).
+    pub round: u32,
+    pub kind: RoundKind,
+    /// Whether this round begins with a §5.1 key rotation.
+    pub rotate: bool,
+    /// Phase bucket for byte counters and CPU attribution.
+    pub phase: Phase,
+    /// The mini-batch sample ids this round operates on (empty for
+    /// pure-setup rounds). Only the active party reads these.
+    pub ids: Vec<u64>,
+}
+
+/// Round number used by the initial setup round.
+pub const SETUP_ROUND: u32 = u32::MAX;
+
+/// Out-of-band signals a party reports to the driver (these are *not*
+/// protocol traffic and are never metered).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Note {
+    /// Aggregator: the global module's training loss for a round.
+    Loss { round: u32, loss: f32 },
+    /// Active party: the predictions received for a testing round.
+    Predictions { round: u32, probs: Vec<f32> },
+    /// Active party: the round's terminal event — the driver starts
+    /// the next scheduled round only after seeing this.
+    RoundDone { round: u32 },
+    /// A party hit a protocol error (threaded/remote runs surface it
+    /// through this instead of a panic).
+    Failed { who: u16, error: String },
+}
+
+/// Messages and notes a party produced while handling one event.
+#[derive(Default)]
+pub struct Outbox {
+    /// Protocol messages to route: (destination, message).
+    pub msgs: Vec<(Addr, Msg)>,
+    /// Driver notes (loss, predictions, round completion).
+    pub notes: Vec<Note>,
+}
+
+impl Outbox {
+    pub fn send(&mut self, to: Addr, msg: Msg) {
+        self.msgs.push((to, msg));
+    }
+
+    pub fn note(&mut self, n: Note) {
+        self.notes.push(n);
+    }
+}
+
+/// An event-driven protocol participant.
+///
+/// `Send` is required so transports may run each party on its own
+/// thread; parties built on the reference backend are trivially `Send`,
+/// and the PJRT engine is shared behind a `Sync` handle.
+pub trait Party: Send {
+    /// This party's network address (stable across rounds).
+    fn addr(&self) -> Addr;
+
+    /// Round boundary: reset per-round state and, for initiating
+    /// parties, emit the round's opening messages.
+    fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()>;
+
+    /// A protocol message arrived. Per-sender FIFO ordering is
+    /// guaranteed by every transport; cross-sender order is not.
+    fn on_message(&mut self, from: Addr, msg: Msg, out: &mut Outbox) -> Result<()>;
+
+    /// Whether this party may run concurrently with its peers. False
+    /// when it holds a shared engine handle that is not audited for
+    /// cross-thread use; `ThreadedTransport` refuses such party sets.
+    fn concurrent_safe(&self) -> bool {
+        true
+    }
+
+    /// Harvest the party's CPU meters after the run (leaves empty
+    /// meters behind).
+    fn take_metrics(&mut self) -> Metrics;
+
+    /// The final model parameters, for the party that owns them (the
+    /// active party); `None` for everyone else.
+    fn final_params(&mut self) -> Option<ModelParams> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire codecs for the driver-control plane (used by the TCP transport;
+// in-process transports pass these types directly).
+// ---------------------------------------------------------------------------
+
+fn phase_tag(p: Phase) -> u8 {
+    match p {
+        Phase::Setup => 0,
+        Phase::Training => 1,
+        Phase::Testing => 2,
+    }
+}
+
+fn phase_from(t: u8) -> Result<Phase> {
+    Ok(match t {
+        0 => Phase::Setup,
+        1 => Phase::Training,
+        2 => Phase::Testing,
+        t => anyhow::bail!("bad phase tag {t}"),
+    })
+}
+
+fn kind_tag(k: RoundKind) -> u8 {
+    match k {
+        RoundKind::Setup => 0,
+        RoundKind::Train => 1,
+        RoundKind::Test => 2,
+    }
+}
+
+fn kind_from(t: u8) -> Result<RoundKind> {
+    Ok(match t {
+        0 => RoundKind::Setup,
+        1 => RoundKind::Train,
+        2 => RoundKind::Test,
+        t => anyhow::bail!("bad round kind tag {t}"),
+    })
+}
+
+impl RoundSpec {
+    pub fn encode_into(&self, w: &mut Writer) {
+        w.u32(self.round);
+        w.u8(kind_tag(self.kind));
+        w.u8(self.rotate as u8);
+        w.u8(phase_tag(self.phase));
+        w.u64s(&self.ids);
+    }
+
+    pub fn decode_from(r: &mut Reader) -> Result<RoundSpec> {
+        Ok(RoundSpec {
+            round: r.u32()?,
+            kind: kind_from(r.u8()?)?,
+            rotate: r.u8()? != 0,
+            phase: phase_from(r.u8()?)?,
+            ids: r.u64s()?,
+        })
+    }
+}
+
+const N_LOSS: u8 = 1;
+const N_PREDICTIONS: u8 = 2;
+const N_ROUND_DONE: u8 = 3;
+const N_FAILED: u8 = 4;
+
+impl Note {
+    pub fn encode_into(&self, w: &mut Writer) {
+        match self {
+            Note::Loss { round, loss } => {
+                w.u8(N_LOSS);
+                w.u32(*round);
+                w.f32(*loss);
+            }
+            Note::Predictions { round, probs } => {
+                w.u8(N_PREDICTIONS);
+                w.u32(*round);
+                w.f32s(probs);
+            }
+            Note::RoundDone { round } => {
+                w.u8(N_ROUND_DONE);
+                w.u32(*round);
+            }
+            Note::Failed { who, error } => {
+                w.u8(N_FAILED);
+                w.u16(*who);
+                w.bytes(error.as_bytes());
+            }
+        }
+    }
+
+    pub fn decode_from(r: &mut Reader) -> Result<Note> {
+        Ok(match r.u8()? {
+            N_LOSS => Note::Loss { round: r.u32()?, loss: r.f32()? },
+            N_PREDICTIONS => Note::Predictions { round: r.u32()?, probs: r.f32s()? },
+            N_ROUND_DONE => Note::RoundDone { round: r.u32()? },
+            N_FAILED => Note::Failed {
+                who: r.u16()?,
+                error: String::from_utf8_lossy(&r.bytes()?).into_owned(),
+            },
+            t => anyhow::bail!("bad note tag {t}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_spec_roundtrip() {
+        let spec = RoundSpec {
+            round: 42,
+            kind: RoundKind::Train,
+            rotate: true,
+            phase: Phase::Training,
+            ids: vec![1, u64::MAX, 7],
+        };
+        let mut w = Writer::new();
+        spec.encode_into(&mut w);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(RoundSpec::decode_from(&mut r).unwrap(), spec);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn note_roundtrip() {
+        for n in [
+            Note::Loss { round: 3, loss: 0.25 },
+            Note::Predictions { round: 9, probs: vec![0.5, 0.125] },
+            Note::RoundDone { round: SETUP_ROUND },
+            Note::Failed { who: 2, error: "boom".into() },
+        ] {
+            let mut w = Writer::new();
+            n.encode_into(&mut w);
+            let buf = w.finish();
+            let mut r = Reader::new(&buf);
+            assert_eq!(Note::decode_from(&mut r).unwrap(), n);
+            assert!(r.done());
+        }
+    }
+}

@@ -7,18 +7,55 @@
 //!
 //! * **Layer 3 (this crate)** — the coordination protocol: X25519 key
 //!   agreement, encrypted mini-batch selection, Bonawitz-style pairwise
-//!   masking, the aggregator / active-party / passive-party state
-//!   machines, a byte-metered simulated network, and the training loop.
+//!   masking, and the §4 state machines, all behind an event-driven
+//!   [`Party`](coordinator::Party) / [`Transport`](net::Transport)
+//!   split (see below).
 //! * **Layer 2 (JAX, build time)** — per-party and global compute graphs
 //!   lowered once to HLO text (`python/compile/`), loaded here through
-//!   [`runtime`].
+//!   [`runtime`] (requires the `pjrt` cargo feature; without it the
+//!   pure-Rust reference backend runs everything).
 //! * **Layer 1 (Pallas, build time)** — the fused masked-matmul kernel
 //!   the L2 graphs call.
+//!
+//! ## Architecture: parties × transports
+//!
+//! Protocol logic lives in three event-driven state machines —
+//! [`Aggregator`](coordinator::parties::Aggregator),
+//! [`ActiveParty`](coordinator::parties::ActiveParty),
+//! [`PassiveParty`](coordinator::parties::PassiveParty) — that
+//! implement the [`Party`](coordinator::Party) trait: react to a
+//! round-boundary hook or an incoming message by pushing outgoing
+//! messages into an [`Outbox`](coordinator::Outbox). How those
+//! messages move is a [`Transport`](net::Transport) decision:
+//!
+//! * [`SimTransport`](net::SimTransport) — deterministic
+//!   single-threaded simulation over the byte-metered
+//!   [`Network`](net::Network); its counters are Table 2 and its CPU
+//!   attribution is Table 1 (the paper measures the same way, via
+//!   Flower's VCE).
+//! * [`ThreadedTransport`](net::ThreadedTransport) — one OS thread per
+//!   party. Bit-identical reports to the simulator (asserted in
+//!   `tests/transport_equivalence.rs`).
+//! * `vfl-sa serve` / `vfl-sa join` — the same machines over TCP
+//!   sockets, one process per party ([`net::tcp`]).
+//!
+//! The [`Experiment`](coordinator::Experiment) driver builds the party
+//! set, lays out a static round schedule (setup → training with §5.1
+//! key rotation → testing), pumps the configured transport, and folds
+//! the emitted notes into a [`RunReport`](coordinator::RunReport).
+//! [`run_experiment`](coordinator::run_experiment) does all of that in
+//! one call:
+//!
+//! ```no_run
+//! use vfl::coordinator::{run_experiment, RunConfig};
+//! let report = run_experiment(RunConfig::test("banking").unwrap(), None).unwrap();
+//! println!("losses: {:?}", report.losses);
+//! ```
 //!
 //! Everything the paper depends on is implemented from scratch in this
 //! crate: the crypto stack ([`crypto`]), the secure-aggregation core
 //! ([`secagg`]), the dataset substrate ([`data`]), the model substrate
-//! ([`model`]), the simulated network ([`net`]) and the homomorphic
+//! ([`model`]), the transports ([`net`]) and the homomorphic
 //! encryption baselines (Paillier and BFV) used by the Figure-2
 //! ablation.
 

@@ -2,22 +2,38 @@
 //!
 //! Subcommands (hand-rolled parser; clap is not vendored here):
 //!   train    --dataset <banking|adult|taobao> [--rounds N] [--rows N]
-//!            [--plain|--float] [--reference] [--seed N]
+//!            [--plain|--float] [--reference] [--threaded] [--seed N]
+//!   serve    --listen HOST:PORT [train flags] — host the aggregator +
+//!            driver; waits for every client to `join`
+//!   join     --connect HOST:PORT --party I [train flags] — run client
+//!            party I (0 = active) against a serving aggregator
 //!   bench    table1|table2|fig2|scaling [--reps N] [--quick] [--reference]
 //!   info     print dataset/model configurations
 //!
 //! `train` and `bench` default to the PJRT backend and expect
-//! `make artifacts` to have produced `artifacts/`.
+//! `make artifacts` (plus a `--features pjrt` build); `serve`/`join`
+//! run on the reference backend so a multi-process demo needs nothing
+//! but this binary. Every process of a serve/join run must pass the
+//! same dataset/rows/rounds/seed flags — the schedule and synthetic
+//! data are derived deterministically from them.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
 use vfl::bench::{fig2, tables};
-use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+use vfl::coordinator::{
+    build, run_experiment, summarize, BackendKind, Built, RunConfig, SecurityMode, TransportKind,
+};
 use vfl::model::ModelConfig;
-use vfl::net::{Addr, Phase};
+use vfl::net::{tcp, Addr, Phase};
 use vfl::runtime::Engine;
+
+/// A token is a flag if it starts with `-` and is not a number —
+/// `-3` and `-0.5` are values (e.g. `--seed -3`), `--plain` is not.
+fn looks_like_flag(tok: &str) -> bool {
+    tok.starts_with('-') && tok.parse::<f64>().is_err()
+}
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -26,8 +42,11 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), args[i + 1].clone());
+            if let Some((n, v)) = name.split_once('=') {
+                flags.insert(n.to_string(), v.to_string());
+                i += 1;
+            } else if let Some(v) = args.get(i + 1).filter(|v| !looks_like_flag(v)) {
+                flags.insert(name.to_string(), v.clone());
                 i += 2;
             } else {
                 flags.insert(name.to_string(), "true".into());
@@ -41,12 +60,8 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, flags)
 }
 
-fn load_engine(dataset: &str) -> Result<Engine> {
-    let cfg = ModelConfig::for_dataset(dataset).context("unknown dataset")?;
-    Engine::load("artifacts", &cfg)
-}
-
-fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+/// Build a RunConfig from the shared train/serve/join flags.
+fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     let dataset = flags.get("dataset").map(String::as_str).unwrap_or("banking");
     let mut cfg = RunConfig::paper(dataset).context("unknown dataset")?;
     if let Some(r) = flags.get("rounds") {
@@ -56,24 +71,46 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         cfg.n_rows = r.parse()?;
     }
     if let Some(s) = flags.get("seed") {
-        cfg.seed = s.parse()?;
+        cfg.seed = match s.parse::<u64>() {
+            Ok(v) => v,
+            Err(_) => s.parse::<i64>().context("bad --seed")? as u64,
+        };
     }
     if flags.contains_key("plain") {
         cfg.security = SecurityMode::Plain;
     } else if flags.contains_key("float") {
         cfg.security = SecurityMode::SecureFloat;
     }
-    let reference = flags.contains_key("reference");
-    if reference {
+    if flags.contains_key("reference") {
         cfg.backend = BackendKind::Reference;
     }
+    if flags.contains_key("threaded") {
+        cfg.transport = TransportKind::Threaded;
+    }
     cfg.test_rounds = flags.get("test-rounds").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    Ok(cfg)
+}
+
+fn load_engine(dataset: &str) -> Result<Engine> {
+    let cfg = ModelConfig::for_dataset(dataset).context("unknown dataset")?;
+    Engine::load("artifacts", &cfg)
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = cfg_from_flags(flags)?;
+    let dataset = cfg.model.dataset.clone();
+    let reference = cfg.backend == BackendKind::Reference;
+    // reject before any engine gets loaded: a shared PJRT engine may
+    // not be driven from several party threads
+    if cfg.transport == TransportKind::Threaded && !reference {
+        bail!("--threaded requires --reference (a shared PJRT engine is not driven from several threads)");
+    }
 
     println!(
-        "training {dataset}: {} rounds, {} rows, {:?}, backend {:?}",
-        cfg.train_rounds, cfg.n_rows, cfg.security, cfg.backend
+        "training {dataset}: {} rounds, {} rows, {:?}, backend {:?}, transport {:?}",
+        cfg.train_rounds, cfg.n_rows, cfg.security, cfg.backend, cfg.transport
     );
-    let engine = if reference { None } else { Some(load_engine(dataset)?) };
+    let engine = if reference { None } else { Some(load_engine(&dataset)?) };
     let report = run_experiment(cfg, engine.as_ref())?;
     for (i, l) in report.losses.iter().enumerate() {
         println!("round {i:>4}  loss {l:.5}");
@@ -92,6 +129,66 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         report.metrics.overhead_ms(1, Phase::Training),
         report.metrics.total_ms(1, Phase::Testing),
         report.metrics.overhead_ms(1, Phase::Testing),
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let listen =
+        flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:7800".to_string());
+    let mut cfg = cfg_from_flags(flags)?;
+    cfg.backend = BackendKind::Reference; // serve/join runs are self-contained
+    let n_clients = cfg.model.n_clients();
+    let Built { mut parties, schedule, test_labels, setups } = build(&cfg, None)?;
+    let aggregator = parties.remove(0);
+    drop(parties); // the clients run in their own `join` processes
+
+    println!(
+        "serving {} on {listen}: {} train rounds, {} clients — start them with:",
+        cfg.model.dataset, cfg.train_rounds, n_clients
+    );
+    for i in 0..n_clients {
+        println!("  vfl-sa join --connect {listen} --party {i} <same train flags>");
+    }
+    let out = tcp::serve(&listen, aggregator, &schedule, n_clients)?;
+    let s = summarize(&schedule, &test_labels, &out.notes);
+    for (i, l) in s.losses.iter().enumerate() {
+        println!("round {i:>4}  loss {l:.5}");
+    }
+    println!("test accuracy: {:.4}", s.test_accuracy);
+    println!("setups (1 + rotations): {setups}");
+    println!(
+        "active tx bytes: setup {} / train {} / test {}",
+        out.net.transmission_bytes(Addr::Client(0), Phase::Setup),
+        out.net.transmission_bytes(Addr::Client(0), Phase::Training),
+        out.net.transmission_bytes(Addr::Client(0), Phase::Testing),
+    );
+    Ok(())
+}
+
+fn cmd_join(flags: &HashMap<String, String>) -> Result<()> {
+    let connect =
+        flags.get("connect").cloned().unwrap_or_else(|| "127.0.0.1:7800".to_string());
+    let party_idx: usize =
+        flags.get("party").context("--party <index> required (0 = active)")?.parse()?;
+    let mut cfg = cfg_from_flags(flags)?;
+    cfg.backend = BackendKind::Reference;
+    let n_clients = cfg.model.n_clients();
+    if party_idx >= n_clients {
+        bail!("--party {party_idx} out of range ({} has {n_clients} clients)", cfg.model.dataset);
+    }
+    let Built { mut parties, .. } = build(&cfg, None)?;
+    let party = parties.remove(party_idx + 1); // node 0 is the aggregator
+    drop(parties);
+
+    let metrics = tcp::join(&connect, party_idx, party)?;
+    let node = party_idx + 1;
+    println!(
+        "party {party_idx} done — CPU ms: setup {:.1} / train {:.1} (overhead {:.1}) / test {:.1}",
+        metrics.total_ms(node, Phase::Setup),
+        metrics.total_ms(node, Phase::Training),
+        metrics.overhead_ms(node, Phase::Training),
+        metrics.total_ms(node, Phase::Testing),
     );
     Ok(())
 }
@@ -157,13 +254,73 @@ fn main() -> Result<()> {
     let (pos, flags) = parse_flags(&args);
     match pos.first().map(String::as_str) {
         Some("train") => cmd_train(&flags),
+        Some("serve") => cmd_serve(&flags),
+        Some("join") => cmd_join(&flags),
         Some("bench") => cmd_bench(&pos[1..], &flags),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: vfl-sa <train|bench|info> [flags]");
-            eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference]");
+            eprintln!("usage: vfl-sa <train|serve|join|bench|info> [flags]");
+            eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded]");
+            eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
+            eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
             eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
             Ok(())
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn positional_and_boolean_flags() {
+        let (pos, flags) = parse_flags(&args(&["bench", "table2", "--quick", "--reference"]));
+        assert_eq!(pos, vec!["bench", "table2"]);
+        assert_eq!(flags.get("quick").map(String::as_str), Some("true"));
+        assert_eq!(flags.get("reference").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn valued_flags() {
+        let (pos, flags) = parse_flags(&args(&["train", "--rounds", "7", "--dataset", "adult"]));
+        assert_eq!(pos, vec!["train"]);
+        assert_eq!(flags.get("rounds").map(String::as_str), Some("7"));
+        assert_eq!(flags.get("dataset").map(String::as_str), Some("adult"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let (_, flags) = parse_flags(&args(&["train", "--seed", "-3", "--rounds", "2"]));
+        assert_eq!(flags.get("seed").map(String::as_str), Some("-3"));
+        assert_eq!(flags.get("rounds").map(String::as_str), Some("2"));
+        let (_, flags) = parse_flags(&args(&["train", "--lr", "-0.5"]));
+        assert_eq!(flags.get("lr").map(String::as_str), Some("-0.5"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let (_, flags) = parse_flags(&args(&["train", "--plain", "--rounds", "3"]));
+        assert_eq!(flags.get("plain").map(String::as_str), Some("true"));
+        assert_eq!(flags.get("rounds").map(String::as_str), Some("3"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let (_, flags) = parse_flags(&args(&["train", "--seed=-3", "--dataset=taobao"]));
+        assert_eq!(flags.get("seed").map(String::as_str), Some("-3"));
+        assert_eq!(flags.get("dataset").map(String::as_str), Some("taobao"));
+    }
+
+    #[test]
+    fn negative_seed_accepted_by_config() {
+        let mut flags = HashMap::new();
+        flags.insert("seed".to_string(), "-3".to_string());
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert_eq!(cfg.seed, (-3i64) as u64);
     }
 }

@@ -1,0 +1,150 @@
+//! Length-prefixed socket framing for the TCP transport.
+//!
+//! A frame is `u32 length ‖ u8 kind ‖ payload`, little-endian, written
+//! atomically per frame. Protocol [`Msg`]s stay opaque bytes here —
+//! the Table-2 byte counters meter the *inner* message encoding, so a
+//! TCP run meters identically to a simulated one (framing overhead is
+//! transport cost, not protocol cost).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::party::{Note, RoundSpec};
+use crate::net::wire::{Reader, Writer};
+
+/// Everything that crosses a serve/join socket.
+#[derive(Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server greeting: which client index this socket is.
+    Hello { client: u16 },
+    /// Server → client round boundary.
+    Round(RoundSpec),
+    /// A serialized protocol [`Msg`](crate::coordinator::messages::Msg).
+    Msg { bytes: Vec<u8> },
+    /// Client → server driver note.
+    Note(Note),
+    /// Server → client orderly shutdown.
+    Stop,
+}
+
+const F_HELLO: u8 = 1;
+const F_ROUND: u8 = 2;
+const F_MSG: u8 = 3;
+const F_NOTE: u8 = 4;
+const F_STOP: u8 = 5;
+
+/// Cap a frame at 256 MiB — far above any legitimate message, low
+/// enough to reject garbage lengths before allocating.
+const MAX_FRAME: u32 = 256 << 20;
+
+impl Frame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Frame::Hello { client } => {
+                w.u8(F_HELLO);
+                w.u16(*client);
+            }
+            Frame::Round(spec) => {
+                w.u8(F_ROUND);
+                spec.encode_into(&mut w);
+            }
+            Frame::Msg { bytes } => {
+                w.u8(F_MSG);
+                w.bytes(bytes);
+            }
+            Frame::Note(n) => {
+                w.u8(F_NOTE);
+                n.encode_into(&mut w);
+            }
+            Frame::Stop => w.u8(F_STOP),
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Frame> {
+        let mut r = Reader::new(buf);
+        let f = match r.u8()? {
+            F_HELLO => Frame::Hello { client: r.u16()? },
+            F_ROUND => Frame::Round(RoundSpec::decode_from(&mut r)?),
+            F_MSG => Frame::Msg { bytes: r.bytes()? },
+            F_NOTE => Frame::Note(Note::decode_from(&mut r)?),
+            F_STOP => Frame::Stop,
+            t => bail!("unknown frame kind {t}"),
+        };
+        if !r.done() {
+            bail!("trailing bytes in frame ({} left)", r.remaining());
+        }
+        Ok(f)
+    }
+
+    /// Write one length-prefixed frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let body = self.encode();
+        w.write_all(&(body.len() as u32).to_le_bytes()).context("frame length")?;
+        w.write_all(&body).context("frame body")?;
+        w.flush().context("frame flush")?;
+        Ok(())
+    }
+
+    /// Read one length-prefixed frame (blocking).
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut len = [0u8; 4];
+        r.read_exact(&mut len).context("frame length")?;
+        let len = u32::from_le_bytes(len);
+        if len > MAX_FRAME {
+            bail!("frame length {len} exceeds cap");
+        }
+        let mut body = vec![0u8; len as usize];
+        r.read_exact(&mut body).context("frame body")?;
+        Frame::decode(&body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::party::RoundKind;
+    use crate::net::Phase;
+
+    #[test]
+    fn frames_roundtrip() {
+        let frames = [
+            Frame::Hello { client: 3 },
+            Frame::Round(RoundSpec {
+                round: 5,
+                kind: RoundKind::Test,
+                rotate: false,
+                phase: Phase::Testing,
+                ids: vec![9, 8, 7],
+            }),
+            Frame::Msg { bytes: vec![1, 2, 3, 4] },
+            Frame::Note(Note::Loss { round: 2, loss: 1.5 }),
+            Frame::Stop,
+        ];
+        for f in frames {
+            let mut buf = Vec::new();
+            f.write_to(&mut buf).unwrap();
+            let mut cur = std::io::Cursor::new(buf);
+            assert_eq!(Frame::read_from(&mut cur).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let mut buf = Vec::new();
+        Frame::Stop.write_to(&mut buf).unwrap();
+        buf.pop();
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(Frame::read_from(&mut cur).is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut buf = (u32::MAX).to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0; 8]);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(Frame::read_from(&mut cur).is_err());
+    }
+}

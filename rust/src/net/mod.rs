@@ -1,7 +1,21 @@
-//! Simulated network substrate: wire format + byte-metered transport.
+//! Network substrate: wire format, byte metering, and the pluggable
+//! transports that carry the §4 protocol.
+//!
+//! * [`wire`] — the little-endian length-prefixed encoding primitives.
+//! * [`transport`] — [`Network`] (the per-(phase, party, direction)
+//!   byte counters behind Table 2), the [`Transport`] trait, and the
+//!   deterministic single-threaded [`SimTransport`].
+//! * [`threaded`] — [`ThreadedTransport`]: one OS thread per party,
+//!   channels in between, bit-identical results to the simulator.
+//! * [`frame`] / [`tcp`] — length-prefixed socket framing and the
+//!   cross-process `serve`/`join` plumbing.
 
+pub mod frame;
+pub mod tcp;
+pub mod threaded;
 pub mod transport;
 pub mod wire;
 
-pub use transport::{Addr, Network, Phase};
+pub use threaded::ThreadedTransport;
+pub use transport::{Addr, Network, Phase, SimTransport, Transport, TransportOutcome};
 pub use wire::{Reader, Writer};

@@ -1,0 +1,206 @@
+//! Cross-process transport: the aggregator (plus driver) serves TCP,
+//! every client party joins over a socket — `vfl-sa serve` / `vfl-sa
+//! join` in `main.rs`.
+//!
+//! The star topology maps one-to-one onto sockets: each client holds a
+//! single connection to the server, which relays nothing client-to-
+//! client (the §4 protocol never needs it). Round-boundary controls
+//! and driver notes ride the same connection as [`Frame`]s. The server
+//! meters the *inner* protocol-message encodings through a [`Network`],
+//! so a socket run reports the same Table-2 byte counters as the
+//! simulator; framing overhead is transport cost and deliberately
+//! uncounted.
+//!
+//! Every process builds the same deterministic synthetic dataset from
+//! the shared `RunConfig` seed, so no raw features ever cross a
+//! socket that wouldn't in the simulated protocol.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::messages::Msg;
+use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+use crate::coordinator::Metrics;
+
+use super::frame::Frame;
+use super::{Addr, Network};
+
+/// What a completed `serve` run hands back.
+pub struct ServeOutcome {
+    /// Driver notes: losses, predictions, round completions.
+    pub notes: Vec<Note>,
+    /// Table-2 byte counters, metered server-side (every protocol
+    /// message crosses the aggregator in a star topology).
+    pub net: Network,
+    /// The aggregator's CPU meters (clients report their own locally).
+    pub metrics: Metrics,
+}
+
+enum Event {
+    Frame(usize, Frame),
+    Gone(usize, String),
+}
+
+/// Route an aggregator outbox to the client sockets, metering each
+/// protocol message.
+fn route_server(
+    net: &mut Network,
+    writers: &mut [TcpStream],
+    ob: Outbox,
+    notes: &mut Vec<Note>,
+) -> Result<()> {
+    for (to, msg) in ob.msgs {
+        let Addr::Client(ci) = to else { bail!("aggregator addressed itself") };
+        let bytes = msg.encode();
+        net.meter(Addr::Aggregator, to, bytes.len());
+        Frame::Msg { bytes }.write_to(&mut writers[ci])?;
+    }
+    notes.extend(ob.notes);
+    Ok(())
+}
+
+/// Host the aggregator: accept `n_clients` joins, run the schedule,
+/// return the run's notes and byte counters.
+pub fn serve(
+    listen: &str,
+    mut aggregator: Box<dyn Party + '_>,
+    schedule: &[RoundSpec],
+    n_clients: usize,
+) -> Result<ServeOutcome> {
+    let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+    eprintln!("serve: listening on {listen}, waiting for {n_clients} client(s)");
+
+    let (tx, rx) = channel::<Event>();
+    let mut writers: Vec<Option<TcpStream>> = (0..n_clients).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < n_clients {
+        let (stream, peer) = listener.accept().context("accept")?;
+        stream.set_nodelay(true).ok();
+        let mut reader = stream.try_clone().context("clone stream")?;
+        let hello = Frame::read_from(&mut reader)?;
+        let Frame::Hello { client } = hello else { bail!("expected Hello, got {hello:?}") };
+        let ci = client as usize;
+        if ci >= n_clients {
+            bail!("client index {ci} out of range (need 0..{n_clients})");
+        }
+        if writers[ci].is_some() {
+            bail!("client {ci} connected twice");
+        }
+        eprintln!("serve: client {ci} joined from {peer}");
+        writers[ci] = Some(stream);
+        let tx = tx.clone();
+        thread::spawn(move || loop {
+            match Frame::read_from(&mut reader) {
+                Ok(f) => {
+                    if tx.send(Event::Frame(ci, f)).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Event::Gone(ci, format!("{e:#}")));
+                    break;
+                }
+            }
+        });
+        connected += 1;
+    }
+    drop(tx);
+    let mut writers: Vec<TcpStream> =
+        writers.into_iter().map(|w| w.expect("all clients connected")).collect();
+
+    let mut net = Network::new(n_clients);
+    let mut notes: Vec<Note> = Vec::new();
+    for spec in schedule {
+        net.phase = spec.phase;
+        // boundary first, on every socket, so each client orders the
+        // round ahead of its first protocol message. Only the active
+        // party (client 0) receives the batch ids: shipping them to a
+        // passive would leak exactly the batch membership the sealed-ID
+        // broadcast (§4.0.2) exists to hide.
+        for (ci, w) in writers.iter_mut().enumerate() {
+            let for_client = if ci == 0 {
+                spec.clone()
+            } else {
+                RoundSpec { ids: Vec::new(), ..spec.clone() }
+            };
+            Frame::Round(for_client).write_to(w)?;
+        }
+        let mut ob = Outbox::default();
+        aggregator.on_round_start(spec, &mut ob)?;
+        route_server(&mut net, &mut writers, ob, &mut notes)?;
+        loop {
+            match rx.recv().map_err(|_| anyhow!("all client connections lost"))? {
+                Event::Gone(ci, e) => bail!("client {ci} disconnected: {e}"),
+                Event::Frame(ci, Frame::Msg { bytes }) => {
+                    net.meter(Addr::Client(ci), Addr::Aggregator, bytes.len());
+                    let msg = Msg::decode(&bytes)?;
+                    let mut ob = Outbox::default();
+                    aggregator.on_message(Addr::Client(ci), msg, &mut ob)?;
+                    route_server(&mut net, &mut writers, ob, &mut notes)?;
+                }
+                Event::Frame(_, Frame::Note(n)) => match n {
+                    Note::RoundDone { round } if round == spec.round => {
+                        notes.push(Note::RoundDone { round });
+                        break;
+                    }
+                    Note::Failed { who, error } => bail!("party {who} failed: {error}"),
+                    other => notes.push(other),
+                },
+                Event::Frame(ci, f) => bail!("unexpected frame from client {ci}: {f:?}"),
+            }
+        }
+    }
+    for w in writers.iter_mut() {
+        let _ = Frame::Stop.write_to(w);
+    }
+    Ok(ServeOutcome { notes, net, metrics: aggregator.take_metrics() })
+}
+
+/// Run one client party against a serving aggregator. Returns the
+/// party's CPU meters once the server signals Stop.
+pub fn join(connect: &str, client: usize, mut party: Box<dyn Party + '_>) -> Result<Metrics> {
+    let mut stream = TcpStream::connect(connect).with_context(|| format!("connect {connect}"))?;
+    stream.set_nodelay(true).ok();
+    Frame::Hello { client: client as u16 }.write_to(&mut stream)?;
+    eprintln!("join: client {client} connected to {connect}");
+
+    let result = client_loop(&mut *party, &mut stream);
+    if let Err(e) = &result {
+        // best-effort: surface the failure to the server before dying
+        let _ = Frame::Note(Note::Failed {
+            who: (client + 1) as u16,
+            error: format!("{e:#}"),
+        })
+        .write_to(&mut stream);
+    }
+    result?;
+    Ok(party.take_metrics())
+}
+
+fn client_loop(party: &mut dyn Party, stream: &mut TcpStream) -> Result<()> {
+    loop {
+        let frame = Frame::read_from(stream)?;
+        let mut ob = Outbox::default();
+        match frame {
+            Frame::Stop => return Ok(()),
+            Frame::Round(spec) => party.on_round_start(&spec, &mut ob)?,
+            Frame::Msg { bytes } => {
+                let msg = Msg::decode(&bytes)?;
+                party.on_message(Addr::Aggregator, msg, &mut ob)?;
+            }
+            f => bail!("unexpected frame {f:?}"),
+        }
+        for (to, msg) in ob.msgs {
+            if to != Addr::Aggregator {
+                bail!("clients may only address the aggregator");
+            }
+            Frame::Msg { bytes: msg.encode() }.write_to(stream)?;
+        }
+        for n in ob.notes {
+            Frame::Note(n).write_to(stream)?;
+        }
+    }
+}

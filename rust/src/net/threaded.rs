@@ -1,0 +1,246 @@
+//! Multi-threaded transport: every party runs on its own OS thread and
+//! exchanges serialized messages over channels — the same §4 state
+//! machines the simulator drives, now genuinely concurrent.
+//!
+//! Topology and ordering guarantees
+//! --------------------------------
+//! The paper's star topology is load-bearing here: clients only ever
+//! talk to the aggregator, so each client's inbox has exactly one
+//! producer (the aggregator thread) and per-sender FIFO holds
+//! trivially. Round-start controls are routed *through* the aggregator
+//! thread for the same reason — the aggregator forwards the control to
+//! every client before acting on it itself, which orders each round's
+//! control ahead of that round's first protocol message on every
+//! channel. The aggregator's own inbox is multi-producer, but the §4
+//! machines only rely on per-sender ordering (fan-ins are buffered by
+//! sender id), so arbitrary interleaving across clients is safe.
+//!
+//! Bytes are metered through the shared [`Network`] exactly as the
+//! simulator meters them, and the driver serializes rounds on the
+//! active party's `RoundDone` note — which is why a threaded run
+//! produces bit-identical reports and Table-2 counters to a simulated
+//! one (asserted by `tests/transport_equivalence.rs`).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::messages::Msg;
+use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+
+use super::transport::{harvest, node_of_addr, Transport, TransportOutcome};
+use super::{Addr, Network};
+
+/// What flows over a party's inbox channel.
+enum Envelope {
+    /// Round boundary (driver → aggregator → everyone).
+    Round(RoundSpec),
+    /// A serialized protocol message.
+    Msg { from: Addr, bytes: Vec<u8> },
+    /// Orderly shutdown.
+    Stop,
+}
+
+/// Where a party's outgoing traffic goes.
+enum Router {
+    /// The aggregator addresses any client directly.
+    Aggregator { clients: Vec<Sender<Envelope>> },
+    /// Clients only ever address the aggregator.
+    Client { agg: Sender<Envelope> },
+}
+
+impl Router {
+    fn send(&self, from: Addr, to: Addr, bytes: Vec<u8>) -> Result<()> {
+        let tx = match (self, to) {
+            (Router::Aggregator { clients }, Addr::Client(i)) => {
+                clients.get(i).ok_or_else(|| anyhow!("client {i} out of range"))?
+            }
+            (Router::Client { agg }, Addr::Aggregator) => agg,
+            _ => bail!("invalid route {from:?} → {to:?} (star topology)"),
+        };
+        tx.send(Envelope::Msg { from, bytes }).map_err(|_| anyhow!("peer channel closed"))
+    }
+}
+
+/// One party's event loop: receive, react, route, repeat.
+fn run_party(
+    party: &mut dyn Party,
+    rx: &Receiver<Envelope>,
+    router: &Router,
+    note_tx: &Sender<Note>,
+    net: &Arc<Mutex<Network>>,
+) -> Result<()> {
+    let me = party.addr();
+    loop {
+        // a closed inbox means every producer is gone: exit quietly
+        let Ok(env) = rx.recv() else { break };
+        let mut ob = Outbox::default();
+        match env {
+            Envelope::Stop => {
+                if let Router::Aggregator { clients } = router {
+                    for c in clients {
+                        let _ = c.send(Envelope::Stop);
+                    }
+                }
+                break;
+            }
+            Envelope::Round(spec) => {
+                // forward the boundary before acting on it, so every
+                // client channel sees Round(k) ahead of any round-k
+                // protocol message
+                if let Router::Aggregator { clients } = router {
+                    for c in clients {
+                        c.send(Envelope::Round(spec.clone()))
+                            .map_err(|_| anyhow!("client channel closed"))?;
+                    }
+                }
+                party.on_round_start(&spec, &mut ob)?;
+            }
+            Envelope::Msg { from, bytes } => {
+                let msg = Msg::decode(&bytes)?;
+                party.on_message(from, msg, &mut ob)?;
+            }
+        }
+        for (to, msg) in ob.msgs {
+            let bytes = msg.encode();
+            net.lock().unwrap().meter(me, to, bytes.len());
+            router.send(me, to, bytes)?;
+        }
+        for n in ob.notes {
+            note_tx.send(n).map_err(|_| anyhow!("driver gone"))?;
+        }
+    }
+    Ok(())
+}
+
+/// One thread per party, channels for transport, rounds serialized on
+/// the active party's `RoundDone` note.
+pub struct ThreadedTransport {
+    n_clients: usize,
+}
+
+impl ThreadedTransport {
+    pub fn new(n_clients: usize) -> Self {
+        ThreadedTransport { n_clients }
+    }
+}
+
+impl Transport for ThreadedTransport {
+    fn execute<'e>(
+        &mut self,
+        parties: Vec<Box<dyn Party + 'e>>,
+        schedule: &[RoundSpec],
+    ) -> Result<TransportOutcome> {
+        assert_eq!(parties.len(), self.n_clients + 1, "aggregator + clients");
+        // enforce the `unsafe impl Sync for Engine` contract at the
+        // boundary where concurrency actually starts: parties holding
+        // an unaudited shared engine must not run on sibling threads
+        if parties.iter().any(|p| !p.concurrent_safe()) {
+            bail!(
+                "the threaded transport requires the reference backend \
+                 (a shared PJRT engine is not audited for concurrent use)"
+            );
+        }
+        let net = Arc::new(Mutex::new(Network::new(self.n_clients)));
+        let (note_tx, note_rx) = channel::<Note>();
+
+        // one inbox per party; the driver keeps only the aggregator's
+        // sender, and each client thread keeps only the aggregator's —
+        // so a dead aggregator closes every client inbox (no hangs)
+        let mut inboxes: Vec<(Sender<Envelope>, Receiver<Envelope>)> =
+            (0..parties.len()).map(|_| channel()).collect();
+        let agg_tx = inboxes[0].0.clone();
+        let client_txs: Vec<Sender<Envelope>> =
+            inboxes.iter().skip(1).map(|(tx, _)| tx.clone()).collect();
+
+        let outcome = thread::scope(|s| -> Result<TransportOutcome> {
+            let mut handles = Vec::with_capacity(parties.len());
+            for (idx, mut party) in parties.into_iter().enumerate() {
+                let rx = inboxes.remove(0).1; // consume in order
+                let router = if idx == 0 {
+                    Router::Aggregator { clients: client_txs.clone() }
+                } else {
+                    Router::Client { agg: agg_tx.clone() }
+                };
+                let note_tx = note_tx.clone();
+                let net = Arc::clone(&net);
+                handles.push(s.spawn(move || {
+                    let who = node_of_addr(party.addr()) as u16;
+                    // catch panics too: an unwinding party thread must
+                    // still surface a Failed note, or the driver would
+                    // block on note_rx forever (siblings keep their
+                    // note_tx clones alive)
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_party(&mut *party, &rx, &router, &note_tx, &net)
+                    }));
+                    let error = match run {
+                        Ok(Ok(())) => None,
+                        Ok(Err(e)) => Some(format!("{e:#}")),
+                        Err(p) => Some(format!(
+                            "panicked: {}",
+                            p.downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| p.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "<non-string payload>".into())
+                        )),
+                    };
+                    if let Some(error) = error {
+                        let _ = note_tx.send(Note::Failed { who, error });
+                    }
+                    party
+                }));
+            }
+            // the spawning loop is done with these; drop our clones so
+            // channel closure semantics reflect only live threads
+            drop(inboxes);
+            drop(client_txs);
+            drop(note_tx);
+
+            let mut notes: Vec<Note> = Vec::new();
+            let mut failure: Option<String> = None;
+            'rounds: for spec in schedule {
+                net.lock().unwrap().phase = spec.phase;
+                if agg_tx.send(Envelope::Round(spec.clone())).is_err() {
+                    failure = Some("aggregator exited early".into());
+                    break 'rounds;
+                }
+                loop {
+                    let Ok(note) = note_rx.recv() else {
+                        failure = Some(format!("all parties exited in round {}", spec.round));
+                        break 'rounds;
+                    };
+                    match &note {
+                        Note::RoundDone { round } if *round == spec.round => {
+                            notes.push(note);
+                            break;
+                        }
+                        Note::Failed { who, error } => {
+                            failure = Some(format!("party {who} failed: {error}"));
+                            break 'rounds;
+                        }
+                        _ => notes.push(note),
+                    }
+                }
+            }
+            let _ = agg_tx.send(Envelope::Stop);
+            drop(agg_tx);
+
+            let mut finished: Vec<Box<dyn Party + 'e>> = Vec::with_capacity(handles.len());
+            for h in handles {
+                finished.push(h.join().map_err(|_| anyhow!("party thread panicked"))?);
+            }
+            if let Some(err) = failure {
+                bail!("threaded run failed: {err}");
+            }
+            let net = Arc::try_unwrap(net)
+                .map_err(|_| anyhow!("network still shared after join"))?
+                .into_inner()
+                .map_err(|_| anyhow!("network mutex poisoned"))?;
+            harvest(finished, notes, net)
+        })?;
+
+        Ok(outcome)
+    }
+}

@@ -1,11 +1,26 @@
-//! Simulated star-topology network with byte accounting.
+//! The pluggable transport layer: how [`Party`] state machines
+//! exchange bytes.
 //!
-//! All protocol traffic flows through the aggregator (the paper's
-//! topology). The transport delivers serialized messages between
-//! in-process endpoints and meters every byte per (party, phase,
-//! direction) — these counters *are* Table 2.
+//! * [`Network`] — the byte-metered star-topology message queue. Every
+//!   transport meters its traffic through one of these, because the
+//!   per-(phase, party, direction) counters *are* Table 2.
+//! * [`Transport`] — runs a set of parties over a round schedule.
+//! * [`SimTransport`] — single-threaded deterministic simulation: one
+//!   global FIFO, parties invoked inline (the paper's measurement
+//!   setup, like Flower's VCE).
+//!
+//! The multi-threaded implementation lives in
+//! [`threaded`](super::threaded); the cross-process TCP plumbing in
+//! [`tcp`](super::tcp).
 
 use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::messages::Msg;
+use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+use crate::coordinator::Metrics;
+use crate::model::ModelParams;
 
 /// Protocol phases, matching the paper's reporting granularity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -29,7 +44,7 @@ pub struct Traffic {
     pub received: u64,
 }
 
-/// The simulated network.
+/// The byte-metered star-topology network.
 pub struct Network {
     n_clients: usize,
     pub phase: Phase,
@@ -69,37 +84,28 @@ impl Network {
         }
     }
 
-    /// Send serialized bytes; counts them against the current phase.
-    pub fn send(&mut self, from: Addr, to: Addr, payload: Vec<u8>) {
+    /// Count one message's bytes against the current phase without
+    /// queueing it (transports that move bytes themselves — threads,
+    /// sockets — still meter here so Table 2 is transport-independent).
+    pub fn meter(&mut self, from: Addr, to: Addr, len: usize) {
         let p = phase_idx(self.phase);
         let fi = self.node_idx(from);
         let ti = self.node_idx(to);
-        self.traffic[p][fi].sent += payload.len() as u64;
-        self.traffic[p][ti].received += payload.len() as u64;
+        self.traffic[p][fi].sent += len as u64;
+        self.traffic[p][ti].received += len as u64;
         self.messages += 1;
+    }
+
+    /// Send serialized bytes; counts them against the current phase.
+    pub fn send(&mut self, from: Addr, to: Addr, payload: Vec<u8>) {
+        self.meter(from, to, payload.len());
         self.queue.push_back((from, to, payload));
     }
 
-    /// Deliver all queued messages addressed to `to` (FIFO).
-    pub fn deliver(&mut self, to: Addr) -> Vec<(Addr, Vec<u8>)> {
-        let mut out = Vec::new();
-        let mut rest = VecDeque::new();
-        while let Some((f, t, m)) = self.queue.pop_front() {
-            if t == to {
-                out.push((f, m));
-            } else {
-                rest.push_back((f, t, m));
-            }
-        }
-        self.queue = rest;
-        out
-    }
-
-    /// Pop exactly one message for `to`, if any.
-    pub fn recv_one(&mut self, to: Addr) -> Option<(Addr, Vec<u8>)> {
-        let pos = self.queue.iter().position(|(_, t, _)| *t == to)?;
-        let (f, _, m) = self.queue.remove(pos).unwrap();
-        Some((f, m))
+    /// Pop the oldest queued message regardless of destination (the
+    /// simulator's pump — one global FIFO).
+    pub fn pop(&mut self) -> Option<(Addr, Addr, Vec<u8>)> {
+        self.queue.pop_front()
     }
 
     pub fn pending(&self) -> usize {
@@ -135,22 +141,148 @@ impl Network {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Transport
+// ---------------------------------------------------------------------------
+
+/// What a completed transport run hands back to the driver.
+pub struct TransportOutcome {
+    /// Every driver note emitted during the run, in observation order.
+    pub notes: Vec<Note>,
+    /// The byte counters (Table 2).
+    pub net: Network,
+    /// Merged per-party CPU meters (Table 1).
+    pub metrics: Metrics,
+    /// Final model parameters, harvested from the active party.
+    pub final_params: ModelParams,
+}
+
+/// Runs a full party set over a round schedule.
+///
+/// `parties` is indexed by node: entry 0 is the aggregator, entry
+/// `i + 1` is client `i`. Implementations must (a) preserve per-sender
+/// FIFO message ordering, (b) start round *k + 1* only after round
+/// *k*'s `RoundDone` note, and (c) meter every protocol message through
+/// a [`Network`] — under those three rules every transport produces
+/// bit-identical results.
+pub trait Transport {
+    fn execute<'e>(
+        &mut self,
+        parties: Vec<Box<dyn Party + 'e>>,
+        schedule: &[RoundSpec],
+    ) -> Result<TransportOutcome>;
+}
+
+pub(crate) fn addr_of_node(idx: usize) -> Addr {
+    if idx == 0 {
+        Addr::Aggregator
+    } else {
+        Addr::Client(idx - 1)
+    }
+}
+
+pub(crate) fn node_of_addr(a: Addr) -> usize {
+    match a {
+        Addr::Aggregator => 0,
+        Addr::Client(i) => i + 1,
+    }
+}
+
+/// Harvest metrics + final params from a finished party set.
+pub(crate) fn harvest<'e>(
+    mut parties: Vec<Box<dyn Party + 'e>>,
+    notes: Vec<Note>,
+    net: Network,
+) -> Result<TransportOutcome> {
+    let mut metrics = Metrics::new();
+    let mut final_params = None;
+    for p in parties.iter_mut() {
+        metrics.merge(p.take_metrics());
+        if let Some(fp) = p.final_params() {
+            final_params = Some(fp);
+        }
+    }
+    let final_params = match final_params {
+        Some(fp) => fp,
+        None => bail!("no party reported final parameters"),
+    };
+    Ok(TransportOutcome { notes, net, metrics, final_params })
+}
+
+/// Single-threaded deterministic simulation: parties run inline over
+/// one global FIFO wrapped around the byte-metered [`Network`]. This
+/// is the measurement configuration — exact byte counters, exact
+/// per-party CPU attribution, zero scheduling noise.
+pub struct SimTransport {
+    n_clients: usize,
+}
+
+impl SimTransport {
+    pub fn new(n_clients: usize) -> Self {
+        SimTransport { n_clients }
+    }
+}
+
+impl Transport for SimTransport {
+    fn execute<'e>(
+        &mut self,
+        mut parties: Vec<Box<dyn Party + 'e>>,
+        schedule: &[RoundSpec],
+    ) -> Result<TransportOutcome> {
+        assert_eq!(parties.len(), self.n_clients + 1, "aggregator + clients");
+        let mut net = Network::new(self.n_clients);
+        let mut notes: Vec<Note> = Vec::new();
+
+        let flush = |net: &mut Network, from: Addr, ob: Outbox, notes: &mut Vec<Note>| {
+            for (to, msg) in ob.msgs {
+                net.send(from, to, msg.encode());
+            }
+            notes.extend(ob.notes);
+        };
+
+        for spec in schedule {
+            net.phase = spec.phase;
+            let done_before = notes.len();
+            // aggregator first (it opens setup rounds), then clients
+            for (idx, p) in parties.iter_mut().enumerate() {
+                let mut ob = Outbox::default();
+                p.on_round_start(spec, &mut ob)?;
+                flush(&mut net, addr_of_node(idx), ob, &mut notes);
+            }
+            // pump the global FIFO dry
+            while let Some((from, to, bytes)) = net.pop() {
+                let msg = Msg::decode(&bytes)?;
+                let idx = node_of_addr(to);
+                let mut ob = Outbox::default();
+                parties[idx].on_message(from, msg, &mut ob)?;
+                flush(&mut net, to, ob, &mut notes);
+            }
+            let done = notes[done_before..]
+                .iter()
+                .any(|n| matches!(n, Note::RoundDone { round } if *round == spec.round));
+            if !done {
+                bail!("protocol stalled: round {} never completed", spec.round);
+            }
+        }
+
+        harvest(parties, notes, net)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn send_and_deliver() {
+    fn send_queues_and_pops_in_order() {
         let mut net = Network::new(2);
         net.send(Addr::Client(0), Addr::Aggregator, vec![1, 2, 3]);
         net.send(Addr::Client(1), Addr::Aggregator, vec![4]);
         net.send(Addr::Aggregator, Addr::Client(0), vec![5, 6]);
-        let msgs = net.deliver(Addr::Aggregator);
-        assert_eq!(msgs.len(), 2);
-        assert_eq!(msgs[0], (Addr::Client(0), vec![1, 2, 3]));
-        assert_eq!(net.pending(), 1);
-        let m = net.recv_one(Addr::Client(0)).unwrap();
-        assert_eq!(m.1, vec![5, 6]);
+        assert_eq!(net.pending(), 3);
+        assert_eq!(net.pop().unwrap(), (Addr::Client(0), Addr::Aggregator, vec![1, 2, 3]));
+        assert_eq!(net.pop().unwrap(), (Addr::Client(1), Addr::Aggregator, vec![4]));
+        assert_eq!(net.pop().unwrap(), (Addr::Aggregator, Addr::Client(0), vec![5, 6]));
         assert_eq!(net.pending(), 0);
     }
 
@@ -171,14 +303,37 @@ mod tests {
     }
 
     #[test]
+    fn meter_without_queueing() {
+        let mut net = Network::new(1);
+        net.phase = Phase::Training;
+        net.meter(Addr::Client(0), Addr::Aggregator, 55);
+        assert_eq!(net.pending(), 0, "meter must not enqueue");
+        assert_eq!(net.sent_bytes(Addr::Client(0), Phase::Training), 55);
+        assert_eq!(net.received_bytes(Addr::Aggregator, Phase::Training), 55);
+        assert_eq!(net.messages, 1);
+    }
+
+    #[test]
     fn fifo_order_per_destination() {
         let mut net = Network::new(1);
         for i in 0..5u8 {
             net.send(Addr::Aggregator, Addr::Client(0), vec![i]);
         }
-        let msgs = net.deliver(Addr::Client(0));
-        let seq: Vec<u8> = msgs.iter().map(|(_, m)| m[0]).collect();
+        let mut seq = Vec::new();
+        while let Some((_, _, m)) = net.pop() {
+            seq.push(m[0]);
+        }
         assert_eq!(seq, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pop_is_global_fifo() {
+        let mut net = Network::new(2);
+        net.send(Addr::Client(0), Addr::Aggregator, vec![1]);
+        net.send(Addr::Aggregator, Addr::Client(1), vec![2]);
+        assert_eq!(net.pop().unwrap().2, vec![1]);
+        assert_eq!(net.pop().unwrap().2, vec![2]);
+        assert!(net.pop().is_none());
     }
 
     #[test]

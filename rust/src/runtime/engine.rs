@@ -9,34 +9,38 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::ModelConfig;
 
-/// The fixed batch size the artifacts are lowered with (== aot.py BATCH).
-pub const ARTIFACT_BATCH: usize = 256;
+use super::{artifact_keys, ARTIFACT_BATCH};
 
 /// A named, compiled executable set for one dataset.
 pub struct Engine {
     #[allow(dead_code)]
     client: xla::PjRtClient,
     execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Serializes every `execute` call: the `xla` wrapper is not
+    /// audited for concurrent use, so cross-thread access is mutually
+    /// excluded rather than assumed safe.
+    ffi_lock: Mutex<()>,
     pub dataset: String,
     pub batch: usize,
 }
 
-/// The artifact keys every dataset provides.
-pub fn artifact_keys(n_groups: usize) -> Vec<String> {
-    let mut keys = vec!["fwd_active".to_string(), "bwd_active".to_string()];
-    for g in 0..n_groups {
-        keys.push(format!("fwd_g{g}"));
-        keys.push(format!("bwd_g{g}"));
-    }
-    keys.push("global_step".to_string());
-    keys.push("predict".to_string());
-    keys
-}
+// SAFETY: needed so parties holding a `Backend::Pjrt(&Engine)` satisfy
+// the `Party: Send` supertrait. Send: the PJRT CPU client and its
+// executables are plain heap FFI handles with no thread affinity (no
+// TLS), so moving the owner between threads is sound. Sync: all
+// post-load access to the FFI objects goes through `execute`, which
+// takes `ffi_lock` — shared references never touch the unaudited
+// wrapper concurrently. (`ThreadedTransport` additionally refuses
+// shared-engine party sets, so the lock is a backstop, not a hot-path
+// serializer.)
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Load and compile all artifacts for `cfg.dataset` from `dir`.
@@ -58,7 +62,13 @@ impl Engine {
             let exe = client.compile(&comp).with_context(|| format!("compile {}", path.display()))?;
             execs.insert(key, exe);
         }
-        Ok(Engine { client, execs, dataset: cfg.dataset.clone(), batch: ARTIFACT_BATCH })
+        Ok(Engine {
+            client,
+            execs,
+            ffi_lock: Mutex::new(()),
+            dataset: cfg.dataset.clone(),
+            batch: ARTIFACT_BATCH,
+        })
     }
 
     /// Whether a graph is available.
@@ -73,6 +83,9 @@ impl Engine {
     /// Execute a graph. `inputs` are (flat f32 data, dims) pairs in the
     /// graph's parameter order; returns the flattened tuple outputs.
     pub fn execute(&self, key: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        // mutual exclusion over the unaudited FFI layer (see the
+        // SAFETY note on the Send/Sync impls)
+        let _ffi = self.ffi_lock.lock().unwrap();
         let exe = self.execs.get(key).with_context(|| format!("unknown graph {key}"))?;
         let literals: Vec<xla::Literal> = inputs
             .iter()

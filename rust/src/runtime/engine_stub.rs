@@ -1,0 +1,40 @@
+//! API-compatible stand-in for the PJRT engine, used when the crate is
+//! built without the `pjrt` feature (the default — the `xla` binding
+//! needs a native XLA toolchain the CI image doesn't carry).
+//!
+//! `load` and `execute` fail with an actionable message; everything
+//! that matters for tests runs on the pure-Rust reference backend
+//! instead.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelConfig;
+
+/// Stub engine: carries the dataset/batch metadata but cannot execute.
+pub struct Engine {
+    pub dataset: String,
+    pub batch: usize,
+}
+
+impl Engine {
+    pub fn load(_dir: impl AsRef<Path>, _cfg: &ModelConfig) -> Result<Engine> {
+        bail!(
+            "this build has no PJRT runtime — rebuild with `--features pjrt` \
+             (and run `make artifacts`), or use the reference backend"
+        )
+    }
+
+    pub fn has(&self, _key: &str) -> bool {
+        false
+    }
+
+    pub fn keys(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn execute(&self, key: &str, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        bail!("PJRT graph {key} unavailable: built without the `pjrt` feature")
+    }
+}

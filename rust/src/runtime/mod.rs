@@ -1,6 +1,37 @@
 //! PJRT runtime layer: loads the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! The real engine binds the `xla` crate and is gated behind the
+//! `pjrt` cargo feature; default builds get an API-compatible stub
+//! whose `load` fails with a clear message, so the crate (and every
+//! test, via the pure-Rust reference backend) builds on a clean
+//! checkout with no native XLA toolchain.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
-pub use engine::{artifact_keys, Engine, ARTIFACT_BATCH};
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
+
+pub use engine::Engine;
+
+/// The fixed batch size the artifacts are lowered with (== aot.py BATCH).
+pub const ARTIFACT_BATCH: usize = 256;
+
+/// The artifact keys every dataset provides.
+pub fn artifact_keys(n_groups: usize) -> Vec<String> {
+    let mut keys = vec!["fwd_active".to_string(), "bwd_active".to_string()];
+    for g in 0..n_groups {
+        keys.push(format!("fwd_g{g}"));
+        keys.push(format!("bwd_g{g}"));
+    }
+    keys.push("global_step".to_string());
+    keys.push("predict".to_string());
+    keys
+}
+
+/// Whether this build can execute PJRT artifacts.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}

@@ -1,0 +1,150 @@
+//! Integration coverage for the network substrate: protocol-message
+//! round-trips through `net::wire`, `Network` per-(phase, party,
+//! direction) byte accounting, and the socket framing.
+
+use vfl::coordinator::messages::{Msg, WireKeys};
+use vfl::coordinator::{Note, RoundKind, RoundSpec};
+use vfl::net::frame::Frame;
+use vfl::net::wire::{Reader, Writer};
+use vfl::net::{Addr, Network, Phase};
+
+#[test]
+fn wire_primitives_roundtrip() {
+    let mut w = Writer::new();
+    w.u8(250);
+    w.u16(65_535);
+    w.u32(1 << 30);
+    w.u64(u64::MAX - 1);
+    w.f32(f32::MIN_POSITIVE);
+    w.bytes(&[1, 2, 3]);
+    w.f32s(&[0.0, -0.0, 3.25]);
+    w.u64s(&[7; 5]);
+    w.fixed(&[4u8; 32]);
+    let buf = w.finish();
+    let mut r = Reader::new(&buf);
+    assert_eq!(r.u8().unwrap(), 250);
+    assert_eq!(r.u16().unwrap(), 65_535);
+    assert_eq!(r.u32().unwrap(), 1 << 30);
+    assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+    assert_eq!(r.f32().unwrap(), f32::MIN_POSITIVE);
+    assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
+    assert_eq!(r.f32s().unwrap(), vec![0.0, -0.0, 3.25]);
+    assert_eq!(r.u64s().unwrap(), vec![7; 5]);
+    assert_eq!(r.fixed::<32>().unwrap(), [4u8; 32]);
+    assert!(r.done());
+}
+
+#[test]
+fn every_protocol_message_roundtrips() {
+    let msgs = vec![
+        Msg::RequestKeys { epoch: 9 },
+        Msg::PublishKeys(WireKeys { from: 1, keys: vec![None, Some([2u8; 32])] }),
+        Msg::KeyDirectory {
+            epoch: 2,
+            all: vec![WireKeys { from: 0, keys: vec![None, Some([1u8; 32])] }],
+        },
+        Msg::WeightsUpdate { round: 1, flat: vec![0.5; 16] },
+        Msg::GroupWeights { round: 1, group: 2, flat: vec![-1.5; 4] },
+        Msg::BatchSelect { round: 3, labels: vec![1.0, 0.0], entries: vec![vec![0xAB; 24]] },
+        Msg::BatchRelay { round: 3, entries: vec![vec![0xCD; 24], vec![]] },
+        Msg::PlainBatch { round: 3, labels: vec![1.0], ids: vec![1, 2, 3] },
+        Msg::PlainBatchRelay { round: 3, ids: vec![u64::MAX] },
+        Msg::MaskedActivation { round: 4, from: 2, words: vec![u64::MAX, 0] },
+        Msg::FloatActivation { round: 4, from: 2, vals: vec![1.25, -2.5] },
+        Msg::DzBroadcast { round: 4, dz: vec![0.125; 8] },
+        Msg::MaskedGradient { round: 4, from: 1, words: vec![42; 3] },
+        Msg::FloatGradient { round: 4, from: 1, vals: vec![0.75; 3] },
+        Msg::GradientSum { round: 4, words: vec![7, 8, 9] },
+        Msg::FloatGradientSum { round: 4, vals: vec![0.25] },
+        Msg::Predictions { round: 5, probs: vec![0.9, 0.1] },
+    ];
+    for m in msgs {
+        let enc = m.encode();
+        assert_eq!(Msg::decode(&enc).unwrap(), m, "roundtrip failed for {m:?}");
+        // every encoding survives a Frame trip too (the TCP path)
+        let f = Frame::Msg { bytes: enc.clone() };
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let got = Frame::read_from(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(got, Frame::Msg { bytes: enc });
+    }
+}
+
+#[test]
+fn network_accounts_per_phase_party_direction() {
+    let mut net = Network::new(3);
+    net.phase = Phase::Setup;
+    net.send(Addr::Aggregator, Addr::Client(0), vec![0; 11]);
+    net.send(Addr::Client(0), Addr::Aggregator, vec![0; 13]);
+    net.phase = Phase::Training;
+    net.send(Addr::Client(1), Addr::Aggregator, vec![0; 100]);
+    net.send(Addr::Aggregator, Addr::Client(2), vec![0; 50]);
+    net.phase = Phase::Testing;
+    net.send(Addr::Client(2), Addr::Aggregator, vec![0; 5]);
+
+    // setup
+    assert_eq!(net.sent_bytes(Addr::Aggregator, Phase::Setup), 11);
+    assert_eq!(net.received_bytes(Addr::Client(0), Phase::Setup), 11);
+    assert_eq!(net.sent_bytes(Addr::Client(0), Phase::Setup), 13);
+    assert_eq!(net.received_bytes(Addr::Aggregator, Phase::Setup), 13);
+    assert_eq!(net.transmission_bytes(Addr::Client(0), Phase::Setup), 24);
+    // training isolated from setup
+    assert_eq!(net.sent_bytes(Addr::Client(1), Phase::Training), 100);
+    assert_eq!(net.sent_bytes(Addr::Client(1), Phase::Setup), 0);
+    assert_eq!(net.received_bytes(Addr::Client(2), Phase::Training), 50);
+    // testing isolated from both
+    assert_eq!(net.sent_bytes(Addr::Client(2), Phase::Testing), 5);
+    assert_eq!(net.transmission_bytes(Addr::Client(1), Phase::Testing), 0);
+    // direction asymmetry preserved
+    assert_eq!(net.sent_bytes(Addr::Client(2), Phase::Training), 0);
+    assert_eq!(net.messages, 5);
+}
+
+#[test]
+fn meter_matches_send_accounting() {
+    // `meter` (threads/sockets) and `send` (simulation) must account
+    // identically — that's what keeps Table 2 transport-independent
+    let mut queued = Network::new(2);
+    let mut metered = Network::new(2);
+    for (net, via_send) in [(&mut queued, true), (&mut metered, false)] {
+        net.phase = Phase::Training;
+        for (from, to, len) in
+            [(Addr::Client(0), Addr::Aggregator, 17), (Addr::Aggregator, Addr::Client(1), 23)]
+        {
+            if via_send {
+                net.send(from, to, vec![0; len]);
+            } else {
+                net.meter(from, to, len);
+            }
+        }
+    }
+    for n in [Addr::Aggregator, Addr::Client(0), Addr::Client(1)] {
+        assert_eq!(
+            queued.transmission_bytes(n, Phase::Training),
+            metered.transmission_bytes(n, Phase::Training)
+        );
+    }
+    assert_eq!(queued.messages, metered.messages);
+}
+
+#[test]
+fn control_plane_roundtrips_through_frames() {
+    let spec = RoundSpec {
+        round: 11,
+        kind: RoundKind::Train,
+        rotate: true,
+        phase: Phase::Training,
+        ids: (0..256).collect(),
+    };
+    let mut buf = Vec::new();
+    Frame::Round(spec.clone()).write_to(&mut buf).unwrap();
+    Frame::Note(Note::Predictions { round: 11, probs: vec![0.5; 4] }).write_to(&mut buf).unwrap();
+    Frame::Stop.write_to(&mut buf).unwrap();
+    let mut cur = std::io::Cursor::new(buf);
+    assert_eq!(Frame::read_from(&mut cur).unwrap(), Frame::Round(spec));
+    assert_eq!(
+        Frame::read_from(&mut cur).unwrap(),
+        Frame::Note(Note::Predictions { round: 11, probs: vec![0.5; 4] })
+    );
+    assert_eq!(Frame::read_from(&mut cur).unwrap(), Frame::Stop);
+}

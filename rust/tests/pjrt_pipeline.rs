@@ -1,21 +1,30 @@
 //! Full-stack integration: the secure protocol running on the AOT
 //! PJRT artifacts (L1 Pallas kernel → L2 JAX graphs → L3 coordinator).
 //!
-//! These tests require `make artifacts`; they skip gracefully when the
-//! artifacts are absent so `cargo test` works on a fresh checkout.
+//! These tests require a `--features pjrt` build plus `make artifacts`;
+//! they skip with a clear message otherwise, so `cargo test` is green
+//! on a fresh checkout.
 
 use std::path::PathBuf;
 
 use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
 use vfl::model::ModelConfig;
-use vfl::runtime::Engine;
+use vfl::runtime::{pjrt_enabled, Engine};
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
 fn have_artifacts() -> bool {
-    artifacts_dir().join("banking_global_step.hlo.txt").exists()
+    if !pjrt_enabled() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
+    if !artifacts_dir().join("banking_global_step.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return false;
+    }
+    true
 }
 
 fn cfg(dataset: &str, mode: SecurityMode, backend: BackendKind) -> RunConfig {
@@ -30,7 +39,6 @@ fn cfg(dataset: &str, mode: SecurityMode, backend: BackendKind) -> RunConfig {
 #[test]
 fn pjrt_secure_run_matches_reference_run() {
     if !have_artifacts() {
-        eprintln!("skipping: artifacts not built");
         return;
     }
     let model = ModelConfig::for_dataset("banking").unwrap();
@@ -58,7 +66,6 @@ fn pjrt_secure_run_matches_reference_run() {
 #[test]
 fn pjrt_secure_equals_pjrt_plain() {
     if !have_artifacts() {
-        eprintln!("skipping: artifacts not built");
         return;
     }
     let model = ModelConfig::for_dataset("banking").unwrap();
@@ -82,7 +89,6 @@ fn pjrt_secure_equals_pjrt_plain() {
 #[test]
 fn pjrt_all_three_datasets_train() {
     if !have_artifacts() {
-        eprintln!("skipping: artifacts not built");
         return;
     }
     for ds in ["banking", "adult", "taobao"] {

@@ -1,0 +1,121 @@
+//! The tentpole invariant of the Party/Transport redesign: the *same*
+//! party state machines produce **bit-identical** runs whether the
+//! protocol is pumped by the single-threaded byte-metered simulator or
+//! by one OS thread per party.
+//!
+//! This holds because (a) every party owns a deterministic RNG keyed
+//! by (seed, client index), (b) the aggregator buffers fan-ins by
+//! sender and sums in client order — so float addition order doesn't
+//! depend on thread scheduling — and (c) rounds are serialized on the
+//! active party's RoundDone note. Byte counters must match too: both
+//! transports meter the same message encodings through `Network`.
+
+use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode, TransportKind};
+use vfl::net::{Addr, Phase, Network};
+
+fn cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> RunConfig {
+    let mut c = RunConfig::test(dataset).unwrap();
+    c.security = mode;
+    c.backend = BackendKind::Reference;
+    c.transport = transport;
+    c.train_rounds = 6; // crosses one key-rotation boundary (K = 5)
+    c.test_rounds = 1;
+    c
+}
+
+fn assert_table2_identical(a: &Network, b: &Network) {
+    assert_eq!(a.n_clients(), b.n_clients());
+    assert_eq!(a.messages, b.messages, "message counts differ");
+    let phases = [Phase::Setup, Phase::Training, Phase::Testing];
+    let mut nodes = vec![Addr::Aggregator];
+    nodes.extend((0..a.n_clients()).map(Addr::Client));
+    for ph in phases {
+        for &n in &nodes {
+            assert_eq!(
+                a.sent_bytes(n, ph),
+                b.sent_bytes(n, ph),
+                "sent bytes differ at {n:?}/{ph:?}"
+            );
+            assert_eq!(
+                a.received_bytes(n, ph),
+                b.received_bytes(n, ph),
+                "received bytes differ at {n:?}/{ph:?}"
+            );
+        }
+    }
+}
+
+fn assert_bit_identical(dataset: &str, mode: SecurityMode) {
+    let sim = run_experiment(cfg(dataset, mode, TransportKind::Sim), None).unwrap();
+    let thr = run_experiment(cfg(dataset, mode, TransportKind::Threaded), None).unwrap();
+
+    assert_eq!(sim.losses, thr.losses, "{dataset}/{mode:?}: losses must be bit-identical");
+    assert_eq!(
+        sim.predictions, thr.predictions,
+        "{dataset}/{mode:?}: predictions must be bit-identical"
+    );
+    assert_eq!(sim.prediction_labels, thr.prediction_labels);
+    assert_eq!(sim.test_accuracy, thr.test_accuracy);
+    assert_eq!(
+        sim.final_params.flatten(),
+        thr.final_params.flatten(),
+        "{dataset}/{mode:?}: final parameters must be bit-identical"
+    );
+    assert_eq!(sim.setups, thr.setups);
+    assert_table2_identical(&sim.net, &thr.net);
+    // sanity: the run did real work
+    assert_eq!(sim.losses.len(), 6);
+    assert!(!sim.predictions.is_empty());
+}
+
+#[test]
+fn sim_and_threaded_identical_secure_exact() {
+    assert_bit_identical("banking", SecurityMode::SecureExact);
+}
+
+#[test]
+fn sim_and_threaded_identical_secure_float() {
+    // float masks are the hard case: cancellation depends on addition
+    // order, which the aggregator pins to client order
+    assert_bit_identical("banking", SecurityMode::SecureFloat);
+}
+
+#[test]
+fn sim_and_threaded_identical_plain() {
+    assert_bit_identical("banking", SecurityMode::Plain);
+}
+
+#[test]
+fn sim_and_threaded_identical_adult() {
+    assert_bit_identical("adult", SecurityMode::SecureExact);
+}
+
+#[test]
+fn threaded_rotation_every_round() {
+    let mut sc = cfg("banking", SecurityMode::SecureExact, TransportKind::Sim);
+    sc.model.rotation_period = 1;
+    let mut tc = cfg("banking", SecurityMode::SecureExact, TransportKind::Threaded);
+    tc.model.rotation_period = 1;
+    let sim = run_experiment(sc, None).unwrap();
+    let thr = run_experiment(tc, None).unwrap();
+    assert_eq!(sim.setups, 7, "initial + one rotation per round");
+    assert_eq!(thr.setups, 7);
+    assert_eq!(sim.predictions, thr.predictions);
+    assert_table2_identical(&sim.net, &thr.net);
+}
+
+#[test]
+fn threaded_run_trains() {
+    // the threaded transport is a real training run, not just a relay
+    let r = run_experiment(
+        cfg("banking", SecurityMode::SecureExact, TransportKind::Threaded),
+        None,
+    )
+    .unwrap();
+    assert!(
+        r.losses.last().unwrap() < r.losses.first().unwrap(),
+        "loss should decrease: {:?}",
+        r.losses
+    );
+    assert!(r.test_accuracy > 0.3, "accuracy {}", r.test_accuracy);
+}
