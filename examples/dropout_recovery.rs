@@ -76,4 +76,23 @@ fn main() {
     let leaked = fp.decode(dropped_masked[0]);
     println!("\ndropped client's own masked share decodes to {leaked:.3e} — never revealed");
     println!("recovery reconstructs only its *mask*, not its activation");
+
+    // --- the same recovery, live inside the full training protocol ---
+    use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+    use vfl::net::FaultPlan;
+    println!("\nfull protocol run with the same fault (banking, 5 clients, t=3):");
+    let mut cfg = RunConfig::test("banking").unwrap();
+    cfg.security = SecurityMode::SecureExact;
+    cfg.backend = BackendKind::Reference;
+    cfg.train_rounds = 3;
+    cfg.shamir_threshold = Some(t);
+    cfg.fault_plan = Some(FaultPlan::crash_at(dropped, 1));
+    let report = run_experiment(cfg, None).expect("round must recover");
+    for (i, l) in report.losses.iter().enumerate() {
+        println!("  round {i}: loss {l:.5}");
+    }
+    println!(
+        "  test accuracy: {:.4} — the round completed without client {dropped}",
+        report.test_accuracy
+    );
 }

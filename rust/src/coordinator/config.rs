@@ -1,6 +1,7 @@
 //! Run configuration for a VFL experiment.
 
 use crate::model::ModelConfig;
+use crate::net::FaultPlan;
 
 /// How activations/gradients are protected in transit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,6 +63,19 @@ pub struct RunConfig {
     pub transport: TransportKind,
     /// RNG seed for data, init, and key generation.
     pub seed: u64,
+    /// Enable Bonawitz-style dropout tolerance with this Shamir
+    /// threshold t: every client's mask seed is t-of-n shared during
+    /// setup, and a round recovers whenever ≥ t clients survive.
+    /// Requires [`SecurityMode::SecureExact`]. None = base protocol
+    /// (a mid-round drop stalls the run).
+    pub shamir_threshold: Option<usize>,
+    /// Deterministic fault-injection plan (tests and the
+    /// `--dropout-schedule` CLI flag). None = no injected faults.
+    pub fault_plan: Option<FaultPlan>,
+    /// Override the threaded transport's dropout-detection window in
+    /// milliseconds (None = the transport default). Tests shrink it so
+    /// crash-recovery suites don't sleep through full 500 ms windows.
+    pub stall_timeout_ms: Option<u64>,
 }
 
 impl RunConfig {
@@ -78,6 +92,9 @@ impl RunConfig {
             backend: BackendKind::Pjrt,
             transport: TransportKind::Sim,
             seed: 7,
+            shamir_threshold: None,
+            fault_plan: None,
+            stall_timeout_ms: None,
         })
     }
 

@@ -19,11 +19,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::{by_name, generate, partition};
 use crate::model::ModelParams;
-use crate::net::{Network, Phase, SimTransport, ThreadedTransport, Transport};
+use crate::net::{FaultyTransport, Network, Phase, SimTransport, ThreadedTransport, Transport};
 use crate::runtime::Engine;
 
 use super::backend::Backend;
-use super::config::{BackendKind, RunConfig, TransportKind};
+use super::config::{BackendKind, RunConfig, SecurityMode, TransportKind};
 use super::metrics::Metrics;
 use super::parties::{ActiveParty, Aggregator, PassiveParty};
 use super::party::{Note, Party, RoundKind, RoundSpec, SETUP_ROUND};
@@ -64,10 +64,34 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
             Backend::Pjrt(engine.context("PJRT backend requires a loaded Engine")?)
         }
     };
+    if let Some(t) = cfg.shamir_threshold {
+        if cfg.security != SecurityMode::SecureExact {
+            bail!("shamir threshold requires SecureExact (recovery needs exact Z_2^64 masks)");
+        }
+        let n = cfg.model.n_clients();
+        if t < 2 || t > n {
+            bail!("shamir threshold {t} out of range (need 2 ≤ t ≤ {n} clients)");
+        }
+    }
     let (schema, spec, _) = by_name(&cfg.model.dataset).context("unknown dataset")?;
     let data = generate(&schema, cfg.n_rows, cfg.seed);
     let mut vertical = partition(&data, &spec);
     vertical.passives.sort_by_key(|p| p.party_id);
+
+    // blank parties (the crash twin used by the recovery equivalence
+    // tests): feature rows zeroed, protocol participation unchanged
+    if let Some(plan) = &cfg.fault_plan {
+        for &client in &plan.blanks {
+            let p = vertical
+                .passives
+                .iter_mut()
+                .find(|p| p.party_id + 1 == client)
+                .with_context(|| format!("blank client {client} is not a passive party"))?;
+            for row in p.rows.values_mut() {
+                row.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
 
     let batch = cfg.model.batch_size;
     let n_train = ((cfg.n_rows as f32) * 0.8) as usize;
@@ -96,13 +120,15 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
         .collect();
     let groups: Vec<usize> = vertical.passives.iter().map(|p| p.group).collect();
 
+    let threshold = cfg.shamir_threshold;
     let mut parties: Vec<Box<dyn Party + 'e>> = Vec::with_capacity(cfg.model.n_clients() + 1);
-    parties.push(Box::new(Aggregator::new(&cfg.model, cfg.seed, backend, groups)));
+    parties.push(Box::new(Aggregator::new(&cfg.model, cfg.seed, backend, groups, threshold)));
     parties.push(Box::new(ActiveParty::new(
         vertical.active,
         holders,
         cfg.model.clone(),
         cfg.security,
+        threshold,
         cfg.seed,
         backend,
     )));
@@ -112,6 +138,7 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
             pd,
             &cfg.model,
             cfg.security,
+            threshold,
             cfg.seed,
             backend,
         )));
@@ -235,15 +262,30 @@ impl<'e> Experiment<'e> {
         Ok(Experiment { cfg, built })
     }
 
-    /// Run the full experiment on the configured transport.
+    /// Run the full experiment on the configured transport; a
+    /// configured fault plan wraps it in [`FaultyTransport`].
     pub fn run(self) -> Result<RunReport> {
         let Experiment { cfg, built } = self;
         let Built { parties, schedule, test_labels, setups } = built;
         let n_clients = cfg.model.n_clients();
-        let outcome = match cfg.transport {
-            TransportKind::Sim => SimTransport::new(n_clients).execute(parties, &schedule)?,
-            TransportKind::Threaded => {
-                ThreadedTransport::new(n_clients).execute(parties, &schedule)?
+        let threaded = || {
+            let mut t = ThreadedTransport::new(n_clients);
+            if let Some(ms) = cfg.stall_timeout_ms {
+                t = t.with_stall_timeout(std::time::Duration::from_millis(ms));
+            }
+            t
+        };
+        let outcome = match (cfg.transport, cfg.fault_plan.clone()) {
+            (TransportKind::Sim, None) => {
+                SimTransport::new(n_clients).execute(parties, &schedule)?
+            }
+            (TransportKind::Sim, Some(plan)) => {
+                FaultyTransport::new(SimTransport::new(n_clients), plan)
+                    .execute(parties, &schedule)?
+            }
+            (TransportKind::Threaded, None) => threaded().execute(parties, &schedule)?,
+            (TransportKind::Threaded, Some(plan)) => {
+                FaultyTransport::new(threaded(), plan).execute(parties, &schedule)?
             }
         };
         let s = summarize(&schedule, &test_labels, &outcome.notes);

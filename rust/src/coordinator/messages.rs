@@ -57,6 +57,23 @@ pub enum Msg {
     // ---- testing phase (§4.0.3) ----
     /// Aggregator → active: predictions for the requested batch.
     Predictions { round: u32, probs: Vec<f32> },
+
+    // ---- dropout tolerance (Bonawitz'17 extension, §5.1) ----
+    /// Client → aggregator: Shamir shares of its mask seed, one
+    /// AEAD-sealed bundle per recipient peer (empty at the own slot and
+    /// at peers with no shared secret). Sealed so the relaying
+    /// aggregator can never collect t readable shares itself.
+    SeedShares { epoch: u64, from: u16, sealed: Vec<Vec<u8>> },
+    /// Aggregator → client: every peer's sealed bundle addressed to
+    /// this client (`sealed[i]` = client i's bundle, empty slots where
+    /// no bundle exists).
+    ShareRelay { epoch: u64, sealed: Vec<Vec<u8>> },
+    /// Aggregator → survivors: these clients were declared dropped
+    /// mid-round; surrender your shares of their seeds.
+    DropoutNotice { round: u32, dropped: Vec<u16> },
+    /// Survivor → aggregator: its (plaintext — that is the point of
+    /// recovery) share bundles for each requested dropped client.
+    SurrenderShares { round: u32, from: u16, bundles: Vec<(u16, Vec<u8>)> },
 }
 
 const T_REQUEST_KEYS: u8 = 1;
@@ -76,6 +93,26 @@ const T_FLOAT_GRADIENT: u8 = 14;
 const T_GRADIENT_SUM: u8 = 15;
 const T_FLOAT_GRADIENT_SUM: u8 = 16;
 const T_PREDICTIONS: u8 = 17;
+const T_SEED_SHARES: u8 = 18;
+const T_SHARE_RELAY: u8 = 19;
+const T_DROPOUT_NOTICE: u8 = 20;
+const T_SURRENDER_SHARES: u8 = 21;
+
+fn write_blob_list(w: &mut Writer, blobs: &[Vec<u8>]) {
+    w.u32(blobs.len() as u32);
+    for b in blobs {
+        w.bytes(b);
+    }
+}
+
+fn read_blob_list(r: &mut Reader) -> Result<Vec<Vec<u8>>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(r.remaining()));
+    for _ in 0..n {
+        out.push(r.bytes()?);
+    }
+    Ok(out)
+}
 
 fn write_wire_keys(w: &mut Writer, k: &WireKeys) {
     w.u16(k.from);
@@ -141,18 +178,12 @@ impl Msg {
                 w.u8(T_BATCH_SELECT);
                 w.u32(*round);
                 w.f32s(labels);
-                w.u32(entries.len() as u32);
-                for e in entries {
-                    w.bytes(e);
-                }
+                write_blob_list(&mut w, entries);
             }
             Msg::BatchRelay { round, entries } => {
                 w.u8(T_BATCH_RELAY);
                 w.u32(*round);
-                w.u32(entries.len() as u32);
-                for e in entries {
-                    w.bytes(e);
-                }
+                write_blob_list(&mut w, entries);
             }
             Msg::PlainBatch { round, labels, ids } => {
                 w.u8(T_PLAIN_BATCH);
@@ -209,6 +240,35 @@ impl Msg {
                 w.u32(*round);
                 w.f32s(probs);
             }
+            Msg::SeedShares { epoch, from, sealed } => {
+                w.u8(T_SEED_SHARES);
+                w.u64(*epoch);
+                w.u16(*from);
+                write_blob_list(&mut w, sealed);
+            }
+            Msg::ShareRelay { epoch, sealed } => {
+                w.u8(T_SHARE_RELAY);
+                w.u64(*epoch);
+                write_blob_list(&mut w, sealed);
+            }
+            Msg::DropoutNotice { round, dropped } => {
+                w.u8(T_DROPOUT_NOTICE);
+                w.u32(*round);
+                w.u32(dropped.len() as u32);
+                for d in dropped {
+                    w.u16(*d);
+                }
+            }
+            Msg::SurrenderShares { round, from, bundles } => {
+                w.u8(T_SURRENDER_SHARES);
+                w.u32(*round);
+                w.u16(*from);
+                w.u32(bundles.len() as u32);
+                for (d, b) in bundles {
+                    w.u16(*d);
+                    w.bytes(b);
+                }
+            }
         }
         w.finish()
     }
@@ -235,21 +295,10 @@ impl Msg {
             T_BATCH_SELECT => {
                 let round = r.u32()?;
                 let labels = r.f32s()?;
-                let n = r.u32()? as usize;
-                let mut entries = Vec::with_capacity(n.min(r.remaining()));
-                for _ in 0..n {
-                    entries.push(r.bytes()?);
-                }
-                Msg::BatchSelect { round, labels, entries }
+                Msg::BatchSelect { round, labels, entries: read_blob_list(&mut r)? }
             }
             T_BATCH_RELAY => {
-                let round = r.u32()?;
-                let n = r.u32()? as usize;
-                let mut entries = Vec::with_capacity(n.min(r.remaining()));
-                for _ in 0..n {
-                    entries.push(r.bytes()?);
-                }
-                Msg::BatchRelay { round, entries }
+                Msg::BatchRelay { round: r.u32()?, entries: read_blob_list(&mut r)? }
             }
             T_PLAIN_BATCH => {
                 Msg::PlainBatch { round: r.u32()?, labels: r.f32s()?, ids: r.u64s()? }
@@ -271,6 +320,33 @@ impl Msg {
             T_GRADIENT_SUM => Msg::GradientSum { round: r.u32()?, words: r.u64s()? },
             T_FLOAT_GRADIENT_SUM => Msg::FloatGradientSum { round: r.u32()?, vals: r.f32s()? },
             T_PREDICTIONS => Msg::Predictions { round: r.u32()?, probs: r.f32s()? },
+            T_SEED_SHARES => Msg::SeedShares {
+                epoch: r.u64()?,
+                from: r.u16()?,
+                sealed: read_blob_list(&mut r)?,
+            },
+            T_SHARE_RELAY => {
+                Msg::ShareRelay { epoch: r.u64()?, sealed: read_blob_list(&mut r)? }
+            }
+            T_DROPOUT_NOTICE => {
+                let round = r.u32()?;
+                let n = r.u32()? as usize;
+                let mut dropped = Vec::with_capacity(n.min(r.remaining()));
+                for _ in 0..n {
+                    dropped.push(r.u16()?);
+                }
+                Msg::DropoutNotice { round, dropped }
+            }
+            T_SURRENDER_SHARES => {
+                let round = r.u32()?;
+                let from = r.u16()?;
+                let n = r.u32()? as usize;
+                let mut bundles = Vec::with_capacity(n.min(r.remaining()));
+                for _ in 0..n {
+                    bundles.push((r.u16()?, r.bytes()?));
+                }
+                Msg::SurrenderShares { round, from, bundles }
+            }
             t => bail!("unknown message tag {t}"),
         };
         if !r.done() {
@@ -322,6 +398,18 @@ mod tests {
         roundtrip(Msg::GradientSum { round: 2, words: vec![11, 12] });
         roundtrip(Msg::FloatGradientSum { round: 2, vals: vec![3.0] });
         roundtrip(Msg::Predictions { round: 5, probs: vec![0.9, 0.1] });
+        roundtrip(Msg::SeedShares {
+            epoch: 2,
+            from: 3,
+            sealed: vec![vec![], vec![1, 2, 3], vec![0xFF; 96]],
+        });
+        roundtrip(Msg::ShareRelay { epoch: 2, sealed: vec![vec![9; 40], vec![]] });
+        roundtrip(Msg::DropoutNotice { round: 7, dropped: vec![2, 4] });
+        roundtrip(Msg::SurrenderShares {
+            round: 7,
+            from: 1,
+            bundles: vec![(2, vec![5; 84]), (4, vec![])],
+        });
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //! event-driven party state machines over pluggable transports.
 //!
 //! * [`party`] — the [`Party`] trait (`on_round_start` / `on_message`
-//!   → [`Outbox`]), round schedule types, and driver notes.
+//!   / `on_stall` → [`Outbox`]), round schedule types, and driver
+//!   notes. `on_stall` is the quiescence probe every transport fires
+//!   when a round cannot make progress — the hook the aggregator's
+//!   Bonawitz'17 dropout recovery hangs off.
 //! * [`parties`] — the §4 machines: [`parties::ActiveParty`],
 //!   [`parties::PassiveParty`], [`parties::Aggregator`]. The same
 //!   machines run on every transport.

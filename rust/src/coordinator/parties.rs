@@ -15,19 +15,21 @@
 //! order, so float addition order — and therefore every output bit —
 //! is independent of message arrival order.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::crypto::aead;
 use crate::crypto::rng::DetRng;
+use crate::crypto::shamir::Share;
 use crate::data::partition::{ActiveData, PassiveData};
 use crate::model::linalg::Mat;
 use crate::model::{ModelConfig, ModelParams, PartyParams};
 use crate::net::wire::Writer;
 use crate::net::{Addr, Phase};
-use crate::secagg::{ClientSession, FixedPoint, PublishedKeys};
+use crate::secagg::dropout::{self, RobustClientSession};
+use crate::secagg::{ClientSession, DropoutError, FixedPoint, PartySession, PublishedKeys};
 
 use super::backend::Backend;
 use super::config::SecurityMode;
@@ -93,8 +95,100 @@ pub fn party_rng(seed: u64, client_idx: usize) -> DetRng {
     )
 }
 
+/// Tensor tags of the two masked fan-ins (must match what the parties
+/// pass to `mask_tensor`).
+const TAG_ACTIVATION: u32 = 0;
+const TAG_GRADIENT: u32 = 1;
+
 /// AAD used for sample-ID sealing.
 const BATCH_AAD: &[u8] = b"vfl-sa/batch-id/v1";
+
+// ---------------------------------------------------------------------------
+// Dropout-tolerance client helpers (shared by active & passive parties)
+// ---------------------------------------------------------------------------
+
+/// Open a fresh session for one setup epoch: plain, or — when a Shamir
+/// threshold is configured — robust (seed-derived keys + share state).
+fn open_session(
+    id: usize,
+    n: usize,
+    epoch: u64,
+    threshold: Option<usize>,
+    rng: &mut DetRng,
+) -> PartySession {
+    match threshold {
+        None => PartySession::Plain(ClientSession::new(id, n, epoch, rng)),
+        Some(t) => PartySession::Robust(RobustClientSession::new(id, n, epoch, t, rng)),
+    }
+}
+
+/// Pad a (possibly incomplete) wire directory to one `PublishedKeys`
+/// per client id; absent clients get all-`None` key slots, which
+/// `derive_secrets` treats as "no shared secret, no masks". Entries
+/// with an out-of-range id (corrupt or hostile wire input) are ignored
+/// rather than indexed — the sender then simply has no keys, which the
+/// lenient derivation already handles.
+pub fn pad_directory(all: &[WireKeys], n: usize) -> Vec<PublishedKeys> {
+    let mut keys: Vec<PublishedKeys> =
+        (0..n).map(|i| PublishedKeys { from: i, keys: vec![None; n] }).collect();
+    for wk in all {
+        if (wk.from as usize) < n {
+            keys[wk.from as usize] = keys_from_wire(wk);
+        }
+    }
+    keys
+}
+
+/// Shamir-share our seed and seal one bundle per peer: the
+/// share-distribution leg of the dropout-tolerant setup phase.
+fn seed_share_msg(session: &mut PartySession, rng: &mut DetRng, epoch: u64) -> Result<Msg> {
+    let robust = session.robust_mut().context("seed shares need a robust session")?;
+    let shares = robust.share_seed(rng);
+    let id = robust.inner.id;
+    let n = robust.inner.n_clients;
+    let mut sealed = vec![Vec::new(); n];
+    for (j, bundle) in shares.bundles.iter().enumerate() {
+        if j == id || !robust.inner.has_secret(j) {
+            continue;
+        }
+        sealed[j] = dropout::seal_bundle(&robust.inner.channel_key(j), id, j, bundle);
+    }
+    Ok(Msg::SeedShares { epoch, from: id as u16, sealed })
+}
+
+/// Unseal and store the bundles the aggregator relayed to us. Slots
+/// that cannot be genuine — out-of-range owners, owners we share no
+/// secret with — are skipped rather than indexed (corrupt or hostile
+/// wire input must not panic a client process).
+fn store_share_relay(session: &mut PartySession, sealed: &[Vec<u8>]) -> Result<()> {
+    let robust = session.robust_mut().context("share relay needs a robust session")?;
+    let id = robust.inner.id;
+    let n = robust.inner.n_clients;
+    for (owner, bytes) in sealed.iter().enumerate() {
+        if owner == id || owner >= n || bytes.is_empty() || !robust.inner.has_secret(owner) {
+            continue;
+        }
+        let key = robust.inner.channel_key(owner);
+        let shares = dropout::open_bundle(&key, owner, id, bytes)
+            .with_context(|| format!("bad seed-share bundle from client {owner}"))?;
+        robust.receive_share(owner, shares);
+    }
+    Ok(())
+}
+
+/// Answer a dropout notice: surrender our held shares of each dropped
+/// client's seed (skipping any we never received a bundle for).
+fn surrender_msg(session: &PartySession, round: u32, dropped: &[u16]) -> Result<Msg> {
+    let robust = session.robust().context("dropout notice needs a robust session")?;
+    let from = robust.inner.id as u16;
+    let bundles: Vec<(u16, Vec<u8>)> = dropped
+        .iter()
+        .filter_map(|&d| {
+            robust.surrender_share(d as usize).map(|s| (d, dropout::encode_shares(s)))
+        })
+        .collect();
+    Ok(Msg::SurrenderShares { round, from, bundles })
+}
 
 /// Seal one 8-byte sample ID for a holder under the pairwise channel
 /// key. Nonce binds (active=0, round, seq), so entries are never
@@ -124,10 +218,12 @@ pub struct ActiveParty<'e> {
     pub params: ModelParams,
     /// Per group: sample id → holder client index (from PSI alignment).
     pub holders: Vec<HashMap<u64, usize>>,
-    pub session: Option<ClientSession>,
+    pub session: Option<PartySession>,
     pub cfg: ModelConfig,
     pub security: SecurityMode,
     pub layout: GradLayout,
+    /// Shamir threshold for dropout tolerance (None = base protocol).
+    threshold: Option<usize>,
     backend: Backend<'e>,
     metrics: Metrics,
     rng: DetRng,
@@ -140,7 +236,8 @@ pub struct ActiveParty<'e> {
     kind: RoundKind,
     round: u32,
     batch_ids: Vec<u64>,
-    /// Waiting for a key directory before opening the round.
+    /// Waiting for a key directory (and, in robust mode, the seed-share
+    /// relay) before opening the round.
     await_setup: bool,
     own: Option<GradSum>,
     pending_gsum: Option<GradSum>,
@@ -152,6 +249,7 @@ impl<'e> ActiveParty<'e> {
         holders: Vec<HashMap<u64, usize>>,
         cfg: ModelConfig,
         security: SecurityMode,
+        threshold: Option<usize>,
         seed: u64,
         backend: Backend<'e>,
     ) -> Self {
@@ -167,6 +265,7 @@ impl<'e> ActiveParty<'e> {
             cfg,
             security,
             layout,
+            threshold,
             backend,
             metrics: Metrics::new(),
             rng: party_rng(seed, 0),
@@ -189,15 +288,21 @@ impl<'e> ActiveParty<'e> {
 
     /// Begin a setup epoch: generate per-peer keypairs.
     pub fn begin_setup(&mut self, n_clients: usize, epoch: u64) -> Msg {
-        let s = ClientSession::new(self.id, n_clients, epoch, &mut self.rng);
-        let msg = Msg::PublishKeys(keys_to_wire(&s.published_keys()));
+        let s = open_session(self.id, n_clients, epoch, self.threshold, &mut self.rng);
+        let msg = Msg::PublishKeys(keys_to_wire(&s.client().published_keys()));
         self.session = Some(s);
         msg
     }
 
     pub fn finish_setup(&mut self, all: &[WireKeys]) {
-        let keys: Vec<PublishedKeys> = all.iter().map(keys_from_wire).collect();
-        self.session.as_mut().expect("setup started").derive_secrets(&keys);
+        let s = self.session.as_mut().expect("setup started");
+        let keys = pad_directory(all, s.client().n_clients);
+        s.client_mut().derive_secrets(&keys);
+    }
+
+    /// The masking session (post `begin_setup`).
+    fn sess(&self) -> &ClientSession {
+        self.session.as_ref().expect("setup done").client()
     }
 
     /// Seal one mini-batch's IDs for their holders (training phase:
@@ -214,16 +319,23 @@ impl<'e> ActiveParty<'e> {
 
     fn make_batch_inner(&self, ids: &[u64], labels: Vec<f32>, round: u32) -> Msg {
         if self.security.is_secure() {
-            let session = self.session.as_ref().expect("setup done");
+            let session = self.sess();
             let batch = ids.len();
             let n_groups = self.holders.len();
             let mut entries = Vec::with_capacity(batch * n_groups);
             for (g, holder_map) in self.holders.iter().enumerate() {
                 for (pos, &id) in ids.iter().enumerate() {
                     let holder = *holder_map.get(&id).expect("holder known via PSI");
-                    let key = session.channel_key(holder);
                     let seq = (g * batch + pos) as u32;
-                    entries.push(seal_id(&key, round, seq, id));
+                    // a holder that dropped during setup has no channel
+                    // key: emit an unopenable placeholder so entry
+                    // positions (and thus seq numbers) stay aligned
+                    if session.has_secret(holder) {
+                        let key = session.channel_key(holder);
+                        entries.push(seal_id(&key, round, seq, id));
+                    } else {
+                        entries.push(Vec::new());
+                    }
                 }
             }
             Msg::BatchSelect { round, labels, entries }
@@ -253,13 +365,12 @@ impl<'e> ActiveParty<'e> {
     pub fn masked_activation(&self, round: u32, z: &Mat) -> Msg {
         match self.security {
             SecurityMode::SecureExact => {
-                let words =
-                    self.session.as_ref().unwrap().mask_tensor(&z.data, round as u64, 0);
+                let words = self.sess().mask_tensor(&z.data, round as u64, TAG_ACTIVATION);
                 Msg::MaskedActivation { round, from: self.id as u16, words }
             }
             SecurityMode::SecureFloat => {
                 let vals =
-                    self.session.as_ref().unwrap().mask_tensor_f32(&z.data, round as u64, 0);
+                    self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
                 Msg::FloatActivation { round, from: self.id as u16, vals }
             }
             SecurityMode::Plain => {
@@ -286,11 +397,11 @@ impl<'e> ActiveParty<'e> {
             .copy_from_slice(own_db);
         match self.security {
             SecurityMode::SecureExact => {
-                GradSum::Words(self.session.as_ref().unwrap().mask_tensor(&own, round as u64, 1))
+                GradSum::Words(self.sess().mask_tensor(&own, round as u64, TAG_GRADIENT))
             }
-            SecurityMode::SecureFloat => GradSum::Floats(
-                self.session.as_ref().unwrap().mask_tensor_f32(&own, round as u64, 1),
-            ),
+            SecurityMode::SecureFloat => {
+                GradSum::Floats(self.sess().mask_tensor_f32(&own, round as u64, TAG_GRADIENT))
+            }
             SecurityMode::Plain => GradSum::Floats(own),
         }
     }
@@ -397,6 +508,20 @@ impl<'e> ActiveParty<'e> {
         out.note(Note::RoundDone { round: self.round });
         Ok(())
     }
+
+    /// The setup phase of this round finished (key directory installed
+    /// and, in robust mode, seed shares stored): open the round proper.
+    fn setup_complete(&mut self, out: &mut Outbox) -> Result<()> {
+        if self.await_setup {
+            self.await_setup = false;
+            match self.kind {
+                RoundKind::Setup => out.note(Note::RoundDone { round: self.round }),
+                RoundKind::Train => self.start_train_round(out)?,
+                RoundKind::Test => bail!("testing rounds do not rotate keys"),
+            }
+        }
+        Ok(())
+    }
 }
 
 impl<'e> Party for ActiveParty<'e> {
@@ -437,15 +562,31 @@ impl<'e> Party for ActiveParty<'e> {
             Msg::KeyDirectory { all, .. } => {
                 let t0 = Instant::now();
                 self.finish_setup(&all);
-                self.rec(t0, true);
-                if self.await_setup {
-                    self.await_setup = false;
-                    match self.kind {
-                        RoundKind::Setup => out.note(Note::RoundDone { round: self.round }),
-                        RoundKind::Train => self.start_train_round(out)?,
-                        RoundKind::Test => bail!("testing rounds do not rotate keys"),
-                    }
+                if self.threshold.is_some() {
+                    // robust setup continues: distribute Shamir seed
+                    // shares; the round opens on our ShareRelay
+                    let epoch = self.sess().epoch;
+                    let msg =
+                        seed_share_msg(self.session.as_mut().unwrap(), &mut self.rng, epoch)?;
+                    self.rec(t0, true);
+                    out.send(Addr::Aggregator, msg);
+                } else {
+                    self.rec(t0, true);
+                    self.setup_complete(out)?;
                 }
+            }
+            Msg::ShareRelay { sealed, .. } => {
+                let t0 = Instant::now();
+                store_share_relay(self.session.as_mut().context("setup started")?, &sealed)?;
+                self.rec(t0, true);
+                self.setup_complete(out)?;
+            }
+            Msg::DropoutNotice { round, dropped } => {
+                let t0 = Instant::now();
+                let reply =
+                    surrender_msg(self.session.as_ref().context("setup done")?, round, &dropped)?;
+                self.rec(t0, true);
+                out.send(Addr::Aggregator, reply);
             }
             Msg::DzBroadcast { dz, .. } => {
                 let batch = self.cfg.batch_size;
@@ -506,11 +647,13 @@ pub struct PassiveParty<'e> {
     pub dim: usize,
     pub hidden: usize,
     pub data: PassiveData,
-    pub session: Option<ClientSession>,
+    pub session: Option<PartySession>,
     pub security: SecurityMode,
     pub layout: GradLayout,
     /// Current group weights (distributed by the aggregator).
     pub weights: Mat,
+    /// Shamir threshold for dropout tolerance (None = base protocol).
+    threshold: Option<usize>,
     backend: Backend<'e>,
     metrics: Metrics,
     rng: DetRng,
@@ -531,6 +674,7 @@ impl<'e> PassiveParty<'e> {
         data: PassiveData,
         cfg: &ModelConfig,
         security: SecurityMode,
+        threshold: Option<usize>,
         seed: u64,
         backend: Backend<'e>,
     ) -> Self {
@@ -546,6 +690,7 @@ impl<'e> PassiveParty<'e> {
             security,
             layout: GradLayout::new(cfg),
             weights: Mat::zeros(dim, cfg.hidden),
+            threshold,
             backend,
             metrics: Metrics::new(),
             rng: party_rng(seed, id),
@@ -564,22 +709,28 @@ impl<'e> PassiveParty<'e> {
     }
 
     pub fn begin_setup(&mut self, n_clients: usize, epoch: u64) -> Msg {
-        let s = ClientSession::new(self.id, n_clients, epoch, &mut self.rng);
-        let msg = Msg::PublishKeys(keys_to_wire(&s.published_keys()));
+        let s = open_session(self.id, n_clients, epoch, self.threshold, &mut self.rng);
+        let msg = Msg::PublishKeys(keys_to_wire(&s.client().published_keys()));
         self.session = Some(s);
         msg
     }
 
     pub fn finish_setup(&mut self, all: &[WireKeys]) {
-        let keys: Vec<PublishedKeys> = all.iter().map(keys_from_wire).collect();
-        self.session.as_mut().expect("setup started").derive_secrets(&keys);
+        let s = self.session.as_mut().expect("setup started");
+        let keys = pad_directory(all, s.client().n_clients);
+        s.client_mut().derive_secrets(&keys);
+    }
+
+    /// The masking session (post `begin_setup`).
+    fn sess(&self) -> &ClientSession {
+        self.session.as_ref().expect("setup done").client()
     }
 
     /// Decrypt what we can from the sealed ID broadcast (§4.0.2): every
     /// entry is tried; only those sealed under our pairwise key open.
     /// Returns (position-in-batch, id) pairs.
     pub fn resolve_batch(&self, round: u32, entries: &[Vec<u8>], batch: usize) -> Vec<(usize, u64)> {
-        let session = self.session.as_ref().expect("setup done");
+        let session = self.sess();
         let key = session.channel_key(0); // channel with the active party
         let mut out = Vec::new();
         for (seq, sealed) in entries.iter().enumerate() {
@@ -621,13 +772,12 @@ impl<'e> PassiveParty<'e> {
     pub fn masked_activation(&self, round: u32, z: &Mat) -> Msg {
         match self.security {
             SecurityMode::SecureExact => {
-                let words =
-                    self.session.as_ref().unwrap().mask_tensor(&z.data, round as u64, 0);
+                let words = self.sess().mask_tensor(&z.data, round as u64, TAG_ACTIVATION);
                 Msg::MaskedActivation { round, from: self.id as u16, words }
             }
             SecurityMode::SecureFloat => {
                 let vals =
-                    self.session.as_ref().unwrap().mask_tensor_f32(&z.data, round as u64, 0);
+                    self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
                 Msg::FloatActivation { round, from: self.id as u16, vals }
             }
             SecurityMode::Plain => {
@@ -646,12 +796,11 @@ impl<'e> PassiveParty<'e> {
         full[off..off + len].copy_from_slice(&dw.data);
         match self.security {
             SecurityMode::SecureExact => {
-                let words = self.session.as_ref().unwrap().mask_tensor(&full, round as u64, 1);
+                let words = self.sess().mask_tensor(&full, round as u64, TAG_GRADIENT);
                 Msg::MaskedGradient { round, from: self.id as u16, words }
             }
             SecurityMode::SecureFloat => {
-                let vals =
-                    self.session.as_ref().unwrap().mask_tensor_f32(&full, round as u64, 1);
+                let vals = self.sess().mask_tensor_f32(&full, round as u64, TAG_GRADIENT);
                 Msg::FloatGradient { round, from: self.id as u16, vals }
             }
             SecurityMode::Plain => {
@@ -711,7 +860,27 @@ impl<'e> Party for PassiveParty<'e> {
             Msg::KeyDirectory { all, .. } => {
                 let t0 = Instant::now();
                 self.finish_setup(&all);
+                if self.threshold.is_some() {
+                    let epoch = self.sess().epoch;
+                    let msg =
+                        seed_share_msg(self.session.as_mut().unwrap(), &mut self.rng, epoch)?;
+                    self.rec(t0, true);
+                    out.send(Addr::Aggregator, msg);
+                } else {
+                    self.rec(t0, true);
+                }
+            }
+            Msg::ShareRelay { sealed, .. } => {
+                let t0 = Instant::now();
+                store_share_relay(self.session.as_mut().context("setup started")?, &sealed)?;
                 self.rec(t0, true);
+            }
+            Msg::DropoutNotice { round, dropped } => {
+                let t0 = Instant::now();
+                let reply =
+                    surrender_msg(self.session.as_ref().context("setup done")?, round, &dropped)?;
+                self.rec(t0, true);
+                out.send(Addr::Aggregator, reply);
             }
             Msg::BatchRelay { entries, round } => {
                 let batch = self.batch_size;
@@ -805,10 +974,45 @@ pub struct Aggregator<'e> {
     acts_float: BTreeMap<u16, Vec<f32>>,
     grads_exact: BTreeMap<u16, Vec<u64>>,
     grads_float: BTreeMap<u16, Vec<f32>>,
+    /// This round's fan-ins were summed and consumed (the buffers
+    /// empty out on consumption, so stall diagnosis needs the flags).
+    acts_done: bool,
+    grads_done: bool,
+    // --- dropout-tolerance state (enabled by `threshold`) ---
+    /// Shamir threshold t: any t surviving clients can reconstruct a
+    /// dropped client's seed. None = base protocol (a drop stalls).
+    threshold: Option<usize>,
+    /// Clients still participating; declared-dropped ids leave forever.
+    live: BTreeSet<u16>,
+    /// Epoch of the sessions the current directory established.
+    session_epoch: u64,
+    /// The broadcast key directory, padded to one entry per client —
+    /// kept so a reconstructed seed can be rebuilt into a session.
+    directory: Vec<PublishedKeys>,
+    /// Setup sub-phase tracking (initial setup and §5.1 rotations).
+    in_setup: bool,
+    directory_sent: bool,
+    /// Seed-share bundles collected during setup: from → per-recipient.
+    setup_shares: BTreeMap<u16, Vec<Vec<u8>>>,
+    /// Dropped clients of the current epoch with rebuilt sessions: the
+    /// source of the mask corrections added at every fan-in.
+    recovered: BTreeMap<u16, ClientSession>,
+    /// Declared dropped, seeds not yet reconstructed.
+    unrecovered: BTreeSet<u16>,
+    /// Live clients whose SurrenderShares we still await.
+    awaiting_surrender: BTreeSet<u16>,
+    /// dropped id → (source id → decoded share bundle).
+    surrendered: BTreeMap<u16, BTreeMap<u16, Vec<Share>>>,
 }
 
 impl<'e> Aggregator<'e> {
-    pub fn new(cfg: &ModelConfig, seed: u64, backend: Backend<'e>, groups: Vec<usize>) -> Self {
+    pub fn new(
+        cfg: &ModelConfig,
+        seed: u64,
+        backend: Backend<'e>,
+        groups: Vec<usize>,
+        threshold: Option<usize>,
+    ) -> Self {
         // aggregator receives the initial global module from the active
         // party's init (same seed → same init as ModelParams::init)
         let params = ModelParams::init(cfg, seed);
@@ -837,6 +1041,19 @@ impl<'e> Aggregator<'e> {
             acts_float: BTreeMap::new(),
             grads_exact: BTreeMap::new(),
             grads_float: BTreeMap::new(),
+            acts_done: false,
+            grads_done: false,
+            threshold,
+            live: (0..cfg.n_clients() as u16).collect(),
+            session_epoch: 0,
+            directory: Vec::new(),
+            in_setup: false,
+            directory_sent: false,
+            setup_shares: BTreeMap::new(),
+            recovered: BTreeMap::new(),
+            unrecovered: BTreeSet::new(),
+            awaiting_surrender: BTreeSet::new(),
+            surrendered: BTreeMap::new(),
         }
     }
 
@@ -844,38 +1061,12 @@ impl<'e> Aggregator<'e> {
         self.metrics.record(AGGREGATOR, self.phase, t0.elapsed().as_nanos(), overhead);
     }
 
-    /// Sum masked activations into the clear aggregate z (Eq. 5).
-    pub fn sum_activations_exact(&self, batch: usize, parts: &[Vec<u64>]) -> Mat {
-        assert_eq!(parts.len(), self.n_clients, "need every client's share");
-        let mut acc = vec![0u64; batch * self.hidden];
-        for p in parts {
-            assert_eq!(p.len(), acc.len());
-            for (a, v) in acc.iter_mut().zip(p) {
-                *a = a.wrapping_add(*v);
-            }
-        }
-        Mat::from_vec(batch, self.hidden, self.fp.decode_vec(&acc))
-    }
-
-    pub fn sum_activations_float(&self, batch: usize, parts: &[Vec<f32>]) -> Mat {
-        assert_eq!(parts.len(), self.n_clients);
-        let mut acc = vec![0.0f32; batch * self.hidden];
-        for p in parts {
-            for (a, v) in acc.iter_mut().zip(p) {
-                *a += v;
-            }
-        }
-        Mat::from_vec(batch, self.hidden, acc)
-    }
-
-    /// Sum the passives' masked gradients. The result is still masked
-    /// by the active party's total mask (its share is absent), so the
-    /// aggregator learns nothing (§4.0.2).
-    pub fn sum_gradients_exact(&self, parts: &[Vec<u64>]) -> Vec<u64> {
+    /// Wrap-sum equal-length masked word vectors (Eq. 5's fan-in).
+    fn wrap_sum(parts: &[Vec<u64>]) -> Vec<u64> {
         let l = parts[0].len();
         let mut acc = vec![0u64; l];
         for p in parts {
-            assert_eq!(p.len(), l);
+            assert_eq!(p.len(), l, "masked vectors must be equal length");
             for (a, v) in acc.iter_mut().zip(p) {
                 *a = a.wrapping_add(*v);
             }
@@ -883,7 +1074,7 @@ impl<'e> Aggregator<'e> {
         acc
     }
 
-    pub fn sum_gradients_float(&self, parts: &[Vec<f32>]) -> Vec<f32> {
+    fn float_sum(parts: &[Vec<f32>]) -> Vec<f32> {
         let l = parts[0].len();
         let mut acc = vec![0.0f32; l];
         for p in parts {
@@ -892,6 +1083,29 @@ impl<'e> Aggregator<'e> {
             }
         }
         acc
+    }
+
+    /// The combined total mask of every recovered dropped client for
+    /// (round, tag): adding this to a fan-in sum cancels the survivors'
+    /// dangling pairwise masks (the Bonawitz'17 recovery step). Zero
+    /// when nothing dropped this epoch.
+    fn dropped_mask_correction(&self, round: u64, tag: u32, len: usize) -> Option<Vec<u64>> {
+        if self.recovered.is_empty() {
+            return None;
+        }
+        let mut acc = vec![0u64; len];
+        for session in self.recovered.values() {
+            let m = session.total_mask(round, tag, len);
+            for (a, v) in acc.iter_mut().zip(&m) {
+                *a = a.wrapping_add(*v);
+            }
+        }
+        Some(acc)
+    }
+
+    /// Number of live passive clients (gradient fan-in width).
+    fn live_passives(&self) -> usize {
+        self.live.iter().filter(|&&c| c != 0).count()
     }
 
     /// Apply the global-module SGD update (the aggregator computes
@@ -920,7 +1134,7 @@ impl<'e> Aggregator<'e> {
     }
 
     /// Relay the sealed batch (and, in training, each group's weights)
-    /// to every passive party once the prerequisites arrived.
+    /// to every live passive party once the prerequisites arrived.
     fn maybe_relay(&mut self, out: &mut Outbox) {
         if self.relayed {
             return;
@@ -932,6 +1146,9 @@ impl<'e> Aggregator<'e> {
         }
         let round = self.round;
         for ci in 1..self.n_clients {
+            if !self.live.contains(&(ci as u16)) {
+                continue;
+            }
             let relay = if let Some(e) = &self.relay_entries {
                 Msg::BatchRelay { round, entries: e.clone() }
             } else {
@@ -947,24 +1164,36 @@ impl<'e> Aggregator<'e> {
         self.relayed = true;
     }
 
-    /// Once every client's masked activation is in: unmask by
-    /// summation, then either run the global training step and
-    /// broadcast ∂L/∂z, or (testing) predict and reply to the active
-    /// party.
+    /// Once every live client's masked activation is in (and any
+    /// pending recovery finished): unmask by summation — adding the
+    /// recovered dropped-client masks so the survivors' danglers cancel
+    /// — then either run the global training step and broadcast ∂L/∂z,
+    /// or (testing) predict and reply to the active party.
     fn maybe_sum_activations(&mut self, out: &mut Outbox) -> Result<()> {
-        if self.acts_exact.len() + self.acts_float.len() < self.n_clients {
+        if !self.unrecovered.is_empty()
+            || self.acts_exact.len() + self.acts_float.len() < self.live.len()
+        {
             return Ok(());
         }
         let batch = self.cfg.batch_size;
+        self.acts_done = true;
         // BTreeMap order = client order: float addition order (and thus
         // every output bit) is the same on every transport.
         let exact: Vec<Vec<u64>> = std::mem::take(&mut self.acts_exact).into_values().collect();
         let float: Vec<Vec<f32>> = std::mem::take(&mut self.acts_float).into_values().collect();
         let t0 = Instant::now();
         let z = if !exact.is_empty() {
-            self.sum_activations_exact(batch, &exact)
+            let mut acc = Self::wrap_sum(&exact);
+            if let Some(corr) =
+                self.dropped_mask_correction(self.round as u64, TAG_ACTIVATION, acc.len())
+            {
+                for (a, v) in acc.iter_mut().zip(&corr) {
+                    *a = a.wrapping_add(*v);
+                }
+            }
+            Mat::from_vec(batch, self.hidden, self.fp.decode_vec(&acc))
         } else {
-            self.sum_activations_float(batch, &float)
+            Mat::from_vec(batch, self.hidden, Self::float_sum(&float))
         };
         self.rec(t0, false);
         let (gw, gb) = (self.global_w.clone(), self.global_b);
@@ -979,7 +1208,9 @@ impl<'e> Aggregator<'e> {
                 out.note(Note::Loss { round: self.round, loss: step.loss });
                 let dz = Msg::DzBroadcast { round: self.round, dz: step.dz.data };
                 for i in 0..self.n_clients {
-                    out.send(Addr::Client(i), dz.clone());
+                    if self.live.contains(&(i as u16)) {
+                        out.send(Addr::Client(i), dz.clone());
+                    }
                 }
             }
             RoundKind::Test => {
@@ -993,24 +1224,261 @@ impl<'e> Aggregator<'e> {
         Ok(())
     }
 
-    /// Once every passive's masked gradient is in: sum (still masked by
-    /// the active party's total mask) and forward to the active party.
+    /// Once every live passive's masked gradient is in: sum (still
+    /// masked by the active party's total mask — §4.0.2's privacy
+    /// argument), add the recovered dropped-client gradient masks, and
+    /// forward to the active party.
     fn maybe_sum_gradients(&mut self, out: &mut Outbox) {
-        let n_passive = self.n_clients - 1;
-        if n_passive == 0 || self.grads_exact.len() + self.grads_float.len() < n_passive {
+        let n_passive = self.live_passives();
+        if n_passive == 0
+            || !self.unrecovered.is_empty()
+            || self.grads_exact.len() + self.grads_float.len() < n_passive
+        {
             return;
         }
+        self.grads_done = true;
         let exact: Vec<Vec<u64>> = std::mem::take(&mut self.grads_exact).into_values().collect();
         let float: Vec<Vec<f32>> = std::mem::take(&mut self.grads_float).into_values().collect();
         let round = self.round;
         let t0 = Instant::now();
         let msg = if !exact.is_empty() {
-            Msg::GradientSum { round, words: self.sum_gradients_exact(&exact) }
+            let mut acc = Self::wrap_sum(&exact);
+            if let Some(corr) =
+                self.dropped_mask_correction(round as u64, TAG_GRADIENT, acc.len())
+            {
+                for (a, v) in acc.iter_mut().zip(&corr) {
+                    *a = a.wrapping_add(*v);
+                }
+            }
+            Msg::GradientSum { round, words: acc }
         } else {
-            Msg::FloatGradientSum { round, vals: self.sum_gradients_float(&float) }
+            Msg::FloatGradientSum { round, vals: Self::float_sum(&float) }
         };
         self.rec(t0, false);
         out.send(Addr::Client(0), msg);
+    }
+
+    // -----------------------------------------------------------------
+    // Dropout recovery (Bonawitz'17 over the live protocol)
+    // -----------------------------------------------------------------
+
+    /// Remove clients from the live set, enforcing the recoverability
+    /// invariants: the active party must survive, and at least t
+    /// clients must remain to reconstruct any dropped seed.
+    ///
+    /// Any fan-in contribution a now-dropped client already buffered is
+    /// purged: the recovery math adds the client's *entire* total mask
+    /// back, which is only correct if the client contributed nothing —
+    /// keeping a buffered `enc(x) + M` entry while also adding `M`
+    /// would corrupt the aggregate (and a stale entry could make the
+    /// completeness count pass while a live client is still missing).
+    fn remove_from_live(&mut self, gone: &BTreeSet<u16>) -> Result<()> {
+        let t = self.threshold.expect("dropout tolerance enabled");
+        for g in gone {
+            self.live.remove(g);
+            self.acts_exact.remove(g);
+            self.acts_float.remove(g);
+            self.grads_exact.remove(g);
+            self.grads_float.remove(g);
+        }
+        if !self.live.contains(&0) {
+            bail!(DropoutError::ActivePartyDropped);
+        }
+        if self.live.len() < t {
+            bail!(DropoutError::BelowThreshold { survivors: self.live.len(), threshold: t });
+        }
+        Ok(())
+    }
+
+    /// Declare mid-round dropouts: these clients exchanged keys this
+    /// epoch (their pairwise masks dangle in every fan-in), so the
+    /// survivors must surrender shares of their seeds before any sum
+    /// can be unmasked.
+    fn declare_dropped(&mut self, gone: BTreeSet<u16>, out: &mut Outbox) -> Result<()> {
+        self.remove_from_live(&gone)?;
+        self.unrecovered.extend(gone.iter().copied());
+        let msg =
+            Msg::DropoutNotice { round: self.round, dropped: gone.iter().copied().collect() };
+        self.awaiting_surrender = self.live.clone();
+        for &c in &self.live {
+            out.send(Addr::Client(c as usize), msg.clone());
+        }
+        Ok(())
+    }
+
+    /// All awaited surrenders arrived (or the laggards were themselves
+    /// declared dropped): reconstruct every outstanding seed, rebuild
+    /// the dropped sessions, and resume the stalled fan-in.
+    fn finish_recovery(&mut self, out: &mut Outbox) -> Result<()> {
+        let t = self.threshold.expect("dropout tolerance enabled");
+        let t0 = Instant::now();
+        for d in std::mem::take(&mut self.unrecovered) {
+            let sources = self.surrendered.remove(&d).unwrap_or_default();
+            if sources.len() < t {
+                bail!(DropoutError::BelowThreshold { survivors: sources.len(), threshold: t });
+            }
+            // BTreeMap order: shares taken in source-id order on every
+            // transport, so reconstruction is deterministic
+            let bundles: Vec<Vec<Share>> = sources.into_values().take(t).collect();
+            let seed = dropout::reconstruct_seed(&bundles)?;
+            let session = dropout::rebuild_session(
+                seed,
+                d as usize,
+                self.n_clients,
+                self.session_epoch,
+                &self.directory,
+            );
+            self.recovered.insert(d, session);
+        }
+        self.rec(t0, true);
+        self.maybe_sum_activations(out)?;
+        self.maybe_sum_gradients(out);
+        Ok(())
+    }
+
+    /// Quiescence during a setup phase. Before the directory went out,
+    /// non-publishers are simply excluded (no one derived a secret with
+    /// them — nothing dangles). After it, the epoch is poisoned: peers
+    /// already derived masks against the laggards, and no seed shares
+    /// exist yet, so the only safe move is a fresh key exchange among
+    /// the survivors.
+    fn stall_setup(&mut self, out: &mut Outbox) -> Result<()> {
+        if !self.directory_sent {
+            let published: BTreeSet<u16> = self.keys.iter().map(|k| k.from).collect();
+            let gone: BTreeSet<u16> =
+                self.live.iter().copied().filter(|c| !published.contains(c)).collect();
+            if gone.is_empty() {
+                return Ok(());
+            }
+            self.remove_from_live(&gone)?;
+            self.maybe_broadcast_directory(out);
+        } else {
+            let gone: BTreeSet<u16> = self
+                .live
+                .iter()
+                .copied()
+                .filter(|c| !self.setup_shares.contains_key(c))
+                .collect();
+            if gone.is_empty() {
+                return Ok(());
+            }
+            self.remove_from_live(&gone)?;
+            self.begin_key_exchange(out);
+        }
+        Ok(())
+    }
+
+    /// Quiescence mid-round: whoever owes the stalled fan-in its next
+    /// contribution has dropped. The active party owning the round is
+    /// unrecoverable; passive laggards are declared and recovered.
+    fn stall_round(&mut self, out: &mut Outbox) -> Result<()> {
+        if self.in_setup {
+            return self.stall_setup(out);
+        }
+        // waiting for surrendered shares: laggards there have dropped
+        // too — their fan-in contributions arrived (they were survivors
+        // when declared), but their own seeds now need recovering
+        if !self.awaiting_surrender.is_empty() {
+            let gone = std::mem::take(&mut self.awaiting_surrender);
+            return self.declare_dropped(gone, out);
+        }
+        if self.kind == RoundKind::Train && !self.relayed {
+            // batch/weights never arrived: only the active party sends
+            // those, and without it the round has no owner
+            bail!(DropoutError::ActivePartyDropped);
+        }
+        if !self.acts_done {
+            let acts: BTreeSet<u16> =
+                self.acts_exact.keys().chain(self.acts_float.keys()).copied().collect();
+            if acts.len() < self.live.len() {
+                let gone: BTreeSet<u16> =
+                    self.live.iter().copied().filter(|c| !acts.contains(c)).collect();
+                if gone.contains(&0) {
+                    bail!(DropoutError::ActivePartyDropped);
+                }
+                return self.declare_dropped(gone, out);
+            }
+            return Ok(());
+        }
+        if self.kind == RoundKind::Train && !self.grads_done {
+            let grads: BTreeSet<u16> =
+                self.grads_exact.keys().chain(self.grads_float.keys()).copied().collect();
+            if grads.len() < self.live_passives() {
+                let gone: BTreeSet<u16> = self
+                    .live
+                    .iter()
+                    .copied()
+                    .filter(|&c| c != 0 && !grads.contains(&c))
+                    .collect();
+                return self.declare_dropped(gone, out);
+            }
+        }
+        // everything we fan in is complete: nothing we can recover
+        // (e.g. the active party died after the gradient sum) — leave
+        // the outbox empty and let the transport abort
+        Ok(())
+    }
+
+    /// Open a key-exchange leg: request fresh keys from every live
+    /// client (initial setup, §5.1 rotation, or post-drop re-key).
+    fn begin_key_exchange(&mut self, out: &mut Outbox) {
+        self.keys.clear();
+        self.setup_shares.clear();
+        self.directory_sent = false;
+        self.in_setup = true;
+        for &c in &self.live {
+            out.send(Addr::Client(c as usize), Msg::RequestKeys { epoch: self.epoch });
+        }
+    }
+
+    /// Broadcast the key directory once every live client published.
+    fn maybe_broadcast_directory(&mut self, out: &mut Outbox) {
+        if self.keys.len() < self.live.len() {
+            return;
+        }
+        let mut all = std::mem::take(&mut self.keys);
+        all.sort_by_key(|k| k.from);
+        // keep the padded directory: recovery rebuilds dropped sessions
+        // against exactly what the clients derived from
+        self.directory = pad_directory(&all, self.n_clients);
+        let dir = Msg::KeyDirectory { epoch: self.epoch, all };
+        for &i in &self.live {
+            out.send(Addr::Client(i as usize), dir.clone());
+        }
+        self.session_epoch = self.epoch;
+        self.epoch += 1;
+        self.directory_sent = true;
+        // a fresh epoch has no dangling masks: dropped clients are
+        // excluded from the new directory entirely
+        self.recovered.clear();
+        if self.threshold.is_none() {
+            self.in_setup = false;
+        }
+    }
+
+    /// Relay the sealed seed-share bundles once every live client sent
+    /// theirs — completing the dropout-tolerant setup phase.
+    fn maybe_relay_shares(&mut self, out: &mut Outbox) {
+        if self.setup_shares.len() < self.live.len() {
+            return;
+        }
+        for &j in &self.live {
+            let sealed: Vec<Vec<u8>> = (0..self.n_clients)
+                .map(|i| {
+                    self.setup_shares
+                        .get(&(i as u16))
+                        .and_then(|v| v.get(j as usize))
+                        .cloned()
+                        .unwrap_or_default()
+                })
+                .collect();
+            out.send(
+                Addr::Client(j as usize),
+                Msg::ShareRelay { epoch: self.session_epoch, sealed },
+            );
+        }
+        self.setup_shares.clear();
+        self.in_setup = false;
     }
 }
 
@@ -1032,27 +1500,53 @@ impl<'e> Party for Aggregator<'e> {
         self.acts_float.clear();
         self.grads_exact.clear();
         self.grads_float.clear();
+        self.acts_done = false;
+        self.grads_done = false;
         if spec.kind == RoundKind::Setup || spec.rotate {
-            self.keys.clear();
-            for i in 0..self.n_clients {
-                out.send(Addr::Client(i), Msg::RequestKeys { epoch: self.epoch });
-            }
+            self.begin_key_exchange(out);
         }
         Ok(())
     }
 
-    fn on_message(&mut self, _from: Addr, msg: Msg, out: &mut Outbox) -> Result<()> {
+    fn on_message(&mut self, from: Addr, msg: Msg, out: &mut Outbox) -> Result<()> {
+        // traffic from a declared-dropped client (e.g. one that was
+        // slow rather than dead, or a late message already in flight)
+        // is ignored for the rest of the run
+        if let Addr::Client(i) = from {
+            if !self.live.contains(&(i as u16)) {
+                return Ok(());
+            }
+        }
         match msg {
             Msg::PublishKeys(k) => {
                 self.keys.push(k);
-                if self.keys.len() == self.n_clients {
-                    let mut all = std::mem::take(&mut self.keys);
-                    all.sort_by_key(|k| k.from);
-                    let dir = Msg::KeyDirectory { epoch: self.epoch, all };
-                    for i in 0..self.n_clients {
-                        out.send(Addr::Client(i), dir.clone());
+                self.maybe_broadcast_directory(out);
+            }
+            Msg::SeedShares { epoch, from, sealed } => {
+                // a re-key abandons the poisoned epoch: shares for it
+                // that were still in flight must not mix into the new
+                // collection (directory_sent is false between the
+                // re-key request and the fresh directory)
+                if self.directory_sent && epoch == self.session_epoch {
+                    self.setup_shares.insert(from, sealed);
+                    self.maybe_relay_shares(out);
+                }
+            }
+            Msg::SurrenderShares { from, bundles, .. } => {
+                if !self.awaiting_surrender.remove(&from) {
+                    return Ok(());
+                }
+                let t0 = Instant::now();
+                for (d, bytes) in bundles {
+                    if self.unrecovered.contains(&d) {
+                        let shares = dropout::decode_shares(&bytes)
+                            .with_context(|| format!("bad surrendered shares from {from}"))?;
+                        self.surrendered.entry(d).or_default().insert(from, shares);
                     }
-                    self.epoch += 1;
+                }
+                self.rec(t0, true);
+                if self.awaiting_surrender.is_empty() {
+                    self.finish_recovery(out)?;
                 }
             }
             Msg::BatchSelect { labels, entries, .. } => {
@@ -1088,6 +1582,18 @@ impl<'e> Party for Aggregator<'e> {
             m => bail!("aggregator: unexpected message {m:?}"),
         }
         Ok(())
+    }
+
+    fn on_stall(&mut self, out: &mut Outbox) -> Result<()> {
+        if self.threshold.is_none() {
+            // base protocol: a silent peer is a stall, not a dropout
+            return Ok(());
+        }
+        if self.in_setup || self.kind == RoundKind::Setup {
+            self.stall_setup(out)
+        } else {
+            self.stall_round(out)
+        }
     }
 
     fn concurrent_safe(&self) -> bool {

@@ -73,6 +73,11 @@ pub enum Note {
     /// A party hit a protocol error (threaded/remote runs surface it
     /// through this instead of a panic).
     Failed { who: u16, error: String },
+    /// Transport bookkeeping: the outcome of a quiescence probe
+    /// ([`Party::on_stall`]) — `acted` says whether the probed party
+    /// pushed recovery traffic, `processed` how many events it handled
+    /// since the previous probe. Never part of a run's result notes.
+    Stall { acted: bool, processed: u64 },
 }
 
 /// Messages and notes a party produced while handling one event.
@@ -110,6 +115,17 @@ pub trait Party: Send {
     /// A protocol message arrived. Per-sender FIFO ordering is
     /// guaranteed by every transport; cross-sender order is not.
     fn on_message(&mut self, from: Addr, msg: Msg, out: &mut Outbox) -> Result<()>;
+
+    /// The transport detected quiescence: no traffic in flight (sim) or
+    /// none for the stall timeout (threads, TCP), yet the round has not
+    /// completed. A party that can act on missing peers — the
+    /// aggregator's dropout recovery — pushes recovery traffic into
+    /// `out`; everyone else leaves it empty. Returning an error aborts
+    /// the run (e.g. [`DropoutError`](crate::secagg::DropoutError) when
+    /// fewer than t clients survive).
+    fn on_stall(&mut self, _out: &mut Outbox) -> Result<()> {
+        Ok(())
+    }
 
     /// Whether this party may run concurrently with its peers. False
     /// when it holds a shared engine handle that is not audited for
@@ -192,6 +208,7 @@ const N_LOSS: u8 = 1;
 const N_PREDICTIONS: u8 = 2;
 const N_ROUND_DONE: u8 = 3;
 const N_FAILED: u8 = 4;
+const N_STALL: u8 = 5;
 
 impl Note {
     pub fn encode_into(&self, w: &mut Writer) {
@@ -215,6 +232,11 @@ impl Note {
                 w.u16(*who);
                 w.bytes(error.as_bytes());
             }
+            Note::Stall { acted, processed } => {
+                w.u8(N_STALL);
+                w.u8(*acted as u8);
+                w.u64(*processed);
+            }
         }
     }
 
@@ -227,6 +249,7 @@ impl Note {
                 who: r.u16()?,
                 error: String::from_utf8_lossy(&r.bytes()?).into_owned(),
             },
+            N_STALL => Note::Stall { acted: r.u8()? != 0, processed: r.u64()? },
             t => anyhow::bail!("bad note tag {t}"),
         })
     }
@@ -260,6 +283,7 @@ mod tests {
             Note::Predictions { round: 9, probs: vec![0.5, 0.125] },
             Note::RoundDone { round: SETUP_ROUND },
             Note::Failed { who: 2, error: "boom".into() },
+            Note::Stall { acted: true, processed: 42 },
         ] {
             let mut w = Writer::new();
             n.encode_into(&mut w);

@@ -235,6 +235,63 @@ mod tests {
     }
 
     #[test]
+    fn exactly_t_shares_reconstruct_any_subset() {
+        // every size-t subset of the n shares reconstructs; this is the
+        // exact guarantee dropout recovery leans on when it takes the
+        // first t surrendered bundles in source-id order
+        let mut rng = DetRng::from_seed(21).as_fill_fn();
+        let (t, n) = (3usize, 5usize);
+        let secret = 0x00ab_cdefu64;
+        let shares = split(secret, t, n, &mut rng);
+        for a in 0..n {
+            for b in (a + 1)..n {
+                for c in (b + 1)..n {
+                    let subset = [shares[a], shares[b], shares[c]];
+                    assert_eq!(reconstruct(&subset), secret, "subset ({a},{b},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate share x")]
+    fn duplicate_x_coordinates_rejected() {
+        let mut rng = DetRng::from_seed(22).as_fill_fn();
+        let shares = split(99, 2, 3, &mut rng);
+        let dup = [shares[0], shares[0]];
+        let _ = reconstruct(&dup);
+    }
+
+    #[test]
+    fn corrupted_share_yields_wrong_secret_not_crash() {
+        // a flipped bit in any single share of a t-sized set perturbs
+        // the interpolation: reconstruction succeeds but the output is
+        // wrong (detectable upstream via the seed commitment)
+        let mut rng = DetRng::from_seed(23).as_fill_fn();
+        let secret = 0x0123_4567u64;
+        let shares = split(secret, 3, 5, &mut rng);
+        for victim in 0..3 {
+            let mut bad = [shares[0], shares[1], shares[2]];
+            bad[victim].y ^= 1;
+            assert_ne!(reconstruct(&bad), secret, "corrupting share {victim}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid threshold")]
+    fn threshold_above_n_rejected_at_split() {
+        let mut rng = DetRng::from_seed(24).as_fill_fn();
+        let _ = split(1, 4, 3, &mut rng);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid threshold")]
+    fn zero_threshold_rejected_at_split() {
+        let mut rng = DetRng::from_seed(25).as_fill_fn();
+        let _ = split(1, 0, 3, &mut rng);
+    }
+
+    #[test]
     fn randomized_roundtrip_many() {
         let mut seed_rng = DetRng::from_seed(5);
         for _ in 0..50 {

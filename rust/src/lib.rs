@@ -52,6 +52,23 @@
 //! println!("losses: {:?}", report.losses);
 //! ```
 //!
+//! ## Dropout tolerance (Bonawitz'17, §5.1)
+//!
+//! With [`RunConfig::shamir_threshold`](coordinator::RunConfig) set,
+//! the setup phase additionally Shamir-shares every client's mask seed
+//! t-of-n (bundles sealed under the pairwise AEAD channels, relayed by
+//! the aggregator), and every transport detects quiescence — an empty
+//! FIFO in the simulator, a stall timeout on threads and TCP — and
+//! probes the aggregator ([`Party::on_stall`](coordinator::Party)).
+//! The aggregator declares the silent clients dropped, collects
+//! surrendered shares from ≥ t survivors, reconstructs the dropped
+//! seeds, and adds the missing total masks so every fan-in still
+//! cancels exactly. Below t survivors the run aborts with a typed
+//! [`DropoutError`](secagg::DropoutError) instead of a wrong answer.
+//! The deterministic fault-injection harness ([`net::faulty`]) and
+//! `tests/dropout_recovery.rs` prove recovery bit-exact against the
+//! zero-contribution twin run on every transport.
+//!
 //! Everything the paper depends on is implemented from scratch in this
 //! crate: the crypto stack ([`crypto`]), the secure-aggregation core
 //! ([`secagg`]), the dataset substrate ([`data`]), the model substrate

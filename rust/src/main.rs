@@ -24,9 +24,10 @@ use anyhow::{bail, Context, Result};
 use vfl::bench::{fig2, tables};
 use vfl::coordinator::{
     build, run_experiment, summarize, BackendKind, Built, RunConfig, SecurityMode, TransportKind,
+    SETUP_ROUND,
 };
 use vfl::model::ModelConfig;
-use vfl::net::{tcp, Addr, Phase};
+use vfl::net::{tcp, Addr, Fault, FaultPlan, Phase};
 use vfl::runtime::Engine;
 
 /// A token is a flag if it starts with `-` and is not a number —
@@ -60,6 +61,33 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, flags)
 }
 
+/// Parse a `--dropout-schedule` spec: comma-separated
+/// `client@round[+after_sends]` crash points, `round` being a training
+/// round number or `setup`. Example: `2@1,4@3+1` — client 2 crashes at
+/// the start of round 1, client 4 after one send in round 3.
+fn parse_dropout_schedule(spec: &str) -> Result<FaultPlan> {
+    let mut plan = FaultPlan::default();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (client, rest) = part
+            .split_once('@')
+            .with_context(|| format!("bad crash point {part:?} (want client@round[+sends])"))?;
+        let client: usize = client.trim().parse().context("bad client index")?;
+        let (round, after_sends) = match rest.split_once('+') {
+            Some((r, s)) => (r, s.trim().parse().context("bad send count")?),
+            None => (rest, 0usize),
+        };
+        let round = match round.trim() {
+            "setup" => SETUP_ROUND,
+            r => r.parse().context("bad round (number or 'setup')")?,
+        };
+        plan = plan.with(client, Fault::Crash { round, after_sends });
+    }
+    if plan.faults.is_empty() {
+        bail!("empty --dropout-schedule");
+    }
+    Ok(plan)
+}
+
 /// Build a RunConfig from the shared train/serve/join flags.
 fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     let dataset = flags.get("dataset").map(String::as_str).unwrap_or("banking");
@@ -88,6 +116,32 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
         cfg.transport = TransportKind::Threaded;
     }
     cfg.test_rounds = flags.get("test-rounds").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    if let Some(t) = flags.get("shamir-threshold") {
+        cfg.shamir_threshold = Some(t.parse().context("bad --shamir-threshold")?);
+    }
+    if let Some(spec) = flags.get("dropout-schedule") {
+        if cfg.shamir_threshold.is_none() {
+            bail!("--dropout-schedule needs --shamir-threshold (the run cannot recover otherwise)");
+        }
+        let plan = parse_dropout_schedule(spec)?;
+        // validate against the actual run shape: a silently out-of-range
+        // crash point would make a "recovery worked" run prove nothing
+        let n = cfg.model.n_clients();
+        for (c, f) in &plan.faults {
+            if *c >= n {
+                bail!("dropout schedule client {c} out of range (this config has clients 0..{n})");
+            }
+            if let Fault::Crash { round, .. } = f {
+                if *round != SETUP_ROUND && *round as usize >= cfg.train_rounds {
+                    bail!(
+                        "dropout schedule round {round} out of range (0..{} or 'setup')",
+                        cfg.train_rounds
+                    );
+                }
+            }
+        }
+        cfg.fault_plan = Some(plan);
+    }
     Ok(cfg)
 }
 
@@ -180,6 +234,11 @@ fn cmd_join(flags: &HashMap<String, String>) -> Result<()> {
     let Built { mut parties, .. } = build(&cfg, None)?;
     let party = parties.remove(party_idx + 1); // node 0 is the aggregator
     drop(parties);
+    // each join process applies only its own slice of the schedule
+    let party = match &cfg.fault_plan {
+        Some(plan) => plan.wrap_one(party_idx, party),
+        None => party,
+    };
 
     let metrics = tcp::join(&connect, party_idx, party)?;
     let node = party_idx + 1;
@@ -261,6 +320,7 @@ fn main() -> Result<()> {
         _ => {
             eprintln!("usage: vfl-sa <train|serve|join|bench|info> [flags]");
             eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded]");
+            eprintln!("        [--shamir-threshold 3] [--dropout-schedule 2@1,4@3+1]   dropout-tolerant run");
             eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
             eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
             eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
@@ -322,5 +382,36 @@ mod tests {
         flags.insert("seed".to_string(), "-3".to_string());
         let cfg = cfg_from_flags(&flags).unwrap();
         assert_eq!(cfg.seed, (-3i64) as u64);
+    }
+
+    #[test]
+    fn dropout_schedule_parses() {
+        let plan = parse_dropout_schedule("2@1,4@3+1,1@setup").unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                (2, Fault::Crash { round: 1, after_sends: 0 }),
+                (4, Fault::Crash { round: 3, after_sends: 1 }),
+                (1, Fault::Crash { round: SETUP_ROUND, after_sends: 0 }),
+            ]
+        );
+        assert!(parse_dropout_schedule("").is_err());
+        assert!(parse_dropout_schedule("2").is_err());
+        assert!(parse_dropout_schedule("x@1").is_err());
+        assert!(parse_dropout_schedule("2@y").is_err());
+    }
+
+    #[test]
+    fn dropout_flags_wire_into_config() {
+        let mut flags = HashMap::new();
+        flags.insert("shamir-threshold".to_string(), "3".to_string());
+        flags.insert("dropout-schedule".to_string(), "2@0".to_string());
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert_eq!(cfg.shamir_threshold, Some(3));
+        assert_eq!(cfg.fault_plan.as_ref().unwrap().faults.len(), 1);
+        // schedule without threshold rejected
+        let mut flags = HashMap::new();
+        flags.insert("dropout-schedule".to_string(), "2@0".to_string());
+        assert!(cfg_from_flags(&flags).is_err());
     }
 }

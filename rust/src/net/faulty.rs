@@ -1,0 +1,439 @@
+//! Deterministic fault injection: the proof harness for the
+//! dropout-tolerant protocol.
+//!
+//! A [`FaultPlan`] is a seeded, fully deterministic schedule of party
+//! faults — crashes (permanent silence from a chosen point), message
+//! drops, and bounded reordering — plus *blanking* (a party whose
+//! feature rows are zeroed at build time). [`FaultyTransport`] wraps
+//! any [`Transport`] and applies the plan by wrapping each client
+//! party in a [`FaultyParty`] before delegating, so the identical plan
+//! runs under the simulator, the threaded transport, and TCP.
+//!
+//! Blanking exists because it is the *algebraic twin* of a crash: a
+//! blanked party submits masked all-zero tensors, so its masks
+//! telescope normally while its data contributes nothing — exactly the
+//! aggregate dropout recovery reconstructs when the same party crashes
+//! before its first send. `tests/dropout_recovery.rs` asserts that
+//! twin relationship bit-for-bit.
+//!
+//! The aggregator (node 0) is infrastructure and is never wrapped:
+//! this harness models *party* failure, not coordinator failure.
+
+use anyhow::Result;
+
+use crate::coordinator::messages::Msg;
+use crate::coordinator::party::{Outbox, Party, RoundSpec};
+use crate::coordinator::Metrics;
+use crate::crypto::rng::DetRng;
+use crate::model::ModelParams;
+
+use super::transport::{Transport, TransportOutcome};
+use super::Addr;
+
+/// One injected fault for one client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Permanent silence: the party crashes in `round` after emitting
+    /// `after_sends` messages in it (0 = before sending anything; the
+    /// party never processes another event).
+    Crash { round: u32, after_sends: usize },
+    /// Silently lose the `nth` outgoing message of `round` (the party
+    /// stays alive — models a lossy link; the aggregator will declare
+    /// the sender dropped and the run continues without it).
+    DropMsg { round: u32, nth: usize },
+    /// Bounded reordering: in `round`, each event's first `hold`
+    /// emissions are appended after the rest of that event's outbox.
+    /// Per-sender FIFO across events is preserved.
+    Delay { round: u32, hold: usize },
+}
+
+/// A deterministic fault schedule plus build-time blanking.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// (client index, fault) pairs; a client may carry several.
+    pub faults: Vec<(usize, Fault)>,
+    /// Clients (passive only) whose feature rows are zeroed at build
+    /// time — the crash twin used by the recovery equivalence tests.
+    pub blanks: Vec<usize>,
+}
+
+impl FaultPlan {
+    /// A plan crashing `client` at the start of `round`.
+    pub fn crash_at(client: usize, round: u32) -> Self {
+        FaultPlan {
+            faults: vec![(client, Fault::Crash { round, after_sends: 0 })],
+            ..Default::default()
+        }
+    }
+
+    /// Add another fault to the plan.
+    pub fn with(mut self, client: usize, fault: Fault) -> Self {
+        self.faults.push((client, fault));
+        self
+    }
+
+    /// A plan blanking `clients` instead of crashing anyone.
+    pub fn blank(clients: &[usize]) -> Self {
+        FaultPlan { blanks: clients.to_vec(), ..Default::default() }
+    }
+
+    /// The blank twin of this plan's crash set: every crashed client
+    /// blanked instead, no faults injected.
+    pub fn blank_twin(&self) -> Self {
+        let mut blanks: Vec<usize> = self
+            .faults
+            .iter()
+            .filter(|(_, f)| matches!(f, Fault::Crash { .. }))
+            .map(|(c, _)| *c)
+            .collect();
+        blanks.sort_unstable();
+        blanks.dedup();
+        FaultPlan::blank(&blanks)
+    }
+
+    /// Seeded random crash schedule: `1..=max_drops` distinct passive
+    /// clients (the active party and the aggregator are exempt), each
+    /// crashing at the start of a round drawn from `[0, rounds)`.
+    /// Deterministic in `seed`, so the same plan replays identically on
+    /// every transport.
+    pub fn seeded(seed: u64, n_clients: usize, max_drops: usize, rounds: u32) -> Self {
+        let mut rng = DetRng::from_seed(seed ^ 0xfa17_1e57);
+        let n_drops = rng.next_range(1, max_drops as u64 + 1) as usize;
+        let mut candidates: Vec<usize> = (1..n_clients).collect();
+        rng.shuffle(&mut candidates);
+        let faults = candidates
+            .into_iter()
+            .take(n_drops)
+            .map(|c| {
+                let round = rng.next_range(0, rounds as u64) as u32;
+                (c, Fault::Crash { round, after_sends: 0 })
+            })
+            .collect();
+        FaultPlan { faults, blanks: Vec::new() }
+    }
+
+    /// Like [`seeded`](Self::seeded), but crashes may also strike
+    /// mid-round, after 1–2 sends (exercising the gradient-phase and
+    /// next-round detection paths).
+    pub fn seeded_mid_round(seed: u64, n_clients: usize, max_drops: usize, rounds: u32) -> Self {
+        let mut plan = Self::seeded(seed, n_clients, max_drops, rounds);
+        let mut rng = DetRng::from_seed(seed ^ 0x0dd_ba11);
+        for (_, f) in plan.faults.iter_mut() {
+            if let Fault::Crash { after_sends, .. } = f {
+                *after_sends = rng.next_range(0, 3) as usize;
+            }
+        }
+        plan
+    }
+
+    /// The faults targeting one client.
+    fn faults_for(&self, client: usize) -> Vec<Fault> {
+        self.faults.iter().filter(|(c, _)| *c == client).map(|(_, f)| *f).collect()
+    }
+
+    /// Wrap a full party set (node 0 = aggregator, node i+1 = client i)
+    /// in fault wrappers. Clients without faults pass through unwrapped.
+    pub fn wrap<'e>(&self, parties: Vec<Box<dyn Party + 'e>>) -> Vec<Box<dyn Party + 'e>> {
+        parties
+            .into_iter()
+            .enumerate()
+            .map(|(node, p)| {
+                if node == 0 {
+                    return p;
+                }
+                let faults = self.faults_for(node - 1);
+                if faults.is_empty() {
+                    p
+                } else {
+                    Box::new(FaultyParty::new(p, faults)) as Box<dyn Party + 'e>
+                }
+            })
+            .collect()
+    }
+
+    /// Wrap a single client party (the `vfl-sa join` path, where each
+    /// process owns exactly one party).
+    pub fn wrap_one<'e>(&self, client: usize, party: Box<dyn Party + 'e>) -> Box<dyn Party + 'e> {
+        let faults = self.faults_for(client);
+        if faults.is_empty() {
+            party
+        } else {
+            Box::new(FaultyParty::new(party, faults))
+        }
+    }
+}
+
+/// A party wrapper that applies a client's scheduled faults.
+pub struct FaultyParty<'e> {
+    inner: Box<dyn Party + 'e>,
+    faults: Vec<Fault>,
+    round: u32,
+    sent_in_round: usize,
+    crashed: bool,
+}
+
+impl<'e> FaultyParty<'e> {
+    pub fn new(inner: Box<dyn Party + 'e>, faults: Vec<Fault>) -> Self {
+        FaultyParty { inner, faults, round: 0, sent_in_round: 0, crashed: false }
+    }
+
+    /// Whether the crash point at (round, after `sent` messages) fires.
+    fn crash_fires(&self, sent: usize) -> bool {
+        self.faults.iter().any(|f| {
+            matches!(f, Fault::Crash { round, after_sends }
+                if *round == self.round && *after_sends == sent)
+        })
+    }
+
+    fn drop_fires(&self, nth: usize) -> bool {
+        self.faults.iter().any(|f| {
+            matches!(f, Fault::DropMsg { round, nth: n } if *round == self.round && *n == nth)
+        })
+    }
+
+    fn delay_hold(&self) -> usize {
+        self.faults
+            .iter()
+            .find_map(|f| match f {
+                Fault::Delay { round, hold } if *round == self.round => Some(*hold),
+                _ => None,
+            })
+            .unwrap_or(0)
+    }
+
+    /// Route an inner outbox through the fault schedule.
+    fn relay(&mut self, tmp: Outbox, out: &mut Outbox) {
+        let mut msgs = tmp.msgs;
+        let hold = self.delay_hold();
+        if hold > 0 && hold < msgs.len() {
+            msgs.rotate_left(hold);
+        }
+        for (to, m) in msgs {
+            if self.crashed {
+                return; // silence from the crash point on, notes included
+            }
+            let nth = self.sent_in_round;
+            self.sent_in_round += 1;
+            if !self.drop_fires(nth) {
+                out.send(to, m);
+            }
+            if self.crash_fires(self.sent_in_round) {
+                self.crashed = true;
+            }
+        }
+        if !self.crashed {
+            out.notes.extend(tmp.notes);
+        }
+    }
+}
+
+impl<'e> Party for FaultyParty<'e> {
+    fn addr(&self) -> Addr {
+        self.inner.addr()
+    }
+
+    fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()> {
+        if self.crashed {
+            return Ok(());
+        }
+        self.round = spec.round;
+        self.sent_in_round = 0;
+        if self.crash_fires(0) {
+            self.crashed = true;
+            return Ok(());
+        }
+        let mut tmp = Outbox::default();
+        self.inner.on_round_start(spec, &mut tmp)?;
+        self.relay(tmp, out);
+        Ok(())
+    }
+
+    fn on_message(&mut self, from: Addr, msg: Msg, out: &mut Outbox) -> Result<()> {
+        if self.crashed {
+            return Ok(());
+        }
+        let mut tmp = Outbox::default();
+        self.inner.on_message(from, msg, &mut tmp)?;
+        self.relay(tmp, out);
+        Ok(())
+    }
+
+    fn on_stall(&mut self, out: &mut Outbox) -> Result<()> {
+        if self.crashed {
+            return Ok(());
+        }
+        let mut tmp = Outbox::default();
+        self.inner.on_stall(&mut tmp)?;
+        self.relay(tmp, out);
+        Ok(())
+    }
+
+    fn concurrent_safe(&self) -> bool {
+        self.inner.concurrent_safe()
+    }
+
+    fn take_metrics(&mut self) -> Metrics {
+        self.inner.take_metrics()
+    }
+
+    fn final_params(&mut self) -> Option<ModelParams> {
+        self.inner.final_params()
+    }
+}
+
+/// Wrap any transport with a fault plan: the plan wraps the party set,
+/// the inner transport runs it unchanged.
+pub struct FaultyTransport<T> {
+    inner: T,
+    plan: FaultPlan,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
+        FaultyTransport { inner, plan }
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn execute<'e>(
+        &mut self,
+        parties: Vec<Box<dyn Party + 'e>>,
+        schedule: &[RoundSpec],
+    ) -> Result<TransportOutcome> {
+        let wrapped = self.plan.wrap(parties);
+        self.inner.execute(wrapped, schedule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::party::Note;
+
+    /// A scripted party that sends one message per round and one note.
+    struct Chatter {
+        sends: usize,
+    }
+
+    impl Party for Chatter {
+        fn addr(&self) -> Addr {
+            Addr::Client(1)
+        }
+        fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()> {
+            for k in 0..self.sends {
+                out.send(
+                    Addr::Aggregator,
+                    Msg::RequestKeys { epoch: (spec.round as u64) * 10 + k as u64 },
+                );
+            }
+            out.note(Note::RoundDone { round: spec.round });
+            Ok(())
+        }
+        fn on_message(&mut self, _f: Addr, _m: Msg, _o: &mut Outbox) -> Result<()> {
+            Ok(())
+        }
+        fn take_metrics(&mut self) -> Metrics {
+            Metrics::new()
+        }
+    }
+
+    fn spec(round: u32) -> RoundSpec {
+        RoundSpec {
+            round,
+            kind: crate::coordinator::party::RoundKind::Train,
+            rotate: false,
+            phase: crate::net::Phase::Training,
+            ids: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn crash_at_round_start_silences_forever() {
+        let inner = Box::new(Chatter { sends: 2 });
+        let mut p = FaultyParty::new(inner, vec![Fault::Crash { round: 1, after_sends: 0 }]);
+        let mut out = Outbox::default();
+        p.on_round_start(&spec(0), &mut out).unwrap();
+        assert_eq!(out.msgs.len(), 2);
+        assert_eq!(out.notes.len(), 1);
+        let mut out = Outbox::default();
+        p.on_round_start(&spec(1), &mut out).unwrap();
+        assert!(out.msgs.is_empty() && out.notes.is_empty(), "crashed at round 1 start");
+        let mut out = Outbox::default();
+        p.on_round_start(&spec(2), &mut out).unwrap();
+        assert!(out.msgs.is_empty(), "crash is permanent");
+    }
+
+    #[test]
+    fn mid_round_crash_cuts_after_n_sends() {
+        let inner = Box::new(Chatter { sends: 3 });
+        let mut p = FaultyParty::new(inner, vec![Fault::Crash { round: 0, after_sends: 2 }]);
+        let mut out = Outbox::default();
+        p.on_round_start(&spec(0), &mut out).unwrap();
+        assert_eq!(out.msgs.len(), 2, "exactly two messages escape");
+        assert!(out.notes.is_empty(), "notes after the crash point are swallowed");
+    }
+
+    #[test]
+    fn drop_msg_loses_exactly_one() {
+        let inner = Box::new(Chatter { sends: 3 });
+        let mut p = FaultyParty::new(inner, vec![Fault::DropMsg { round: 0, nth: 1 }]);
+        let mut out = Outbox::default();
+        p.on_round_start(&spec(0), &mut out).unwrap();
+        assert_eq!(out.msgs.len(), 2);
+        // the dropped one was the middle emission
+        let epochs: Vec<u64> = out
+            .msgs
+            .iter()
+            .map(|(_, m)| match m {
+                Msg::RequestKeys { epoch } => *epoch,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(epochs, vec![0, 2]);
+        assert_eq!(out.notes.len(), 1, "party stays alive");
+    }
+
+    #[test]
+    fn delay_reorders_within_event() {
+        let inner = Box::new(Chatter { sends: 3 });
+        let mut p = FaultyParty::new(inner, vec![Fault::Delay { round: 0, hold: 1 }]);
+        let mut out = Outbox::default();
+        p.on_round_start(&spec(0), &mut out).unwrap();
+        let epochs: Vec<u64> = out
+            .msgs
+            .iter()
+            .map(|(_, m)| match m {
+                Msg::RequestKeys { epoch } => *epoch,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(epochs, vec![1, 2, 0], "first emission lands last");
+    }
+
+    #[test]
+    fn seeded_plans_deterministic_and_passive_only() {
+        for seed in 0..20u64 {
+            let a = FaultPlan::seeded(seed, 5, 2, 6);
+            let b = FaultPlan::seeded(seed, 5, 2, 6);
+            assert_eq!(a, b, "same seed, same plan");
+            assert!(!a.faults.is_empty() && a.faults.len() <= 2);
+            for (c, f) in &a.faults {
+                assert!((1..5).contains(c), "active party and aggregator exempt");
+                assert!(matches!(f, Fault::Crash { round, .. } if *round < 6));
+            }
+            let clients: Vec<usize> = a.faults.iter().map(|(c, _)| *c).collect();
+            let mut dedup = clients.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), clients.len(), "distinct clients");
+        }
+    }
+
+    #[test]
+    fn blank_twin_mirrors_crash_set() {
+        let plan = FaultPlan::crash_at(3, 0).with(1, Fault::Crash { round: 2, after_sends: 1 });
+        let twin = plan.blank_twin();
+        assert_eq!(twin.blanks, vec![1, 3]);
+        assert!(twin.faults.is_empty());
+    }
+}

@@ -9,13 +9,19 @@
 //!   channels in between, bit-identical results to the simulator.
 //! * [`frame`] / [`tcp`] — length-prefixed socket framing and the
 //!   cross-process `serve`/`join` plumbing.
+//! * [`faulty`] — deterministic fault injection ([`FaultPlan`],
+//!   [`FaultyTransport`]): seeded crash/drop/delay schedules applied
+//!   identically on every transport, the proof harness for the
+//!   dropout-tolerant protocol.
 
+pub mod faulty;
 pub mod frame;
 pub mod tcp;
 pub mod threaded;
 pub mod transport;
 pub mod wire;
 
+pub use faulty::{Fault, FaultPlan, FaultyParty, FaultyTransport};
 pub use threaded::ThreadedTransport;
 pub use transport::{Addr, Network, Phase, SimTransport, Transport, TransportOutcome};
 pub use wire::{Reader, Writer};

@@ -16,16 +16,18 @@
 //! socket that wouldn't in the simulated protocol.
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::thread;
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::messages::Msg;
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
 use crate::coordinator::Metrics;
 
 use super::frame::Frame;
+use super::transport::{DEFAULT_STALL_TIMEOUT, MAX_IDLE_PROBES};
 use super::{Addr, Network};
 
 /// What a completed `serve` run hands back.
@@ -44,11 +46,18 @@ enum Event {
     Gone(usize, String),
 }
 
+/// How long the server waits without any client frame before probing
+/// the aggregator for dropped parties ([`Party::on_stall`]); policy
+/// shared with the threaded transport via `net::transport`.
+const STALL_TIMEOUT: Duration = DEFAULT_STALL_TIMEOUT;
+
 /// Route an aggregator outbox to the client sockets, metering each
-/// protocol message.
+/// protocol message. Writes to clients whose sockets died are skipped
+/// — a dead socket is a dropped party, which the aggregator's stall
+/// probe handles; it is not the server's error.
 fn route_server(
     net: &mut Network,
-    writers: &mut [TcpStream],
+    writers: &mut [Option<TcpStream>],
     ob: Outbox,
     notes: &mut Vec<Note>,
 ) -> Result<()> {
@@ -56,7 +65,12 @@ fn route_server(
         let Addr::Client(ci) = to else { bail!("aggregator addressed itself") };
         let bytes = msg.encode();
         net.meter(Addr::Aggregator, to, bytes.len());
-        Frame::Msg { bytes }.write_to(&mut writers[ci])?;
+        if let Some(w) = writers[ci].as_mut() {
+            if let Err(e) = (Frame::Msg { bytes }).write_to(w) {
+                eprintln!("serve: client {ci} write failed ({e:#}), marking dropped");
+                writers[ci] = None;
+            }
+        }
     }
     notes.extend(ob.notes);
     Ok(())
@@ -66,11 +80,23 @@ fn route_server(
 /// return the run's notes and byte counters.
 pub fn serve(
     listen: &str,
-    mut aggregator: Box<dyn Party + '_>,
+    aggregator: Box<dyn Party + '_>,
     schedule: &[RoundSpec],
     n_clients: usize,
 ) -> Result<ServeOutcome> {
     let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+    serve_on(listener, aggregator, schedule, n_clients)
+}
+
+/// [`serve`] on an already-bound listener (lets tests bind port 0 and
+/// learn the real port before clients race to connect).
+pub fn serve_on(
+    listener: TcpListener,
+    mut aggregator: Box<dyn Party + '_>,
+    schedule: &[RoundSpec],
+    n_clients: usize,
+) -> Result<ServeOutcome> {
+    let listen = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
     eprintln!("serve: listening on {listen}, waiting for {n_clients} client(s)");
 
     let (tx, rx) = channel::<Event>();
@@ -108,8 +134,10 @@ pub fn serve(
         connected += 1;
     }
     drop(tx);
-    let mut writers: Vec<TcpStream> =
-        writers.into_iter().map(|w| w.expect("all clients connected")).collect();
+    let mut writers: Vec<Option<TcpStream>> = writers
+        .into_iter()
+        .map(|w| Some(w.expect("all clients connected")))
+        .collect();
 
     let mut net = Network::new(n_clients);
     let mut notes: Vec<Note> = Vec::new();
@@ -121,39 +149,89 @@ pub fn serve(
         // passive would leak exactly the batch membership the sealed-ID
         // broadcast (§4.0.2) exists to hide.
         for (ci, w) in writers.iter_mut().enumerate() {
+            let Some(sock) = w.as_mut() else { continue };
             let for_client = if ci == 0 {
                 spec.clone()
             } else {
                 RoundSpec { ids: Vec::new(), ..spec.clone() }
             };
-            Frame::Round(for_client).write_to(w)?;
+            if let Err(e) = Frame::Round(for_client).write_to(sock) {
+                eprintln!("serve: client {ci} write failed ({e:#}), marking dropped");
+                *w = None;
+            }
         }
         let mut ob = Outbox::default();
         aggregator.on_round_start(spec, &mut ob)?;
         route_server(&mut net, &mut writers, ob, &mut notes)?;
+        let mut idle_probes = 0u32;
+        let mut processed_since_probe = 0u64;
         loop {
-            match rx.recv().map_err(|_| anyhow!("all client connections lost"))? {
-                Event::Gone(ci, e) => bail!("client {ci} disconnected: {e}"),
+            let event = match rx.recv_timeout(STALL_TIMEOUT) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    // no frame for the stall window: ask the aggregator
+                    // whether recovery can declare the silent clients
+                    // dropped (timeout-based dropout detection). Only
+                    // probe when truly quiescent — a timeout right
+                    // after a burst of traffic is not a dropout.
+                    let mut ob = Outbox::default();
+                    if processed_since_probe == 0 {
+                        aggregator.on_stall(&mut ob)?;
+                    }
+                    let acted = !ob.msgs.is_empty() || !ob.notes.is_empty();
+                    route_server(&mut net, &mut writers, ob, &mut notes)?;
+                    if acted || processed_since_probe > 0 {
+                        idle_probes = 0;
+                    } else {
+                        idle_probes += 1;
+                        if idle_probes >= MAX_IDLE_PROBES {
+                            bail!(
+                                "protocol stalled: round {} never completed",
+                                spec.round
+                            );
+                        }
+                    }
+                    processed_since_probe = 0;
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("all client connections lost")
+                }
+            };
+            match event {
+                Event::Gone(ci, e) => {
+                    // a vanished client is a dropped party, not a server
+                    // error: close its writer and let the stall probe
+                    // (or an already-complete fan-in) handle it
+                    eprintln!("serve: client {ci} disconnected ({e}), marking dropped");
+                    writers[ci] = None;
+                }
                 Event::Frame(ci, Frame::Msg { bytes }) => {
+                    idle_probes = 0;
+                    processed_since_probe += 1;
                     net.meter(Addr::Client(ci), Addr::Aggregator, bytes.len());
                     let msg = Msg::decode(&bytes)?;
                     let mut ob = Outbox::default();
                     aggregator.on_message(Addr::Client(ci), msg, &mut ob)?;
                     route_server(&mut net, &mut writers, ob, &mut notes)?;
                 }
-                Event::Frame(_, Frame::Note(n)) => match n {
-                    Note::RoundDone { round } if round == spec.round => {
-                        notes.push(Note::RoundDone { round });
-                        break;
+                Event::Frame(_, Frame::Note(n)) => {
+                    idle_probes = 0;
+                    processed_since_probe += 1;
+                    match n {
+                        Note::RoundDone { round } if round == spec.round => {
+                            notes.push(Note::RoundDone { round });
+                            break;
+                        }
+                        Note::Failed { who, error } => bail!("party {who} failed: {error}"),
+                        other => notes.push(other),
                     }
-                    Note::Failed { who, error } => bail!("party {who} failed: {error}"),
-                    other => notes.push(other),
-                },
+                }
                 Event::Frame(ci, f) => bail!("unexpected frame from client {ci}: {f:?}"),
             }
         }
     }
-    for w in writers.iter_mut() {
+    for w in writers.iter_mut().flatten() {
         let _ = Frame::Stop.write_to(w);
     }
     Ok(ServeOutcome { notes, net, metrics: aggregator.take_metrics() })

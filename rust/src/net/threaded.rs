@@ -21,16 +21,19 @@
 //! produces bit-identical reports and Table-2 counters to a simulated
 //! one (asserted by `tests/transport_equivalence.rs`).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::messages::Msg;
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
 
-use super::transport::{harvest, node_of_addr, Transport, TransportOutcome};
+use super::transport::{
+    harvest, node_of_addr, Transport, TransportOutcome, DEFAULT_STALL_TIMEOUT, MAX_IDLE_PROBES,
+};
 use super::{Addr, Network};
 
 /// What flows over a party's inbox channel.
@@ -39,6 +42,9 @@ enum Envelope {
     Round(RoundSpec),
     /// A serialized protocol message.
     Msg { from: Addr, bytes: Vec<u8> },
+    /// Quiescence probe (driver → aggregator only): no note arrived for
+    /// the stall timeout — check for dropped peers.
+    Stall,
     /// Orderly shutdown.
     Stop,
 }
@@ -73,6 +79,9 @@ fn run_party(
     net: &Arc<Mutex<Network>>,
 ) -> Result<()> {
     let me = party.addr();
+    // events handled since the last quiescence probe: lets the driver
+    // tell "busy, keep waiting" apart from "dead, give up"
+    let mut processed_since_probe = 0u64;
     loop {
         // a closed inbox means every producer is gone: exit quietly
         let Ok(env) = rx.recv() else { break };
@@ -96,11 +105,26 @@ fn run_party(
                             .map_err(|_| anyhow!("client channel closed"))?;
                     }
                 }
+                processed_since_probe += 1;
                 party.on_round_start(&spec, &mut ob)?;
             }
             Envelope::Msg { from, bytes } => {
                 let msg = Msg::decode(&bytes)?;
+                processed_since_probe += 1;
                 party.on_message(from, msg, &mut ob)?;
+            }
+            Envelope::Stall => {
+                // only probe when truly quiescent: if events were
+                // handled since the last probe the timeout was stale
+                // (e.g. the probe queued behind a burst of messages),
+                // and declaring dropouts from a half-filled fan-in
+                // would be a false positive
+                if processed_since_probe == 0 {
+                    party.on_stall(&mut ob)?;
+                }
+                let acted = !ob.msgs.is_empty() || !ob.notes.is_empty();
+                ob.notes.push(Note::Stall { acted, processed: processed_since_probe });
+                processed_since_probe = 0;
             }
         }
         for (to, msg) in ob.msgs {
@@ -117,13 +141,28 @@ fn run_party(
 
 /// One thread per party, channels for transport, rounds serialized on
 /// the active party's `RoundDone` note.
+///
+/// Dropout detection is timeout-based: when no note arrives for
+/// `stall_timeout`, the driver sends the aggregator a quiescence probe
+/// ([`Party::on_stall`]). A probe that finds recovery work resets the
+/// clock; [`MAX_IDLE_PROBES`] consecutive probes with no work and no
+/// traffic abort the run as genuinely stalled.
 pub struct ThreadedTransport {
     n_clients: usize,
+    stall_timeout: Duration,
 }
 
 impl ThreadedTransport {
     pub fn new(n_clients: usize) -> Self {
-        ThreadedTransport { n_clients }
+        ThreadedTransport { n_clients, stall_timeout: DEFAULT_STALL_TIMEOUT }
+    }
+
+    /// Override the dropout-detection window (reachable from
+    /// `RunConfig::stall_timeout_ms`; tests shrink it so declared
+    /// dropouts don't sleep through full default windows).
+    pub fn with_stall_timeout(mut self, stall_timeout: Duration) -> Self {
+        self.stall_timeout = stall_timeout;
+        self
     }
 }
 
@@ -206,10 +245,25 @@ impl Transport for ThreadedTransport {
                     failure = Some("aggregator exited early".into());
                     break 'rounds;
                 }
+                let mut idle_probes = 0u32;
                 loop {
-                    let Ok(note) = note_rx.recv() else {
-                        failure = Some(format!("all parties exited in round {}", spec.round));
-                        break 'rounds;
+                    let note = match note_rx.recv_timeout(self.stall_timeout) {
+                        Ok(note) => note,
+                        Err(RecvTimeoutError::Timeout) => {
+                            // quiescent: probe the aggregator for
+                            // dropped peers; its Note::Stall reply
+                            // reports whether anything moved
+                            if agg_tx.send(Envelope::Stall).is_err() {
+                                failure = Some("aggregator exited early".into());
+                                break 'rounds;
+                            }
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => {
+                            failure =
+                                Some(format!("all parties exited in round {}", spec.round));
+                            break 'rounds;
+                        }
                     };
                     match &note {
                         Note::RoundDone { round } if *round == spec.round => {
@@ -219,6 +273,21 @@ impl Transport for ThreadedTransport {
                         Note::Failed { who, error } => {
                             failure = Some(format!("party {who} failed: {error}"));
                             break 'rounds;
+                        }
+                        Note::Stall { acted, processed } => {
+                            // transport bookkeeping, never a result note
+                            if *acted || *processed > 0 {
+                                idle_probes = 0;
+                            } else {
+                                idle_probes += 1;
+                                if idle_probes >= MAX_IDLE_PROBES {
+                                    failure = Some(format!(
+                                        "protocol stalled: round {} never completed",
+                                        spec.round
+                                    ));
+                                    break 'rounds;
+                                }
+                            }
                         }
                         _ => notes.push(note),
                     }

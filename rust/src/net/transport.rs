@@ -22,6 +22,20 @@ use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
 use crate::coordinator::Metrics;
 use crate::model::ModelParams;
 
+/// Shared dropout-detection policy for the timeout-based transports
+/// (threads, TCP) — one place so the two cannot drift apart.
+///
+/// A quiescence window with zero aggregator events triggers an
+/// [`Party::on_stall`] probe; [`MAX_IDLE_PROBES`] consecutive no-op
+/// probes abort the run as genuinely stalled (≈10 s of total silence —
+/// a false abort is worse than a slow one, but strictly better than
+/// the pre-dropout behavior of blocking forever).
+pub const DEFAULT_STALL_TIMEOUT: std::time::Duration = std::time::Duration::from_millis(500);
+
+/// Consecutive no-op quiescence probes tolerated before declaring a
+/// run stalled.
+pub const MAX_IDLE_PROBES: u32 = 20;
+
 /// Protocol phases, matching the paper's reporting granularity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Phase {
@@ -249,19 +263,35 @@ impl Transport for SimTransport {
                 p.on_round_start(spec, &mut ob)?;
                 flush(&mut net, addr_of_node(idx), ob, &mut notes);
             }
-            // pump the global FIFO dry
-            while let Some((from, to, bytes)) = net.pop() {
-                let msg = Msg::decode(&bytes)?;
-                let idx = node_of_addr(to);
-                let mut ob = Outbox::default();
-                parties[idx].on_message(from, msg, &mut ob)?;
-                flush(&mut net, to, ob, &mut notes);
-            }
-            let done = notes[done_before..]
-                .iter()
-                .any(|n| matches!(n, Note::RoundDone { round } if *round == spec.round));
-            if !done {
-                bail!("protocol stalled: round {} never completed", spec.round);
+            loop {
+                // pump the global FIFO dry
+                while let Some((from, to, bytes)) = net.pop() {
+                    let msg = Msg::decode(&bytes)?;
+                    let idx = node_of_addr(to);
+                    let mut ob = Outbox::default();
+                    parties[idx].on_message(from, msg, &mut ob)?;
+                    flush(&mut net, to, ob, &mut notes);
+                }
+                let done = notes[done_before..]
+                    .iter()
+                    .any(|n| matches!(n, Note::RoundDone { round } if *round == spec.round));
+                if done {
+                    break;
+                }
+                // quiescent with the round incomplete: a deterministic
+                // stall. Probe the parties (aggregator first) so dropout
+                // recovery can declare the silent peers and resume; if
+                // nobody produces traffic, the protocol is truly stuck.
+                let mut progressed = false;
+                for (idx, p) in parties.iter_mut().enumerate() {
+                    let mut ob = Outbox::default();
+                    p.on_stall(&mut ob)?;
+                    progressed |= !ob.msgs.is_empty() || !ob.notes.is_empty();
+                    flush(&mut net, addr_of_node(idx), ob, &mut notes);
+                }
+                if !progressed {
+                    bail!("protocol stalled: round {} never completed", spec.round);
+                }
             }
         }
 

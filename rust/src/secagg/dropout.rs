@@ -11,13 +11,47 @@
 //! contributions.
 //!
 //! This module implements that extension end-to-end on top of
-//! [`ClientSession`](super::session::ClientSession) + [`shamir`].
+//! [`ClientSession`](super::session::ClientSession) + [`shamir`]:
+//! share bundles are serialized with [`encode_shares`], sealed under
+//! the pairwise AEAD channel with [`seal_bundle`] (so the relaying
+//! aggregator never sees a share in the clear), and a reconstructed
+//! seed is turned back into a working session with
+//! [`rebuild_session`]. [`DropoutError`] is the typed abort the
+//! protocol raises when recovery is impossible.
+
+use anyhow::{bail, Result};
 
 use crate::crypto::rng::DetRng;
 use crate::crypto::shamir::{self, Share};
-use crate::crypto::{hkdf, prg};
+use crate::crypto::{aead, hkdf};
+use crate::net::wire::{Reader, Writer};
 
 use super::session::{ClientSession, PublishedKeys};
+
+/// Why a dropout-tolerant round had to abort instead of recovering.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DropoutError {
+    /// Fewer than `threshold` clients survive: the dropped seeds can
+    /// never be reconstructed, so aborting is the only safe outcome.
+    BelowThreshold { survivors: usize, threshold: usize },
+    /// The active party (labels, SGD step) dropped — the VFL round has
+    /// no owner and cannot be completed by anyone else.
+    ActivePartyDropped,
+}
+
+impl std::fmt::Display for DropoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DropoutError::BelowThreshold { survivors, threshold } => write!(
+                f,
+                "below dropout threshold: {survivors} survivor(s), need {threshold} for recovery"
+            ),
+            DropoutError::ActivePartyDropped => write!(f, "active party dropped mid-round"),
+        }
+    }
+}
+
+impl std::error::Error for DropoutError {}
 
 /// Shares of one client's session seed, one bundle per recipient peer.
 pub struct SeedShares {
@@ -48,15 +82,18 @@ impl RobustClientSession {
     }
 
     /// Shamir-share our seed for distribution (t-of-n).
+    ///
+    /// The polynomial coefficients come from a one-shot sub-stream
+    /// keyed by 32 fresh bytes of the caller's RNG — never from bytes
+    /// the caller will hand out later. (Cloning the RNG and "skipping
+    /// ahead" a fixed amount is wrong: the coefficient draw is
+    /// t-dependent, and any overlap leaks future session seeds to
+    /// whoever holds t shares of this epoch.)
     pub fn share_seed(&self, rng: &mut DetRng) -> SeedShares {
         let n = self.inner.n_clients;
-        let mut fill = {
-            let r = rng.clone();
-            r.as_fill_fn()
-        };
-        // advance caller rng state equivalently
-        let mut skip = vec![0u8; 64];
-        rng.fill(&mut skip);
+        let mut sub = [0u8; 32];
+        rng.fill(&mut sub);
+        let mut fill = DetRng::new(sub).as_fill_fn();
         let bundles = shamir::split_bytes(&self.seed, self.threshold, n, &mut fill);
         SeedShares { owner: self.inner.id, bundles }
     }
@@ -66,15 +103,151 @@ impl RobustClientSession {
         self.held[owner] = Some(bundle);
     }
 
-    /// Surrender our share of a dropped peer's seed.
+    /// Surrender our share of a dropped peer's seed. Out-of-range ids
+    /// (hostile or corrupt wire input) yield `None`, not a panic.
     pub fn surrender_share(&self, dropped: usize) -> Option<&Vec<Share>> {
-        self.held[dropped].as_ref()
+        self.held.get(dropped)?.as_ref()
     }
+
+    /// The reconstruction threshold this session was created with.
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+}
+
+/// A party's secure-aggregation session: the base protocol's
+/// [`ClientSession`] or, when dropout tolerance is enabled, a
+/// [`RobustClientSession`] carrying the Shamir seed-share material.
+pub enum PartySession {
+    Plain(ClientSession),
+    Robust(RobustClientSession),
+}
+
+impl PartySession {
+    /// The masking session, whichever variant is active.
+    pub fn client(&self) -> &ClientSession {
+        match self {
+            PartySession::Plain(s) => s,
+            PartySession::Robust(r) => &r.inner,
+        }
+    }
+
+    pub fn client_mut(&mut self) -> &mut ClientSession {
+        match self {
+            PartySession::Plain(s) => s,
+            PartySession::Robust(r) => &mut r.inner,
+        }
+    }
+
+    /// The dropout-recovery extension, if enabled.
+    pub fn robust(&self) -> Option<&RobustClientSession> {
+        match self {
+            PartySession::Plain(_) => None,
+            PartySession::Robust(r) => Some(r),
+        }
+    }
+
+    pub fn robust_mut(&mut self) -> Option<&mut RobustClientSession> {
+        match self {
+            PartySession::Plain(_) => None,
+            PartySession::Robust(r) => Some(r),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Share-bundle wire form + pairwise sealing
+// ---------------------------------------------------------------------------
+
+/// AAD for sealed seed-share bundles (distinct from sample-ID sealing).
+const SHARE_AAD: &[u8] = b"vfl-sa/seed-share/v1";
+
+/// Nonce for `owner`'s bundle destined to `recipient`. The round slot
+/// is pinned to `u32::MAX`, which no protocol round ever uses, so
+/// share nonces can never collide with the active party's sample-ID
+/// nonces under the same (symmetric) channel key.
+fn share_nonce(owner: usize, recipient: usize) -> [u8; 12] {
+    aead::make_nonce(owner as u16, u32::MAX, recipient as u32)
+}
+
+/// Serialize one share bundle (u32 count, then (x, y) u64 pairs).
+pub fn encode_shares(shares: &[Share]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(shares.len() as u32);
+    for s in shares {
+        w.u64(s.x);
+        w.u64(s.y);
+    }
+    w.finish()
+}
+
+/// Parse a share bundle serialized by [`encode_shares`].
+pub fn decode_shares(buf: &[u8]) -> Result<Vec<Share>> {
+    let mut r = Reader::new(buf);
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(r.remaining()));
+    for _ in 0..n {
+        out.push(Share { x: r.u64()?, y: r.u64()? });
+    }
+    if !r.done() {
+        bail!("trailing bytes in share bundle");
+    }
+    Ok(out)
+}
+
+/// Seal `owner`'s bundle for `recipient` under their pairwise channel
+/// key: the aggregator relays bundles but can never read them (if it
+/// could, it could reconstruct every seed and unmask everything).
+pub fn seal_bundle(key: &[u8; 32], owner: usize, recipient: usize, shares: &[Share]) -> Vec<u8> {
+    aead::seal(key, &share_nonce(owner, recipient), SHARE_AAD, &encode_shares(shares))
+}
+
+/// Open a sealed bundle from `owner` addressed to `recipient`.
+pub fn open_bundle(
+    key: &[u8; 32],
+    owner: usize,
+    recipient: usize,
+    sealed: &[u8],
+) -> Option<Vec<Share>> {
+    let pt = aead::open(key, &share_nonce(owner, recipient), SHARE_AAD, sealed)?;
+    decode_shares(&pt).ok()
+}
+
+// ---------------------------------------------------------------------------
+// Aggregator-side reconstruction
+// ---------------------------------------------------------------------------
+
+/// Reconstruct a 32-byte session seed from ≥ t surrendered bundles.
+pub fn reconstruct_seed(bundles: &[Vec<Share>]) -> Result<[u8; 32]> {
+    if bundles.is_empty() {
+        bail!("no share bundles to reconstruct from");
+    }
+    let bytes = shamir::reconstruct_bytes(bundles, 32);
+    bytes.try_into().map_err(|_| anyhow::anyhow!("reconstructed seed is not 32 bytes"))
+}
+
+/// Rebuild a dropped client's full masking session from its
+/// reconstructed seed and the published key directory. The returned
+/// session yields, via [`ClientSession::total_mask`], exactly the mask
+/// the dropped client would have added in any (round, tag) — which is
+/// what the aggregator adds to cancel the survivors' dangling masks.
+pub fn rebuild_session(
+    seed: [u8; 32],
+    id: usize,
+    n: usize,
+    epoch: u64,
+    all_keys: &[PublishedKeys],
+) -> ClientSession {
+    let mut seeded = DetRng::new(seed);
+    let mut session = ClientSession::new(id, n, epoch, &mut seeded);
+    session.derive_secrets(all_keys);
+    session
 }
 
 /// Aggregator-side recovery: reconstruct the dropped client's seed from
 /// ≥ t shares, rebuild its session, and compute the total mask it would
 /// have added for (round, tag, len) so it can be subtracted.
+#[allow(clippy::too_many_arguments)]
 pub fn recover_dropped_mask(
     dropped: usize,
     n: usize,
@@ -85,16 +258,9 @@ pub fn recover_dropped_mask(
     tensor_tag: u32,
     len: usize,
 ) -> Vec<u64> {
-    let seed_bytes = shamir::reconstruct_bytes(shares, 32);
-    let seed: [u8; 32] = seed_bytes.try_into().expect("32-byte seed");
-    let mut seeded = DetRng::new(seed);
-    let mut session = ClientSession::new(dropped, n, epoch, &mut seeded);
-    session.derive_secrets(all_keys);
-    let secrets: Vec<(usize, [u8; 32])> = (0..n)
-        .filter(|&j| j != dropped)
-        .map(|j| (j, *session.shared_secret(j)))
-        .collect();
-    prg::total_mask(&secrets, dropped, round ^ (epoch << 32), tensor_tag, len)
+    let seed = reconstruct_seed(shares).expect("32-byte seed");
+    let session = rebuild_session(seed, dropped, n, epoch, all_keys);
+    session.total_mask(round, tensor_tag, len)
 }
 
 /// Convenience wrapper used in docs/tests: derive a deterministic
@@ -199,5 +365,49 @@ mod tests {
     fn commitments_bind_seeds() {
         assert_ne!(seed_commitment(&[1u8; 32]), seed_commitment(&[2u8; 32]));
         assert_eq!(seed_commitment(&[3u8; 32]), seed_commitment(&[3u8; 32]));
+    }
+
+    #[test]
+    fn share_bundles_roundtrip_and_seal() {
+        let shares = vec![Share { x: 1, y: 42 }, Share { x: 2, y: u64::MAX >> 3 }];
+        assert_eq!(decode_shares(&encode_shares(&shares)).unwrap(), shares);
+        // trailing garbage rejected
+        let mut bad = encode_shares(&shares);
+        bad.push(0);
+        assert!(decode_shares(&bad).is_err());
+
+        let key = [7u8; 32];
+        let sealed = seal_bundle(&key, 1, 3, &shares);
+        assert_eq!(open_bundle(&key, 1, 3, &sealed).unwrap(), shares);
+        // wrong direction / wrong recipient / tampered → rejected
+        assert!(open_bundle(&key, 3, 1, &sealed).is_none());
+        assert!(open_bundle(&key, 1, 2, &sealed).is_none());
+        let mut t = sealed.clone();
+        t[0] ^= 1;
+        assert!(open_bundle(&key, 1, 3, &t).is_none());
+    }
+
+    #[test]
+    fn rebuilt_session_reproduces_masks() {
+        // the aggregator-side rebuild path must yield exactly the mask
+        // the dropped client's own session would have produced
+        let n = 4;
+        let mut rng = DetRng::from_seed(11);
+        let mut clients: Vec<RobustClientSession> =
+            (0..n).map(|i| RobustClientSession::new(i, n, 3, 2, &mut rng)).collect();
+        let keys: Vec<PublishedKeys> = clients.iter().map(|c| c.inner.published_keys()).collect();
+        for c in clients.iter_mut() {
+            c.inner.derive_secrets(&keys);
+        }
+        let rebuilt = rebuild_session(clients[2].seed, 2, n, 3, &keys);
+        assert_eq!(rebuilt.total_mask(9, 1, 16), clients[2].inner.total_mask(9, 1, 16));
+    }
+
+    #[test]
+    fn below_threshold_error_displays() {
+        let e = DropoutError::BelowThreshold { survivors: 2, threshold: 3 };
+        assert!(e.to_string().contains("below dropout threshold"));
+        let a: anyhow::Error = e.clone().into();
+        assert_eq!(a.downcast_ref::<DropoutError>(), Some(&e));
     }
 }

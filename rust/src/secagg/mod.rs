@@ -6,11 +6,15 @@
 //!   secret derivation, key rotation epochs) and per-round tensor
 //!   masking (Eq. 2–6).
 //! * [`dropout`] — the Bonawitz'17 Shamir-based dropout recovery
-//!   extension (§5.1's robustness discussion).
+//!   extension (§5.1's robustness discussion): sealed seed-share
+//!   distribution, surrendered-share reconstruction, and the typed
+//!   [`DropoutError`] abort. Wired into the live protocol by the
+//!   [`coordinator`](crate::coordinator) party machines.
 
 pub mod dropout;
 pub mod fixedpoint;
 pub mod session;
 
+pub use dropout::{DropoutError, PartySession, RobustClientSession};
 pub use fixedpoint::FixedPoint;
 pub use session::{aggregate, setup_all, ClientSession, PublishedKeys};

@@ -72,7 +72,10 @@ impl ClientSession {
 
     /// Phase 2: after the aggregator relays everyone's published keys,
     /// derive the pairwise shared secrets. `all_keys[i]` is client i's
-    /// `PublishedKeys`.
+    /// `PublishedKeys`. Peers with no key for us (e.g. dropped before
+    /// publishing — their directory slot is padded with `None`s) get no
+    /// shared secret and contribute no masks; the pairwise telescoping
+    /// (Eq. 4) still holds over the peers that do.
     pub fn derive_secrets(&mut self, all_keys: &[PublishedKeys]) {
         assert_eq!(all_keys.len(), self.n_clients);
         for j in 0..self.n_clients {
@@ -80,7 +83,10 @@ impl ClientSession {
                 continue;
             }
             // peer j published pk_j^{(id)} for us; we use sk_id^{(j)}
-            let peer_pk = all_keys[j].keys[self.id].expect("peer key for us");
+            let Some(peer_pk) = all_keys[j].keys.get(self.id).copied().flatten() else {
+                self.shared[j] = None;
+                continue;
+            };
             let my_sk = self.secret_keys[j].as_ref().expect("our key for peer");
             let raw = my_sk.diffie_hellman(&peer_pk);
             // bind the epoch so rotated sessions derive fresh secrets
@@ -89,6 +95,11 @@ impl ClientSession {
             info.extend_from_slice(&self.epoch.to_le_bytes());
             self.shared[j] = Some(hkdf::derive_key32(b"vfl-sa/setup/v1", &raw, &info));
         }
+    }
+
+    /// Whether setup established a shared secret with peer `j`.
+    pub fn has_secret(&self, j: usize) -> bool {
+        self.shared[j].is_some()
     }
 
     /// The pairwise shared secret with peer `j` (post-setup).
@@ -101,15 +112,23 @@ impl ClientSession {
         hkdf::derive_key32(b"vfl-sa/channel/v1", self.shared_secret(j), b"aead")
     }
 
+    /// The total pairwise mask this client adds for (round, tag) —
+    /// the quantity dropout recovery must reproduce and subtract
+    /// (Eq. 3; epoch mixing included). Peers without a shared secret
+    /// contribute nothing.
+    pub fn total_mask(&self, round: u64, tensor_tag: u32, len: usize) -> Vec<u64> {
+        let secrets: Vec<(usize, [u8; 32])> = (0..self.n_clients)
+            .filter(|&j| j != self.id)
+            .filter_map(|j| self.shared[j].map(|s| (j, s)))
+            .collect();
+        prg::total_mask(&secrets, self.id, round ^ (self.epoch << 32), tensor_tag, len)
+    }
+
     /// Mask and fixed-point-encode a float tensor for a round
     /// (Eq. 2 / Eq. 6): returns the ℤ₂⁶⁴ words to send.
     pub fn mask_tensor(&self, values: &[f32], round: u64, tensor_tag: u32) -> Vec<u64> {
         let mut words = self.fp.encode_vec(values);
-        let secrets: Vec<(usize, [u8; 32])> = (0..self.n_clients)
-            .filter(|&j| j != self.id)
-            .map(|j| (j, *self.shared_secret(j)))
-            .collect();
-        let mask = prg::total_mask(&secrets, self.id, round ^ (self.epoch << 32), tensor_tag, words.len());
+        let mask = self.total_mask(round, tensor_tag, words.len());
         for (w, m) in words.iter_mut().zip(mask.iter()) {
             *w = w.wrapping_add(*m);
         }
@@ -126,12 +145,9 @@ impl ClientSession {
             if j == self.id {
                 continue;
             }
-            let words = prg::mask_words(
-                self.shared_secret(j),
-                round ^ (self.epoch << 32),
-                tensor_tag,
-                values.len(),
-            );
+            let Some(ss) = self.shared[j].as_ref() else { continue };
+            let words =
+                prg::mask_words(ss, round ^ (self.epoch << 32), tensor_tag, values.len());
             let sign = if j > self.id { 1.0f32 } else { -1.0f32 };
             for (v, w) in out.iter_mut().zip(words.iter()) {
                 // uniform in [-8, 8)
@@ -259,6 +275,49 @@ mod tests {
         let sessions = setup_all(3, 0, &mut rng);
         assert_eq!(sessions[0].channel_key(1), sessions[1].channel_key(0));
         assert_ne!(sessions[0].channel_key(1), *sessions[0].shared_secret(1));
+    }
+
+    #[test]
+    fn missing_peer_keys_tolerated_and_masks_still_telescope() {
+        // client 2 never published (dropped during setup): the others
+        // derive no secret with it, add no masks against it, and the
+        // survivor sum still cancels exactly
+        let n = 4;
+        let absent = 2usize;
+        let mut rng = DetRng::from_seed(9);
+        let mut sessions: Vec<ClientSession> =
+            (0..n).map(|i| ClientSession::new(i, n, 0, &mut rng)).collect();
+        let mut keys: Vec<PublishedKeys> = sessions.iter().map(|s| s.published_keys()).collect();
+        keys[absent] = PublishedKeys { from: absent, keys: vec![None; n] };
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if i != absent {
+                s.derive_secrets(&keys);
+            }
+        }
+        assert!(!sessions[0].has_secret(absent));
+        assert!(sessions[0].has_secret(1));
+        let t = vec![1.5f32; 8];
+        let masked: Vec<Vec<u64>> = (0..n)
+            .filter(|&i| i != absent)
+            .map(|i| sessions[i].mask_tensor(&t, 3, 0))
+            .collect();
+        let got = aggregate(&FixedPoint::default(), &masked);
+        for v in got {
+            assert!((v - 4.5).abs() < 1e-4, "survivor masks must telescope: {v}");
+        }
+    }
+
+    #[test]
+    fn total_mask_matches_masked_minus_plain() {
+        let mut rng = DetRng::from_seed(10);
+        let sessions = setup_all(3, 2, &mut rng);
+        let t = vec![0.25f32; 6];
+        let masked = sessions[1].mask_tensor(&t, 7, 1);
+        let enc = FixedPoint::default().encode_vec(&t);
+        let mask = sessions[1].total_mask(7, 1, 6);
+        for ((m, e), k) in masked.iter().zip(&enc).zip(&mask) {
+            assert_eq!(*m, e.wrapping_add(*k));
+        }
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Shared integration-test fixtures (the `mod common;` pattern):
+//! every suite in `tests/` declares `mod common;` and builds its
+//! experiment configs, SA sessions, and report assertions from here
+//! instead of repeating them per file.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use vfl::coordinator::messages::Msg;
+use vfl::coordinator::{BackendKind, RunConfig, RunReport, SecurityMode, TransportKind};
+use vfl::crypto::rng::DetRng;
+use vfl::net::{Addr, FaultPlan, Network, Phase};
+use vfl::secagg::{setup_all, ClientSession};
+
+/// The standard small experiment: reference backend, 6 training rounds
+/// (crossing one K = 5 key-rotation boundary), one test round.
+pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> RunConfig {
+    let mut c = RunConfig::test(dataset).unwrap();
+    c.security = mode;
+    c.backend = BackendKind::Reference;
+    c.transport = transport;
+    c.train_rounds = 6;
+    c.test_rounds = 1;
+    c
+}
+
+/// A dropout-tolerant banking run (5 clients: 1 active + 4 passive):
+/// SecureExact, Shamir threshold `t`, optional fault plan.
+pub fn dropout_cfg(t: usize, plan: Option<FaultPlan>, transport: TransportKind) -> RunConfig {
+    let mut c = run_cfg("banking", SecurityMode::SecureExact, transport);
+    c.shamir_threshold = Some(t);
+    c.fault_plan = plan;
+    // shrink the threaded dropout-detection window: rounds take
+    // milliseconds here, and each declared dropout otherwise sleeps
+    // through full 500 ms quiescence windows
+    c.stall_timeout_ms = Some(100);
+    c
+}
+
+/// `n` fully set-up SA client sessions with deterministic keys.
+pub fn sessions(n: usize, seed: u64) -> Vec<ClientSession> {
+    let mut rng = DetRng::from_seed(seed);
+    setup_all(n, 0, &mut rng)
+}
+
+/// encode ∘ decode = id for one protocol message.
+pub fn assert_msg_roundtrip(m: &Msg) {
+    let enc = m.encode();
+    assert_eq!(&Msg::decode(&enc).unwrap(), m, "roundtrip failed for {m:?}");
+}
+
+/// Table-2 byte counters identical across two runs, per (phase, node,
+/// direction).
+pub fn assert_table2_identical(a: &Network, b: &Network) {
+    assert_eq!(a.n_clients(), b.n_clients());
+    assert_eq!(a.messages, b.messages, "message counts differ");
+    let phases = [Phase::Setup, Phase::Training, Phase::Testing];
+    let mut nodes = vec![Addr::Aggregator];
+    nodes.extend((0..a.n_clients()).map(Addr::Client));
+    for ph in phases {
+        for &n in &nodes {
+            assert_eq!(
+                a.sent_bytes(n, ph),
+                b.sent_bytes(n, ph),
+                "sent bytes differ at {n:?}/{ph:?}"
+            );
+            assert_eq!(
+                a.received_bytes(n, ph),
+                b.received_bytes(n, ph),
+                "received bytes differ at {n:?}/{ph:?}"
+            );
+        }
+    }
+}
+
+/// Bit-identity of everything a run reports: losses, predictions,
+/// labels, accuracy, final parameters, setup count.
+pub fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses must be bit-identical");
+    assert_eq!(a.predictions, b.predictions, "{what}: predictions must be bit-identical");
+    assert_eq!(a.prediction_labels, b.prediction_labels, "{what}: labels differ");
+    assert_eq!(a.test_accuracy, b.test_accuracy, "{what}: accuracy differs");
+    assert_eq!(
+        a.final_params.flatten(),
+        b.final_params.flatten(),
+        "{what}: final parameters must be bit-identical"
+    );
+    assert_eq!(a.setups, b.setups, "{what}: setup counts differ");
+}
+
+/// Where `make artifacts` puts the AOT HLO programs.
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Whether the PJRT feature + artifacts are available (PJRT suites
+/// skip with a clear message otherwise).
+pub fn have_artifacts() -> bool {
+    if !vfl::runtime::pjrt_enabled() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
+    if !artifacts_dir().join("banking_global_step.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return false;
+    }
+    true
+}

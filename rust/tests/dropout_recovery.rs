@@ -1,0 +1,282 @@
+//! Dropout-tolerant secure aggregation, end-to-end through the
+//! Party/Transport stack, proven by the deterministic fault-injection
+//! harness (`net/faulty.rs`):
+//!
+//! * **Recovery is exact.** A party that crashes before contributing
+//!   anything is algebraically a party whose features are all zero
+//!   (its masks telescope either way — the survivors' danglers are
+//!   cancelled by the reconstructed seed). We assert that twin
+//!   relationship *bit-for-bit* across entire training runs.
+//! * **Transports agree.** The same seeded crash schedule produces
+//!   bit-identical reports on `SimTransport` (quiescence = empty FIFO)
+//!   and `ThreadedTransport` (quiescence = stall timeout).
+//! * **Failure is typed.** Below the Shamir threshold — or when the
+//!   active party dies — the run aborts with a [`DropoutError`], never
+//!   a wrong aggregate.
+//!
+//! Banking: 5 clients (1 active + 4 passive), threshold t = 3, so any
+//! schedule dropping ≤ 2 clients must recover and 3 drops must abort.
+
+mod common;
+
+use common::{assert_reports_identical, assert_table2_identical, dropout_cfg};
+use vfl::coordinator::{build, run_experiment, summarize, RunConfig, RunReport, TransportKind};
+use vfl::net::{tcp, Fault, FaultPlan};
+use vfl::secagg::DropoutError;
+
+const T: usize = 3;
+
+fn run(plan: Option<FaultPlan>, transport: TransportKind) -> RunReport {
+    run_experiment(dropout_cfg(T, plan, transport), None).unwrap()
+}
+
+/// Run a config that must fail, returning the error.
+fn run_err(cfg: RunConfig, what: &str) -> anyhow::Error {
+    match run_experiment(cfg, None) {
+        Ok(_) => panic!("{what}: expected an error, got a completed run"),
+        Err(e) => e,
+    }
+}
+
+/// Crash `clients` in round 0 right after they published keys and
+/// distributed seed shares (send #2 of the rotation) — so the epoch
+/// includes them, their masks dangle, and they contribute no data.
+fn crash_after_setup(clients: &[usize]) -> FaultPlan {
+    let mut plan = FaultPlan::default();
+    for &c in clients {
+        plan = plan.with(c, Fault::Crash { round: 0, after_sends: 2 });
+    }
+    plan
+}
+
+/// Acceptance criterion (a): with n = 5, t = 3 and ≤ 2 dropped
+/// clients, the recovered aggregate — and therefore every loss, every
+/// parameter, every prediction downstream of it — is bit-identical to
+/// the no-dropout run in which the same clients participate but
+/// contribute exactly nothing (feature rows zeroed). That twin is what
+/// "correct aggregate over the survivors" *means* in ℤ₂⁶⁴.
+#[test]
+fn recovery_bit_identical_to_zero_contribution_twin() {
+    for drops in [vec![2usize], vec![4], vec![2, 4], vec![1, 3]] {
+        let plan = crash_after_setup(&drops);
+        let crash = run(Some(plan.clone()), TransportKind::Sim);
+        let twin = run(Some(plan.blank_twin()), TransportKind::Sim);
+        assert_reports_identical(&crash, &twin, &format!("drops {drops:?} vs blank twin"));
+        // the run crossed the round-5 rotation and really trained
+        assert_eq!(crash.losses.len(), 6);
+        assert!(crash.losses.iter().all(|l| l.is_finite()));
+        assert!(crash.setups >= 3, "initial + r0 + r5 rotations");
+    }
+}
+
+/// The two-stage declaration path: client 2 crashes before its round-0
+/// activation, client 3 crashes right *after* sending its activation —
+/// so 3 is first treated as a survivor, fails to surrender shares for
+/// 2, and is declared dropped in the second stall. Its already-buffered
+/// activation must be purged (the mask correction re-adds its whole
+/// total mask, which is only sound if it contributed nothing), making
+/// the run bit-identical to the twin where both contribute zeros.
+#[test]
+fn late_declared_contributor_is_purged_not_double_masked() {
+    // round 0 rotates: sends are keys(1), shares(2), act(3), grad(4)
+    let plan = FaultPlan::default()
+        .with(2, Fault::Crash { round: 0, after_sends: 2 })
+        .with(3, Fault::Crash { round: 0, after_sends: 3 });
+    let crash = run(Some(plan.clone()), TransportKind::Sim);
+    let twin = run(Some(plan.blank_twin()), TransportKind::Sim);
+    assert_reports_identical(&crash, &twin, "late-declared contributor vs blank twin");
+    let thr = run(Some(plan), TransportKind::Threaded);
+    assert_reports_identical(&crash, &thr, "late-declared contributor sim vs threaded");
+}
+
+/// Acceptance criterion (c): any seeded schedule dropping ≤ 2 passive
+/// clients at round starts yields bit-identical reports under the
+/// simulator's deterministic quiescence and the threaded transport's
+/// timeout-based detection.
+#[test]
+fn seeded_schedules_bit_identical_sim_vs_threaded() {
+    for seed in 0..4u64 {
+        let plan = FaultPlan::seeded(seed, 5, 2, 6);
+        let sim = run(Some(plan.clone()), TransportKind::Sim);
+        let thr = run(Some(plan.clone()), TransportKind::Threaded);
+        assert_reports_identical(&sim, &thr, &format!("seeded plan {seed}: {plan:?}"));
+        assert_table2_identical(&sim.net, &thr.net);
+        assert_eq!(sim.losses.len(), 6, "seed {seed}");
+        assert!(sim.losses.iter().all(|l| l.is_finite()), "seed {seed}");
+    }
+}
+
+/// Mid-round crashes (after 1–2 sends: between the activation and
+/// gradient fan-ins, or at the end of a round) exercise the
+/// gradient-stage and next-round detection paths — still bit-identical
+/// across transports.
+#[test]
+fn seeded_mid_round_crashes_recover_on_both_transports() {
+    for seed in 0..3u64 {
+        let plan = FaultPlan::seeded_mid_round(seed, 5, 2, 6);
+        let sim = run(Some(plan.clone()), TransportKind::Sim);
+        let thr = run(Some(plan.clone()), TransportKind::Threaded);
+        assert_reports_identical(&sim, &thr, &format!("mid-round plan {seed}: {plan:?}"));
+        assert!(sim.losses.iter().all(|l| l.is_finite()), "seed {seed}");
+    }
+}
+
+/// Acceptance criterion (b): dropping 3 of 5 clients leaves 2 < t = 3
+/// survivors — the run must abort with the typed below-threshold
+/// error, not produce a wrong aggregate.
+#[test]
+fn below_threshold_aborts_with_typed_error() {
+    let mut plan = FaultPlan::default();
+    for c in [2usize, 3, 4] {
+        plan = plan.with(c, Fault::Crash { round: 1, after_sends: 0 });
+    }
+    let err = run_err(
+        dropout_cfg(T, Some(plan.clone()), TransportKind::Sim),
+        "2 survivors < t=3 on sim",
+    );
+    match err.downcast_ref::<DropoutError>() {
+        Some(DropoutError::BelowThreshold { survivors, threshold }) => {
+            assert_eq!((*survivors, *threshold), (2, 3));
+        }
+        other => panic!("expected BelowThreshold, got {other:?} ({err:#})"),
+    }
+    // threaded runs surface the same failure through the Failed note
+    let err = run_err(
+        dropout_cfg(T, Some(plan), TransportKind::Threaded),
+        "2 survivors < t=3 on threaded",
+    );
+    assert!(
+        format!("{err:#}").contains("below dropout threshold"),
+        "unexpected threaded error: {err:#}"
+    );
+}
+
+/// The active party owns labels and the SGD step: its death is
+/// unrecoverable and must be reported as such.
+#[test]
+fn active_party_drop_aborts() {
+    let plan = FaultPlan::crash_at(0, 1);
+    let err = run_err(dropout_cfg(T, Some(plan), TransportKind::Sim), "active drop");
+    assert!(
+        matches!(err.downcast_ref::<DropoutError>(), Some(DropoutError::ActivePartyDropped)),
+        "expected ActivePartyDropped, got {err:#}"
+    );
+}
+
+/// Without dropout tolerance the same crash stalls the protocol — the
+/// pre-existing failure mode this PR exists to fix — and the transport
+/// reports it instead of hanging.
+#[test]
+fn crash_without_tolerance_stalls_cleanly() {
+    let mut cfg = dropout_cfg(T, Some(FaultPlan::crash_at(3, 1)), TransportKind::Sim);
+    cfg.shamir_threshold = None;
+    let err = run_err(cfg, "crash without tolerance");
+    assert!(format!("{err:#}").contains("stalled"), "got {err:#}");
+}
+
+/// A client that crashes during the *initial* setup round (before
+/// publishing keys) is excluded from the epoch entirely: nobody
+/// derives a secret with it, nothing dangles, no recovery is needed —
+/// and the exclusion is still bit-identical to the zero-contribution
+/// twin.
+#[test]
+fn setup_round_drop_excluded_and_twin_identical() {
+    let plan = FaultPlan::crash_at(4, vfl::coordinator::SETUP_ROUND);
+    let crash = run(Some(plan.clone()), TransportKind::Sim);
+    let twin = run(Some(plan.blank_twin()), TransportKind::Sim);
+    assert_reports_identical(&crash, &twin, "setup-round drop vs blank twin");
+    let thr = run(Some(plan), TransportKind::Threaded);
+    assert_reports_identical(&crash, &thr, "setup-round drop sim vs threaded");
+}
+
+/// A drop before the round-5 rotation: the re-key excludes the dropped
+/// client, so post-rotation rounds need no mask correction at all —
+/// and the two transports still agree bit-for-bit.
+#[test]
+fn rotation_after_drop_rekeys_among_survivors() {
+    let plan = FaultPlan::default().with(2, Fault::Crash { round: 1, after_sends: 0 });
+    let sim = run(Some(plan.clone()), TransportKind::Sim);
+    let thr = run(Some(plan), TransportKind::Threaded);
+    assert_reports_identical(&sim, &thr, "drop@1 then rotation@5");
+    assert_eq!(sim.losses.len(), 6);
+    assert!(sim.losses.iter().all(|l| l.is_finite()));
+}
+
+/// A lost message (sender alive, activation vanished) is
+/// indistinguishable from a crash to the aggregator: the sender is
+/// declared dropped, the round recovers, the run completes.
+#[test]
+fn lost_message_declares_sender_dropped() {
+    let plan = FaultPlan::default().with(3, Fault::DropMsg { round: 1, nth: 0 });
+    let sim = run(Some(plan.clone()), TransportKind::Sim);
+    let thr = run(Some(plan), TransportKind::Threaded);
+    assert_reports_identical(&sim, &thr, "lost activation");
+    assert!(sim.losses.iter().all(|l| l.is_finite()));
+}
+
+/// Bounded reordering of one event's emissions (the delay fault) is
+/// invisible: the §4 machines only rely on per-sender FIFO, so the
+/// report — including Table-2 byte counters — matches the unfaulted
+/// run exactly.
+#[test]
+fn delay_reordering_is_invisible() {
+    let baseline = run(None, TransportKind::Sim);
+    let plan = FaultPlan::default()
+        .with(0, Fault::Delay { round: 1, hold: 1 })
+        .with(2, Fault::Delay { round: 2, hold: 1 });
+    let delayed = run(Some(plan), TransportKind::Sim);
+    assert_reports_identical(&baseline, &delayed, "delay fault");
+    assert_table2_identical(&baseline.net, &delayed.net);
+}
+
+/// The TCP path: a real socket run with a crashing client, detected by
+/// the server's stall timeout, produces the same losses and
+/// predictions as the simulated run of the identical schedule.
+#[test]
+fn tcp_recovery_matches_sim() {
+    let plan = FaultPlan::default().with(3, Fault::Crash { round: 1, after_sends: 0 });
+    let mut cfg = dropout_cfg(T, Some(plan.clone()), TransportKind::Sim);
+    cfg.train_rounds = 2; // keep the socket run short
+    let sim = run_experiment(cfg.clone(), None).unwrap();
+
+    // bind port 0 first so there is no port race: clients connect to
+    // the real port after the listener exists
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let n_clients = cfg.model.n_clients();
+
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        let built = build(&server_cfg, None).unwrap();
+        let mut parties = built.parties;
+        let aggregator = parties.remove(0);
+        drop(parties);
+        let out = tcp::serve_on(listener, aggregator, &built.schedule, n_clients)?;
+        Ok::<_, anyhow::Error>((summarize(&built.schedule, &built.test_labels, &out.notes), out))
+    });
+
+    let mut clients = Vec::new();
+    for client in 0..n_clients {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        let plan = plan.clone();
+        clients.push(std::thread::spawn(move || {
+            let built = build(&cfg, None).unwrap();
+            let mut parties = built.parties;
+            let party = parties.remove(client + 1);
+            drop(parties);
+            let party = plan.wrap_one(client, party);
+            tcp::join(&addr, client, party)
+        }));
+    }
+
+    let (summary, _out) = server.join().unwrap().unwrap();
+    for c in clients {
+        // the crashed client's loop just discards frames until Stop,
+        // so every join should return cleanly
+        c.join().unwrap().unwrap();
+    }
+    assert_eq!(summary.losses, sim.losses, "TCP losses must match the simulated run");
+    assert_eq!(summary.predictions, sim.predictions, "TCP predictions must match");
+    assert_eq!(summary.test_accuracy, sim.test_accuracy);
+}

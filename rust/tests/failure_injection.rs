@@ -2,10 +2,13 @@
 //! malformed messages, dropped shares — the protocol must fail *safe*
 //! (reject / stay masked), never silently mis-train.
 
+mod common;
+
+use common::sessions;
 use vfl::coordinator::parties::{open_id, seal_id};
 use vfl::crypto::rng::DetRng;
 use vfl::crypto::shamir;
-use vfl::secagg::{aggregate, setup_all, FixedPoint};
+use vfl::secagg::{aggregate, FixedPoint};
 
 /// A tampered sealed sample-ID must be rejected (AEAD), which the
 /// protocol treats as "not my sample" — privacy-preserving degradation.
@@ -28,8 +31,7 @@ fn tampered_batch_entry_rejected() {
 /// plausible wrong value near the true sum.
 #[test]
 fn stale_round_vector_stays_masked() {
-    let mut rng = DetRng::from_seed(1);
-    let sessions = setup_all(3, 0, &mut rng);
+    let sessions = sessions(3, 1);
     let t = vec![1.0f32; 16];
     let fresh: Vec<Vec<u64>> = sessions.iter().map(|s| s.mask_tensor(&t, 5, 0)).collect();
     let stale = sessions[2].mask_tensor(&t, 4, 0); // wrong round
@@ -45,9 +47,8 @@ fn stale_round_vector_stays_masked() {
 /// before recovery) — for every client.
 #[test]
 fn any_single_missing_client_masks_the_sum() {
-    let mut rng = DetRng::from_seed(2);
     let n = 4;
-    let sessions = setup_all(n, 0, &mut rng);
+    let sessions = sessions(n, 2);
     let t = vec![2.5f32; 8];
     let masked: Vec<Vec<u64>> = sessions.iter().map(|s| s.mask_tensor(&t, 0, 0)).collect();
     let want_partial = 2.5 * (n as f32 - 1.0);
@@ -92,8 +93,7 @@ fn corrupted_share_detected_by_commitment() {
 #[test]
 #[should_panic]
 fn length_mismatch_panics() {
-    let mut rng = DetRng::from_seed(4);
-    let sessions = setup_all(2, 0, &mut rng);
+    let sessions = sessions(2, 4);
     let a = sessions[0].mask_tensor(&vec![1.0; 8], 0, 0);
     let b = sessions[1].mask_tensor(&vec![1.0; 9], 0, 0);
     let _ = aggregate(&FixedPoint::default(), &[a, b]);

@@ -2,6 +2,9 @@
 //! round-trips through `net::wire`, `Network` per-(phase, party,
 //! direction) byte accounting, and the socket framing.
 
+mod common;
+
+use common::assert_msg_roundtrip;
 use vfl::coordinator::messages::{Msg, WireKeys};
 use vfl::coordinator::{Note, RoundKind, RoundSpec};
 use vfl::net::frame::Frame;
@@ -57,11 +60,15 @@ fn every_protocol_message_roundtrips() {
         Msg::GradientSum { round: 4, words: vec![7, 8, 9] },
         Msg::FloatGradientSum { round: 4, vals: vec![0.25] },
         Msg::Predictions { round: 5, probs: vec![0.9, 0.1] },
+        Msg::SeedShares { epoch: 1, from: 2, sealed: vec![vec![], vec![0xAB; 100]] },
+        Msg::ShareRelay { epoch: 1, sealed: vec![vec![0xCD; 100], vec![]] },
+        Msg::DropoutNotice { round: 4, dropped: vec![3] },
+        Msg::SurrenderShares { round: 4, from: 1, bundles: vec![(3, vec![0xEF; 84])] },
     ];
     for m in msgs {
-        let enc = m.encode();
-        assert_eq!(Msg::decode(&enc).unwrap(), m, "roundtrip failed for {m:?}");
+        assert_msg_roundtrip(&m);
         // every encoding survives a Frame trip too (the TCP path)
+        let enc = m.encode();
         let f = Frame::Msg { bytes: enc.clone() };
         let mut buf = Vec::new();
         f.write_to(&mut buf).unwrap();

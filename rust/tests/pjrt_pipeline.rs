@@ -5,34 +5,17 @@
 //! they skip with a clear message otherwise, so `cargo test` is green
 //! on a fresh checkout.
 
-use std::path::PathBuf;
+mod common;
 
-use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+use common::{artifacts_dir, have_artifacts};
+use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode, TransportKind};
 use vfl::model::ModelConfig;
-use vfl::runtime::{pjrt_enabled, Engine};
-
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn have_artifacts() -> bool {
-    if !pjrt_enabled() {
-        eprintln!("skipping: built without the `pjrt` feature");
-        return false;
-    }
-    if !artifacts_dir().join("banking_global_step.hlo.txt").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return false;
-    }
-    true
-}
+use vfl::runtime::Engine;
 
 fn cfg(dataset: &str, mode: SecurityMode, backend: BackendKind) -> RunConfig {
-    let mut c = RunConfig::test(dataset).unwrap();
-    c.security = mode;
+    let mut c = common::run_cfg(dataset, mode, TransportKind::Sim);
     c.backend = backend;
     c.train_rounds = 5;
-    c.test_rounds = 1;
     c
 }
 

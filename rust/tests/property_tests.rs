@@ -2,6 +2,9 @@
 //! these are driven by the in-crate deterministic ChaCha20 RNG with
 //! many iterations — same idea, reproducible seeds).
 
+mod common;
+
+use common::assert_msg_roundtrip;
 use vfl::coordinator::messages::{Msg, WireKeys};
 use vfl::coordinator::parties::GradLayout;
 use vfl::crypto::rng::DetRng;
@@ -69,7 +72,7 @@ fn prop_msg_roundtrip_randomized() {
             from: rng.next_range(0, 100) as u16,
             words,
         };
-        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        assert_msg_roundtrip(&m);
 
         let keys: Vec<Option<[u8; 32]>> = (0..rng.next_range(1, 6))
             .map(|_| {
@@ -83,7 +86,26 @@ fn prop_msg_roundtrip_randomized() {
             })
             .collect();
         let m = Msg::PublishKeys(WireKeys { from: rng.next_range(0, 10) as u16, keys });
-        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        assert_msg_roundtrip(&m);
+
+        // dropout-tolerance messages with randomized payloads
+        let nb = rng.next_range(0, 5) as usize;
+        let sealed: Vec<Vec<u8>> = (0..nb)
+            .map(|_| {
+                let mut b = vec![0u8; rng.next_range(0, 120) as usize];
+                rng.fill(&mut b);
+                b
+            })
+            .collect();
+        assert_msg_roundtrip(&Msg::SeedShares {
+            epoch: rng.next_u64(),
+            from: rng.next_range(0, 16) as u16,
+            sealed: sealed.clone(),
+        });
+        assert_msg_roundtrip(&Msg::ShareRelay { epoch: rng.next_u64(), sealed });
+        let dropped: Vec<u16> =
+            (0..rng.next_range(1, 4)).map(|_| rng.next_range(0, 16) as u16).collect();
+        assert_msg_roundtrip(&Msg::DropoutNotice { round: rng.next_u32(), dropped });
     }
 }
 
@@ -173,6 +195,61 @@ fn prop_fixed_point() {
         let s = fp.decode(fp.encode(a).wrapping_add(fp.encode(b)));
         assert!((s - (a + b)).abs() < 1e-4);
     }
+}
+
+/// The documented codec bound (satellite): encode → wrap-sum → decode
+/// matches the f64 reference sum within 2⁻²⁵ per element *per party*
+/// (`FixedPoint::max_error`), for random party counts and magnitudes,
+/// negative values included.
+#[test]
+fn prop_fixed_point_sum_within_documented_bound() {
+    let fp = FixedPoint::default();
+    let mut rng = DetRng::from_seed(42);
+    for _ in 0..300 {
+        let n = rng.next_range(2, 40) as usize;
+        // symmetric around zero, spanning several magnitudes
+        let scale_mag = 10f64.powi(rng.next_range(0, 5) as i32);
+        let vals: Vec<f32> =
+            (0..n).map(|_| ((rng.next_f64() - 0.5) * 2.0 * scale_mag) as f32).collect();
+        let acc = vals
+            .iter()
+            .fold(0u64, |acc, &v| acc.wrapping_add(fp.encode(v)));
+        let got = fp.decode(acc) as f64;
+        let want: f64 = vals.iter().map(|&v| v as f64).sum();
+        let bound = fp.max_error(n) + want.abs() * 1e-6;
+        assert!(
+            (got - want).abs() <= bound,
+            "n={n} got={got} want={want} bound={bound}"
+        );
+    }
+}
+
+/// Wrap boundaries: the two's-complement encoding survives crossing
+/// 2⁶³ in either direction, and exact opposites cancel to zero across
+/// the wrap.
+#[test]
+fn fixed_point_wrap_boundaries() {
+    let fp = FixedPoint::default();
+    // a magnitude near the i64 clamp: encode saturates, decode returns
+    // the clamped value, no UB and no sign flip
+    let huge = 1e18f32;
+    let enc = fp.encode(huge);
+    assert!(fp.decode(enc) > 0.0, "positive clamp must stay positive");
+    let enc = fp.encode(-huge);
+    assert!(fp.decode(enc) < 0.0, "negative clamp must stay negative");
+    // opposites cancel exactly even when each wraps past 2⁶³ with a
+    // mask added (the dropout-recovery cancellation in miniature)
+    let m = 0x8000_0000_0000_0001u64; // just past the sign boundary
+    for v in [0.5f32, -1024.25, 3.0e6] {
+        let a = fp.encode(v).wrapping_add(m);
+        let b = fp.encode(-v).wrapping_add(m.wrapping_neg());
+        assert_eq!(fp.decode(a.wrapping_add(b)), 0.0, "v={v}");
+    }
+    // a sum whose intermediate crosses the unsigned wrap decodes to the
+    // correct negative total
+    let a = fp.encode(-3.5);
+    let b = fp.encode(1.25);
+    assert_eq!(fp.decode(a.wrapping_add(b)), -2.25);
 }
 
 /// One-hot encoding: every subset view is an exact projection of the

@@ -7,15 +7,12 @@
 //! predictions — differing only by the fixed-point quantization the
 //! masks ride on.
 
-use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode};
+mod common;
+
+use vfl::coordinator::{run_experiment, RunConfig, SecurityMode, TransportKind};
 
 fn cfg(dataset: &str, mode: SecurityMode) -> RunConfig {
-    let mut c = RunConfig::test(dataset).unwrap();
-    c.security = mode;
-    c.backend = BackendKind::Reference;
-    c.train_rounds = 6; // crosses one key-rotation boundary (K = 5)
-    c.test_rounds = 1;
-    c
+    common::run_cfg(dataset, mode, TransportKind::Sim)
 }
 
 #[test]

@@ -2,8 +2,11 @@
 //! actually observes during a protocol run, and what the extensions
 //! (PKI signatures, PSI alignment, dropout recovery) guarantee.
 
+mod common;
+
 use std::collections::HashMap;
 
+use common::sessions;
 use vfl::coordinator::parties::{open_id, seal_id};
 use vfl::crypto::ed25519::SigningKey;
 use vfl::crypto::psi::{run_psi, PsiGroup, PsiParty};
@@ -14,10 +17,9 @@ use vfl::secagg::{aggregate, setup_all, FixedPoint};
 /// statistically unrelated to the plaintext; only the sum decodes.
 #[test]
 fn aggregator_view_reveals_only_the_sum() {
-    let mut rng = DetRng::from_seed(1);
     let n = 5;
     let len = 256;
-    let sessions = setup_all(n, 0, &mut rng);
+    let sessions = sessions(n, 1);
     let tensors: Vec<Vec<f32>> =
         (0..n).map(|i| (0..len).map(|j| (i * j % 17) as f32 * 0.25).collect()).collect();
     let masked: Vec<Vec<u64>> =
@@ -55,8 +57,7 @@ fn aggregator_view_reveals_only_the_sum() {
 /// sample IDs it holds; other parties' entries are indistinguishable.
 #[test]
 fn batch_ids_readable_only_by_holder() {
-    let mut rng = DetRng::from_seed(2);
-    let sessions = setup_all(3, 0, &mut rng); // active=0, passives 1, 2
+    let sessions = sessions(3, 2); // active=0, passives 1, 2
     let ids_for_1 = [11u64, 12, 13];
     let ids_for_2 = [21u64, 22];
 

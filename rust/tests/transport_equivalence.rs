@@ -10,58 +10,16 @@
 //! active party's RoundDone note. Byte counters must match too: both
 //! transports meter the same message encodings through `Network`.
 
-use vfl::coordinator::{run_experiment, BackendKind, RunConfig, SecurityMode, TransportKind};
-use vfl::net::{Addr, Phase, Network};
+mod common;
 
-fn cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> RunConfig {
-    let mut c = RunConfig::test(dataset).unwrap();
-    c.security = mode;
-    c.backend = BackendKind::Reference;
-    c.transport = transport;
-    c.train_rounds = 6; // crosses one key-rotation boundary (K = 5)
-    c.test_rounds = 1;
-    c
-}
-
-fn assert_table2_identical(a: &Network, b: &Network) {
-    assert_eq!(a.n_clients(), b.n_clients());
-    assert_eq!(a.messages, b.messages, "message counts differ");
-    let phases = [Phase::Setup, Phase::Training, Phase::Testing];
-    let mut nodes = vec![Addr::Aggregator];
-    nodes.extend((0..a.n_clients()).map(Addr::Client));
-    for ph in phases {
-        for &n in &nodes {
-            assert_eq!(
-                a.sent_bytes(n, ph),
-                b.sent_bytes(n, ph),
-                "sent bytes differ at {n:?}/{ph:?}"
-            );
-            assert_eq!(
-                a.received_bytes(n, ph),
-                b.received_bytes(n, ph),
-                "received bytes differ at {n:?}/{ph:?}"
-            );
-        }
-    }
-}
+use common::{assert_reports_identical, assert_table2_identical, run_cfg as cfg};
+use vfl::coordinator::{run_experiment, SecurityMode, TransportKind};
 
 fn assert_bit_identical(dataset: &str, mode: SecurityMode) {
     let sim = run_experiment(cfg(dataset, mode, TransportKind::Sim), None).unwrap();
     let thr = run_experiment(cfg(dataset, mode, TransportKind::Threaded), None).unwrap();
 
-    assert_eq!(sim.losses, thr.losses, "{dataset}/{mode:?}: losses must be bit-identical");
-    assert_eq!(
-        sim.predictions, thr.predictions,
-        "{dataset}/{mode:?}: predictions must be bit-identical"
-    );
-    assert_eq!(sim.prediction_labels, thr.prediction_labels);
-    assert_eq!(sim.test_accuracy, thr.test_accuracy);
-    assert_eq!(
-        sim.final_params.flatten(),
-        thr.final_params.flatten(),
-        "{dataset}/{mode:?}: final parameters must be bit-identical"
-    );
-    assert_eq!(sim.setups, thr.setups);
+    assert_reports_identical(&sim, &thr, &format!("{dataset}/{mode:?}"));
     assert_table2_identical(&sim.net, &thr.net);
     // sanity: the run did real work
     assert_eq!(sim.losses.len(), 6);
