@@ -42,6 +42,35 @@ fn main() -> anyhow::Result<()> {
     });
     println!("fixed-point codec 256x64    : {} ms", pm(&s));
 
+    // chunked vs monolithic masking of one banking activation: the
+    // streaming pipeline (encode + windowed PRG per chunk) must stay
+    // within noise of the monolithic path (encode + full-mask expand)
+    {
+        use vfl::coordinator::streaming::{chunk_plan, ShardLayout};
+        let mut srng = DetRng::from_seed(6);
+        let sessions = vfl::secagg::setup_all(5, 0, &mut srng);
+        let sess = &sessions[1];
+        let vals = vec![0.123f32; 256 * 64];
+        let s = bench_ms(50, || {
+            std::hint::black_box(sess.mask_tensor(&vals, 3, 0));
+        });
+        println!("mask_tensor monolithic 256x64: {} ms", pm(&s));
+        for (cw, shards) in [(1024usize, 4usize), (256, 16)] {
+            let layout = ShardLayout::new(vals.len(), shards);
+            let s = bench_ms(50, || {
+                let stream = sess.total_mask_stream(3, 0);
+                for c in chunk_plan(layout, cw) {
+                    std::hint::black_box(sess.mask_tensor_window(
+                        &stream,
+                        &vals[c.offset..c.offset + c.len],
+                        c.offset,
+                    ));
+                }
+            });
+            println!("mask_tensor chunked {cw:>5}w/{shards:>2}s: {} ms", pm(&s));
+        }
+    }
+
     // AEAD: seal + trial-open of a 512-entry ID batch
     let key = [7u8; 32];
     let s = bench_ms(20, || {

@@ -72,10 +72,26 @@ pub struct RunConfig {
     /// Deterministic fault-injection plan (tests and the
     /// `--dropout-schedule` CLI flag). None = no injected faults.
     pub fault_plan: Option<FaultPlan>,
-    /// Override the threaded transport's dropout-detection window in
-    /// milliseconds (None = the transport default). Tests shrink it so
-    /// crash-recovery suites don't sleep through full 500 ms windows.
+    /// Override the timeout-based transports' dropout-detection
+    /// *floor* in milliseconds (None = the transport default, 500 ms).
+    /// Tests shrink it so crash-recovery suites don't sleep through
+    /// full windows. The effective window adapts upward from this
+    /// floor via an EWMA of observed inter-event gaps.
     pub stall_timeout_ms: Option<u64>,
+    /// Cap on the adaptive dropout-detection window in milliseconds
+    /// (None = the transport default, 10 s): however slow the observed
+    /// rounds, a silent peer is declared within this bound.
+    pub stall_cap_ms: Option<u64>,
+    /// Streaming pipeline: maximum ℤ₂⁶⁴ words per masked-tensor chunk
+    /// (`--chunk-words`). None = monolithic masked messages. Requires
+    /// [`SecurityMode::SecureExact`] — only ℤ₂⁶⁴ sums are
+    /// order-independent, which is what keeps a chunked run
+    /// bit-identical to a monolithic one.
+    pub chunk_words: Option<usize>,
+    /// Streaming pipeline: shards per masked tensor (`--shards`, ≥ 1).
+    /// Each sender's shard is committed into the aggregate as soon as
+    /// that sender completes it. Only meaningful with `chunk_words`.
+    pub shards: usize,
 }
 
 impl RunConfig {
@@ -95,6 +111,9 @@ impl RunConfig {
             shamir_threshold: None,
             fault_plan: None,
             stall_timeout_ms: None,
+            stall_cap_ms: None,
+            chunk_words: None,
+            shards: 1,
         })
     }
 

@@ -25,8 +25,9 @@ use crate::runtime::Engine;
 use super::backend::Backend;
 use super::config::{BackendKind, RunConfig, SecurityMode, TransportKind};
 use super::metrics::Metrics;
-use super::parties::{ActiveParty, Aggregator, PassiveParty};
+use super::parties::{ActiveParty, Aggregator, GradLayout, PassiveParty};
 use super::party::{Note, Party, RoundKind, RoundSpec, SETUP_ROUND};
+use super::streaming::StreamCfg;
 
 /// Everything a run produces.
 pub struct RunReport {
@@ -55,6 +56,51 @@ pub struct Built<'e> {
     pub setups: usize,
 }
 
+/// Validate the streaming flags against the run shape and produce the
+/// per-party [`StreamCfg`]. Rejecting here means `--chunk-words 0`,
+/// `--shards 0`, or a shard count exceeding the tensor length fail at
+/// configuration time with a clear error instead of panicking
+/// mid-round.
+pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
+    if cfg.shards == 0 {
+        bail!("--shards 0 is invalid (need at least 1 shard)");
+    }
+    let Some(cw) = cfg.chunk_words else {
+        if cfg.shards != 1 {
+            bail!(
+                "--shards {} requires --chunk-words (sharding only applies to the chunked \
+                 streaming pipeline)",
+                cfg.shards
+            );
+        }
+        return Ok(StreamCfg::monolithic());
+    };
+    if cw == 0 {
+        bail!("--chunk-words 0 is invalid (need at least 1 word per chunk)");
+    }
+    if cfg.security != SecurityMode::SecureExact {
+        bail!(
+            "--chunk-words requires SecureExact: only Z_2^64 sums are order-independent, \
+             which is what keeps a chunked run bit-identical to a monolithic one"
+        );
+    }
+    if cfg.shards > u16::MAX as usize {
+        bail!("--shards {} exceeds the wire limit ({})", cfg.shards, u16::MAX);
+    }
+    // both masked fan-in tensors must accommodate the shard count
+    let act_len = cfg.model.batch_size * cfg.model.hidden;
+    let grad_len = GradLayout::new(&cfg.model).total;
+    let min_len = act_len.min(grad_len);
+    if cfg.shards > min_len {
+        bail!(
+            "--shards {} exceeds the smallest masked tensor length {min_len} \
+             (activation {act_len} words, gradient {grad_len} words)",
+            cfg.shards
+        );
+    }
+    Ok(StreamCfg::chunked(cw, cfg.shards))
+}
+
 /// Generate data, partition it, wire up all parties, and lay out the
 /// round schedule.
 pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e>> {
@@ -73,6 +119,7 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
             bail!("shamir threshold {t} out of range (need 2 ≤ t ≤ {n} clients)");
         }
     }
+    let stream = validate_streaming(cfg)?;
     let (schema, spec, _) = by_name(&cfg.model.dataset).context("unknown dataset")?;
     let data = generate(&schema, cfg.n_rows, cfg.seed);
     let mut vertical = partition(&data, &spec);
@@ -122,13 +169,21 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
 
     let threshold = cfg.shamir_threshold;
     let mut parties: Vec<Box<dyn Party + 'e>> = Vec::with_capacity(cfg.model.n_clients() + 1);
-    parties.push(Box::new(Aggregator::new(&cfg.model, cfg.seed, backend, groups, threshold)));
+    parties.push(Box::new(Aggregator::new(
+        &cfg.model,
+        cfg.seed,
+        backend,
+        groups,
+        threshold,
+        stream,
+    )));
     parties.push(Box::new(ActiveParty::new(
         vertical.active,
         holders,
         cfg.model.clone(),
         cfg.security,
         threshold,
+        stream,
         cfg.seed,
         backend,
     )));
@@ -139,6 +194,7 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
             &cfg.model,
             cfg.security,
             threshold,
+            stream,
             cfg.seed,
             backend,
         )));
@@ -273,6 +329,9 @@ impl<'e> Experiment<'e> {
             if let Some(ms) = cfg.stall_timeout_ms {
                 t = t.with_stall_timeout(std::time::Duration::from_millis(ms));
             }
+            if let Some(ms) = cfg.stall_cap_ms {
+                t = t.with_stall_cap(std::time::Duration::from_millis(ms));
+            }
             t
         };
         let outcome = match (cfg.transport, cfg.fault_plan.clone()) {
@@ -333,6 +392,38 @@ mod tests {
         // batch ids wrap deterministically
         assert_eq!(sched[1].ids[0], 0);
         assert_eq!(sched[2].ids[0], c.model.batch_size as u64);
+    }
+
+    #[test]
+    fn streaming_flags_validated() {
+        // defaults: monolithic
+        assert_eq!(validate_streaming(&cfg()).unwrap(), StreamCfg::monolithic());
+        // zero chunk words / zero shards rejected with clear errors
+        let mut c = cfg();
+        c.chunk_words = Some(0);
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("--chunk-words 0"));
+        let mut c = cfg();
+        c.shards = 0;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("--shards 0"));
+        // shards without chunking rejected
+        let mut c = cfg();
+        c.shards = 2;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("requires --chunk-words"));
+        // shard count beyond the smallest masked tensor rejected
+        let mut c = cfg();
+        c.chunk_words = Some(64);
+        c.shards = 1 << 20;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("exceeds"));
+        // chunking is exact-masking only
+        let mut c = cfg();
+        c.chunk_words = Some(64);
+        c.security = SecurityMode::SecureFloat;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("SecureExact"));
+        // a valid chunked config passes through
+        let mut c = cfg();
+        c.chunk_words = Some(1024);
+        c.shards = 4;
+        assert_eq!(validate_streaming(&c).unwrap(), StreamCfg::chunked(1024, 4));
     }
 
     #[test]

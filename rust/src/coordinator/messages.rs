@@ -42,6 +42,23 @@ pub enum Msg {
     PlainBatchRelay { round: u32, ids: Vec<u64> },
     /// Client → aggregator: masked activation (Eq. 2), ℤ₂⁶⁴ words.
     MaskedActivation { round: u32, from: u16, words: Vec<u64> },
+    /// Client → aggregator: one window of a masked tensor (the
+    /// streaming pipeline; `--chunk-words`). `tag` selects the fan-in
+    /// (0 = activation, 1 = gradient), `shard` the shard the window
+    /// belongs to, `offset` the window's starting word in the *full*
+    /// tensor of `total` words. Chunks ride per-sender FIFO in stream
+    /// order and never cross a shard boundary. Header cost: 22 bytes
+    /// per chunk vs 11 for a monolithic masked message (the Table-2
+    /// accounting rule, see `coordinator::streaming`).
+    MaskedChunk {
+        round: u32,
+        from: u16,
+        tag: u8,
+        shard: u16,
+        offset: u32,
+        total: u32,
+        words: Vec<u64>,
+    },
     /// Client → aggregator: float-mask or plain activation.
     FloatActivation { round: u32, from: u16, vals: Vec<f32> },
     /// Aggregator → clients: ∂L/∂z broadcast for the backward pass.
@@ -62,8 +79,13 @@ pub enum Msg {
     /// Client → aggregator: Shamir shares of its mask seed, one
     /// AEAD-sealed bundle per recipient peer (empty at the own slot and
     /// at peers with no shared secret). Sealed so the relaying
-    /// aggregator can never collect t readable shares itself.
-    SeedShares { epoch: u64, from: u16, sealed: Vec<Vec<u8>> },
+    /// aggregator can never collect t readable shares itself. The
+    /// `commitment` binds the shared seed
+    /// ([`dropout::seed_commitment`](crate::secagg::dropout::seed_commitment)):
+    /// the aggregator pins it at setup and rejects a reconstruction
+    /// that does not match — a malicious surrenderer can no longer
+    /// corrupt recovery undetected.
+    SeedShares { epoch: u64, from: u16, commitment: [u8; 32], sealed: Vec<Vec<u8>> },
     /// Aggregator → client: every peer's sealed bundle addressed to
     /// this client (`sealed[i]` = client i's bundle, empty slots where
     /// no bundle exists).
@@ -97,6 +119,7 @@ const T_SEED_SHARES: u8 = 18;
 const T_SHARE_RELAY: u8 = 19;
 const T_DROPOUT_NOTICE: u8 = 20;
 const T_SURRENDER_SHARES: u8 = 21;
+const T_MASKED_CHUNK: u8 = 22;
 
 fn write_blob_list(w: &mut Writer, blobs: &[Vec<u8>]) {
     w.u32(blobs.len() as u32);
@@ -202,6 +225,16 @@ impl Msg {
                 w.u16(*from);
                 w.u64s(words);
             }
+            Msg::MaskedChunk { round, from, tag, shard, offset, total, words } => {
+                w.u8(T_MASKED_CHUNK);
+                w.u32(*round);
+                w.u16(*from);
+                w.u8(*tag);
+                w.u16(*shard);
+                w.u32(*offset);
+                w.u32(*total);
+                w.u64s(words);
+            }
             Msg::FloatActivation { round, from, vals } => {
                 w.u8(T_FLOAT_ACTIVATION);
                 w.u32(*round);
@@ -240,10 +273,11 @@ impl Msg {
                 w.u32(*round);
                 w.f32s(probs);
             }
-            Msg::SeedShares { epoch, from, sealed } => {
+            Msg::SeedShares { epoch, from, commitment, sealed } => {
                 w.u8(T_SEED_SHARES);
                 w.u64(*epoch);
                 w.u16(*from);
+                w.fixed(commitment);
                 write_blob_list(&mut w, sealed);
             }
             Msg::ShareRelay { epoch, sealed } => {
@@ -307,6 +341,15 @@ impl Msg {
             T_MASKED_ACTIVATION => {
                 Msg::MaskedActivation { round: r.u32()?, from: r.u16()?, words: r.u64s()? }
             }
+            T_MASKED_CHUNK => Msg::MaskedChunk {
+                round: r.u32()?,
+                from: r.u16()?,
+                tag: r.u8()?,
+                shard: r.u16()?,
+                offset: r.u32()?,
+                total: r.u32()?,
+                words: r.u64s()?,
+            },
             T_FLOAT_ACTIVATION => {
                 Msg::FloatActivation { round: r.u32()?, from: r.u16()?, vals: r.f32s()? }
             }
@@ -323,6 +366,7 @@ impl Msg {
             T_SEED_SHARES => Msg::SeedShares {
                 epoch: r.u64()?,
                 from: r.u16()?,
+                commitment: r.fixed::<32>()?,
                 sealed: read_blob_list(&mut r)?,
             },
             T_SHARE_RELAY => {
@@ -391,6 +435,15 @@ mod tests {
         roundtrip(Msg::PlainBatch { round: 1, labels: vec![0.0], ids: vec![42, 43] });
         roundtrip(Msg::PlainBatchRelay { round: 1, ids: vec![u64::MAX] });
         roundtrip(Msg::MaskedActivation { round: 2, from: 3, words: vec![u64::MAX, 0, 7] });
+        roundtrip(Msg::MaskedChunk {
+            round: 2,
+            from: 3,
+            tag: 1,
+            shard: 4,
+            offset: 1024,
+            total: 5184,
+            words: vec![u64::MAX, 0, 7],
+        });
         roundtrip(Msg::FloatActivation { round: 2, from: 3, vals: vec![1.5, -0.5] });
         roundtrip(Msg::DzBroadcast { round: 2, dz: vec![0.25; 10] });
         roundtrip(Msg::MaskedGradient { round: 2, from: 1, words: vec![5; 9] });
@@ -401,6 +454,7 @@ mod tests {
         roundtrip(Msg::SeedShares {
             epoch: 2,
             from: 3,
+            commitment: [0xA5; 32],
             sealed: vec![vec![], vec![1, 2, 3], vec![0xFF; 96]],
         });
         roundtrip(Msg::ShareRelay { epoch: 2, sealed: vec![vec![9; 40], vec![]] });
@@ -430,5 +484,21 @@ mod tests {
         assert_eq!(m.encode().len(), 1 + 4 + 2 + 4 + 8000);
         let f = Msg::FloatActivation { round: 0, from: 0, vals: vec![0.0; 1000] };
         assert_eq!(f.encode().len(), 1 + 4 + 2 + 4 + 4000);
+    }
+
+    #[test]
+    fn masked_chunk_header_is_22_bytes() {
+        use crate::coordinator::streaming::CHUNK_MSG_HEADER_BYTES;
+        let m = Msg::MaskedChunk {
+            round: 0,
+            from: 0,
+            tag: 0,
+            shard: 0,
+            offset: 0,
+            total: 1000,
+            words: vec![0; 250],
+        };
+        // the documented per-chunk Table-2 accounting constant
+        assert_eq!(m.encode().len() as u64, CHUNK_MSG_HEADER_BYTES + 250 * 8);
     }
 }

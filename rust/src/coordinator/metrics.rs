@@ -31,6 +31,11 @@ pub struct CpuEntry {
 #[derive(Default)]
 pub struct Metrics {
     entries: HashMap<(Node, Phase), CpuEntry>,
+    /// Peak bytes a node held in fan-in buffers at any point of the
+    /// run — the memory claim of the streaming aggregation pipeline
+    /// (monolithic fan-ins buffer O(n·d); chunked base-protocol
+    /// fan-ins O(d + n·shard)).
+    peak_buffered: HashMap<Node, u64>,
 }
 
 impl Metrics {
@@ -64,6 +69,18 @@ impl Metrics {
         out
     }
 
+    /// Record the current buffered-byte level of a node's fan-in
+    /// state; the meter keeps the maximum ever observed.
+    pub fn record_buffered(&mut self, node: Node, current_bytes: u64) {
+        let peak = self.peak_buffered.entry(node).or_default();
+        *peak = (*peak).max(current_bytes);
+    }
+
+    /// Peak fan-in buffer bytes observed at `node` (0 if never metered).
+    pub fn peak_buffered_bytes(&self, node: Node) -> u64 {
+        self.peak_buffered.get(&node).copied().unwrap_or(0)
+    }
+
     /// Fold another party's meters into this one (used by the driver to
     /// assemble one run-wide view from per-party meters).
     pub fn merge(&mut self, other: Metrics) {
@@ -71,6 +88,9 @@ impl Metrics {
             let slot = self.entries.entry((node, phase)).or_default();
             slot.total_ns += e.total_ns;
             slot.overhead_ns += e.overhead_ns;
+        }
+        for (node, peak) in other.peak_buffered {
+            self.record_buffered(node, peak);
         }
     }
 
@@ -128,6 +148,19 @@ mod tests {
         let (t, o) = m.avg_ms(&[client(1), client(2)], Phase::Testing);
         assert!(t >= 2.0, "avg total {t}");
         assert_eq!(o, 0.0);
+    }
+
+    #[test]
+    fn peak_buffered_keeps_maximum_and_merges() {
+        let mut m = Metrics::new();
+        m.record_buffered(AGGREGATOR, 100);
+        m.record_buffered(AGGREGATOR, 50);
+        assert_eq!(m.peak_buffered_bytes(AGGREGATOR), 100);
+        let mut other = Metrics::new();
+        other.record_buffered(AGGREGATOR, 300);
+        m.merge(other);
+        assert_eq!(m.peak_buffered_bytes(AGGREGATOR), 300);
+        assert_eq!(m.peak_buffered_bytes(client(0)), 0);
     }
 
     #[test]

@@ -10,15 +10,23 @@
 //!   [`parties::PassiveParty`], [`parties::Aggregator`]. The same
 //!   machines run on every transport.
 //! * [`messages`] — the §4 protocol messages and wire encoding.
+//! * [`streaming`] — the chunked streaming pipeline (`--chunk-words`/
+//!   `--shards`): shard layout, the sender-side chunk plan, and the
+//!   aggregator-side [`streaming::ChunkAssembler`] that folds masked
+//!   chunks shard by shard instead of buffering one full tensor per
+//!   sender. Bit-identical reports to the monolithic path; see the
+//!   module docs for the memory model and the dropout-purge
+//!   interaction.
 //! * [`driver`] — builds the party set, lays out the static round
 //!   schedule (setup → training with §5.1 key rotation → testing),
 //!   pumps the configured [`Transport`](crate::net::Transport), and
 //!   assembles a [`RunReport`].
 //! * [`backend`] — PJRT-artifact or pure-Rust compute.
 //! * [`metrics`] — per-(node, phase) CPU accounting with the security-
-//!   overhead bucket (Table 1).
+//!   overhead bucket (Table 1), plus the peak fan-in-buffer meter
+//!   behind the streaming pipeline's memory claim.
 //! * [`config`] — experiment configuration (§6.3's setup) including
-//!   the transport selection.
+//!   the transport selection and the streaming knobs.
 
 pub mod backend;
 pub mod config;
@@ -27,10 +35,14 @@ pub mod messages;
 pub mod metrics;
 pub mod parties;
 pub mod party;
+pub mod streaming;
 
 pub use backend::Backend;
 pub use config::{BackendKind, RunConfig, SecurityMode, TransportKind};
-pub use driver::{build, run_experiment, summarize, Built, Experiment, RunReport, Summary};
+pub use driver::{
+    build, run_experiment, summarize, validate_streaming, Built, Experiment, RunReport, Summary,
+};
 pub use messages::Msg;
 pub use metrics::Metrics;
 pub use party::{Note, Outbox, Party, RoundKind, RoundSpec, SETUP_ROUND};
+pub use streaming::StreamCfg;

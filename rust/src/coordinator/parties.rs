@@ -13,7 +13,9 @@
 //! (activation sums, gradient sums, key directories), the aggregator
 //! buffers contributions keyed by sender and combines them in client
 //! order, so float addition order — and therefore every output bit —
-//! is independent of message arrival order.
+//! is independent of message arrival order. Chunked fan-ins
+//! (`--chunk-words`, [`streaming`](super::streaming)) are exact-ℤ₂⁶⁴
+//! only, where wrap-addition is order-independent outright.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::time::Instant;
@@ -36,6 +38,7 @@ use super::config::SecurityMode;
 use super::messages::{Msg, WireKeys};
 use super::metrics::{client, Metrics, AGGREGATOR};
 use super::party::{Note, Outbox, Party, RoundKind, RoundSpec};
+use super::streaming::{chunk_plan, ChunkAssembler, ShardLayout, StreamCfg};
 
 /// Gradient-vector layout: every party reports a full-length flat
 /// gradient (Eq. 6's indicator zeroing what it doesn't own), so the
@@ -100,6 +103,52 @@ pub fn party_rng(seed: u64, client_idx: usize) -> DetRng {
 const TAG_ACTIVATION: u32 = 0;
 const TAG_GRADIENT: u32 = 1;
 
+/// Build the upload for one masked ℤ₂⁶⁴ tensor: a single monolithic
+/// message, or — when the streaming pipeline is on (`chunk_words`
+/// set) — the equivalent `MaskedChunk` stream, masked window by window
+/// through the seekable PRG so no full-tensor mask is ever
+/// materialized. Chunked and monolithic words are bit-identical
+/// element-wise; only the framing differs.
+fn masked_exact_msgs(
+    session: &ClientSession,
+    stream: StreamCfg,
+    round: u32,
+    from: u16,
+    tag: u32,
+    vals: &[f32],
+) -> Vec<Msg> {
+    match stream.chunk_words {
+        Some(cw) => {
+            let layout = ShardLayout::new(vals.len(), stream.shards);
+            let mask = session.total_mask_stream(round as u64, tag);
+            chunk_plan(layout, cw)
+                .into_iter()
+                .map(|c| Msg::MaskedChunk {
+                    round,
+                    from,
+                    tag: tag as u8,
+                    shard: c.shard as u16,
+                    offset: c.offset as u32,
+                    total: vals.len() as u32,
+                    words: session.mask_tensor_window(
+                        &mask,
+                        &vals[c.offset..c.offset + c.len],
+                        c.offset,
+                    ),
+                })
+                .collect()
+        }
+        None => {
+            let words = session.mask_tensor(vals, round as u64, tag);
+            vec![if tag == TAG_ACTIVATION {
+                Msg::MaskedActivation { round, from, words }
+            } else {
+                Msg::MaskedGradient { round, from, words }
+            }]
+        }
+    }
+}
+
 /// AAD used for sample-ID sealing.
 const BATCH_AAD: &[u8] = b"vfl-sa/batch-id/v1";
 
@@ -140,10 +189,14 @@ pub fn pad_directory(all: &[WireKeys], n: usize) -> Vec<PublishedKeys> {
 }
 
 /// Shamir-share our seed and seal one bundle per peer: the
-/// share-distribution leg of the dropout-tolerant setup phase.
+/// share-distribution leg of the dropout-tolerant setup phase. The
+/// message carries a binding commitment to the seed so the aggregator
+/// can verify any later reconstruction against what *this* client
+/// pinned — a corrupted surrendered share becomes a typed abort.
 fn seed_share_msg(session: &mut PartySession, rng: &mut DetRng, epoch: u64) -> Result<Msg> {
     let robust = session.robust_mut().context("seed shares need a robust session")?;
     let shares = robust.share_seed(rng);
+    let commitment = robust.commitment();
     let id = robust.inner.id;
     let n = robust.inner.n_clients;
     let mut sealed = vec![Vec::new(); n];
@@ -153,7 +206,7 @@ fn seed_share_msg(session: &mut PartySession, rng: &mut DetRng, epoch: u64) -> R
         }
         sealed[j] = dropout::seal_bundle(&robust.inner.channel_key(j), id, j, bundle);
     }
-    Ok(Msg::SeedShares { epoch, from: id as u16, sealed })
+    Ok(Msg::SeedShares { epoch, from: id as u16, commitment, sealed })
 }
 
 /// Unseal and store the bundles the aggregator relayed to us. Slots
@@ -224,6 +277,8 @@ pub struct ActiveParty<'e> {
     pub layout: GradLayout,
     /// Shamir threshold for dropout tolerance (None = base protocol).
     threshold: Option<usize>,
+    /// Streaming-pipeline parameters (monolithic when not chunked).
+    stream: StreamCfg,
     backend: Backend<'e>,
     metrics: Metrics,
     rng: DetRng,
@@ -244,12 +299,14 @@ pub struct ActiveParty<'e> {
 }
 
 impl<'e> ActiveParty<'e> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         data: ActiveData,
         holders: Vec<HashMap<u64, usize>>,
         cfg: ModelConfig,
         security: SecurityMode,
         threshold: Option<usize>,
+        stream: StreamCfg,
         seed: u64,
         backend: Backend<'e>,
     ) -> Self {
@@ -266,6 +323,7 @@ impl<'e> ActiveParty<'e> {
             security,
             layout,
             threshold,
+            stream,
             backend,
             metrics: Metrics::new(),
             rng: party_rng(seed, 0),
@@ -361,20 +419,24 @@ impl<'e> ActiveParty<'e> {
         x
     }
 
-    /// Mask an activation for upload (Eq. 2). Returns the message.
-    pub fn masked_activation(&self, round: u32, z: &Mat) -> Msg {
+    /// Mask an activation for upload (Eq. 2): one monolithic message,
+    /// or the chunked stream when the streaming pipeline is on.
+    pub fn masked_activation(&self, round: u32, z: &Mat) -> Vec<Msg> {
         match self.security {
-            SecurityMode::SecureExact => {
-                let words = self.sess().mask_tensor(&z.data, round as u64, TAG_ACTIVATION);
-                Msg::MaskedActivation { round, from: self.id as u16, words }
-            }
+            SecurityMode::SecureExact => masked_exact_msgs(
+                self.sess(),
+                self.stream,
+                round,
+                self.id as u16,
+                TAG_ACTIVATION,
+                &z.data,
+            ),
             SecurityMode::SecureFloat => {
-                let vals =
-                    self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
-                Msg::FloatActivation { round, from: self.id as u16, vals }
+                let vals = self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals }]
             }
             SecurityMode::Plain => {
-                Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }]
             }
         }
     }
@@ -482,9 +544,11 @@ impl<'e> ActiveParty<'e> {
         self.rec(t0, false);
         let za = za?;
         let t0 = Instant::now();
-        let msg = self.masked_activation(self.round, &za);
+        let msgs = self.masked_activation(self.round, &za);
         self.rec(t0, self.security.is_secure());
-        out.send(Addr::Aggregator, msg);
+        for msg in msgs {
+            out.send(Addr::Aggregator, msg);
+        }
         Ok(())
     }
 
@@ -654,6 +718,8 @@ pub struct PassiveParty<'e> {
     pub weights: Mat,
     /// Shamir threshold for dropout tolerance (None = base protocol).
     threshold: Option<usize>,
+    /// Streaming-pipeline parameters (monolithic when not chunked).
+    stream: StreamCfg,
     backend: Backend<'e>,
     metrics: Metrics,
     rng: DetRng,
@@ -669,12 +735,14 @@ pub struct PassiveParty<'e> {
 }
 
 impl<'e> PassiveParty<'e> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
         data: PassiveData,
         cfg: &ModelConfig,
         security: SecurityMode,
         threshold: Option<usize>,
+        stream: StreamCfg,
         seed: u64,
         backend: Backend<'e>,
     ) -> Self {
@@ -691,6 +759,7 @@ impl<'e> PassiveParty<'e> {
             layout: GradLayout::new(cfg),
             weights: Mat::zeros(dim, cfg.hidden),
             threshold,
+            stream,
             backend,
             metrics: Metrics::new(),
             rng: party_rng(seed, id),
@@ -768,43 +837,51 @@ impl<'e> PassiveParty<'e> {
         self.last_batch_x.as_ref().expect("forward ran")
     }
 
-    /// Mask an activation for upload (Eq. 2).
-    pub fn masked_activation(&self, round: u32, z: &Mat) -> Msg {
+    /// Mask an activation for upload (Eq. 2): one monolithic message,
+    /// or the chunked stream when the streaming pipeline is on.
+    pub fn masked_activation(&self, round: u32, z: &Mat) -> Vec<Msg> {
         match self.security {
-            SecurityMode::SecureExact => {
-                let words = self.sess().mask_tensor(&z.data, round as u64, TAG_ACTIVATION);
-                Msg::MaskedActivation { round, from: self.id as u16, words }
-            }
+            SecurityMode::SecureExact => masked_exact_msgs(
+                self.sess(),
+                self.stream,
+                round,
+                self.id as u16,
+                TAG_ACTIVATION,
+                &z.data,
+            ),
             SecurityMode::SecureFloat => {
-                let vals =
-                    self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
-                Msg::FloatActivation { round, from: self.id as u16, vals }
+                let vals = self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals }]
             }
             SecurityMode::Plain => {
-                Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }]
             }
         }
     }
 
     /// Embed the local weight gradient into the full-length layout and
-    /// mask it (Eq. 6).
-    pub fn masked_gradient(&self, round: u32, dw: &Mat) -> Msg {
+    /// mask it (Eq. 6), monolithic or chunked.
+    pub fn masked_gradient(&self, round: u32, dw: &Mat) -> Vec<Msg> {
         let l = self.layout.total;
         let (off, len) = self.layout.groups[self.group];
         assert_eq!(dw.data.len(), len);
         let mut full = vec![0.0f32; l];
         full[off..off + len].copy_from_slice(&dw.data);
         match self.security {
-            SecurityMode::SecureExact => {
-                let words = self.sess().mask_tensor(&full, round as u64, TAG_GRADIENT);
-                Msg::MaskedGradient { round, from: self.id as u16, words }
-            }
+            SecurityMode::SecureExact => masked_exact_msgs(
+                self.sess(),
+                self.stream,
+                round,
+                self.id as u16,
+                TAG_GRADIENT,
+                &full,
+            ),
             SecurityMode::SecureFloat => {
                 let vals = self.sess().mask_tensor_f32(&full, round as u64, TAG_GRADIENT);
-                Msg::FloatGradient { round, from: self.id as u16, vals }
+                vec![Msg::FloatGradient { round, from: self.id as u16, vals }]
             }
             SecurityMode::Plain => {
-                Msg::FloatGradient { round, from: self.id as u16, vals: full }
+                vec![Msg::FloatGradient { round, from: self.id as u16, vals: full }]
             }
         }
     }
@@ -828,9 +905,11 @@ impl<'e> PassiveParty<'e> {
         self.rec(t0, false);
         let z = z?;
         let t0 = Instant::now();
-        let msg = self.masked_activation(self.round, &z);
+        let msgs = self.masked_activation(self.round, &z);
         self.rec(t0, self.security.is_secure());
-        out.send(Addr::Aggregator, msg);
+        for msg in msgs {
+            out.send(Addr::Aggregator, msg);
+        }
         Ok(())
     }
 }
@@ -917,9 +996,11 @@ impl<'e> Party for PassiveParty<'e> {
                 self.rec(t0, false);
                 let (dw, _) = bwd?;
                 let t0 = Instant::now();
-                let msg = self.masked_gradient(self.round, &dw);
+                let msgs = self.masked_gradient(self.round, &dw);
                 self.rec(t0, self.security.is_secure());
-                out.send(Addr::Aggregator, msg);
+                for msg in msgs {
+                    out.send(Addr::Aggregator, msg);
+                }
             }
             m => bail!("passive party {}: unexpected message {m:?}", self.id),
         }
@@ -943,9 +1024,15 @@ impl<'e> Party for PassiveParty<'e> {
 /// vectors (masks cancel per Eq. 4-5), and never sees an individual
 /// party's plaintext tensor.
 ///
-/// Fan-in points buffer contributions in [`BTreeMap`]s keyed by sender
-/// so sums run in client order regardless of arrival order — the
-/// transport-independence invariant.
+/// Monolithic fan-in points buffer contributions in [`BTreeMap`]s
+/// keyed by sender so sums run in client order regardless of arrival
+/// order — the transport-independence invariant. Chunked fan-ins
+/// (`--chunk-words`) run through a [`ChunkAssembler`] per tensor tag
+/// instead: ℤ₂⁶⁴ wrap-addition is order-independent, so shard-level
+/// folding is bit-identical to the buffered sum while holding
+/// O(d + n·shard) instead of O(n·d) in the base protocol (see
+/// [`streaming`](super::streaming) for the memory model and the
+/// dropout-tolerant exception).
 pub struct Aggregator<'e> {
     pub n_clients: usize,
     pub hidden: usize,
@@ -974,6 +1061,9 @@ pub struct Aggregator<'e> {
     acts_float: BTreeMap<u16, Vec<f32>>,
     grads_exact: BTreeMap<u16, Vec<u64>>,
     grads_float: BTreeMap<u16, Vec<f32>>,
+    /// Streaming fan-ins: chunked masked tensors folded shard by shard.
+    acts_asm: ChunkAssembler,
+    grads_asm: ChunkAssembler,
     /// This round's fan-ins were summed and consumed (the buffers
     /// empty out on consumption, so stall diagnosis needs the flags).
     acts_done: bool,
@@ -994,6 +1084,10 @@ pub struct Aggregator<'e> {
     directory_sent: bool,
     /// Seed-share bundles collected during setup: from → per-recipient.
     setup_shares: BTreeMap<u16, Vec<Vec<u8>>>,
+    /// Seed commitments pinned at setup (from → commitment): any
+    /// reconstructed seed must match, or recovery aborts with
+    /// [`DropoutError::SeedCommitmentMismatch`].
+    commitments: BTreeMap<u16, [u8; 32]>,
     /// Dropped clients of the current epoch with rebuilt sessions: the
     /// source of the mask corrections added at every fan-in.
     recovered: BTreeMap<u16, ClientSession>,
@@ -1012,11 +1106,16 @@ impl<'e> Aggregator<'e> {
         backend: Backend<'e>,
         groups: Vec<usize>,
         threshold: Option<usize>,
+        stream: StreamCfg,
     ) -> Self {
         // aggregator receives the initial global module from the active
         // party's init (same seed → same init as ModelParams::init)
         let params = ModelParams::init(cfg, seed);
         assert_eq!(groups.len(), cfg.n_clients() - 1, "one group per passive client");
+        // exact dropout purge needs per-sender separability until the
+        // fan-in is consumed, so tolerant runs defer shard commitment
+        let revocable = threshold.is_some();
+        let shards = stream.shards.max(1);
         Aggregator {
             n_clients: cfg.n_clients(),
             hidden: cfg.hidden,
@@ -1041,6 +1140,8 @@ impl<'e> Aggregator<'e> {
             acts_float: BTreeMap::new(),
             grads_exact: BTreeMap::new(),
             grads_float: BTreeMap::new(),
+            acts_asm: ChunkAssembler::new(revocable, shards),
+            grads_asm: ChunkAssembler::new(revocable, shards),
             acts_done: false,
             grads_done: false,
             threshold,
@@ -1050,6 +1151,7 @@ impl<'e> Aggregator<'e> {
             in_setup: false,
             directory_sent: false,
             setup_shares: BTreeMap::new(),
+            commitments: BTreeMap::new(),
             recovered: BTreeMap::new(),
             unrecovered: BTreeSet::new(),
             awaiting_surrender: BTreeSet::new(),
@@ -1059,6 +1161,18 @@ impl<'e> Aggregator<'e> {
 
     fn rec(&mut self, t0: Instant, overhead: bool) {
         self.metrics.record(AGGREGATOR, self.phase, t0.elapsed().as_nanos(), overhead);
+    }
+
+    /// Meter the bytes currently buffered across every fan-in (the
+    /// peak is the streaming pipeline's memory claim, asserted in
+    /// `tests/chunk_equivalence.rs`).
+    fn note_buffered(&mut self) {
+        let mono = self.acts_exact.values().map(|v| v.len() * 8).sum::<usize>()
+            + self.acts_float.values().map(|v| v.len() * 4).sum::<usize>()
+            + self.grads_exact.values().map(|v| v.len() * 8).sum::<usize>()
+            + self.grads_float.values().map(|v| v.len() * 4).sum::<usize>();
+        let cur = mono as u64 + self.acts_asm.buffered_bytes() + self.grads_asm.buffered_bytes();
+        self.metrics.record_buffered(AGGREGATOR, cur);
     }
 
     /// Wrap-sum equal-length masked word vectors (Eq. 5's fan-in).
@@ -1170,20 +1284,33 @@ impl<'e> Aggregator<'e> {
     /// — then either run the global training step and broadcast ∂L/∂z,
     /// or (testing) predict and reply to the active party.
     fn maybe_sum_activations(&mut self, out: &mut Outbox) -> Result<()> {
-        if !self.unrecovered.is_empty()
-            || self.acts_exact.len() + self.acts_float.len() < self.live.len()
-        {
+        let contributed =
+            self.acts_exact.len() + self.acts_float.len() + self.acts_asm.complete_count();
+        if !self.unrecovered.is_empty() || contributed < self.live.len() {
             return Ok(());
         }
         let batch = self.cfg.batch_size;
         self.acts_done = true;
         // BTreeMap order = client order: float addition order (and thus
-        // every output bit) is the same on every transport.
+        // every output bit) is the same on every transport. The chunked
+        // sum is ℤ₂⁶⁴-only, where addition order is immaterial.
         let exact: Vec<Vec<u64>> = std::mem::take(&mut self.acts_exact).into_values().collect();
         let float: Vec<Vec<f32>> = std::mem::take(&mut self.acts_float).into_values().collect();
+        let chunked = self.acts_asm.take_sum();
         let t0 = Instant::now();
-        let z = if !exact.is_empty() {
-            let mut acc = Self::wrap_sum(&exact);
+        let z = if !exact.is_empty() || chunked.is_some() {
+            let mut acc = match chunked {
+                Some(mut g) => {
+                    for p in &exact {
+                        assert_eq!(p.len(), g.len(), "masked vectors must be equal length");
+                        for (a, v) in g.iter_mut().zip(p) {
+                            *a = a.wrapping_add(*v);
+                        }
+                    }
+                    g
+                }
+                None => Self::wrap_sum(&exact),
+            };
             if let Some(corr) =
                 self.dropped_mask_correction(self.round as u64, TAG_ACTIVATION, acc.len())
             {
@@ -1230,19 +1357,30 @@ impl<'e> Aggregator<'e> {
     /// forward to the active party.
     fn maybe_sum_gradients(&mut self, out: &mut Outbox) {
         let n_passive = self.live_passives();
-        if n_passive == 0
-            || !self.unrecovered.is_empty()
-            || self.grads_exact.len() + self.grads_float.len() < n_passive
-        {
+        let contributed =
+            self.grads_exact.len() + self.grads_float.len() + self.grads_asm.complete_count();
+        if n_passive == 0 || !self.unrecovered.is_empty() || contributed < n_passive {
             return;
         }
         self.grads_done = true;
         let exact: Vec<Vec<u64>> = std::mem::take(&mut self.grads_exact).into_values().collect();
         let float: Vec<Vec<f32>> = std::mem::take(&mut self.grads_float).into_values().collect();
+        let chunked = self.grads_asm.take_sum();
         let round = self.round;
         let t0 = Instant::now();
-        let msg = if !exact.is_empty() {
-            let mut acc = Self::wrap_sum(&exact);
+        let msg = if !exact.is_empty() || chunked.is_some() {
+            let mut acc = match chunked {
+                Some(mut g) => {
+                    for p in &exact {
+                        assert_eq!(p.len(), g.len(), "masked vectors must be equal length");
+                        for (a, v) in g.iter_mut().zip(p) {
+                            *a = a.wrapping_add(*v);
+                        }
+                    }
+                    g
+                }
+                None => Self::wrap_sum(&exact),
+            };
             if let Some(corr) =
                 self.dropped_mask_correction(round as u64, TAG_GRADIENT, acc.len())
             {
@@ -1280,6 +1418,10 @@ impl<'e> Aggregator<'e> {
             self.acts_float.remove(g);
             self.grads_exact.remove(g);
             self.grads_float.remove(g);
+            // chunked contributions are revocable in tolerant runs:
+            // held shards and in-flight buffers vanish with the sender
+            self.acts_asm.purge(*g);
+            self.grads_asm.purge(*g);
         }
         if !self.live.contains(&0) {
             bail!(DropoutError::ActivePartyDropped);
@@ -1321,6 +1463,14 @@ impl<'e> Aggregator<'e> {
             // transport, so reconstruction is deterministic
             let bundles: Vec<Vec<Share>> = sources.into_values().take(t).collect();
             let seed = dropout::reconstruct_seed(&bundles)?;
+            // verify against the commitment the dropped client pinned
+            // at setup: a corrupted surrendered share must abort, not
+            // silently mis-correct every fan-in of the epoch
+            match self.commitments.get(&d) {
+                Some(c) if dropout::seed_commitment(&seed) == *c => {}
+                Some(_) => bail!(DropoutError::SeedCommitmentMismatch { client: d }),
+                None => bail!("no pinned seed commitment for dropped client {d}"),
+            }
             let session = dropout::rebuild_session(
                 seed,
                 d as usize,
@@ -1388,8 +1538,15 @@ impl<'e> Aggregator<'e> {
             bail!(DropoutError::ActivePartyDropped);
         }
         if !self.acts_done {
-            let acts: BTreeSet<u16> =
-                self.acts_exact.keys().chain(self.acts_float.keys()).copied().collect();
+            // chunk senders count only once complete: a half-streamed
+            // tensor is a stalled sender, exactly like a missing one
+            let acts: BTreeSet<u16> = self
+                .acts_exact
+                .keys()
+                .chain(self.acts_float.keys())
+                .copied()
+                .chain(self.acts_asm.complete_senders())
+                .collect();
             if acts.len() < self.live.len() {
                 let gone: BTreeSet<u16> =
                     self.live.iter().copied().filter(|c| !acts.contains(c)).collect();
@@ -1401,8 +1558,13 @@ impl<'e> Aggregator<'e> {
             return Ok(());
         }
         if self.kind == RoundKind::Train && !self.grads_done {
-            let grads: BTreeSet<u16> =
-                self.grads_exact.keys().chain(self.grads_float.keys()).copied().collect();
+            let grads: BTreeSet<u16> = self
+                .grads_exact
+                .keys()
+                .chain(self.grads_float.keys())
+                .copied()
+                .chain(self.grads_asm.complete_senders())
+                .collect();
             if grads.len() < self.live_passives() {
                 let gone: BTreeSet<u16> = self
                     .live
@@ -1424,6 +1586,7 @@ impl<'e> Aggregator<'e> {
     fn begin_key_exchange(&mut self, out: &mut Outbox) {
         self.keys.clear();
         self.setup_shares.clear();
+        self.commitments.clear();
         self.directory_sent = false;
         self.in_setup = true;
         for &c in &self.live {
@@ -1500,6 +1663,8 @@ impl<'e> Party for Aggregator<'e> {
         self.acts_float.clear();
         self.grads_exact.clear();
         self.grads_float.clear();
+        self.acts_asm.reset();
+        self.grads_asm.reset();
         self.acts_done = false;
         self.grads_done = false;
         if spec.kind == RoundKind::Setup || spec.rotate {
@@ -1522,12 +1687,13 @@ impl<'e> Party for Aggregator<'e> {
                 self.keys.push(k);
                 self.maybe_broadcast_directory(out);
             }
-            Msg::SeedShares { epoch, from, sealed } => {
+            Msg::SeedShares { epoch, from, commitment, sealed } => {
                 // a re-key abandons the poisoned epoch: shares for it
                 // that were still in flight must not mix into the new
                 // collection (directory_sent is false between the
                 // re-key request and the fresh directory)
                 if self.directory_sent && epoch == self.session_epoch {
+                    self.commitments.insert(from, commitment);
                     self.setup_shares.insert(from, sealed);
                     self.maybe_relay_shares(out);
                 }
@@ -1565,19 +1731,41 @@ impl<'e> Party for Aggregator<'e> {
             }
             Msg::MaskedActivation { from, words, .. } => {
                 self.acts_exact.insert(from, words);
+                self.note_buffered();
                 self.maybe_sum_activations(out)?;
             }
             Msg::FloatActivation { from, vals, .. } => {
                 self.acts_float.insert(from, vals);
+                self.note_buffered();
                 self.maybe_sum_activations(out)?;
             }
             Msg::MaskedGradient { from, words, .. } => {
                 self.grads_exact.insert(from, words);
+                self.note_buffered();
                 self.maybe_sum_gradients(out);
             }
             Msg::FloatGradient { from, vals, .. } => {
                 self.grads_float.insert(from, vals);
+                self.note_buffered();
                 self.maybe_sum_gradients(out);
+            }
+            Msg::MaskedChunk { from, tag, shard, offset, total, words, .. } => {
+                let t0 = Instant::now();
+                match tag as u32 {
+                    TAG_ACTIVATION => {
+                        self.acts_asm.add_chunk(from, shard, offset, total, &words)?;
+                        self.rec(t0, false);
+                        self.note_buffered();
+                        self.maybe_sum_activations(out)?;
+                    }
+                    TAG_GRADIENT => {
+                        self.grads_asm.add_chunk(from, shard, offset, total, &words)?;
+                        self.rec(t0, false);
+                        self.note_buffered();
+                        self.maybe_sum_gradients(out);
+                    }
+                    t => bail!("masked chunk with unknown tensor tag {t}"),
+                }
             }
             m => bail!("aggregator: unexpected message {m:?}"),
         }

@@ -1,0 +1,544 @@
+//! The chunked streaming pipeline: shard layout, the sender-side chunk
+//! plan, and the aggregator-side [`ChunkAssembler`].
+//!
+//! ## Memory model
+//!
+//! The monolithic fan-in buffers one full-length ℤ₂⁶⁴ vector per
+//! sender until every live sender contributed — O(n·d) peak at the
+//! aggregator. The streaming pipeline splits each tensor into
+//! `shards` contiguous shards, streamed as chunks of ≤ `chunk_words`
+//! words each, and the aggregator folds arriving chunks into one
+//! per-sender *current-shard* buffer:
+//!
+//! * **Base protocol** (no dropout tolerance): a completed shard is
+//!   committed into the single global accumulator immediately —
+//!   ℤ₂⁶⁴ wrap-addition is order-independent, so early commitment is
+//!   bit-identical to the monolithic sum. Peak memory is
+//!   O(d + n · shard), the O(n·chunk + d) regime the streaming
+//!   refactor exists for.
+//! * **Dropout-tolerant runs** (`shamir_threshold` set): commitment is
+//!   deferred — completed shards are *held per sender* until the whole
+//!   fan-in completes, because a sender may be declared dropped at any
+//!   time before the sum is consumed (even with a complete
+//!   contribution buffered, e.g. when it fails to surrender shares)
+//!   and the recovery math re-adds the dropped client's entire total
+//!   mask, which is only sound if its data contributed nothing. Exact
+//!   purge therefore requires per-sender separability until the sum —
+//!   peak memory matches the monolithic path, and the chunked dropout
+//!   run stays bit-identical to the zero-contribution twin.
+//!
+//! A sender whose chunk stream has a gap (a lost chunk under fault
+//! injection) is marked bad, its buffered state discarded, and its
+//! remaining chunks ignored: at the next quiescence probe it is
+//! declared dropped (tolerant runs) or the round aborts as stalled
+//! (base protocol — where nothing was committed for it only if the
+//! run aborts anyway, which it does: an incomplete fan-in can never
+//! complete without recovery).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+/// Chunking parameters, carried from [`RunConfig`](super::RunConfig)
+/// into every party. `chunk_words: None` = the monolithic path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamCfg {
+    /// Maximum ℤ₂⁶⁴ words per [`MaskedChunk`](super::messages::Msg)
+    /// payload. `None` disables chunking entirely.
+    pub chunk_words: Option<usize>,
+    /// Shards per tensor (≥ 1). Only meaningful with `chunk_words`.
+    pub shards: usize,
+}
+
+impl StreamCfg {
+    pub fn monolithic() -> Self {
+        StreamCfg { chunk_words: None, shards: 1 }
+    }
+
+    pub fn chunked(chunk_words: usize, shards: usize) -> Self {
+        StreamCfg { chunk_words: Some(chunk_words), shards }
+    }
+}
+
+/// Wire-header bytes of one `MaskedChunk` message: tag(1) + round(4) +
+/// from(2) + tensor-tag(1) + shard(2) + offset(4) + total(4) +
+/// word-count(4). The byte-accounting rule for Table 2 lives with the
+/// [`Network`](crate::net::Network) counters; [`chunk_overhead_bytes`]
+/// computes the exact delta.
+pub const CHUNK_MSG_HEADER_BYTES: u64 = 22;
+
+/// Wire-header bytes of a monolithic `MaskedActivation` /
+/// `MaskedGradient`: tag(1) + round(4) + from(2) + word-count(4).
+pub const MONO_MSG_HEADER_BYTES: u64 = 11;
+
+/// How a tensor of `total` words is cut into `shards` contiguous
+/// shards: the first `total % shards` shards get one extra word, so
+/// shard sizes differ by at most one and every shard is non-empty
+/// (requires `1 ≤ shards ≤ total`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    pub total: usize,
+    pub shards: usize,
+}
+
+impl ShardLayout {
+    pub fn new(total: usize, shards: usize) -> Self {
+        assert!(shards >= 1, "shard count must be ≥ 1");
+        assert!(shards <= total, "shard count {shards} exceeds tensor length {total}");
+        ShardLayout { total, shards }
+    }
+
+    /// (start word, length) of shard `k`.
+    pub fn shard_range(&self, k: usize) -> (usize, usize) {
+        assert!(k < self.shards);
+        let base = self.total / self.shards;
+        let rem = self.total % self.shards;
+        let start = k * base + k.min(rem);
+        let len = base + usize::from(k < rem);
+        (start, len)
+    }
+
+    /// The shard containing global word `w`.
+    pub fn shard_of(&self, w: usize) -> usize {
+        assert!(w < self.total);
+        let base = self.total / self.shards;
+        let rem = self.total % self.shards;
+        let boundary = rem * (base + 1);
+        if w < boundary {
+            w / (base + 1)
+        } else {
+            rem + (w - boundary) / base
+        }
+    }
+}
+
+/// One planned chunk: shard index, global word offset, word count.
+/// Chunks never cross a shard boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub shard: usize,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// The chunk sequence for one tensor: shards in order, each cut into
+/// `chunk_words`-sized chunks (the last chunk of a shard may be
+/// shorter).
+pub fn chunk_plan(layout: ShardLayout, chunk_words: usize) -> Vec<Chunk> {
+    assert!(chunk_words >= 1, "chunk size must be ≥ 1");
+    let mut plan = Vec::new();
+    for k in 0..layout.shards {
+        let (start, len) = layout.shard_range(k);
+        let mut off = 0;
+        while off < len {
+            let n = chunk_words.min(len - off);
+            plan.push(Chunk { shard: k, offset: start + off, len: n });
+            off += n;
+        }
+    }
+    plan
+}
+
+/// Number of chunk messages one tensor of `total` words becomes.
+pub fn chunk_count(total: usize, shards: usize, chunk_words: usize) -> u64 {
+    let layout = ShardLayout::new(total, shards);
+    (0..shards)
+        .map(|k| {
+            let (_, len) = layout.shard_range(k);
+            len.div_ceil(chunk_words) as u64
+        })
+        .sum()
+}
+
+/// The exact Table-2 byte delta of sending one `total`-word tensor
+/// chunked instead of monolithic: both carry `8 · total` payload
+/// bytes, the monolithic message adds one 11-byte header, the chunked
+/// stream one 22-byte header per chunk.
+pub fn chunk_overhead_bytes(total: usize, shards: usize, chunk_words: usize) -> u64 {
+    CHUNK_MSG_HEADER_BYTES * chunk_count(total, shards, chunk_words) - MONO_MSG_HEADER_BYTES
+}
+
+// ---------------------------------------------------------------------------
+// Aggregator-side assembly
+// ---------------------------------------------------------------------------
+
+/// Per-sender assembly state.
+struct SenderState {
+    /// Next expected global word (chunks ride per-sender FIFO order).
+    cursor: usize,
+    /// Current shard index.
+    shard: usize,
+    /// Partial sum of the current shard (filled front to back).
+    buf: Vec<u64>,
+    /// Completed shards awaiting fan-in completion (revocable mode
+    /// only): (shard start, words).
+    held: Vec<(usize, Vec<u64>)>,
+}
+
+/// Folds one fan-in's `MaskedChunk` stream into a single global
+/// accumulator, with per-sender shard staging (see the module docs for
+/// the memory model and the revocable/commit split).
+pub struct ChunkAssembler {
+    /// Deferred commitment for exact dropout purge (threshold set).
+    revocable: bool,
+    shards: usize,
+    layout: Option<ShardLayout>,
+    global: Vec<u64>,
+    senders: BTreeMap<u16, SenderState>,
+    complete: BTreeSet<u16>,
+    /// Senders whose stream broke (gap/overlap): state discarded,
+    /// further chunks ignored until the next round reset.
+    bad: BTreeSet<u16>,
+}
+
+impl ChunkAssembler {
+    pub fn new(revocable: bool, shards: usize) -> Self {
+        assert!(shards >= 1);
+        ChunkAssembler {
+            revocable,
+            shards,
+            layout: None,
+            global: Vec::new(),
+            senders: BTreeMap::new(),
+            complete: BTreeSet::new(),
+            bad: BTreeSet::new(),
+        }
+    }
+
+    /// Reset for a new round.
+    pub fn reset(&mut self) {
+        self.layout = None;
+        self.global = Vec::new();
+        self.senders.clear();
+        self.complete.clear();
+        self.bad.clear();
+    }
+
+    fn wrap_add_at(dst: &mut [u64], at: usize, src: &[u64]) {
+        for (d, s) in dst[at..at + src.len()].iter_mut().zip(src) {
+            *d = d.wrapping_add(*s);
+        }
+    }
+
+    /// Fold one chunk in. A malformed *message* (inconsistent total,
+    /// shard/offset outside the layout) is a protocol error and fails
+    /// the run; a *gap* in an otherwise well-formed per-sender stream
+    /// is a lost message — the sender is marked bad and silently
+    /// ignored so quiescence-based dropout declaration can handle it.
+    pub fn add_chunk(
+        &mut self,
+        from: u16,
+        shard: u16,
+        offset: u32,
+        total: u32,
+        words: &[u64],
+    ) -> Result<()> {
+        if self.bad.contains(&from) {
+            return Ok(());
+        }
+        let total = total as usize;
+        if total == 0 || words.is_empty() {
+            bail!("empty masked chunk from client {from}");
+        }
+        let layout = match self.layout {
+            Some(l) => {
+                if l.total != total {
+                    bail!("chunk total {total} from client {from} != fan-in total {}", l.total);
+                }
+                l
+            }
+            None => {
+                if self.shards > total {
+                    bail!("{} shards exceed tensor length {total}", self.shards);
+                }
+                let l = ShardLayout::new(total, self.shards);
+                self.layout = Some(l);
+                self.global = vec![0u64; total];
+                l
+            }
+        };
+        let offset = offset as usize;
+        let (shard, offset_ok) = {
+            let s = shard as usize;
+            if s >= layout.shards || offset >= total {
+                bail!("chunk shard {s}/offset {offset} out of range from client {from}");
+            }
+            let (start, len) = layout.shard_range(s);
+            (s, offset >= start && offset + words.len() <= start + len)
+        };
+        if !offset_ok {
+            bail!("chunk crosses shard boundary (client {from}, shard {shard}, offset {offset})");
+        }
+        if self.complete.contains(&from) {
+            bail!("chunk after completed stream from client {from}");
+        }
+
+        let cursor = self.senders.get(&from).map(|s| s.cursor).unwrap_or(0);
+        if offset != cursor || shard != layout.shard_of(cursor) {
+            // a hole in the stream (lost chunk): discard and let
+            // dropout handling (or a stalled-round abort) take over
+            self.senders.remove(&from);
+            self.bad.insert(from);
+            return Ok(());
+        }
+        let (shard_start, shard_len) = layout.shard_range(shard);
+        let (finished_shard, finished_sender) = {
+            let st = self.senders.entry(from).or_insert_with(|| SenderState {
+                cursor: 0,
+                shard: 0,
+                buf: Vec::new(),
+                held: Vec::new(),
+            });
+            if st.buf.is_empty() {
+                st.buf = vec![0u64; shard_len];
+                st.shard = shard;
+            }
+            Self::wrap_add_at(&mut st.buf, st.cursor - shard_start, words);
+            st.cursor += words.len();
+            let fs = if st.cursor == shard_start + shard_len {
+                // shard complete: commit now (base protocol) or hold
+                // for the fan-in barrier (revocable mode)
+                Some(std::mem::take(&mut st.buf))
+            } else {
+                None
+            };
+            (fs, st.cursor == total)
+        };
+        if let Some(buf) = finished_shard {
+            if self.revocable {
+                self.senders.get_mut(&from).expect("sender state").held.push((shard_start, buf));
+            } else {
+                Self::wrap_add_at(&mut self.global, shard_start, &buf);
+            }
+        }
+        if finished_sender {
+            self.complete.insert(from);
+            if !self.revocable {
+                self.senders.remove(&from);
+            }
+        }
+        Ok(())
+    }
+
+    /// Senders whose whole tensor arrived.
+    pub fn complete_count(&self) -> usize {
+        self.complete.len()
+    }
+
+    pub fn complete_senders(&self) -> impl Iterator<Item = u16> + '_ {
+        self.complete.iter().copied()
+    }
+
+    /// Discard everything a (declared-dropped) sender buffered. In
+    /// revocable mode this removes its *entire* contribution — the
+    /// invariant the recovery mask-correction relies on. Only reachable
+    /// in revocable mode: the base protocol never declares dropouts.
+    pub fn purge(&mut self, from: u16) {
+        debug_assert!(
+            self.revocable || !self.complete.contains(&from),
+            "purging a committed sender from a non-revocable assembler"
+        );
+        self.senders.remove(&from);
+        self.complete.remove(&from);
+        self.bad.remove(&from);
+    }
+
+    /// Consume the fan-in: fold every held shard (sender order, though
+    /// ℤ₂⁶⁴ addition makes the order immaterial) and hand back the
+    /// accumulated sum. `None` when no chunk traffic arrived (the
+    /// monolithic or float path carried this round).
+    pub fn take_sum(&mut self) -> Option<Vec<u64>> {
+        self.layout?;
+        let mut global = std::mem::take(&mut self.global);
+        for (_, st) in std::mem::take(&mut self.senders) {
+            debug_assert!(st.buf.is_empty(), "consuming a fan-in with an incomplete shard");
+            for (start, buf) in st.held {
+                Self::wrap_add_at(&mut global, start, &buf);
+            }
+        }
+        self.reset();
+        Some(global)
+    }
+
+    /// Bytes currently buffered across the global accumulator, shard
+    /// buffers, and held shards — the quantity behind the streaming
+    /// pipeline's peak-memory claim (metered into
+    /// [`Metrics`](super::Metrics) by the aggregator).
+    pub fn buffered_bytes(&self) -> u64 {
+        let sender_words: usize = self
+            .senders
+            .values()
+            .map(|s| s.buf.len() + s.held.iter().map(|(_, h)| h.len()).sum::<usize>())
+            .sum();
+        ((self.global.len() + sender_words) * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_layout_tiles_exactly() {
+        for (total, shards) in [(10, 1), (10, 3), (10, 10), (16384, 7), (5184, 4), (3, 2)] {
+            let l = ShardLayout::new(total, shards);
+            let mut covered = 0usize;
+            for k in 0..shards {
+                let (start, len) = l.shard_range(k);
+                assert_eq!(start, covered, "shards must be contiguous");
+                assert!(len >= 1, "every shard non-empty");
+                for w in start..start + len {
+                    assert_eq!(l.shard_of(w), k, "total={total} shards={shards} w={w}");
+                }
+                covered += len;
+            }
+            assert_eq!(covered, total);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn more_shards_than_words_rejected() {
+        ShardLayout::new(3, 4);
+    }
+
+    #[test]
+    fn chunk_plan_covers_tensor_within_shards() {
+        for (total, shards, cw) in [(100, 1, 7), (100, 3, 7), (100, 3, 1000), (7, 7, 2)] {
+            let layout = ShardLayout::new(total, shards);
+            let plan = chunk_plan(layout, cw);
+            assert_eq!(plan.len() as u64, chunk_count(total, shards, cw));
+            let mut cursor = 0usize;
+            for c in &plan {
+                assert_eq!(c.offset, cursor, "chunks in stream order");
+                assert!(c.len <= cw);
+                let (start, len) = layout.shard_range(c.shard);
+                assert!(c.offset >= start && c.offset + c.len <= start + len, "within shard");
+                cursor += c.len;
+            }
+            assert_eq!(cursor, total);
+        }
+    }
+
+    fn feed(asm: &mut ChunkAssembler, from: u16, layout: ShardLayout, cw: usize, vals: &[u64]) {
+        for c in chunk_plan(layout, cw) {
+            asm.add_chunk(
+                from,
+                c.shard as u16,
+                c.offset as u32,
+                layout.total as u32,
+                &vals[c.offset..c.offset + c.len],
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn assembler_sums_match_direct_sum_both_modes() {
+        let total = 37;
+        let layout = ShardLayout::new(total, 4);
+        let tensors: Vec<Vec<u64>> = (0..3u64)
+            .map(|i| (0..total as u64).map(|j| i.wrapping_mul(1 << 40).wrapping_add(j)).collect())
+            .collect();
+        let mut want = vec![0u64; total];
+        for t in &tensors {
+            for (w, v) in want.iter_mut().zip(t) {
+                *w = w.wrapping_add(*v);
+            }
+        }
+        for revocable in [false, true] {
+            let mut asm = ChunkAssembler::new(revocable, 4);
+            for (i, t) in tensors.iter().enumerate() {
+                feed(&mut asm, i as u16, layout, 5, t);
+            }
+            assert_eq!(asm.complete_count(), 3);
+            assert_eq!(asm.take_sum().unwrap(), want, "revocable={revocable}");
+            assert!(asm.take_sum().is_none(), "take_sum resets");
+        }
+    }
+
+    #[test]
+    fn revocable_purge_removes_whole_contribution() {
+        let total = 24;
+        let layout = ShardLayout::new(total, 3);
+        let a: Vec<u64> = (0..total as u64).collect();
+        let b: Vec<u64> = (0..total as u64).map(|j| j * 100).collect();
+        let mut asm = ChunkAssembler::new(true, 3);
+        feed(&mut asm, 1, layout, 4, &a);
+        // sender 2 streams only its first shard then stalls
+        let (s0, l0) = layout.shard_range(0);
+        asm.add_chunk(2, 0, s0 as u32, total as u32, &b[s0..s0 + l0]).unwrap();
+        asm.purge(2);
+        assert_eq!(asm.complete_count(), 1);
+        assert_eq!(asm.take_sum().unwrap(), a, "purged sender must contribute nothing");
+    }
+
+    #[test]
+    fn gap_marks_sender_bad_and_discards() {
+        let total = 16;
+        let layout = ShardLayout::new(total, 2);
+        let v: Vec<u64> = (0..total as u64).collect();
+        let mut asm = ChunkAssembler::new(true, 2);
+        let plan = chunk_plan(layout, 3);
+        // drop the second chunk: offset skips ahead → bad stream
+        let send = |asm: &mut ChunkAssembler, c: Chunk| {
+            asm.add_chunk(
+                1,
+                c.shard as u16,
+                c.offset as u32,
+                total as u32,
+                &v[c.offset..c.offset + c.len],
+            )
+            .unwrap();
+        };
+        send(&mut asm, plan[0]);
+        send(&mut asm, plan[2]);
+        assert_eq!(asm.complete_count(), 0);
+        // the bad sender is silently ignored from here on
+        send(&mut asm, plan[3]);
+        assert_eq!(asm.complete_count(), 0);
+        // a healthy sender still completes
+        feed(&mut asm, 2, layout, 3, &v);
+        asm.purge(1);
+        assert_eq!(asm.take_sum().unwrap(), v);
+    }
+
+    #[test]
+    fn malformed_chunks_error() {
+        let mut asm = ChunkAssembler::new(false, 2);
+        // inconsistent total
+        asm.add_chunk(1, 0, 0, 16, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        assert!(asm.add_chunk(2, 0, 0, 20, &[1]).is_err());
+        // out-of-range shard / offset
+        assert!(asm.add_chunk(3, 9, 0, 16, &[1]).is_err());
+        assert!(asm.add_chunk(3, 0, 99, 16, &[1]).is_err());
+        // crossing a shard boundary (shard 0 = words 0..8)
+        assert!(asm.add_chunk(3, 0, 6, 16, &[1, 2, 3]).is_err());
+        // empty chunk
+        assert!(asm.add_chunk(3, 0, 0, 16, &[]).is_err());
+    }
+
+    #[test]
+    fn buffered_bytes_tracks_held_state() {
+        let total = 32;
+        let layout = ShardLayout::new(total, 4);
+        let v = vec![1u64; total];
+        // base protocol: commit-on-shard keeps only global + in-flight
+        let mut base = ChunkAssembler::new(false, 4);
+        feed(&mut base, 1, layout, 8, &v);
+        assert_eq!(base.buffered_bytes(), (total * 8) as u64, "global only");
+        // revocable: held shards stay per sender
+        let mut rev = ChunkAssembler::new(true, 4);
+        feed(&mut rev, 1, layout, 8, &v);
+        assert_eq!(rev.buffered_bytes(), (2 * total * 8) as u64, "global + held");
+    }
+
+    #[test]
+    fn overhead_accounting_rule() {
+        // monolithic: 11 + 8d; chunked: 22/chunk + 8d
+        assert_eq!(chunk_count(100, 1, 100), 1);
+        assert_eq!(chunk_overhead_bytes(100, 1, 100), 22 - 11);
+        assert_eq!(chunk_count(100, 4, 10), 12, "4 shards of 25 → 3 chunks each");
+        assert_eq!(chunk_overhead_bytes(100, 4, 10), 22 * 12 - 11);
+    }
+}

@@ -8,22 +8,42 @@
 //! Masks live in ℤ₂⁶⁴ (wrapping arithmetic) so cancellation is *exact*;
 //! the fixed-point codec in [`crate::secagg`] maps float tensors into
 //! that domain and back.
+//!
+//! Two access patterns share one keystream:
+//!
+//! * the monolithic helpers ([`mask_words`], [`pairwise_mask`],
+//!   [`total_mask`]) materialize a whole mask vector at once, and
+//! * [`MaskStream`] / [`TotalMaskStream`] yield arbitrary
+//!   `(offset, len)` *windows* of the same stream for the chunked
+//!   streaming pipeline — ChaCha20 is seekable per 8-word block, so a
+//!   window never expands more keystream than it covers, and chunked
+//!   output is bit-identical to the monolithic expansion (asserted in
+//!   the tests below).
 
 use super::chacha20::ChaCha20;
 use super::hkdf;
+
+/// Mask words per ChaCha20 block (64 keystream bytes = 8 × u64).
+const WORDS_PER_BLOCK: usize = 8;
+
+/// The ChaCha20 instance behind one (secret, round, tag) mask stream:
+/// key domain-separated from other uses of the shared secret, context
+/// bound into the nonce so every round and tensor gets an independent
+/// stream, block counter starting at 0.
+fn mask_cipher(shared_secret: &[u8; 32], round: u64, tensor_tag: u32) -> ChaCha20 {
+    let key = hkdf::derive_key32(b"vfl-sa/prg/v1", shared_secret, b"mask");
+    let mut nonce = [0u8; 12];
+    nonce[..8].copy_from_slice(&round.to_le_bytes());
+    nonce[8..12].copy_from_slice(&tensor_tag.to_le_bytes());
+    ChaCha20::new(&key, &nonce, 0)
+}
 
 /// Expand a shared secret into `len` uniform u64 mask words for a given
 /// (round, tensor-tag) context. The context is bound into the nonce so
 /// every round and tensor gets an independent mask stream.
 pub fn mask_words(shared_secret: &[u8; 32], round: u64, tensor_tag: u32, len: usize) -> Vec<u64> {
-    // Domain-separate the PRG key from other uses of the shared secret.
-    let key = hkdf::derive_key32(b"vfl-sa/prg/v1", shared_secret, b"mask");
-    let mut nonce = [0u8; 12];
-    nonce[..8].copy_from_slice(&round.to_le_bytes());
-    nonce[8..12].copy_from_slice(&tensor_tag.to_le_bytes());
-    let cipher = ChaCha20::new(&key, &nonce, 0);
     let mut words = vec![0u64; len];
-    cipher.keystream_u64(&mut words);
+    mask_cipher(shared_secret, round, tensor_tag).keystream_u64(&mut words);
     words
 }
 
@@ -63,6 +83,94 @@ pub fn total_mask(
         }
     }
     acc
+}
+
+// ---------------------------------------------------------------------------
+// Windowed access: the streaming pipeline's view of the same keystream
+// ---------------------------------------------------------------------------
+
+/// One signed pairwise mask stream, addressable by `(offset, len)`
+/// windows. `window` output is bit-identical to the corresponding
+/// slice of [`pairwise_mask`] — ChaCha20 seeks to block `offset / 8`
+/// instead of expanding from word 0.
+pub struct MaskStream {
+    cipher: ChaCha20,
+    /// True when this peer's mask is subtracted (peer < me, Eq. 3).
+    negate: bool,
+}
+
+impl MaskStream {
+    /// The stream client `me` adds against `peer` for (round, tag).
+    pub fn pairwise(
+        shared_secret: &[u8; 32],
+        me: usize,
+        peer: usize,
+        round: u64,
+        tensor_tag: u32,
+    ) -> Self {
+        assert_ne!(me, peer);
+        MaskStream { cipher: mask_cipher(shared_secret, round, tensor_tag), negate: peer < me }
+    }
+
+    /// Wrap-add the mask words for `[offset, offset + out.len())` into
+    /// `out` (already signed, so accumulating windows from several
+    /// streams is the windowed form of [`total_mask`]).
+    pub fn add_window(&self, offset: usize, out: &mut [u64]) {
+        if out.is_empty() {
+            return;
+        }
+        let end = offset + out.len();
+        let first_block = offset / WORDS_PER_BLOCK;
+        let last_block = (end - 1) / WORDS_PER_BLOCK;
+        let mut block = [0u64; WORDS_PER_BLOCK];
+        for b in first_block..=last_block {
+            let words = self.cipher.block_words(b as u32);
+            for (j, w) in block.iter_mut().enumerate() {
+                *w = (words[2 * j] as u64) | ((words[2 * j + 1] as u64) << 32);
+            }
+            let base = b * WORDS_PER_BLOCK;
+            let lo = offset.max(base);
+            let hi = end.min(base + WORDS_PER_BLOCK);
+            for w in lo..hi {
+                let m = block[w - base];
+                let m = if self.negate { m.wrapping_neg() } else { m };
+                out[w - offset] = out[w - offset].wrapping_add(m);
+            }
+        }
+    }
+
+    /// Materialize one window on its own (mainly for tests).
+    pub fn window(&self, offset: usize, len: usize) -> Vec<u64> {
+        let mut out = vec![0u64; len];
+        self.add_window(offset, &mut out);
+        out
+    }
+}
+
+/// A client's total mask over all peers (Eq. 3) as a windowed stream:
+/// the chunked twin of [`total_mask`]. Windows are wrap-added, so any
+/// partition of `[0, len)` into windows reproduces the monolithic
+/// vector bit-for-bit.
+pub struct TotalMaskStream {
+    streams: Vec<MaskStream>,
+}
+
+impl TotalMaskStream {
+    pub fn new(secrets: &[(usize, [u8; 32])], me: usize, round: u64, tensor_tag: u32) -> Self {
+        let streams = secrets
+            .iter()
+            .map(|(peer, ss)| MaskStream::pairwise(ss, me, *peer, round, tensor_tag))
+            .collect();
+        TotalMaskStream { streams }
+    }
+
+    /// Wrap-add the total-mask words for the window starting at
+    /// `offset` into `out`.
+    pub fn add_window(&self, offset: usize, out: &mut [u64]) {
+        for s in &self.streams {
+            s.add_window(offset, out);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +229,45 @@ mod tests {
     fn deterministic_given_secret() {
         let s = ss(1, 2);
         assert_eq!(mask_words(&s, 9, 4, 100), mask_words(&s, 9, 4, 100));
+    }
+
+    #[test]
+    fn window_matches_monolithic_slice() {
+        // every (offset, len) window — aligned or not — must equal the
+        // corresponding slice of the monolithic expansion
+        let s = ss(2, 5);
+        let full = pairwise_mask(&s, 2, 5, 11, 3, 100);
+        let stream = MaskStream::pairwise(&s, 2, 5, 11, 3);
+        for (offset, len) in [(0, 100), (0, 7), (7, 9), (8, 8), (1, 1), (63, 37), (95, 5)] {
+            assert_eq!(stream.window(offset, len), full[offset..offset + len], "({offset},{len})");
+        }
+        // negated direction too
+        let full = pairwise_mask(&s, 5, 2, 11, 3, 100);
+        let stream = MaskStream::pairwise(&s, 5, 2, 11, 3);
+        assert_eq!(stream.window(3, 50), full[3..53]);
+    }
+
+    #[test]
+    fn total_stream_windows_reassemble_total_mask() {
+        // chunked expansion ≡ total_mask bit-for-bit for lengths not
+        // divisible by the chunk size
+        let me = 1usize;
+        let secrets: Vec<(usize, [u8; 32])> =
+            (0..5).filter(|&p| p != me).map(|p| (p, ss(me, p))).collect();
+        for len in [1usize, 7, 8, 64, 129] {
+            let full = total_mask(&secrets, me, 9, 2, len);
+            let stream = TotalMaskStream::new(&secrets, me, 9, 2);
+            for chunk in [1usize, 3, 8, 50] {
+                let mut got = vec![0u64; len];
+                let mut off = 0;
+                while off < len {
+                    let n = chunk.min(len - off);
+                    stream.add_window(off, &mut got[off..off + n]);
+                    off += n;
+                }
+                assert_eq!(got, full, "len={len} chunk={chunk}");
+            }
+        }
     }
 
     #[test]

@@ -52,6 +52,31 @@
 //! println!("losses: {:?}", report.losses);
 //! ```
 //!
+//! ## Streaming sharded aggregation (`--chunk-words` / `--shards`)
+//!
+//! The masked-tensor path is a *chunked streaming pipeline* end to
+//! end. The pairwise-mask PRG is seekable
+//! ([`crypto::prg::MaskStream`]), so a sender masks and ships a tensor
+//! window by window (`Msg::MaskedChunk { tag, shard, offset, .. }`)
+//! without ever materializing a full-tensor mask; the aggregator folds
+//! each sender's chunks into a per-sender *current-shard* partial sum
+//! and commits a shard into the single global accumulator the moment
+//! that sender completes it
+//! ([`ChunkAssembler`](coordinator::streaming::ChunkAssembler)).
+//! Because ℤ₂⁶⁴ wrap-addition is order-independent, a chunked run is
+//! **bit-identical** to a monolithic one — predictions, parameters,
+//! losses, and Table-2 sums modulo the documented 22-byte-per-chunk
+//! header (`tests/chunk_equivalence.rs` asserts all of it, on the
+//! simulator and the threaded transport).
+//!
+//! Memory model: the monolithic fan-in peaks at O(n·d) (one full
+//! vector per sender); the streaming base protocol peaks at
+//! O(d + n·shard). Dropout-tolerant runs are the exception — exact
+//! purge of a declared-dropped sender requires per-sender
+//! separability until the fan-in is consumed, so commitment is
+//! deferred (held per sender) and the peak matches the monolithic
+//! path; the trade is spelled out in [`coordinator::streaming`].
+//!
 //! ## Dropout tolerance (Bonawitz'17, §5.1)
 //!
 //! With [`RunConfig::shamir_threshold`](coordinator::RunConfig) set,

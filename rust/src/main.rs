@@ -119,6 +119,19 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(t) = flags.get("shamir-threshold") {
         cfg.shamir_threshold = Some(t.parse().context("bad --shamir-threshold")?);
     }
+    if let Some(cw) = flags.get("chunk-words") {
+        cfg.chunk_words = Some(cw.parse().context("bad --chunk-words")?);
+    }
+    if let Some(s) = flags.get("shards") {
+        cfg.shards = s.parse().context("bad --shards")?;
+    }
+    if let Some(ms) = flags.get("stall-cap-ms") {
+        cfg.stall_cap_ms = Some(ms.parse().context("bad --stall-cap-ms")?);
+    }
+    // fail the streaming flags here, at parse time, with the full
+    // validation the driver applies — `--chunk-words 0`, `--shards 0`
+    // and oversized shard counts must never reach a running round
+    vfl::coordinator::validate_streaming(&cfg)?;
     if let Some(spec) = flags.get("dropout-schedule") {
         if cfg.shamir_threshold.is_none() {
             bail!("--dropout-schedule needs --shamir-threshold (the run cannot recover otherwise)");
@@ -204,7 +217,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     for i in 0..n_clients {
         println!("  vfl-sa join --connect {listen} --party {i} <same train flags>");
     }
-    let out = tcp::serve(&listen, aggregator, &schedule, n_clients)?;
+    let clock = vfl::net::StallClock::from_config(cfg.stall_timeout_ms, cfg.stall_cap_ms);
+    let out = tcp::serve(&listen, aggregator, &schedule, n_clients, clock)?;
     let s = summarize(&schedule, &test_labels, &out.notes);
     for (i, l) in s.losses.iter().enumerate() {
         println!("round {i:>4}  loss {l:.5}");
@@ -321,6 +335,8 @@ fn main() -> Result<()> {
             eprintln!("usage: vfl-sa <train|serve|join|bench|info> [flags]");
             eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded]");
             eprintln!("        [--shamir-threshold 3] [--dropout-schedule 2@1,4@3+1]   dropout-tolerant run");
+            eprintln!("        [--chunk-words 1024] [--shards 4]    streaming sharded aggregation");
+            eprintln!("        [--stall-cap-ms 10000]               adaptive dropout-window cap");
             eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
             eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
             eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
@@ -382,6 +398,43 @@ mod tests {
         flags.insert("seed".to_string(), "-3".to_string());
         let cfg = cfg_from_flags(&flags).unwrap();
         assert_eq!(cfg.seed, (-3i64) as u64);
+    }
+
+    #[test]
+    fn streaming_flags_wire_into_config_and_invalid_values_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("chunk-words".to_string(), "1024".to_string());
+        flags.insert("shards".to_string(), "4".to_string());
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert_eq!(cfg.chunk_words, Some(1024));
+        assert_eq!(cfg.shards, 4);
+
+        // zero values must fail at flag parsing, not panic mid-round
+        for (k, v) in [("chunk-words", "0"), ("shards", "0")] {
+            let mut flags = HashMap::new();
+            flags.insert("chunk-words".to_string(), "64".to_string());
+            flags.insert(k.to_string(), v.to_string());
+            let err = cfg_from_flags(&flags).unwrap_err().to_string();
+            assert!(err.contains("invalid"), "{k}={v}: {err}");
+        }
+        // shard count beyond the smallest masked tensor rejected
+        let mut flags = HashMap::new();
+        flags.insert("chunk-words".to_string(), "64".to_string());
+        flags.insert("shards".to_string(), "9999999".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("exceeds"));
+        // sharding without chunking rejected
+        let mut flags = HashMap::new();
+        flags.insert("shards".to_string(), "2".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("--chunk-words"));
+        // chunking is exact-masking only
+        let mut flags = HashMap::new();
+        flags.insert("chunk-words".to_string(), "64".to_string());
+        flags.insert("plain".to_string(), "true".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("SecureExact"));
+        // stall cap parses
+        let mut flags = HashMap::new();
+        flags.insert("stall-cap-ms".to_string(), "2500".to_string());
+        assert_eq!(cfg_from_flags(&flags).unwrap().stall_cap_ms, Some(2500));
     }
 
     #[test]

@@ -31,6 +31,12 @@ use super::transport::{Transport, TransportOutcome};
 use super::Addr;
 
 /// One injected fault for one client.
+///
+/// Faults count *messages*, so under the chunked streaming pipeline
+/// (`--chunk-words`) crash points and drops land on individual
+/// `MaskedChunk`s — a crash mid-tensor or a single lost chunk are now
+/// injectable states, and `tests/chunk_equivalence.rs` proves the
+/// recovery path handles both.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fault {
     /// Permanent silence: the party crashes in `round` after emitting
@@ -45,6 +51,11 @@ pub enum Fault {
     /// emissions are appended after the rest of that event's outbox.
     /// Per-sender FIFO across events is preserved.
     Delay { round: u32, hold: usize },
+    /// Malicious surrenderer: flip one byte in every `SurrenderShares`
+    /// bundle this client hands the aggregator. The seed-commitment
+    /// check must catch the corrupted reconstruction with a typed
+    /// error instead of silently mis-correcting the aggregate.
+    CorruptShares,
 }
 
 /// A deterministic fault schedule plus build-time blanking.
@@ -201,6 +212,10 @@ impl<'e> FaultyParty<'e> {
             .unwrap_or(0)
     }
 
+    fn corrupts_shares(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::CorruptShares))
+    }
+
     /// Route an inner outbox through the fault schedule.
     fn relay(&mut self, tmp: Outbox, out: &mut Outbox) {
         let mut msgs = tmp.msgs;
@@ -208,9 +223,18 @@ impl<'e> FaultyParty<'e> {
         if hold > 0 && hold < msgs.len() {
             msgs.rotate_left(hold);
         }
-        for (to, m) in msgs {
+        for (to, mut m) in msgs {
             if self.crashed {
                 return; // silence from the crash point on, notes included
+            }
+            if self.corrupts_shares() {
+                if let Msg::SurrenderShares { bundles, .. } = &mut m {
+                    for (_, bytes) in bundles.iter_mut() {
+                        if let Some(b) = bytes.last_mut() {
+                            *b ^= 0x01;
+                        }
+                    }
+                }
             }
             let nth = self.sent_in_round;
             self.sent_in_round += 1;

@@ -3,16 +3,26 @@
 //!
 //! * [`wire`] — the little-endian length-prefixed encoding primitives.
 //! * [`transport`] — [`Network`] (the per-(phase, party, direction)
-//!   byte counters behind Table 2), the [`Transport`] trait, and the
-//!   deterministic single-threaded [`SimTransport`].
+//!   byte counters behind Table 2), the [`Transport`] trait, the
+//!   deterministic single-threaded [`SimTransport`], and the adaptive
+//!   [`StallClock`] quiescence policy shared by the timeout-based
+//!   transports.
 //! * [`threaded`] — [`ThreadedTransport`]: one OS thread per party,
 //!   channels in between, bit-identical results to the simulator.
 //! * [`frame`] / [`tcp`] — length-prefixed socket framing and the
 //!   cross-process `serve`/`join` plumbing.
 //! * [`faulty`] — deterministic fault injection ([`FaultPlan`],
-//!   [`FaultyTransport`]): seeded crash/drop/delay schedules applied
-//!   identically on every transport, the proof harness for the
-//!   dropout-tolerant protocol.
+//!   [`FaultyTransport`]): seeded crash/drop/delay/corrupt schedules
+//!   applied identically on every transport, the proof harness for the
+//!   dropout-tolerant protocol. Faults count messages, so under the
+//!   chunked streaming pipeline they land on individual chunks.
+//!
+//! Every transport carries chunked masked tensors
+//! (`Msg::MaskedChunk`) exactly like any other protocol message: the
+//! simulator pumps them through its global FIFO, the threaded
+//! transport through per-party channels, TCP inside [`frame`]s — the
+//! per-sender FIFO guarantee each transport already provides is the
+//! only ordering the chunk assembler needs.
 
 pub mod faulty;
 pub mod frame;
@@ -23,5 +33,5 @@ pub mod wire;
 
 pub use faulty::{Fault, FaultPlan, FaultyParty, FaultyTransport};
 pub use threaded::ThreadedTransport;
-pub use transport::{Addr, Network, Phase, SimTransport, Transport, TransportOutcome};
+pub use transport::{Addr, Network, Phase, SimTransport, StallClock, Transport, TransportOutcome};
 pub use wire::{Reader, Writer};

@@ -18,7 +18,6 @@
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::thread;
-use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -27,7 +26,7 @@ use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
 use crate::coordinator::Metrics;
 
 use super::frame::Frame;
-use super::transport::{DEFAULT_STALL_TIMEOUT, MAX_IDLE_PROBES};
+use super::transport::{StallClock, MAX_IDLE_PROBES};
 use super::{Addr, Network};
 
 /// What a completed `serve` run hands back.
@@ -46,10 +45,12 @@ enum Event {
     Gone(usize, String),
 }
 
-/// How long the server waits without any client frame before probing
-/// the aggregator for dropped parties ([`Party::on_stall`]); policy
-/// shared with the threaded transport via `net::transport`.
-const STALL_TIMEOUT: Duration = DEFAULT_STALL_TIMEOUT;
+// The server's quiescence window before probing the aggregator for
+// dropped parties ([`Party::on_stall`]) is the same adaptive
+// [`StallClock`] the threaded transport uses (EWMA of inter-frame
+// gaps between a configurable floor and cap), passed in by the caller
+// so `--stall-cap-ms` and the test-shrunk floor apply to socket runs
+// too.
 
 /// Route an aggregator outbox to the client sockets, metering each
 /// protocol message. Writes to clients whose sockets died are skipped
@@ -77,15 +78,18 @@ fn route_server(
 }
 
 /// Host the aggregator: accept `n_clients` joins, run the schedule,
-/// return the run's notes and byte counters.
+/// return the run's notes and byte counters. `clock` is the adaptive
+/// dropout-detection window (`StallClock::from_config` wires the
+/// `--stall-cap-ms` / test-floor knobs through).
 pub fn serve(
     listen: &str,
     aggregator: Box<dyn Party + '_>,
     schedule: &[RoundSpec],
     n_clients: usize,
+    clock: StallClock,
 ) -> Result<ServeOutcome> {
     let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
-    serve_on(listener, aggregator, schedule, n_clients)
+    serve_on(listener, aggregator, schedule, n_clients, clock)
 }
 
 /// [`serve`] on an already-bound listener (lets tests bind port 0 and
@@ -95,6 +99,7 @@ pub fn serve_on(
     mut aggregator: Box<dyn Party + '_>,
     schedule: &[RoundSpec],
     n_clients: usize,
+    mut clock: StallClock,
 ) -> Result<ServeOutcome> {
     let listen = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
     eprintln!("serve: listening on {listen}, waiting for {n_clients} client(s)");
@@ -141,6 +146,7 @@ pub fn serve_on(
 
     let mut net = Network::new(n_clients);
     let mut notes: Vec<Note> = Vec::new();
+    let mut last_event = std::time::Instant::now();
     for spec in schedule {
         net.phase = spec.phase;
         // boundary first, on every socket, so each client orders the
@@ -166,14 +172,23 @@ pub fn serve_on(
         let mut idle_probes = 0u32;
         let mut processed_since_probe = 0u64;
         loop {
-            let event = match rx.recv_timeout(STALL_TIMEOUT) {
-                Ok(ev) => ev,
+            let event = match rx.recv_timeout(clock.timeout()) {
+                Ok(ev) => {
+                    let now = std::time::Instant::now();
+                    clock.observe_gap(now - last_event);
+                    last_event = now;
+                    ev
+                }
                 Err(RecvTimeoutError::Timeout) => {
                     // no frame for the stall window: ask the aggregator
                     // whether recovery can declare the silent clients
                     // dropped (timeout-based dropout detection). Only
                     // probe when truly quiescent — a timeout right
-                    // after a burst of traffic is not a dropout.
+                    // after a burst of traffic is not a dropout. Reset
+                    // the gap anchor so stall windows never feed the
+                    // EWMA (the clock tracks frame cadence, not its
+                    // own timeouts).
+                    last_event = std::time::Instant::now();
                     let mut ob = Outbox::default();
                     if processed_since_probe == 0 {
                         aggregator.on_stall(&mut ob)?;

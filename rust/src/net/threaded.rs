@@ -32,7 +32,8 @@ use crate::coordinator::messages::Msg;
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
 
 use super::transport::{
-    harvest, node_of_addr, Transport, TransportOutcome, DEFAULT_STALL_TIMEOUT, MAX_IDLE_PROBES,
+    harvest, node_of_addr, StallClock, Transport, TransportOutcome, DEFAULT_STALL_CAP,
+    DEFAULT_STALL_TIMEOUT, MAX_IDLE_PROBES,
 };
 use super::{Addr, Network};
 
@@ -142,26 +143,40 @@ fn run_party(
 /// One thread per party, channels for transport, rounds serialized on
 /// the active party's `RoundDone` note.
 ///
-/// Dropout detection is timeout-based: when no note arrives for
-/// `stall_timeout`, the driver sends the aggregator a quiescence probe
+/// Dropout detection is timeout-based and *adaptive*: when no note
+/// arrives for the current [`StallClock`] window — the floor stretched
+/// by an EWMA of the observed inter-note gaps, up to a cap — the
+/// driver sends the aggregator a quiescence probe
 /// ([`Party::on_stall`]). A probe that finds recovery work resets the
 /// clock; [`MAX_IDLE_PROBES`] consecutive probes with no work and no
 /// traffic abort the run as genuinely stalled.
 pub struct ThreadedTransport {
     n_clients: usize,
-    stall_timeout: Duration,
+    stall_floor: Duration,
+    stall_cap: Duration,
 }
 
 impl ThreadedTransport {
     pub fn new(n_clients: usize) -> Self {
-        ThreadedTransport { n_clients, stall_timeout: DEFAULT_STALL_TIMEOUT }
+        ThreadedTransport {
+            n_clients,
+            stall_floor: DEFAULT_STALL_TIMEOUT,
+            stall_cap: DEFAULT_STALL_CAP,
+        }
     }
 
-    /// Override the dropout-detection window (reachable from
+    /// Override the dropout-detection floor (reachable from
     /// `RunConfig::stall_timeout_ms`; tests shrink it so declared
     /// dropouts don't sleep through full default windows).
     pub fn with_stall_timeout(mut self, stall_timeout: Duration) -> Self {
-        self.stall_timeout = stall_timeout;
+        self.stall_floor = stall_timeout;
+        self
+    }
+
+    /// Override the adaptive window's cap (reachable from
+    /// `RunConfig::stall_cap_ms`).
+    pub fn with_stall_cap(mut self, cap: Duration) -> Self {
+        self.stall_cap = cap;
         self
     }
 }
@@ -239,6 +254,8 @@ impl Transport for ThreadedTransport {
 
             let mut notes: Vec<Note> = Vec::new();
             let mut failure: Option<String> = None;
+            let mut clock = StallClock::new(self.stall_floor, self.stall_cap);
+            let mut last_note = std::time::Instant::now();
             'rounds: for spec in schedule {
                 net.lock().unwrap().phase = spec.phase;
                 if agg_tx.send(Envelope::Round(spec.clone())).is_err() {
@@ -247,12 +264,23 @@ impl Transport for ThreadedTransport {
                 }
                 let mut idle_probes = 0u32;
                 loop {
-                    let note = match note_rx.recv_timeout(self.stall_timeout) {
-                        Ok(note) => note,
+                    let note = match note_rx.recv_timeout(clock.timeout()) {
+                        Ok(note) => {
+                            // feed the adaptive window with the real
+                            // inter-note cadence of this run
+                            let now = std::time::Instant::now();
+                            clock.observe_gap(now - last_note);
+                            last_note = now;
+                            note
+                        }
                         Err(RecvTimeoutError::Timeout) => {
                             // quiescent: probe the aggregator for
                             // dropped peers; its Note::Stall reply
-                            // reports whether anything moved
+                            // reports whether anything moved. Reset the
+                            // gap anchor so stall windows never feed
+                            // the EWMA — the clock must track the run's
+                            // note cadence, not its own timeouts.
+                            last_note = std::time::Instant::now();
                             if agg_tx.send(Envelope::Stall).is_err() {
                                 failure = Some("aggregator exited early".into());
                                 break 'rounds;

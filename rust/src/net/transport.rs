@@ -27,14 +27,80 @@ use crate::model::ModelParams;
 ///
 /// A quiescence window with zero aggregator events triggers an
 /// [`Party::on_stall`] probe; [`MAX_IDLE_PROBES`] consecutive no-op
-/// probes abort the run as genuinely stalled (≈10 s of total silence —
-/// a false abort is worse than a slow one, but strictly better than
-/// the pre-dropout behavior of blocking forever).
+/// probes abort the run as genuinely stalled (a false abort is worse
+/// than a slow one, but strictly better than the pre-dropout behavior
+/// of blocking forever).
+///
+/// The window itself is *adaptive* ([`StallClock`]): it starts at a
+/// floor (500 ms by default) and grows with an EWMA of the observed
+/// inter-event gaps, up to a configurable cap — so a party whose
+/// single compute step keeps the aggregator quiet for seconds is no
+/// longer falsely declared dropped, while a genuinely dead peer on a
+/// fast workload is still detected at the floor.
 pub const DEFAULT_STALL_TIMEOUT: std::time::Duration = std::time::Duration::from_millis(500);
+
+/// Default cap on the adaptive quiescence window.
+pub const DEFAULT_STALL_CAP: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Consecutive no-op quiescence probes tolerated before declaring a
 /// run stalled.
 pub const MAX_IDLE_PROBES: u32 = 20;
+
+/// Adaptive quiescence window: an exponentially weighted moving
+/// average of inter-event gaps, mapped to a timeout of
+/// `clamp(floor, GAP_MULTIPLIER × EWMA, cap)`.
+///
+/// Timing only steers *when* a silent peer is probed, never *what* the
+/// protocol computes, so the adaptive window cannot affect
+/// bit-identity across transports — only detection latency.
+#[derive(Clone, Debug)]
+pub struct StallClock {
+    floor: std::time::Duration,
+    cap: std::time::Duration,
+    ewma_ns: Option<f64>,
+}
+
+/// EWMA smoothing factor (weight of the newest gap).
+const STALL_EWMA_ALPHA: f64 = 0.25;
+
+/// How many average gaps of silence count as quiescence. Generous on
+/// purpose: a missed dropout costs one extra window, a false dropout
+/// ejects a live party for the rest of the run.
+const STALL_GAP_MULTIPLIER: f64 = 8.0;
+
+impl StallClock {
+    pub fn new(floor: std::time::Duration, cap: std::time::Duration) -> Self {
+        StallClock { floor, cap: cap.max(floor), ewma_ns: None }
+    }
+
+    /// Build from the `RunConfig` knobs (`stall_timeout_ms` floor,
+    /// `stall_cap_ms` cap), defaulting to [`DEFAULT_STALL_TIMEOUT`] /
+    /// [`DEFAULT_STALL_CAP`].
+    pub fn from_config(floor_ms: Option<u64>, cap_ms: Option<u64>) -> Self {
+        StallClock::new(
+            floor_ms.map(std::time::Duration::from_millis).unwrap_or(DEFAULT_STALL_TIMEOUT),
+            cap_ms.map(std::time::Duration::from_millis).unwrap_or(DEFAULT_STALL_CAP),
+        )
+    }
+
+    /// Fold one observed gap between consecutive events into the EWMA.
+    pub fn observe_gap(&mut self, gap: std::time::Duration) {
+        let g = gap.as_nanos() as f64;
+        self.ewma_ns = Some(match self.ewma_ns {
+            None => g,
+            Some(e) => (1.0 - STALL_EWMA_ALPHA) * e + STALL_EWMA_ALPHA * g,
+        });
+    }
+
+    /// The current quiescence window.
+    pub fn timeout(&self) -> std::time::Duration {
+        let adaptive = self
+            .ewma_ns
+            .map(|e| std::time::Duration::from_nanos((e * STALL_GAP_MULTIPLIER) as u64))
+            .unwrap_or(self.floor);
+        adaptive.clamp(self.floor, self.cap)
+    }
+}
 
 /// Protocol phases, matching the paper's reporting granularity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -59,6 +125,17 @@ pub struct Traffic {
 }
 
 /// The byte-metered star-topology network.
+///
+/// Byte-accounting rule for the chunked streaming pipeline: the
+/// counters meter *encoded message bytes*, so a masked tensor of `d`
+/// words costs `11 + 8d` bytes monolithic and `22·k + 8d` bytes as a
+/// `k`-chunk stream — identical payload, 22 bytes of header per chunk
+/// (`coordinator::streaming::CHUNK_MSG_HEADER_BYTES`). Table-2
+/// comparisons across the two paths must add
+/// `coordinator::streaming::chunk_overhead_bytes` per tensor;
+/// everything else (relays, broadcasts, the 1:1 gradient sum, setup)
+/// is byte-identical. `tests/chunk_equivalence.rs` asserts the exact
+/// relation.
 pub struct Network {
     n_clients: usize,
     pub phase: Phase,
@@ -302,6 +379,41 @@ impl Transport for SimTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stall_clock_floor_ewma_and_cap() {
+        use std::time::Duration;
+        let floor = Duration::from_millis(500);
+        let cap = Duration::from_secs(10);
+        let mut c = StallClock::new(floor, cap);
+        // no observations: the floor
+        assert_eq!(c.timeout(), floor);
+        // fast gaps keep the window at the floor
+        for _ in 0..10 {
+            c.observe_gap(Duration::from_millis(1));
+        }
+        assert_eq!(c.timeout(), floor);
+        // slow gaps (a heavy compute step) stretch the window...
+        for _ in 0..50 {
+            c.observe_gap(Duration::from_millis(400));
+        }
+        let t = c.timeout();
+        assert!(t > floor, "window must adapt upward, got {t:?}");
+        assert!(t <= cap);
+        // ...but never past the cap
+        for _ in 0..50 {
+            c.observe_gap(Duration::from_secs(30));
+        }
+        assert_eq!(c.timeout(), cap);
+        // and it recovers once gaps shrink again
+        for _ in 0..100 {
+            c.observe_gap(Duration::from_micros(10));
+        }
+        assert_eq!(c.timeout(), floor);
+        // a cap below the floor is lifted to the floor
+        let c = StallClock::new(floor, Duration::from_millis(1));
+        assert_eq!(c.timeout(), floor);
+    }
 
     #[test]
     fn send_queues_and_pops_in_order() {

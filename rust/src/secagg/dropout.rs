@@ -37,6 +37,12 @@ pub enum DropoutError {
     /// The active party (labels, SGD step) dropped — the VFL round has
     /// no owner and cannot be completed by anyone else.
     ActivePartyDropped,
+    /// The seed reconstructed for `client` does not match the
+    /// commitment that client pinned at setup: at least one
+    /// surrendered share was corrupted (a malicious surrenderer).
+    /// Continuing would add a *wrong* mask correction and silently
+    /// corrupt the aggregate, so the run aborts.
+    SeedCommitmentMismatch { client: u16 },
 }
 
 impl std::fmt::Display for DropoutError {
@@ -47,6 +53,11 @@ impl std::fmt::Display for DropoutError {
                 "below dropout threshold: {survivors} survivor(s), need {threshold} for recovery"
             ),
             DropoutError::ActivePartyDropped => write!(f, "active party dropped mid-round"),
+            DropoutError::SeedCommitmentMismatch { client } => write!(
+                f,
+                "reconstructed seed for client {client} fails its pinned commitment \
+                 (corrupted surrendered share)"
+            ),
         }
     }
 }
@@ -112,6 +123,13 @@ impl RobustClientSession {
     /// The reconstruction threshold this session was created with.
     pub fn threshold(&self) -> usize {
         self.threshold
+    }
+
+    /// The binding commitment to this session's seed, published with
+    /// the seed shares so the aggregator can verify a reconstruction
+    /// (see [`seed_commitment`]).
+    pub fn commitment(&self) -> [u8; 32] {
+        seed_commitment(&self.seed)
     }
 }
 
@@ -263,8 +281,14 @@ pub fn recover_dropped_mask(
     session.total_mask(round, tensor_tag, len)
 }
 
-/// Convenience wrapper used in docs/tests: derive a deterministic
-/// "commitment" to a seed (what a verifying aggregator would pin).
+/// Deterministic binding commitment to a session seed. Every client
+/// publishes `seed_commitment(seed)` alongside its sealed seed shares
+/// (`Msg::SeedShares`); the aggregator pins the value for the epoch
+/// and verifies any reconstructed seed against it before using the
+/// rebuilt session — a corrupted surrendered share is then a typed
+/// [`DropoutError::SeedCommitmentMismatch`] abort instead of a
+/// silently wrong mask correction. (HKDF output reveals nothing about
+/// the seed; binding holds under the PRF assumption.)
 pub fn seed_commitment(seed: &[u8; 32]) -> [u8; 32] {
     hkdf::derive_key32(b"vfl-sa/seed-commit/v1", seed, b"commit")
 }

@@ -135,6 +135,35 @@ impl ClientSession {
         words
     }
 
+    /// The total mask as a windowed stream (the chunked pipeline's view
+    /// of [`total_mask`]): no mask words are expanded until a window is
+    /// requested, and windows reassemble the monolithic mask
+    /// bit-for-bit. Peers without a shared secret contribute nothing.
+    pub fn total_mask_stream(&self, round: u64, tensor_tag: u32) -> prg::TotalMaskStream {
+        let secrets: Vec<(usize, [u8; 32])> = (0..self.n_clients)
+            .filter(|&j| j != self.id)
+            .filter_map(|j| self.shared[j].map(|s| (j, s)))
+            .collect();
+        prg::TotalMaskStream::new(&secrets, self.id, round ^ (self.epoch << 32), tensor_tag)
+    }
+
+    /// Mask and encode one window of a float tensor: `values` is the
+    /// window's slice, `offset` its starting word in the full tensor.
+    /// Equals `mask_tensor(full, ..)[offset..offset + values.len()]`
+    /// bit-for-bit (fixed-point encoding is element-wise and ℤ₂⁶⁴
+    /// addition is element-wise), which is what keeps a chunked run
+    /// report-identical to a monolithic one.
+    pub fn mask_tensor_window(
+        &self,
+        stream: &prg::TotalMaskStream,
+        values: &[f32],
+        offset: usize,
+    ) -> Vec<u64> {
+        let mut words = self.fp.encode_vec(values);
+        stream.add_window(offset, &mut words);
+        words
+    }
+
     /// Float-domain masking (SecurityMode::SecureFloat): pairwise ±f32
     /// masks added directly to the values. Payload stays 4 B/element
     /// (size parity with unsecured VFL); cancellation is exact up to
@@ -304,6 +333,31 @@ mod tests {
         let got = aggregate(&FixedPoint::default(), &masked);
         for v in got {
             assert!((v - 4.5).abs() < 1e-4, "survivor masks must telescope: {v}");
+        }
+    }
+
+    #[test]
+    fn chunked_masking_matches_monolithic() {
+        // mask_tensor_window over any partition of the tensor must
+        // reassemble mask_tensor bit-for-bit — including lengths not
+        // divisible by the chunk size
+        let mut rng = DetRng::from_seed(21);
+        let sessions = setup_all(4, 1, &mut rng);
+        let s = &sessions[2];
+        for len in [1usize, 5, 8, 67, 256] {
+            let vals: Vec<f32> = (0..len).map(|j| (j as f32) * 0.375 - 9.5).collect();
+            let mono = s.mask_tensor(&vals, 13, 1);
+            let stream = s.total_mask_stream(13, 1);
+            for chunk in [1usize, 3, 16, 100] {
+                let mut got = Vec::with_capacity(len);
+                let mut off = 0;
+                while off < len {
+                    let n = chunk.min(len - off);
+                    got.extend(s.mask_tensor_window(&stream, &vals[off..off + n], off));
+                    off += n;
+                }
+                assert_eq!(got, mono, "len={len} chunk={chunk}");
+            }
         }
     }
 

@@ -1,0 +1,225 @@
+//! The streaming-pipeline tentpole invariants (`--chunk-words` /
+//! `--shards`):
+//!
+//! * **Bit-identity.** A chunked run produces bit-identical
+//!   predictions, parameters, losses, and accuracy to the monolithic
+//!   path, on the simulator *and* the threaded transport — ℤ₂⁶⁴
+//!   wrap-addition is order-independent, and every chunk's words equal
+//!   the corresponding slice of the monolithic masked tensor.
+//! * **Exact byte accounting.** Table-2 counters differ from the
+//!   monolithic run by *exactly* the documented per-chunk header
+//!   overhead (`streaming::chunk_overhead_bytes`): 22 bytes per chunk
+//!   vs 11 per monolithic masked message, payload unchanged.
+//! * **Memory.** The aggregator's peak fan-in buffer with chunking is
+//!   strictly below the monolithic path's O(n·d) for banking's
+//!   n = 5 ≥ 4 clients (asserted via the byte-metered peak counters).
+//! * **Dropout.** Chunked dropout-tolerant runs keep the recovery
+//!   semantics of `tests/dropout_recovery.rs`: crash runs are
+//!   bit-identical to their zero-contribution twins — including a
+//!   crash *mid-chunk-stream*, whose partial shard sums must be purged
+//!   — and faults can target individual chunks.
+
+mod common;
+
+use common::{assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg};
+use vfl::coordinator::metrics::AGGREGATOR;
+use vfl::coordinator::parties::GradLayout;
+use vfl::coordinator::streaming::chunk_overhead_bytes;
+use vfl::coordinator::{run_experiment, RunConfig, RunReport, SecurityMode, TransportKind};
+use vfl::net::{Addr, Fault, FaultPlan, Phase};
+
+const CHUNK_WORDS: usize = 1000;
+const SHARDS: usize = 4;
+
+fn with_chunks(mut c: RunConfig) -> RunConfig {
+    c.chunk_words = Some(CHUNK_WORDS);
+    c.shards = SHARDS;
+    c
+}
+
+fn secure_cfg(transport: TransportKind) -> RunConfig {
+    run_cfg("banking", SecurityMode::SecureExact, transport)
+}
+
+/// The two masked-tensor lengths of a banking run: the (batch ×
+/// hidden) activation and the full-length flat gradient.
+fn tensor_lens(cfg: &RunConfig) -> (usize, usize) {
+    (cfg.model.batch_size * cfg.model.hidden, GradLayout::new(&cfg.model).total)
+}
+
+/// Acceptance criterion: chunked ≡ monolithic bit-for-bit on sim and
+/// threaded transports, with Table-2 counters matching exactly once
+/// the documented per-chunk header overhead is accounted.
+#[test]
+fn chunked_run_bit_identical_to_monolithic_with_exact_byte_accounting() {
+    let base = secure_cfg(TransportKind::Sim);
+    let mono = run_experiment(base.clone(), None).unwrap();
+    let (act_len, grad_len) = tensor_lens(&base);
+    let per_act = chunk_overhead_bytes(act_len, SHARDS, CHUNK_WORDS);
+    let per_grad = chunk_overhead_bytes(grad_len, SHARDS, CHUNK_WORDS);
+    let rounds = base.train_rounds as u64;
+    let n_passive = (base.model.n_clients() - 1) as u64;
+
+    let mut runs: Vec<RunReport> = Vec::new();
+    for transport in [TransportKind::Sim, TransportKind::Threaded] {
+        let chunked = run_experiment(with_chunks(secure_cfg(transport)), None).unwrap();
+        assert_reports_identical(&mono, &chunked, &format!("chunked vs monolithic {transport:?}"));
+
+        let net = &chunked.net;
+        let mnet = &mono.net;
+        // setup traffic is untouched by chunking
+        for i in 0..base.model.n_clients() {
+            assert_eq!(
+                net.sent_bytes(Addr::Client(i), Phase::Setup),
+                mnet.sent_bytes(Addr::Client(i), Phase::Setup),
+                "setup bytes client {i}"
+            );
+        }
+        // active party: one chunked activation per train/test round
+        assert_eq!(
+            net.sent_bytes(Addr::Client(0), Phase::Training),
+            mnet.sent_bytes(Addr::Client(0), Phase::Training) + rounds * per_act,
+            "active training sent"
+        );
+        assert_eq!(
+            net.sent_bytes(Addr::Client(0), Phase::Testing),
+            mnet.sent_bytes(Addr::Client(0), Phase::Testing) + per_act,
+            "active testing sent"
+        );
+        // passives: chunked activation + chunked gradient per train round
+        for i in 1..base.model.n_clients() {
+            assert_eq!(
+                net.sent_bytes(Addr::Client(i), Phase::Training),
+                mnet.sent_bytes(Addr::Client(i), Phase::Training)
+                    + rounds * (per_act + per_grad),
+                "passive {i} training sent"
+            );
+            assert_eq!(
+                net.sent_bytes(Addr::Client(i), Phase::Testing),
+                mnet.sent_bytes(Addr::Client(i), Phase::Testing) + per_act,
+                "passive {i} testing sent"
+            );
+        }
+        // the aggregator receives every chunk header once...
+        assert_eq!(
+            net.received_bytes(Addr::Aggregator, Phase::Training),
+            mnet.received_bytes(Addr::Aggregator, Phase::Training)
+                + rounds * ((n_passive + 1) * per_act + n_passive * per_grad),
+            "aggregator training received"
+        );
+        assert_eq!(
+            net.received_bytes(Addr::Aggregator, Phase::Testing),
+            mnet.received_bytes(Addr::Aggregator, Phase::Testing) + (n_passive + 1) * per_act,
+            "aggregator testing received"
+        );
+        // ...and sends exactly what the monolithic run sends (relays,
+        // dz broadcasts, and the 1:1 gradient sum stay monolithic)
+        for ph in [Phase::Setup, Phase::Training, Phase::Testing] {
+            assert_eq!(
+                net.sent_bytes(Addr::Aggregator, ph),
+                mnet.sent_bytes(Addr::Aggregator, ph),
+                "aggregator sent {ph:?}"
+            );
+        }
+        runs.push(chunked);
+    }
+    // both chunked transports also agree with each other, counters included
+    assert_reports_identical(&runs[0], &runs[1], "chunked sim vs chunked threaded");
+    assert_table2_identical(&runs[0].net, &runs[1].net);
+}
+
+/// Acceptance criterion: with the base protocol (no dropout
+/// tolerance), the chunked aggregator's peak fan-in buffer is strictly
+/// below the monolithic path's O(n·d) for n = 5 ≥ 4 clients.
+#[test]
+fn chunked_aggregator_peak_memory_below_monolithic() {
+    let base = secure_cfg(TransportKind::Sim);
+    let (act_len, _) = tensor_lens(&base);
+    let n = base.model.n_clients() as u64;
+    let mono = run_experiment(base.clone(), None).unwrap();
+    let chunked = run_experiment(with_chunks(base), None).unwrap();
+
+    let mono_peak = mono.metrics.peak_buffered_bytes(AGGREGATOR);
+    let chunked_peak = chunked.metrics.peak_buffered_bytes(AGGREGATOR);
+    // the monolithic fan-in really holds one full vector per sender
+    assert_eq!(mono_peak, n * (act_len as u64) * 8, "monolithic peak is n·d activation words");
+    assert!(chunked_peak > 0, "chunked runs meter their buffers");
+    assert!(
+        chunked_peak < mono_peak,
+        "streaming must buffer less than the monolithic fan-in: {chunked_peak} vs {mono_peak}"
+    );
+}
+
+/// A chunked dropout-tolerant run recovers with unchanged semantics: a
+/// client crashing after setup (before its first chunk) yields a run
+/// bit-identical to the zero-contribution twin, to the same crash
+/// under the monolithic path, and across transports.
+#[test]
+fn chunked_dropout_recovery_bit_identical_to_twin_and_monolithic() {
+    // round 0 rotates: sends are keys(1), shares(2) — crash before any chunk
+    let plan = FaultPlan::default().with(2, Fault::Crash { round: 0, after_sends: 2 });
+    let cfg = |p: Option<FaultPlan>, t| with_chunks(dropout_cfg(3, p, t));
+    let crash = run_experiment(cfg(Some(plan.clone()), TransportKind::Sim), None).unwrap();
+    let twin = run_experiment(cfg(Some(plan.blank_twin()), TransportKind::Sim), None).unwrap();
+    assert_reports_identical(&crash, &twin, "chunked crash vs chunked blank twin");
+    // the same crash point under the monolithic path: identical reports
+    let mono =
+        run_experiment(dropout_cfg(3, Some(plan.clone()), TransportKind::Sim), None).unwrap();
+    assert_reports_identical(&crash, &mono, "chunked crash vs monolithic crash");
+    // and the threaded transport agrees bit-for-bit
+    let thr = run_experiment(cfg(Some(plan), TransportKind::Threaded), None).unwrap();
+    assert_reports_identical(&crash, &thr, "chunked crash sim vs threaded");
+    assert_eq!(crash.losses.len(), 6);
+    assert!(crash.losses.iter().all(|l| l.is_finite()));
+}
+
+/// A crash *mid-chunk-stream* leaves a partially assembled tensor at
+/// the aggregator; the purge must discard the partial shard sums so
+/// the recovery correction stays exact — still bit-identical to the
+/// twin where the client contributes zeros.
+#[test]
+fn mid_stream_crash_purges_partial_shards() {
+    // round 0 sends: keys(1), shares(2), then activation chunks — a
+    // crash after 5 sends dies three chunks into the activation stream
+    let plan = FaultPlan::default()
+        .with(2, Fault::Crash { round: 0, after_sends: 2 })
+        .with(3, Fault::Crash { round: 0, after_sends: 5 });
+    let cfg = |p: Option<FaultPlan>, t| with_chunks(dropout_cfg(3, p, t));
+    let crash = run_experiment(cfg(Some(plan.clone()), TransportKind::Sim), None).unwrap();
+    let twin = run_experiment(cfg(Some(plan.blank_twin()), TransportKind::Sim), None).unwrap();
+    assert_reports_identical(&crash, &twin, "mid-stream crash vs blank twin");
+    let thr = run_experiment(cfg(Some(plan), TransportKind::Threaded), None).unwrap();
+    assert_reports_identical(&crash, &thr, "mid-stream crash sim vs threaded");
+}
+
+/// Faults can now target individual chunks: losing one chunk of an
+/// activation stream (sender alive) breaks the sender's stream, the
+/// aggregator declares it dropped, and the round recovers — the same
+/// on both transports.
+#[test]
+fn single_lost_chunk_declares_sender_dropped() {
+    // round 1 does not rotate: sends are activation chunks from 0 —
+    // drop the second chunk of client 3's stream
+    let plan = FaultPlan::default().with(3, Fault::DropMsg { round: 1, nth: 1 });
+    let cfg = |p: Option<FaultPlan>, t| with_chunks(dropout_cfg(3, p, t));
+    let sim = run_experiment(cfg(Some(plan.clone()), TransportKind::Sim), None).unwrap();
+    let thr = run_experiment(cfg(Some(plan), TransportKind::Threaded), None).unwrap();
+    assert_reports_identical(&sim, &thr, "lost chunk sim vs threaded");
+    assert!(sim.losses.iter().all(|l| l.is_finite()));
+}
+
+/// Sharding alone must not change results either: sweep a few
+/// (chunk_words, shards) shapes — including chunk sizes that do not
+/// divide the tensor length and the single-shard case — and require
+/// bit-identity throughout.
+#[test]
+fn chunk_shape_sweep_is_bit_identical() {
+    let mono = run_experiment(secure_cfg(TransportKind::Sim), None).unwrap();
+    for (cw, shards) in [(16384, 1), (999, 1), (4096, 8), (333, 3)] {
+        let mut c = secure_cfg(TransportKind::Sim);
+        c.chunk_words = Some(cw);
+        c.shards = shards;
+        let run = run_experiment(c, None).unwrap();
+        assert_reports_identical(&mono, &run, &format!("cw={cw} shards={shards}"));
+    }
+}

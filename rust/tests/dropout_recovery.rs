@@ -21,7 +21,7 @@ mod common;
 
 use common::{assert_reports_identical, assert_table2_identical, dropout_cfg};
 use vfl::coordinator::{build, run_experiment, summarize, RunConfig, RunReport, TransportKind};
-use vfl::net::{tcp, Fault, FaultPlan};
+use vfl::net::{tcp, Fault, FaultPlan, StallClock};
 use vfl::secagg::DropoutError;
 
 const T: usize = 3;
@@ -151,6 +151,32 @@ fn below_threshold_aborts_with_typed_error() {
     );
 }
 
+/// The seed-share commitments pinned at setup are enforced: a
+/// malicious surrenderer that corrupts its surrendered share bundles
+/// makes reconstruction produce a seed that fails the dropped client's
+/// commitment — the run must abort with the typed error, never apply a
+/// wrong mask correction.
+#[test]
+fn corrupted_surrendered_share_rejected_by_commitment() {
+    let plan = FaultPlan::default()
+        .with(2, Fault::Crash { round: 1, after_sends: 0 })
+        .with(1, Fault::CorruptShares);
+    let err = run_err(
+        dropout_cfg(T, Some(plan.clone()), TransportKind::Sim),
+        "corrupted surrendered share on sim",
+    );
+    match err.downcast_ref::<DropoutError>() {
+        Some(DropoutError::SeedCommitmentMismatch { client }) => assert_eq!(*client, 2),
+        other => panic!("expected SeedCommitmentMismatch, got {other:?} ({err:#})"),
+    }
+    // threaded runs surface the same failure through the Failed note
+    let err = run_err(
+        dropout_cfg(T, Some(plan), TransportKind::Threaded),
+        "corrupted surrendered share on threaded",
+    );
+    assert!(format!("{err:#}").contains("commitment"), "unexpected threaded error: {err:#}");
+}
+
 /// The active party owns labels and the SGD step: its death is
 /// unrecoverable and must be reported as such.
 #[test]
@@ -251,7 +277,8 @@ fn tcp_recovery_matches_sim() {
         let mut parties = built.parties;
         let aggregator = parties.remove(0);
         drop(parties);
-        let out = tcp::serve_on(listener, aggregator, &built.schedule, n_clients)?;
+        let clock = StallClock::from_config(server_cfg.stall_timeout_ms, server_cfg.stall_cap_ms);
+        let out = tcp::serve_on(listener, aggregator, &built.schedule, n_clients, clock)?;
         Ok::<_, anyhow::Error>((summarize(&built.schedule, &built.test_labels, &out.notes), out))
     });
 

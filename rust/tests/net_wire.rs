@@ -53,6 +53,15 @@ fn every_protocol_message_roundtrips() {
         Msg::PlainBatch { round: 3, labels: vec![1.0], ids: vec![1, 2, 3] },
         Msg::PlainBatchRelay { round: 3, ids: vec![u64::MAX] },
         Msg::MaskedActivation { round: 4, from: 2, words: vec![u64::MAX, 0] },
+        Msg::MaskedChunk {
+            round: 4,
+            from: 2,
+            tag: 1,
+            shard: 3,
+            offset: 4096,
+            total: 16384,
+            words: vec![u64::MAX, 0, 9],
+        },
         Msg::FloatActivation { round: 4, from: 2, vals: vec![1.25, -2.5] },
         Msg::DzBroadcast { round: 4, dz: vec![0.125; 8] },
         Msg::MaskedGradient { round: 4, from: 1, words: vec![42; 3] },
@@ -60,7 +69,12 @@ fn every_protocol_message_roundtrips() {
         Msg::GradientSum { round: 4, words: vec![7, 8, 9] },
         Msg::FloatGradientSum { round: 4, vals: vec![0.25] },
         Msg::Predictions { round: 5, probs: vec![0.9, 0.1] },
-        Msg::SeedShares { epoch: 1, from: 2, sealed: vec![vec![], vec![0xAB; 100]] },
+        Msg::SeedShares {
+            epoch: 1,
+            from: 2,
+            commitment: [7u8; 32],
+            sealed: vec![vec![], vec![0xAB; 100]],
+        },
         Msg::ShareRelay { epoch: 1, sealed: vec![vec![0xCD; 100], vec![]] },
         Msg::DropoutNotice { round: 4, dropped: vec![3] },
         Msg::SurrenderShares { round: 4, from: 1, bundles: vec![(3, vec![0xEF; 84])] },

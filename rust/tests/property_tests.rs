@@ -70,9 +70,18 @@ fn prop_msg_roundtrip_randomized() {
         let m = Msg::MaskedGradient {
             round: rng.next_u32(),
             from: rng.next_range(0, 100) as u16,
-            words,
+            words: words.clone(),
         };
         assert_msg_roundtrip(&m);
+        assert_msg_roundtrip(&Msg::MaskedChunk {
+            round: rng.next_u32(),
+            from: rng.next_range(0, 100) as u16,
+            tag: rng.next_range(0, 2) as u8,
+            shard: rng.next_range(0, 64) as u16,
+            offset: rng.next_u32(),
+            total: rng.next_u32(),
+            words,
+        });
 
         let keys: Vec<Option<[u8; 32]>> = (0..rng.next_range(1, 6))
             .map(|_| {
@@ -97,9 +106,12 @@ fn prop_msg_roundtrip_randomized() {
                 b
             })
             .collect();
+        let mut commitment = [0u8; 32];
+        rng.fill(&mut commitment);
         assert_msg_roundtrip(&Msg::SeedShares {
             epoch: rng.next_u64(),
             from: rng.next_range(0, 16) as u16,
+            commitment,
             sealed: sealed.clone(),
         });
         assert_msg_roundtrip(&Msg::ShareRelay { epoch: rng.next_u64(), sealed });
@@ -131,6 +143,32 @@ fn prop_secagg_sum_invariant() {
             let want: f32 = tensors.iter().map(|t| t[j]).sum();
             assert!((got[j] - want).abs() < 1e-3, "n={n} len={len} j={j}");
         }
+    }
+}
+
+/// Offset-window consistency of the seekable mask PRG: any
+/// `(offset, len)` window of a [`prg::MaskStream`] — aligned to the
+/// ChaCha20 block or not — equals the corresponding slice of the
+/// monolithic expansion, in both mask directions.
+#[test]
+fn prop_mask_stream_windows_match_monolithic() {
+    let mut rng = DetRng::from_seed(77);
+    for _ in 0..ITERS {
+        let mut ss = [0u8; 32];
+        rng.fill(&mut ss);
+        let len = rng.next_range(1, 400) as usize;
+        let round = rng.next_u64();
+        let tag = rng.next_u32();
+        let (me, peer) = if rng.next_f64() < 0.5 { (0usize, 1usize) } else { (1, 0) };
+        let full = prg::pairwise_mask(&ss, me, peer, round, tag, len);
+        let stream = prg::MaskStream::pairwise(&ss, me, peer, round, tag);
+        let off = rng.next_range(0, len as u64) as usize;
+        let wlen = rng.next_range(1, (len - off) as u64 + 1) as usize;
+        assert_eq!(
+            stream.window(off, wlen),
+            full[off..off + wlen],
+            "len={len} off={off} wlen={wlen} me={me}"
+        );
     }
 }
 
