@@ -89,9 +89,17 @@ pub struct RunConfig {
     /// bit-identical to a monolithic one.
     pub chunk_words: Option<usize>,
     /// Streaming pipeline: shards per masked tensor (`--shards`, ≥ 1).
-    /// Each sender's shard is committed into the aggregate as soon as
-    /// that sender completes it. Only meaningful with `chunk_words`.
+    /// Every validated chunk folds into its shard's accumulator on
+    /// arrival. Only meaningful with `chunk_words`.
     pub shards: usize,
+    /// Shard-parallel aggregation (`--agg-workers`, ≥ 1): the number
+    /// of aggregator-side accumulator workers each chunked fan-in
+    /// distributes its shards across (capped at the shard count).
+    /// 1 = the inline sequential path, no threads. Any worker count
+    /// produces bit-identical reports — ℤ₂⁶⁴ wrap-addition commutes
+    /// and the merge stitches disjoint shard ranges. Only meaningful
+    /// with `chunk_words`.
+    pub agg_workers: usize,
 }
 
 impl RunConfig {
@@ -114,6 +122,7 @@ impl RunConfig {
             stall_cap_ms: None,
             chunk_words: None,
             shards: 1,
+            agg_workers: 1,
         })
     }
 

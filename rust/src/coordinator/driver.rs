@@ -58,12 +58,18 @@ pub struct Built<'e> {
 
 /// Validate the streaming flags against the run shape and produce the
 /// per-party [`StreamCfg`]. Rejecting here means `--chunk-words 0`,
-/// `--shards 0`, or a shard count exceeding the tensor length fail at
-/// configuration time with a clear error instead of panicking
-/// mid-round.
+/// `--shards 0`, `--agg-workers 0`, or shard/worker counts exceeding
+/// their caps fail at configuration time with a clear error instead of
+/// panicking mid-round.
 pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
     if cfg.shards == 0 {
         bail!("--shards 0 is invalid (need at least 1 shard)");
+    }
+    if cfg.agg_workers == 0 {
+        bail!("--agg-workers 0 is invalid (need at least 1 aggregation worker)");
+    }
+    if cfg.agg_workers > MAX_AGG_WORKERS {
+        bail!("--agg-workers {} exceeds the cap ({MAX_AGG_WORKERS})", cfg.agg_workers);
     }
     let Some(cw) = cfg.chunk_words else {
         if cfg.shards != 1 {
@@ -71,6 +77,13 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
                 "--shards {} requires --chunk-words (sharding only applies to the chunked \
                  streaming pipeline)",
                 cfg.shards
+            );
+        }
+        if cfg.agg_workers != 1 {
+            bail!(
+                "--agg-workers {} requires --chunk-words (only chunked fan-ins are \
+                 shard-structured, so only they can be folded in parallel)",
+                cfg.agg_workers
             );
         }
         return Ok(StreamCfg::monolithic());
@@ -98,7 +111,28 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
             cfg.shards
         );
     }
-    Ok(StreamCfg::chunked(cw, cfg.shards))
+    Ok(StreamCfg::chunked(cw, cfg.shards).with_workers(cfg.agg_workers))
+}
+
+/// Hard cap on `--agg-workers`: far above any sensible shard fan-out,
+/// low enough that a typo cannot spawn thousands of OS threads.
+pub const MAX_AGG_WORKERS: usize = 256;
+
+/// Validate the dropout-detection timing knobs. A zero floor or cap
+/// would produce a zero-width quiescence window that instantly
+/// declares every peer stalled (a busy-spin dropout storm on the
+/// timeout-based transports), so both are rejected at configuration
+/// time; [`StallClock::new`](crate::net::StallClock) additionally
+/// clamps as defense in depth.
+pub fn validate_timing(cfg: &RunConfig) -> Result<()> {
+    if cfg.stall_timeout_ms == Some(0) {
+        bail!("--stall-timeout-ms 0 is invalid (a zero-width quiescence window declares every \
+               peer stalled instantly)");
+    }
+    if cfg.stall_cap_ms == Some(0) {
+        bail!("--stall-cap-ms 0 is invalid (the adaptive window cap must be positive)");
+    }
+    Ok(())
 }
 
 /// Generate data, partition it, wire up all parties, and lay out the
@@ -120,6 +154,7 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
         }
     }
     let stream = validate_streaming(cfg)?;
+    validate_timing(cfg)?;
     let (schema, spec, _) = by_name(&cfg.model.dataset).context("unknown dataset")?;
     let data = generate(&schema, cfg.n_rows, cfg.seed);
     let mut vertical = partition(&data, &spec);
@@ -424,6 +459,48 @@ mod tests {
         c.chunk_words = Some(1024);
         c.shards = 4;
         assert_eq!(validate_streaming(&c).unwrap(), StreamCfg::chunked(1024, 4));
+    }
+
+    #[test]
+    fn agg_worker_flags_validated() {
+        // zero workers rejected
+        let mut c = cfg();
+        c.agg_workers = 0;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("--agg-workers 0"));
+        // workers without chunking rejected
+        let mut c = cfg();
+        c.agg_workers = 4;
+        assert!(validate_streaming(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("requires --chunk-words"));
+        // a runaway worker count rejected
+        let mut c = cfg();
+        c.chunk_words = Some(1024);
+        c.agg_workers = MAX_AGG_WORKERS + 1;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("cap"));
+        // a valid shard-parallel config carries the worker count through
+        let mut c = cfg();
+        c.chunk_words = Some(1024);
+        c.shards = 4;
+        c.agg_workers = 3;
+        assert_eq!(validate_streaming(&c).unwrap(), StreamCfg::chunked(1024, 4).with_workers(3));
+    }
+
+    #[test]
+    fn zero_stall_knobs_rejected() {
+        let mut c = cfg();
+        c.stall_timeout_ms = Some(0);
+        assert!(validate_timing(&c).unwrap_err().to_string().contains("--stall-timeout-ms 0"));
+        let mut c = cfg();
+        c.stall_cap_ms = Some(0);
+        assert!(validate_timing(&c).unwrap_err().to_string().contains("--stall-cap-ms 0"));
+        // positive values and the defaults pass
+        assert!(validate_timing(&cfg()).is_ok());
+        let mut c = cfg();
+        c.stall_timeout_ms = Some(100);
+        c.stall_cap_ms = Some(2000);
+        assert!(validate_timing(&c).is_ok());
     }
 
     #[test]

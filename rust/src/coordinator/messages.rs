@@ -69,6 +69,14 @@ pub enum Msg {
     /// Aggregator → active: Σ passive masked gradients (still masked by
     /// the active party's own total mask — §4.0.2's privacy argument).
     GradientSum { round: u32, words: Vec<u64> },
+    /// Aggregator → active: one window of the chunked `GradientSum`
+    /// downlink (the streaming pipeline; mirrors `MaskedChunk` minus
+    /// the `from`/`tag` fields — the 1:1 link has one sender and one
+    /// tensor). Windows ride in stream order and never cross a shard
+    /// boundary. Header cost: 19 bytes per chunk vs 9 for the
+    /// monolithic `GradientSum` (the Table-2 accounting rule, see
+    /// `coordinator::streaming::grad_chunk_overhead_bytes`).
+    GradientChunk { round: u32, shard: u16, offset: u32, total: u32, words: Vec<u64> },
     FloatGradientSum { round: u32, vals: Vec<f32> },
 
     // ---- testing phase (§4.0.3) ----
@@ -120,6 +128,7 @@ const T_SHARE_RELAY: u8 = 19;
 const T_DROPOUT_NOTICE: u8 = 20;
 const T_SURRENDER_SHARES: u8 = 21;
 const T_MASKED_CHUNK: u8 = 22;
+const T_GRADIENT_CHUNK: u8 = 23;
 
 fn write_blob_list(w: &mut Writer, blobs: &[Vec<u8>]) {
     w.u32(blobs.len() as u32);
@@ -263,6 +272,14 @@ impl Msg {
                 w.u32(*round);
                 w.u64s(words);
             }
+            Msg::GradientChunk { round, shard, offset, total, words } => {
+                w.u8(T_GRADIENT_CHUNK);
+                w.u32(*round);
+                w.u16(*shard);
+                w.u32(*offset);
+                w.u32(*total);
+                w.u64s(words);
+            }
             Msg::FloatGradientSum { round, vals } => {
                 w.u8(T_FLOAT_GRADIENT_SUM);
                 w.u32(*round);
@@ -361,6 +378,13 @@ impl Msg {
                 Msg::FloatGradient { round: r.u32()?, from: r.u16()?, vals: r.f32s()? }
             }
             T_GRADIENT_SUM => Msg::GradientSum { round: r.u32()?, words: r.u64s()? },
+            T_GRADIENT_CHUNK => Msg::GradientChunk {
+                round: r.u32()?,
+                shard: r.u16()?,
+                offset: r.u32()?,
+                total: r.u32()?,
+                words: r.u64s()?,
+            },
             T_FLOAT_GRADIENT_SUM => Msg::FloatGradientSum { round: r.u32()?, vals: r.f32s()? },
             T_PREDICTIONS => Msg::Predictions { round: r.u32()?, probs: r.f32s()? },
             T_SEED_SHARES => Msg::SeedShares {
@@ -449,6 +473,13 @@ mod tests {
         roundtrip(Msg::MaskedGradient { round: 2, from: 1, words: vec![5; 9] });
         roundtrip(Msg::FloatGradient { round: 2, from: 1, vals: vec![-1.0; 3] });
         roundtrip(Msg::GradientSum { round: 2, words: vec![11, 12] });
+        roundtrip(Msg::GradientChunk {
+            round: 2,
+            shard: 3,
+            offset: 4032,
+            total: 5184,
+            words: vec![11, 12, u64::MAX],
+        });
         roundtrip(Msg::FloatGradientSum { round: 2, vals: vec![3.0] });
         roundtrip(Msg::Predictions { round: 5, probs: vec![0.9, 0.1] });
         roundtrip(Msg::SeedShares {
@@ -500,5 +531,15 @@ mod tests {
         };
         // the documented per-chunk Table-2 accounting constant
         assert_eq!(m.encode().len() as u64, CHUNK_MSG_HEADER_BYTES + 250 * 8);
+    }
+
+    #[test]
+    fn gradient_chunk_header_is_19_bytes() {
+        use crate::coordinator::streaming::{GRAD_CHUNK_MSG_HEADER_BYTES, GRAD_SUM_HEADER_BYTES};
+        let m =
+            Msg::GradientChunk { round: 0, shard: 0, offset: 0, total: 1000, words: vec![0; 250] };
+        assert_eq!(m.encode().len() as u64, GRAD_CHUNK_MSG_HEADER_BYTES + 250 * 8);
+        let s = Msg::GradientSum { round: 0, words: vec![0; 1000] };
+        assert_eq!(s.encode().len() as u64, GRAD_SUM_HEADER_BYTES + 1000 * 8);
     }
 }

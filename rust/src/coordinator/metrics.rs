@@ -33,9 +33,20 @@ pub struct Metrics {
     entries: HashMap<(Node, Phase), CpuEntry>,
     /// Peak bytes a node held in fan-in buffers at any point of the
     /// run — the memory claim of the streaming aggregation pipeline
-    /// (monolithic fan-ins buffer O(n·d); chunked base-protocol
-    /// fan-ins O(d + n·shard)).
+    /// (monolithic fan-ins buffer O(n·d); chunked fan-ins hold O(d)
+    /// shard accumulators, in base-protocol *and* dropout-tolerant
+    /// runs — tolerant purge history spills to the rollback log,
+    /// metered separately by [`record_spilled`](Metrics::record_spilled)).
     peak_buffered: HashMap<Node, u64>,
+    /// Peak resident bytes per (node, shard) — the per-shard view of
+    /// `peak_buffered` for shard-parallel aggregation (`--agg-workers`):
+    /// the footprint each shard's accumulator worker owns.
+    peak_shard_buffered: HashMap<(Node, usize), u64>,
+    /// Peak bytes a node spilled to its rollback log (dropout-tolerant
+    /// chunked runs; 0 everywhere else). Spilled bytes are on disk,
+    /// not resident — kept apart from `peak_buffered` so the RAM claim
+    /// stays honest.
+    peak_spilled: HashMap<Node, u64>,
 }
 
 impl Metrics {
@@ -81,6 +92,31 @@ impl Metrics {
         self.peak_buffered.get(&node).copied().unwrap_or(0)
     }
 
+    /// Record the current resident bytes of one shard's accumulator
+    /// state at a node; the meter keeps the maximum ever observed.
+    pub fn record_shard_buffered(&mut self, node: Node, shard: usize, current_bytes: u64) {
+        let peak = self.peak_shard_buffered.entry((node, shard)).or_default();
+        *peak = (*peak).max(current_bytes);
+    }
+
+    /// Peak resident bytes observed for `shard` at `node` (0 if never
+    /// metered).
+    pub fn peak_shard_buffered_bytes(&self, node: Node, shard: usize) -> u64 {
+        self.peak_shard_buffered.get(&(node, shard)).copied().unwrap_or(0)
+    }
+
+    /// Record the current rollback-log spill level of a node; the
+    /// meter keeps the maximum ever observed.
+    pub fn record_spilled(&mut self, node: Node, current_bytes: u64) {
+        let peak = self.peak_spilled.entry(node).or_default();
+        *peak = (*peak).max(current_bytes);
+    }
+
+    /// Peak rollback-log bytes spilled by `node` (0 if never metered).
+    pub fn peak_spilled_bytes(&self, node: Node) -> u64 {
+        self.peak_spilled.get(&node).copied().unwrap_or(0)
+    }
+
     /// Fold another party's meters into this one (used by the driver to
     /// assemble one run-wide view from per-party meters).
     pub fn merge(&mut self, other: Metrics) {
@@ -91,6 +127,12 @@ impl Metrics {
         }
         for (node, peak) in other.peak_buffered {
             self.record_buffered(node, peak);
+        }
+        for ((node, shard), peak) in other.peak_shard_buffered {
+            self.record_shard_buffered(node, shard, peak);
+        }
+        for (node, peak) in other.peak_spilled {
+            self.record_spilled(node, peak);
         }
     }
 
@@ -161,6 +203,28 @@ mod tests {
         m.merge(other);
         assert_eq!(m.peak_buffered_bytes(AGGREGATOR), 300);
         assert_eq!(m.peak_buffered_bytes(client(0)), 0);
+    }
+
+    #[test]
+    fn per_shard_and_spill_peaks_keep_maximum_and_merge() {
+        let mut m = Metrics::new();
+        m.record_shard_buffered(AGGREGATOR, 0, 64);
+        m.record_shard_buffered(AGGREGATOR, 0, 32);
+        m.record_shard_buffered(AGGREGATOR, 1, 16);
+        m.record_spilled(AGGREGATOR, 500);
+        m.record_spilled(AGGREGATOR, 100);
+        assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 0), 64);
+        assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 1), 16);
+        assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 2), 0, "unmetered shard");
+        assert_eq!(m.peak_spilled_bytes(AGGREGATOR), 500);
+        assert_eq!(m.peak_spilled_bytes(client(0)), 0);
+        let mut other = Metrics::new();
+        other.record_shard_buffered(AGGREGATOR, 1, 128);
+        other.record_spilled(AGGREGATOR, 900);
+        m.merge(other);
+        assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 0), 64);
+        assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 1), 128);
+        assert_eq!(m.peak_spilled_bytes(AGGREGATOR), 900);
     }
 
     #[test]

@@ -11,20 +11,23 @@
 //!   machines run on every transport.
 //! * [`messages`] — the §4 protocol messages and wire encoding.
 //! * [`streaming`] — the chunked streaming pipeline (`--chunk-words`/
-//!   `--shards`): shard layout, the sender-side chunk plan, and the
-//!   aggregator-side [`streaming::ChunkAssembler`] that folds masked
-//!   chunks shard by shard instead of buffering one full tensor per
-//!   sender. Bit-identical reports to the monolithic path; see the
-//!   module docs for the memory model and the dropout-purge
-//!   interaction.
+//!   `--shards`/`--agg-workers`): shard layout, the sender-side chunk
+//!   plan, and the aggregator-side [`streaming::ChunkAssembler`] — a
+//!   routing layer over per-shard accumulator workers that folds
+//!   masked chunks on arrival instead of buffering one full tensor
+//!   per sender, with a deterministic merge and a rollback log for
+//!   exact dropout purge. Bit-identical reports to the monolithic
+//!   path for any worker count; see the module docs for the memory
+//!   model.
 //! * [`driver`] — builds the party set, lays out the static round
 //!   schedule (setup → training with §5.1 key rotation → testing),
 //!   pumps the configured [`Transport`](crate::net::Transport), and
 //!   assembles a [`RunReport`].
 //! * [`backend`] — PJRT-artifact or pure-Rust compute.
 //! * [`metrics`] — per-(node, phase) CPU accounting with the security-
-//!   overhead bucket (Table 1), plus the peak fan-in-buffer meter
-//!   behind the streaming pipeline's memory claim.
+//!   overhead bucket (Table 1), plus the peak fan-in-buffer, per-shard
+//!   peak, and rollback-spill meters behind the streaming pipeline's
+//!   memory claims.
 //! * [`config`] — experiment configuration (§6.3's setup) including
 //!   the transport selection and the streaming knobs.
 
@@ -40,7 +43,8 @@ pub mod streaming;
 pub use backend::Backend;
 pub use config::{BackendKind, RunConfig, SecurityMode, TransportKind};
 pub use driver::{
-    build, run_experiment, summarize, validate_streaming, Built, Experiment, RunReport, Summary,
+    build, run_experiment, summarize, validate_streaming, validate_timing, Built, Experiment,
+    RunReport, Summary, MAX_AGG_WORKERS,
 };
 pub use messages::Msg;
 pub use metrics::Metrics;

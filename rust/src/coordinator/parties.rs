@@ -286,6 +286,9 @@ pub struct ActiveParty<'e> {
     index: HashMap<u64, usize>,
     /// Cached per-round state for the backward pass.
     last_batch_x: Option<Mat>,
+    /// Reassembles the chunked `GradientChunk` downlink (streaming
+    /// runs only; single sender, single inline executor).
+    gsum_asm: ChunkAssembler,
     // --- event-driven round state ---
     phase: Phase,
     kind: RoundKind,
@@ -329,6 +332,7 @@ impl<'e> ActiveParty<'e> {
             rng: party_rng(seed, 0),
             index,
             last_batch_x: None,
+            gsum_asm: ChunkAssembler::new(false, stream.shards.max(1), 1),
             phase: Phase::Setup,
             kind: RoundKind::Setup,
             round: 0,
@@ -600,6 +604,7 @@ impl<'e> Party for ActiveParty<'e> {
         self.batch_ids = spec.ids.clone();
         self.own = None;
         self.pending_gsum = None;
+        self.gsum_asm.reset()?;
         match spec.kind {
             // The aggregator opens setup with RequestKeys; we respond.
             RoundKind::Setup => self.await_setup = true,
@@ -671,6 +676,17 @@ impl<'e> Party for ActiveParty<'e> {
                 }
             }
             Msg::GradientSum { words, .. } => self.on_grad_sum(GradSum::Words(words), out)?,
+            Msg::GradientChunk { shard, offset, total, words, .. } => {
+                let t0 = Instant::now();
+                // single-sender stream: the aggregator is "sender 0"
+                self.gsum_asm.add_chunk(0, shard, offset, total, &words)?;
+                self.rec(t0, false);
+                if self.gsum_asm.complete_count() == 1 {
+                    let words =
+                        self.gsum_asm.take_sum()?.context("complete downlink stream")?;
+                    self.on_grad_sum(GradSum::Words(words), out)?;
+                }
+            }
             Msg::FloatGradientSum { vals, .. } => self.on_grad_sum(GradSum::Floats(vals), out)?,
             Msg::Predictions { round, probs } => {
                 out.note(Note::Predictions { round, probs });
@@ -1028,11 +1044,16 @@ impl<'e> Party for PassiveParty<'e> {
 /// keyed by sender so sums run in client order regardless of arrival
 /// order — the transport-independence invariant. Chunked fan-ins
 /// (`--chunk-words`) run through a [`ChunkAssembler`] per tensor tag
-/// instead: ℤ₂⁶⁴ wrap-addition is order-independent, so shard-level
-/// folding is bit-identical to the buffered sum while holding
-/// O(d + n·shard) instead of O(n·d) in the base protocol (see
-/// [`streaming`](super::streaming) for the memory model and the
-/// dropout-tolerant exception).
+/// instead: ℤ₂⁶⁴ wrap-addition is order-independent, so committing
+/// every validated chunk into its shard accumulator on arrival is
+/// bit-identical to the buffered sum while holding O(d) instead of
+/// O(n·d) — with `--agg-workers` > 1 the folding itself fans out
+/// across per-shard accumulator workers, and dropout-tolerant runs
+/// keep exact purge via the rollback log (see
+/// [`streaming`](super::streaming) for the memory model). When the
+/// streaming pipeline is on, the aggregator→active `GradientSum` is
+/// chunked too ([`Msg::GradientChunk`]), so the downlink streams with
+/// the same shard layout as the uplinks.
 pub struct Aggregator<'e> {
     pub n_clients: usize,
     pub hidden: usize,
@@ -1044,6 +1065,9 @@ pub struct Aggregator<'e> {
     cfg: ModelConfig,
     /// `groups[i]` = feature group held by client `i + 1`.
     groups: Vec<usize>,
+    /// Streaming-pipeline parameters (drives the chunked
+    /// `GradientSum` downlink and the assembler shard/worker shape).
+    stream: StreamCfg,
     metrics: Metrics,
     // --- event-driven round state ---
     phase: Phase,
@@ -1068,6 +1092,9 @@ pub struct Aggregator<'e> {
     /// empty out on consumption, so stall diagnosis needs the flags).
     acts_done: bool,
     grads_done: bool,
+    /// Last assembler resident-byte total seen by `note_buffered` —
+    /// gates the per-shard re-metering off the per-chunk hot path.
+    last_asm_buffered: u64,
     // --- dropout-tolerance state (enabled by `threshold`) ---
     /// Shamir threshold t: any t surviving clients can reconstruct a
     /// dropped client's seed. None = base protocol (a drop stalls).
@@ -1112,10 +1139,12 @@ impl<'e> Aggregator<'e> {
         // party's init (same seed → same init as ModelParams::init)
         let params = ModelParams::init(cfg, seed);
         assert_eq!(groups.len(), cfg.n_clients() - 1, "one group per passive client");
-        // exact dropout purge needs per-sender separability until the
-        // fan-in is consumed, so tolerant runs defer shard commitment
+        // exact dropout purge needs every sender's committed words to
+        // stay subtractable until the fan-in is consumed, so tolerant
+        // runs keep a rollback log beside the shard accumulators
         let revocable = threshold.is_some();
         let shards = stream.shards.max(1);
+        let workers = stream.agg_workers.max(1);
         Aggregator {
             n_clients: cfg.n_clients(),
             hidden: cfg.hidden,
@@ -1125,6 +1154,7 @@ impl<'e> Aggregator<'e> {
             backend,
             cfg: cfg.clone(),
             groups,
+            stream,
             metrics: Metrics::new(),
             phase: Phase::Setup,
             kind: RoundKind::Setup,
@@ -1140,10 +1170,11 @@ impl<'e> Aggregator<'e> {
             acts_float: BTreeMap::new(),
             grads_exact: BTreeMap::new(),
             grads_float: BTreeMap::new(),
-            acts_asm: ChunkAssembler::new(revocable, shards),
-            grads_asm: ChunkAssembler::new(revocable, shards),
+            acts_asm: ChunkAssembler::new(revocable, shards, workers),
+            grads_asm: ChunkAssembler::new(revocable, shards, workers),
             acts_done: false,
             grads_done: false,
+            last_asm_buffered: 0,
             threshold,
             live: (0..cfg.n_clients() as u16).collect(),
             session_epoch: 0,
@@ -1171,8 +1202,24 @@ impl<'e> Aggregator<'e> {
             + self.acts_float.values().map(|v| v.len() * 4).sum::<usize>()
             + self.grads_exact.values().map(|v| v.len() * 8).sum::<usize>()
             + self.grads_float.values().map(|v| v.len() * 4).sum::<usize>();
-        let cur = mono as u64 + self.acts_asm.buffered_bytes() + self.grads_asm.buffered_bytes();
-        self.metrics.record_buffered(AGGREGATOR, cur);
+        let asm_cur = self.acts_asm.buffered_bytes() + self.grads_asm.buffered_bytes();
+        self.metrics.record_buffered(AGGREGATOR, mono as u64 + asm_cur);
+        self.metrics.record_spilled(
+            AGGREGATOR,
+            self.acts_asm.spilled_bytes() + self.grads_asm.spilled_bytes(),
+        );
+        // per-shard footprints are a pure function of the fixed shard
+        // layouts, so re-meter them only when an assembler's resident
+        // state changed (a layout was fixed or consumed) — not on the
+        // per-chunk hot path
+        if asm_cur != self.last_asm_buffered {
+            self.last_asm_buffered = asm_cur;
+            let acts = self.acts_asm.shard_buffered_bytes();
+            let grads = self.grads_asm.shard_buffered_bytes();
+            for (k, (a, g)) in acts.iter().zip(&grads).enumerate() {
+                self.metrics.record_shard_buffered(AGGREGATOR, k, a + g);
+            }
+        }
     }
 
     /// Wrap-sum equal-length masked word vectors (Eq. 5's fan-in).
@@ -1296,7 +1343,7 @@ impl<'e> Aggregator<'e> {
         // sum is ℤ₂⁶⁴-only, where addition order is immaterial.
         let exact: Vec<Vec<u64>> = std::mem::take(&mut self.acts_exact).into_values().collect();
         let float: Vec<Vec<f32>> = std::mem::take(&mut self.acts_float).into_values().collect();
-        let chunked = self.acts_asm.take_sum();
+        let chunked = self.acts_asm.take_sum()?;
         let t0 = Instant::now();
         let z = if !exact.is_empty() || chunked.is_some() {
             let mut acc = match chunked {
@@ -1355,20 +1402,20 @@ impl<'e> Aggregator<'e> {
     /// masked by the active party's total mask — §4.0.2's privacy
     /// argument), add the recovered dropped-client gradient masks, and
     /// forward to the active party.
-    fn maybe_sum_gradients(&mut self, out: &mut Outbox) {
+    fn maybe_sum_gradients(&mut self, out: &mut Outbox) -> Result<()> {
         let n_passive = self.live_passives();
         let contributed =
             self.grads_exact.len() + self.grads_float.len() + self.grads_asm.complete_count();
         if n_passive == 0 || !self.unrecovered.is_empty() || contributed < n_passive {
-            return;
+            return Ok(());
         }
         self.grads_done = true;
         let exact: Vec<Vec<u64>> = std::mem::take(&mut self.grads_exact).into_values().collect();
         let float: Vec<Vec<f32>> = std::mem::take(&mut self.grads_float).into_values().collect();
-        let chunked = self.grads_asm.take_sum();
+        let chunked = self.grads_asm.take_sum()?;
         let round = self.round;
         let t0 = Instant::now();
-        let msg = if !exact.is_empty() || chunked.is_some() {
+        if !exact.is_empty() || chunked.is_some() {
             let mut acc = match chunked {
                 Some(mut g) => {
                     for p in &exact {
@@ -1388,12 +1435,38 @@ impl<'e> Aggregator<'e> {
                     *a = a.wrapping_add(*v);
                 }
             }
-            Msg::GradientSum { round, words: acc }
+            match self.stream.chunk_words {
+                // streaming runs chunk the 1:1 downlink too, so a
+                // memory-constrained active party consumes the sum
+                // window by window (Table-2 delta:
+                // `streaming::grad_chunk_overhead_bytes`)
+                Some(cw) => {
+                    let layout = ShardLayout::new(acc.len(), self.stream.shards);
+                    self.rec(t0, false);
+                    for c in chunk_plan(layout, cw) {
+                        out.send(
+                            Addr::Client(0),
+                            Msg::GradientChunk {
+                                round,
+                                shard: c.shard as u16,
+                                offset: c.offset as u32,
+                                total: acc.len() as u32,
+                                words: acc[c.offset..c.offset + c.len].to_vec(),
+                            },
+                        );
+                    }
+                }
+                None => {
+                    self.rec(t0, false);
+                    out.send(Addr::Client(0), Msg::GradientSum { round, words: acc });
+                }
+            }
         } else {
-            Msg::FloatGradientSum { round, vals: Self::float_sum(&float) }
-        };
-        self.rec(t0, false);
-        out.send(Addr::Client(0), msg);
+            let msg = Msg::FloatGradientSum { round, vals: Self::float_sum(&float) };
+            self.rec(t0, false);
+            out.send(Addr::Client(0), msg);
+        }
+        Ok(())
     }
 
     // -----------------------------------------------------------------
@@ -1419,9 +1492,10 @@ impl<'e> Aggregator<'e> {
             self.grads_exact.remove(g);
             self.grads_float.remove(g);
             // chunked contributions are revocable in tolerant runs:
-            // held shards and in-flight buffers vanish with the sender
-            self.acts_asm.purge(*g);
-            self.grads_asm.purge(*g);
+            // the rollback log replays the sender's committed chunks
+            // back out of the shard accumulators
+            self.acts_asm.purge(*g)?;
+            self.grads_asm.purge(*g)?;
         }
         if !self.live.contains(&0) {
             bail!(DropoutError::ActivePartyDropped);
@@ -1482,7 +1556,7 @@ impl<'e> Aggregator<'e> {
         }
         self.rec(t0, true);
         self.maybe_sum_activations(out)?;
-        self.maybe_sum_gradients(out);
+        self.maybe_sum_gradients(out)?;
         Ok(())
     }
 
@@ -1663,8 +1737,8 @@ impl<'e> Party for Aggregator<'e> {
         self.acts_float.clear();
         self.grads_exact.clear();
         self.grads_float.clear();
-        self.acts_asm.reset();
-        self.grads_asm.reset();
+        self.acts_asm.reset()?;
+        self.grads_asm.reset()?;
         self.acts_done = false;
         self.grads_done = false;
         if spec.kind == RoundKind::Setup || spec.rotate {
@@ -1742,12 +1816,12 @@ impl<'e> Party for Aggregator<'e> {
             Msg::MaskedGradient { from, words, .. } => {
                 self.grads_exact.insert(from, words);
                 self.note_buffered();
-                self.maybe_sum_gradients(out);
+                self.maybe_sum_gradients(out)?;
             }
             Msg::FloatGradient { from, vals, .. } => {
                 self.grads_float.insert(from, vals);
                 self.note_buffered();
-                self.maybe_sum_gradients(out);
+                self.maybe_sum_gradients(out)?;
             }
             Msg::MaskedChunk { from, tag, shard, offset, total, words, .. } => {
                 let t0 = Instant::now();
@@ -1762,7 +1836,7 @@ impl<'e> Party for Aggregator<'e> {
                         self.grads_asm.add_chunk(from, shard, offset, total, &words)?;
                         self.rec(t0, false);
                         self.note_buffered();
-                        self.maybe_sum_gradients(out);
+                        self.maybe_sum_gradients(out)?;
                     }
                     t => bail!("masked chunk with unknown tensor tag {t}"),
                 }

@@ -1,5 +1,7 @@
 //! The chunked streaming pipeline: shard layout, the sender-side chunk
-//! plan, and the aggregator-side [`ChunkAssembler`].
+//! plan, and the aggregator-side [`ChunkAssembler`] — since the
+//! shard-parallel refactor, a *routing layer* over per-shard
+//! accumulator workers.
 //!
 //! ## Memory model
 //!
@@ -7,56 +9,105 @@
 //! sender until every live sender contributed — O(n·d) peak at the
 //! aggregator. The streaming pipeline splits each tensor into
 //! `shards` contiguous shards, streamed as chunks of ≤ `chunk_words`
-//! words each, and the aggregator folds arriving chunks into one
-//! per-sender *current-shard* buffer:
+//! words each. Because ℤ₂⁶⁴ wrap-addition is order-independent, every
+//! validated chunk is folded into its shard's accumulator *on
+//! arrival* — the aggregator's resident fan-in state is exactly one
+//! tensor-length set of shard accumulators, O(d), for the base
+//! protocol **and** dropout-tolerant runs alike.
 //!
-//! * **Base protocol** (no dropout tolerance): a completed shard is
-//!   committed into the single global accumulator immediately —
-//!   ℤ₂⁶⁴ wrap-addition is order-independent, so early commitment is
-//!   bit-identical to the monolithic sum. Peak memory is
-//!   O(d + n · shard), the O(n·chunk + d) regime the streaming
-//!   refactor exists for.
-//! * **Dropout-tolerant runs** (`shamir_threshold` set): commitment is
-//!   deferred — completed shards are *held per sender* until the whole
-//!   fan-in completes, because a sender may be declared dropped at any
-//!   time before the sum is consumed (even with a complete
-//!   contribution buffered, e.g. when it fails to surrender shares)
-//!   and the recovery math re-adds the dropped client's entire total
-//!   mask, which is only sound if its data contributed nothing. Exact
-//!   purge therefore requires per-sender separability until the sum —
-//!   peak memory matches the monolithic path, and the chunked dropout
-//!   run stays bit-identical to the zero-contribution twin.
+//! * **Base protocol** (no dropout tolerance): a sender whose stream
+//!   breaks can never complete, the fan-in can never be consumed, and
+//!   the round aborts as stalled — so chunks already committed for it
+//!   are unreachable garbage, not corruption. Nothing beyond the
+//!   accumulators is retained.
+//! * **Dropout-tolerant runs** (`shamir_threshold` set): a sender may
+//!   be declared dropped at any time before the sum is consumed (even
+//!   with a complete contribution buffered, e.g. when it fails to
+//!   surrender shares), and the recovery math re-adds the dropped
+//!   client's entire total mask — sound only if its data contributed
+//!   nothing. Exact purge therefore needs every sender's committed
+//!   words to stay *subtractable* until the fan-in is consumed. Instead
+//!   of holding per-sender shard sums in RAM (the pre-rollback design,
+//!   which matched the monolithic O(n·d) peak), each committed chunk is
+//!   appended to a per-round **rollback log** — an append-only spill
+//!   file, never resident. Purging a declared-dropped sender *replays*
+//!   the log, wrap-subtracting that sender's entries from the shard
+//!   accumulators record by record (one chunk of transient memory), so
+//!   the dropout-path aggregator RAM peak is O(d) too — below the
+//!   monolithic baseline for the first time. The log is truncated at
+//!   every round reset and deleted when the assembler drops.
+//!
+//! ## Shard-parallel workers (`--agg-workers`)
+//!
+//! With `agg_workers > 1` the assembler spawns that many accumulator
+//! workers (capped at the shard count), each *owning* the accumulators
+//! of the shards `k` with `k % workers == w`. The routing layer — the
+//! per-sender stream validation below — stays single-threaded in the
+//! aggregator's event loop; validated chunk payloads are handed to the
+//! owning worker over a bounded channel (backpressure keeps in-flight
+//! chunks small), and rollback replays route wrap-subtractions the same
+//! way. [`ChunkAssembler::take_sum`] is the deterministic merge: it
+//! drains every worker's accumulators and stitches them into the one
+//! global vector at their fixed shard offsets. Workers perform nothing
+//! but ℤ₂⁶⁴ wrap-arithmetic on disjoint ranges, so any worker count —
+//! including 1, the inline default that spawns no threads — produces
+//! bit-identical sums on every transport (`tests/chunk_equivalence.rs`
+//! sweeps worker counts across sim, threaded, and TCP). One metering
+//! caveat: with workers > 1 the aggregator's Table-1 CPU meters time
+//! only the routing layer — the folding runs off-thread. The paper's
+//! measurement configuration is the default inline path (workers = 1),
+//! where attribution stays exact.
 //!
 //! A sender whose chunk stream has a gap (a lost chunk under fault
-//! injection) is marked bad, its buffered state discarded, and its
-//! remaining chunks ignored: at the next quiescence probe it is
-//! declared dropped (tolerant runs) or the round aborts as stalled
-//! (base protocol — where nothing was committed for it only if the
-//! run aborts anyway, which it does: an incomplete fan-in can never
-//! complete without recovery).
+//! injection) is marked bad, its committed words rolled back (tolerant
+//! runs), and its remaining chunks ignored: at the next quiescence
+//! probe it is declared dropped (tolerant runs) or the round aborts as
+//! stalled (base protocol).
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// Chunking parameters, carried from [`RunConfig`](super::RunConfig)
 /// into every party. `chunk_words: None` = the monolithic path.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StreamCfg {
     /// Maximum ℤ₂⁶⁴ words per [`MaskedChunk`](super::messages::Msg)
     /// payload. `None` disables chunking entirely.
     pub chunk_words: Option<usize>,
     /// Shards per tensor (≥ 1). Only meaningful with `chunk_words`.
     pub shards: usize,
+    /// Aggregator-side shard workers (`--agg-workers`, ≥ 1). 1 = the
+    /// inline sequential path (no threads); > 1 spawns that many
+    /// accumulator workers per fan-in, capped at the shard count.
+    pub agg_workers: usize,
+}
+
+impl Default for StreamCfg {
+    fn default() -> Self {
+        Self::monolithic()
+    }
 }
 
 impl StreamCfg {
     pub fn monolithic() -> Self {
-        StreamCfg { chunk_words: None, shards: 1 }
+        StreamCfg { chunk_words: None, shards: 1, agg_workers: 1 }
     }
 
     pub fn chunked(chunk_words: usize, shards: usize) -> Self {
-        StreamCfg { chunk_words: Some(chunk_words), shards }
+        StreamCfg { chunk_words: Some(chunk_words), shards, agg_workers: 1 }
+    }
+
+    /// Set the aggregator-side worker count.
+    pub fn with_workers(mut self, agg_workers: usize) -> Self {
+        self.agg_workers = agg_workers;
+        self
     }
 }
 
@@ -70,6 +121,16 @@ pub const CHUNK_MSG_HEADER_BYTES: u64 = 22;
 /// Wire-header bytes of a monolithic `MaskedActivation` /
 /// `MaskedGradient`: tag(1) + round(4) + from(2) + word-count(4).
 pub const MONO_MSG_HEADER_BYTES: u64 = 11;
+
+/// Wire-header bytes of one `GradientChunk` (the aggregator→active
+/// downlink window): tag(1) + round(4) + shard(2) + offset(4) +
+/// total(4) + word-count(4). No `from` field — the downlink has exactly
+/// one sender.
+pub const GRAD_CHUNK_MSG_HEADER_BYTES: u64 = 19;
+
+/// Wire-header bytes of a monolithic `GradientSum`: tag(1) + round(4)
+/// + word-count(4).
+pub const GRAD_SUM_HEADER_BYTES: u64 = 9;
 
 /// How a tensor of `total` words is cut into `shards` contiguous
 /// shards: the first `total % shards` shards get one extra word, so
@@ -158,73 +219,366 @@ pub fn chunk_overhead_bytes(total: usize, shards: usize, chunk_words: usize) -> 
     CHUNK_MSG_HEADER_BYTES * chunk_count(total, shards, chunk_words) - MONO_MSG_HEADER_BYTES
 }
 
+/// The exact Table-2 byte delta of the chunked aggregator→active
+/// `GradientSum` downlink vs the monolithic message: same `8 · total`
+/// payload, one 19-byte header per `GradientChunk` instead of one
+/// 9-byte `GradientSum` header.
+pub fn grad_chunk_overhead_bytes(total: usize, shards: usize, chunk_words: usize) -> u64 {
+    GRAD_CHUNK_MSG_HEADER_BYTES * chunk_count(total, shards, chunk_words)
+        - GRAD_SUM_HEADER_BYTES
+}
+
 // ---------------------------------------------------------------------------
 // Aggregator-side assembly
 // ---------------------------------------------------------------------------
 
-/// Per-sender assembly state.
-struct SenderState {
-    /// Next expected global word (chunks ride per-sender FIFO order).
-    cursor: usize,
-    /// Current shard index.
-    shard: usize,
-    /// Partial sum of the current shard (filled front to back).
-    buf: Vec<u64>,
-    /// Completed shards awaiting fan-in completion (revocable mode
-    /// only): (shard start, words).
-    held: Vec<(usize, Vec<u64>)>,
+fn wrap_add_at(dst: &mut [u64], at: usize, src: &[u64]) {
+    for (d, s) in dst[at..at + src.len()].iter_mut().zip(src) {
+        *d = d.wrapping_add(*s);
+    }
 }
 
-/// Folds one fan-in's `MaskedChunk` stream into a single global
-/// accumulator, with per-sender shard staging (see the module docs for
-/// the memory model and the revocable/commit split).
+fn wrap_sub_at(dst: &mut [u64], at: usize, src: &[u64]) {
+    for (d, s) in dst[at..at + src.len()].iter_mut().zip(src) {
+        *d = d.wrapping_sub(*s);
+    }
+}
+
+/// The shard accumulators one executor (the inline path or one worker
+/// thread) owns: shard index → (global start word, accumulator).
+#[derive(Default)]
+struct ShardBank {
+    accs: BTreeMap<usize, (usize, Vec<u64>)>,
+}
+
+impl ShardBank {
+    fn init(&mut self, layout: ShardLayout, owned: impl Iterator<Item = usize>) {
+        self.accs.clear();
+        for k in owned {
+            let (start, len) = layout.shard_range(k);
+            self.accs.insert(k, (start, vec![0u64; len]));
+        }
+    }
+
+    fn add(&mut self, shard: usize, at: usize, words: &[u64]) {
+        let (_, acc) = self.accs.get_mut(&shard).expect("shard bank initialized");
+        wrap_add_at(acc, at, words);
+    }
+
+    fn sub(&mut self, shard: usize, at: usize, words: &[u64]) {
+        let (_, acc) = self.accs.get_mut(&shard).expect("shard bank initialized");
+        wrap_sub_at(acc, at, words);
+    }
+
+    fn drain(&mut self) -> Vec<(usize, Vec<u64>)> {
+        std::mem::take(&mut self.accs).into_values().collect()
+    }
+
+    fn reset(&mut self) {
+        self.accs.clear();
+    }
+}
+
+/// One unit of work for a shard worker. Workers do nothing but
+/// ℤ₂⁶⁴ wrap-arithmetic on the shard accumulators they own — all
+/// stream validation happens in the routing layer before dispatch.
+enum Job {
+    Init { layout: ShardLayout },
+    Add { shard: usize, at: usize, words: Vec<u64> },
+    Sub { shard: usize, at: usize, words: Vec<u64> },
+    Drain { reply: Sender<Vec<(usize, Vec<u64>)>> },
+    Reset,
+}
+
+/// Bounded job-queue depth per worker: backpressure keeps the RAM held
+/// by in-flight chunk payloads at ≤ `workers · JOB_QUEUE_DEPTH` chunks.
+const JOB_QUEUE_DEPTH: usize = 64;
+
+fn worker_loop(rx: Receiver<Job>, owned: Vec<usize>) {
+    let mut bank = ShardBank::default();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Init { layout } => bank.init(layout, owned.iter().copied()),
+            Job::Add { shard, at, words } => bank.add(shard, at, &words),
+            Job::Sub { shard, at, words } => bank.sub(shard, at, &words),
+            Job::Drain { reply } => {
+                let _ = reply.send(bank.drain());
+            }
+            Job::Reset => bank.reset(),
+        }
+    }
+}
+
+/// How the shard accumulators execute: inline in the aggregator's
+/// event loop (`agg_workers = 1`, no threads), or across a pool of
+/// worker threads each owning the shards `k % workers == w`.
+enum Exec {
+    Inline(ShardBank),
+    Pool { txs: Vec<SyncSender<Job>>, handles: Vec<JoinHandle<()>> },
+}
+
+impl Exec {
+    fn new(workers: usize, shards: usize) -> Exec {
+        let workers = workers.clamp(1, shards);
+        if workers == 1 {
+            return Exec::Inline(ShardBank::default());
+        }
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = sync_channel::<Job>(JOB_QUEUE_DEPTH);
+            let owned: Vec<usize> = (w..shards).step_by(workers).collect();
+            let handle = std::thread::Builder::new()
+                .name(format!("agg-shard-worker-{w}"))
+                .spawn(move || worker_loop(rx, owned))
+                .expect("spawn shard worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Exec::Pool { txs, handles }
+    }
+
+    fn send(txs: &[SyncSender<Job>], shard: usize, job: Job) {
+        txs[shard % txs.len()].send(job).expect("shard worker alive");
+    }
+
+    fn init(&mut self, layout: ShardLayout) {
+        match self {
+            Exec::Inline(bank) => bank.init(layout, 0..layout.shards),
+            Exec::Pool { txs, .. } => {
+                for tx in txs.iter() {
+                    tx.send(Job::Init { layout }).expect("shard worker alive");
+                }
+            }
+        }
+    }
+
+    fn add(&mut self, shard: usize, at: usize, words: Vec<u64>) {
+        match self {
+            Exec::Inline(bank) => bank.add(shard, at, &words),
+            Exec::Pool { txs, .. } => Self::send(txs, shard, Job::Add { shard, at, words }),
+        }
+    }
+
+    fn sub(&mut self, shard: usize, at: usize, words: Vec<u64>) {
+        match self {
+            Exec::Inline(bank) => bank.sub(shard, at, &words),
+            Exec::Pool { txs, .. } => Self::send(txs, shard, Job::Sub { shard, at, words }),
+        }
+    }
+
+    /// The deterministic merge barrier: every executor hands back its
+    /// (start, accumulator) pairs. Shard ranges are disjoint, so the
+    /// caller's stitch order is immaterial — any worker count yields a
+    /// bit-identical global vector.
+    fn drain(&mut self) -> Vec<(usize, Vec<u64>)> {
+        match self {
+            Exec::Inline(bank) => bank.drain(),
+            Exec::Pool { txs, .. } => {
+                let (rtx, rrx) = channel();
+                for tx in txs.iter() {
+                    tx.send(Job::Drain { reply: rtx.clone() }).expect("shard worker alive");
+                }
+                drop(rtx);
+                let mut out = Vec::new();
+                while let Ok(part) = rrx.recv() {
+                    out.extend(part);
+                }
+                out
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            Exec::Inline(bank) => bank.reset(),
+            Exec::Pool { txs, .. } => {
+                for tx in txs.iter() {
+                    tx.send(Job::Reset).expect("shard worker alive");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rollback log (dropout-tolerant purge)
+// ---------------------------------------------------------------------------
+
+static LOG_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Append-only spill file of committed chunks, `(from, offset, words)`
+/// per record. Exists only in revocable (dropout-tolerant) mode: it is
+/// what makes an already-committed sender's contribution subtractable
+/// without holding per-sender shard sums in RAM. Truncated at every
+/// round reset, deleted on drop.
+struct RollbackLog {
+    file: File,
+    path: PathBuf,
+    spilled: u64,
+}
+
+impl RollbackLog {
+    fn create() -> Result<Self> {
+        let n = LOG_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("vfl-sa-rollback-{}-{n}.bin", std::process::id()));
+        let file = File::options()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("create rollback log {}", path.display()))?;
+        Ok(RollbackLog { file, path, spilled: 0 })
+    }
+
+    /// Record one committed chunk: from(2) ‖ offset(4) ‖ len(4) ‖ words.
+    fn append(&mut self, from: u16, offset: u32, words: &[u64]) -> Result<()> {
+        let mut rec = Vec::with_capacity(10 + words.len() * 8);
+        rec.extend_from_slice(&from.to_le_bytes());
+        rec.extend_from_slice(&offset.to_le_bytes());
+        rec.extend_from_slice(&(words.len() as u32).to_le_bytes());
+        for w in words {
+            rec.extend_from_slice(&w.to_le_bytes());
+        }
+        self.file.write_all(&rec).context("append rollback log")?;
+        self.spilled += rec.len() as u64;
+        Ok(())
+    }
+
+    /// Replay the log, invoking `f(offset, words)` for every record of
+    /// `from` — streamed record by record, so replay holds at most one
+    /// chunk of transient memory.
+    fn replay(&mut self, from: u16, mut f: impl FnMut(u32, Vec<u64>)) -> Result<()> {
+        self.file.seek(SeekFrom::Start(0)).context("seek rollback log")?;
+        {
+            let mut rdr = BufReader::new(&self.file);
+            let mut consumed = 0u64;
+            while consumed < self.spilled {
+                let mut head = [0u8; 10];
+                rdr.read_exact(&mut head).context("rollback log header")?;
+                let sender = u16::from_le_bytes([head[0], head[1]]);
+                let offset = u32::from_le_bytes([head[2], head[3], head[4], head[5]]);
+                let len = u32::from_le_bytes([head[6], head[7], head[8], head[9]]) as usize;
+                consumed += 10 + 8 * len as u64;
+                if sender == from {
+                    let mut buf = vec![0u8; len * 8];
+                    rdr.read_exact(&mut buf).context("rollback log words")?;
+                    let words: Vec<u64> = buf
+                        .chunks_exact(8)
+                        .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+                        .collect();
+                    f(offset, words);
+                } else {
+                    rdr.seek_relative(len as i64 * 8).context("skip rollback record")?;
+                }
+            }
+        }
+        self.file.seek(SeekFrom::End(0)).context("reposition rollback log")?;
+        Ok(())
+    }
+
+    fn truncate(&mut self) -> Result<()> {
+        self.file.set_len(0).context("truncate rollback log")?;
+        self.file.seek(SeekFrom::Start(0)).context("rewind rollback log")?;
+        self.spilled = 0;
+        Ok(())
+    }
+}
+
+impl Drop for RollbackLog {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ChunkAssembler: the routing layer
+// ---------------------------------------------------------------------------
+
+/// Folds one fan-in's `MaskedChunk` stream into per-shard accumulators
+/// (see the module docs for the memory model, the worker pool, and the
+/// rollback log). This struct is the *routing layer*: it validates
+/// each sender's stream (cursor order, shard boundaries, gaps), routes
+/// payloads to the owning executor, logs committed chunks in revocable
+/// mode, and performs the deterministic merge at [`take_sum`].
+///
+/// [`take_sum`]: ChunkAssembler::take_sum
 pub struct ChunkAssembler {
-    /// Deferred commitment for exact dropout purge (threshold set).
+    /// Rollback-capable commitment for exact dropout purge
+    /// (threshold set).
     revocable: bool,
     shards: usize,
     layout: Option<ShardLayout>,
-    global: Vec<u64>,
-    senders: BTreeMap<u16, SenderState>,
+    /// Per-sender next expected global word (incomplete, non-bad
+    /// senders only; chunks ride per-sender FIFO order).
+    cursors: BTreeMap<u16, usize>,
     complete: BTreeSet<u16>,
-    /// Senders whose stream broke (gap/overlap): state discarded,
+    /// Senders whose stream broke (gap/overlap): state rolled back,
     /// further chunks ignored until the next round reset.
     bad: BTreeSet<u16>,
+    /// Senders whose committed words were already replayed out of the
+    /// accumulators — a later purge must not subtract twice.
+    rolled_back: BTreeSet<u16>,
+    exec: Exec,
+    log: Option<RollbackLog>,
 }
 
 impl ChunkAssembler {
-    pub fn new(revocable: bool, shards: usize) -> Self {
+    pub fn new(revocable: bool, shards: usize, workers: usize) -> Self {
         assert!(shards >= 1);
+        assert!(workers >= 1);
         ChunkAssembler {
             revocable,
             shards,
             layout: None,
-            global: Vec::new(),
-            senders: BTreeMap::new(),
+            cursors: BTreeMap::new(),
             complete: BTreeSet::new(),
             bad: BTreeSet::new(),
+            rolled_back: BTreeSet::new(),
+            exec: Exec::new(workers, shards),
+            log: None,
         }
     }
 
     /// Reset for a new round.
-    pub fn reset(&mut self) {
+    pub fn reset(&mut self) -> Result<()> {
         self.layout = None;
-        self.global = Vec::new();
-        self.senders.clear();
+        self.cursors.clear();
         self.complete.clear();
         self.bad.clear();
+        self.rolled_back.clear();
+        self.exec.reset();
+        if let Some(log) = &mut self.log {
+            log.truncate()?;
+        }
+        Ok(())
     }
 
-    fn wrap_add_at(dst: &mut [u64], at: usize, src: &[u64]) {
-        for (d, s) in dst[at..at + src.len()].iter_mut().zip(src) {
-            *d = d.wrapping_add(*s);
+    /// Wrap-subtract every logged chunk of `from` back out of the
+    /// shard accumulators (revocable mode only). Idempotent: a gap
+    /// rollback followed by a dropout purge subtracts once.
+    fn rollback(&mut self, from: u16) -> Result<()> {
+        if !self.revocable || !self.rolled_back.insert(from) {
+            return Ok(());
         }
+        let (Some(log), Some(layout)) = (self.log.as_mut(), self.layout) else {
+            return Ok(());
+        };
+        let exec = &mut self.exec;
+        log.replay(from, |offset, words| {
+            let shard = layout.shard_of(offset as usize);
+            let (start, _) = layout.shard_range(shard);
+            exec.sub(shard, offset as usize - start, words);
+        })
     }
 
     /// Fold one chunk in. A malformed *message* (inconsistent total,
     /// shard/offset outside the layout) is a protocol error and fails
     /// the run; a *gap* in an otherwise well-formed per-sender stream
-    /// is a lost message — the sender is marked bad and silently
-    /// ignored so quiescence-based dropout declaration can handle it.
+    /// is a lost message — the sender is marked bad, its committed
+    /// words rolled back (revocable mode), and it is silently ignored
+    /// so quiescence-based dropout declaration can handle it.
     pub fn add_chunk(
         &mut self,
         from: u16,
@@ -238,12 +592,12 @@ impl ChunkAssembler {
         }
         let total = total as usize;
         if total == 0 || words.is_empty() {
-            bail!("empty masked chunk from client {from}");
+            bail!("empty masked chunk from sender {from}");
         }
         let layout = match self.layout {
             Some(l) => {
                 if l.total != total {
-                    bail!("chunk total {total} from client {from} != fan-in total {}", l.total);
+                    bail!("chunk total {total} from sender {from} != fan-in total {}", l.total);
                 }
                 l
             }
@@ -253,69 +607,45 @@ impl ChunkAssembler {
                 }
                 let l = ShardLayout::new(total, self.shards);
                 self.layout = Some(l);
-                self.global = vec![0u64; total];
+                self.exec.init(l);
+                if self.revocable && self.log.is_none() {
+                    self.log = Some(RollbackLog::create()?);
+                }
                 l
             }
         };
         let offset = offset as usize;
-        let (shard, offset_ok) = {
-            let s = shard as usize;
-            if s >= layout.shards || offset >= total {
-                bail!("chunk shard {s}/offset {offset} out of range from client {from}");
-            }
-            let (start, len) = layout.shard_range(s);
-            (s, offset >= start && offset + words.len() <= start + len)
-        };
-        if !offset_ok {
-            bail!("chunk crosses shard boundary (client {from}, shard {shard}, offset {offset})");
-        }
-        if self.complete.contains(&from) {
-            bail!("chunk after completed stream from client {from}");
-        }
-
-        let cursor = self.senders.get(&from).map(|s| s.cursor).unwrap_or(0);
-        if offset != cursor || shard != layout.shard_of(cursor) {
-            // a hole in the stream (lost chunk): discard and let
-            // dropout handling (or a stalled-round abort) take over
-            self.senders.remove(&from);
-            self.bad.insert(from);
-            return Ok(());
+        let shard = shard as usize;
+        if shard >= layout.shards || offset >= total {
+            bail!("chunk shard {shard}/offset {offset} out of range from sender {from}");
         }
         let (shard_start, shard_len) = layout.shard_range(shard);
-        let (finished_shard, finished_sender) = {
-            let st = self.senders.entry(from).or_insert_with(|| SenderState {
-                cursor: 0,
-                shard: 0,
-                buf: Vec::new(),
-                held: Vec::new(),
-            });
-            if st.buf.is_empty() {
-                st.buf = vec![0u64; shard_len];
-                st.shard = shard;
-            }
-            Self::wrap_add_at(&mut st.buf, st.cursor - shard_start, words);
-            st.cursor += words.len();
-            let fs = if st.cursor == shard_start + shard_len {
-                // shard complete: commit now (base protocol) or hold
-                // for the fan-in barrier (revocable mode)
-                Some(std::mem::take(&mut st.buf))
-            } else {
-                None
-            };
-            (fs, st.cursor == total)
-        };
-        if let Some(buf) = finished_shard {
-            if self.revocable {
-                self.senders.get_mut(&from).expect("sender state").held.push((shard_start, buf));
-            } else {
-                Self::wrap_add_at(&mut self.global, shard_start, &buf);
-            }
+        if offset < shard_start || offset + words.len() > shard_start + shard_len {
+            bail!("chunk crosses shard boundary (sender {from}, shard {shard}, offset {offset})");
         }
-        if finished_sender {
+        if self.complete.contains(&from) {
+            bail!("chunk after completed stream from sender {from}");
+        }
+
+        let cursor = self.cursors.get(&from).copied().unwrap_or(0);
+        if offset != cursor || shard != layout.shard_of(cursor) {
+            // a hole in the stream (lost chunk): roll back whatever was
+            // committed and let dropout handling (or a stalled-round
+            // abort, where the sum is never consumed) take over
+            self.cursors.remove(&from);
+            self.bad.insert(from);
+            return self.rollback(from);
+        }
+        if let Some(log) = &mut self.log {
+            log.append(from, offset as u32, words)?;
+        }
+        self.exec.add(shard, offset - shard_start, words.to_vec());
+        let next = offset + words.len();
+        if next == total {
+            self.cursors.remove(&from);
             self.complete.insert(from);
-            if !self.revocable {
-                self.senders.remove(&from);
-            }
+        } else {
+            self.cursors.insert(from, next);
         }
         Ok(())
     }
@@ -329,48 +659,79 @@ impl ChunkAssembler {
         self.complete.iter().copied()
     }
 
-    /// Discard everything a (declared-dropped) sender buffered. In
-    /// revocable mode this removes its *entire* contribution — the
+    /// Remove everything a (declared-dropped) sender contributed. In
+    /// revocable mode this replays the rollback log, wrap-subtracting
+    /// the sender's committed chunks from the shard accumulators — the
     /// invariant the recovery mask-correction relies on. Only reachable
     /// in revocable mode: the base protocol never declares dropouts.
-    pub fn purge(&mut self, from: u16) {
+    pub fn purge(&mut self, from: u16) -> Result<()> {
         debug_assert!(
             self.revocable || !self.complete.contains(&from),
             "purging a committed sender from a non-revocable assembler"
         );
-        self.senders.remove(&from);
+        self.rollback(from)?;
+        self.cursors.remove(&from);
         self.complete.remove(&from);
         self.bad.remove(&from);
+        Ok(())
     }
 
-    /// Consume the fan-in: fold every held shard (sender order, though
-    /// ℤ₂⁶⁴ addition makes the order immaterial) and hand back the
-    /// accumulated sum. `None` when no chunk traffic arrived (the
-    /// monolithic or float path carried this round).
-    pub fn take_sum(&mut self) -> Option<Vec<u64>> {
-        self.layout?;
-        let mut global = std::mem::take(&mut self.global);
-        for (_, st) in std::mem::take(&mut self.senders) {
-            debug_assert!(st.buf.is_empty(), "consuming a fan-in with an incomplete shard");
-            for (start, buf) in st.held {
-                Self::wrap_add_at(&mut global, start, &buf);
+    /// Consume the fan-in: the deterministic merge. Drains every
+    /// executor's shard accumulators and stitches them into one global
+    /// vector at their fixed offsets (ranges are disjoint, so the
+    /// result is bit-identical for any worker count). `Ok(None)` when
+    /// no chunk traffic arrived (the monolithic or float path carried
+    /// this round); `Err` if the post-drain reset cannot truncate the
+    /// rollback log.
+    pub fn take_sum(&mut self) -> Result<Option<Vec<u64>>> {
+        let Some(layout) = self.layout else {
+            return Ok(None);
+        };
+        let mut global = vec![0u64; layout.total];
+        for (start, acc) in self.exec.drain() {
+            global[start..start + acc.len()].copy_from_slice(&acc);
+        }
+        self.reset()?;
+        Ok(Some(global))
+    }
+
+    /// Resident bytes of this fan-in's accumulator state — the
+    /// quantity behind the streaming pipeline's peak-memory claim
+    /// (metered into [`Metrics`](super::Metrics) by the aggregator).
+    /// Exactly the shard accumulators: one tensor length, O(d),
+    /// regardless of sender count or revocability — rollback state
+    /// lives in the spill log ([`spilled_bytes`]), not in RAM.
+    ///
+    /// [`spilled_bytes`]: ChunkAssembler::spilled_bytes
+    pub fn buffered_bytes(&self) -> u64 {
+        self.layout.map_or(0, |l| (l.total * 8) as u64)
+    }
+
+    /// Per-shard resident accumulator bytes, indexed by shard (all
+    /// zeros before the first chunk fixes the layout).
+    pub fn shard_buffered_bytes(&self) -> Vec<u64> {
+        match self.layout {
+            None => vec![0; self.shards],
+            Some(l) => (0..l.shards).map(|k| (l.shard_range(k).1 * 8) as u64).collect(),
+        }
+    }
+
+    /// Bytes currently spilled to the rollback log (0 outside
+    /// revocable mode or before any chunk committed).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.log.as_ref().map_or(0, |l| l.spilled)
+    }
+}
+
+impl Drop for ChunkAssembler {
+    fn drop(&mut self) {
+        if let Exec::Pool { txs, handles } = &mut self.exec {
+            // closing every job channel ends the worker loops
+            txs.clear();
+            for h in std::mem::take(handles) {
+                let _ = h.join();
             }
         }
-        self.reset();
-        Some(global)
-    }
-
-    /// Bytes currently buffered across the global accumulator, shard
-    /// buffers, and held shards — the quantity behind the streaming
-    /// pipeline's peak-memory claim (metered into
-    /// [`Metrics`](super::Metrics) by the aggregator).
-    pub fn buffered_bytes(&self) -> u64 {
-        let sender_words: usize = self
-            .senders
-            .values()
-            .map(|s| s.buf.len() + s.held.iter().map(|(_, h)| h.len()).sum::<usize>())
-            .sum();
-        ((self.global.len() + sender_words) * 8) as u64
     }
 }
 
@@ -434,7 +795,7 @@ mod tests {
     }
 
     #[test]
-    fn assembler_sums_match_direct_sum_both_modes() {
+    fn assembler_sums_match_direct_sum_all_modes_and_worker_counts() {
         let total = 37;
         let layout = ShardLayout::new(total, 4);
         let tensors: Vec<Vec<u64>> = (0..3u64)
@@ -447,13 +808,19 @@ mod tests {
             }
         }
         for revocable in [false, true] {
-            let mut asm = ChunkAssembler::new(revocable, 4);
-            for (i, t) in tensors.iter().enumerate() {
-                feed(&mut asm, i as u16, layout, 5, t);
+            for workers in [1, 2, 4, 7] {
+                let mut asm = ChunkAssembler::new(revocable, 4, workers);
+                for (i, t) in tensors.iter().enumerate() {
+                    feed(&mut asm, i as u16, layout, 5, t);
+                }
+                assert_eq!(asm.complete_count(), 3);
+                assert_eq!(
+                    asm.take_sum().unwrap().unwrap(),
+                    want,
+                    "revocable={revocable} workers={workers}"
+                );
+                assert!(asm.take_sum().unwrap().is_none(), "take_sum resets");
             }
-            assert_eq!(asm.complete_count(), 3);
-            assert_eq!(asm.take_sum().unwrap(), want, "revocable={revocable}");
-            assert!(asm.take_sum().is_none(), "take_sum resets");
         }
     }
 
@@ -463,14 +830,48 @@ mod tests {
         let layout = ShardLayout::new(total, 3);
         let a: Vec<u64> = (0..total as u64).collect();
         let b: Vec<u64> = (0..total as u64).map(|j| j * 100).collect();
-        let mut asm = ChunkAssembler::new(true, 3);
-        feed(&mut asm, 1, layout, 4, &a);
-        // sender 2 streams only its first shard then stalls
-        let (s0, l0) = layout.shard_range(0);
-        asm.add_chunk(2, 0, s0 as u32, total as u32, &b[s0..s0 + l0]).unwrap();
-        asm.purge(2);
-        assert_eq!(asm.complete_count(), 1);
-        assert_eq!(asm.take_sum().unwrap(), a, "purged sender must contribute nothing");
+        for workers in [1, 3] {
+            let mut asm = ChunkAssembler::new(true, 3, workers);
+            feed(&mut asm, 1, layout, 4, &a);
+            // sender 2 streams only its first shard then stalls
+            let (s0, l0) = layout.shard_range(0);
+            asm.add_chunk(2, 0, s0 as u32, total as u32, &b[s0..s0 + l0]).unwrap();
+            assert!(asm.spilled_bytes() > 0, "revocable commits spill to the rollback log");
+            asm.purge(2).unwrap();
+            assert_eq!(asm.complete_count(), 1);
+            assert_eq!(
+                asm.take_sum().unwrap().unwrap(),
+                a,
+                "purged sender must contribute nothing (workers={workers})"
+            );
+        }
+    }
+
+    #[test]
+    fn purge_after_gap_rollback_subtracts_once() {
+        let total = 16;
+        let layout = ShardLayout::new(total, 2);
+        let v: Vec<u64> = (1..=total as u64).collect();
+        let mut asm = ChunkAssembler::new(true, 2, 1);
+        let plan = chunk_plan(layout, 3);
+        let send = |asm: &mut ChunkAssembler, c: Chunk| {
+            asm.add_chunk(
+                1,
+                c.shard as u16,
+                c.offset as u32,
+                total as u32,
+                &v[c.offset..c.offset + c.len],
+            )
+            .unwrap();
+        };
+        // commit two chunks, then a gap triggers the rollback...
+        send(&mut asm, plan[0]);
+        send(&mut asm, plan[1]);
+        send(&mut asm, plan[3]);
+        // ...and the later dropout purge must not subtract again
+        asm.purge(1).unwrap();
+        feed(&mut asm, 2, layout, 3, &v);
+        assert_eq!(asm.take_sum().unwrap().unwrap(), v, "double rollback would corrupt the sum");
     }
 
     #[test]
@@ -478,7 +879,7 @@ mod tests {
         let total = 16;
         let layout = ShardLayout::new(total, 2);
         let v: Vec<u64> = (0..total as u64).collect();
-        let mut asm = ChunkAssembler::new(true, 2);
+        let mut asm = ChunkAssembler::new(true, 2, 1);
         let plan = chunk_plan(layout, 3);
         // drop the second chunk: offset skips ahead → bad stream
         let send = |asm: &mut ChunkAssembler, c: Chunk| {
@@ -499,13 +900,13 @@ mod tests {
         assert_eq!(asm.complete_count(), 0);
         // a healthy sender still completes
         feed(&mut asm, 2, layout, 3, &v);
-        asm.purge(1);
-        assert_eq!(asm.take_sum().unwrap(), v);
+        asm.purge(1).unwrap();
+        assert_eq!(asm.take_sum().unwrap().unwrap(), v);
     }
 
     #[test]
     fn malformed_chunks_error() {
-        let mut asm = ChunkAssembler::new(false, 2);
+        let mut asm = ChunkAssembler::new(false, 2, 1);
         // inconsistent total
         asm.add_chunk(1, 0, 0, 16, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
         assert!(asm.add_chunk(2, 0, 0, 20, &[1]).is_err());
@@ -519,18 +920,28 @@ mod tests {
     }
 
     #[test]
-    fn buffered_bytes_tracks_held_state() {
+    fn buffered_bytes_is_one_tensor_in_both_modes() {
         let total = 32;
         let layout = ShardLayout::new(total, 4);
         let v = vec![1u64; total];
-        // base protocol: commit-on-shard keeps only global + in-flight
-        let mut base = ChunkAssembler::new(false, 4);
+        // base protocol: chunks commit on arrival — accumulators only
+        let mut base = ChunkAssembler::new(false, 4, 1);
+        assert_eq!(base.buffered_bytes(), 0, "nothing resident before the first chunk");
         feed(&mut base, 1, layout, 8, &v);
-        assert_eq!(base.buffered_bytes(), (total * 8) as u64, "global only");
-        // revocable: held shards stay per sender
-        let mut rev = ChunkAssembler::new(true, 4);
+        assert_eq!(base.buffered_bytes(), (total * 8) as u64, "accumulators only");
+        assert_eq!(base.spilled_bytes(), 0, "base protocol never spills");
+        // revocable: same resident footprint; history goes to the log
+        let mut rev = ChunkAssembler::new(true, 4, 1);
         feed(&mut rev, 1, layout, 8, &v);
-        assert_eq!(rev.buffered_bytes(), (2 * total * 8) as u64, "global + held");
+        assert_eq!(rev.buffered_bytes(), (total * 8) as u64, "rollback state is not resident");
+        // 4 chunks of 8 words: 4 · (10 + 64) log bytes
+        assert_eq!(rev.spilled_bytes(), 4 * (10 + 64));
+        // per-shard accounting tiles the tensor
+        assert_eq!(rev.shard_buffered_bytes().iter().sum::<u64>(), (total * 8) as u64);
+        // reset truncates the log
+        rev.reset().unwrap();
+        assert_eq!(rev.spilled_bytes(), 0);
+        assert_eq!(rev.buffered_bytes(), 0);
     }
 
     #[test]
@@ -540,5 +951,8 @@ mod tests {
         assert_eq!(chunk_overhead_bytes(100, 1, 100), 22 - 11);
         assert_eq!(chunk_count(100, 4, 10), 12, "4 shards of 25 → 3 chunks each");
         assert_eq!(chunk_overhead_bytes(100, 4, 10), 22 * 12 - 11);
+        // downlink: 9 + 8d monolithic; 19/chunk + 8d chunked
+        assert_eq!(grad_chunk_overhead_bytes(100, 1, 100), 19 - 9);
+        assert_eq!(grad_chunk_overhead_bytes(100, 4, 10), 19 * 12 - 9);
     }
 }

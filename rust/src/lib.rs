@@ -52,30 +52,40 @@
 //! println!("losses: {:?}", report.losses);
 //! ```
 //!
-//! ## Streaming sharded aggregation (`--chunk-words` / `--shards`)
+//! ## Streaming shard-parallel aggregation (`--chunk-words` / `--shards` / `--agg-workers`)
 //!
 //! The masked-tensor path is a *chunked streaming pipeline* end to
 //! end. The pairwise-mask PRG is seekable
 //! ([`crypto::prg::MaskStream`]), so a sender masks and ships a tensor
 //! window by window (`Msg::MaskedChunk { tag, shard, offset, .. }`)
-//! without ever materializing a full-tensor mask; the aggregator folds
-//! each sender's chunks into a per-sender *current-shard* partial sum
-//! and commits a shard into the single global accumulator the moment
-//! that sender completes it
-//! ([`ChunkAssembler`](coordinator::streaming::ChunkAssembler)).
-//! Because ℤ₂⁶⁴ wrap-addition is order-independent, a chunked run is
-//! **bit-identical** to a monolithic one — predictions, parameters,
-//! losses, and Table-2 sums modulo the documented 22-byte-per-chunk
-//! header (`tests/chunk_equivalence.rs` asserts all of it, on the
-//! simulator and the threaded transport).
+//! without ever materializing a full-tensor mask; the aggregator's
+//! routing layer validates each sender's stream and folds every
+//! chunk into its shard's accumulator on arrival
+//! ([`ChunkAssembler`](coordinator::streaming::ChunkAssembler)). With
+//! `--agg-workers` > 1 the folding fans out across per-shard
+//! accumulator *workers* (worker `w` owns shards `k % workers == w`),
+//! fed over bounded channels; `take_sum` is the deterministic merge
+//! that stitches every worker's disjoint shard ranges back into one
+//! vector. The aggregator→active `GradientSum` downlink streams too:
+//! `Msg::GradientChunk` mirrors `MaskedChunk` over the same
+//! [`ShardLayout`](coordinator::streaming::ShardLayout). Because ℤ₂⁶⁴
+//! wrap-addition is order-independent and shard ranges are disjoint, a
+//! chunked run with *any* worker count is **bit-identical** to the
+//! monolithic one — predictions, parameters, losses, and Table-2 sums
+//! modulo the documented headers: 22 bytes per uplink chunk (vs 11
+//! monolithic) and 19 per downlink chunk (vs the 9-byte
+//! `GradientSum`). `tests/chunk_equivalence.rs` asserts all of it on
+//! the simulator, the threaded transport, and TCP.
 //!
 //! Memory model: the monolithic fan-in peaks at O(n·d) (one full
-//! vector per sender); the streaming base protocol peaks at
-//! O(d + n·shard). Dropout-tolerant runs are the exception — exact
-//! purge of a declared-dropped sender requires per-sender
-//! separability until the fan-in is consumed, so commitment is
-//! deferred (held per sender) and the peak matches the monolithic
-//! path; the trade is spelled out in [`coordinator::streaming`].
+//! vector per sender); the streaming pipeline holds exactly the shard
+//! accumulators — O(d) — in the base protocol *and* in
+//! dropout-tolerant runs. Exact purge of a declared-dropped sender is
+//! preserved by a per-round **rollback log**: every committed chunk is
+//! appended to a spill file, and purging a sender replays the log,
+//! wrap-subtracting its records from the accumulators — so the
+//! dropout-path RAM peak is below the monolithic baseline too. The
+//! mechanics are spelled out in [`coordinator::streaming`].
 //!
 //! ## Dropout tolerance (Bonawitz'17, §5.1)
 //!

@@ -125,13 +125,21 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(s) = flags.get("shards") {
         cfg.shards = s.parse().context("bad --shards")?;
     }
+    if let Some(w) = flags.get("agg-workers") {
+        cfg.agg_workers = w.parse().context("bad --agg-workers")?;
+    }
+    if let Some(ms) = flags.get("stall-timeout-ms") {
+        cfg.stall_timeout_ms = Some(ms.parse().context("bad --stall-timeout-ms")?);
+    }
     if let Some(ms) = flags.get("stall-cap-ms") {
         cfg.stall_cap_ms = Some(ms.parse().context("bad --stall-cap-ms")?);
     }
-    // fail the streaming flags here, at parse time, with the full
-    // validation the driver applies — `--chunk-words 0`, `--shards 0`
-    // and oversized shard counts must never reach a running round
+    // fail the streaming and timing flags here, at parse time, with the
+    // full validation the driver applies — `--chunk-words 0`,
+    // `--shards 0`, `--agg-workers 0`, oversized shard/worker counts,
+    // and zero-width stall windows must never reach a running round
     vfl::coordinator::validate_streaming(&cfg)?;
+    vfl::coordinator::validate_timing(&cfg)?;
     if let Some(spec) = flags.get("dropout-schedule") {
         if cfg.shamir_threshold.is_none() {
             bail!("--dropout-schedule needs --shamir-threshold (the run cannot recover otherwise)");
@@ -335,8 +343,8 @@ fn main() -> Result<()> {
             eprintln!("usage: vfl-sa <train|serve|join|bench|info> [flags]");
             eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded]");
             eprintln!("        [--shamir-threshold 3] [--dropout-schedule 2@1,4@3+1]   dropout-tolerant run");
-            eprintln!("        [--chunk-words 1024] [--shards 4]    streaming sharded aggregation");
-            eprintln!("        [--stall-cap-ms 10000]               adaptive dropout-window cap");
+            eprintln!("        [--chunk-words 1024] [--shards 4] [--agg-workers 4]   streaming shard-parallel aggregation");
+            eprintln!("        [--stall-timeout-ms 500] [--stall-cap-ms 10000]       adaptive dropout-window floor/cap");
             eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
             eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
             eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
@@ -431,10 +439,41 @@ mod tests {
         flags.insert("chunk-words".to_string(), "64".to_string());
         flags.insert("plain".to_string(), "true".to_string());
         assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("SecureExact"));
-        // stall cap parses
+        // stall floor/cap parse
         let mut flags = HashMap::new();
+        flags.insert("stall-timeout-ms".to_string(), "250".to_string());
         flags.insert("stall-cap-ms".to_string(), "2500".to_string());
-        assert_eq!(cfg_from_flags(&flags).unwrap().stall_cap_ms, Some(2500));
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert_eq!(cfg.stall_timeout_ms, Some(250));
+        assert_eq!(cfg.stall_cap_ms, Some(2500));
+    }
+
+    #[test]
+    fn agg_workers_flag_wires_into_config_and_zero_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("chunk-words".to_string(), "1024".to_string());
+        flags.insert("shards".to_string(), "4".to_string());
+        flags.insert("agg-workers".to_string(), "3".to_string());
+        assert_eq!(cfg_from_flags(&flags).unwrap().agg_workers, 3);
+        // zero workers fail at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("chunk-words".to_string(), "1024".to_string());
+        flags.insert("agg-workers".to_string(), "0".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("invalid"));
+        // workers without the chunked pipeline rejected
+        let mut flags = HashMap::new();
+        flags.insert("agg-workers".to_string(), "3".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("--chunk-words"));
+    }
+
+    #[test]
+    fn zero_stall_knobs_rejected_at_flag_parse() {
+        for knob in ["stall-timeout-ms", "stall-cap-ms"] {
+            let mut flags = HashMap::new();
+            flags.insert(knob.to_string(), "0".to_string());
+            let err = cfg_from_flags(&flags).unwrap_err().to_string();
+            assert!(err.contains(knob) && err.contains("invalid"), "{knob}: {err}");
+        }
     }
 
     #[test]

@@ -35,8 +35,42 @@ const F_NOTE: u8 = 4;
 const F_STOP: u8 = 5;
 
 /// Cap a frame at 256 MiB — far above any legitimate message, low
-/// enough to reject garbage lengths before allocating.
-const MAX_FRAME: u32 = 256 << 20;
+/// enough to reject garbage lengths before allocating. Enforced on
+/// *both* sides of the socket: the writer refuses to emit an oversize
+/// body (the old `body.len() as u32` cast silently truncated it,
+/// desynchronizing the stream), and the reader refuses to trust a
+/// corrupt 4-byte length field that would otherwise allocate up to
+/// 4 GiB.
+pub const MAX_FRAME_LEN: u32 = 256 << 20;
+
+/// Typed error for a frame body beyond [`MAX_FRAME_LEN`], on either
+/// side of the socket. Callers can downcast an `anyhow::Error` to this
+/// to distinguish "peer sent garbage" from transport failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameTooLong {
+    /// The offending body length in bytes.
+    pub len: u64,
+    /// The enforced cap ([`MAX_FRAME_LEN`]).
+    pub max: u32,
+}
+
+impl std::fmt::Display for FrameTooLong {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "frame length {} exceeds the {}-byte cap", self.len, self.max)
+    }
+}
+
+impl std::error::Error for FrameTooLong {}
+
+/// The shared cap check: used by the write path (before the `u32`
+/// length cast can truncate) and the read path (before the length
+/// prefix is trusted with an allocation).
+fn check_frame_len(len: u64) -> Result<()> {
+    if len > MAX_FRAME_LEN as u64 {
+        bail!(FrameTooLong { len, max: MAX_FRAME_LEN });
+    }
+    Ok(())
+}
 
 impl Frame {
     pub fn encode(&self) -> Vec<u8> {
@@ -79,23 +113,26 @@ impl Frame {
         Ok(f)
     }
 
-    /// Write one length-prefixed frame.
+    /// Write one length-prefixed frame. An oversize body is a typed
+    /// error ([`FrameTooLong`]) — never a silently truncated length
+    /// prefix.
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
         let body = self.encode();
+        check_frame_len(body.len() as u64)?;
         w.write_all(&(body.len() as u32).to_le_bytes()).context("frame length")?;
         w.write_all(&body).context("frame body")?;
         w.flush().context("frame flush")?;
         Ok(())
     }
 
-    /// Read one length-prefixed frame (blocking).
+    /// Read one length-prefixed frame (blocking). A length prefix
+    /// beyond [`MAX_FRAME_LEN`] is a typed error ([`FrameTooLong`]),
+    /// rejected before any allocation.
     pub fn read_from(r: &mut impl Read) -> Result<Frame> {
         let mut len = [0u8; 4];
         r.read_exact(&mut len).context("frame length")?;
         let len = u32::from_le_bytes(len);
-        if len > MAX_FRAME {
-            bail!("frame length {len} exceeds cap");
-        }
+        check_frame_len(len as u64)?;
         let mut body = vec![0u8; len as usize];
         r.read_exact(&mut body).context("frame body")?;
         Frame::decode(&body)
@@ -141,10 +178,28 @@ mod tests {
     }
 
     #[test]
-    fn oversized_length_rejected() {
+    fn oversized_length_rejected_with_typed_error_before_allocating() {
         let mut buf = (u32::MAX).to_le_bytes().to_vec();
         buf.extend_from_slice(&[0; 8]);
         let mut cur = std::io::Cursor::new(buf);
-        assert!(Frame::read_from(&mut cur).is_err());
+        let err = Frame::read_from(&mut cur).unwrap_err();
+        let too_long = err.downcast_ref::<FrameTooLong>().expect("typed frame-length error");
+        assert_eq!(*too_long, FrameTooLong { len: u32::MAX as u64, max: MAX_FRAME_LEN });
+    }
+
+    #[test]
+    fn frame_len_cap_enforced_on_both_sides() {
+        // the boundary itself is legal...
+        assert!(check_frame_len(MAX_FRAME_LEN as u64).is_ok());
+        // ...one byte past it is the typed error (the same check guards
+        // write_to before its u32 cast and read_from before its alloc)
+        let err = check_frame_len(MAX_FRAME_LEN as u64 + 1).unwrap_err();
+        assert!(err.downcast_ref::<FrameTooLong>().is_some());
+        // a would-have-truncated 4 GiB body is caught, not wrapped to 0
+        let err = check_frame_len(1 << 32).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<FrameTooLong>(),
+            Some(&FrameTooLong { len: 1 << 32, max: MAX_FRAME_LEN })
+        );
     }
 }

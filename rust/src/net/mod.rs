@@ -9,7 +9,9 @@
 //!   transports.
 //! * [`threaded`] — [`ThreadedTransport`]: one OS thread per party,
 //!   channels in between, bit-identical results to the simulator.
-//! * [`frame`] / [`tcp`] — length-prefixed socket framing and the
+//! * [`frame`] / [`tcp`] — length-prefixed socket framing (bodies are
+//!   capped at [`frame::MAX_FRAME_LEN`] on both the write and the read
+//!   side, with the typed [`frame::FrameTooLong`] error) and the
 //!   cross-process `serve`/`join` plumbing.
 //! * [`faulty`] — deterministic fault injection ([`FaultPlan`],
 //!   [`FaultyTransport`]): seeded crash/drop/delay/corrupt schedules
@@ -17,12 +19,15 @@
 //!   dropout-tolerant protocol. Faults count messages, so under the
 //!   chunked streaming pipeline they land on individual chunks.
 //!
-//! Every transport carries chunked masked tensors
-//! (`Msg::MaskedChunk`) exactly like any other protocol message: the
-//! simulator pumps them through its global FIFO, the threaded
-//! transport through per-party channels, TCP inside [`frame`]s — the
-//! per-sender FIFO guarantee each transport already provides is the
-//! only ordering the chunk assembler needs.
+//! Every transport carries chunked masked tensors (`Msg::MaskedChunk`
+//! uplink, `Msg::GradientChunk` downlink) exactly like any other
+//! protocol message: the simulator pumps them through its global FIFO,
+//! the threaded transport through per-party channels, TCP inside
+//! [`frame`]s — the per-sender FIFO guarantee each transport already
+//! provides is the only ordering the chunk assembler needs. Whether
+//! the aggregator folds those chunks inline or across `--agg-workers`
+//! shard workers is invisible to the transport (and to every output
+//! bit).
 
 pub mod faulty;
 pub mod frame;
@@ -32,6 +37,7 @@ pub mod transport;
 pub mod wire;
 
 pub use faulty::{Fault, FaultPlan, FaultyParty, FaultyTransport};
+pub use frame::{FrameTooLong, MAX_FRAME_LEN};
 pub use threaded::ThreadedTransport;
 pub use transport::{Addr, Network, Phase, SimTransport, StallClock, Transport, TransportOutcome};
 pub use wire::{Reader, Writer};

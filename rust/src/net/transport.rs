@@ -60,6 +60,15 @@ pub struct StallClock {
     ewma_ns: Option<f64>,
 }
 
+/// Hard minimum for the quiescence-window floor. A zero floor (e.g. a
+/// config built in code with `stall_timeout_ms = Some(0)`, bypassing
+/// the flag-parse validation) would make every `recv_timeout` return
+/// instantly — a busy-spin dropout storm that declares every peer
+/// stalled. [`StallClock::new`] clamps to this as defense in depth;
+/// the CLI additionally rejects zero knobs at parse time
+/// (`coordinator::validate_timing`).
+pub const MIN_STALL_FLOOR: std::time::Duration = std::time::Duration::from_millis(1);
+
 /// EWMA smoothing factor (weight of the newest gap).
 const STALL_EWMA_ALPHA: f64 = 0.25;
 
@@ -70,6 +79,11 @@ const STALL_GAP_MULTIPLIER: f64 = 8.0;
 
 impl StallClock {
     pub fn new(floor: std::time::Duration, cap: std::time::Duration) -> Self {
+        // clamp zero-width windows (see MIN_STALL_FLOOR): the floor is
+        // lifted first, then the cap is lifted to the floor, so a
+        // (0, 0) configuration degrades to a 1 ms window instead of a
+        // busy-spin that instantly declares every peer stalled
+        let floor = floor.max(MIN_STALL_FLOOR);
         StallClock { floor, cap: cap.max(floor), ewma_ns: None }
     }
 
@@ -129,13 +143,15 @@ pub struct Traffic {
 /// Byte-accounting rule for the chunked streaming pipeline: the
 /// counters meter *encoded message bytes*, so a masked tensor of `d`
 /// words costs `11 + 8d` bytes monolithic and `22·k + 8d` bytes as a
-/// `k`-chunk stream — identical payload, 22 bytes of header per chunk
-/// (`coordinator::streaming::CHUNK_MSG_HEADER_BYTES`). Table-2
-/// comparisons across the two paths must add
-/// `coordinator::streaming::chunk_overhead_bytes` per tensor;
-/// everything else (relays, broadcasts, the 1:1 gradient sum, setup)
-/// is byte-identical. `tests/chunk_equivalence.rs` asserts the exact
-/// relation.
+/// `k`-chunk uplink stream — identical payload, 22 bytes of header per
+/// chunk (`coordinator::streaming::CHUNK_MSG_HEADER_BYTES`). The
+/// aggregator→active `GradientSum` downlink streams too when chunking
+/// is on: `9 + 8d` bytes monolithic vs `19·k + 8d` chunked
+/// (`GRAD_CHUNK_MSG_HEADER_BYTES`). Table-2 comparisons across the two
+/// paths must add `coordinator::streaming::chunk_overhead_bytes` per
+/// uplink tensor and `grad_chunk_overhead_bytes` per downlink sum;
+/// everything else (relays, broadcasts, setup) is byte-identical.
+/// `tests/chunk_equivalence.rs` asserts the exact relation.
 pub struct Network {
     n_clients: usize,
     pub phase: Phase,
@@ -413,6 +429,25 @@ mod tests {
         // a cap below the floor is lifted to the floor
         let c = StallClock::new(floor, Duration::from_millis(1));
         assert_eq!(c.timeout(), floor);
+    }
+
+    #[test]
+    fn zero_width_windows_clamped() {
+        use std::time::Duration;
+        // a (0, 0) configuration must not busy-spin: both knobs clamp
+        // to the hard minimum
+        let c = StallClock::new(Duration::ZERO, Duration::ZERO);
+        assert_eq!(c.timeout(), MIN_STALL_FLOOR);
+        // a zero cap alone is lifted to the (clamped) floor
+        let mut c = StallClock::new(Duration::from_millis(500), Duration::ZERO);
+        assert_eq!(c.timeout(), Duration::from_millis(500));
+        for _ in 0..50 {
+            c.observe_gap(Duration::from_secs(30));
+        }
+        assert_eq!(c.timeout(), Duration::from_millis(500), "cap clamped to the floor");
+        // the from_config path clamps the same way
+        let c = StallClock::from_config(Some(0), Some(0));
+        assert_eq!(c.timeout(), MIN_STALL_FLOOR);
     }
 
     #[test]

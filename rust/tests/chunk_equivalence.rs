@@ -1,32 +1,42 @@
 //! The streaming-pipeline tentpole invariants (`--chunk-words` /
-//! `--shards`):
+//! `--shards` / `--agg-workers`):
 //!
 //! * **Bit-identity.** A chunked run produces bit-identical
 //!   predictions, parameters, losses, and accuracy to the monolithic
-//!   path, on the simulator *and* the threaded transport — ℤ₂⁶⁴
-//!   wrap-addition is order-independent, and every chunk's words equal
-//!   the corresponding slice of the monolithic masked tensor.
+//!   path — for *any* aggregator worker count — on the simulator, the
+//!   threaded transport, and TCP. ℤ₂⁶⁴ wrap-addition is
+//!   order-independent, every chunk's words equal the corresponding
+//!   slice of the monolithic masked tensor, and the shard-parallel
+//!   merge stitches disjoint ranges.
 //! * **Exact byte accounting.** Table-2 counters differ from the
 //!   monolithic run by *exactly* the documented per-chunk header
-//!   overhead (`streaming::chunk_overhead_bytes`): 22 bytes per chunk
-//!   vs 11 per monolithic masked message, payload unchanged.
-//! * **Memory.** The aggregator's peak fan-in buffer with chunking is
-//!   strictly below the monolithic path's O(n·d) for banking's
-//!   n = 5 ≥ 4 clients (asserted via the byte-metered peak counters).
+//!   overheads: 22 bytes per uplink `MaskedChunk` vs 11 per monolithic
+//!   masked message (`streaming::chunk_overhead_bytes`), and 19 bytes
+//!   per downlink `GradientChunk` vs the 9-byte `GradientSum` header
+//!   (`streaming::grad_chunk_overhead_bytes`) — payload unchanged.
+//! * **Memory.** The aggregator's chunked peak fan-in buffer is the
+//!   O(d) shard accumulators — strictly below the monolithic O(n·d)
+//!   for banking's n = 5 clients, now in the dropout-tolerant path
+//!   too: purge history spills to the rollback log instead of holding
+//!   per-sender shard sums in RAM.
 //! * **Dropout.** Chunked dropout-tolerant runs keep the recovery
 //!   semantics of `tests/dropout_recovery.rs`: crash runs are
 //!   bit-identical to their zero-contribution twins — including a
-//!   crash *mid-chunk-stream*, whose partial shard sums must be purged
-//!   — and faults can target individual chunks.
+//!   crash *mid-chunk-stream*, whose committed chunks the rollback log
+//!   replays back out — and faults can target individual chunks.
 
 mod common;
 
-use common::{assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg};
+use common::{
+    apply_env_workers, assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg,
+};
 use vfl::coordinator::metrics::AGGREGATOR;
 use vfl::coordinator::parties::GradLayout;
-use vfl::coordinator::streaming::chunk_overhead_bytes;
-use vfl::coordinator::{run_experiment, RunConfig, RunReport, SecurityMode, TransportKind};
-use vfl::net::{Addr, Fault, FaultPlan, Phase};
+use vfl::coordinator::streaming::{chunk_overhead_bytes, grad_chunk_overhead_bytes};
+use vfl::coordinator::{
+    build, run_experiment, summarize, RunConfig, RunReport, SecurityMode, TransportKind,
+};
+use vfl::net::{tcp, Addr, Fault, FaultPlan, Phase, StallClock};
 
 const CHUNK_WORDS: usize = 1000;
 const SHARDS: usize = 4;
@@ -34,7 +44,7 @@ const SHARDS: usize = 4;
 fn with_chunks(mut c: RunConfig) -> RunConfig {
     c.chunk_words = Some(CHUNK_WORDS);
     c.shards = SHARDS;
-    c
+    apply_env_workers(c)
 }
 
 fn secure_cfg(transport: TransportKind) -> RunConfig {
@@ -49,7 +59,8 @@ fn tensor_lens(cfg: &RunConfig) -> (usize, usize) {
 
 /// Acceptance criterion: chunked ≡ monolithic bit-for-bit on sim and
 /// threaded transports, with Table-2 counters matching exactly once
-/// the documented per-chunk header overhead is accounted.
+/// the documented per-chunk header overheads — uplink `MaskedChunk`s
+/// *and* the chunked `GradientSum` downlink — are accounted.
 #[test]
 fn chunked_run_bit_identical_to_monolithic_with_exact_byte_accounting() {
     let base = secure_cfg(TransportKind::Sim);
@@ -57,6 +68,7 @@ fn chunked_run_bit_identical_to_monolithic_with_exact_byte_accounting() {
     let (act_len, grad_len) = tensor_lens(&base);
     let per_act = chunk_overhead_bytes(act_len, SHARDS, CHUNK_WORDS);
     let per_grad = chunk_overhead_bytes(grad_len, SHARDS, CHUNK_WORDS);
+    let per_gsum = grad_chunk_overhead_bytes(grad_len, SHARDS, CHUNK_WORDS);
     let rounds = base.train_rounds as u64;
     let n_passive = (base.model.n_clients() - 1) as u64;
 
@@ -86,6 +98,12 @@ fn chunked_run_bit_identical_to_monolithic_with_exact_byte_accounting() {
             mnet.sent_bytes(Addr::Client(0), Phase::Testing) + per_act,
             "active testing sent"
         );
+        // ...and receives the chunked gradient-sum downlink each round
+        assert_eq!(
+            net.received_bytes(Addr::Client(0), Phase::Training),
+            mnet.received_bytes(Addr::Client(0), Phase::Training) + rounds * per_gsum,
+            "active training received"
+        );
         // passives: chunked activation + chunked gradient per train round
         for i in 1..base.model.n_clients() {
             assert_eq!(
@@ -100,7 +118,7 @@ fn chunked_run_bit_identical_to_monolithic_with_exact_byte_accounting() {
                 "passive {i} testing sent"
             );
         }
-        // the aggregator receives every chunk header once...
+        // the aggregator receives every uplink chunk header once...
         assert_eq!(
             net.received_bytes(Addr::Aggregator, Phase::Training),
             mnet.received_bytes(Addr::Aggregator, Phase::Training)
@@ -112,9 +130,14 @@ fn chunked_run_bit_identical_to_monolithic_with_exact_byte_accounting() {
             mnet.received_bytes(Addr::Aggregator, Phase::Testing) + (n_passive + 1) * per_act,
             "aggregator testing received"
         );
-        // ...and sends exactly what the monolithic run sends (relays,
-        // dz broadcasts, and the 1:1 gradient sum stay monolithic)
-        for ph in [Phase::Setup, Phase::Training, Phase::Testing] {
+        // ...and its sent side differs only by the chunked downlink
+        // (relays, dz broadcasts, and setup stay monolithic)
+        assert_eq!(
+            net.sent_bytes(Addr::Aggregator, Phase::Training),
+            mnet.sent_bytes(Addr::Aggregator, Phase::Training) + rounds * per_gsum,
+            "aggregator sent Training"
+        );
+        for ph in [Phase::Setup, Phase::Testing] {
             assert_eq!(
                 net.sent_bytes(Addr::Aggregator, ph),
                 mnet.sent_bytes(Addr::Aggregator, ph),
@@ -128,9 +151,89 @@ fn chunked_run_bit_identical_to_monolithic_with_exact_byte_accounting() {
     assert_table2_identical(&runs[0].net, &runs[1].net);
 }
 
+/// Acceptance criterion: shard-parallel aggregation is invisible in
+/// every report bit. Sweep worker counts — the inline path, one worker
+/// per shard, and more workers than shards — against the monolithic
+/// baseline and each other, on the simulator and the threaded
+/// transport, counters included.
+#[test]
+fn agg_worker_sweep_bit_identical_across_transports() {
+    let mono = run_experiment(secure_cfg(TransportKind::Sim), None).unwrap();
+    let mut reference: Option<RunReport> = None;
+    for workers in [1, SHARDS, SHARDS + 3] {
+        for transport in [TransportKind::Sim, TransportKind::Threaded] {
+            let mut c = with_chunks(secure_cfg(transport));
+            c.agg_workers = workers;
+            let run = run_experiment(c, None).unwrap();
+            assert_reports_identical(
+                &mono,
+                &run,
+                &format!("workers={workers} {transport:?} vs monolithic"),
+            );
+            match &reference {
+                None => reference = Some(run),
+                Some(r) => {
+                    assert_reports_identical(r, &run, &format!("workers={workers} {transport:?}"));
+                    assert_table2_identical(&r.net, &run.net);
+                }
+            }
+        }
+    }
+}
+
+/// The TCP leg of the acceptance criterion: a real socket run with the
+/// shard-parallel chunked pipeline produces the same losses and
+/// predictions as the simulated run of the identical schedule.
+#[test]
+fn tcp_chunked_workers_match_sim() {
+    let mut cfg = with_chunks(secure_cfg(TransportKind::Sim));
+    cfg.agg_workers = 3;
+    cfg.train_rounds = 2; // keep the socket run short
+    let sim = run_experiment(cfg.clone(), None).unwrap();
+
+    // bind port 0 first so there is no port race: clients connect to
+    // the real port after the listener exists
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let n_clients = cfg.model.n_clients();
+
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        let built = build(&server_cfg, None).unwrap();
+        let mut parties = built.parties;
+        let aggregator = parties.remove(0);
+        drop(parties);
+        let clock = StallClock::from_config(server_cfg.stall_timeout_ms, server_cfg.stall_cap_ms);
+        let out = tcp::serve_on(listener, aggregator, &built.schedule, n_clients, clock)?;
+        Ok::<_, anyhow::Error>(summarize(&built.schedule, &built.test_labels, &out.notes))
+    });
+
+    let mut clients = Vec::new();
+    for client in 0..n_clients {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || {
+            let built = build(&cfg, None).unwrap();
+            let mut parties = built.parties;
+            let party = parties.remove(client + 1);
+            drop(parties);
+            tcp::join(&addr, client, party)
+        }));
+    }
+
+    let summary = server.join().unwrap().unwrap();
+    for c in clients {
+        c.join().unwrap().unwrap();
+    }
+    assert_eq!(summary.losses, sim.losses, "TCP losses must match the simulated run");
+    assert_eq!(summary.predictions, sim.predictions, "TCP predictions must match");
+    assert_eq!(summary.test_accuracy, sim.test_accuracy);
+}
+
 /// Acceptance criterion: with the base protocol (no dropout
 /// tolerance), the chunked aggregator's peak fan-in buffer is strictly
-/// below the monolithic path's O(n·d) for n = 5 ≥ 4 clients.
+/// below the monolithic path's O(n·d) for n = 5 ≥ 4 clients — and the
+/// base protocol never touches the rollback log.
 #[test]
 fn chunked_aggregator_peak_memory_below_monolithic() {
     let base = secure_cfg(TransportKind::Sim);
@@ -148,6 +251,39 @@ fn chunked_aggregator_peak_memory_below_monolithic() {
         chunked_peak < mono_peak,
         "streaming must buffer less than the monolithic fan-in: {chunked_peak} vs {mono_peak}"
     );
+    assert_eq!(chunked.metrics.peak_spilled_bytes(AGGREGATOR), 0, "base protocol never spills");
+    // the per-shard peaks tile the full accumulator footprint
+    let shard_sum: u64 =
+        (0..SHARDS).map(|k| chunked.metrics.peak_shard_buffered_bytes(AGGREGATOR, k)).sum();
+    assert!(shard_sum > 0, "per-shard peaks are metered");
+    assert!(shard_sum <= chunked_peak, "shard accumulators are part of the resident peak");
+}
+
+/// Acceptance criterion (rollback log): a *dropout-tolerant* chunked
+/// run — including one that actually drops a client mid-stream and
+/// replays the log — keeps its aggregator RAM peak strictly below the
+/// monolithic tolerant baseline, with the purge history spilled to the
+/// rollback log instead.
+#[test]
+fn dropout_rollback_log_peak_below_monolithic() {
+    let mono = run_experiment(dropout_cfg(3, None, TransportKind::Sim), None).unwrap();
+    let mono_peak = mono.metrics.peak_buffered_bytes(AGGREGATOR);
+
+    // a clean tolerant run and one that purges a mid-stream crasher
+    let plan = FaultPlan::default().with(3, Fault::Crash { round: 0, after_sends: 5 });
+    for (what, plan) in [("clean", None), ("mid-stream crash", Some(plan))] {
+        let cfg = with_chunks(dropout_cfg(3, plan, TransportKind::Sim));
+        let run = run_experiment(cfg, None).unwrap();
+        let peak = run.metrics.peak_buffered_bytes(AGGREGATOR);
+        assert!(
+            peak < mono_peak,
+            "{what}: tolerant chunked RAM peak must beat monolithic: {peak} vs {mono_peak}"
+        );
+        assert!(
+            run.metrics.peak_spilled_bytes(AGGREGATOR) > 0,
+            "{what}: tolerant chunked runs keep purge history in the rollback log"
+        );
+    }
 }
 
 /// A chunked dropout-tolerant run recovers with unchanged semantics: a
@@ -173,10 +309,10 @@ fn chunked_dropout_recovery_bit_identical_to_twin_and_monolithic() {
     assert!(crash.losses.iter().all(|l| l.is_finite()));
 }
 
-/// A crash *mid-chunk-stream* leaves a partially assembled tensor at
-/// the aggregator; the purge must discard the partial shard sums so
-/// the recovery correction stays exact — still bit-identical to the
-/// twin where the client contributes zeros.
+/// A crash *mid-chunk-stream* leaves already-committed chunks in the
+/// shard accumulators; the purge must replay the rollback log and
+/// subtract them so the recovery correction stays exact — still
+/// bit-identical to the twin where the client contributes zeros.
 #[test]
 fn mid_stream_crash_purges_partial_shards() {
     // round 0 sends: keys(1), shares(2), then activation chunks — a
@@ -194,8 +330,8 @@ fn mid_stream_crash_purges_partial_shards() {
 
 /// Faults can now target individual chunks: losing one chunk of an
 /// activation stream (sender alive) breaks the sender's stream, the
-/// aggregator declares it dropped, and the round recovers — the same
-/// on both transports.
+/// aggregator rolls its committed chunks back, declares it dropped,
+/// and the round recovers — the same on both transports.
 #[test]
 fn single_lost_chunk_declares_sender_dropped() {
     // round 1 does not rotate: sends are activation chunks from 0 —
@@ -209,17 +345,18 @@ fn single_lost_chunk_declares_sender_dropped() {
 }
 
 /// Sharding alone must not change results either: sweep a few
-/// (chunk_words, shards) shapes — including chunk sizes that do not
-/// divide the tensor length and the single-shard case — and require
-/// bit-identity throughout.
+/// (chunk_words, shards, workers) shapes — including chunk sizes that
+/// do not divide the tensor length and the single-shard case — and
+/// require bit-identity throughout.
 #[test]
 fn chunk_shape_sweep_is_bit_identical() {
     let mono = run_experiment(secure_cfg(TransportKind::Sim), None).unwrap();
-    for (cw, shards) in [(16384, 1), (999, 1), (4096, 8), (333, 3)] {
+    for (cw, shards, workers) in [(16384, 1, 1), (999, 1, 1), (4096, 8, 3), (333, 3, 2)] {
         let mut c = secure_cfg(TransportKind::Sim);
         c.chunk_words = Some(cw);
         c.shards = shards;
+        c.agg_workers = workers;
         let run = run_experiment(c, None).unwrap();
-        assert_reports_identical(&mono, &run, &format!("cw={cw} shards={shards}"));
+        assert_reports_identical(&mono, &run, &format!("cw={cw} shards={shards} w={workers}"));
     }
 }

@@ -24,6 +24,27 @@ pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> R
     c
 }
 
+/// CI worker-matrix hook: when `VFL_AGG_WORKERS` is set, chunked
+/// configs run their aggregator fan-ins with that many shard workers,
+/// so the parallel path is exercised by the same equivalence suites
+/// that prove the sequential one (bit-identity makes the override
+/// invisible to every assertion). Monolithic configs are unaffected —
+/// worker counts only apply to the chunked pipeline.
+pub fn apply_env_workers(mut c: RunConfig) -> RunConfig {
+    if c.chunk_words.is_some() {
+        if let Ok(w) = std::env::var("VFL_AGG_WORKERS") {
+            // a set-but-unparseable value must fail the suite, not
+            // silently fall back to the inline path CI thinks it is
+            // NOT running
+            c.agg_workers = w
+                .trim()
+                .parse()
+                .unwrap_or_else(|e| panic!("bad VFL_AGG_WORKERS {w:?}: {e}"));
+        }
+    }
+    c
+}
+
 /// A dropout-tolerant banking run (5 clients: 1 active + 4 passive):
 /// SecureExact, Shamir threshold `t`, optional fault plan.
 pub fn dropout_cfg(t: usize, plan: Option<FaultPlan>, transport: TransportKind) -> RunConfig {

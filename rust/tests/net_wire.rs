@@ -67,6 +67,7 @@ fn every_protocol_message_roundtrips() {
         Msg::MaskedGradient { round: 4, from: 1, words: vec![42; 3] },
         Msg::FloatGradient { round: 4, from: 1, vals: vec![0.75; 3] },
         Msg::GradientSum { round: 4, words: vec![7, 8, 9] },
+        Msg::GradientChunk { round: 4, shard: 1, offset: 1296, total: 5184, words: vec![7, 8] },
         Msg::FloatGradientSum { round: 4, vals: vec![0.25] },
         Msg::Predictions { round: 5, probs: vec![0.9, 0.1] },
         Msg::SeedShares {
