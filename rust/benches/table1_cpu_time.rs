@@ -5,7 +5,10 @@
 //!
 //!     cargo bench --bench table1_cpu_time
 //!     (VFL_BENCH_REFERENCE=1 to skip the PJRT backend,
-//!      VFL_BENCH_REPS=n to change repetitions)
+//!      VFL_BENCH_REPS=n to change repetitions,
+//!      VFL_BENCH_WINDOW=w to pipeline w rounds in flight — the
+//!      per-row "pipeline:" line reports the overlap and the idle gap
+//!      the window closed)
 
 use vfl::bench::tables;
 use vfl::model::ModelConfig;
@@ -15,6 +18,8 @@ fn main() -> anyhow::Result<()> {
     let reference = std::env::var("VFL_BENCH_REFERENCE").is_ok();
     let reps: usize =
         std::env::var("VFL_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let window: usize =
+        std::env::var("VFL_BENCH_WINDOW").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
     let mut rows = Vec::new();
     for ds in ["banking", "adult", "taobao"] {
         let engine = if reference {
@@ -26,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             "running {ds} ({reps} reps, backend {})...",
             if reference { "reference" } else { "pjrt" }
         );
-        rows.push(tables::table1(ds, reps, engine.as_ref())?);
+        rows.push(tables::table1(ds, reps, engine.as_ref(), window)?);
     }
     tables::print_table1(&rows);
     println!("\npaper's Table 1 for comparison (their testbed, Flower VCE):");

@@ -4,24 +4,84 @@
 //! pair per dataset suffices; overhead = secure − plain, the paper's
 //! definition.
 //!
+//! Also measures the streaming pipeline's aggregator memory —
+//! `peak_buffered_bytes` / `peak_shard_buffered_bytes` /
+//! `peak_spilled_bytes` — against the monolithic baseline, prints the
+//! table, and emits a machine-readable `BENCH_streaming.json` next to
+//! the working directory so the perf trajectory has data points.
+//!
 //!     cargo bench --bench table2_comm
+//!     (VFL_BENCH_REFERENCE=1 to skip the PJRT backend)
 
-use vfl::bench::tables;
+use std::io::Write;
+
+use vfl::bench::tables::{self, StreamingStats};
 use vfl::model::ModelConfig;
 use vfl::runtime::Engine;
+
+/// The streaming shape the memory stats are measured at.
+const CHUNK_WORDS: usize = 1024;
+const SHARDS: usize = 4;
+
+fn json_escape_free(s: &str) -> &str {
+    debug_assert!(!s.contains(['"', '\\']), "dataset names are plain");
+    s
+}
+
+/// Hand-rolled JSON (no serde in the dependency tree): one object per
+/// dataset with the streaming memory stats.
+fn streaming_json(rows: &[StreamingStats]) -> String {
+    let mut out = String::from("{\n  \"streaming\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let shards: Vec<String> =
+            r.peak_shard_buffered.iter().map(|b| b.to_string()).collect();
+        out.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"chunk_words\": {}, \"shards\": {}, \
+             \"mono_peak_buffered_bytes\": {}, \"peak_buffered_bytes\": {}, \
+             \"peak_shard_buffered_bytes\": [{}], \"peak_spilled_bytes\": {}}}{}\n",
+            json_escape_free(&r.dataset),
+            r.chunk_words,
+            r.shards,
+            r.mono_peak_buffered,
+            r.peak_buffered,
+            shards.join(", "),
+            r.peak_spilled,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
 
 fn main() -> anyhow::Result<()> {
     let reference = std::env::var("VFL_BENCH_REFERENCE").is_ok();
     let mut rows = Vec::new();
+    let mut streaming = Vec::new();
     for ds in ["banking", "adult", "taobao"] {
         let engine = if reference {
             None
         } else {
             Some(Engine::load("artifacts", &ModelConfig::for_dataset(ds).unwrap())?)
         };
-        rows.push(tables::table2(ds, engine.as_ref())?);
+        let (row, secure) = tables::table2_with_report(ds, engine.as_ref())?;
+        rows.push(row);
+        let mono_peak = secure
+            .metrics
+            .peak_buffered_bytes(vfl::coordinator::metrics::AGGREGATOR);
+        streaming.push(tables::streaming_stats(
+            ds,
+            engine.as_ref(),
+            CHUNK_WORDS,
+            SHARDS,
+            mono_peak,
+        )?);
     }
     tables::print_table2(&rows);
+    tables::print_streaming(&streaming);
+    let json = streaming_json(&streaming);
+    let path = "BENCH_streaming.json";
+    std::fs::File::create(path)?.write_all(json.as_bytes())?;
+    println!("\nwrote {path}");
     println!("\npaper's Table 2 for comparison (their serialization, Flower VCE):");
     println!("  Banking  active 959702/144826 train, 597762/144826 test; passive 823803/135541, 464243/135541");
     println!("  Adult    active 1031382/144826 train, 597762/144826 test; passive 895483/135541, 464243/135541");

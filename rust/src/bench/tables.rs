@@ -5,7 +5,10 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{run_experiment, BackendKind, RunConfig, RunReport, SecurityMode};
+use crate::coordinator::metrics::AGGREGATOR;
+use crate::coordinator::{
+    run_experiment, BackendKind, PipelineStats, RunConfig, RunReport, SecurityMode,
+};
 use crate::net::{Addr, Phase};
 use crate::runtime::Engine;
 
@@ -23,6 +26,12 @@ pub struct Table1Row {
     pub passive_train_overhead: Stats,
     pub passive_test_total: Stats,
     pub passive_test_overhead: Stats,
+    /// Round window width the runs used (`--rounds-in-flight`).
+    pub window: usize,
+    /// Scheduler pipelining counters of the last secure repetition
+    /// (overlap counts are schedule-deterministic; the idle gap is the
+    /// wall-clock the window saved vs left on the table).
+    pub pipeline: PipelineStats,
 }
 
 /// One dataset's Table-2 row (bytes per run).
@@ -52,17 +61,35 @@ fn passive_nodes(report: &RunReport) -> Vec<usize> {
 
 /// Run one secure experiment and return (report, plain-twin report).
 fn run_pair(dataset: &str, engine: Option<&Engine>, seed: u64) -> Result<(RunReport, RunReport)> {
+    run_pair_windowed(dataset, engine, seed, 1)
+}
+
+fn run_pair_windowed(
+    dataset: &str,
+    engine: Option<&Engine>,
+    seed: u64,
+    window: usize,
+) -> Result<(RunReport, RunReport)> {
     let mut sc = paper_cfg(dataset, SecurityMode::SecureExact, engine);
     sc.seed = seed;
+    sc.rounds_in_flight = window;
     let mut pc = paper_cfg(dataset, SecurityMode::Plain, engine);
     pc.seed = seed;
+    pc.rounds_in_flight = window;
     Ok((run_experiment(sc, engine)?, run_experiment(pc, engine)?))
 }
 
-/// Table 1: CPU time (ms), averaged over `reps` repetitions.
-/// "Total" is the secure run; "overhead" is the directly metered
-/// security-op time (cross-checked against secure − plain in tests).
-pub fn table1(dataset: &str, reps: usize, engine: Option<&Engine>) -> Result<Table1Row> {
+/// Table 1: CPU time (ms), averaged over `reps` repetitions, with the
+/// round window at `window` (`--rounds-in-flight`; 1 = the paper's
+/// serial measurement shape). "Total" is the secure run; "overhead" is
+/// the directly metered security-op time (cross-checked against
+/// secure − plain in tests).
+pub fn table1(
+    dataset: &str,
+    reps: usize,
+    engine: Option<&Engine>,
+    window: usize,
+) -> Result<Table1Row> {
     let mut at_t = vec![];
     let mut at_o = vec![];
     let mut ae_t = vec![];
@@ -71,8 +98,10 @@ pub fn table1(dataset: &str, reps: usize, engine: Option<&Engine>) -> Result<Tab
     let mut pt_o = vec![];
     let mut pe_t = vec![];
     let mut pe_o = vec![];
+    let mut pipeline = PipelineStats::default();
     for rep in 0..reps {
-        let (secure, _plain) = run_pair(dataset, engine, 7 + rep as u64)?;
+        let (secure, _plain) = run_pair_windowed(dataset, engine, 7 + rep as u64, window)?;
+        pipeline = secure.metrics.pipeline();
         let m = &secure.metrics;
         // setup is part of the training phase the paper reports
         // (1 setup phase + 5 training rounds)
@@ -100,13 +129,95 @@ pub fn table1(dataset: &str, reps: usize, engine: Option<&Engine>) -> Result<Tab
         passive_train_overhead: stats(&pt_o),
         passive_test_total: stats(&pe_t),
         passive_test_overhead: stats(&pe_o),
+        window,
+        pipeline,
     })
+}
+
+/// Streaming-pipeline memory stats for one dataset: the aggregator's
+/// resident fan-in peak under the chunked pipeline (vs the monolithic
+/// baseline), its per-shard split, and the rollback-log spill of a
+/// dropout-tolerant twin — the numbers behind the O(d) memory claim,
+/// surfaced so the perf trajectory has data points
+/// (`benches/table2_comm.rs` prints them and emits
+/// `BENCH_streaming.json`).
+pub struct StreamingStats {
+    pub dataset: String,
+    pub chunk_words: usize,
+    pub shards: usize,
+    /// Monolithic secure run: O(n·d) fan-in peak.
+    pub mono_peak_buffered: u64,
+    /// Chunked secure run: O(d) shard-accumulator peak.
+    pub peak_buffered: u64,
+    /// Per-shard peaks of the chunked run (tile `peak_buffered`).
+    pub peak_shard_buffered: Vec<u64>,
+    /// Rollback-log spill peak of the chunked dropout-tolerant twin.
+    pub peak_spilled: u64,
+}
+
+/// Measure [`StreamingStats`]: one chunked run and one chunked
+/// dropout-tolerant run (threshold = n, so no client may drop — we
+/// only want the rollback log exercised). `mono_peak_buffered` is the
+/// monolithic secure run's fan-in peak, taken from the report
+/// [`table2_with_report`] already produced so the identical experiment
+/// is not re-run.
+pub fn streaming_stats(
+    dataset: &str,
+    engine: Option<&Engine>,
+    chunk_words: usize,
+    shards: usize,
+    mono_peak_buffered: u64,
+) -> Result<StreamingStats> {
+    let mut chunked_cfg = paper_cfg(dataset, SecurityMode::SecureExact, engine);
+    chunked_cfg.chunk_words = Some(chunk_words);
+    chunked_cfg.shards = shards;
+    let chunked = run_experiment(chunked_cfg.clone(), engine)?;
+    let mut tolerant_cfg = chunked_cfg;
+    tolerant_cfg.shamir_threshold = Some(tolerant_cfg.model.n_clients());
+    let tolerant = run_experiment(tolerant_cfg, engine)?;
+    Ok(StreamingStats {
+        dataset: dataset.into(),
+        chunk_words,
+        shards,
+        mono_peak_buffered,
+        peak_buffered: chunked.metrics.peak_buffered_bytes(AGGREGATOR),
+        peak_shard_buffered: (0..shards)
+            .map(|k| chunked.metrics.peak_shard_buffered_bytes(AGGREGATOR, k))
+            .collect(),
+        peak_spilled: tolerant.metrics.peak_spilled_bytes(AGGREGATOR),
+    })
+}
+
+/// Print the streaming memory stats as a small table.
+pub fn print_streaming(rows: &[StreamingStats]) {
+    println!("\nStreaming aggregation — aggregator memory (bytes)");
+    println!(
+        "{:<14} | {:>14} {:>14} {:>14} | per-shard peaks",
+        "", "mono_peak", "chunked_peak", "spill_peak"
+    );
+    for r in rows {
+        println!(
+            "{:<14} | {:>14} {:>14} {:>14} | {:?}",
+            r.dataset, r.mono_peak_buffered, r.peak_buffered, r.peak_spilled,
+            r.peak_shard_buffered
+        );
+    }
 }
 
 /// Table 2: transmission bytes. Byte counts are deterministic per
 /// config, so a single secure/plain pair suffices; overhead = secure −
 /// plain, exactly as the paper defines it.
 pub fn table2(dataset: &str, engine: Option<&Engine>) -> Result<Table2Row> {
+    Ok(table2_with_report(dataset, engine)?.0)
+}
+
+/// [`table2`] plus the secure run's full report, so callers that also
+/// need its metrics (e.g. the monolithic fan-in peak the streaming
+/// stats compare against) don't re-run the identical experiment.
+pub fn table2_with_report(
+    dataset: &str,
+    engine: Option<&Engine>,
+) -> Result<(Table2Row, RunReport)> {
     let (secure, plain) = run_pair(dataset, engine, 7)?;
     let tx = |r: &RunReport, node: Addr, ph: Phase| r.net.transmission_bytes(node, ph);
     let active = Addr::Client(0);
@@ -131,7 +242,7 @@ pub fn table2(dataset: &str, engine: Option<&Engine>) -> Result<Table2Row> {
     let p_test_s = avg_passive(&secure, Phase::Testing);
     let p_test_p = avg_passive(&plain, Phase::Testing);
 
-    Ok(Table2Row {
+    let row = Table2Row {
         dataset: dataset.into(),
         active_train: a_train_s,
         active_train_overhead: a_train_s - a_train_p,
@@ -141,7 +252,8 @@ pub fn table2(dataset: &str, engine: Option<&Engine>) -> Result<Table2Row> {
         passive_train_overhead: p_train_s - p_train_p,
         passive_test: p_test_s,
         passive_test_overhead: p_test_s - p_test_p,
-    })
+    };
+    Ok((row, secure))
 }
 
 /// Print Table 1 in the paper's layout.
@@ -162,6 +274,16 @@ pub fn print_table1(rows: &[Table1Row]) {
             pm(&r.passive_train_overhead),
             pm(&r.passive_test_total),
             pm(&r.passive_test_overhead),
+        );
+        let p = &r.pipeline;
+        println!(
+            "{:<14} | pipeline: W={} rounds={} overlapped={} max_in_flight={} idle_gap={:.2}ms",
+            "",
+            r.window,
+            p.rounds_started,
+            p.overlapped_starts,
+            p.max_in_flight,
+            p.idle_gap_ns as f64 / 1e6,
         );
     }
 }

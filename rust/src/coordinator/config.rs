@@ -93,13 +93,33 @@ pub struct RunConfig {
     /// arrival. Only meaningful with `chunk_words`.
     pub shards: usize,
     /// Shard-parallel aggregation (`--agg-workers`, ≥ 1): the number
-    /// of aggregator-side accumulator workers each chunked fan-in
+    /// of accumulator workers in the aggregator's one shared
+    /// [`WorkerPool`](super::streaming::WorkerPool), which every
+    /// chunked fan-in — acts and grads, across all rounds in flight —
     /// distributes its shards across (capped at the shard count).
     /// 1 = the inline sequential path, no threads. Any worker count
     /// produces bit-identical reports — ℤ₂⁶⁴ wrap-addition commutes
     /// and the merge stitches disjoint shard ranges. Only meaningful
     /// with `chunk_words`.
     pub agg_workers: usize,
+    /// Windowed round scheduler (`--rounds-in-flight`, ≥ 1): how many
+    /// protocol rounds may be in flight simultaneously. 1 = the
+    /// strictly serial pre-pipeline behavior. Any width produces
+    /// bit-identical reports and Table-2 counters: rounds start in
+    /// schedule order, setup/rotation rounds and phase boundaries act
+    /// as barriers, and the window drains to 1 at the first dropout
+    /// declaration (see [`RoundWindow`](super::window::RoundWindow)).
+    pub rounds_in_flight: usize,
+    /// Rollback-log durability (`--rollback-fsync`): fsync every
+    /// record appended to a dropout-tolerant chunked run's rollback
+    /// log. Off by default — the log is a purge aid, not a journal.
+    pub rollback_fsync: bool,
+    /// Rollback-log bound (`--rollback-max-bytes`): cap one rollback
+    /// log's size, failing the run with the typed
+    /// [`StreamError::RollbackLogFull`](super::streaming::StreamError)
+    /// instead of unbounded temp-file growth. `None` = the default cap
+    /// ([`DEFAULT_ROLLBACK_MAX_BYTES`](super::streaming::DEFAULT_ROLLBACK_MAX_BYTES)).
+    pub rollback_max_bytes: Option<u64>,
 }
 
 impl RunConfig {
@@ -123,6 +143,9 @@ impl RunConfig {
             chunk_words: None,
             shards: 1,
             agg_workers: 1,
+            rounds_in_flight: 1,
+            rollback_fsync: false,
+            rollback_max_bytes: None,
         })
     }
 

@@ -27,7 +27,8 @@ use super::config::{BackendKind, RunConfig, SecurityMode, TransportKind};
 use super::metrics::Metrics;
 use super::parties::{ActiveParty, Aggregator, GradLayout, PassiveParty};
 use super::party::{Note, Party, RoundKind, RoundSpec, SETUP_ROUND};
-use super::streaming::StreamCfg;
+use super::streaming::{RollbackCfg, StreamCfg, DEFAULT_ROLLBACK_MAX_BYTES};
+use super::window::MAX_ROUNDS_IN_FLIGHT;
 
 /// Everything a run produces.
 pub struct RunReport {
@@ -71,6 +72,23 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
     if cfg.agg_workers > MAX_AGG_WORKERS {
         bail!("--agg-workers {} exceeds the cap ({MAX_AGG_WORKERS})", cfg.agg_workers);
     }
+    if cfg.rollback_max_bytes == Some(0) {
+        bail!("--rollback-max-bytes 0 is invalid (a zero-byte rollback log cannot record \
+               any committed chunk; omit the flag for the default bound)");
+    }
+    if (cfg.rollback_fsync || cfg.rollback_max_bytes.is_some())
+        && (cfg.chunk_words.is_none() || cfg.shamir_threshold.is_none())
+    {
+        bail!(
+            "--rollback-fsync / --rollback-max-bytes require --chunk-words and \
+             --shamir-threshold (only dropout-tolerant chunked runs keep a rollback log; \
+             accepting the knobs elsewhere would fake durability that is never in force)"
+        );
+    }
+    let rollback = RollbackCfg {
+        fsync: cfg.rollback_fsync,
+        max_bytes: cfg.rollback_max_bytes.unwrap_or(DEFAULT_ROLLBACK_MAX_BYTES),
+    };
     let Some(cw) = cfg.chunk_words else {
         if cfg.shards != 1 {
             bail!(
@@ -86,7 +104,7 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
                 cfg.agg_workers
             );
         }
-        return Ok(StreamCfg::monolithic());
+        return Ok(StreamCfg::monolithic().with_rollback(rollback));
     };
     if cw == 0 {
         bail!("--chunk-words 0 is invalid (need at least 1 word per chunk)");
@@ -111,7 +129,24 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
             cfg.shards
         );
     }
-    Ok(StreamCfg::chunked(cw, cfg.shards).with_workers(cfg.agg_workers))
+    Ok(StreamCfg::chunked(cw, cfg.shards).with_workers(cfg.agg_workers).with_rollback(rollback))
+}
+
+/// Validate the windowed-scheduler knob. A zero window could never
+/// start a round (instant deadlock), and an absurd width would keep an
+/// unbounded ring of per-round contexts alive; both fail at
+/// configuration time.
+pub fn validate_window(cfg: &RunConfig) -> Result<()> {
+    if cfg.rounds_in_flight == 0 {
+        bail!("--rounds-in-flight 0 is invalid (the scheduler needs at least one live round)");
+    }
+    if cfg.rounds_in_flight > MAX_ROUNDS_IN_FLIGHT {
+        bail!(
+            "--rounds-in-flight {} exceeds the cap ({MAX_ROUNDS_IN_FLIGHT})",
+            cfg.rounds_in_flight
+        );
+    }
+    Ok(())
 }
 
 /// Hard cap on `--agg-workers`: far above any sensible shard fan-out,
@@ -155,6 +190,7 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
     }
     let stream = validate_streaming(cfg)?;
     validate_timing(cfg)?;
+    validate_window(cfg)?;
     let (schema, spec, _) = by_name(&cfg.model.dataset).context("unknown dataset")?;
     let data = generate(&schema, cfg.n_rows, cfg.seed);
     let mut vertical = partition(&data, &spec);
@@ -369,17 +405,20 @@ impl<'e> Experiment<'e> {
             }
             t
         };
+        let window = cfg.rounds_in_flight;
         let outcome = match (cfg.transport, cfg.fault_plan.clone()) {
             (TransportKind::Sim, None) => {
-                SimTransport::new(n_clients).execute(parties, &schedule)?
+                SimTransport::new(n_clients).execute(parties, &schedule, window)?
             }
             (TransportKind::Sim, Some(plan)) => {
                 FaultyTransport::new(SimTransport::new(n_clients), plan)
-                    .execute(parties, &schedule)?
+                    .execute(parties, &schedule, window)?
             }
-            (TransportKind::Threaded, None) => threaded().execute(parties, &schedule)?,
+            (TransportKind::Threaded, None) => {
+                threaded().execute(parties, &schedule, window)?
+            }
             (TransportKind::Threaded, Some(plan)) => {
-                FaultyTransport::new(threaded(), plan).execute(parties, &schedule)?
+                FaultyTransport::new(threaded(), plan).execute(parties, &schedule, window)?
             }
         };
         let s = summarize(&schedule, &test_labels, &outcome.notes);
@@ -485,6 +524,53 @@ mod tests {
         c.shards = 4;
         c.agg_workers = 3;
         assert_eq!(validate_streaming(&c).unwrap(), StreamCfg::chunked(1024, 4).with_workers(3));
+    }
+
+    #[test]
+    fn window_flag_validated() {
+        assert!(validate_window(&cfg()).is_ok(), "default W=1 passes");
+        let mut c = cfg();
+        c.rounds_in_flight = 0;
+        assert!(validate_window(&c).unwrap_err().to_string().contains("--rounds-in-flight 0"));
+        let mut c = cfg();
+        c.rounds_in_flight = MAX_ROUNDS_IN_FLIGHT + 1;
+        assert!(validate_window(&c).unwrap_err().to_string().contains("cap"));
+        let mut c = cfg();
+        c.rounds_in_flight = 4;
+        assert!(validate_window(&c).is_ok());
+    }
+
+    #[test]
+    fn rollback_knobs_validated_and_carried() {
+        // zero bound rejected
+        let mut c = cfg();
+        c.rollback_max_bytes = Some(0);
+        assert!(validate_streaming(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("--rollback-max-bytes 0"));
+        // knobs on a run that never creates a rollback log are inert
+        // and rejected rather than silently ignored
+        let mut c = cfg();
+        c.rollback_fsync = true;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("--shamir-threshold"));
+        let mut c = cfg();
+        c.chunk_words = Some(1024);
+        c.rollback_max_bytes = Some(4096);
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("--shamir-threshold"));
+        // knobs ride into the StreamCfg on a tolerant chunked run
+        let mut c = cfg();
+        c.chunk_words = Some(1024);
+        c.shards = 4;
+        c.shamir_threshold = Some(3);
+        c.rollback_fsync = true;
+        c.rollback_max_bytes = Some(4096);
+        let s = validate_streaming(&c).unwrap();
+        assert_eq!(s.rollback, RollbackCfg { fsync: true, max_bytes: 4096 });
+        // defaults: no fsync, the 1 GiB bound
+        let s = validate_streaming(&cfg()).unwrap();
+        assert_eq!(s.rollback, RollbackCfg::default());
+        assert_eq!(s.rollback.max_bytes, DEFAULT_ROLLBACK_MAX_BYTES);
     }
 
     #[test]

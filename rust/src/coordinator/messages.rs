@@ -106,6 +106,41 @@ pub enum Msg {
     SurrenderShares { round: u32, from: u16, bundles: Vec<(u16, Vec<u8>)> },
 }
 
+impl Msg {
+    /// The protocol round this message belongs to, `None` for the
+    /// setup-phase messages (which carry an epoch instead). This is
+    /// the routing key for the per-round contexts and the attribution
+    /// anchor for the fault-injection harness — keep it beside the
+    /// wire definitions so a new variant cannot forget it.
+    pub fn round(&self) -> Option<u32> {
+        match self {
+            Msg::RequestKeys { .. }
+            | Msg::PublishKeys(..)
+            | Msg::KeyDirectory { .. }
+            | Msg::SeedShares { .. }
+            | Msg::ShareRelay { .. } => None,
+            Msg::WeightsUpdate { round, .. }
+            | Msg::GroupWeights { round, .. }
+            | Msg::BatchSelect { round, .. }
+            | Msg::BatchRelay { round, .. }
+            | Msg::PlainBatch { round, .. }
+            | Msg::PlainBatchRelay { round, .. }
+            | Msg::MaskedActivation { round, .. }
+            | Msg::MaskedChunk { round, .. }
+            | Msg::FloatActivation { round, .. }
+            | Msg::DzBroadcast { round, .. }
+            | Msg::MaskedGradient { round, .. }
+            | Msg::FloatGradient { round, .. }
+            | Msg::GradientSum { round, .. }
+            | Msg::GradientChunk { round, .. }
+            | Msg::FloatGradientSum { round, .. }
+            | Msg::Predictions { round, .. }
+            | Msg::DropoutNotice { round, .. }
+            | Msg::SurrenderShares { round, .. } => Some(*round),
+        }
+    }
+}
+
 const T_REQUEST_KEYS: u8 = 1;
 const T_PUBLISH_KEYS: u8 = 2;
 const T_KEY_DIRECTORY: u8 = 3;

@@ -12,6 +12,31 @@ use std::time::Instant;
 
 use crate::net::Phase;
 
+/// Driver-side pipelining counters for the windowed round scheduler
+/// (`--rounds-in-flight`): how much round overlap a run actually
+/// achieved, and how long the driver sat with *zero* rounds in flight
+/// between retiring one round and opening the next (the idle gap the
+/// window exists to close). Collected by
+/// [`RoundWindow`](super::window::RoundWindow) and folded into the
+/// run's [`Metrics`] by every transport, so
+/// `benches/table1_cpu_time.rs` can report the win next to the CPU
+/// numbers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Rounds the scheduler opened over the run.
+    pub rounds_started: u64,
+    /// Rounds opened while at least one other round was still in
+    /// flight — each one is a round-start the serial driver would have
+    /// delayed behind a `RoundDone` round-trip.
+    pub overlapped_starts: u64,
+    /// Peak rounds simultaneously in flight (1 for a serial run).
+    pub max_in_flight: u64,
+    /// Wall-clock the driver spent with an empty window while schedule
+    /// rounds remained — the serialization gap between a round's
+    /// completion and the next round's start.
+    pub idle_gap_ns: u128,
+}
+
 /// Node index: 0 = aggregator, i+1 = client i (active party = client 0).
 pub type Node = usize;
 
@@ -47,6 +72,8 @@ pub struct Metrics {
     /// not resident — kept apart from `peak_buffered` so the RAM claim
     /// stays honest.
     peak_spilled: HashMap<Node, u64>,
+    /// Driver-side round-pipelining counters (see [`PipelineStats`]).
+    pipeline: PipelineStats,
 }
 
 impl Metrics {
@@ -117,6 +144,22 @@ impl Metrics {
         self.peak_spilled.get(&node).copied().unwrap_or(0)
     }
 
+    /// Fold the round scheduler's pipelining counters into this run's
+    /// meters (counts sum, the in-flight peak takes the maximum —
+    /// consistent with how distributed per-party meters merge).
+    pub fn record_pipeline(&mut self, p: PipelineStats) {
+        self.pipeline.rounds_started += p.rounds_started;
+        self.pipeline.overlapped_starts += p.overlapped_starts;
+        self.pipeline.max_in_flight = self.pipeline.max_in_flight.max(p.max_in_flight);
+        self.pipeline.idle_gap_ns += p.idle_gap_ns;
+    }
+
+    /// The run's round-pipelining counters (all-zero when no transport
+    /// recorded them, e.g. a `join`-side client process).
+    pub fn pipeline(&self) -> PipelineStats {
+        self.pipeline
+    }
+
     /// Fold another party's meters into this one (used by the driver to
     /// assemble one run-wide view from per-party meters).
     pub fn merge(&mut self, other: Metrics) {
@@ -134,6 +177,7 @@ impl Metrics {
         for (node, peak) in other.peak_spilled {
             self.record_spilled(node, peak);
         }
+        self.record_pipeline(other.pipeline);
     }
 
     pub fn get(&self, node: Node, phase: Phase) -> CpuEntry {
@@ -225,6 +269,30 @@ mod tests {
         assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 0), 64);
         assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 1), 128);
         assert_eq!(m.peak_spilled_bytes(AGGREGATOR), 900);
+    }
+
+    #[test]
+    fn pipeline_counters_sum_and_max_on_merge() {
+        let mut m = Metrics::new();
+        m.record_pipeline(PipelineStats {
+            rounds_started: 8,
+            overlapped_starts: 3,
+            max_in_flight: 2,
+            idle_gap_ns: 100,
+        });
+        let mut other = Metrics::new();
+        other.record_pipeline(PipelineStats {
+            rounds_started: 1,
+            overlapped_starts: 0,
+            max_in_flight: 4,
+            idle_gap_ns: 50,
+        });
+        m.merge(other);
+        let p = m.pipeline();
+        assert_eq!(p.rounds_started, 9);
+        assert_eq!(p.overlapped_starts, 3);
+        assert_eq!(p.max_in_flight, 4, "peaks take the maximum");
+        assert_eq!(p.idle_gap_ns, 150);
     }
 
     #[test]

@@ -8,7 +8,14 @@
 //!   Bonawitz'17 dropout recovery hangs off.
 //! * [`parties`] — the §4 machines: [`parties::ActiveParty`],
 //!   [`parties::PassiveParty`], [`parties::Aggregator`]. The same
-//!   machines run on every transport.
+//!   machines run on every transport. Each keeps a bounded ring of
+//!   per-round contexts (messages route by their `round` tag), so
+//!   several rounds can be in flight at once.
+//! * [`window`] — the windowed round scheduler behind
+//!   `--rounds-in-flight`: [`window::RoundWindow`] starts rounds in
+//!   schedule order up to the window width, with setup/rotation and
+//!   phase barriers plus the dropout drain that keep every width
+//!   bit-identical to the serial run. All three transports drive it.
 //! * [`messages`] — the §4 protocol messages and wire encoding.
 //! * [`streaming`] — the chunked streaming pipeline (`--chunk-words`/
 //!   `--shards`/`--agg-workers`): shard layout, the sender-side chunk
@@ -21,8 +28,9 @@
 //!   model.
 //! * [`driver`] — builds the party set, lays out the static round
 //!   schedule (setup → training with §5.1 key rotation → testing),
-//!   pumps the configured [`Transport`](crate::net::Transport), and
-//!   assembles a [`RunReport`].
+//!   hands it with the configured window width to the
+//!   [`Transport`](crate::net::Transport), and assembles a
+//!   [`RunReport`].
 //! * [`backend`] — PJRT-artifact or pure-Rust compute.
 //! * [`metrics`] — per-(node, phase) CPU accounting with the security-
 //!   overhead bucket (Table 1), plus the peak fan-in-buffer, per-shard
@@ -39,14 +47,16 @@ pub mod metrics;
 pub mod parties;
 pub mod party;
 pub mod streaming;
+pub mod window;
 
 pub use backend::Backend;
 pub use config::{BackendKind, RunConfig, SecurityMode, TransportKind};
 pub use driver::{
-    build, run_experiment, summarize, validate_streaming, validate_timing, Built, Experiment,
-    RunReport, Summary, MAX_AGG_WORKERS,
+    build, run_experiment, summarize, validate_streaming, validate_timing, validate_window,
+    Built, Experiment, RunReport, Summary, MAX_AGG_WORKERS,
 };
 pub use messages::Msg;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, PipelineStats};
 pub use party::{Note, Outbox, Party, RoundKind, RoundSpec, SETUP_ROUND};
 pub use streaming::StreamCfg;
+pub use window::{RoundWindow, MAX_ROUNDS_IN_FLIGHT};

@@ -9,6 +9,20 @@
 //! bytes — the same machines run single-threaded inside the
 //! byte-metered simulation, one-thread-per-party, or over TCP sockets.
 //!
+//! Round state is **per-round**: each machine keeps a bounded ring of
+//! round contexts keyed by round number (fan-in buffers, assemblers,
+//! batch caches, pending sums), and incoming messages route to their
+//! context by the `round` tag every protocol message carries. That is
+//! what lets the windowed scheduler ([`window`](super::window),
+//! `--rounds-in-flight`) keep several rounds in flight: contexts are
+//! created at announcement, detached while an event operates on them,
+//! and retired in completion order when their round's last obligation
+//! is met. The active party enforces the one true cross-round data
+//! dependency — round *r + 1*'s weights depend on round *r*'s SGD — by
+//! deferring a training round's opening until every earlier round
+//! retired; testing rounds are mutually independent and open on
+//! announcement.
+//!
 //! Cross-transport determinism: wherever the §4 protocol fans in
 //! (activation sums, gradient sums, key directories), the aggregator
 //! buffers contributions keyed by sender and combines them in client
@@ -38,7 +52,8 @@ use super::config::SecurityMode;
 use super::messages::{Msg, WireKeys};
 use super::metrics::{client, Metrics, AGGREGATOR};
 use super::party::{Note, Outbox, Party, RoundKind, RoundSpec};
-use super::streaming::{chunk_plan, ChunkAssembler, ShardLayout, StreamCfg};
+use super::streaming::{chunk_plan, ChunkAssembler, ShardLayout, StreamCfg, WorkerPool};
+use super::window::MAX_ROUNDS_IN_FLIGHT;
 
 /// Gradient-vector layout: every party reports a full-length flat
 /// gradient (Eq. 6's indicator zeroing what it doesn't own), so the
@@ -262,6 +277,27 @@ pub fn open_id(key: &[u8; 32], round: u32, seq: u32, sealed: &[u8]) -> Option<u6
 // Active party
 // ---------------------------------------------------------------------------
 
+/// Per-round protocol context of the active party. One lives per round
+/// in flight, keyed by round number — the bounded ring behind
+/// `--rounds-in-flight` (incoming messages route to their context by
+/// the `round` tag every protocol message carries).
+struct ActiveRoundCtx {
+    kind: RoundKind,
+    /// The round's mini-batch sample ids (from the `RoundSpec`).
+    ids: Vec<u64>,
+    /// The round's opening messages went out. Training rounds defer
+    /// opening until every earlier round's SGD update has landed — the
+    /// data dependency that makes window overlap bit-identical.
+    opened: bool,
+    /// This round's batch features, cached for the backward pass.
+    batch_x: Option<Mat>,
+    own: Option<GradSum>,
+    pending_gsum: Option<GradSum>,
+    /// Reassembles the chunked `GradientChunk` downlink (streaming
+    /// runs only; single sender, single inline executor).
+    gsum_asm: ChunkAssembler,
+}
+
 pub struct ActiveParty<'e> {
     /// Client index (always 0).
     pub id: usize,
@@ -284,21 +320,16 @@ pub struct ActiveParty<'e> {
     rng: DetRng,
     /// id → row index (for feature/label lookup).
     index: HashMap<u64, usize>,
-    /// Cached per-round state for the backward pass.
-    last_batch_x: Option<Mat>,
-    /// Reassembles the chunked `GradientChunk` downlink (streaming
-    /// runs only; single sender, single inline executor).
-    gsum_asm: ChunkAssembler,
     // --- event-driven round state ---
+    /// Current metering phase (every round in flight shares it — the
+    /// scheduler's phase barrier).
     phase: Phase,
-    kind: RoundKind,
-    round: u32,
-    batch_ids: Vec<u64>,
-    /// Waiting for a key directory (and, in robust mode, the seed-share
-    /// relay) before opening the round.
-    await_setup: bool,
-    own: Option<GradSum>,
-    pending_gsum: Option<GradSum>,
+    /// Live per-round contexts, keyed by round number.
+    ctxs: BTreeMap<u32, ActiveRoundCtx>,
+    /// The round waiting for a key directory (and, in robust mode, the
+    /// seed-share relay) before opening. Setup/rotation rounds are
+    /// scheduler barriers, so at most one such round exists at a time.
+    await_setup: Option<u32>,
 }
 
 impl<'e> ActiveParty<'e> {
@@ -331,15 +362,26 @@ impl<'e> ActiveParty<'e> {
             metrics: Metrics::new(),
             rng: party_rng(seed, 0),
             index,
-            last_batch_x: None,
-            gsum_asm: ChunkAssembler::new(false, stream.shards.max(1), 1),
             phase: Phase::Setup,
-            kind: RoundKind::Setup,
-            round: 0,
-            batch_ids: Vec::new(),
-            await_setup: false,
+            ctxs: BTreeMap::new(),
+            await_setup: None,
+        }
+    }
+
+    /// A fresh per-round context for `spec`.
+    fn new_ctx(&self, spec: &RoundSpec) -> ActiveRoundCtx {
+        ActiveRoundCtx {
+            kind: spec.kind,
+            ids: spec.ids.clone(),
+            opened: false,
+            batch_x: None,
             own: None,
             pending_gsum: None,
+            gsum_asm: ChunkAssembler::inline(
+                false,
+                self.stream.shards.max(1),
+                self.stream.rollback,
+            ),
         }
     }
 
@@ -411,15 +453,15 @@ impl<'e> ActiveParty<'e> {
         self.params.flatten()
     }
 
-    /// Build this round's feature matrix for the selected batch.
-    pub fn batch_features(&mut self, ids: &[u64]) -> Mat {
+    /// Build one round's feature matrix for the selected batch (the
+    /// caller caches it in that round's context for the backward pass).
+    pub fn batch_features(&self, ids: &[u64]) -> Mat {
         let d = self.data.dim;
         let mut x = Mat::zeros(ids.len(), d);
         for (r, id) in ids.iter().enumerate() {
             let i = self.index[id];
             x.data[r * d..(r + 1) * d].copy_from_slice(&self.data.x[i]);
         }
-        self.last_batch_x = Some(x.clone());
         x
     }
 
@@ -443,11 +485,6 @@ impl<'e> ActiveParty<'e> {
                 vec![Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }]
             }
         }
-    }
-
-    /// The cached batch features (for the backward pass).
-    pub fn last_x(&self) -> &Mat {
-        self.last_batch_x.as_ref().expect("forward ran")
     }
 
     /// The active party's own full-length gradient contribution,
@@ -514,31 +551,49 @@ impl<'e> ActiveParty<'e> {
     }
 
     /// Open a training round: sealed batch + weights redistribution +
-    /// own masked forward activation.
-    fn start_train_round(&mut self, out: &mut Outbox) -> Result<()> {
-        let ids = self.batch_ids.clone();
-        let round = self.round;
+    /// own masked forward activation. The context must be detached
+    /// from the ring (take/operate/put-back — see `on_message`).
+    fn start_train_round(
+        &mut self,
+        round: u32,
+        ctx: &mut ActiveRoundCtx,
+        out: &mut Outbox,
+    ) -> Result<()> {
+        ctx.opened = true;
+        let ids = ctx.ids.clone();
         let t0 = Instant::now();
         let batch_msg = self.make_batch(&ids, round);
         self.rec(t0, self.security.is_secure());
         out.send(Addr::Aggregator, batch_msg);
         out.send(Addr::Aggregator, Msg::WeightsUpdate { round, flat: self.group_weights_flat() });
-        self.forward_and_upload(&ids, out)
+        self.forward_and_upload(round, ctx, &ids, out)
     }
 
     /// Open a testing round: unlabeled sealed batch + masked activation.
-    fn start_test_round(&mut self, out: &mut Outbox) -> Result<()> {
-        let ids = self.batch_ids.clone();
-        let round = self.round;
+    fn start_test_round(
+        &mut self,
+        round: u32,
+        ctx: &mut ActiveRoundCtx,
+        out: &mut Outbox,
+    ) -> Result<()> {
+        ctx.opened = true;
+        let ids = ctx.ids.clone();
         let t0 = Instant::now();
         let batch_msg = self.make_batch_unlabeled(&ids, round);
         self.rec(t0, self.security.is_secure());
         out.send(Addr::Aggregator, batch_msg);
-        self.forward_and_upload(&ids, out)
+        self.forward_and_upload(round, ctx, &ids, out)
     }
 
-    fn forward_and_upload(&mut self, ids: &[u64], out: &mut Outbox) -> Result<()> {
+    fn forward_and_upload(
+        &mut self,
+        round: u32,
+        ctx: &mut ActiveRoundCtx,
+        ids: &[u64],
+        out: &mut Outbox,
+    ) -> Result<()> {
         let xa = self.batch_features(ids);
+        ctx.batch_x = Some(xa.clone());
         let a_params = PartyParams {
             w: self.params.active.w.clone(),
             b: self.params.active.b.clone(),
@@ -548,7 +603,7 @@ impl<'e> ActiveParty<'e> {
         self.rec(t0, false);
         let za = za?;
         let t0 = Instant::now();
-        let msgs = self.masked_activation(self.round, &za);
+        let msgs = self.masked_activation(round, &za);
         self.rec(t0, self.security.is_secure());
         for msg in msgs {
             out.send(Addr::Aggregator, msg);
@@ -556,37 +611,99 @@ impl<'e> ActiveParty<'e> {
         Ok(())
     }
 
-    fn on_grad_sum(&mut self, gsum: GradSum, out: &mut Outbox) -> Result<()> {
-        if self.own.is_some() {
-            self.finish_train_round(gsum, out)
+    /// A full gradient sum arrived for `round` (the context is already
+    /// detached). Finishes the round if the backward pass ran, else
+    /// parks the sum and puts the context back.
+    fn on_grad_sum(
+        &mut self,
+        round: u32,
+        mut ctx: ActiveRoundCtx,
+        gsum: GradSum,
+        out: &mut Outbox,
+    ) -> Result<()> {
+        if ctx.own.is_some() {
+            self.finish_train_round(round, ctx, gsum, out)
         } else {
             // defensive: tolerate the sum overtaking the dz broadcast
-            self.pending_gsum = Some(gsum);
+            ctx.pending_gsum = Some(gsum);
+            self.ctxs.insert(round, ctx);
             Ok(())
         }
     }
 
-    fn finish_train_round(&mut self, gsum: GradSum, out: &mut Outbox) -> Result<()> {
-        let own = self.own.take().context("own gradient contribution missing")?;
+    /// Unmask + SGD, retire the round's context, and open the next
+    /// deferred round (its parameter dependency is now satisfied).
+    fn finish_train_round(
+        &mut self,
+        round: u32,
+        mut ctx: ActiveRoundCtx,
+        gsum: GradSum,
+        out: &mut Outbox,
+    ) -> Result<()> {
+        let own = ctx.own.take().context("own gradient contribution missing")?;
         let lr = self.cfg.lr;
         let t0 = Instant::now();
         let res = self.apply_gradients(gsum, own, lr);
         self.rec(t0, false);
         res?;
-        out.note(Note::RoundDone { round: self.round });
+        out.note(Note::RoundDone { round });
+        // ctx dropped here: the round is retired
+        self.open_deferred(out)
+    }
+
+    /// Open every announced round whose dependencies are satisfied: a
+    /// training round may open only when it is the oldest live round
+    /// (its parameters depend on every earlier SGD step); testing
+    /// rounds are mutually independent and open as soon as no training
+    /// round precedes them. Setup/rotation rounds open through
+    /// `setup_complete` instead.
+    fn open_deferred(&mut self, out: &mut Outbox) -> Result<()> {
+        let rounds: Vec<u32> = self.ctxs.keys().copied().collect();
+        let mut earlier_live = false;
+        let mut earlier_train = false;
+        for round in rounds {
+            let (kind, opened) = {
+                let ctx = &self.ctxs[&round];
+                (ctx.kind, ctx.opened)
+            };
+            if !opened && self.await_setup != Some(round) {
+                let can_open = match kind {
+                    RoundKind::Train => !earlier_live,
+                    RoundKind::Test => !earlier_train,
+                    RoundKind::Setup => false,
+                };
+                if can_open {
+                    let mut ctx = self.ctxs.remove(&round).expect("ctx just read");
+                    let res = match kind {
+                        RoundKind::Train => self.start_train_round(round, &mut ctx, out),
+                        RoundKind::Test => self.start_test_round(round, &mut ctx, out),
+                        RoundKind::Setup => unreachable!("setup rounds never open here"),
+                    };
+                    self.ctxs.insert(round, ctx);
+                    res?;
+                }
+            }
+            earlier_live = true;
+            if kind == RoundKind::Train {
+                earlier_train = true;
+            }
+        }
         Ok(())
     }
 
-    /// The setup phase of this round finished (key directory installed
-    /// and, in robust mode, seed shares stored): open the round proper.
+    /// The setup phase of the awaited round finished (key directory
+    /// installed and, in robust mode, seed shares stored): open the
+    /// round proper.
     fn setup_complete(&mut self, out: &mut Outbox) -> Result<()> {
-        if self.await_setup {
-            self.await_setup = false;
-            match self.kind {
-                RoundKind::Setup => out.note(Note::RoundDone { round: self.round }),
-                RoundKind::Train => self.start_train_round(out)?,
-                RoundKind::Test => bail!("testing rounds do not rotate keys"),
+        let Some(round) = self.await_setup.take() else { return Ok(()) };
+        let mut ctx = self.ctxs.remove(&round).context("awaited round has a context")?;
+        match ctx.kind {
+            RoundKind::Setup => out.note(Note::RoundDone { round }), // ctx retired
+            RoundKind::Train => {
+                self.start_train_round(round, &mut ctx, out)?;
+                self.ctxs.insert(round, ctx);
             }
+            RoundKind::Test => bail!("testing rounds do not rotate keys"),
         }
         Ok(())
     }
@@ -598,23 +715,32 @@ impl<'e> Party for ActiveParty<'e> {
     }
 
     fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()> {
-        self.round = spec.round;
-        self.kind = spec.kind;
         self.phase = spec.phase;
-        self.batch_ids = spec.ids.clone();
-        self.own = None;
-        self.pending_gsum = None;
-        self.gsum_asm.reset()?;
+        if self.ctxs.len() >= MAX_ROUNDS_IN_FLIGHT {
+            bail!(
+                "active party: round-context ring overflow ({} live rounds)",
+                self.ctxs.len()
+            );
+        }
+        let ctx = self.new_ctx(spec);
         match spec.kind {
-            // The aggregator opens setup with RequestKeys; we respond.
-            RoundKind::Setup => self.await_setup = true,
-            RoundKind::Train => {
-                self.await_setup = spec.rotate;
-                if !spec.rotate {
-                    self.start_train_round(out)?;
-                }
+            // The aggregator opens setup with RequestKeys; we respond,
+            // and the round opens once the directory (and, in robust
+            // mode, the share relay) lands.
+            RoundKind::Setup => {
+                self.await_setup = Some(spec.round);
+                self.ctxs.insert(spec.round, ctx);
             }
-            RoundKind::Test => self.start_test_round(out)?,
+            RoundKind::Train if spec.rotate => {
+                self.await_setup = Some(spec.round);
+                self.ctxs.insert(spec.round, ctx);
+            }
+            RoundKind::Train | RoundKind::Test => {
+                self.ctxs.insert(spec.round, ctx);
+                // opens now if its dependencies allow, else defers
+                // until the preceding round's SGD lands
+                self.open_deferred(out)?;
+            }
         }
         Ok(())
     }
@@ -657,40 +783,67 @@ impl<'e> Party for ActiveParty<'e> {
                 self.rec(t0, true);
                 out.send(Addr::Aggregator, reply);
             }
-            Msg::DzBroadcast { dz, .. } => {
+            Msg::DzBroadcast { round, dz } => {
+                let mut ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("dz broadcast for unknown round {round}"))?;
                 let batch = self.cfg.batch_size;
                 let h = self.cfg.hidden;
                 let dzm = Mat::from_vec(batch, h, dz);
-                let xa = self.last_x().clone();
+                let xa = ctx.batch_x.clone().context("forward ran")?;
                 let t0 = Instant::now();
                 let bwd = self.backend.party_bwd("bwd_active", &xa, &dzm, true);
                 self.rec(t0, false);
                 let (own_dw, own_db) = bwd?;
                 let own_db = own_db.context("bias gradient missing")?;
                 let t0 = Instant::now();
-                let own = self.own_grad_contribution(self.round, &own_dw, &own_db);
+                let own = self.own_grad_contribution(round, &own_dw, &own_db);
                 self.rec(t0, self.security.is_secure());
-                self.own = Some(own);
-                if let Some(gsum) = self.pending_gsum.take() {
-                    self.finish_train_round(gsum, out)?;
+                ctx.own = Some(own);
+                if let Some(gsum) = ctx.pending_gsum.take() {
+                    self.finish_train_round(round, ctx, gsum, out)?;
+                } else {
+                    self.ctxs.insert(round, ctx);
                 }
             }
-            Msg::GradientSum { words, .. } => self.on_grad_sum(GradSum::Words(words), out)?,
-            Msg::GradientChunk { shard, offset, total, words, .. } => {
+            Msg::GradientSum { round, words } => {
+                let ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("gradient sum for unknown round {round}"))?;
+                self.on_grad_sum(round, ctx, GradSum::Words(words), out)?;
+            }
+            Msg::GradientChunk { round, shard, offset, total, words } => {
+                let mut ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("gradient chunk for unknown round {round}"))?;
                 let t0 = Instant::now();
                 // single-sender stream: the aggregator is "sender 0"
-                self.gsum_asm.add_chunk(0, shard, offset, total, &words)?;
+                ctx.gsum_asm.add_chunk(0, shard, offset, total, &words)?;
                 self.rec(t0, false);
-                if self.gsum_asm.complete_count() == 1 {
-                    let words =
-                        self.gsum_asm.take_sum()?.context("complete downlink stream")?;
-                    self.on_grad_sum(GradSum::Words(words), out)?;
+                if ctx.gsum_asm.complete_count() == 1 {
+                    let words = ctx.gsum_asm.take_sum()?.context("complete downlink stream")?;
+                    self.on_grad_sum(round, ctx, GradSum::Words(words), out)?;
+                } else {
+                    self.ctxs.insert(round, ctx);
                 }
             }
-            Msg::FloatGradientSum { vals, .. } => self.on_grad_sum(GradSum::Floats(vals), out)?,
+            Msg::FloatGradientSum { round, vals } => {
+                let ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("gradient sum for unknown round {round}"))?;
+                self.on_grad_sum(round, ctx, GradSum::Floats(vals), out)?;
+            }
             Msg::Predictions { round, probs } => {
+                // retire the test round's context
+                self.ctxs
+                    .remove(&round)
+                    .with_context(|| format!("predictions for unknown round {round}"))?;
                 out.note(Note::Predictions { round, probs });
-                out.note(Note::RoundDone { round: self.round });
+                out.note(Note::RoundDone { round });
             }
             m => bail!("active party: unexpected message {m:?}"),
         }
@@ -720,6 +873,17 @@ pub enum GradSum {
 // Passive party
 // ---------------------------------------------------------------------------
 
+/// Per-round protocol context of a passive party (the bounded ring
+/// behind `--rounds-in-flight`; messages route by their `round` tag).
+struct PassiveRoundCtx {
+    kind: RoundKind,
+    /// The round's resolved (position, id) pairs, consumed by the
+    /// forward pass.
+    resolved: Option<Vec<(usize, u64)>>,
+    /// This round's batch features, cached for the backward pass.
+    batch_x: Option<Mat>,
+}
+
 pub struct PassiveParty<'e> {
     /// Client index (1-based among clients; active is 0).
     pub id: usize,
@@ -730,7 +894,9 @@ pub struct PassiveParty<'e> {
     pub session: Option<PartySession>,
     pub security: SecurityMode,
     pub layout: GradLayout,
-    /// Current group weights (distributed by the aggregator).
+    /// Current group weights (distributed by the aggregator). Global,
+    /// not per-round: weights only change between training rounds,
+    /// which the active party's SGD dependency serializes.
     pub weights: Mat,
     /// Shamir threshold for dropout tolerance (None = base protocol).
     threshold: Option<usize>,
@@ -741,13 +907,12 @@ pub struct PassiveParty<'e> {
     rng: DetRng,
     batch_size: usize,
     n_clients: usize,
-    /// Cached batch features for the backward pass.
-    last_batch_x: Option<Mat>,
     // --- event-driven round state ---
+    /// Current metering phase (shared by every round in flight — the
+    /// scheduler's phase barrier).
     phase: Phase,
-    kind: RoundKind,
-    round: u32,
-    resolved: Option<Vec<(usize, u64)>>,
+    /// Live per-round contexts, keyed by round number.
+    ctxs: BTreeMap<u32, PassiveRoundCtx>,
 }
 
 impl<'e> PassiveParty<'e> {
@@ -781,11 +946,8 @@ impl<'e> PassiveParty<'e> {
             rng: party_rng(seed, id),
             batch_size: cfg.batch_size,
             n_clients: cfg.n_clients(),
-            last_batch_x: None,
             phase: Phase::Setup,
-            kind: RoundKind::Setup,
-            round: 0,
-            resolved: None,
+            ctxs: BTreeMap::new(),
         }
     }
 
@@ -838,19 +1000,15 @@ impl<'e> PassiveParty<'e> {
     }
 
     /// Build the (B × d) feature matrix, zero rows for absent samples
-    /// (Eq. 2's indicator function).
-    pub fn batch_features(&mut self, resolved: &[(usize, u64)], batch: usize) -> Mat {
+    /// (Eq. 2's indicator function). The caller caches it in the
+    /// round's context for the backward pass.
+    pub fn batch_features(&self, resolved: &[(usize, u64)], batch: usize) -> Mat {
         let mut x = Mat::zeros(batch, self.dim);
         for &(pos, id) in resolved {
             let row = &self.data.rows[&id];
             x.data[pos * self.dim..(pos + 1) * self.dim].copy_from_slice(row);
         }
-        self.last_batch_x = Some(x.clone());
         x
-    }
-
-    pub fn last_x(&self) -> &Mat {
-        self.last_batch_x.as_ref().expect("forward ran")
     }
 
     /// Mask an activation for upload (Eq. 2): one monolithic message,
@@ -908,12 +1066,19 @@ impl<'e> PassiveParty<'e> {
         self.weights = Mat::from_vec(self.dim, self.hidden, flat.to_vec());
     }
 
-    /// Run the group forward pass on the resolved batch and upload the
-    /// masked activation.
-    fn forward_and_upload(&mut self, out: &mut Outbox) -> Result<()> {
+    /// Run the group forward pass on one round's resolved batch and
+    /// upload the masked activation (the context is detached from the
+    /// ring while we operate on it).
+    fn forward_and_upload(
+        &mut self,
+        round: u32,
+        ctx: &mut PassiveRoundCtx,
+        out: &mut Outbox,
+    ) -> Result<()> {
         let batch = self.batch_size;
-        let resolved = self.resolved.take().context("batch relay not yet received")?;
+        let resolved = ctx.resolved.take().context("batch relay not yet received")?;
         let x = self.batch_features(&resolved, batch);
+        ctx.batch_x = Some(x.clone());
         let graph = format!("fwd_g{}", self.group);
         let weights = PartyParams { w: self.weights.clone(), b: None };
         let t0 = Instant::now();
@@ -921,7 +1086,7 @@ impl<'e> PassiveParty<'e> {
         self.rec(t0, false);
         let z = z?;
         let t0 = Instant::now();
-        let msgs = self.masked_activation(self.round, &z);
+        let msgs = self.masked_activation(round, &z);
         self.rec(t0, self.security.is_secure());
         for msg in msgs {
             out.send(Addr::Aggregator, msg);
@@ -936,10 +1101,24 @@ impl<'e> Party for PassiveParty<'e> {
     }
 
     fn on_round_start(&mut self, spec: &RoundSpec, _out: &mut Outbox) -> Result<()> {
-        self.round = spec.round;
-        self.kind = spec.kind;
         self.phase = spec.phase;
-        self.resolved = None;
+        // pure-setup rounds route no round-tagged traffic to a passive
+        // (key exchange is epoch-scoped), so a context would never
+        // retire — skip it, as the aggregator does
+        if spec.kind == RoundKind::Setup {
+            return Ok(());
+        }
+        if self.ctxs.len() >= MAX_ROUNDS_IN_FLIGHT {
+            bail!(
+                "passive party {}: round-context ring overflow ({} live rounds)",
+                self.id,
+                self.ctxs.len()
+            );
+        }
+        self.ctxs.insert(
+            spec.round,
+            PassiveRoundCtx { kind: spec.kind, resolved: None, batch_x: None },
+        );
         Ok(())
     }
 
@@ -978,45 +1157,70 @@ impl<'e> Party for PassiveParty<'e> {
                 out.send(Addr::Aggregator, reply);
             }
             Msg::BatchRelay { entries, round } => {
+                let mut ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("batch relay for unknown round {round}"))?;
                 let batch = self.batch_size;
                 let t0 = Instant::now();
                 let resolved = self.resolve_batch(round, &entries, batch);
                 self.rec(t0, true);
-                self.resolved = Some(resolved);
-                // testing rounds carry no weights; forward immediately
-                if self.kind == RoundKind::Test {
-                    self.forward_and_upload(out)?;
+                ctx.resolved = Some(resolved);
+                // testing rounds carry no weights: forward immediately,
+                // and nothing else arrives for them — retire the ctx
+                if ctx.kind == RoundKind::Test {
+                    self.forward_and_upload(round, &mut ctx, out)?;
+                } else {
+                    self.ctxs.insert(round, ctx);
                 }
             }
-            Msg::PlainBatchRelay { ids, .. } => {
-                self.resolved = Some(self.resolve_plain(&ids));
-                if self.kind == RoundKind::Test {
-                    self.forward_and_upload(out)?;
+            Msg::PlainBatchRelay { ids, round } => {
+                let mut ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("batch relay for unknown round {round}"))?;
+                ctx.resolved = Some(self.resolve_plain(&ids));
+                if ctx.kind == RoundKind::Test {
+                    self.forward_and_upload(round, &mut ctx, out)?;
+                } else {
+                    self.ctxs.insert(round, ctx);
                 }
             }
-            Msg::GroupWeights { flat, .. } => {
+            Msg::GroupWeights { flat, round, .. } => {
+                let mut ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("group weights for unknown round {round}"))?;
                 self.set_weights(&flat);
                 // training: the weights follow the relay (per-sender
-                // FIFO), so the batch is resolved by now
-                if self.kind == RoundKind::Train {
-                    self.forward_and_upload(out)?;
+                // FIFO), so the batch is resolved by now; the backward
+                // pass still needs the ctx, so it stays live
+                if ctx.kind == RoundKind::Train {
+                    self.forward_and_upload(round, &mut ctx, out)?;
                 }
+                self.ctxs.insert(round, ctx);
             }
-            Msg::DzBroadcast { dz, .. } => {
+            Msg::DzBroadcast { round, dz } => {
+                let ctx = self
+                    .ctxs
+                    .remove(&round)
+                    .with_context(|| format!("dz broadcast for unknown round {round}"))?;
                 let batch = self.batch_size;
                 let dzm = Mat::from_vec(batch, self.hidden, dz);
                 let graph = format!("bwd_g{}", self.group);
-                let x = self.last_x().clone();
+                let x = ctx.batch_x.clone().context("forward ran")?;
                 let t0 = Instant::now();
                 let bwd = self.backend.party_bwd(&graph, &x, &dzm, false);
                 self.rec(t0, false);
                 let (dw, _) = bwd?;
                 let t0 = Instant::now();
-                let msgs = self.masked_gradient(self.round, &dw);
+                let msgs = self.masked_gradient(round, &dw);
                 self.rec(t0, self.security.is_secure());
                 for msg in msgs {
                     out.send(Addr::Aggregator, msg);
                 }
+                // the gradient upload is this round's last obligation:
+                // ctx retired (dropped here)
             }
             m => bail!("passive party {}: unexpected message {m:?}", self.id),
         }
@@ -1040,7 +1244,12 @@ impl<'e> Party for PassiveParty<'e> {
 /// vectors (masks cancel per Eq. 4-5), and never sees an individual
 /// party's plaintext tensor.
 ///
-/// Monolithic fan-in points buffer contributions in [`BTreeMap`]s
+/// All fan-in state lives in per-round [`AggRoundCtx`]s (a bounded
+/// ring keyed by round number), so several rounds fold concurrently
+/// under the windowed scheduler; a declared dropout purges the client
+/// from *every* live round context, and the per-(round, tag) mask
+/// corrections recover each round independently. Monolithic fan-in
+/// points buffer contributions in [`BTreeMap`]s
 /// keyed by sender so sums run in client order regardless of arrival
 /// order — the transport-independence invariant. Chunked fan-ins
 /// (`--chunk-words`) run through a [`ChunkAssembler`] per tensor tag
@@ -1054,6 +1263,59 @@ impl<'e> Party for PassiveParty<'e> {
 /// streaming pipeline is on, the aggregator→active `GradientSum` is
 /// chunked too ([`Msg::GradientChunk`]), so the downlink streams with
 /// the same shard layout as the uplinks.
+/// Per-round protocol context of the aggregator: one per Train/Test
+/// round in flight (setup rounds have no fan-in state), keyed by round
+/// number in a bounded ring. Incoming fan-in messages route to their
+/// context by the `round` tag; the context retires when the round's
+/// terminal send goes out (`GradientSum`/`GradientChunk`s for
+/// training, `Predictions` for testing).
+struct AggRoundCtx {
+    kind: RoundKind,
+    labels: Vec<f32>,
+    relay_entries: Option<Vec<Vec<u8>>>,
+    relay_ids: Option<Vec<u64>>,
+    group_flats: Option<Vec<Vec<f32>>>,
+    relayed: bool,
+    acts_exact: BTreeMap<u16, Vec<u64>>,
+    acts_float: BTreeMap<u16, Vec<f32>>,
+    grads_exact: BTreeMap<u16, Vec<u64>>,
+    grads_float: BTreeMap<u16, Vec<f32>>,
+    /// Streaming fan-ins: chunked masked tensors folded shard by shard
+    /// (slots of the shared worker pool, so two rounds fold
+    /// concurrently without cross-talk).
+    acts_asm: ChunkAssembler,
+    grads_asm: ChunkAssembler,
+    /// This round's fan-ins were summed and consumed (the buffers
+    /// empty out on consumption, so stall diagnosis needs the flags).
+    acts_done: bool,
+    grads_done: bool,
+    /// Last (mono, asm, spill) byte totals this context contributed to
+    /// the aggregator's running meters — the delta bookkeeping that
+    /// keeps `note_buffered` O(1) per message instead of rescanning
+    /// every live round context on the per-chunk hot path.
+    metered: (u64, u64, u64),
+}
+
+impl AggRoundCtx {
+    /// Resident fan-in bytes (monolithic buffers + shard accumulators).
+    fn buffered(&self) -> (u64, u64) {
+        let mono = self.acts_exact.values().map(|v| v.len() * 8).sum::<usize>()
+            + self.acts_float.values().map(|v| v.len() * 4).sum::<usize>()
+            + self.grads_exact.values().map(|v| v.len() * 8).sum::<usize>()
+            + self.grads_float.values().map(|v| v.len() * 4).sum::<usize>();
+        (mono as u64, self.acts_asm.buffered_bytes() + self.grads_asm.buffered_bytes())
+    }
+
+    /// The aggregator's obligations for this round are all met.
+    fn finished(&self) -> bool {
+        match self.kind {
+            RoundKind::Test => self.acts_done,
+            RoundKind::Train => self.acts_done && self.grads_done,
+            RoundKind::Setup => true,
+        }
+    }
+}
+
 pub struct Aggregator<'e> {
     pub n_clients: usize,
     pub hidden: usize,
@@ -1069,29 +1331,34 @@ pub struct Aggregator<'e> {
     /// `GradientSum` downlink and the assembler shard/worker shape).
     stream: StreamCfg,
     metrics: Metrics,
+    /// The one shared accumulator worker pool (`--agg-workers` > 1 on
+    /// a chunked run): every fan-in assembler of every live round
+    /// folds through it, addressed by per-(round, fan-in) slots.
+    pool: Option<WorkerPool>,
     // --- event-driven round state ---
+    /// Current metering phase (shared by every round in flight — the
+    /// scheduler's phase barrier).
     phase: Phase,
-    kind: RoundKind,
+    /// Latest announced round (DropoutNotice tagging fallback when no
+    /// fan-in context is live).
     round: u32,
+    /// Live per-round contexts, keyed by round number.
+    ctxs: BTreeMap<u32, AggRoundCtx>,
+    /// Rounds announced but not yet reported complete by the driver
+    /// ([`Party::on_round_complete`]): while any round below the one
+    /// being diagnosed is still here, the active party may simply be
+    /// finishing it — an unopened round is not evidence of its death.
+    pending_done: BTreeSet<u32>,
     /// Setup epochs completed (drives RequestKeys numbering).
     epoch: u64,
     keys: Vec<WireKeys>,
-    labels: Vec<f32>,
-    relay_entries: Option<Vec<Vec<u8>>>,
-    relay_ids: Option<Vec<u64>>,
-    group_flats: Option<Vec<Vec<f32>>>,
-    relayed: bool,
-    acts_exact: BTreeMap<u16, Vec<u64>>,
-    acts_float: BTreeMap<u16, Vec<f32>>,
-    grads_exact: BTreeMap<u16, Vec<u64>>,
-    grads_float: BTreeMap<u16, Vec<f32>>,
-    /// Streaming fan-ins: chunked masked tensors folded shard by shard.
-    acts_asm: ChunkAssembler,
-    grads_asm: ChunkAssembler,
-    /// This round's fan-ins were summed and consumed (the buffers
-    /// empty out on consumption, so stall diagnosis needs the flags).
-    acts_done: bool,
-    grads_done: bool,
+    /// Running fan-in byte totals across every live round context
+    /// (monolithic buffers, shard accumulators, rollback spill),
+    /// maintained by per-context deltas so the per-message meter stays
+    /// O(1) regardless of the window width.
+    cur_mono: u64,
+    cur_asm: u64,
+    cur_spill: u64,
     /// Last assembler resident-byte total seen by `note_buffered` —
     /// gates the per-shard re-metering off the per-chunk hot path.
     last_asm_buffered: u64,
@@ -1139,12 +1406,14 @@ impl<'e> Aggregator<'e> {
         // party's init (same seed → same init as ModelParams::init)
         let params = ModelParams::init(cfg, seed);
         assert_eq!(groups.len(), cfg.n_clients() - 1, "one group per passive client");
-        // exact dropout purge needs every sender's committed words to
-        // stay subtractable until the fan-in is consumed, so tolerant
-        // runs keep a rollback log beside the shard accumulators
-        let revocable = threshold.is_some();
-        let shards = stream.shards.max(1);
-        let workers = stream.agg_workers.max(1);
+        // one shared worker pool for every chunked fan-in of every
+        // round in flight (the pre-refactor shape spawned one pool per
+        // fan-in, doubling the thread count)
+        let pool = if stream.chunk_words.is_some() && stream.agg_workers > 1 {
+            Some(WorkerPool::new(stream.agg_workers.min(stream.shards.max(1))))
+        } else {
+            None
+        };
         Aggregator {
             n_clients: cfg.n_clients(),
             hidden: cfg.hidden,
@@ -1156,24 +1425,16 @@ impl<'e> Aggregator<'e> {
             groups,
             stream,
             metrics: Metrics::new(),
+            pool,
             phase: Phase::Setup,
-            kind: RoundKind::Setup,
             round: 0,
+            ctxs: BTreeMap::new(),
+            pending_done: BTreeSet::new(),
             epoch: 0,
             keys: Vec::new(),
-            labels: Vec::new(),
-            relay_entries: None,
-            relay_ids: None,
-            group_flats: None,
-            relayed: false,
-            acts_exact: BTreeMap::new(),
-            acts_float: BTreeMap::new(),
-            grads_exact: BTreeMap::new(),
-            grads_float: BTreeMap::new(),
-            acts_asm: ChunkAssembler::new(revocable, shards, workers),
-            grads_asm: ChunkAssembler::new(revocable, shards, workers),
-            acts_done: false,
-            grads_done: false,
+            cur_mono: 0,
+            cur_asm: 0,
+            cur_spill: 0,
             last_asm_buffered: 0,
             threshold,
             live: (0..cfg.n_clients() as u16).collect(),
@@ -1194,31 +1455,111 @@ impl<'e> Aggregator<'e> {
         self.metrics.record(AGGREGATOR, self.phase, t0.elapsed().as_nanos(), overhead);
     }
 
-    /// Meter the bytes currently buffered across every fan-in (the
-    /// peak is the streaming pipeline's memory claim, asserted in
-    /// `tests/chunk_equivalence.rs`).
-    fn note_buffered(&mut self) {
-        let mono = self.acts_exact.values().map(|v| v.len() * 8).sum::<usize>()
-            + self.acts_float.values().map(|v| v.len() * 4).sum::<usize>()
-            + self.grads_exact.values().map(|v| v.len() * 8).sum::<usize>()
-            + self.grads_float.values().map(|v| v.len() * 4).sum::<usize>();
-        let asm_cur = self.acts_asm.buffered_bytes() + self.grads_asm.buffered_bytes();
-        self.metrics.record_buffered(AGGREGATOR, mono as u64 + asm_cur);
-        self.metrics.record_spilled(
-            AGGREGATOR,
-            self.acts_asm.spilled_bytes() + self.grads_asm.spilled_bytes(),
-        );
+    /// A fresh fan-in context for a Train/Test round. Exact dropout
+    /// purge needs every sender's committed words to stay subtractable
+    /// until the fan-in is consumed, so tolerant runs keep a rollback
+    /// log beside the shard accumulators. Assembler slots are derived
+    /// from the round number (unique per run), so concurrent rounds
+    /// share the worker pool without cross-talk.
+    fn new_ctx(&self, round: u32, kind: RoundKind) -> AggRoundCtx {
+        let revocable = self.threshold.is_some();
+        let shards = self.stream.shards.max(1);
+        let rollback = self.stream.rollback;
+        let asm = |tag: u64| match &self.pool {
+            Some(pool) => ChunkAssembler::pooled(
+                revocable,
+                shards,
+                rollback,
+                pool.client(),
+                ((round as u64) << 1) | tag,
+            ),
+            None => ChunkAssembler::inline(revocable, shards, rollback),
+        };
+        AggRoundCtx {
+            kind,
+            labels: Vec::new(),
+            relay_entries: None,
+            relay_ids: None,
+            group_flats: None,
+            relayed: false,
+            acts_exact: BTreeMap::new(),
+            acts_float: BTreeMap::new(),
+            grads_exact: BTreeMap::new(),
+            grads_float: BTreeMap::new(),
+            acts_asm: asm(0),
+            grads_asm: asm(1),
+            acts_done: false,
+            grads_done: false,
+            metered: (0, 0, 0),
+        }
+    }
+
+    /// Put a detached context back into the ring — unless the round's
+    /// obligations are all met, in which case it retires (dropping the
+    /// assemblers frees their worker-pool slots, and its metered bytes
+    /// leave the running totals). Contexts detach for processing and
+    /// return here, so retirement happens in completion order.
+    fn park(&mut self, round: u32, ctx: AggRoundCtx) {
+        if ctx.finished() {
+            let (m, a, s) = ctx.metered;
+            self.cur_mono -= m;
+            self.cur_asm -= a;
+            self.cur_spill -= s;
+        } else {
+            self.ctxs.insert(round, ctx);
+        }
+    }
+
+    /// Meter the bytes currently buffered across every live round's
+    /// fan-ins (the peak is the streaming pipeline's memory claim,
+    /// asserted in `tests/chunk_equivalence.rs`; with `W` rounds in
+    /// flight the chunked bound is O(W·d)). Only the touched, detached
+    /// context is recomputed — its delta updates the running totals, so
+    /// the per-chunk cost is O(1) regardless of the window width.
+    fn note_buffered(&mut self, ctx: &mut AggRoundCtx) {
+        let (mono, asm) = ctx.buffered();
+        let spill = ctx.acts_asm.spilled_bytes() + ctx.grads_asm.spilled_bytes();
+        let (pm, pa, ps) = ctx.metered;
+        ctx.metered = (mono, asm, spill);
+        self.cur_mono = self.cur_mono - pm + mono;
+        self.cur_asm = self.cur_asm - pa + asm;
+        self.cur_spill = self.cur_spill - ps + spill;
+        self.metrics.record_buffered(AGGREGATOR, self.cur_mono + self.cur_asm);
+        self.metrics.record_spilled(AGGREGATOR, self.cur_spill);
         // per-shard footprints are a pure function of the fixed shard
         // layouts, so re-meter them only when an assembler's resident
-        // state changed (a layout was fixed or consumed) — not on the
-        // per-chunk hot path
-        if asm_cur != self.last_asm_buffered {
-            self.last_asm_buffered = asm_cur;
-            let acts = self.acts_asm.shard_buffered_bytes();
-            let grads = self.grads_asm.shard_buffered_bytes();
-            for (k, (a, g)) in acts.iter().zip(&grads).enumerate() {
-                self.metrics.record_shard_buffered(AGGREGATOR, k, a + g);
+        // state changed (a layout was fixed or consumed) — an O(live
+        // rounds) walk kept off the per-chunk hot path
+        if self.cur_asm != self.last_asm_buffered {
+            self.last_asm_buffered = self.cur_asm;
+            let mut per_shard = vec![0u64; self.stream.shards.max(1)];
+            for c in self.ctxs.values().chain(std::iter::once(&*ctx)) {
+                let acts = c.acts_asm.shard_buffered_bytes();
+                let grads = c.grads_asm.shard_buffered_bytes();
+                for (k, (a, g)) in acts.iter().zip(&grads).enumerate() {
+                    per_shard[k] += a + g;
+                }
             }
+            for (k, b) in per_shard.iter().enumerate() {
+                self.metrics.record_shard_buffered(AGGREGATOR, k, *b);
+            }
+        }
+    }
+
+    /// Rebuild the running byte totals from scratch — a dropout purge
+    /// mutates every live context at once, so the per-context deltas
+    /// are re-established here (recovery path only, never per-chunk).
+    fn remeter_all(&mut self) {
+        self.cur_mono = 0;
+        self.cur_asm = 0;
+        self.cur_spill = 0;
+        for ctx in self.ctxs.values_mut() {
+            let (mono, asm) = ctx.buffered();
+            let spill = ctx.acts_asm.spilled_bytes() + ctx.grads_asm.spilled_bytes();
+            ctx.metered = (mono, asm, spill);
+            self.cur_mono += mono;
+            self.cur_asm += asm;
+            self.cur_spill += spill;
         }
     }
 
@@ -1294,56 +1635,62 @@ impl<'e> Aggregator<'e> {
             .collect()
     }
 
-    /// Relay the sealed batch (and, in training, each group's weights)
-    /// to every live passive party once the prerequisites arrived.
-    fn maybe_relay(&mut self, out: &mut Outbox) {
-        if self.relayed {
+    /// Relay one round's sealed batch (and, in training, each group's
+    /// weights) to every live passive party once the prerequisites
+    /// arrived.
+    fn maybe_relay(&mut self, round: u32, ctx: &mut AggRoundCtx, out: &mut Outbox) {
+        if ctx.relayed {
             return;
         }
-        let have_batch = self.relay_entries.is_some() || self.relay_ids.is_some();
-        let need_weights = self.kind == RoundKind::Train;
-        if !have_batch || (need_weights && self.group_flats.is_none()) {
+        let have_batch = ctx.relay_entries.is_some() || ctx.relay_ids.is_some();
+        let need_weights = ctx.kind == RoundKind::Train;
+        if !have_batch || (need_weights && ctx.group_flats.is_none()) {
             return;
         }
-        let round = self.round;
         for ci in 1..self.n_clients {
             if !self.live.contains(&(ci as u16)) {
                 continue;
             }
-            let relay = if let Some(e) = &self.relay_entries {
+            let relay = if let Some(e) = &ctx.relay_entries {
                 Msg::BatchRelay { round, entries: e.clone() }
             } else {
-                Msg::PlainBatchRelay { round, ids: self.relay_ids.clone().unwrap() }
+                Msg::PlainBatchRelay { round, ids: ctx.relay_ids.clone().unwrap() }
             };
             out.send(Addr::Client(ci), relay);
             if need_weights {
                 let g = self.groups[ci - 1];
-                let flat = self.group_flats.as_ref().unwrap()[g].clone();
+                let flat = ctx.group_flats.as_ref().unwrap()[g].clone();
                 out.send(Addr::Client(ci), Msg::GroupWeights { round, group: g as u8, flat });
             }
         }
-        self.relayed = true;
+        ctx.relayed = true;
     }
 
-    /// Once every live client's masked activation is in (and any
-    /// pending recovery finished): unmask by summation — adding the
-    /// recovered dropped-client masks so the survivors' danglers cancel
-    /// — then either run the global training step and broadcast ∂L/∂z,
-    /// or (testing) predict and reply to the active party.
-    fn maybe_sum_activations(&mut self, out: &mut Outbox) -> Result<()> {
+    /// Once every live client's masked activation for `round` is in
+    /// (and any pending recovery finished): unmask by summation —
+    /// adding the recovered dropped-client masks so the survivors'
+    /// danglers cancel — then either run the global training step and
+    /// broadcast ∂L/∂z, or (testing) predict and reply to the active
+    /// party. The context is detached from the ring.
+    fn maybe_sum_activations(
+        &mut self,
+        round: u32,
+        ctx: &mut AggRoundCtx,
+        out: &mut Outbox,
+    ) -> Result<()> {
         let contributed =
-            self.acts_exact.len() + self.acts_float.len() + self.acts_asm.complete_count();
+            ctx.acts_exact.len() + ctx.acts_float.len() + ctx.acts_asm.complete_count();
         if !self.unrecovered.is_empty() || contributed < self.live.len() {
             return Ok(());
         }
         let batch = self.cfg.batch_size;
-        self.acts_done = true;
+        ctx.acts_done = true;
         // BTreeMap order = client order: float addition order (and thus
         // every output bit) is the same on every transport. The chunked
         // sum is ℤ₂⁶⁴-only, where addition order is immaterial.
-        let exact: Vec<Vec<u64>> = std::mem::take(&mut self.acts_exact).into_values().collect();
-        let float: Vec<Vec<f32>> = std::mem::take(&mut self.acts_float).into_values().collect();
-        let chunked = self.acts_asm.take_sum()?;
+        let exact: Vec<Vec<u64>> = std::mem::take(&mut ctx.acts_exact).into_values().collect();
+        let float: Vec<Vec<f32>> = std::mem::take(&mut ctx.acts_float).into_values().collect();
+        let chunked = ctx.acts_asm.take_sum()?;
         let t0 = Instant::now();
         let z = if !exact.is_empty() || chunked.is_some() {
             let mut acc = match chunked {
@@ -1359,7 +1706,7 @@ impl<'e> Aggregator<'e> {
                 None => Self::wrap_sum(&exact),
             };
             if let Some(corr) =
-                self.dropped_mask_correction(self.round as u64, TAG_ACTIVATION, acc.len())
+                self.dropped_mask_correction(round as u64, TAG_ACTIVATION, acc.len())
             {
                 for (a, v) in acc.iter_mut().zip(&corr) {
                     *a = a.wrapping_add(*v);
@@ -1371,16 +1718,16 @@ impl<'e> Aggregator<'e> {
         };
         self.rec(t0, false);
         let (gw, gb) = (self.global_w.clone(), self.global_b);
-        match self.kind {
+        match ctx.kind {
             RoundKind::Train => {
-                let labels = std::mem::take(&mut self.labels);
+                let labels = std::mem::take(&mut ctx.labels);
                 let t0 = Instant::now();
                 let step = self.backend.global_step(&z, &gw, gb, &labels);
                 self.rec(t0, false);
                 let step = step?;
                 self.update_global(&step.d_global_w, step.d_global_b, self.cfg.lr);
-                out.note(Note::Loss { round: self.round, loss: step.loss });
-                let dz = Msg::DzBroadcast { round: self.round, dz: step.dz.data };
+                out.note(Note::Loss { round, loss: step.loss });
+                let dz = Msg::DzBroadcast { round, dz: step.dz.data };
                 for i in 0..self.n_clients {
                     if self.live.contains(&(i as u16)) {
                         out.send(Addr::Client(i), dz.clone());
@@ -1391,29 +1738,34 @@ impl<'e> Aggregator<'e> {
                 let t0 = Instant::now();
                 let probs = self.backend.predict(&z, &gw, gb);
                 self.rec(t0, false);
-                out.send(Addr::Client(0), Msg::Predictions { round: self.round, probs: probs? });
+                out.send(Addr::Client(0), Msg::Predictions { round, probs: probs? });
             }
             RoundKind::Setup => bail!("activation received during a setup round"),
         }
         Ok(())
     }
 
-    /// Once every live passive's masked gradient is in: sum (still
-    /// masked by the active party's total mask — §4.0.2's privacy
-    /// argument), add the recovered dropped-client gradient masks, and
-    /// forward to the active party.
-    fn maybe_sum_gradients(&mut self, out: &mut Outbox) -> Result<()> {
+    /// Once every live passive's masked gradient for `round` is in:
+    /// sum (still masked by the active party's total mask — §4.0.2's
+    /// privacy argument), add the recovered dropped-client gradient
+    /// masks, and forward to the active party. The context is detached
+    /// from the ring.
+    fn maybe_sum_gradients(
+        &mut self,
+        round: u32,
+        ctx: &mut AggRoundCtx,
+        out: &mut Outbox,
+    ) -> Result<()> {
         let n_passive = self.live_passives();
         let contributed =
-            self.grads_exact.len() + self.grads_float.len() + self.grads_asm.complete_count();
+            ctx.grads_exact.len() + ctx.grads_float.len() + ctx.grads_asm.complete_count();
         if n_passive == 0 || !self.unrecovered.is_empty() || contributed < n_passive {
             return Ok(());
         }
-        self.grads_done = true;
-        let exact: Vec<Vec<u64>> = std::mem::take(&mut self.grads_exact).into_values().collect();
-        let float: Vec<Vec<f32>> = std::mem::take(&mut self.grads_float).into_values().collect();
-        let chunked = self.grads_asm.take_sum()?;
-        let round = self.round;
+        ctx.grads_done = true;
+        let exact: Vec<Vec<u64>> = std::mem::take(&mut ctx.grads_exact).into_values().collect();
+        let float: Vec<Vec<f32>> = std::mem::take(&mut ctx.grads_float).into_values().collect();
+        let chunked = ctx.grads_asm.take_sum()?;
         let t0 = Instant::now();
         if !exact.is_empty() || chunked.is_some() {
             let mut acc = match chunked {
@@ -1487,16 +1839,23 @@ impl<'e> Aggregator<'e> {
         let t = self.threshold.expect("dropout tolerance enabled");
         for g in gone {
             self.live.remove(g);
-            self.acts_exact.remove(g);
-            self.acts_float.remove(g);
-            self.grads_exact.remove(g);
-            self.grads_float.remove(g);
-            // chunked contributions are revocable in tolerant runs:
-            // the rollback log replays the sender's committed chunks
-            // back out of the shard accumulators
-            self.acts_asm.purge(*g)?;
-            self.grads_asm.purge(*g)?;
+            // a dropped client may have contributed to several rounds
+            // in flight: purge it from every live context. Chunked
+            // contributions are revocable in tolerant runs — the
+            // rollback log replays the sender's committed chunks back
+            // out of the shard accumulators.
+            for ctx in self.ctxs.values_mut() {
+                ctx.acts_exact.remove(g);
+                ctx.acts_float.remove(g);
+                ctx.grads_exact.remove(g);
+                ctx.grads_float.remove(g);
+                ctx.acts_asm.purge(*g)?;
+                ctx.grads_asm.purge(*g)?;
+            }
         }
+        // the purge mutated every live context's buffers at once:
+        // rebuild the delta-metered running totals
+        self.remeter_all();
         if !self.live.contains(&0) {
             bail!(DropoutError::ActivePartyDropped);
         }
@@ -1506,19 +1865,28 @@ impl<'e> Aggregator<'e> {
         Ok(())
     }
 
+    /// The round a dropout declaration is diagnosed against: the
+    /// oldest round in flight (its prerequisites are all delivered),
+    /// falling back to the latest announced round during setup legs.
+    fn diagnosis_round(&self) -> u32 {
+        self.ctxs.keys().next().copied().unwrap_or(self.round)
+    }
+
     /// Declare mid-round dropouts: these clients exchanged keys this
     /// epoch (their pairwise masks dangle in every fan-in), so the
     /// survivors must surrender shares of their seeds before any sum
-    /// can be unmasked.
+    /// can be unmasked. Also tells the scheduler to drain the round
+    /// window to 1 so recovery composes with pipelining.
     fn declare_dropped(&mut self, gone: BTreeSet<u16>, out: &mut Outbox) -> Result<()> {
+        let round = self.diagnosis_round();
         self.remove_from_live(&gone)?;
         self.unrecovered.extend(gone.iter().copied());
-        let msg =
-            Msg::DropoutNotice { round: self.round, dropped: gone.iter().copied().collect() };
+        let msg = Msg::DropoutNotice { round, dropped: gone.iter().copied().collect() };
         self.awaiting_surrender = self.live.clone();
         for &c in &self.live {
             out.send(Addr::Client(c as usize), msg.clone());
         }
+        out.note(Note::WindowDrain { round });
         Ok(())
     }
 
@@ -1555,8 +1923,15 @@ impl<'e> Aggregator<'e> {
             self.recovered.insert(d, session);
         }
         self.rec(t0, true);
-        self.maybe_sum_activations(out)?;
-        self.maybe_sum_gradients(out)?;
+        // the live set shrank and the recovery corrections exist:
+        // every round in flight may now be summable, oldest first
+        let rounds: Vec<u32> = self.ctxs.keys().copied().collect();
+        for round in rounds {
+            let Some(mut ctx) = self.ctxs.remove(&round) else { continue };
+            self.maybe_sum_activations(round, &mut ctx, out)?;
+            self.maybe_sum_gradients(round, &mut ctx, out)?;
+            self.park(round, ctx);
+        }
         Ok(())
     }
 
@@ -1575,6 +1950,7 @@ impl<'e> Aggregator<'e> {
                 return Ok(());
             }
             self.remove_from_live(&gone)?;
+            out.note(Note::WindowDrain { round: self.round });
             self.maybe_broadcast_directory(out);
         } else {
             let gone: BTreeSet<u16> = self
@@ -1587,14 +1963,21 @@ impl<'e> Aggregator<'e> {
                 return Ok(());
             }
             self.remove_from_live(&gone)?;
+            out.note(Note::WindowDrain { round: self.round });
             self.begin_key_exchange(out);
         }
         Ok(())
     }
 
     /// Quiescence mid-round: whoever owes the stalled fan-in its next
-    /// contribution has dropped. The active party owning the round is
-    /// unrecoverable; passive laggards are declared and recovered.
+    /// contribution has dropped. The diagnosis targets the **oldest**
+    /// round in flight — its prerequisites are fully delivered, so a
+    /// quiescent transport means its missing senders are dead; younger
+    /// in-flight rounds may be legitimately waiting on this one (e.g.
+    /// a passive cannot forward round r+1 before its relay, which the
+    /// active party only sends after finishing round r). The active
+    /// party owning the round is unrecoverable; passive laggards are
+    /// declared and recovered.
     fn stall_round(&mut self, out: &mut Outbox) -> Result<()> {
         if self.in_setup {
             return self.stall_setup(out);
@@ -1606,53 +1989,84 @@ impl<'e> Aggregator<'e> {
             let gone = std::mem::take(&mut self.awaiting_surrender);
             return self.declare_dropped(gone, out);
         }
-        if self.kind == RoundKind::Train && !self.relayed {
-            // batch/weights never arrived: only the active party sends
-            // those, and without it the round has no owner
-            bail!(DropoutError::ActivePartyDropped);
+        // diagnose the oldest live context; decide first, then act, so
+        // the ctx borrow ends before recovery mutates the ring
+        enum Diag {
+            Nothing,
+            ActiveGone,
+            Declare(BTreeSet<u16>),
         }
-        if !self.acts_done {
-            // chunk senders count only once complete: a half-streamed
-            // tensor is a stalled sender, exactly like a missing one
-            let acts: BTreeSet<u16> = self
-                .acts_exact
-                .keys()
-                .chain(self.acts_float.keys())
-                .copied()
-                .chain(self.acts_asm.complete_senders())
-                .collect();
-            if acts.len() < self.live.len() {
-                let gone: BTreeSet<u16> =
-                    self.live.iter().copied().filter(|c| !acts.contains(c)).collect();
-                if gone.contains(&0) {
-                    bail!(DropoutError::ActivePartyDropped);
+        let diag = {
+            let Some((&round, ctx)) = self.ctxs.iter().next() else {
+                // every fan-in retired: nothing we can recover (e.g.
+                // the active party died after the gradient sum) —
+                // leave the outbox empty and let the transport abort
+                return Ok(());
+            };
+            if ctx.kind == RoundKind::Train && !ctx.relayed {
+                // batch/weights never arrived: only the active party
+                // sends those. If every earlier round has completed at
+                // the driver and the active still never opened this
+                // one, it is dead — the round has no owner. If an
+                // earlier round is still pending, the active may
+                // simply be finishing it (the window announces rounds
+                // ahead): leave the outbox empty and let the
+                // transport's idle-probe escalation decide.
+                if self.pending_done.range(..round).next().is_none() {
+                    Diag::ActiveGone
+                } else {
+                    Diag::Nothing
                 }
-                return self.declare_dropped(gone, out);
-            }
-            return Ok(());
-        }
-        if self.kind == RoundKind::Train && !self.grads_done {
-            let grads: BTreeSet<u16> = self
-                .grads_exact
-                .keys()
-                .chain(self.grads_float.keys())
-                .copied()
-                .chain(self.grads_asm.complete_senders())
-                .collect();
-            if grads.len() < self.live_passives() {
-                let gone: BTreeSet<u16> = self
-                    .live
-                    .iter()
+            } else if !ctx.acts_done {
+                // chunk senders count only once complete: a
+                // half-streamed tensor is a stalled sender, exactly
+                // like a missing one
+                let acts: BTreeSet<u16> = ctx
+                    .acts_exact
+                    .keys()
+                    .chain(ctx.acts_float.keys())
                     .copied()
-                    .filter(|&c| c != 0 && !grads.contains(&c))
+                    .chain(ctx.acts_asm.complete_senders())
                     .collect();
-                return self.declare_dropped(gone, out);
+                if acts.len() < self.live.len() {
+                    let gone: BTreeSet<u16> =
+                        self.live.iter().copied().filter(|c| !acts.contains(c)).collect();
+                    if gone.contains(&0) {
+                        Diag::ActiveGone
+                    } else {
+                        Diag::Declare(gone)
+                    }
+                } else {
+                    Diag::Nothing
+                }
+            } else if ctx.kind == RoundKind::Train && !ctx.grads_done {
+                let grads: BTreeSet<u16> = ctx
+                    .grads_exact
+                    .keys()
+                    .chain(ctx.grads_float.keys())
+                    .copied()
+                    .chain(ctx.grads_asm.complete_senders())
+                    .collect();
+                if grads.len() < self.live_passives() {
+                    let gone: BTreeSet<u16> = self
+                        .live
+                        .iter()
+                        .copied()
+                        .filter(|&c| c != 0 && !grads.contains(&c))
+                        .collect();
+                    Diag::Declare(gone)
+                } else {
+                    Diag::Nothing
+                }
+            } else {
+                Diag::Nothing
             }
+        };
+        match diag {
+            Diag::Nothing => Ok(()),
+            Diag::ActiveGone => bail!(DropoutError::ActivePartyDropped),
+            Diag::Declare(gone) => self.declare_dropped(gone, out),
         }
-        // everything we fan in is complete: nothing we can recover
-        // (e.g. the active party died after the gradient sum) — leave
-        // the outbox empty and let the transport abort
-        Ok(())
     }
 
     /// Open a key-exchange leg: request fresh keys from every live
@@ -1726,21 +2140,18 @@ impl<'e> Party for Aggregator<'e> {
 
     fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()> {
         self.round = spec.round;
-        self.kind = spec.kind;
         self.phase = spec.phase;
-        self.labels.clear();
-        self.relay_entries = None;
-        self.relay_ids = None;
-        self.group_flats = None;
-        self.relayed = false;
-        self.acts_exact.clear();
-        self.acts_float.clear();
-        self.grads_exact.clear();
-        self.grads_float.clear();
-        self.acts_asm.reset()?;
-        self.grads_asm.reset()?;
-        self.acts_done = false;
-        self.grads_done = false;
+        self.pending_done.insert(spec.round);
+        if spec.kind != RoundKind::Setup {
+            if self.ctxs.len() >= MAX_ROUNDS_IN_FLIGHT {
+                bail!(
+                    "aggregator: round-context ring overflow ({} live rounds)",
+                    self.ctxs.len()
+                );
+            }
+            let ctx = self.new_ctx(spec.round, spec.kind);
+            self.ctxs.insert(spec.round, ctx);
+        }
         if spec.kind == RoundKind::Setup || spec.rotate {
             self.begin_key_exchange(out);
         }
@@ -1756,6 +2167,13 @@ impl<'e> Party for Aggregator<'e> {
                 return Ok(());
             }
         }
+        // per-round fan-in traffic detaches its context from the ring,
+        // operates with full access to the recovery state, and parks it
+        // back (or retires it when the round's obligations are met)
+        let ctx_of = |ctxs: &mut BTreeMap<u32, AggRoundCtx>, round: u32| -> Result<AggRoundCtx> {
+            ctxs.remove(&round)
+                .with_context(|| format!("fan-in traffic for unknown round {round}"))
+        };
         match msg {
             Msg::PublishKeys(k) => {
                 self.keys.push(k);
@@ -1789,57 +2207,73 @@ impl<'e> Party for Aggregator<'e> {
                     self.finish_recovery(out)?;
                 }
             }
-            Msg::BatchSelect { labels, entries, .. } => {
-                self.labels = labels;
-                self.relay_entries = Some(entries);
-                self.maybe_relay(out);
+            Msg::BatchSelect { round, labels, entries } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
+                ctx.labels = labels;
+                ctx.relay_entries = Some(entries);
+                self.maybe_relay(round, &mut ctx, out);
+                self.park(round, ctx);
             }
-            Msg::PlainBatch { labels, ids, .. } => {
-                self.labels = labels;
-                self.relay_ids = Some(ids);
-                self.maybe_relay(out);
+            Msg::PlainBatch { round, labels, ids } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
+                ctx.labels = labels;
+                ctx.relay_ids = Some(ids);
+                self.maybe_relay(round, &mut ctx, out);
+                self.park(round, ctx);
             }
-            Msg::WeightsUpdate { flat, .. } => {
-                self.group_flats = Some(self.split_group_weights(&flat));
-                self.maybe_relay(out);
+            Msg::WeightsUpdate { round, flat } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
+                ctx.group_flats = Some(self.split_group_weights(&flat));
+                self.maybe_relay(round, &mut ctx, out);
+                self.park(round, ctx);
             }
-            Msg::MaskedActivation { from, words, .. } => {
-                self.acts_exact.insert(from, words);
-                self.note_buffered();
-                self.maybe_sum_activations(out)?;
+            Msg::MaskedActivation { round, from, words } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
+                ctx.acts_exact.insert(from, words);
+                self.note_buffered(&mut ctx);
+                self.maybe_sum_activations(round, &mut ctx, out)?;
+                self.park(round, ctx);
             }
-            Msg::FloatActivation { from, vals, .. } => {
-                self.acts_float.insert(from, vals);
-                self.note_buffered();
-                self.maybe_sum_activations(out)?;
+            Msg::FloatActivation { round, from, vals } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
+                ctx.acts_float.insert(from, vals);
+                self.note_buffered(&mut ctx);
+                self.maybe_sum_activations(round, &mut ctx, out)?;
+                self.park(round, ctx);
             }
-            Msg::MaskedGradient { from, words, .. } => {
-                self.grads_exact.insert(from, words);
-                self.note_buffered();
-                self.maybe_sum_gradients(out)?;
+            Msg::MaskedGradient { round, from, words } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
+                ctx.grads_exact.insert(from, words);
+                self.note_buffered(&mut ctx);
+                self.maybe_sum_gradients(round, &mut ctx, out)?;
+                self.park(round, ctx);
             }
-            Msg::FloatGradient { from, vals, .. } => {
-                self.grads_float.insert(from, vals);
-                self.note_buffered();
-                self.maybe_sum_gradients(out)?;
+            Msg::FloatGradient { round, from, vals } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
+                ctx.grads_float.insert(from, vals);
+                self.note_buffered(&mut ctx);
+                self.maybe_sum_gradients(round, &mut ctx, out)?;
+                self.park(round, ctx);
             }
-            Msg::MaskedChunk { from, tag, shard, offset, total, words, .. } => {
+            Msg::MaskedChunk { round, from, tag, shard, offset, total, words } => {
+                let mut ctx = ctx_of(&mut self.ctxs, round)?;
                 let t0 = Instant::now();
                 match tag as u32 {
                     TAG_ACTIVATION => {
-                        self.acts_asm.add_chunk(from, shard, offset, total, &words)?;
+                        ctx.acts_asm.add_chunk(from, shard, offset, total, &words)?;
                         self.rec(t0, false);
-                        self.note_buffered();
-                        self.maybe_sum_activations(out)?;
+                        self.note_buffered(&mut ctx);
+                        self.maybe_sum_activations(round, &mut ctx, out)?;
                     }
                     TAG_GRADIENT => {
-                        self.grads_asm.add_chunk(from, shard, offset, total, &words)?;
+                        ctx.grads_asm.add_chunk(from, shard, offset, total, &words)?;
                         self.rec(t0, false);
-                        self.note_buffered();
-                        self.maybe_sum_gradients(out)?;
+                        self.note_buffered(&mut ctx);
+                        self.maybe_sum_gradients(round, &mut ctx, out)?;
                     }
                     t => bail!("masked chunk with unknown tensor tag {t}"),
                 }
+                self.park(round, ctx);
             }
             m => bail!("aggregator: unexpected message {m:?}"),
         }
@@ -1851,11 +2285,15 @@ impl<'e> Party for Aggregator<'e> {
             // base protocol: a silent peer is a stall, not a dropout
             return Ok(());
         }
-        if self.in_setup || self.kind == RoundKind::Setup {
+        if self.in_setup {
             self.stall_setup(out)
         } else {
             self.stall_round(out)
         }
+    }
+
+    fn on_round_complete(&mut self, round: u32) {
+        self.pending_done.remove(&round);
     }
 
     fn concurrent_safe(&self) -> bool {

@@ -78,6 +78,12 @@ pub enum Note {
     /// pushed recovery traffic, `processed` how many events it handled
     /// since the previous probe. Never part of a run's result notes.
     Stall { acted: bool, processed: u64 },
+    /// Transport bookkeeping: the aggregator declared a dropout while
+    /// diagnosing `round` — the windowed scheduler must drain to one
+    /// round in flight ([`RoundWindow::drain`](super::window::RoundWindow))
+    /// so recovery composes with pipelining. Consumed by the driver
+    /// loop, never part of a run's result notes.
+    WindowDrain { round: u32 },
 }
 
 /// Messages and notes a party produced while handling one event.
@@ -126,6 +132,16 @@ pub trait Party: Send {
     fn on_stall(&mut self, _out: &mut Outbox) -> Result<()> {
         Ok(())
     }
+
+    /// Driver bookkeeping: the scheduler observed `round`'s `RoundDone`
+    /// note. Under the pipelined window a round's *announcement* no
+    /// longer implies its predecessor finished (rounds are announced
+    /// ahead), so the aggregator needs this signal to tell "the active
+    /// party is still finishing an earlier round" apart from "the
+    /// active party died without opening the round" during stall
+    /// diagnosis. Transports deliver it to the aggregator only; it is
+    /// not protocol traffic and is never metered.
+    fn on_round_complete(&mut self, _round: u32) {}
 
     /// Whether this party may run concurrently with its peers. False
     /// when it holds a shared engine handle that is not audited for
@@ -209,6 +225,7 @@ const N_PREDICTIONS: u8 = 2;
 const N_ROUND_DONE: u8 = 3;
 const N_FAILED: u8 = 4;
 const N_STALL: u8 = 5;
+const N_WINDOW_DRAIN: u8 = 6;
 
 impl Note {
     pub fn encode_into(&self, w: &mut Writer) {
@@ -237,6 +254,10 @@ impl Note {
                 w.u8(*acted as u8);
                 w.u64(*processed);
             }
+            Note::WindowDrain { round } => {
+                w.u8(N_WINDOW_DRAIN);
+                w.u32(*round);
+            }
         }
     }
 
@@ -250,6 +271,7 @@ impl Note {
                 error: String::from_utf8_lossy(&r.bytes()?).into_owned(),
             },
             N_STALL => Note::Stall { acted: r.u8()? != 0, processed: r.u64()? },
+            N_WINDOW_DRAIN => Note::WindowDrain { round: r.u32()? },
             t => anyhow::bail!("bad note tag {t}"),
         })
     }
@@ -284,6 +306,7 @@ mod tests {
             Note::RoundDone { round: SETUP_ROUND },
             Note::Failed { who: 2, error: "boom".into() },
             Note::Stall { acted: true, processed: 42 },
+            Note::WindowDrain { round: 3 },
         ] {
             let mut w = Writer::new();
             n.encode_into(&mut w);

@@ -37,26 +37,43 @@
 //!   monolithic baseline for the first time. The log is truncated at
 //!   every round reset and deleted when the assembler drops.
 //!
-//! ## Shard-parallel workers (`--agg-workers`)
+//! ## Shard-parallel workers (`--agg-workers`) and the shared pool
 //!
-//! With `agg_workers > 1` the assembler spawns that many accumulator
-//! workers (capped at the shard count), each *owning* the accumulators
-//! of the shards `k` with `k % workers == w`. The routing layer — the
-//! per-sender stream validation below — stays single-threaded in the
-//! aggregator's event loop; validated chunk payloads are handed to the
-//! owning worker over a bounded channel (backpressure keeps in-flight
-//! chunks small), and rollback replays route wrap-subtractions the same
-//! way. [`ChunkAssembler::take_sum`] is the deterministic merge: it
-//! drains every worker's accumulators and stitches them into the one
-//! global vector at their fixed shard offsets. Workers perform nothing
-//! but ℤ₂⁶⁴ wrap-arithmetic on disjoint ranges, so any worker count —
-//! including 1, the inline default that spawns no threads — produces
-//! bit-identical sums on every transport (`tests/chunk_equivalence.rs`
-//! sweeps worker counts across sim, threaded, and TCP). One metering
-//! caveat: with workers > 1 the aggregator's Table-1 CPU meters time
-//! only the routing layer — the folding runs off-thread. The paper's
-//! measurement configuration is the default inline path (workers = 1),
-//! where attribution stays exact.
+//! With `agg_workers > 1` the aggregator spawns **one** [`WorkerPool`]
+//! of that many accumulator workers (capped at the shard count) and
+//! every assembler — acts and grads, across every live round context —
+//! shares it. Jobs are addressed by a *slot*: a small id unique to one
+//! (round, fan-in) pair, so worker `w` holds, per slot, the
+//! accumulators of the shards `k` with `k % workers == w`, and two
+//! rounds' chunks fold concurrently without cross-talk. The routing
+//! layer — the per-sender stream validation below — stays
+//! single-threaded in the aggregator's event loop; validated chunk
+//! payloads are handed to the owning worker over a bounded channel
+//! (backpressure keeps in-flight chunks small), and rollback replays
+//! route wrap-subtractions the same way. [`ChunkAssembler::take_sum`]
+//! is the deterministic merge: it drains the slot from every worker
+//! and stitches the accumulators into the one global vector at their
+//! fixed shard offsets, retiring the slot worker-side. Workers perform
+//! nothing but ℤ₂⁶⁴ wrap-arithmetic on disjoint ranges, so any worker
+//! count — including 1, the inline default that spawns no threads —
+//! produces bit-identical sums on every transport
+//! (`tests/chunk_equivalence.rs` sweeps worker counts across sim,
+//! threaded, and TCP). One metering caveat: with workers > 1 the
+//! aggregator's Table-1 CPU meters time only the routing layer — the
+//! folding runs off-thread. The paper's measurement configuration is
+//! the default inline path (workers = 1), where attribution stays
+//! exact.
+//!
+//! ## Rollback-log durability (`--rollback-fsync`, `--rollback-max-bytes`)
+//!
+//! The rollback log is a local temp spill file. Two production knobs
+//! bound it: `--rollback-fsync` fsyncs every appended record (so a
+//! crash-restarted aggregator could replay a consistent log — at the
+//! cost of one `fdatasync` per committed chunk), and
+//! `--rollback-max-bytes` caps the file size, failing the run with the
+//! typed [`StreamError::RollbackLogFull`] instead of growing a temp
+//! file without bound. The default cap is
+//! [`DEFAULT_ROLLBACK_MAX_BYTES`] (1 GiB).
 //!
 //! A sender whose chunk stream has a gap (a lost chunk under fault
 //! injection) is marked bad, its committed words rolled back (tolerant
@@ -70,9 +87,53 @@ use std::io::{BufReader, Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
+
+/// Default cap on one rollback log's size: far above anything a
+/// tolerant round spills in practice, low enough to fail loudly before
+/// a runaway stream fills the temp filesystem.
+pub const DEFAULT_ROLLBACK_MAX_BYTES: u64 = 1 << 30;
+
+/// Typed streaming-pipeline errors (`anyhow` carries them; callers
+/// downcast to react to a specific failure).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamError {
+    /// Appending a committed chunk would push the rollback log past its
+    /// configured bound (`--rollback-max-bytes`).
+    RollbackLogFull { limit: u64, needed: u64 },
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::RollbackLogFull { limit, needed } => write!(
+                f,
+                "rollback log full: appending would need {needed} bytes, \
+                 --rollback-max-bytes caps it at {limit}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// Rollback-log durability policy (`--rollback-fsync`,
+/// `--rollback-max-bytes`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RollbackCfg {
+    /// fsync every appended record.
+    pub fsync: bool,
+    /// Hard cap on the log size; exceeding it is the typed
+    /// [`StreamError::RollbackLogFull`].
+    pub max_bytes: u64,
+}
+
+impl Default for RollbackCfg {
+    fn default() -> Self {
+        RollbackCfg { fsync: false, max_bytes: DEFAULT_ROLLBACK_MAX_BYTES }
+    }
+}
 
 /// Chunking parameters, carried from [`RunConfig`](super::RunConfig)
 /// into every party. `chunk_words: None` = the monolithic path.
@@ -84,9 +145,13 @@ pub struct StreamCfg {
     /// Shards per tensor (≥ 1). Only meaningful with `chunk_words`.
     pub shards: usize,
     /// Aggregator-side shard workers (`--agg-workers`, ≥ 1). 1 = the
-    /// inline sequential path (no threads); > 1 spawns that many
-    /// accumulator workers per fan-in, capped at the shard count.
+    /// inline sequential path (no threads); > 1 makes the aggregator
+    /// spawn one shared [`WorkerPool`] of that many accumulator
+    /// workers (capped at the shard count) that every fan-in
+    /// assembler, across all live rounds, folds through.
     pub agg_workers: usize,
+    /// Rollback-log durability policy (revocable assemblers only).
+    pub rollback: RollbackCfg,
 }
 
 impl Default for StreamCfg {
@@ -97,16 +162,27 @@ impl Default for StreamCfg {
 
 impl StreamCfg {
     pub fn monolithic() -> Self {
-        StreamCfg { chunk_words: None, shards: 1, agg_workers: 1 }
+        StreamCfg {
+            chunk_words: None,
+            shards: 1,
+            agg_workers: 1,
+            rollback: RollbackCfg::default(),
+        }
     }
 
     pub fn chunked(chunk_words: usize, shards: usize) -> Self {
-        StreamCfg { chunk_words: Some(chunk_words), shards, agg_workers: 1 }
+        StreamCfg { chunk_words: Some(chunk_words), shards, ..Self::monolithic() }
     }
 
     /// Set the aggregator-side worker count.
     pub fn with_workers(mut self, agg_workers: usize) -> Self {
         self.agg_workers = agg_workers;
+        self
+    }
+
+    /// Set the rollback-log durability policy.
+    pub fn with_rollback(mut self, rollback: RollbackCfg) -> Self {
+        self.rollback = rollback;
         self
     }
 }
@@ -279,106 +355,161 @@ impl ShardBank {
     }
 }
 
-/// One unit of work for a shard worker. Workers do nothing but
-/// ℤ₂⁶⁴ wrap-arithmetic on the shard accumulators they own — all
-/// stream validation happens in the routing layer before dispatch.
+/// One unit of work for a shard worker, addressed by *slot* — the id
+/// of the (round, fan-in) assembler it belongs to, so one shared pool
+/// serves every live round context without cross-talk. Workers do
+/// nothing but ℤ₂⁶⁴ wrap-arithmetic on the shard accumulators they
+/// own — all stream validation happens in the routing layer before
+/// dispatch.
 enum Job {
-    Init { layout: ShardLayout },
-    Add { shard: usize, at: usize, words: Vec<u64> },
-    Sub { shard: usize, at: usize, words: Vec<u64> },
-    Drain { reply: Sender<Vec<(usize, Vec<u64>)>> },
-    Reset,
+    Init { slot: u64, layout: ShardLayout },
+    Add { slot: u64, shard: usize, at: usize, words: Vec<u64> },
+    Sub { slot: u64, shard: usize, at: usize, words: Vec<u64> },
+    Drain { slot: u64, reply: Sender<Vec<(usize, Vec<u64>)>> },
+    /// Free a slot's accumulators without draining them (assembler
+    /// reset or drop).
+    Retire { slot: u64 },
 }
 
 /// Bounded job-queue depth per worker: backpressure keeps the RAM held
 /// by in-flight chunk payloads at ≤ `workers · JOB_QUEUE_DEPTH` chunks.
 const JOB_QUEUE_DEPTH: usize = 64;
 
-fn worker_loop(rx: Receiver<Job>, owned: Vec<usize>) {
-    let mut bank = ShardBank::default();
+fn worker_loop(rx: Receiver<Job>, w: usize, workers: usize) {
+    // slot → the shard accumulators this worker owns for that slot
+    // (shards k with k % workers == w of the slot's layout)
+    let mut banks: BTreeMap<u64, ShardBank> = BTreeMap::new();
     while let Ok(job) = rx.recv() {
         match job {
-            Job::Init { layout } => bank.init(layout, owned.iter().copied()),
-            Job::Add { shard, at, words } => bank.add(shard, at, &words),
-            Job::Sub { shard, at, words } => bank.sub(shard, at, &words),
-            Job::Drain { reply } => {
-                let _ = reply.send(bank.drain());
+            Job::Init { slot, layout } => {
+                banks.entry(slot).or_default().init(layout, (w..layout.shards).step_by(workers));
             }
-            Job::Reset => bank.reset(),
+            Job::Add { slot, shard, at, words } => {
+                banks.get_mut(&slot).expect("slot initialized").add(shard, at, &words);
+            }
+            Job::Sub { slot, shard, at, words } => {
+                banks.get_mut(&slot).expect("slot initialized").sub(shard, at, &words);
+            }
+            Job::Drain { slot, reply } => {
+                let part = banks.remove(&slot).map(|mut b| b.drain()).unwrap_or_default();
+                let _ = reply.send(part);
+            }
+            Job::Retire { slot } => {
+                banks.remove(&slot);
+            }
         }
     }
 }
 
-/// How the shard accumulators execute: inline in the aggregator's
-/// event loop (`agg_workers = 1`, no threads), or across a pool of
-/// worker threads each owning the shards `k % workers == w`.
+/// One shared pool of accumulator worker threads (`--agg-workers`),
+/// created once by the aggregator and folded through by *every*
+/// chunked fan-in assembler — acts and grads, across every live round
+/// context — instead of the pre-refactor one-pool-per-fan-in shape
+/// that doubled the thread count. Slots keep the assemblers' state
+/// disjoint worker-side.
+pub struct WorkerPool {
+    txs: Vec<SyncSender<Job>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` accumulator workers (≥ 1; callers cap at the
+    /// shard count — a worker that owns no shard of a slot's layout
+    /// simply replies with an empty drain).
+    ///
+    /// The threads are detached on purpose: each worker's loop ends
+    /// when every sender to its job channel is gone, i.e. when the
+    /// pool *and* every [`PoolClient`]-holding assembler have dropped —
+    /// joining from the pool's `Drop` would deadlock whenever an
+    /// assembler legitimately outlives it. Workers hold nothing but
+    /// memory, so exit-by-channel-closure is a clean shutdown.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let mut txs = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = sync_channel::<Job>(JOB_QUEUE_DEPTH);
+            std::thread::Builder::new()
+                .name(format!("agg-shard-worker-{w}"))
+                .spawn(move || worker_loop(rx, w, workers))
+                .expect("spawn shard worker");
+            txs.push(tx);
+        }
+        WorkerPool { txs }
+    }
+
+    /// A cheap handle assemblers route jobs through.
+    pub fn client(&self) -> PoolClient {
+        PoolClient { txs: self.txs.clone() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+/// An assembler's route into the shared [`WorkerPool`].
+#[derive(Clone)]
+pub struct PoolClient {
+    txs: Vec<SyncSender<Job>>,
+}
+
+impl PoolClient {
+    fn to_owner(&self, shard: usize, job: Job) {
+        self.txs[shard % self.txs.len()].send(job).expect("shard worker alive");
+    }
+
+    fn to_all(&self, mut make: impl FnMut() -> Job) {
+        for tx in &self.txs {
+            tx.send(make()).expect("shard worker alive");
+        }
+    }
+}
+
+/// How one assembler's shard accumulators execute: inline in the
+/// aggregator's event loop (`agg_workers = 1`, no threads), or as a
+/// slot of the shared [`WorkerPool`].
 enum Exec {
     Inline(ShardBank),
-    Pool { txs: Vec<SyncSender<Job>>, handles: Vec<JoinHandle<()>> },
+    Pool { client: PoolClient, slot: u64 },
 }
 
 impl Exec {
-    fn new(workers: usize, shards: usize) -> Exec {
-        let workers = workers.clamp(1, shards);
-        if workers == 1 {
-            return Exec::Inline(ShardBank::default());
-        }
-        let mut txs = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let (tx, rx) = sync_channel::<Job>(JOB_QUEUE_DEPTH);
-            let owned: Vec<usize> = (w..shards).step_by(workers).collect();
-            let handle = std::thread::Builder::new()
-                .name(format!("agg-shard-worker-{w}"))
-                .spawn(move || worker_loop(rx, owned))
-                .expect("spawn shard worker");
-            txs.push(tx);
-            handles.push(handle);
-        }
-        Exec::Pool { txs, handles }
-    }
-
-    fn send(txs: &[SyncSender<Job>], shard: usize, job: Job) {
-        txs[shard % txs.len()].send(job).expect("shard worker alive");
-    }
-
     fn init(&mut self, layout: ShardLayout) {
         match self {
             Exec::Inline(bank) => bank.init(layout, 0..layout.shards),
-            Exec::Pool { txs, .. } => {
-                for tx in txs.iter() {
-                    tx.send(Job::Init { layout }).expect("shard worker alive");
-                }
-            }
+            Exec::Pool { client, slot } => client.to_all(|| Job::Init { slot: *slot, layout }),
         }
     }
 
     fn add(&mut self, shard: usize, at: usize, words: Vec<u64>) {
         match self {
             Exec::Inline(bank) => bank.add(shard, at, &words),
-            Exec::Pool { txs, .. } => Self::send(txs, shard, Job::Add { shard, at, words }),
+            Exec::Pool { client, slot } => {
+                client.to_owner(shard, Job::Add { slot: *slot, shard, at, words })
+            }
         }
     }
 
     fn sub(&mut self, shard: usize, at: usize, words: Vec<u64>) {
         match self {
             Exec::Inline(bank) => bank.sub(shard, at, &words),
-            Exec::Pool { txs, .. } => Self::send(txs, shard, Job::Sub { shard, at, words }),
+            Exec::Pool { client, slot } => {
+                client.to_owner(shard, Job::Sub { slot: *slot, shard, at, words })
+            }
         }
     }
 
     /// The deterministic merge barrier: every executor hands back its
-    /// (start, accumulator) pairs. Shard ranges are disjoint, so the
-    /// caller's stitch order is immaterial — any worker count yields a
-    /// bit-identical global vector.
+    /// (start, accumulator) pairs for this slot (retiring the slot
+    /// worker-side). Shard ranges are disjoint, so the caller's stitch
+    /// order is immaterial — any worker count yields a bit-identical
+    /// global vector. Per-worker job channels are FIFO, so the drain
+    /// necessarily observes every add/sub dispatched before it.
     fn drain(&mut self) -> Vec<(usize, Vec<u64>)> {
         match self {
             Exec::Inline(bank) => bank.drain(),
-            Exec::Pool { txs, .. } => {
+            Exec::Pool { client, slot } => {
                 let (rtx, rrx) = channel();
-                for tx in txs.iter() {
-                    tx.send(Job::Drain { reply: rtx.clone() }).expect("shard worker alive");
-                }
+                client.to_all(|| Job::Drain { slot: *slot, reply: rtx.clone() });
                 drop(rtx);
                 let mut out = Vec::new();
                 while let Ok(part) = rrx.recv() {
@@ -392,11 +523,7 @@ impl Exec {
     fn reset(&mut self) {
         match self {
             Exec::Inline(bank) => bank.reset(),
-            Exec::Pool { txs, .. } => {
-                for tx in txs.iter() {
-                    tx.send(Job::Reset).expect("shard worker alive");
-                }
-            }
+            Exec::Pool { client, slot } => client.to_all(|| Job::Retire { slot: *slot }),
         }
     }
 }
@@ -416,10 +543,11 @@ struct RollbackLog {
     file: File,
     path: PathBuf,
     spilled: u64,
+    cfg: RollbackCfg,
 }
 
 impl RollbackLog {
-    fn create() -> Result<Self> {
+    fn create(cfg: RollbackCfg) -> Result<Self> {
         let n = LOG_COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir()
             .join(format!("vfl-sa-rollback-{}-{n}.bin", std::process::id()));
@@ -429,10 +557,13 @@ impl RollbackLog {
             .create_new(true)
             .open(&path)
             .with_context(|| format!("create rollback log {}", path.display()))?;
-        Ok(RollbackLog { file, path, spilled: 0 })
+        Ok(RollbackLog { file, path, spilled: 0, cfg })
     }
 
     /// Record one committed chunk: from(2) ‖ offset(4) ‖ len(4) ‖ words.
+    /// Fails with the typed [`StreamError::RollbackLogFull`] before the
+    /// log can outgrow its configured bound; fsyncs the record when the
+    /// durability knob asks for it.
     fn append(&mut self, from: u16, offset: u32, words: &[u64]) -> Result<()> {
         let mut rec = Vec::with_capacity(10 + words.len() * 8);
         rec.extend_from_slice(&from.to_le_bytes());
@@ -441,7 +572,14 @@ impl RollbackLog {
         for w in words {
             rec.extend_from_slice(&w.to_le_bytes());
         }
+        let needed = self.spilled + rec.len() as u64;
+        if needed > self.cfg.max_bytes {
+            bail!(StreamError::RollbackLogFull { limit: self.cfg.max_bytes, needed });
+        }
         self.file.write_all(&rec).context("append rollback log")?;
+        if self.cfg.fsync {
+            self.file.sync_data().context("fsync rollback log")?;
+        }
         self.spilled += rec.len() as u64;
         Ok(())
     }
@@ -522,12 +660,33 @@ pub struct ChunkAssembler {
     rolled_back: BTreeSet<u16>,
     exec: Exec,
     log: Option<RollbackLog>,
+    rollback: RollbackCfg,
 }
 
 impl ChunkAssembler {
-    pub fn new(revocable: bool, shards: usize, workers: usize) -> Self {
+    /// An assembler folding inline in the caller's event loop — no
+    /// threads (the `--agg-workers 1` default, and the active party's
+    /// single-sender downlink assembler).
+    pub fn inline(revocable: bool, shards: usize, rollback: RollbackCfg) -> Self {
         assert!(shards >= 1);
-        assert!(workers >= 1);
+        Self::with_exec(revocable, shards, rollback, Exec::Inline(ShardBank::default()))
+    }
+
+    /// An assembler folding through the shared [`WorkerPool`] under
+    /// `slot` — a caller-unique id per (round, fan-in), so concurrent
+    /// round contexts never touch each other's accumulators.
+    pub fn pooled(
+        revocable: bool,
+        shards: usize,
+        rollback: RollbackCfg,
+        pool: PoolClient,
+        slot: u64,
+    ) -> Self {
+        assert!(shards >= 1);
+        Self::with_exec(revocable, shards, rollback, Exec::Pool { client: pool, slot })
+    }
+
+    fn with_exec(revocable: bool, shards: usize, rollback: RollbackCfg, exec: Exec) -> Self {
         ChunkAssembler {
             revocable,
             shards,
@@ -536,8 +695,9 @@ impl ChunkAssembler {
             complete: BTreeSet::new(),
             bad: BTreeSet::new(),
             rolled_back: BTreeSet::new(),
-            exec: Exec::new(workers, shards),
+            exec,
             log: None,
+            rollback,
         }
     }
 
@@ -609,7 +769,7 @@ impl ChunkAssembler {
                 self.layout = Some(l);
                 self.exec.init(l);
                 if self.revocable && self.log.is_none() {
-                    self.log = Some(RollbackLog::create()?);
+                    self.log = Some(RollbackLog::create(self.rollback)?);
                 }
                 l
             }
@@ -725,11 +885,11 @@ impl ChunkAssembler {
 
 impl Drop for ChunkAssembler {
     fn drop(&mut self) {
-        if let Exec::Pool { txs, handles } = &mut self.exec {
-            // closing every job channel ends the worker loops
-            txs.clear();
-            for h in std::mem::take(handles) {
-                let _ = h.join();
+        if let Exec::Pool { client, slot } = &self.exec {
+            // free the slot's accumulators worker-side; best-effort
+            // because the pool may legitimately be gone already
+            for tx in &client.txs {
+                let _ = tx.send(Job::Retire { slot: *slot });
             }
         }
     }
@@ -781,6 +941,19 @@ mod tests {
         }
     }
 
+    /// Build an assembler the way the aggregator does: inline for
+    /// `workers ≤ 1`, else a slot of a fresh shared pool (capped at
+    /// the shard count). The pool handle can drop immediately — its
+    /// detached workers live as long as the assembler's client.
+    fn asm(revocable: bool, shards: usize, workers: usize) -> ChunkAssembler {
+        if workers <= 1 {
+            ChunkAssembler::inline(revocable, shards, RollbackCfg::default())
+        } else {
+            let pool = WorkerPool::new(workers.min(shards));
+            ChunkAssembler::pooled(revocable, shards, RollbackCfg::default(), pool.client(), 1)
+        }
+    }
+
     fn feed(asm: &mut ChunkAssembler, from: u16, layout: ShardLayout, cw: usize, vals: &[u64]) {
         for c in chunk_plan(layout, cw) {
             asm.add_chunk(
@@ -809,7 +982,7 @@ mod tests {
         }
         for revocable in [false, true] {
             for workers in [1, 2, 4, 7] {
-                let mut asm = ChunkAssembler::new(revocable, 4, workers);
+                let mut asm = asm(revocable, 4, workers);
                 for (i, t) in tensors.iter().enumerate() {
                     feed(&mut asm, i as u16, layout, 5, t);
                 }
@@ -831,7 +1004,7 @@ mod tests {
         let a: Vec<u64> = (0..total as u64).collect();
         let b: Vec<u64> = (0..total as u64).map(|j| j * 100).collect();
         for workers in [1, 3] {
-            let mut asm = ChunkAssembler::new(true, 3, workers);
+            let mut asm = asm(true, 3, workers);
             feed(&mut asm, 1, layout, 4, &a);
             // sender 2 streams only its first shard then stalls
             let (s0, l0) = layout.shard_range(0);
@@ -852,7 +1025,7 @@ mod tests {
         let total = 16;
         let layout = ShardLayout::new(total, 2);
         let v: Vec<u64> = (1..=total as u64).collect();
-        let mut asm = ChunkAssembler::new(true, 2, 1);
+        let mut asm = asm(true, 2, 1);
         let plan = chunk_plan(layout, 3);
         let send = |asm: &mut ChunkAssembler, c: Chunk| {
             asm.add_chunk(
@@ -879,7 +1052,7 @@ mod tests {
         let total = 16;
         let layout = ShardLayout::new(total, 2);
         let v: Vec<u64> = (0..total as u64).collect();
-        let mut asm = ChunkAssembler::new(true, 2, 1);
+        let mut asm = asm(true, 2, 1);
         let plan = chunk_plan(layout, 3);
         // drop the second chunk: offset skips ahead → bad stream
         let send = |asm: &mut ChunkAssembler, c: Chunk| {
@@ -906,7 +1079,7 @@ mod tests {
 
     #[test]
     fn malformed_chunks_error() {
-        let mut asm = ChunkAssembler::new(false, 2, 1);
+        let mut asm = asm(false, 2, 1);
         // inconsistent total
         asm.add_chunk(1, 0, 0, 16, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
         assert!(asm.add_chunk(2, 0, 0, 20, &[1]).is_err());
@@ -925,13 +1098,13 @@ mod tests {
         let layout = ShardLayout::new(total, 4);
         let v = vec![1u64; total];
         // base protocol: chunks commit on arrival — accumulators only
-        let mut base = ChunkAssembler::new(false, 4, 1);
+        let mut base = asm(false, 4, 1);
         assert_eq!(base.buffered_bytes(), 0, "nothing resident before the first chunk");
         feed(&mut base, 1, layout, 8, &v);
         assert_eq!(base.buffered_bytes(), (total * 8) as u64, "accumulators only");
         assert_eq!(base.spilled_bytes(), 0, "base protocol never spills");
         // revocable: same resident footprint; history goes to the log
-        let mut rev = ChunkAssembler::new(true, 4, 1);
+        let mut rev = asm(true, 4, 1);
         feed(&mut rev, 1, layout, 8, &v);
         assert_eq!(rev.buffered_bytes(), (total * 8) as u64, "rollback state is not resident");
         // 4 chunks of 8 words: 4 · (10 + 64) log bytes
@@ -942,6 +1115,86 @@ mod tests {
         rev.reset().unwrap();
         assert_eq!(rev.spilled_bytes(), 0);
         assert_eq!(rev.buffered_bytes(), 0);
+    }
+
+    #[test]
+    fn shared_pool_slots_fold_concurrently_without_cross_talk() {
+        // one pool, four assemblers — two fan-ins × two "rounds in
+        // flight", exactly the aggregator's shape under the windowed
+        // scheduler — fed interleaved, with different tensor lengths
+        let pool = WorkerPool::new(3);
+        let la = ShardLayout::new(37, 4);
+        let lb = ShardLayout::new(24, 3);
+        let rb = RollbackCfg::default();
+        let mut asms: Vec<(ShardLayout, ChunkAssembler)> = vec![
+            (la, ChunkAssembler::pooled(false, 4, rb, pool.client(), 10)),
+            (lb, ChunkAssembler::pooled(false, 3, rb, pool.client(), 11)),
+            (la, ChunkAssembler::pooled(true, 4, rb, pool.client(), 12)),
+            (lb, ChunkAssembler::pooled(true, 3, rb, pool.client(), 13)),
+        ];
+        let tensor = |slot: u64, len: usize| -> Vec<u64> {
+            (0..len as u64).map(|j| slot.wrapping_mul(1 << 32).wrapping_add(j)).collect()
+        };
+        // interleave the four streams chunk by chunk
+        let plans: Vec<Vec<Chunk>> =
+            asms.iter().map(|(l, _)| chunk_plan(*l, 5)).collect();
+        let longest = plans.iter().map(Vec::len).max().unwrap();
+        for i in 0..longest {
+            for (s, ((layout, asm), plan)) in asms.iter_mut().zip(&plans).enumerate() {
+                let Some(c) = plan.get(i) else { continue };
+                let v = tensor(10 + s as u64, layout.total);
+                asm.add_chunk(
+                    7,
+                    c.shard as u16,
+                    c.offset as u32,
+                    layout.total as u32,
+                    &v[c.offset..c.offset + c.len],
+                )
+                .unwrap();
+            }
+        }
+        for (s, (layout, asm)) in asms.iter_mut().enumerate() {
+            assert_eq!(
+                asm.take_sum().unwrap().unwrap(),
+                tensor(10 + s as u64, layout.total),
+                "slot {} must see only its own chunks",
+                10 + s
+            );
+        }
+    }
+
+    #[test]
+    fn rollback_log_bound_is_a_typed_error() {
+        let total = 16;
+        let layout = ShardLayout::new(total, 2);
+        let v: Vec<u64> = (0..total as u64).collect();
+        // each 4-word chunk spills 10 + 32 bytes; allow exactly one
+        let tight = RollbackCfg { fsync: false, max_bytes: 42 };
+        let mut asm = ChunkAssembler::inline(true, 2, tight);
+        let plan = chunk_plan(layout, 4);
+        asm.add_chunk(1, 0, 0, total as u32, &v[..plan[0].len]).unwrap();
+        let err = asm
+            .add_chunk(1, plan[1].shard as u16, plan[1].offset as u32, total as u32, &v[4..8])
+            .unwrap_err();
+        match err.downcast_ref::<StreamError>() {
+            Some(StreamError::RollbackLogFull { limit: 42, needed }) => {
+                assert!(*needed > 42, "needed {needed}")
+            }
+            other => panic!("want RollbackLogFull, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fsynced_log_replays_identically() {
+        let total = 24;
+        let layout = ShardLayout::new(total, 3);
+        let v: Vec<u64> = (1..=total as u64).collect();
+        let mut asm =
+            ChunkAssembler::inline(true, 3, RollbackCfg { fsync: true, max_bytes: 1 << 20 });
+        feed(&mut asm, 1, layout, 4, &v);
+        feed(&mut asm, 2, layout, 4, &v);
+        asm.purge(2).unwrap();
+        assert_eq!(asm.take_sum().unwrap().unwrap(), v, "fsync must not change replay");
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! The windowed round scheduler behind `--rounds-in-flight`.
+//!
+//! PR 1's driver ran the static schedule strictly serially: round
+//! *k + 1* started only after round *k*'s `RoundDone` note had crossed
+//! back to the driver, so every party idled while the aggregator
+//! drained a fan-in and the active party waited on the gradient
+//! downlink. [`RoundWindow`] replaces that loop with a *window*: up to
+//! `W` rounds may be in flight simultaneously, each isolated in its own
+//! per-round protocol context ([`parties`](super::parties)) and routed
+//! by the `round` tag every protocol message already carries.
+//!
+//! Every transport drives the same scheduler — the simulator, the
+//! threaded transport, and TCP `serve` all loop `next_start` /
+//! `complete` — so the window semantics cannot drift between them.
+//!
+//! ## Why `W = 1` (and any `W`) stays bit-identical
+//!
+//! The scheduler never reorders rounds: starts are issued strictly in
+//! schedule order, and three *barriers* keep every round's inputs
+//! exactly what the serial driver would have fed it:
+//!
+//! * **Setup/rotation barrier.** A `Setup` round or a training round
+//!   with `rotate = true` replaces every client's masking session. It
+//!   starts only when the window is empty and blocks all successors
+//!   until it completes, so no round ever straddles a key epoch.
+//! * **Phase barrier.** A round whose [`Phase`] differs from the rounds
+//!   in flight waits for the window to empty. Phases partition the
+//!   schedule contiguously, so this serializes exactly one boundary
+//!   (training → testing) — and it is what keeps the per-phase Table-2
+//!   byte counters bit-identical to a serial run (every transport
+//!   meters against one global "current phase").
+//! * **Dropout drain.** At the first dropout declaration the aggregator
+//!   emits [`Note::WindowDrain`](super::party::Note); [`drain`] pins
+//!   the effective width to 1 for the rest of the run, so recovery,
+//!   purge, and re-key semantics compose with pipelining without a
+//!   single new case: in-flight rounds finish, then the run proceeds
+//!   exactly like the serial dropout-tolerant protocol.
+//!
+//! Within those barriers the remaining overlap is real: testing rounds
+//! are mutually independent (parameters are frozen), so with `W > 1`
+//! passive parties run round *r + 1*'s forward pass and window-masking
+//! while the aggregator is still folding round *r*'s chunks; training
+//! rounds chain through the active party's SGD step by data dependency
+//! (its `RoundCtx` defers opening round *r + 1* until round *r*'s
+//! update lands), which is precisely why their overlap is safe — the
+//! values cannot differ, only the idle gaps shrink. [`stats`] reports
+//! how much overlap a run achieved ([`PipelineStats`]).
+//!
+//! [`drain`]: RoundWindow::drain
+//! [`stats`]: RoundWindow::stats
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use crate::net::Phase;
+
+use super::metrics::PipelineStats;
+use super::party::{Note, RoundKind, RoundSpec};
+
+/// Hard cap on `--rounds-in-flight`: enough to hide any realistic
+/// fan-in drain latency, low enough that per-round contexts (fan-in
+/// buffers, assemblers, rollback logs) stay a small bounded ring.
+pub const MAX_ROUNDS_IN_FLIGHT: usize = 64;
+
+/// The windowed scheduler: hands out rounds to start (in schedule
+/// order, up to the window width, respecting the barriers above) and
+/// retires them as their `RoundDone` notes arrive.
+pub struct RoundWindow<'s> {
+    schedule: &'s [RoundSpec],
+    width: usize,
+    /// Next schedule index to hand out.
+    next: usize,
+    /// Round numbers started but not yet completed.
+    in_flight: BTreeSet<u32>,
+    /// A setup/rotation round is in flight: nothing else may start.
+    barrier_round: Option<u32>,
+    /// Phase shared by every in-flight round (`None` when empty).
+    phase: Option<Phase>,
+    /// A dropout was declared: effective width is 1 from here on.
+    drained: bool,
+    stats: PipelineStats,
+    /// Set when the window empties with schedule rounds remaining —
+    /// the serialization gap the pipeline exists to close.
+    idle_since: Option<Instant>,
+}
+
+impl<'s> RoundWindow<'s> {
+    /// `width` is `--rounds-in-flight`, already validated ≥ 1 (a zero
+    /// width is clamped rather than trusted — it would deadlock).
+    pub fn new(schedule: &'s [RoundSpec], width: usize) -> Self {
+        RoundWindow {
+            schedule,
+            width: width.max(1),
+            next: 0,
+            in_flight: BTreeSet::new(),
+            barrier_round: None,
+            phase: None,
+            drained: false,
+            stats: PipelineStats::default(),
+            idle_since: None,
+        }
+    }
+
+    /// The next round to start right now, or `None` if the window is
+    /// full, a barrier is pending, or the schedule is exhausted.
+    /// Callers loop until `None` so an emptied window refills at once.
+    pub fn next_start(&mut self) -> Option<&'s RoundSpec> {
+        let spec = self.schedule.get(self.next)?;
+        let width = if self.drained { 1 } else { self.width };
+        if self.in_flight.len() >= width || self.barrier_round.is_some() {
+            return None;
+        }
+        let barrier = spec.kind == RoundKind::Setup || spec.rotate;
+        if !self.in_flight.is_empty() && (barrier || self.phase != Some(spec.phase)) {
+            return None;
+        }
+        if let Some(t0) = self.idle_since.take() {
+            self.stats.idle_gap_ns += t0.elapsed().as_nanos();
+        }
+        self.stats.rounds_started += 1;
+        if !self.in_flight.is_empty() {
+            self.stats.overlapped_starts += 1;
+        }
+        let fresh = self.in_flight.insert(spec.round);
+        debug_assert!(fresh, "schedule round numbers are unique");
+        self.stats.max_in_flight = self.stats.max_in_flight.max(self.in_flight.len() as u64);
+        self.phase = Some(spec.phase);
+        if barrier {
+            self.barrier_round = Some(spec.round);
+        }
+        self.next += 1;
+        Some(spec)
+    }
+
+    /// Retire a completed round (its `RoundDone` note arrived). Returns
+    /// whether the round was actually in flight — a `false` means a
+    /// stray completion the caller should treat as an ordinary note.
+    pub fn complete(&mut self, round: u32) -> bool {
+        if !self.in_flight.remove(&round) {
+            return false;
+        }
+        if self.barrier_round == Some(round) {
+            self.barrier_round = None;
+        }
+        if self.in_flight.is_empty() {
+            self.phase = None;
+            if self.next < self.schedule.len() {
+                self.idle_since = Some(Instant::now());
+            }
+        }
+        true
+    }
+
+    /// A dropout was declared: stop opening new rounds until the
+    /// in-flight ones finish, then run serially (width 1) for the rest
+    /// of the run — the recovery path's purge/re-key semantics are
+    /// exactly the serial protocol's.
+    pub fn drain(&mut self) {
+        self.drained = true;
+    }
+
+    /// Feed one driver note through the scheduler — the single
+    /// note-dispatch protocol every transport shares, so the window
+    /// semantics cannot drift between them: `WindowDrain` drains the
+    /// window and is consumed (returns `None`), `RoundDone` retires its
+    /// round and passes through, everything else passes through
+    /// untouched. Callers record whatever comes back as a result note.
+    pub fn observe(&mut self, note: Note) -> Option<Note> {
+        match note {
+            Note::WindowDrain { .. } => {
+                self.drain();
+                None
+            }
+            Note::RoundDone { round } => {
+                self.complete(round);
+                Some(Note::RoundDone { round })
+            }
+            other => Some(other),
+        }
+    }
+
+    /// Rounds currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// The oldest in-flight round (stall diagnostics name this one:
+    /// its prerequisites are all delivered, so a quiescent transport
+    /// means *its* missing senders are the dropped ones).
+    pub fn oldest_in_flight(&self) -> Option<u32> {
+        self.in_flight.iter().next().copied()
+    }
+
+    /// Every scheduled round has started and completed.
+    pub fn done(&self) -> bool {
+        self.next >= self.schedule.len() && self.in_flight.is_empty()
+    }
+
+    /// The run's pipelining counters (fold into the run's `Metrics`).
+    pub fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::party::SETUP_ROUND;
+
+    fn spec(round: u32, kind: RoundKind, rotate: bool, phase: Phase) -> RoundSpec {
+        RoundSpec { round, kind, rotate, phase, ids: Vec::new() }
+    }
+
+    /// setup → rotate-train → train ×3 → test ×2 (round numbers as the
+    /// driver lays them out).
+    fn schedule() -> Vec<RoundSpec> {
+        vec![
+            spec(SETUP_ROUND, RoundKind::Setup, false, Phase::Setup),
+            spec(0, RoundKind::Train, true, Phase::Training),
+            spec(1, RoundKind::Train, false, Phase::Training),
+            spec(2, RoundKind::Train, false, Phase::Training),
+            spec(3, RoundKind::Train, false, Phase::Training),
+            spec(4, RoundKind::Test, false, Phase::Testing),
+            spec(5, RoundKind::Test, false, Phase::Testing),
+        ]
+    }
+
+    fn rounds_startable(win: &mut RoundWindow) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Some(s) = win.next_start() {
+            out.push(s.round);
+        }
+        out
+    }
+
+    #[test]
+    fn width_one_is_strictly_serial() {
+        let sched = schedule();
+        let mut win = RoundWindow::new(&sched, 1);
+        for s in &sched {
+            assert_eq!(rounds_startable(&mut win), vec![s.round], "one at a time");
+            assert!(win.next_start().is_none(), "window full at W=1");
+            assert!(win.complete(s.round));
+        }
+        assert!(win.done());
+        let p = win.stats();
+        assert_eq!(p.rounds_started, sched.len() as u64);
+        assert_eq!(p.overlapped_starts, 0, "serial runs never overlap");
+        assert_eq!(p.max_in_flight, 1);
+    }
+
+    #[test]
+    fn setup_and_rotation_rounds_are_barriers() {
+        let sched = schedule();
+        let mut win = RoundWindow::new(&sched, 4);
+        // the setup round starts alone and blocks everything
+        assert_eq!(rounds_startable(&mut win), vec![SETUP_ROUND]);
+        assert!(win.complete(SETUP_ROUND));
+        // the rotate round is a barrier too
+        assert_eq!(rounds_startable(&mut win), vec![0]);
+        assert!(win.complete(0));
+        // plain training rounds fill the window
+        assert_eq!(rounds_startable(&mut win), vec![1, 2, 3]);
+        assert_eq!(win.in_flight(), 3);
+        assert_eq!(win.oldest_in_flight(), Some(1));
+        // the phase barrier keeps test rounds out until training drains
+        assert!(win.complete(1));
+        assert!(win.next_start().is_none(), "testing waits for the training window");
+        assert!(win.complete(2));
+        assert!(win.complete(3));
+        assert_eq!(rounds_startable(&mut win), vec![4, 5], "tests overlap each other");
+        // out-of-order completion is fine
+        assert!(win.complete(5));
+        assert!(win.complete(4));
+        assert!(win.done());
+        let p = win.stats();
+        assert_eq!(p.max_in_flight, 3);
+        assert_eq!(p.overlapped_starts, 3, "rounds 2, 3 and 5 piggybacked");
+    }
+
+    #[test]
+    fn drain_pins_width_to_one() {
+        let sched = schedule();
+        let mut win = RoundWindow::new(&sched, 4);
+        assert!(win.complete(rounds_startable(&mut win)[0])); // setup
+        assert!(win.complete(rounds_startable(&mut win)[0])); // rotate
+        assert_eq!(rounds_startable(&mut win), vec![1, 2, 3]);
+        win.drain();
+        assert!(win.next_start().is_none(), "draining: no new starts");
+        win.complete(1);
+        win.complete(2);
+        assert!(win.next_start().is_none(), "still draining");
+        win.complete(3);
+        // drained: strictly serial from here on
+        assert_eq!(rounds_startable(&mut win), vec![4]);
+        assert!(win.next_start().is_none());
+        win.complete(4);
+        assert_eq!(rounds_startable(&mut win), vec![5]);
+    }
+
+    #[test]
+    fn stray_completions_are_reported() {
+        let sched = schedule();
+        let mut win = RoundWindow::new(&sched, 2);
+        assert!(!win.complete(3), "round 3 was never started");
+        assert_eq!(rounds_startable(&mut win), vec![SETUP_ROUND]);
+        assert!(!win.complete(7), "unknown round");
+        assert!(win.complete(SETUP_ROUND));
+        assert!(!win.complete(SETUP_ROUND), "double completion");
+    }
+
+    #[test]
+    fn observe_dispatches_scheduler_notes() {
+        let sched = schedule();
+        let mut win = RoundWindow::new(&sched, 4);
+        assert_eq!(rounds_startable(&mut win), vec![SETUP_ROUND]);
+        // RoundDone retires its round and passes through
+        assert_eq!(
+            win.observe(Note::RoundDone { round: SETUP_ROUND }),
+            Some(Note::RoundDone { round: SETUP_ROUND })
+        );
+        assert_eq!(win.in_flight(), 0);
+        // WindowDrain is consumed and pins the width
+        assert_eq!(win.observe(Note::WindowDrain { round: 0 }), None);
+        assert_eq!(rounds_startable(&mut win), vec![0]);
+        win.complete(0);
+        assert_eq!(rounds_startable(&mut win), vec![1], "drained: serial");
+        // everything else passes through untouched
+        let loss = Note::Loss { round: 1, loss: 0.5 };
+        assert_eq!(win.observe(loss.clone()), Some(loss));
+    }
+
+    #[test]
+    fn zero_width_is_clamped_not_deadlocked() {
+        let sched = schedule();
+        let mut win = RoundWindow::new(&sched, 0);
+        assert_eq!(rounds_startable(&mut win), vec![SETUP_ROUND]);
+    }
+}

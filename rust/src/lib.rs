@@ -52,6 +52,33 @@
 //! println!("losses: {:?}", report.losses);
 //! ```
 //!
+//! ## Round lifecycle: per-round contexts and the pipelined window
+//!
+//! There is no "current round" anywhere in the stack. Every party
+//! keeps a bounded ring of **per-round protocol contexts** keyed by
+//! round number — fan-in buffers, chunk assemblers, batch caches,
+//! pending gradient sums — and every protocol message routes to its
+//! context by the `round` tag it already carries. The driver side is
+//! the [`RoundWindow`](coordinator::RoundWindow) scheduler
+//! (`--rounds-in-flight W`): up to `W` rounds run simultaneously,
+//! started strictly in schedule order, with three barriers that make
+//! any width bit-identical to the serial `W = 1` run — setup/rotation
+//! rounds run alone (no round straddles a key epoch), a phase boundary
+//! drains the window (per-phase Table-2 counters stay exact), and the
+//! first dropout declaration drains the window to 1 for the rest of
+//! the run (`Note::WindowDrain`), so Bonawitz recovery composes with
+//! pipelining without a single new case. Within those barriers the
+//! overlap is real: testing rounds are mutually independent, so
+//! passive parties forward round *r + 1* while the aggregator still
+//! folds round *r*; training rounds chain through the active party's
+//! SGD step — its context for round *r + 1* defers opening until round
+//! *r*'s update lands, which is exactly why wider windows cannot
+//! change a value, only shrink idle gaps.
+//! [`PipelineStats`](coordinator::PipelineStats) (overlapped starts,
+//! peak rounds in flight, driver idle gap) measure the win;
+//! `tests/round_pipeline.rs` asserts the W ∈ {1, 2, 4} sweep
+//! bit-identical on all three transports.
+//!
 //! ## Streaming shard-parallel aggregation (`--chunk-words` / `--shards` / `--agg-workers`)
 //!
 //! The masked-tensor path is a *chunked streaming pipeline* end to

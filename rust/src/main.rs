@@ -128,18 +128,29 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(w) = flags.get("agg-workers") {
         cfg.agg_workers = w.parse().context("bad --agg-workers")?;
     }
+    if let Some(w) = flags.get("rounds-in-flight") {
+        cfg.rounds_in_flight = w.parse().context("bad --rounds-in-flight")?;
+    }
+    if flags.contains_key("rollback-fsync") {
+        cfg.rollback_fsync = true;
+    }
+    if let Some(b) = flags.get("rollback-max-bytes") {
+        cfg.rollback_max_bytes = Some(b.parse().context("bad --rollback-max-bytes")?);
+    }
     if let Some(ms) = flags.get("stall-timeout-ms") {
         cfg.stall_timeout_ms = Some(ms.parse().context("bad --stall-timeout-ms")?);
     }
     if let Some(ms) = flags.get("stall-cap-ms") {
         cfg.stall_cap_ms = Some(ms.parse().context("bad --stall-cap-ms")?);
     }
-    // fail the streaming and timing flags here, at parse time, with the
-    // full validation the driver applies — `--chunk-words 0`,
-    // `--shards 0`, `--agg-workers 0`, oversized shard/worker counts,
-    // and zero-width stall windows must never reach a running round
+    // fail the streaming, timing, and window flags here, at parse
+    // time, with the full validation the driver applies —
+    // `--chunk-words 0`, `--shards 0`, `--agg-workers 0`, oversized
+    // shard/worker/window counts, zero-width stall windows, and a
+    // zero-byte rollback bound must never reach a running round
     vfl::coordinator::validate_streaming(&cfg)?;
     vfl::coordinator::validate_timing(&cfg)?;
+    vfl::coordinator::validate_window(&cfg)?;
     if let Some(spec) = flags.get("dropout-schedule") {
         if cfg.shamir_threshold.is_none() {
             bail!("--dropout-schedule needs --shamir-threshold (the run cannot recover otherwise)");
@@ -226,7 +237,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         println!("  vfl-sa join --connect {listen} --party {i} <same train flags>");
     }
     let clock = vfl::net::StallClock::from_config(cfg.stall_timeout_ms, cfg.stall_cap_ms);
-    let out = tcp::serve(&listen, aggregator, &schedule, n_clients, clock)?;
+    let out =
+        tcp::serve(&listen, aggregator, &schedule, n_clients, clock, cfg.rounds_in_flight)?;
     let s = summarize(&schedule, &test_labels, &out.notes);
     for (i, l) in s.losses.iter().enumerate() {
         println!("round {i:>4}  loss {l:.5}");
@@ -281,10 +293,12 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let quick = flags.contains_key("quick");
     match which {
         "table1" => {
+            let window: usize =
+                flags.get("window").map(|v| v.parse()).transpose()?.unwrap_or(1);
             let mut rows = Vec::new();
             for ds in ["banking", "adult", "taobao"] {
                 let engine = if reference { None } else { Some(load_engine(ds)?) };
-                rows.push(tables::table1(ds, reps, engine.as_ref())?);
+                rows.push(tables::table1(ds, reps, engine.as_ref(), window)?);
             }
             tables::print_table1(&rows);
         }
@@ -344,6 +358,8 @@ fn main() -> Result<()> {
             eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded]");
             eprintln!("        [--shamir-threshold 3] [--dropout-schedule 2@1,4@3+1]   dropout-tolerant run");
             eprintln!("        [--chunk-words 1024] [--shards 4] [--agg-workers 4]   streaming shard-parallel aggregation");
+            eprintln!("        [--rounds-in-flight 2]                                 pipelined round window (1 = serial)");
+            eprintln!("        [--rollback-fsync] [--rollback-max-bytes N]            rollback-log durability/bound");
             eprintln!("        [--stall-timeout-ms 500] [--stall-cap-ms 10000]       adaptive dropout-window floor/cap");
             eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
             eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
@@ -474,6 +490,48 @@ mod tests {
             let err = cfg_from_flags(&flags).unwrap_err().to_string();
             assert!(err.contains(knob) && err.contains("invalid"), "{knob}: {err}");
         }
+    }
+
+    #[test]
+    fn window_flag_wires_into_config_and_invalid_values_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("rounds-in-flight".to_string(), "4".to_string());
+        assert_eq!(cfg_from_flags(&flags).unwrap().rounds_in_flight, 4);
+        // default is the serial window
+        assert_eq!(cfg_from_flags(&HashMap::new()).unwrap().rounds_in_flight, 1);
+        // zero and runaway widths fail at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("rounds-in-flight".to_string(), "0".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("--rounds-in-flight 0"));
+        let mut flags = HashMap::new();
+        flags.insert("rounds-in-flight".to_string(), "1000".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn rollback_flags_wire_into_config() {
+        let mut flags = HashMap::new();
+        flags.insert("chunk-words".to_string(), "1024".to_string());
+        flags.insert("shamir-threshold".to_string(), "3".to_string());
+        flags.insert("rollback-fsync".to_string(), "true".to_string());
+        flags.insert("rollback-max-bytes".to_string(), "65536".to_string());
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert!(cfg.rollback_fsync);
+        assert_eq!(cfg.rollback_max_bytes, Some(65536));
+        // a zero bound fails at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("rollback-max-bytes".to_string(), "0".to_string());
+        assert!(cfg_from_flags(&flags)
+            .unwrap_err()
+            .to_string()
+            .contains("--rollback-max-bytes 0"));
+        // knobs without a dropout-tolerant chunked run are inert: rejected
+        let mut flags = HashMap::new();
+        flags.insert("rollback-fsync".to_string(), "true".to_string());
+        assert!(cfg_from_flags(&flags)
+            .unwrap_err()
+            .to_string()
+            .contains("--shamir-threshold"));
     }
 
     #[test]

@@ -32,16 +32,26 @@ use super::Addr;
 
 /// One injected fault for one client.
 ///
-/// Faults count *messages*, so under the chunked streaming pipeline
-/// (`--chunk-words`) crash points and drops land on individual
-/// `MaskedChunk`s — a crash mid-tensor or a single lost chunk are now
-/// injectable states, and `tests/chunk_equivalence.rs` proves the
-/// recovery path handles both.
+/// Faults count *messages per round*, attributed by each outgoing
+/// message's own `round` tag (setup-phase messages, which carry an
+/// epoch instead, attribute to the latest announced round — setup legs
+/// are scheduler barriers, so that is unambiguous). Anchoring to
+/// protocol progress rather than to round announcements is what keeps
+/// a fault schedule deterministic under the windowed scheduler
+/// (`--rounds-in-flight` > 1 announces rounds early, and announcement
+/// arrival order races against in-flight traffic on the threaded
+/// transport); at width 1 the two anchors coincide, so the semantics
+/// of every pre-window schedule are unchanged. Under the chunked
+/// streaming pipeline (`--chunk-words`) crash points and drops land on
+/// individual `MaskedChunk`s — a crash mid-tensor or a single lost
+/// chunk are injectable states, and `tests/chunk_equivalence.rs`
+/// proves the recovery path handles both.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fault {
-    /// Permanent silence: the party crashes in `round` after emitting
-    /// `after_sends` messages in it (0 = before sending anything; the
-    /// party never processes another event).
+    /// Permanent silence: the party crashes when its `round`-attributed
+    /// send count stands at `after_sends` and it is about to emit one
+    /// more (0 = before its first send of that round; from the crash
+    /// point on, nothing escapes — any round's traffic included).
     Crash { round: u32, after_sends: usize },
     /// Silently lose the `nth` outgoing message of `round` (the party
     /// stays alive — models a lossy link; the aggregator will declare
@@ -178,35 +188,46 @@ impl FaultPlan {
 pub struct FaultyParty<'e> {
     inner: Box<dyn Party + 'e>,
     faults: Vec<Fault>,
+    /// Latest announced round: the attribution fallback for messages
+    /// that carry no round tag (key exchange and share distribution —
+    /// setup legs are scheduler barriers, so this is unambiguous even
+    /// under a pipelined window).
     round: u32,
-    sent_in_round: usize,
+    /// Escaped-message counts per attributed round.
+    sent: std::collections::BTreeMap<u32, usize>,
     crashed: bool,
 }
 
 impl<'e> FaultyParty<'e> {
     pub fn new(inner: Box<dyn Party + 'e>, faults: Vec<Fault>) -> Self {
-        FaultyParty { inner, faults, round: 0, sent_in_round: 0, crashed: false }
+        FaultyParty {
+            inner,
+            faults,
+            round: 0,
+            sent: std::collections::BTreeMap::new(),
+            crashed: false,
+        }
     }
 
     /// Whether the crash point at (round, after `sent` messages) fires.
-    fn crash_fires(&self, sent: usize) -> bool {
+    fn crash_fires(&self, round: u32, sent: usize) -> bool {
         self.faults.iter().any(|f| {
-            matches!(f, Fault::Crash { round, after_sends }
-                if *round == self.round && *after_sends == sent)
+            matches!(f, Fault::Crash { round: r, after_sends }
+                if *r == round && *after_sends == sent)
         })
     }
 
-    fn drop_fires(&self, nth: usize) -> bool {
+    fn drop_fires(&self, round: u32, nth: usize) -> bool {
         self.faults.iter().any(|f| {
-            matches!(f, Fault::DropMsg { round, nth: n } if *round == self.round && *n == nth)
+            matches!(f, Fault::DropMsg { round: r, nth: n } if *r == round && *n == nth)
         })
     }
 
-    fn delay_hold(&self) -> usize {
+    fn delay_hold(&self, round: u32) -> usize {
         self.faults
             .iter()
             .find_map(|f| match f {
-                Fault::Delay { round, hold } if *round == self.round => Some(*hold),
+                Fault::Delay { round: r, hold } if *r == round => Some(*hold),
                 _ => None,
             })
             .unwrap_or(0)
@@ -216,10 +237,21 @@ impl<'e> FaultyParty<'e> {
         self.faults.iter().any(|f| matches!(f, Fault::CorruptShares))
     }
 
-    /// Route an inner outbox through the fault schedule.
+    /// Route an inner outbox through the fault schedule. Each message
+    /// counts against its own round ([`Msg::round`], fallback: the
+    /// latest announced round); the event-level delay fault uses the
+    /// first message's attribution. A crash with `after_sends: 0`
+    /// fires just before the round's first send, so the inner party
+    /// may process (and CPU-meter) the events leading up to that
+    /// attempt — the price of anchoring fault points to protocol
+    /// progress instead of racy round announcements.
     fn relay(&mut self, tmp: Outbox, out: &mut Outbox) {
         let mut msgs = tmp.msgs;
-        let hold = self.delay_hold();
+        let event_round = msgs
+            .first()
+            .and_then(|(_, m)| m.round())
+            .unwrap_or(self.round);
+        let hold = self.delay_hold(event_round);
         if hold > 0 && hold < msgs.len() {
             msgs.rotate_left(hold);
         }
@@ -236,13 +268,26 @@ impl<'e> FaultyParty<'e> {
                     }
                 }
             }
-            let nth = self.sent_in_round;
-            self.sent_in_round += 1;
-            if !self.drop_fires(nth) {
+            let round = m.round().unwrap_or(self.round);
+            let nth = self.sent.get(&round).copied().unwrap_or(0);
+            // an `after_sends: 0` crash point fires *before* the
+            // round's first message escapes
+            if self.crash_fires(round, nth) {
+                self.crashed = true;
+                return;
+            }
+            self.sent.insert(round, nth + 1);
+            if !self.drop_fires(round, nth) {
                 out.send(to, m);
             }
-            if self.crash_fires(self.sent_in_round) {
+            // a mid-round crash point fires right *after* its round's
+            // `after_sends`-th message — eagerly, so a crash at a
+            // round's final send silences the party from that moment
+            // (the pre-window harness semantics) instead of waiting
+            // for a further send that may never come
+            if self.crash_fires(round, nth + 1) {
                 self.crashed = true;
+                return;
             }
         }
         if !self.crashed {
@@ -261,11 +306,6 @@ impl<'e> Party for FaultyParty<'e> {
             return Ok(());
         }
         self.round = spec.round;
-        self.sent_in_round = 0;
-        if self.crash_fires(0) {
-            self.crashed = true;
-            return Ok(());
-        }
         let mut tmp = Outbox::default();
         self.inner.on_round_start(spec, &mut tmp)?;
         self.relay(tmp, out);
@@ -290,6 +330,12 @@ impl<'e> Party for FaultyParty<'e> {
         self.inner.on_stall(&mut tmp)?;
         self.relay(tmp, out);
         Ok(())
+    }
+
+    fn on_round_complete(&mut self, round: u32) {
+        // driver bookkeeping, not party traffic: delivered even to a
+        // crashed wrapper (the real aggregator is never wrapped anyway)
+        self.inner.on_round_complete(round);
     }
 
     fn concurrent_safe(&self) -> bool {
@@ -323,9 +369,10 @@ impl<T: Transport> Transport for FaultyTransport<T> {
         &mut self,
         parties: Vec<Box<dyn Party + 'e>>,
         schedule: &[RoundSpec],
+        window: usize,
     ) -> Result<TransportOutcome> {
         let wrapped = self.plan.wrap(parties);
-        self.inner.execute(wrapped, schedule)
+        self.inner.execute(wrapped, schedule, window)
     }
 }
 

@@ -23,6 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::messages::Msg;
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+use crate::coordinator::window::RoundWindow;
 use crate::coordinator::Metrics;
 
 use super::frame::Frame;
@@ -55,12 +56,15 @@ enum Event {
 /// Route an aggregator outbox to the client sockets, metering each
 /// protocol message. Writes to clients whose sockets died are skipped
 /// — a dead socket is a dropped party, which the aggregator's stall
-/// probe handles; it is not the server's error.
+/// probe handles; it is not the server's error. Scheduler-control
+/// notes (`WindowDrain`, and `RoundDone` should the aggregator ever
+/// emit one) feed the round window instead of the result notes.
 fn route_server(
     net: &mut Network,
     writers: &mut [Option<TcpStream>],
     ob: Outbox,
     notes: &mut Vec<Note>,
+    win: &mut RoundWindow,
 ) -> Result<()> {
     for (to, msg) in ob.msgs {
         let Addr::Client(ci) = to else { bail!("aggregator addressed itself") };
@@ -73,23 +77,29 @@ fn route_server(
             }
         }
     }
-    notes.extend(ob.notes);
+    for n in ob.notes {
+        if let Some(n) = win.observe(n) {
+            notes.push(n);
+        }
+    }
     Ok(())
 }
 
-/// Host the aggregator: accept `n_clients` joins, run the schedule,
-/// return the run's notes and byte counters. `clock` is the adaptive
-/// dropout-detection window (`StallClock::from_config` wires the
-/// `--stall-cap-ms` / test-floor knobs through).
+/// Host the aggregator: accept `n_clients` joins, run the schedule
+/// with up to `window` rounds in flight (`--rounds-in-flight`; 1 =
+/// strictly serial), return the run's notes and byte counters. `clock`
+/// is the adaptive dropout-detection window (`StallClock::from_config`
+/// wires the `--stall-cap-ms` / test-floor knobs through).
 pub fn serve(
     listen: &str,
     aggregator: Box<dyn Party + '_>,
     schedule: &[RoundSpec],
     n_clients: usize,
     clock: StallClock,
+    window: usize,
 ) -> Result<ServeOutcome> {
     let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
-    serve_on(listener, aggregator, schedule, n_clients, clock)
+    serve_on(listener, aggregator, schedule, n_clients, clock, window)
 }
 
 /// [`serve`] on an already-bound listener (lets tests bind port 0 and
@@ -100,6 +110,7 @@ pub fn serve_on(
     schedule: &[RoundSpec],
     n_clients: usize,
     mut clock: StallClock,
+    window: usize,
 ) -> Result<ServeOutcome> {
     let listen = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
     eprintln!("serve: listening on {listen}, waiting for {n_clients} client(s)");
@@ -147,109 +158,118 @@ pub fn serve_on(
     let mut net = Network::new(n_clients);
     let mut notes: Vec<Note> = Vec::new();
     let mut last_event = std::time::Instant::now();
-    for spec in schedule {
-        net.phase = spec.phase;
+    let mut win = RoundWindow::new(schedule, window);
+    let mut idle_probes = 0u32;
+    let mut processed_since_probe = 0u64;
+    while !win.done() {
+        // open every round the window allows, in schedule order:
         // boundary first, on every socket, so each client orders the
         // round ahead of its first protocol message. Only the active
         // party (client 0) receives the batch ids: shipping them to a
         // passive would leak exactly the batch membership the sealed-ID
         // broadcast (§4.0.2) exists to hide.
-        for (ci, w) in writers.iter_mut().enumerate() {
-            let Some(sock) = w.as_mut() else { continue };
-            let for_client = if ci == 0 {
-                spec.clone()
-            } else {
-                RoundSpec { ids: Vec::new(), ..spec.clone() }
-            };
-            if let Err(e) = Frame::Round(for_client).write_to(sock) {
-                eprintln!("serve: client {ci} write failed ({e:#}), marking dropped");
-                *w = None;
+        while let Some(spec) = win.next_start() {
+            net.phase = spec.phase;
+            for (ci, w) in writers.iter_mut().enumerate() {
+                let Some(sock) = w.as_mut() else { continue };
+                let for_client = if ci == 0 {
+                    spec.clone()
+                } else {
+                    RoundSpec { ids: Vec::new(), ..spec.clone() }
+                };
+                if let Err(e) = Frame::Round(for_client).write_to(sock) {
+                    eprintln!("serve: client {ci} write failed ({e:#}), marking dropped");
+                    *w = None;
+                }
             }
+            let mut ob = Outbox::default();
+            aggregator.on_round_start(spec, &mut ob)?;
+            route_server(&mut net, &mut writers, ob, &mut notes, &mut win)?;
         }
-        let mut ob = Outbox::default();
-        aggregator.on_round_start(spec, &mut ob)?;
-        route_server(&mut net, &mut writers, ob, &mut notes)?;
-        let mut idle_probes = 0u32;
-        let mut processed_since_probe = 0u64;
-        loop {
-            let event = match rx.recv_timeout(clock.timeout()) {
-                Ok(ev) => {
-                    let now = std::time::Instant::now();
-                    clock.observe_gap(now - last_event);
-                    last_event = now;
-                    ev
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    // no frame for the stall window: ask the aggregator
-                    // whether recovery can declare the silent clients
-                    // dropped (timeout-based dropout detection). Only
-                    // probe when truly quiescent — a timeout right
-                    // after a burst of traffic is not a dropout. Reset
-                    // the gap anchor so stall windows never feed the
-                    // EWMA (the clock tracks frame cadence, not its
-                    // own timeouts).
-                    last_event = std::time::Instant::now();
-                    let mut ob = Outbox::default();
-                    if processed_since_probe == 0 {
-                        aggregator.on_stall(&mut ob)?;
-                    }
-                    let acted = !ob.msgs.is_empty() || !ob.notes.is_empty();
-                    route_server(&mut net, &mut writers, ob, &mut notes)?;
-                    if acted || processed_since_probe > 0 {
-                        idle_probes = 0;
-                    } else {
-                        idle_probes += 1;
-                        if idle_probes >= MAX_IDLE_PROBES {
-                            bail!(
-                                "protocol stalled: round {} never completed",
-                                spec.round
-                            );
-                        }
-                    }
-                    processed_since_probe = 0;
-                    continue;
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    bail!("all client connections lost")
-                }
-            };
-            match event {
-                Event::Gone(ci, e) => {
-                    // a vanished client is a dropped party, not a server
-                    // error: close its writer and let the stall probe
-                    // (or an already-complete fan-in) handle it
-                    eprintln!("serve: client {ci} disconnected ({e}), marking dropped");
-                    writers[ci] = None;
-                }
-                Event::Frame(ci, Frame::Msg { bytes }) => {
-                    idle_probes = 0;
-                    processed_since_probe += 1;
-                    net.meter(Addr::Client(ci), Addr::Aggregator, bytes.len());
-                    let msg = Msg::decode(&bytes)?;
-                    let mut ob = Outbox::default();
-                    aggregator.on_message(Addr::Client(ci), msg, &mut ob)?;
-                    route_server(&mut net, &mut writers, ob, &mut notes)?;
-                }
-                Event::Frame(_, Frame::Note(n)) => {
-                    idle_probes = 0;
-                    processed_since_probe += 1;
-                    match n {
-                        Note::RoundDone { round } if round == spec.round => {
-                            notes.push(Note::RoundDone { round });
-                            break;
-                        }
-                        Note::Failed { who, error } => bail!("party {who} failed: {error}"),
-                        other => notes.push(other),
-                    }
-                }
-                Event::Frame(ci, f) => bail!("unexpected frame from client {ci}: {f:?}"),
+        let event = match rx.recv_timeout(clock.timeout()) {
+            Ok(ev) => {
+                let now = std::time::Instant::now();
+                clock.observe_gap(now - last_event);
+                last_event = now;
+                ev
             }
+            Err(RecvTimeoutError::Timeout) => {
+                // no frame for the stall window: ask the aggregator
+                // whether recovery can declare the silent clients
+                // dropped (timeout-based dropout detection). Only
+                // probe when truly quiescent — a timeout right
+                // after a burst of traffic is not a dropout. Reset
+                // the gap anchor so stall windows never feed the
+                // EWMA (the clock tracks frame cadence, not its
+                // own timeouts).
+                last_event = std::time::Instant::now();
+                let mut ob = Outbox::default();
+                if processed_since_probe == 0 {
+                    aggregator.on_stall(&mut ob)?;
+                }
+                let acted = !ob.msgs.is_empty() || !ob.notes.is_empty();
+                route_server(&mut net, &mut writers, ob, &mut notes, &mut win)?;
+                if acted || processed_since_probe > 0 {
+                    idle_probes = 0;
+                } else {
+                    idle_probes += 1;
+                    if idle_probes >= MAX_IDLE_PROBES {
+                        bail!(
+                            "protocol stalled: round {} never completed",
+                            win.oldest_in_flight().unwrap_or(0)
+                        );
+                    }
+                }
+                processed_since_probe = 0;
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("all client connections lost")
+            }
+        };
+        match event {
+            Event::Gone(ci, e) => {
+                // a vanished client is a dropped party, not a server
+                // error: close its writer and let the stall probe
+                // (or an already-complete fan-in) handle it
+                eprintln!("serve: client {ci} disconnected ({e}), marking dropped");
+                writers[ci] = None;
+            }
+            Event::Frame(ci, Frame::Msg { bytes }) => {
+                idle_probes = 0;
+                processed_since_probe += 1;
+                net.meter(Addr::Client(ci), Addr::Aggregator, bytes.len());
+                let msg = Msg::decode(&bytes)?;
+                let mut ob = Outbox::default();
+                aggregator.on_message(Addr::Client(ci), msg, &mut ob)?;
+                route_server(&mut net, &mut writers, ob, &mut notes, &mut win)?;
+            }
+            Event::Frame(_, Frame::Note(n)) => {
+                idle_probes = 0;
+                processed_since_probe += 1;
+                match n {
+                    Note::Failed { who, error } => bail!("party {who} failed: {error}"),
+                    n => {
+                        if let Some(n) = win.observe(n) {
+                            if let Note::RoundDone { round } = &n {
+                                // scheduler bookkeeping for the
+                                // server-side aggregator
+                                aggregator.on_round_complete(*round);
+                            }
+                            notes.push(n);
+                        }
+                    }
+                }
+            }
+            Event::Frame(ci, f) => bail!("unexpected frame from client {ci}: {f:?}"),
         }
     }
     for w in writers.iter_mut().flatten() {
         let _ = Frame::Stop.write_to(w);
     }
-    Ok(ServeOutcome { notes, net, metrics: aggregator.take_metrics() })
+    let mut metrics = aggregator.take_metrics();
+    metrics.record_pipeline(win.stats());
+    Ok(ServeOutcome { notes, net, metrics })
 }
 
 /// Run one client party against a serving aggregator. Returns the

@@ -16,10 +16,13 @@
 //! sender id), so arbitrary interleaving across clients is safe.
 //!
 //! Bytes are metered through the shared [`Network`] exactly as the
-//! simulator meters them, and the driver serializes rounds on the
-//! active party's `RoundDone` note — which is why a threaded run
-//! produces bit-identical reports and Table-2 counters to a simulated
-//! one (asserted by `tests/transport_equivalence.rs`).
+//! simulator meters them, and the driver schedules rounds through the
+//! same windowed [`RoundWindow`] (`--rounds-in-flight`; width 1 is the
+//! strictly serial pre-pipeline behavior) keyed on the active party's
+//! `RoundDone` notes — which is why a threaded run produces
+//! bit-identical reports and Table-2 counters to a simulated one at
+//! every window width (asserted by `tests/transport_equivalence.rs`
+//! and `tests/round_pipeline.rs`).
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -30,6 +33,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::messages::Msg;
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+use crate::coordinator::window::RoundWindow;
+use crate::coordinator::Metrics;
 
 use super::transport::{
     harvest, node_of_addr, StallClock, Transport, TransportOutcome, DEFAULT_STALL_CAP,
@@ -46,6 +51,9 @@ enum Envelope {
     /// Quiescence probe (driver → aggregator only): no note arrived for
     /// the stall timeout — check for dropped peers.
     Stall,
+    /// Driver bookkeeping (driver → aggregator only): the scheduler
+    /// observed this round's `RoundDone` ([`Party::on_round_complete`]).
+    Completed(u32),
     /// Orderly shutdown.
     Stop,
 }
@@ -127,6 +135,12 @@ fn run_party(
                 ob.notes.push(Note::Stall { acted, processed: processed_since_probe });
                 processed_since_probe = 0;
             }
+            Envelope::Completed(round) => {
+                // scheduler bookkeeping, not protocol activity: it
+                // neither counts toward the probe suppression nor is
+                // forwarded to the clients
+                party.on_round_complete(round);
+            }
         }
         for (to, msg) in ob.msgs {
             let bytes = msg.encode();
@@ -140,8 +154,9 @@ fn run_party(
     Ok(())
 }
 
-/// One thread per party, channels for transport, rounds serialized on
-/// the active party's `RoundDone` note.
+/// One thread per party, channels for transport, rounds scheduled by
+/// the shared [`RoundWindow`] on the active party's `RoundDone` notes
+/// (up to `--rounds-in-flight` rounds pipelined).
 ///
 /// Dropout detection is timeout-based and *adaptive*: when no note
 /// arrives for the current [`StallClock`] window — the floor stretched
@@ -186,6 +201,7 @@ impl Transport for ThreadedTransport {
         &mut self,
         parties: Vec<Box<dyn Party + 'e>>,
         schedule: &[RoundSpec],
+        window: usize,
     ) -> Result<TransportOutcome> {
         assert_eq!(parties.len(), self.n_clients + 1, "aggregator + clients");
         // enforce the `unsafe impl Sync for Engine` contract at the
@@ -256,68 +272,88 @@ impl Transport for ThreadedTransport {
             let mut failure: Option<String> = None;
             let mut clock = StallClock::new(self.stall_floor, self.stall_cap);
             let mut last_note = std::time::Instant::now();
-            'rounds: for spec in schedule {
-                net.lock().unwrap().phase = spec.phase;
-                if agg_tx.send(Envelope::Round(spec.clone())).is_err() {
-                    failure = Some("aggregator exited early".into());
-                    break 'rounds;
+            let mut win = RoundWindow::new(schedule, window);
+            let mut idle_probes = 0u32;
+            'drive: while !win.done() {
+                // open every round the window allows, in schedule
+                // order; the boundary rides through the aggregator so
+                // each client channel orders it ahead of that round's
+                // first protocol message
+                while let Some(spec) = win.next_start() {
+                    net.lock().unwrap().phase = spec.phase;
+                    if agg_tx.send(Envelope::Round(spec.clone())).is_err() {
+                        failure = Some("aggregator exited early".into());
+                        break 'drive;
+                    }
                 }
-                let mut idle_probes = 0u32;
-                loop {
-                    let note = match note_rx.recv_timeout(clock.timeout()) {
-                        Ok(note) => {
-                            // feed the adaptive window with the real
-                            // inter-note cadence of this run
-                            let now = std::time::Instant::now();
-                            clock.observe_gap(now - last_note);
-                            last_note = now;
-                            note
+                let note = match note_rx.recv_timeout(clock.timeout()) {
+                    Ok(note) => {
+                        // feed the adaptive window with the real
+                        // inter-note cadence of this run
+                        let now = std::time::Instant::now();
+                        clock.observe_gap(now - last_note);
+                        last_note = now;
+                        note
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        // quiescent: probe the aggregator for
+                        // dropped peers; its Note::Stall reply
+                        // reports whether anything moved. Reset the
+                        // gap anchor so stall windows never feed
+                        // the EWMA — the clock must track the run's
+                        // note cadence, not its own timeouts.
+                        last_note = std::time::Instant::now();
+                        if agg_tx.send(Envelope::Stall).is_err() {
+                            failure = Some("aggregator exited early".into());
+                            break 'drive;
                         }
-                        Err(RecvTimeoutError::Timeout) => {
-                            // quiescent: probe the aggregator for
-                            // dropped peers; its Note::Stall reply
-                            // reports whether anything moved. Reset the
-                            // gap anchor so stall windows never feed
-                            // the EWMA — the clock must track the run's
-                            // note cadence, not its own timeouts.
-                            last_note = std::time::Instant::now();
-                            if agg_tx.send(Envelope::Stall).is_err() {
-                                failure = Some("aggregator exited early".into());
-                                break 'rounds;
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        failure = Some(format!(
+                            "all parties exited with round {:?} in flight",
+                            win.oldest_in_flight()
+                        ));
+                        break 'drive;
+                    }
+                };
+                match note {
+                    Note::Failed { who, error } => {
+                        failure = Some(format!("party {who} failed: {error}"));
+                        break 'drive;
+                    }
+                    Note::Stall { acted, processed } => {
+                        // transport bookkeeping, never a result note
+                        if acted || processed > 0 {
+                            idle_probes = 0;
+                        } else {
+                            idle_probes += 1;
+                            if idle_probes >= MAX_IDLE_PROBES {
+                                failure = Some(format!(
+                                    "protocol stalled: round {} never completed",
+                                    win.oldest_in_flight().unwrap_or(0)
+                                ));
+                                break 'drive;
                             }
-                            continue;
                         }
-                        Err(RecvTimeoutError::Disconnected) => {
-                            failure =
-                                Some(format!("all parties exited in round {}", spec.round));
-                            break 'rounds;
+                    }
+                    note => {
+                        // completions reset the idle-probe budget (a
+                        // round boundary, like the per-round reset the
+                        // serial driver had) and are relayed to the
+                        // aggregator as scheduler bookkeeping
+                        if matches!(note, Note::RoundDone { .. }) {
+                            idle_probes = 0;
                         }
-                    };
-                    match &note {
-                        Note::RoundDone { round } if *round == spec.round => {
-                            notes.push(note);
-                            break;
-                        }
-                        Note::Failed { who, error } => {
-                            failure = Some(format!("party {who} failed: {error}"));
-                            break 'rounds;
-                        }
-                        Note::Stall { acted, processed } => {
-                            // transport bookkeeping, never a result note
-                            if *acted || *processed > 0 {
-                                idle_probes = 0;
-                            } else {
-                                idle_probes += 1;
-                                if idle_probes >= MAX_IDLE_PROBES {
-                                    failure = Some(format!(
-                                        "protocol stalled: round {} never completed",
-                                        spec.round
-                                    ));
-                                    break 'rounds;
+                        if let Some(n) = win.observe(note) {
+                            if let Note::RoundDone { round } = &n {
+                                if agg_tx.send(Envelope::Completed(*round)).is_err() {
+                                    failure = Some("aggregator exited early".into());
+                                    break 'drive;
                                 }
                             }
+                            notes.push(n);
                         }
-                        _ => notes.push(note),
                     }
                 }
             }
@@ -335,7 +371,9 @@ impl Transport for ThreadedTransport {
                 .map_err(|_| anyhow!("network still shared after join"))?
                 .into_inner()
                 .map_err(|_| anyhow!("network mutex poisoned"))?;
-            harvest(finished, notes, net)
+            let mut driver = Metrics::new();
+            driver.record_pipeline(win.stats());
+            harvest(finished, notes, net, driver)
         })?;
 
         Ok(outcome)

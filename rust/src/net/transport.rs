@@ -19,6 +19,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::messages::Msg;
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+use crate::coordinator::window::RoundWindow;
 use crate::coordinator::Metrics;
 use crate::model::ModelParams;
 
@@ -264,19 +265,23 @@ pub struct TransportOutcome {
     pub final_params: ModelParams,
 }
 
-/// Runs a full party set over a round schedule.
+/// Runs a full party set over a round schedule with up to `window`
+/// rounds in flight (`--rounds-in-flight`; 1 = strictly serial).
 ///
 /// `parties` is indexed by node: entry 0 is the aggregator, entry
 /// `i + 1` is client `i`. Implementations must (a) preserve per-sender
-/// FIFO message ordering, (b) start round *k + 1* only after round
-/// *k*'s `RoundDone` note, and (c) meter every protocol message through
-/// a [`Network`] — under those three rules every transport produces
-/// bit-identical results.
+/// FIFO message ordering, (b) drive the schedule through a
+/// [`RoundWindow`] — rounds start in schedule order, at most `window`
+/// in flight, honoring its setup/rotation/phase barriers and the
+/// dropout drain — and (c) meter every protocol message through a
+/// [`Network`] — under those three rules every transport produces
+/// bit-identical results at every window width.
 pub trait Transport {
     fn execute<'e>(
         &mut self,
         parties: Vec<Box<dyn Party + 'e>>,
         schedule: &[RoundSpec],
+        window: usize,
     ) -> Result<TransportOutcome>;
 }
 
@@ -295,13 +300,15 @@ pub(crate) fn node_of_addr(a: Addr) -> usize {
     }
 }
 
-/// Harvest metrics + final params from a finished party set.
+/// Harvest metrics + final params from a finished party set, folding
+/// in the driver-side meters (the scheduler's pipeline counters).
 pub(crate) fn harvest<'e>(
     mut parties: Vec<Box<dyn Party + 'e>>,
     notes: Vec<Note>,
     net: Network,
+    driver: Metrics,
 ) -> Result<TransportOutcome> {
-    let mut metrics = Metrics::new();
+    let mut metrics = driver;
     let mut final_params = None;
     for p in parties.iter_mut() {
         metrics.merge(p.take_metrics());
@@ -335,60 +342,102 @@ impl Transport for SimTransport {
         &mut self,
         mut parties: Vec<Box<dyn Party + 'e>>,
         schedule: &[RoundSpec],
+        window: usize,
     ) -> Result<TransportOutcome> {
         assert_eq!(parties.len(), self.n_clients + 1, "aggregator + clients");
         let mut net = Network::new(self.n_clients);
         let mut notes: Vec<Note> = Vec::new();
+        let mut win = RoundWindow::new(schedule, window);
 
-        let flush = |net: &mut Network, from: Addr, ob: Outbox, notes: &mut Vec<Note>| {
+        /// Route an outbox; every note feeds the scheduler
+        /// ([`RoundWindow::observe`]) before it is recorded. Returns
+        /// the rounds whose completion was observed so the caller can
+        /// notify the aggregator ([`Party::on_round_complete`]).
+        fn flush(
+            net: &mut Network,
+            from: Addr,
+            ob: Outbox,
+            notes: &mut Vec<Note>,
+            win: &mut RoundWindow,
+        ) -> Vec<u32> {
+            let mut completed = Vec::new();
             for (to, msg) in ob.msgs {
                 net.send(from, to, msg.encode());
             }
-            notes.extend(ob.notes);
-        };
-
-        for spec in schedule {
-            net.phase = spec.phase;
-            let done_before = notes.len();
-            // aggregator first (it opens setup rounds), then clients
-            for (idx, p) in parties.iter_mut().enumerate() {
-                let mut ob = Outbox::default();
-                p.on_round_start(spec, &mut ob)?;
-                flush(&mut net, addr_of_node(idx), ob, &mut notes);
+            for n in ob.notes {
+                if let Some(n) = win.observe(n) {
+                    if let Note::RoundDone { round } = &n {
+                        completed.push(*round);
+                    }
+                    notes.push(n);
+                }
             }
-            loop {
-                // pump the global FIFO dry
-                while let Some((from, to, bytes)) = net.pop() {
-                    let msg = Msg::decode(&bytes)?;
-                    let idx = node_of_addr(to);
-                    let mut ob = Outbox::default();
-                    parties[idx].on_message(from, msg, &mut ob)?;
-                    flush(&mut net, to, ob, &mut notes);
-                }
-                let done = notes[done_before..]
-                    .iter()
-                    .any(|n| matches!(n, Note::RoundDone { round } if *round == spec.round));
-                if done {
-                    break;
-                }
-                // quiescent with the round incomplete: a deterministic
-                // stall. Probe the parties (aggregator first) so dropout
-                // recovery can declare the silent peers and resume; if
-                // nobody produces traffic, the protocol is truly stuck.
-                let mut progressed = false;
+            completed
+        }
+
+        loop {
+            let mut progress = false;
+            // open every round the window allows, in schedule order —
+            // aggregator first (it opens setup rounds), then clients
+            while let Some(spec) = win.next_start() {
+                progress = true;
+                net.phase = spec.phase;
+                let mut completed = Vec::new();
                 for (idx, p) in parties.iter_mut().enumerate() {
                     let mut ob = Outbox::default();
-                    p.on_stall(&mut ob)?;
-                    progressed |= !ob.msgs.is_empty() || !ob.notes.is_empty();
-                    flush(&mut net, addr_of_node(idx), ob, &mut notes);
+                    p.on_round_start(spec, &mut ob)?;
+                    completed.extend(flush(&mut net, addr_of_node(idx), ob, &mut notes, &mut win));
                 }
-                if !progressed {
-                    bail!("protocol stalled: round {} never completed", spec.round);
+                for r in completed {
+                    parties[0].on_round_complete(r);
                 }
+            }
+            // pump the global FIFO dry
+            while let Some((from, to, bytes)) = net.pop() {
+                progress = true;
+                let msg = Msg::decode(&bytes)?;
+                let idx = node_of_addr(to);
+                let mut ob = Outbox::default();
+                parties[idx].on_message(from, msg, &mut ob)?;
+                let done = flush(&mut net, to, ob, &mut notes, &mut win);
+                for r in done {
+                    parties[0].on_round_complete(r);
+                }
+            }
+            if win.done() {
+                break;
+            }
+            if progress {
+                // completions during the pump may have opened the
+                // window: try to start the next rounds before probing
+                continue;
+            }
+            // quiescent with rounds incomplete: a deterministic stall.
+            // Probe the parties (aggregator first) so dropout recovery
+            // can declare the silent peers and resume; if nobody
+            // produces traffic, the protocol is truly stuck.
+            let mut progressed = false;
+            let mut completed = Vec::new();
+            for (idx, p) in parties.iter_mut().enumerate() {
+                let mut ob = Outbox::default();
+                p.on_stall(&mut ob)?;
+                progressed |= !ob.msgs.is_empty() || !ob.notes.is_empty();
+                completed.extend(flush(&mut net, addr_of_node(idx), ob, &mut notes, &mut win));
+            }
+            for r in completed {
+                parties[0].on_round_complete(r);
+            }
+            if !progressed {
+                bail!(
+                    "protocol stalled: round {} never completed",
+                    win.oldest_in_flight().expect("an incomplete round is in flight")
+                );
             }
         }
 
-        harvest(parties, notes, net)
+        let mut driver = Metrics::new();
+        driver.record_pipeline(win.stats());
+        harvest(parties, notes, net, driver)
     }
 }
 

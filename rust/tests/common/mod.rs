@@ -13,7 +13,8 @@ use vfl::net::{Addr, FaultPlan, Network, Phase};
 use vfl::secagg::{setup_all, ClientSession};
 
 /// The standard small experiment: reference backend, 6 training rounds
-/// (crossing one K = 5 key-rotation boundary), one test round.
+/// (crossing one K = 5 key-rotation boundary), one test round. Applies
+/// the `VFL_ROUNDS_IN_FLIGHT` CI axis (see [`apply_env_window`]).
 pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> RunConfig {
     let mut c = RunConfig::test(dataset).unwrap();
     c.security = mode;
@@ -21,6 +22,24 @@ pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> R
     c.transport = transport;
     c.train_rounds = 6;
     c.test_rounds = 1;
+    apply_env_window(c)
+}
+
+/// CI window-matrix hook: when `VFL_ROUNDS_IN_FLIGHT` is set, every
+/// fixture-built run uses that round-window width, so the pipelined
+/// scheduler is exercised by the same equivalence suites that prove
+/// the serial one (bit-identity makes the override invisible to every
+/// assertion — including the dropout suites, whose crash runs and
+/// blank twins both drain the window identically).
+pub fn apply_env_window(mut c: RunConfig) -> RunConfig {
+    if let Ok(w) = std::env::var("VFL_ROUNDS_IN_FLIGHT") {
+        // a set-but-unparseable value must fail the suite, not
+        // silently run the serial path CI thinks it is NOT running
+        c.rounds_in_flight = w
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("bad VFL_ROUNDS_IN_FLIGHT {w:?}: {e}"));
+    }
     c
 }
 

@@ -278,7 +278,14 @@ fn tcp_recovery_matches_sim() {
         let aggregator = parties.remove(0);
         drop(parties);
         let clock = StallClock::from_config(server_cfg.stall_timeout_ms, server_cfg.stall_cap_ms);
-        let out = tcp::serve_on(listener, aggregator, &built.schedule, n_clients, clock)?;
+        let out = tcp::serve_on(
+            listener,
+            aggregator,
+            &built.schedule,
+            n_clients,
+            clock,
+            server_cfg.rounds_in_flight,
+        )?;
         Ok::<_, anyhow::Error>((summarize(&built.schedule, &built.test_labels, &out.notes), out))
     });
 

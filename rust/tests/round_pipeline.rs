@@ -1,0 +1,248 @@
+//! The windowed round scheduler's tentpole invariants
+//! (`--rounds-in-flight`):
+//!
+//! * **Bit-identity across window widths.** W ∈ {1, 2, 4} produce
+//!   bit-identical predictions, parameters, losses, accuracy, *and*
+//!   per-(phase, node, direction) Table-2 byte counters, on the
+//!   simulator, the threaded transport, and TCP — for the monolithic
+//!   path and the chunked shard-parallel streaming pipeline alike.
+//!   Rounds start in schedule order; setup/rotation rounds and phase
+//!   boundaries are barriers; training rounds chain through the active
+//!   party's SGD data dependency — so a wider window can only shrink
+//!   idle gaps, never change a value.
+//! * **W = 1 is the serial driver.** The width-1 run is the
+//!   pre-refactor behavior bit-for-bit (it *is* the baseline every
+//!   other width is compared against).
+//! * **Dropout drains the window.** A crash mid-window declares the
+//!   client dropped, the aggregator's `WindowDrain` note pins the
+//!   scheduler to one round in flight, and the recovered run stays
+//!   bit-identical to its zero-contribution blank twin and to the
+//!   serial (W = 1) crash run.
+//! * **Overlap is real and measured.** With W > 1 the pipeline
+//!   counters report overlapped round starts (testing rounds are
+//!   mutually independent), and with W = 1 they report none.
+
+mod common;
+
+use common::{
+    assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg,
+};
+use vfl::coordinator::{
+    build, run_experiment, summarize, RunConfig, RunReport, SecurityMode, TransportKind,
+};
+use vfl::net::{tcp, Fault, FaultPlan, StallClock};
+
+const WIDTHS: [usize; 3] = [1, 2, 4];
+
+/// Fixture config with the window pinned back to serial: this suite
+/// sweeps widths itself, so the `VFL_ROUNDS_IN_FLIGHT` CI axis (which
+/// `run_cfg` applies) must not skew its W = 1 baselines.
+fn secure_cfg(transport: TransportKind) -> RunConfig {
+    let mut c = run_cfg("banking", SecurityMode::SecureExact, transport);
+    c.rounds_in_flight = 1;
+    c
+}
+
+fn with_chunks(mut c: RunConfig) -> RunConfig {
+    c.chunk_words = Some(1000);
+    c.shards = 4;
+    c.agg_workers = 3;
+    c
+}
+
+/// Acceptance criterion: the window sweep is invisible in every report
+/// bit and every Table-2 counter, monolithic and chunked, sim and
+/// threaded. More test rounds than the default so the windowed testing
+/// phase genuinely overlaps.
+#[test]
+fn window_sweep_bit_identical_on_sim_and_threaded() {
+    for chunked in [false, true] {
+        let mk = |transport| {
+            let mut c = secure_cfg(transport);
+            // three full testing batches need ≥ 3·256 test rows (the
+            // 20% split of 4096), so the testing window really fills
+            c.n_rows = 4096;
+            c.test_rounds = 3;
+            if chunked {
+                c = with_chunks(c);
+            }
+            c
+        };
+        let mut baseline: Option<RunReport> = None;
+        for transport in [TransportKind::Sim, TransportKind::Threaded] {
+            for width in WIDTHS {
+                let mut c = mk(transport);
+                c.rounds_in_flight = width;
+                let run = run_experiment(c, None).unwrap();
+                match &baseline {
+                    None => baseline = Some(run), // sim, W = 1: the serial driver
+                    Some(b) => {
+                        let what = format!("chunked={chunked} {transport:?} W={width}");
+                        assert_reports_identical(b, &run, &what);
+                        assert_table2_identical(&b.net, &run.net);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The plain and float-masked modes ride the same scheduler: per-round
+/// contexts isolate their float fan-ins, and the aggregator still sums
+/// in client order, so the sweep is bit-identical there too.
+#[test]
+fn window_sweep_bit_identical_in_other_security_modes() {
+    for mode in [SecurityMode::Plain, SecurityMode::SecureFloat] {
+        let mut baseline: Option<RunReport> = None;
+        for width in WIDTHS {
+            let mut c = run_cfg("banking", mode, TransportKind::Sim);
+            c.n_rows = 4096; // fit three full testing batches
+            c.test_rounds = 3;
+            c.rounds_in_flight = width; // overrides the CI env axis
+            let run = run_experiment(c, None).unwrap();
+            match &baseline {
+                None => baseline = Some(run),
+                Some(b) => {
+                    assert_reports_identical(b, &run, &format!("{mode:?} W={width}"));
+                    assert_table2_identical(&b.net, &run.net);
+                }
+            }
+        }
+    }
+}
+
+/// The TCP leg: a real socket run at every window width produces the
+/// same losses and predictions as the serial simulated run.
+#[test]
+fn tcp_window_sweep_matches_sim() {
+    let mut cfg = secure_cfg(TransportKind::Sim);
+    cfg.train_rounds = 2; // keep the socket runs short
+    cfg.n_rows = 4096; // fit two full testing batches
+    cfg.test_rounds = 2;
+    let sim = run_experiment(cfg.clone(), None).unwrap();
+
+    for width in WIDTHS {
+        let mut cfg = cfg.clone();
+        cfg.rounds_in_flight = width;
+        // bind port 0 first so there is no port race: clients connect
+        // to the real port after the listener exists
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let n_clients = cfg.model.n_clients();
+
+        let server_cfg = cfg.clone();
+        let server = std::thread::spawn(move || {
+            let built = build(&server_cfg, None).unwrap();
+            let mut parties = built.parties;
+            let aggregator = parties.remove(0);
+            drop(parties);
+            let clock =
+                StallClock::from_config(server_cfg.stall_timeout_ms, server_cfg.stall_cap_ms);
+            let out = tcp::serve_on(
+                listener,
+                aggregator,
+                &built.schedule,
+                n_clients,
+                clock,
+                server_cfg.rounds_in_flight,
+            )?;
+            Ok::<_, anyhow::Error>((
+                summarize(&built.schedule, &built.test_labels, &out.notes),
+                out,
+            ))
+        });
+
+        let mut clients = Vec::new();
+        for client in 0..n_clients {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            clients.push(std::thread::spawn(move || {
+                let built = build(&cfg, None).unwrap();
+                let mut parties = built.parties;
+                let party = parties.remove(client + 1);
+                drop(parties);
+                tcp::join(&addr, client, party)
+            }));
+        }
+
+        let (summary, out) = server.join().unwrap().unwrap();
+        for c in clients {
+            c.join().unwrap().unwrap();
+        }
+        assert_eq!(summary.losses, sim.losses, "W={width}: TCP losses must match sim");
+        assert_eq!(summary.predictions, sim.predictions, "W={width}: TCP predictions");
+        assert_eq!(summary.test_accuracy, sim.test_accuracy, "W={width}");
+        if width > 1 {
+            assert!(
+                out.metrics.pipeline().max_in_flight >= 1,
+                "W={width}: the serve loop records pipeline stats"
+            );
+        }
+    }
+}
+
+/// Acceptance criterion: a dropout mid-window drains the scheduler to
+/// one round in flight and recovery semantics are unchanged — the
+/// crash run at W ∈ {2, 4} is bit-identical to its zero-contribution
+/// blank twin and to the serial crash run.
+#[test]
+fn dropout_mid_window_drains_and_matches_twin() {
+    // client 3 is blanked (zero feature rows — the algebraic-twin
+    // device: its pre-crash rounds contribute masked zeros, so the
+    // whole run can be compared bit-for-bit against the twin where it
+    // stays alive) and crashes mid-round-2, after its activation but
+    // before its gradient, in the middle of the training phase the
+    // window pipelines
+    let plan =
+        FaultPlan::blank(&[3]).with(3, Fault::Crash { round: 2, after_sends: 1 });
+    let mut serial_cfg = dropout_cfg(3, Some(plan.clone()), TransportKind::Sim);
+    serial_cfg.rounds_in_flight = 1; // the serial baseline, env axis or not
+    let serial = run_experiment(serial_cfg, None).unwrap();
+    for width in [2usize, 4] {
+        let mk = |p: Option<FaultPlan>| {
+            let mut c = dropout_cfg(3, p, TransportKind::Sim);
+            c.rounds_in_flight = width;
+            c
+        };
+        let crash = run_experiment(mk(Some(plan.clone())), None).unwrap();
+        let twin = run_experiment(mk(Some(plan.blank_twin())), None).unwrap();
+        assert_reports_identical(&crash, &twin, &format!("W={width} crash vs blank twin"));
+        assert_reports_identical(&crash, &serial, &format!("W={width} crash vs serial crash"));
+        // the threaded transport agrees bit-for-bit
+        let mut c = dropout_cfg(3, Some(plan.clone()), TransportKind::Threaded);
+        c.rounds_in_flight = width;
+        let thr = run_experiment(c, None).unwrap();
+        assert_reports_identical(&crash, &thr, &format!("W={width} crash sim vs threaded"));
+    }
+}
+
+/// The pipeline counters: a serial run reports zero overlap; a W = 4
+/// run with several independent testing rounds reports overlapped
+/// starts and a deeper in-flight peak.
+#[test]
+fn pipeline_counters_measure_the_overlap() {
+    let mut serial = secure_cfg(TransportKind::Sim);
+    serial.n_rows = 4096; // fit three full testing batches
+    serial.test_rounds = 3;
+    let serial = run_experiment(serial, None).unwrap();
+    let p1 = serial.metrics.pipeline();
+    assert!(p1.rounds_started >= 10, "setup + 6 train + 3 test: {}", p1.rounds_started);
+    assert_eq!(p1.overlapped_starts, 0, "serial runs never overlap");
+    assert_eq!(p1.max_in_flight, 1);
+
+    let mut wide = secure_cfg(TransportKind::Sim);
+    wide.n_rows = 4096;
+    wide.test_rounds = 3;
+    wide.rounds_in_flight = 4;
+    let wide = run_experiment(wide, None).unwrap();
+    let p4 = wide.metrics.pipeline();
+    assert_eq!(p4.rounds_started, p1.rounds_started, "same schedule");
+    assert!(
+        p4.overlapped_starts >= 2,
+        "3 independent test rounds must pipeline: {}",
+        p4.overlapped_starts
+    );
+    assert!(p4.max_in_flight >= 3, "testing window fills: {}", p4.max_in_flight);
+    // and the overlap changed no output bit
+    assert_reports_identical(&serial, &wide, "serial vs W=4");
+}
