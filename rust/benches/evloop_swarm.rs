@@ -1,0 +1,93 @@
+//! Bench: the event-loop transport's **C10K scaling curve** — one
+//! readiness-driven aggregator thread vs a sweep of concurrent client
+//! counts over real localhost sockets, up to the acceptance-criteria
+//! 10 240. Each point is a full `vfl-sa swarm` run: every payload
+//! frame checksummed, peak live connections and peak per-connection
+//! queue depth metered, process RSS high-water mark recorded. Emits a
+//! machine-readable `BENCH_evloop.json` next to the working directory
+//! so the perf trajectory has data points.
+//!
+//! The claim the curve substantiates: wall time grows with N, but the
+//! peak bytes any single connection buffers does not — per-client
+//! memory is flat because per-connection state is one partial frame
+//! plus one bounded outbound queue, not a thread stack.
+//!
+//!     cargo bench --bench evloop_swarm
+//!     (VFL_BENCH_QUICK=1 for a 256/1024 sweep,
+//!      VFL_BENCH_POLL=1 to pin the portable poll(2) fallback)
+
+#[cfg(unix)]
+fn main() -> anyhow::Result<()> {
+    use std::io::Write;
+
+    use vfl::net::evloop::swarm::{self, SwarmCfg, SwarmReport};
+    use vfl::net::evloop::PollerKind;
+
+    let quick = std::env::var("VFL_BENCH_QUICK").is_ok();
+    let poller = if std::env::var("VFL_BENCH_POLL").is_ok() {
+        PollerKind::PollFallback
+    } else {
+        PollerKind::Auto
+    };
+    let sweep: &[usize] =
+        if quick { &[256, 1024] } else { &[256, 1024, 4096, 10_240] };
+
+    let mut reports: Vec<SwarmReport> = Vec::new();
+    println!(
+        "{:>8} {:>10} {:>10} {:>12} {:>14} {:>12} {:>8}",
+        "clients", "wall_ms", "peak_conn", "peak_buf_B", "bytes_in", "rss_kB", "poller"
+    );
+    for &clients in sweep {
+        let cfg = SwarmCfg { clients, poller, ..SwarmCfg::default() };
+        let r = swarm::run(&cfg)?;
+        anyhow::ensure!(
+            r.verified(),
+            "swarm checksum mismatch at {clients} clients: got {:#x}, expected {:#x}",
+            r.checksum,
+            r.expected_checksum
+        );
+        println!(
+            "{:>8} {:>10.1} {:>10} {:>12} {:>14} {:>12} {:>8}",
+            r.clients,
+            r.wall_ms,
+            r.peak_live_connections,
+            r.peak_conn_buffered_bytes,
+            r.bytes_received,
+            r.rss_peak_kb,
+            r.poller
+        );
+        reports.push(r);
+    }
+
+    let mut json = String::from("{\n  \"evloop_swarm\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        json.push_str("    ");
+        json.push_str(&r.json());
+        json.push_str(if i + 1 < reports.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_evloop.json";
+    std::fs::File::create(path)?.write_all(json.as_bytes())?;
+    println!("\nwrote {path}");
+
+    // the flat-memory claim, enforced on every run of this bench: the
+    // largest sweep point may not buffer more per connection than the
+    // smallest, beyond one frame of slack
+    if let (Some(first), Some(last)) = (reports.first(), reports.last()) {
+        let slack = 4 + 1 + 6 + 8 * first.payload_words as u64;
+        anyhow::ensure!(
+            last.peak_conn_buffered_bytes <= first.peak_conn_buffered_bytes + slack,
+            "per-connection buffering grew with client count: {} B at {} clients vs {} B at {}",
+            last.peak_conn_buffered_bytes,
+            last.clients,
+            first.peak_conn_buffered_bytes,
+            first.clients
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("evloop_swarm needs a unix platform (nonblocking sockets)");
+}

@@ -2,10 +2,37 @@
 //! (B,8)·(8,8) dot product under secure aggregation vs Paillier (`phe`)
 //! vs BFV (SEAL), for batch sizes 1…256 (log-scale y in the paper).
 //!
+//! Emits a machine-readable `BENCH_fig2.json` next to the working
+//! directory so the perf trajectory has data points.
+//!
 //!     cargo bench --bench fig2_sa_vs_he
 //!     (VFL_BENCH_QUICK=1 for small HE parameters)
 
-use vfl::bench::fig2;
+use std::io::Write;
+
+use vfl::bench::fig2::{self, Fig2Point};
+
+/// Hand-rolled JSON (no serde in the dependency tree; same convention
+/// as `BENCH_streaming.json`): one object per (scheme, batch) point.
+fn fig2_json(pts: &[Fig2Point], quick: bool) -> String {
+    let mut out = format!("{{\n  \"quick\": {quick},\n  \"fig2\": [\n");
+    for (i, p) in pts.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"scheme\": \"{}\", \"batch\": {}, \"mean_ms\": {:.6}, \
+             \"std_ms\": {:.6}, \"min_ms\": {:.6}, \"max_ms\": {:.6}, \"n\": {}}}{}\n",
+            p.scheme,
+            p.batch,
+            p.stats.mean,
+            p.stats.std,
+            p.stats.min,
+            p.stats.max,
+            p.stats.n,
+            if i + 1 < pts.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
 
 fn main() {
     let quick = std::env::var("VFL_BENCH_QUICK").is_ok();
@@ -17,6 +44,12 @@ fn main() {
     );
     let pts = fig2::sweep(&batches, quick);
     fig2::print_sweep(&pts);
+    let json = fig2_json(&pts, quick);
+    let path = "BENCH_fig2.json";
+    std::fs::File::create(path)
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+        .expect("write BENCH_fig2.json");
+    println!("\nwrote {path}");
     println!("\npaper's headline: SA is 9.1e2 … 3.8e4 × faster than (un-vectorized Python) HE.");
     println!("Our HE comparators are optimized Rust, so the honest Rust-vs-Rust band is smaller;");
     println!("scaled to the paper's Python baselines (~100x slower per big-int op), the band matches.");

@@ -2,6 +2,8 @@
 //! passive × training / testing, total + security overhead), averaged
 //! over 10 repetitions of {1 setup phase + 5 training rounds + testing}
 //! with batch 256 and key rotation K=5 — the paper's §6.3 setup.
+//! Emits a machine-readable `BENCH_table1.json` next to the working
+//! directory so the perf trajectory has data points.
 //!
 //!     cargo bench --bench table1_cpu_time
 //!     (VFL_BENCH_REFERENCE=1 to skip the PJRT backend,
@@ -10,9 +12,48 @@
 //!      per-row "pipeline:" line reports the overlap and the idle gap
 //!      the window closed)
 
-use vfl::bench::tables;
+use std::io::Write;
+
+use vfl::bench::tables::{self, Table1Row};
+use vfl::bench::Stats;
 use vfl::model::ModelConfig;
 use vfl::runtime::Engine;
+
+fn stats_json(s: &Stats) -> String {
+    format!(
+        "{{\"mean\": {:.3}, \"std\": {:.3}, \"min\": {:.3}, \"max\": {:.3}, \"n\": {}}}",
+        s.mean, s.std, s.min, s.max, s.n
+    )
+}
+
+/// Hand-rolled JSON (no serde in the dependency tree; same convention
+/// as `BENCH_streaming.json`): one object per dataset, CPU ms as
+/// mean/std/min/max over the repetitions.
+fn table1_json(rows: &[Table1Row], backend: &str) -> String {
+    let mut out = format!("{{\n  \"backend\": \"{backend}\",\n  \"table1\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"window\": {}, \
+             \"active_train_total_ms\": {}, \"active_train_overhead_ms\": {}, \
+             \"active_test_total_ms\": {}, \"active_test_overhead_ms\": {}, \
+             \"passive_train_total_ms\": {}, \"passive_train_overhead_ms\": {}, \
+             \"passive_test_total_ms\": {}, \"passive_test_overhead_ms\": {}}}{}\n",
+            r.dataset,
+            r.window,
+            stats_json(&r.active_train_total),
+            stats_json(&r.active_train_overhead),
+            stats_json(&r.active_test_total),
+            stats_json(&r.active_test_overhead),
+            stats_json(&r.passive_train_total),
+            stats_json(&r.passive_train_overhead),
+            stats_json(&r.passive_test_total),
+            stats_json(&r.passive_test_overhead),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
 
 fn main() -> anyhow::Result<()> {
     let reference = std::env::var("VFL_BENCH_REFERENCE").is_ok();
@@ -34,6 +75,10 @@ fn main() -> anyhow::Result<()> {
         rows.push(tables::table1(ds, reps, engine.as_ref(), window)?);
     }
     tables::print_table1(&rows);
+    let json = table1_json(&rows, if reference { "reference" } else { "pjrt" });
+    let path = "BENCH_table1.json";
+    std::fs::File::create(path)?.write_all(json.as_bytes())?;
+    println!("\nwrote {path}");
     println!("\npaper's Table 1 for comparison (their testbed, Flower VCE):");
     println!("  Banking  active 1162±527/198±12 train, 325±15/197±12 test; passive 152±6/116±7, 139±6/114±7");
     println!("  Adult    active  814±496/202±9  train, 292±12/200±10 test; passive 165±14/120±13, 148±16/118±13");

@@ -34,11 +34,11 @@ pub enum BackendKind {
 
 /// Which transport carries the protocol messages.
 ///
-/// Both run the identical [`Party`](super::party::Party) machines and
-/// produce bit-identical reports; they differ only in who schedules
-/// the work. (Cross-process TCP runs use `vfl-sa serve`/`join`, which
-/// split one party set across processes instead of configuring it
-/// here.)
+/// All of them run the identical [`Party`](super::party::Party)
+/// machines and produce bit-identical reports; they differ only in who
+/// schedules the work. (Cross-process TCP runs use `vfl-sa
+/// serve`/`join`, which split one party set across processes instead
+/// of configuring it here.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TransportKind {
     /// Single-threaded deterministic simulation with exact byte
@@ -46,6 +46,11 @@ pub enum TransportKind {
     Sim,
     /// One OS thread per party, channels in between.
     Threaded,
+    /// Real localhost sockets multiplexed on a single readiness-driven
+    /// event-loop thread (`--evloop`; unix only). The aggregator runs
+    /// the nonblocking `net::evloop` server while each client keeps
+    /// one lightweight socket thread — the C10K-capable path.
+    Evloop,
 }
 
 /// A full experiment configuration.

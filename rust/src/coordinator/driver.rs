@@ -420,6 +420,26 @@ impl<'e> Experiment<'e> {
             (TransportKind::Threaded, Some(plan)) => {
                 FaultyTransport::new(threaded(), plan).execute(parties, &schedule, window)?
             }
+            #[cfg(unix)]
+            (TransportKind::Evloop, plan) => {
+                let mut t = crate::net::EvloopTransport::new(n_clients);
+                if let Some(ms) = cfg.stall_timeout_ms {
+                    t = t.with_stall_timeout(std::time::Duration::from_millis(ms));
+                }
+                if let Some(ms) = cfg.stall_cap_ms {
+                    t = t.with_stall_cap(std::time::Duration::from_millis(ms));
+                }
+                match plan {
+                    None => t.execute(parties, &schedule, window)?,
+                    Some(plan) => {
+                        FaultyTransport::new(t, plan).execute(parties, &schedule, window)?
+                    }
+                }
+            }
+            #[cfg(not(unix))]
+            (TransportKind::Evloop, _) => {
+                anyhow::bail!("the evloop transport needs a unix platform (nonblocking sockets)")
+            }
         };
         let s = summarize(&schedule, &test_labels, &outcome.notes);
         Ok(RunReport {

@@ -72,6 +72,16 @@ pub struct Metrics {
     /// not resident — kept apart from `peak_buffered` so the RAM claim
     /// stays honest.
     peak_spilled: HashMap<Node, u64>,
+    /// Peak simultaneously-live socket connections at a node — the
+    /// event-loop transport's concurrency meter (the C10K claim is
+    /// "this reaches 10k+ on one aggregator process").
+    peak_connections: HashMap<Node, u64>,
+    /// Peak bytes any *single* connection at a node held across its
+    /// partial-frame reassembly buffer and bounded outbound queue —
+    /// the per-client memory claim of the event-loop transport (flat
+    /// in the client count is what makes the concurrency meter above
+    /// affordable).
+    peak_conn_buffered: HashMap<Node, u64>,
     /// Driver-side round-pipelining counters (see [`PipelineStats`]).
     pipeline: PipelineStats,
 }
@@ -144,6 +154,33 @@ impl Metrics {
         self.peak_spilled.get(&node).copied().unwrap_or(0)
     }
 
+    /// Record the current count of live connections multiplexed at a
+    /// node; the meter keeps the maximum ever observed.
+    pub fn record_connections(&mut self, node: Node, current: u64) {
+        let peak = self.peak_connections.entry(node).or_default();
+        *peak = (*peak).max(current);
+    }
+
+    /// Peak simultaneously-live connections observed at `node` (0 if
+    /// never metered — only the event-loop transport meters this).
+    pub fn peak_connections(&self, node: Node) -> u64 {
+        self.peak_connections.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Record the current buffered bytes (read reassembly + outbound
+    /// queue) of one connection at a node; the meter keeps the
+    /// maximum any single connection ever held.
+    pub fn record_conn_buffered(&mut self, node: Node, current_bytes: u64) {
+        let peak = self.peak_conn_buffered.entry(node).or_default();
+        *peak = (*peak).max(current_bytes);
+    }
+
+    /// Peak per-connection buffered bytes observed at `node` (0 if
+    /// never metered).
+    pub fn peak_conn_buffered_bytes(&self, node: Node) -> u64 {
+        self.peak_conn_buffered.get(&node).copied().unwrap_or(0)
+    }
+
     /// Fold the round scheduler's pipelining counters into this run's
     /// meters (counts sum, the in-flight peak takes the maximum —
     /// consistent with how distributed per-party meters merge).
@@ -176,6 +213,12 @@ impl Metrics {
         }
         for (node, peak) in other.peak_spilled {
             self.record_spilled(node, peak);
+        }
+        for (node, peak) in other.peak_connections {
+            self.record_connections(node, peak);
+        }
+        for (node, peak) in other.peak_conn_buffered {
+            self.record_conn_buffered(node, peak);
         }
         self.record_pipeline(other.pipeline);
     }
@@ -269,6 +312,25 @@ mod tests {
         assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 0), 64);
         assert_eq!(m.peak_shard_buffered_bytes(AGGREGATOR, 1), 128);
         assert_eq!(m.peak_spilled_bytes(AGGREGATOR), 900);
+    }
+
+    #[test]
+    fn connection_peaks_keep_maximum_and_merge() {
+        let mut m = Metrics::new();
+        m.record_connections(AGGREGATOR, 512);
+        m.record_connections(AGGREGATOR, 100);
+        m.record_conn_buffered(AGGREGATOR, 4096);
+        m.record_conn_buffered(AGGREGATOR, 64);
+        assert_eq!(m.peak_connections(AGGREGATOR), 512);
+        assert_eq!(m.peak_conn_buffered_bytes(AGGREGATOR), 4096);
+        assert_eq!(m.peak_connections(client(0)), 0, "unmetered node");
+        assert_eq!(m.peak_conn_buffered_bytes(client(0)), 0);
+        let mut other = Metrics::new();
+        other.record_connections(AGGREGATOR, 10_240);
+        other.record_conn_buffered(AGGREGATOR, 1024);
+        m.merge(other);
+        assert_eq!(m.peak_connections(AGGREGATOR), 10_240, "merge keeps the max");
+        assert_eq!(m.peak_conn_buffered_bytes(AGGREGATOR), 4096);
     }
 
     #[test]

@@ -37,7 +37,20 @@
 //!   party. Bit-identical reports to the simulator (asserted in
 //!   `tests/transport_equivalence.rs`).
 //! * `vfl-sa serve` / `vfl-sa join` — the same machines over TCP
-//!   sockets, one process per party ([`net::tcp`]).
+//!   sockets, one process per party, one blocking thread per
+//!   connection ([`net::tcp`]).
+//! * `EvloopTransport` (`--evloop`; [`net::evloop`], unix) — the same
+//!   sockets and frames, multiplexed on a **single readiness-driven
+//!   event-loop thread**: nonblocking reads reassemble partial frames
+//!   per connection, writes go through bounded per-connection queues
+//!   (never a blocking `write_all` on the loop), so one aggregator
+//!   thread scales to 10k+ concurrent clients with flat per-client
+//!   memory — `vfl-sa swarm --clients 10240` demonstrates it against
+//!   real sockets and `tests/evloop.rs` asserts the scaling counters.
+//!
+//! All four run the identical party machines and produce bit-identical
+//! reports; the equivalence suites pin `sim ≡ threaded ≡ tcp ≡
+//! evloop`.
 //!
 //! The [`Experiment`](coordinator::Experiment) driver builds the party
 //! set, lays out a static round schedule (setup → training with §5.1
@@ -77,7 +90,7 @@
 //! [`PipelineStats`](coordinator::PipelineStats) (overlapped starts,
 //! peak rounds in flight, driver idle gap) measure the win;
 //! `tests/round_pipeline.rs` asserts the W ∈ {1, 2, 4} sweep
-//! bit-identical on all three transports.
+//! bit-identical on every transport, sockets included.
 //!
 //! ## Streaming shard-parallel aggregation (`--chunk-words` / `--shards` / `--agg-workers`)
 //!

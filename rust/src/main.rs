@@ -8,6 +8,8 @@
 //!   join     --connect HOST:PORT --party I [train flags] — run client
 //!            party I (0 = active) against a serving aggregator
 //!   bench    table1|table2|fig2|scaling [--reps N] [--quick] [--reference]
+//!   swarm    --clients N — C10K load generator: N simulated clients
+//!            against one event-loop aggregator over real sockets
 //!   info     print dataset/model configurations
 //!
 //! `train` and `bench` default to the PJRT backend and expect
@@ -115,6 +117,12 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if flags.contains_key("threaded") {
         cfg.transport = TransportKind::Threaded;
     }
+    if flags.contains_key("evloop") {
+        if cfg.transport != TransportKind::Sim {
+            bail!("--evloop conflicts with --threaded (pick one transport)");
+        }
+        cfg.transport = TransportKind::Evloop;
+    }
     cfg.test_rounds = flags.get("test-rounds").map(|v| v.parse()).transpose()?.unwrap_or(1);
     if let Some(t) = flags.get("shamir-threshold") {
         cfg.shamir_threshold = Some(t.parse().context("bad --shamir-threshold")?);
@@ -190,6 +198,9 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     // not be driven from several party threads
     if cfg.transport == TransportKind::Threaded && !reference {
         bail!("--threaded requires --reference (a shared PJRT engine is not driven from several threads)");
+    }
+    if cfg.transport == TransportKind::Evloop && !reference {
+        bail!("--evloop requires --reference (a shared PJRT engine is not driven from several threads)");
     }
 
     println!(
@@ -328,6 +339,61 @@ fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `vfl-sa swarm --clients N`: the event-loop C10K load generator —
+/// N simulated passive clients against one evloop aggregator over real
+/// localhost sockets, with a checksum proving no frame was lost.
+#[cfg(unix)]
+fn cmd_swarm(flags: &HashMap<String, String>) -> Result<()> {
+    use vfl::net::evloop::swarm::{self, SwarmCfg};
+    use vfl::net::evloop::PollerKind;
+
+    let mut cfg = SwarmCfg::default();
+    if let Some(v) = flags.get("clients") {
+        cfg.clients = v.parse().context("bad --clients")?;
+    }
+    if let Some(v) = flags.get("rounds") {
+        cfg.rounds = v.parse().context("bad --rounds")?;
+    }
+    if let Some(v) = flags.get("payload-words") {
+        cfg.payload_words = v.parse().context("bad --payload-words")?;
+    }
+    if let Some(v) = flags.get("client-threads") {
+        cfg.client_threads = v.parse().context("bad --client-threads")?;
+    }
+    if flags.contains_key("poll-fallback") {
+        cfg.poller = PollerKind::PollFallback;
+    }
+    println!(
+        "swarm: {} clients x {} rounds x {} words ({} client threads)...",
+        cfg.clients, cfg.rounds, cfg.payload_words, cfg.client_threads
+    );
+    let report = swarm::run(&cfg)?;
+    println!(
+        "swarm done in {:.1} ms on {}: peak {} live connections, \
+         peak {} B buffered on any one connection, {} payload bytes in, rss peak {} kB",
+        report.wall_ms,
+        report.poller,
+        report.peak_live_connections,
+        report.peak_conn_buffered_bytes,
+        report.bytes_received,
+        report.rss_peak_kb,
+    );
+    println!("{}", report.json());
+    if !report.verified() {
+        bail!(
+            "swarm checksum mismatch: got {:#x}, expected {:#x} — a frame was lost or corrupted",
+            report.checksum,
+            report.expected_checksum
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_swarm(_flags: &HashMap<String, String>) -> Result<()> {
+    bail!("swarm needs a unix platform (the evloop transport uses nonblocking sockets)")
+}
+
 fn cmd_info() -> Result<()> {
     println!("dataset configurations (§6.2 of the paper):");
     for ds in ["banking", "adult", "taobao"] {
@@ -352,10 +418,11 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&flags),
         Some("join") => cmd_join(&flags),
         Some("bench") => cmd_bench(&pos[1..], &flags),
+        Some("swarm") => cmd_swarm(&flags),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: vfl-sa <train|serve|join|bench|info> [flags]");
-            eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded]");
+            eprintln!("usage: vfl-sa <train|serve|join|bench|swarm|info> [flags]");
+            eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded|--evloop]");
             eprintln!("        [--shamir-threshold 3] [--dropout-schedule 2@1,4@3+1]   dropout-tolerant run");
             eprintln!("        [--chunk-words 1024] [--shards 4] [--agg-workers 4]   streaming shard-parallel aggregation");
             eprintln!("        [--rounds-in-flight 2]                                 pipelined round window (1 = serial)");
@@ -364,6 +431,7 @@ fn main() -> Result<()> {
             eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
             eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
             eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
+            eprintln!("  swarm --clients 10240 [--rounds 3] [--payload-words 32] [--client-threads 4] [--poll-fallback]");
             Ok(())
         }
     }

@@ -1,0 +1,415 @@
+//! Per-connection state for the event loop: buffered partial-frame
+//! reassembly on the read side, a bounded outbound byte queue on the
+//! write side.
+//!
+//! The no-blocking-write invariant lives here: the event loop never
+//! calls a blocking `write_all`. Outbound frames are encoded into
+//! [`OutQueue`] and drained with nonblocking `write` calls whenever
+//! the socket reports writable; a queue past its byte cap is a typed
+//! [`QueueOverflow`] — backpressure surfaces as an error instead of a
+//! deadlock (the exact failure mode the blocking `net/tcp.rs` writer
+//! has when both sides stuff their socket buffers).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::RawFd;
+
+use anyhow::{bail, Result};
+
+use crate::net::frame::{Frame, FrameTooLong, MAX_FRAME_LEN};
+
+use super::poller::Interest;
+
+/// Default per-connection outbound cap: one maximum-size frame plus
+/// headroom. A queue this deep means the peer has not drained tens of
+/// rounds of traffic — that is a dead or hostile peer, not
+/// backpressure worth buffering through.
+pub const DEFAULT_OUTBOUND_CAP_BYTES: usize = (MAX_FRAME_LEN as usize) + (4 << 20);
+
+/// Typed error for an outbound queue past its byte cap. The event loop
+/// treats the connection as failed (a peer that stops reading is
+/// indistinguishable from a dropped one) instead of blocking or
+/// buffering unboundedly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueOverflow {
+    /// Registration token of the offending connection.
+    pub token: usize,
+    /// Bytes queued after the rejected enqueue would have applied.
+    pub queued: usize,
+    /// The enforced cap.
+    pub cap: usize,
+}
+
+impl std::fmt::Display for QueueOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "outbound queue overflow on conn {}: {} bytes queued exceeds the {}-byte cap",
+            self.token, self.queued, self.cap
+        )
+    }
+}
+
+impl std::error::Error for QueueOverflow {}
+
+/// Incremental frame reassembly: bytes arrive in arbitrary splits
+/// (nonblocking reads return whatever the kernel has), frames leave
+/// whole. A cursor-compacted `Vec` instead of a ring: frames are
+/// consumed front-to-back, and compaction is amortized by only
+/// memmoving once the dead prefix passes 64 KiB.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+/// Compact once this many consumed bytes sit before the cursor.
+const COMPACT_AT: usize = 64 << 10;
+
+impl FrameBuf {
+    /// Append freshly-read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Unconsumed bytes currently buffered (the read-side component of
+    /// the per-connection memory meter).
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pop one complete frame if the buffer holds one. A length prefix
+    /// past [`MAX_FRAME_LEN`] is the same typed [`FrameTooLong`] error
+    /// the blocking reader raises, rejected before any allocation.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]);
+        if len > MAX_FRAME_LEN {
+            bail!(FrameTooLong { len: len as u64, max: MAX_FRAME_LEN });
+        }
+        let total = 4 + len as usize;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let frame = Frame::decode(&avail[4..total])?;
+        self.start += total;
+        if self.start >= COMPACT_AT {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+}
+
+/// Bounded outbound byte queue: encoded frames go in whole, bytes
+/// drain out in whatever increments the kernel accepts. Segments are
+/// kept frame-per-segment with a head offset rather than one flat
+/// buffer, so a partially-written large frame never forces a memmove.
+pub struct OutQueue {
+    segs: VecDeque<Vec<u8>>,
+    /// Bytes of `segs[0]` already written.
+    head: usize,
+    /// Total unwritten bytes across all segments.
+    queued: usize,
+    cap: usize,
+}
+
+impl Default for OutQueue {
+    fn default() -> Self {
+        OutQueue::with_cap(DEFAULT_OUTBOUND_CAP_BYTES)
+    }
+}
+
+impl OutQueue {
+    pub fn with_cap(cap: usize) -> OutQueue {
+        OutQueue { segs: VecDeque::new(), head: 0, queued: 0, cap }
+    }
+
+    /// Unwritten bytes queued (the write-side component of the
+    /// per-connection memory meter).
+    pub fn queued_bytes(&self) -> usize {
+        self.queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Encode and enqueue one frame. Past the byte cap this is a typed
+    /// [`QueueOverflow`] (tagged with `token` so the caller knows which
+    /// connection to fail) and the frame is *not* queued.
+    pub fn enqueue(&mut self, frame: &Frame, token: usize) -> Result<()> {
+        let mut bytes = Vec::new();
+        frame.write_to(&mut bytes)?; // length-prefixed, cap-checked
+        if self.queued + bytes.len() > self.cap {
+            bail!(QueueOverflow { token, queued: self.queued + bytes.len(), cap: self.cap });
+        }
+        self.queued += bytes.len();
+        self.segs.push_back(bytes);
+        Ok(())
+    }
+
+    /// Drain as much as the writer accepts without blocking. Returns
+    /// `Ok(true)` if the queue is now empty. `WouldBlock` stops the
+    /// drain (leaving the rest for the next writable event),
+    /// `Interrupted` retries, `Ok(0)` is a broken pipe.
+    pub fn write_some(&mut self, w: &mut impl Write) -> io::Result<bool> {
+        while let Some(seg) = self.segs.front() {
+            match w.write(&seg[self.head..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "connection write returned zero",
+                    ))
+                }
+                Ok(n) => {
+                    self.head += n;
+                    self.queued -= n;
+                    if self.head == seg.len() {
+                        self.segs.pop_front();
+                        self.head = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(true)
+    }
+}
+
+/// One multiplexed connection: the nonblocking socket plus both
+/// buffers and the interest currently registered with the poller.
+pub struct Conn {
+    pub stream: TcpStream,
+    pub fd: RawFd,
+    pub inbuf: FrameBuf,
+    pub out: OutQueue,
+    /// Interest currently registered (writable only while `out` is
+    /// non-empty — the level-triggered no-spin rule).
+    pub interest: Interest,
+    /// Which client this connection identified as via `Hello`; None
+    /// until the handshake frame arrives.
+    pub client: Option<usize>,
+}
+
+/// What one readiness-driven read pass produced.
+pub enum ReadOutcome {
+    /// Socket drained to `WouldBlock`; connection still live.
+    Open,
+    /// Peer closed (EOF) or the read errored; the connection is gone.
+    /// Frames already buffered were still returned.
+    Closed(String),
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, fd: RawFd) -> Conn {
+        Conn {
+            stream,
+            fd,
+            inbuf: FrameBuf::default(),
+            out: OutQueue::default(),
+            interest: Interest::READ,
+            client: None,
+        }
+    }
+
+    /// Buffered bytes held for this connection (read + write side) —
+    /// what the `peak_conn_buffered_bytes` metric meters.
+    pub fn buffered_bytes(&self) -> usize {
+        self.inbuf.len() + self.out.queued_bytes()
+    }
+
+    /// Drain the readable socket into `inbuf`, then pop every complete
+    /// frame into `frames`. Frame-level decode errors (garbage length,
+    /// undecodable body) are reported as `Closed` — a peer speaking
+    /// garbage is treated exactly like a vanished one, matching the
+    /// reader-thread behavior in `net/tcp.rs`.
+    pub fn read_ready(&mut self, frames: &mut Vec<Frame>) -> ReadOutcome {
+        let mut chunk = [0u8; 64 << 10];
+        let outcome = loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => break Some("peer closed".to_string()),
+                Ok(n) => self.inbuf.extend(&chunk[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break None,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => break Some(format!("read failed: {e}")),
+            }
+        };
+        loop {
+            match self.inbuf.next_frame() {
+                Ok(Some(f)) => frames.push(f),
+                Ok(None) => break,
+                Err(e) => return ReadOutcome::Closed(format!("bad frame: {e:#}")),
+            }
+        }
+        match outcome {
+            None => ReadOutcome::Open,
+            Some(why) => ReadOutcome::Closed(why),
+        }
+    }
+
+    /// Drain the outbound queue as far as the socket accepts.
+    /// `Ok(true)` = queue empty (writable interest can drop).
+    pub fn write_ready(&mut self) -> io::Result<bool> {
+        self.out.write_some(&mut self.stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::party::Note;
+
+    fn encoded(frames: &[Frame]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        for f in frames {
+            f.write_to(&mut buf).unwrap();
+        }
+        buf
+    }
+
+    #[test]
+    fn framebuf_reassembles_byte_by_byte() {
+        let frames = [
+            Frame::Hello { client: 9 },
+            Frame::Msg { bytes: vec![7; 300] },
+            Frame::Note(Note::Loss { round: 1, loss: 0.5 }),
+            Frame::Stop,
+        ];
+        let wire = encoded(&frames);
+        let mut fb = FrameBuf::default();
+        let mut got = Vec::new();
+        // worst-case fragmentation: one byte per "read"
+        for b in &wire {
+            fb.extend(std::slice::from_ref(b));
+            while let Some(f) = fb.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames);
+        assert!(fb.is_empty(), "no residue after the last frame");
+    }
+
+    #[test]
+    fn framebuf_handles_frames_split_across_chunks() {
+        let frames = [Frame::Msg { bytes: vec![1; 100] }, Frame::Msg { bytes: vec![2; 100] }];
+        let wire = encoded(&frames);
+        let mut fb = FrameBuf::default();
+        // a chunk boundary straddling the second frame's length prefix
+        let cut = wire.len() / 2 + 3;
+        fb.extend(&wire[..cut]);
+        let first = fb.next_frame().unwrap();
+        assert_eq!(first, Some(Frame::Msg { bytes: vec![1; 100] }));
+        assert_eq!(fb.next_frame().unwrap(), None, "second frame incomplete");
+        fb.extend(&wire[cut..]);
+        assert_eq!(fb.next_frame().unwrap(), Some(Frame::Msg { bytes: vec![2; 100] }));
+    }
+
+    #[test]
+    fn framebuf_rejects_oversize_length_before_allocating() {
+        let mut fb = FrameBuf::default();
+        fb.extend(&u32::MAX.to_le_bytes());
+        let err = fb.next_frame().unwrap_err();
+        let too_long = err.downcast_ref::<FrameTooLong>().expect("typed error");
+        assert_eq!(too_long.len, u32::MAX as u64);
+    }
+
+    #[test]
+    fn framebuf_compacts_consumed_prefix() {
+        let frame = Frame::Msg { bytes: vec![3; 40 << 10] };
+        let wire = encoded(&[frame]);
+        let mut fb = FrameBuf::default();
+        for _ in 0..4 {
+            fb.extend(&wire);
+            assert!(fb.next_frame().unwrap().is_some());
+        }
+        // after > 64 KiB of consumed frames the dead prefix was dropped
+        assert!(fb.buf.len() < 2 * wire.len(), "compaction bounds the backing buffer");
+        assert!(fb.is_empty());
+    }
+
+    #[test]
+    fn outqueue_overflow_is_typed_and_rejects_the_frame() {
+        let mut q = OutQueue::with_cap(64);
+        q.enqueue(&Frame::Msg { bytes: vec![0; 16] }, 5).unwrap();
+        let before = q.queued_bytes();
+        let err = q.enqueue(&Frame::Msg { bytes: vec![0; 64] }, 5).unwrap_err();
+        let of = err.downcast_ref::<QueueOverflow>().expect("typed overflow");
+        assert_eq!(of.token, 5);
+        assert_eq!(of.cap, 64);
+        assert!(of.queued > of.cap);
+        assert_eq!(q.queued_bytes(), before, "rejected frame was not queued");
+    }
+
+    /// A writer that accepts a few bytes then reports `WouldBlock`,
+    /// like a nonblocking socket with a tiny send buffer.
+    struct Throttle {
+        sink: Vec<u8>,
+        budget: usize,
+    }
+
+    impl Write for Throttle {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.budget == 0 {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.budget).min(7);
+            self.sink.extend_from_slice(&buf[..n]);
+            self.budget -= n;
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn outqueue_drains_across_partial_writes() {
+        let frames =
+            [Frame::Msg { bytes: vec![9; 50] }, Frame::Note(Note::RoundDone { round: 4 })];
+        let mut q = OutQueue::default();
+        for f in &frames {
+            q.enqueue(f, 0).unwrap();
+        }
+        let total = q.queued_bytes();
+        let mut w = Throttle { sink: Vec::new(), budget: 0 };
+        // repeated writable events with a trickle of budget each time
+        let mut rounds = 0;
+        while !q.is_empty() {
+            w.budget = 11;
+            q.write_some(&mut w).unwrap();
+            rounds += 1;
+            assert!(rounds < 100, "drain must terminate");
+        }
+        assert!(rounds > 1, "the partial-write path was actually exercised");
+        assert_eq!(w.sink.len(), total);
+        assert_eq!(w.sink, encoded(&frames), "bytes drain in order, uncorrupted");
+    }
+
+    #[test]
+    fn outqueue_write_zero_is_an_error() {
+        struct Zero;
+        impl Write for Zero {
+            fn write(&mut self, _: &[u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut q = OutQueue::default();
+        q.enqueue(&Frame::Stop, 0).unwrap();
+        let e = q.write_some(&mut Zero).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::WriteZero);
+    }
+}

@@ -1,0 +1,67 @@
+//! Event-loop transport: one-thread readiness-driven sockets that
+//! scale the aggregator to 10k+ concurrent clients.
+//!
+//! The thread-per-connection socket transport ([`super::tcp`]) is the
+//! honest small-federation baseline, but it carries two scaling
+//! ceilings: a stack per client (10k clients ≈ 10k threads), and
+//! blocking frame writes that can deadlock when both ends of a
+//! connection fill their kernel buffers at once (see the "Blocking
+//! writes and the deadlock bound" note in `tcp`). This module removes
+//! both by multiplexing every connection on a single event-loop
+//! thread with OS readiness notification.
+//!
+//! # Layering
+//!
+//! ```text
+//!   poller.rs   Poller: epoll (Linux, via extern-libc shim) or
+//!               portable poll(2) — register fds, wait for readiness
+//!   conn.rs     Conn: per-connection state machine — FrameBuf
+//!               partial-read reassembly + OutQueue bounded
+//!               partial-write queue
+//!   server.rs   serve_on / EvloopTransport: the aggregator protocol
+//!               loop, frame-for-frame equivalent to tcp::serve_on
+//!   swarm.rs    the C10K load generator (`vfl-sa swarm`)
+//! ```
+//!
+//! # The connection state machine
+//!
+//! Every socket is nonblocking and owned by exactly one [`Conn`]:
+//!
+//! * **Reads** — on readability, drain the socket into an append-only
+//!   [`FrameBuf`] and pop every *complete* length-prefixed frame; a
+//!   partial frame simply stays buffered until the next readiness
+//!   event. Per-connection reads stay in arrival order, which
+//!   preserves the per-sender FIFO ordering the protocol relies on —
+//!   that is the whole bit-identity argument.
+//! * **Writes** — frames are never written to the socket directly.
+//!   They are encoded into the connection's bounded [`OutQueue`] and
+//!   drained opportunistically whenever the socket is writable.
+//!   Writable interest is registered only while the queue is
+//!   non-empty, so an idle swarm costs zero wakeups.
+//!
+//! **The no-blocking-write invariant:** no code on the event-loop
+//! thread ever issues a blocking socket write (or read). A slow or
+//! stalled peer therefore cannot wedge the loop — its queue fills to
+//! the [`DEFAULT_OUTBOUND_CAP_BYTES`] bound and overflows as a typed
+//! [`QueueOverflow`] error, which the server handles the same way it
+//! handles a dead socket: the client is marked dropped and secure
+//! aggregation recovers it like any other dropout.
+//!
+//! # Equivalence
+//!
+//! [`serve_on`] drives [`crate::coordinator::window::RoundWindow`] and
+//! `Party::on_round_complete` exactly as `tcp::serve_on` does — the
+//! same stall-probe policy, the same dropout semantics, the same
+//! failure messages — so `sim ≡ threaded ≡ tcp ≡ evloop` holds
+//! bit-identically (`tests/transport_equivalence.rs` and
+//! `tests/evloop.rs` enforce it).
+
+pub mod conn;
+pub mod poller;
+pub mod server;
+pub mod swarm;
+
+pub use conn::{Conn, FrameBuf, OutQueue, QueueOverflow, ReadOutcome, DEFAULT_OUTBOUND_CAP_BYTES};
+pub use poller::{Interest, PollEvent, Poller, PollerKind};
+pub use server::{serve, serve_on, EvloopTransport};
+pub use swarm::{SwarmCfg, SwarmReport};

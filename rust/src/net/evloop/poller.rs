@@ -1,0 +1,448 @@
+//! Readiness multiplexing without dependencies: `epoll(7)` on Linux
+//! via `extern "C"` declarations of the libc symbols std already
+//! links, and a portable `poll(2)` fallback everywhere else (and on
+//! Linux when forced, so the fallback path stays tested on the
+//! platform CI actually runs).
+//!
+//! The abstraction is deliberately tiny — register/reregister/
+//! deregister a raw fd under a caller-chosen `usize` token with a
+//! read/write [`Interest`], then [`Poller::wait`] for a batch of
+//! [`PollEvent`]s or a timeout. Level-triggered semantics on both
+//! backends: an event repeats every wait until the caller drains the
+//! socket (reads until `WouldBlock`) or drops the interest (writable
+//! interest is only held while a connection's outbound queue is
+//! non-empty, so there is no busy-spin on permanently-writable
+//! sockets).
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// Which readiness a registration cares about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+}
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The token the fd was registered under.
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or hangup on the fd (`EPOLLERR`/`EPOLLHUP`/`POLLERR`/
+    /// `POLLHUP`/`POLLNVAL`). The connection should be read to EOF and
+    /// treated as gone.
+    pub hangup: bool,
+}
+
+/// Which backend to build. `Auto` picks epoll on Linux (unless the
+/// `VFL_EVLOOP_POLLER=poll` escape hatch is set) and `poll(2)`
+/// elsewhere; `PollFallback` forces `poll(2)` so tests can exercise
+/// the fallback deterministically without env-var races.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PollerKind {
+    #[default]
+    Auto,
+    PollFallback,
+}
+
+impl PollerKind {
+    pub fn build(self) -> io::Result<Poller> {
+        match self {
+            PollerKind::PollFallback => Ok(Poller::poll_fallback()),
+            PollerKind::Auto => {
+                if std::env::var("VFL_EVLOOP_POLLER").as_deref() == Ok("poll") {
+                    return Ok(Poller::poll_fallback());
+                }
+                #[cfg(target_os = "linux")]
+                {
+                    epoll::Epoll::new().map(Poller::Epoll)
+                }
+                #[cfg(not(target_os = "linux"))]
+                {
+                    Ok(Poller::poll_fallback())
+                }
+            }
+        }
+    }
+}
+
+/// The readiness multiplexer: epoll-backed on Linux, `poll(2)`-backed
+/// otherwise (or when forced).
+pub enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::Epoll),
+    Poll(PollVec),
+}
+
+impl Poller {
+    fn poll_fallback() -> Poller {
+        Poller::Poll(PollVec::default())
+    }
+
+    /// Human-readable backend name (for swarm reports / logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(_) => "epoll",
+            Poller::Poll(_) => "poll",
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(e) => e.ctl(epoll::EPOLL_CTL_ADD, fd, token, interest),
+            Poller::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn reregister(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(e) => e.ctl(epoll::EPOLL_CTL_MOD, fd, token, interest),
+            Poller::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(e) => e.ctl(epoll::EPOLL_CTL_DEL, fd, 0, Interest::READ),
+            Poller::Poll(p) => {
+                p.deregister(fd);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until readiness or `timeout` (None = forever). Clears and
+    /// refills `events`; an empty result means the timeout elapsed.
+    /// `EINTR` retries internally.
+    pub fn wait(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(e) => e.wait(events, timeout),
+            Poller::Poll(p) => p.wait(events, timeout),
+        }
+    }
+}
+
+/// Saturate a `Duration` into the `c_int` milliseconds both syscalls
+/// take (-1 = infinite). Sub-millisecond timeouts round *up* so a
+/// 100µs stall floor never degenerates into a busy loop.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            let ms = if ms == 0 && d.as_nanos() > 0 { 1 } else { ms };
+            ms.min(i32::MAX as u128) as i32
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub mod epoll {
+    //! The thin epoll shim: no libc crate, just the four symbols
+    //! declared `extern "C"` — std links libc, so they resolve.
+    use super::{timeout_ms, Interest, PollEvent};
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    // x86_64 Linux packs epoll_event to match the 32-bit layout; other
+    // Linux targets use natural alignment. Matching the kernel ABI here
+    // is the whole job of this struct.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Epoll {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Epoll { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+        }
+
+        fn mask(interest: Interest) -> u32 {
+            let mut m = EPOLLRDHUP;
+            if interest.readable {
+                m |= EPOLLIN;
+            }
+            if interest.writable {
+                m |= EPOLLOUT;
+            }
+            m
+        }
+
+        pub fn ctl(&mut self, op: i32, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            let mut ev = EpollEvent { events: Self::mask(interest), data: token as u64 };
+            let ep = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, ep) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn wait(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+            let ms = timeout_ms(timeout);
+            loop {
+                let n = unsafe {
+                    epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, ms)
+                };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(e);
+                }
+                for i in 0..n as usize {
+                    // copy the (possibly packed) fields out before use
+                    let ev = self.buf[i];
+                    let bits = ev.events;
+                    let data = ev.data;
+                    events.push(PollEvent {
+                        token: data as usize,
+                        readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                        writable: bits & EPOLLOUT != 0,
+                        hangup: bits & (EPOLLERR | EPOLLHUP) != 0,
+                    });
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+mod sys_poll {
+    //! `poll(2)` via the same extern-declaration trick. The `nfds_t`
+    //! type differs per platform (`c_ulong` on Linux, `c_uint` on the
+    //! BSDs/macOS), so it is cfg'd here.
+    use std::os::unix::io::RawFd;
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+    }
+}
+
+/// The portable fallback: a flat registration table rebuilt into a
+/// `pollfd` array per wait. O(n) per call where epoll is O(ready) —
+/// fine for correctness testing and modest fan-ins, which is exactly
+/// what the fallback is for.
+#[derive(Default)]
+pub struct PollVec {
+    regs: Vec<(RawFd, usize, Interest)>,
+}
+
+impl PollVec {
+    fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.deregister(fd);
+        self.regs.push((fd, token, interest));
+        Ok(())
+    }
+
+    fn deregister(&mut self, fd: RawFd) {
+        self.regs.retain(|&(f, _, _)| f != fd);
+    }
+
+    fn wait(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        let mut fds: Vec<sys_poll::PollFd> = self
+            .regs
+            .iter()
+            .map(|&(fd, _, interest)| {
+                let mut ev = 0i16;
+                if interest.readable {
+                    ev |= sys_poll::POLLIN;
+                }
+                if interest.writable {
+                    ev |= sys_poll::POLLOUT;
+                }
+                sys_poll::PollFd { fd, events: ev, revents: 0 }
+            })
+            .collect();
+        let ms = timeout_ms(timeout);
+        loop {
+            let n = unsafe {
+                sys_poll::poll(fds.as_mut_ptr(), fds.len() as sys_poll::NfdsT, ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(e);
+            }
+            break;
+        }
+        for (pfd, &(_, token, _)) in fds.iter().zip(&self.regs) {
+            let r = pfd.revents;
+            if r == 0 {
+                continue;
+            }
+            events.push(PollEvent {
+                token,
+                readable: r & sys_poll::POLLIN != 0,
+                writable: r & sys_poll::POLLOUT != 0,
+                hangup: r & (sys_poll::POLLERR | sys_poll::POLLHUP | sys_poll::POLLNVAL) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    fn backends() -> Vec<Poller> {
+        let mut v = vec![PollerKind::PollFallback.build().unwrap()];
+        if let Ok(p) = PollerKind::Auto.build() {
+            v.push(p);
+        }
+        v
+    }
+
+    #[test]
+    fn timeout_rounds_up_not_to_zero() {
+        assert_eq!(timeout_ms(None), -1);
+        assert_eq!(timeout_ms(Some(Duration::from_micros(100))), 1);
+        assert_eq!(timeout_ms(Some(Duration::ZERO)), 0);
+        assert_eq!(timeout_ms(Some(Duration::from_secs(u64::MAX))), i32::MAX);
+    }
+
+    #[test]
+    fn readable_after_peer_write_on_every_backend() {
+        for mut p in backends() {
+            let (mut a, b) = pair();
+            b.set_nonblocking(true).unwrap();
+            p.register(b.as_raw_fd(), 7, Interest::READ).unwrap();
+            let mut evs = Vec::new();
+            // nothing yet: a short wait times out with no events
+            p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert!(evs.is_empty(), "{}: spurious readiness", p.name());
+            a.write_all(b"hi").unwrap();
+            p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(evs.len(), 1, "{}", p.name());
+            assert_eq!(evs[0].token, 7);
+            assert!(evs[0].readable);
+            let mut buf = [0u8; 8];
+            let n = (&b).read(&mut buf).unwrap();
+            assert_eq!(&buf[..n], b"hi");
+        }
+    }
+
+    #[test]
+    fn writable_interest_and_deregister() {
+        for mut p in backends() {
+            let (a, _b) = pair();
+            a.set_nonblocking(true).unwrap();
+            p.register(a.as_raw_fd(), 3, Interest::BOTH).unwrap();
+            let mut evs = Vec::new();
+            p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert!(
+                evs.iter().any(|e| e.token == 3 && e.writable),
+                "{}: fresh socket is writable",
+                p.name()
+            );
+            // drop writable interest: no more events, wait times out
+            p.reregister(a.as_raw_fd(), 3, Interest::READ).unwrap();
+            p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert!(evs.is_empty(), "{}: read-only interest is quiet", p.name());
+            p.deregister(a.as_raw_fd()).unwrap();
+            p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert!(evs.is_empty(), "{}: deregistered fd is silent", p.name());
+        }
+    }
+
+    #[test]
+    fn hangup_reported_when_peer_drops() {
+        for mut p in backends() {
+            let (a, b) = pair();
+            b.set_nonblocking(true).unwrap();
+            p.register(b.as_raw_fd(), 1, Interest::READ).unwrap();
+            drop(a);
+            let mut evs = Vec::new();
+            p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            // a dropped peer shows up as readable-to-EOF and/or hangup;
+            // either way the event fires and a read returns Ok(0)
+            assert_eq!(evs.len(), 1, "{}", p.name());
+            assert!(evs[0].readable || evs[0].hangup, "{}", p.name());
+        }
+    }
+}

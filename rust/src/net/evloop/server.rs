@@ -1,0 +1,582 @@
+//! The readiness-driven aggregator: one thread multiplexes every
+//! client socket through a [`Poller`], driving the *same*
+//! `RoundWindow`/`Party` hooks `tcp::serve_on` drives — which is why
+//! an evloop run is bit-identical to a sim/threaded/tcp one.
+//!
+//! Per-connection state machine
+//! ----------------------------
+//! Each socket is nonblocking and owns two buffers ([`Conn`]):
+//!
+//! * **read side** — a [`FrameBuf`](super::conn::FrameBuf) reassembles
+//!   length-prefixed frames from whatever byte splits the kernel
+//!   delivers; complete frames are handled in arrival order, so
+//!   per-sender FIFO (the only ordering the §4 machines rely on)
+//!   holds exactly as it does on a blocking socket.
+//! * **write side** — a bounded [`OutQueue`](super::conn::OutQueue).
+//!   The event loop **never blocks on a write**: frames are enqueued,
+//!   opportunistically drained, and the remainder waits for the
+//!   socket's next writable event. Writable interest is registered
+//!   only while the queue is non-empty (no level-triggered busy-spin),
+//!   and a queue past its byte cap is a typed
+//!   [`QueueOverflow`](super::conn::QueueOverflow) that marks the
+//!   client dropped — backpressure surfaces as dropout, never as the
+//!   blocking-write deadlock `net/tcp.rs` documents.
+//!
+//! A dead socket (EOF, read/write error, garbage frame) is a dropped
+//! party, not a server error — identical to the TCP transport, the
+//! aggregator's stall probe declares it and recovery proceeds.
+//! [`StallClock`] quiescence is wired as the poll timeout: a wait that
+//! returns no events is the idle probe.
+
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::messages::Msg;
+use crate::coordinator::metrics::AGGREGATOR;
+use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+use crate::coordinator::window::RoundWindow;
+use crate::coordinator::Metrics;
+
+use super::super::frame::Frame;
+use super::super::tcp::{self, ServeOutcome};
+use super::super::transport::{
+    harvest, StallClock, Transport, TransportOutcome, DEFAULT_STALL_CAP, DEFAULT_STALL_TIMEOUT,
+    MAX_IDLE_PROBES,
+};
+use super::super::{Addr, Network};
+use super::conn::{Conn, ReadOutcome};
+use super::poller::{Interest, Poller, PollerKind};
+
+/// The listening socket's registration token (connection tokens are
+/// slab indices, so they never reach this).
+const LISTENER_TOKEN: usize = usize::MAX;
+
+/// How long the post-run Stop drain waits for slow clients before
+/// giving up (best-effort, like the TCP transport's Stop writes).
+const STOP_DRAIN: Duration = Duration::from_secs(5);
+
+/// The multiplexed connection table plus its poller: everything the
+/// event loop owns besides the protocol state.
+struct EvServer {
+    poller: Poller,
+    /// Token-indexed slab; closed slots stay `None` (each client
+    /// connects exactly once per run, so tokens are never reused).
+    conns: Vec<Option<Conn>>,
+    /// Client index → live token (None = not yet joined, or dropped).
+    client_slot: Vec<Option<usize>>,
+    joined: usize,
+    live: u64,
+    /// Connection-count and per-connection queue-depth meters, merged
+    /// into the aggregator's metrics at the end of the run.
+    io: Metrics,
+}
+
+impl EvServer {
+    fn new(poller: Poller, n_clients: usize) -> EvServer {
+        EvServer {
+            poller,
+            conns: Vec::with_capacity(n_clients),
+            client_slot: vec![None; n_clients],
+            joined: 0,
+            live: 0,
+            io: Metrics::new(),
+        }
+    }
+
+    /// Accept until the listener would block, registering each new
+    /// socket read-only under a fresh slab token.
+    fn accept_ready(&mut self, listener: &TcpListener) -> Result<()> {
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_nonblocking(true).context("set_nonblocking")?;
+                    let fd = stream.as_raw_fd();
+                    let token = self.conns.len();
+                    self.poller.register(fd, token, Interest::READ).context("register conn")?;
+                    self.conns.push(Some(Conn::new(stream, fd)));
+                    self.live += 1;
+                    self.io.record_connections(AGGREGATOR, self.live);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+    }
+
+    /// Close one connection: deregister, drop the socket, clear the
+    /// client mapping (its party is dropped from here on).
+    fn close(&mut self, token: usize) {
+        if let Some(conn) = self.conns.get_mut(token).and_then(Option::take) {
+            let _ = self.poller.deregister(conn.fd);
+            if let Some(ci) = conn.client {
+                self.client_slot[ci] = None;
+            }
+            self.live -= 1;
+        }
+    }
+
+    fn set_interest(&mut self, token: usize, want: Interest) {
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        if conn.interest != want {
+            let fd = conn.fd;
+            conn.interest = want;
+            if let Err(e) = self.poller.reregister(fd, token, want) {
+                eprintln!("serve(evloop): reregister failed ({e}), closing conn {token}");
+                self.close(token);
+            }
+        }
+    }
+
+    /// Drain a readable socket, appending complete frames as
+    /// `(client, frame)` pairs. Handles the `Hello` handshake inline
+    /// (frames before it are a protocol error; frames after it carry
+    /// the sender's client index). `joining` turns a lost socket into
+    /// a hard error — before the party set is complete there is no
+    /// dropout semantics to absorb it.
+    fn handle_read(
+        &mut self,
+        token: usize,
+        frames: &mut Vec<(usize, Frame)>,
+        joining: bool,
+    ) -> Result<()> {
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else {
+            return Ok(()); // stale event for an already-closed conn
+        };
+        let mut got = Vec::new();
+        let outcome = conn.read_ready(&mut got);
+        let buffered = conn.buffered_bytes();
+        let mut client = conn.client;
+        self.io.record_conn_buffered(AGGREGATOR, buffered as u64);
+        for f in got {
+            match client {
+                Some(ci) => frames.push((ci, f)),
+                None => {
+                    let Frame::Hello { client: c } = f else {
+                        bail!("expected Hello, got {f:?}")
+                    };
+                    let ci = c as usize;
+                    let n = self.client_slot.len();
+                    if ci >= n {
+                        bail!("client index {ci} out of range (need 0..{n})");
+                    }
+                    if self.client_slot[ci].is_some() {
+                        bail!("client {ci} connected twice");
+                    }
+                    self.client_slot[ci] = Some(token);
+                    if let Some(conn) = self.conns[token].as_mut() {
+                        conn.client = Some(ci);
+                    }
+                    client = Some(ci);
+                    self.joined += 1;
+                }
+            }
+        }
+        if let ReadOutcome::Closed(why) = outcome {
+            if joining {
+                bail!("client socket lost during join: {why}");
+            }
+            // a vanished client is a dropped party, not a server error
+            // (tcp parity: Event::Gone) — the stall probe declares it
+            let who = client.map(|c| c.to_string()).unwrap_or_else(|| "?".into());
+            eprintln!("serve(evloop): client {who} disconnected ({why}), marking dropped");
+            self.close(token);
+        }
+        Ok(())
+    }
+
+    /// Drain a connection's outbound queue as far as the socket
+    /// accepts, keeping writable interest exactly while bytes remain.
+    fn flush(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        match conn.write_ready() {
+            Ok(drained) => {
+                let bytes = conn.buffered_bytes();
+                self.io.record_conn_buffered(AGGREGATOR, bytes as u64);
+                let want = if drained { Interest::READ } else { Interest::BOTH };
+                self.set_interest(token, want);
+            }
+            Err(e) => {
+                let who = conn.client.map(|c| c.to_string()).unwrap_or_else(|| "?".into());
+                eprintln!("serve(evloop): client {who} write failed ({e}), marking dropped");
+                self.close(token);
+            }
+        }
+    }
+
+    /// Enqueue one frame to a client and opportunistically drain it.
+    /// Dead or dropped clients are skipped; a queue overflow (typed
+    /// [`QueueOverflow`](super::conn::QueueOverflow)) marks the client
+    /// dropped — never a blocking wait.
+    fn send_to_client(&mut self, ci: usize, frame: &Frame) {
+        let Some(token) = self.client_slot[ci] else { return };
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        if let Err(e) = conn.out.enqueue(frame, token) {
+            eprintln!("serve(evloop): client {ci} send failed ({e:#}), marking dropped");
+            self.close(token);
+            return;
+        }
+        self.flush(token);
+    }
+
+    /// Route an aggregator outbox: meter + enqueue every message,
+    /// feed scheduler-control notes to the window (tcp parity:
+    /// aggregator-outbox notes never trigger `on_round_complete`).
+    fn route(
+        &mut self,
+        net: &mut Network,
+        ob: Outbox,
+        notes: &mut Vec<Note>,
+        win: &mut RoundWindow,
+    ) -> Result<()> {
+        for (to, msg) in ob.msgs {
+            let Addr::Client(ci) = to else { bail!("aggregator addressed itself") };
+            let bytes = msg.encode();
+            net.meter(Addr::Aggregator, to, bytes.len());
+            self.send_to_client(ci, &Frame::Msg { bytes });
+        }
+        for n in ob.notes {
+            if let Some(n) = win.observe(n) {
+                notes.push(n);
+            }
+        }
+        Ok(())
+    }
+
+    /// Best-effort post-run drain: flush every remaining outbound byte
+    /// (the Stop frames), closing each connection as its queue empties
+    /// so level-triggered EOF readiness from exiting clients cannot
+    /// spin the loop.
+    fn drain_outbound(&mut self, deadline: Instant) {
+        let mut events = Vec::new();
+        loop {
+            for token in 0..self.conns.len() {
+                let Some(conn) = self.conns[token].as_ref() else { continue };
+                if conn.out.is_empty() {
+                    self.close(token);
+                } else {
+                    self.set_interest(token, Interest::WRITE);
+                }
+            }
+            if self.live == 0 {
+                return;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let wait = (deadline - now).min(Duration::from_millis(100));
+            if self.poller.wait(&mut events, Some(wait)).is_err() {
+                return;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.hangup {
+                    self.close(ev.token);
+                } else if ev.writable {
+                    self.flush(ev.token);
+                }
+            }
+        }
+    }
+}
+
+/// Host the aggregator on a readiness-driven event loop: accept
+/// `n_clients` joins, run the schedule with up to `window` rounds in
+/// flight, return the run's notes and byte counters — the evloop
+/// sibling of [`tcp::serve`], same protocol semantics, one thread for
+/// any number of clients.
+pub fn serve(
+    listen: &str,
+    aggregator: Box<dyn Party + '_>,
+    schedule: &[RoundSpec],
+    n_clients: usize,
+    clock: StallClock,
+    window: usize,
+    poller: PollerKind,
+) -> Result<ServeOutcome> {
+    let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+    serve_on(listener, aggregator, schedule, n_clients, clock, window, poller)
+}
+
+/// [`serve`] on an already-bound listener (lets tests bind port 0 and
+/// learn the real port before clients race to connect).
+pub fn serve_on(
+    listener: TcpListener,
+    mut aggregator: Box<dyn Party + '_>,
+    schedule: &[RoundSpec],
+    n_clients: usize,
+    mut clock: StallClock,
+    window: usize,
+    poller: PollerKind,
+) -> Result<ServeOutcome> {
+    if n_clients > u16::MAX as usize {
+        bail!("{n_clients} clients exceeds the Hello frame's u16 index space");
+    }
+    let listen = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut srv = EvServer::new(poller.build().context("build poller")?, n_clients);
+    srv.poller
+        .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)
+        .context("register listener")?;
+    eprintln!(
+        "serve(evloop/{}): listening on {listen}, waiting for {n_clients} client(s)",
+        srv.poller.name()
+    );
+
+    // -- join phase: accept and handshake every client. Frames a fast
+    // client sends beyond its Hello (none today — clients wait for the
+    // first Round — but the protocol does not forbid it) are carried
+    // into the protocol loop.
+    let mut events = Vec::new();
+    let mut frames: Vec<(usize, Frame)> = Vec::new();
+    while srv.joined < n_clients {
+        srv.poller.wait(&mut events, None).context("poll (join)")?;
+        for i in 0..events.len() {
+            let ev = events[i];
+            if ev.token == LISTENER_TOKEN {
+                srv.accept_ready(&listener)?;
+            } else {
+                srv.handle_read(ev.token, &mut frames, true)?;
+            }
+        }
+    }
+    srv.poller.deregister(listener.as_raw_fd()).ok();
+    eprintln!("serve(evloop): all {n_clients} client(s) joined");
+
+    // -- protocol loop: the exact driver `tcp::serve_on` runs, with
+    // the poll timeout playing the role of `recv_timeout`.
+    let mut net = Network::new(n_clients);
+    let mut notes: Vec<Note> = Vec::new();
+    let mut win = RoundWindow::new(schedule, window);
+    let mut idle_probes = 0u32;
+    let mut processed_since_probe = 0u64;
+    let mut last_event = Instant::now();
+    while !win.done() {
+        // open every round the window allows, in schedule order: the
+        // boundary is enqueued on every socket first, so each client
+        // orders the round ahead of its first protocol message. Only
+        // the active party (client 0) receives the batch ids (batch-
+        // membership leak, as in tcp::serve_on).
+        while let Some(spec) = win.next_start() {
+            net.phase = spec.phase;
+            for ci in 0..n_clients {
+                let for_client = if ci == 0 {
+                    spec.clone()
+                } else {
+                    RoundSpec { ids: Vec::new(), ..spec.clone() }
+                };
+                srv.send_to_client(ci, &Frame::Round(for_client));
+            }
+            let mut ob = Outbox::default();
+            aggregator.on_round_start(spec, &mut ob)?;
+            srv.route(&mut net, ob, &mut notes, &mut win)?;
+        }
+        if frames.is_empty() {
+            srv.poller.wait(&mut events, Some(clock.timeout())).context("poll")?;
+            if events.is_empty() {
+                // quiescent for the stall window: probe the aggregator
+                // for dropped parties, but only when truly idle — a
+                // timeout right after a burst is not a dropout. The
+                // gap anchor resets so stall windows never feed the
+                // EWMA (the clock tracks frame cadence, not its own
+                // timeouts).
+                last_event = Instant::now();
+                let mut ob = Outbox::default();
+                if processed_since_probe == 0 {
+                    aggregator.on_stall(&mut ob)?;
+                }
+                let acted = !ob.msgs.is_empty() || !ob.notes.is_empty();
+                srv.route(&mut net, ob, &mut notes, &mut win)?;
+                if acted || processed_since_probe > 0 {
+                    idle_probes = 0;
+                } else {
+                    idle_probes += 1;
+                    if idle_probes >= MAX_IDLE_PROBES {
+                        bail!(
+                            "protocol stalled: round {} never completed",
+                            win.oldest_in_flight().unwrap_or(0)
+                        );
+                    }
+                }
+                processed_since_probe = 0;
+                continue;
+            }
+            let now = Instant::now();
+            clock.observe_gap(now - last_event);
+            last_event = now;
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.writable {
+                    srv.flush(ev.token);
+                }
+                if ev.readable || ev.hangup {
+                    srv.handle_read(ev.token, &mut frames, false)?;
+                }
+            }
+            if srv.live == 0 && frames.is_empty() {
+                bail!("all client connections lost");
+            }
+        }
+        // handle every complete frame in arrival order (per-sender
+        // FIFO: each conn's frames were appended in read order)
+        for (ci, frame) in std::mem::take(&mut frames) {
+            match frame {
+                Frame::Msg { bytes } => {
+                    idle_probes = 0;
+                    processed_since_probe += 1;
+                    net.meter(Addr::Client(ci), Addr::Aggregator, bytes.len());
+                    let msg = Msg::decode(&bytes)?;
+                    let mut ob = Outbox::default();
+                    aggregator.on_message(Addr::Client(ci), msg, &mut ob)?;
+                    srv.route(&mut net, ob, &mut notes, &mut win)?;
+                }
+                Frame::Note(n) => {
+                    idle_probes = 0;
+                    processed_since_probe += 1;
+                    match n {
+                        Note::Failed { who, error } => bail!("party {who} failed: {error}"),
+                        n => {
+                            if let Some(n) = win.observe(n) {
+                                if let Note::RoundDone { round } = &n {
+                                    // scheduler bookkeeping for the
+                                    // server-side aggregator
+                                    aggregator.on_round_complete(*round);
+                                }
+                                notes.push(n);
+                            }
+                        }
+                    }
+                }
+                f => bail!("unexpected frame from client {ci}: {f:?}"),
+            }
+        }
+    }
+    for ci in 0..n_clients {
+        srv.send_to_client(ci, &Frame::Stop);
+    }
+    srv.drain_outbound(Instant::now() + STOP_DRAIN);
+    let mut metrics = aggregator.take_metrics();
+    metrics.record_pipeline(win.stats());
+    metrics.merge(std::mem::take(&mut srv.io));
+    Ok(ServeOutcome { notes, net, metrics })
+}
+
+/// In-process evloop runs: the aggregator multiplexes every client
+/// over real localhost sockets on *one* event-loop thread, while each
+/// client party runs the ordinary blocking [`tcp`] client loop on its
+/// own thread (clients are out of scope for the C10K claim — the
+/// aggregator is the bottleneck the event loop exists to remove).
+///
+/// The fourth [`TransportKind`](crate::coordinator::TransportKind):
+/// same party machines, same `RoundWindow` scheduling, bit-identical
+/// reports and Table-2 counters to sim/threaded/tcp (asserted by
+/// `tests/transport_equivalence.rs` and friends).
+pub struct EvloopTransport {
+    n_clients: usize,
+    stall_floor: Duration,
+    stall_cap: Duration,
+    poller: PollerKind,
+}
+
+impl EvloopTransport {
+    pub fn new(n_clients: usize) -> Self {
+        EvloopTransport {
+            n_clients,
+            stall_floor: DEFAULT_STALL_TIMEOUT,
+            stall_cap: DEFAULT_STALL_CAP,
+            poller: PollerKind::Auto,
+        }
+    }
+
+    /// Override the dropout-detection floor (reachable from
+    /// `RunConfig::stall_timeout_ms`).
+    pub fn with_stall_timeout(mut self, stall_timeout: Duration) -> Self {
+        self.stall_floor = stall_timeout;
+        self
+    }
+
+    /// Override the adaptive window's cap (reachable from
+    /// `RunConfig::stall_cap_ms`).
+    pub fn with_stall_cap(mut self, cap: Duration) -> Self {
+        self.stall_cap = cap;
+        self
+    }
+
+    /// Force a poller backend (tests pin the `poll(2)` fallback
+    /// without the `VFL_EVLOOP_POLLER` env race).
+    pub fn with_poller(mut self, kind: PollerKind) -> Self {
+        self.poller = kind;
+        self
+    }
+}
+
+impl Transport for EvloopTransport {
+    fn execute<'e>(
+        &mut self,
+        parties: Vec<Box<dyn Party + 'e>>,
+        schedule: &[RoundSpec],
+        window: usize,
+    ) -> Result<TransportOutcome> {
+        assert_eq!(parties.len(), self.n_clients + 1, "aggregator + clients");
+        // same boundary check as the threaded transport: client
+        // parties run on sibling threads here
+        if parties.iter().any(|p| !p.concurrent_safe()) {
+            bail!(
+                "the evloop transport requires the reference backend \
+                 (a shared PJRT engine is not audited for concurrent use)"
+            );
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind localhost")?;
+        let addr = listener.local_addr().context("local addr")?.to_string();
+        let mut parties = parties;
+        let aggregator = parties.remove(0);
+        let clock = StallClock::new(self.stall_floor, self.stall_cap);
+        let (n_clients, kind) = (self.n_clients, self.poller);
+
+        thread::scope(|s| -> Result<TransportOutcome> {
+            let mut handles = Vec::with_capacity(parties.len());
+            for (ci, mut party) in parties.into_iter().enumerate() {
+                let addr = addr.clone();
+                handles.push(s.spawn(move || {
+                    let r = tcp::join_addr(&addr, ci, &mut *party);
+                    (party, r)
+                }));
+            }
+            let served = serve_on(listener, aggregator, schedule, n_clients, clock, window, kind);
+            // join the client threads either way: a server error drops
+            // its sockets, which unblocks every client read with EOF
+            let mut clients: Vec<Box<dyn Party + 'e>> = Vec::with_capacity(handles.len());
+            let mut client_err: Option<anyhow::Error> = None;
+            for h in handles {
+                match h.join() {
+                    Ok((party, r)) => {
+                        clients.push(party);
+                        if let Err(e) = r {
+                            client_err.get_or_insert(e);
+                        }
+                    }
+                    Err(_) => {
+                        client_err.get_or_insert_with(|| anyhow!("client thread panicked"));
+                    }
+                }
+            }
+            let served = served?; // the server error wins
+            if let Some(e) = client_err {
+                // the server completed, so the protocol did: a late
+                // client-side error (e.g. while reading Stop) is worth
+                // reporting but not failing a finished run over
+                eprintln!("evloop: client-side error after completion: {e:#}");
+            }
+            // ServeOutcome.metrics already holds the aggregator's
+            // meters + pipeline + connection counters; harvest adds
+            // the client parties' meters and the final parameters
+            harvest(clients, served.notes, served.net, served.metrics)
+        })
+    }
+}

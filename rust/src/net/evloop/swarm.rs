@@ -1,0 +1,637 @@
+//! The C10K load generator (`vfl-sa swarm --clients N`): N lightweight
+//! simulated passive clients against one event-loop aggregator over
+//! real localhost sockets, in one process.
+//!
+//! This is a *transport* benchmark, not a protocol run: the server
+//! multiplexes every socket on one event-loop thread (the same
+//! [`Poller`]/[`Conn`] machinery `evloop::serve_on` uses), paces
+//! `rounds` barrier rounds — broadcast a tiny "go" frame, collect one
+//! deterministic payload frame from every client — and folds every
+//! payload word into a running ℤ₂⁶⁴ checksum. The checksum is
+//! recomputed independently from the generator formula, so a single
+//! lost, duplicated, or corrupted frame anywhere in 10k+ concurrent
+//! streams fails the run loudly.
+//!
+//! Clients are nonblocking too, multiplexed across a few worker
+//! threads (`client_threads`) with their own pollers — no
+//! thread-per-client anywhere in the process. Memory flatness is
+//! metered with the same [`Metrics`] counters the real transport
+//! uses: peak live connections and peak per-connection buffered
+//! bytes, plus the process-level `VmHWM` RSS high-water mark on
+//! Linux.
+
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::metrics::AGGREGATOR;
+use crate::coordinator::Metrics;
+
+use super::super::frame::Frame;
+use super::conn::{Conn, ReadOutcome};
+use super::poller::{Interest, Poller, PollerKind};
+
+const LISTENER_TOKEN: usize = usize::MAX;
+/// How long a quiescent swarm phase may sit before the run is
+/// declared stalled (generous: a cold 10k join takes a few seconds).
+const PHASE_TIMEOUT: Duration = Duration::from_secs(60);
+const STOP_DRAIN: Duration = Duration::from_secs(10);
+
+/// Swarm shape. `Default` is the acceptance-criteria configuration:
+/// 10 240 clients, 3 rounds, 32-word payloads, 4 client threads.
+#[derive(Clone, Debug)]
+pub struct SwarmCfg {
+    /// Concurrent simulated clients (≤ `u16::MAX`, the Hello index
+    /// space).
+    pub clients: usize,
+    /// Barrier rounds: each broadcasts a go frame and collects one
+    /// payload per client.
+    pub rounds: u32,
+    /// ℤ₂⁶⁴ words per payload frame.
+    pub payload_words: usize,
+    /// Worker threads multiplexing the client sockets.
+    pub client_threads: usize,
+    /// Poller backend (tests pin the `poll(2)` fallback).
+    pub poller: PollerKind,
+}
+
+impl Default for SwarmCfg {
+    fn default() -> Self {
+        SwarmCfg {
+            clients: 10_240,
+            rounds: 3,
+            payload_words: 32,
+            client_threads: 4,
+            poller: PollerKind::Auto,
+        }
+    }
+}
+
+/// What a swarm run measured.
+#[derive(Clone, Debug)]
+pub struct SwarmReport {
+    pub clients: usize,
+    pub rounds: u32,
+    pub payload_words: usize,
+    pub wall_ms: f64,
+    /// Peak simultaneously-live connections at the aggregator
+    /// (== `clients` when every join landed).
+    pub peak_live_connections: u64,
+    /// Peak bytes any single aggregator-side connection buffered —
+    /// the flat-per-client memory claim.
+    pub peak_conn_buffered_bytes: u64,
+    /// Total payload bytes the aggregator received.
+    pub bytes_received: u64,
+    /// ℤ₂⁶⁴ fold of every payload word received.
+    pub checksum: u64,
+    /// The same fold recomputed from the generator formula.
+    pub expected_checksum: u64,
+    /// Which poller backend the server used.
+    pub poller: &'static str,
+    /// Process RSS high-water mark (`VmHWM`, Linux; 0 elsewhere).
+    pub rss_peak_kb: u64,
+}
+
+impl SwarmReport {
+    /// Every payload frame arrived intact, exactly once.
+    pub fn verified(&self) -> bool {
+        self.checksum == self.expected_checksum
+    }
+
+    /// Hand-rolled JSON (the repo's no-serde convention; same style as
+    /// `BENCH_streaming.json`).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"clients\": {}, \"rounds\": {}, \"payload_words\": {}, \"wall_ms\": {:.3}, \
+             \"peak_live_connections\": {}, \"peak_conn_buffered_bytes\": {}, \
+             \"bytes_received\": {}, \"checksum_ok\": {}, \"poller\": \"{}\", \
+             \"rss_peak_kb\": {}}}",
+            self.clients,
+            self.rounds,
+            self.payload_words,
+            self.wall_ms,
+            self.peak_live_connections,
+            self.peak_conn_buffered_bytes,
+            self.bytes_received,
+            self.verified(),
+            self.poller,
+            self.rss_peak_kb,
+        )
+    }
+}
+
+/// The deterministic payload word for (client, round, word index):
+/// cheap to generate on the client, cheap to re-derive on the driver,
+/// and position-sensitive enough that reordered or cross-wired bytes
+/// change the fold.
+fn word(c: u64, r: u64, j: u64) -> u64 {
+    c.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (r << 32) ^ j
+}
+
+/// `[u16 client ‖ u32 round ‖ payload_words × u64]`, all LE.
+fn payload_frame(c: usize, round: u32, payload_words: usize) -> Frame {
+    let mut bytes = Vec::with_capacity(6 + payload_words * 8);
+    bytes.extend_from_slice(&(c as u16).to_le_bytes());
+    bytes.extend_from_slice(&round.to_le_bytes());
+    for j in 0..payload_words {
+        bytes.extend_from_slice(&word(c as u64, round as u64, j as u64).to_le_bytes());
+    }
+    Frame::Msg { bytes }
+}
+
+fn expected_checksum(cfg: &SwarmCfg) -> u64 {
+    let mut sum = 0u64;
+    for c in 0..cfg.clients as u64 {
+        for r in 0..cfg.rounds as u64 {
+            for j in 0..cfg.payload_words as u64 {
+                sum = sum.wrapping_add(word(c, r, j));
+            }
+        }
+    }
+    sum
+}
+
+#[cfg(target_os = "linux")]
+mod os {
+    /// Best-effort: raise the soft `RLIMIT_NOFILE` to the hard limit
+    /// (10k clients cost ~20k fds in one process) and return the
+    /// resulting soft limit. Same extern-libc-symbol trick as the
+    /// poller — std links libc.
+    pub fn raise_nofile() -> u64 {
+        #[repr(C)]
+        struct Rlimit {
+            cur: u64,
+            max: u64,
+        }
+        const RLIMIT_NOFILE: i32 = 7;
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+            fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+        }
+        unsafe {
+            let mut r = Rlimit { cur: 0, max: 0 };
+            if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+                return 0;
+            }
+            if r.cur < r.max {
+                let want = Rlimit { cur: r.max, max: r.max };
+                if setrlimit(RLIMIT_NOFILE, &want) == 0 {
+                    return r.max;
+                }
+            }
+            r.cur
+        }
+    }
+
+    /// `VmHWM` from `/proc/self/status`, in kB (0 if unreadable).
+    pub fn rss_peak_kb() -> u64 {
+        let Ok(s) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                return rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+            }
+        }
+        0
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod os {
+    /// Non-Linux: no rlimit shim; report "no limit known" so the
+    /// preflight check passes and the OS enforces whatever it has.
+    pub fn raise_nofile() -> u64 {
+        u64::MAX
+    }
+
+    pub fn rss_peak_kb() -> u64 {
+        0
+    }
+}
+
+/// Run one swarm: returns the report; the caller decides whether an
+/// unverified checksum is fatal (the CLI and tests both treat it so).
+pub fn run(cfg: &SwarmCfg) -> Result<SwarmReport> {
+    if cfg.clients == 0 || cfg.rounds == 0 || cfg.payload_words == 0 || cfg.client_threads == 0 {
+        bail!("swarm needs at least one client, round, payload word, and client thread");
+    }
+    if cfg.clients > u16::MAX as usize {
+        bail!("--clients {} exceeds the Hello frame's u16 index space", cfg.clients);
+    }
+    let needed = cfg.clients as u64 * 2 + 64; // both socket ends live here
+    let limit = os::raise_nofile();
+    if limit < needed {
+        bail!(
+            "fd limit {limit} is too low for {} in-process clients (need ~{needed}; \
+             raise `ulimit -n` or lower --clients)",
+            cfg.clients
+        );
+    }
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind localhost")?;
+    let addr = listener.local_addr().context("local addr")?.to_string();
+    let t0 = Instant::now();
+
+    let (io, bytes_received, checksum, poller_name) = thread::scope(|s| -> Result<_> {
+        let mut handles = Vec::with_capacity(cfg.client_threads);
+        // split the client index space into contiguous worker shares
+        let per = cfg.clients.div_ceil(cfg.client_threads);
+        for w in 0..cfg.client_threads {
+            let lo = w * per;
+            let hi = ((w + 1) * per).min(cfg.clients);
+            if lo >= hi {
+                break;
+            }
+            let addr = addr.clone();
+            let (words, kind) = (cfg.payload_words, cfg.poller);
+            handles.push(s.spawn(move || client_worker(&addr, lo..hi, words, kind)));
+        }
+        let served = swarm_serve(listener, cfg);
+        let mut worker_err: Option<anyhow::Error> = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    worker_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    worker_err.get_or_insert_with(|| anyhow::anyhow!("client worker panicked"));
+                }
+            }
+        }
+        let served = served?; // the server error wins
+        if let Some(e) = worker_err {
+            return Err(e.context("swarm client worker failed"));
+        }
+        Ok(served)
+    })?;
+
+    let report = SwarmReport {
+        clients: cfg.clients,
+        rounds: cfg.rounds,
+        payload_words: cfg.payload_words,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        peak_live_connections: io.peak_connections(AGGREGATOR),
+        peak_conn_buffered_bytes: io.peak_conn_buffered_bytes(AGGREGATOR),
+        bytes_received,
+        checksum,
+        expected_checksum: expected_checksum(cfg),
+        poller: poller_name,
+        rss_peak_kb: os::rss_peak_kb(),
+    };
+    Ok(report)
+}
+
+/// Drain a conn's outbound queue and keep its poller interest honest.
+/// Swarm semantics: any I/O failure is fatal (a benchmark with a
+/// silently dropped client measures nothing).
+fn flush(
+    poller: &mut Poller,
+    conns: &mut [Option<Conn>],
+    token: usize,
+    io: &mut Metrics,
+) -> Result<()> {
+    let Some(conn) = conns.get_mut(token).and_then(Option::as_mut) else { return Ok(()) };
+    match conn.write_ready() {
+        Ok(drained) => {
+            io.record_conn_buffered(AGGREGATOR, conn.buffered_bytes() as u64);
+            let want = if drained { Interest::READ } else { Interest::BOTH };
+            if conn.interest != want {
+                conn.interest = want;
+                poller.reregister(conn.fd, token, want).context("reregister")?;
+            }
+            Ok(())
+        }
+        Err(e) => bail!("swarm conn {token} write failed: {e}"),
+    }
+}
+
+fn enqueue(
+    poller: &mut Poller,
+    conns: &mut [Option<Conn>],
+    token: usize,
+    frame: &Frame,
+    io: &mut Metrics,
+) -> Result<()> {
+    let Some(conn) = conns.get_mut(token).and_then(Option::as_mut) else {
+        bail!("swarm conn {token} is gone")
+    };
+    conn.out.enqueue(frame, token)?;
+    flush(poller, conns, token, io)
+}
+
+/// The aggregator side: accept every client, pace the rounds, fold
+/// the checksum.
+fn swarm_serve(listener: TcpListener, cfg: &SwarmCfg) -> Result<(Metrics, u64, u64, &'static str)> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut poller = cfg.poller.build().context("build poller")?;
+    let name = poller.name();
+    poller
+        .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)
+        .context("register listener")?;
+    let mut conns: Vec<Option<Conn>> = Vec::with_capacity(cfg.clients);
+    let mut seen: Vec<bool> = vec![false; cfg.clients];
+    let mut io = Metrics::new();
+    let mut live = 0u64;
+    let mut joined = 0usize;
+    let mut events = Vec::new();
+
+    // -- join: accept until every client index said Hello
+    while joined < cfg.clients {
+        poller.wait(&mut events, Some(PHASE_TIMEOUT)).context("poll (join)")?;
+        if events.is_empty() {
+            bail!("swarm join stalled at {joined}/{} clients", cfg.clients);
+        }
+        for i in 0..events.len() {
+            let ev = events[i];
+            if ev.token == LISTENER_TOKEN {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nodelay(true).ok();
+                            stream.set_nonblocking(true).context("set_nonblocking")?;
+                            let fd = stream.as_raw_fd();
+                            let token = conns.len();
+                            poller.register(fd, token, Interest::READ).context("register")?;
+                            conns.push(Some(Conn::new(stream, fd)));
+                            live += 1;
+                            io.record_connections(AGGREGATOR, live);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(e) => return Err(e).context("accept"),
+                    }
+                }
+                continue;
+            }
+            let Some(conn) = conns.get_mut(ev.token).and_then(Option::as_mut) else { continue };
+            let mut frames = Vec::new();
+            let outcome = conn.read_ready(&mut frames);
+            io.record_conn_buffered(AGGREGATOR, conn.buffered_bytes() as u64);
+            for f in frames {
+                let Frame::Hello { client } = f else { bail!("expected Hello, got {f:?}") };
+                let c = client as usize;
+                if c >= cfg.clients || seen[c] {
+                    bail!("bad or duplicate Hello for client {c}");
+                }
+                seen[c] = true;
+                conn.client = Some(c);
+                joined += 1;
+            }
+            if let ReadOutcome::Closed(why) = outcome {
+                bail!("swarm client lost during join: {why}");
+            }
+        }
+    }
+    poller.deregister(listener.as_raw_fd()).ok();
+
+    // -- rounds: go-barrier-collect, folding every payload word
+    let mut checksum = 0u64;
+    let mut bytes_received = 0u64;
+    for r in 0..cfg.rounds {
+        let go = Frame::Msg { bytes: r.to_le_bytes().to_vec() };
+        for token in 0..conns.len() {
+            enqueue(&mut poller, &mut conns, token, &go, &mut io)?;
+        }
+        let mut got = 0usize;
+        while got < cfg.clients {
+            poller.wait(&mut events, Some(PHASE_TIMEOUT)).context("poll (round)")?;
+            if events.is_empty() {
+                bail!("swarm round {r} stalled at {got}/{} payloads", cfg.clients);
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.writable {
+                    flush(&mut poller, &mut conns, ev.token, &mut io)?;
+                }
+                if !(ev.readable || ev.hangup) {
+                    continue;
+                }
+                let Some(conn) = conns.get_mut(ev.token).and_then(Option::as_mut) else {
+                    continue;
+                };
+                let mut frames = Vec::new();
+                let outcome = conn.read_ready(&mut frames);
+                io.record_conn_buffered(AGGREGATOR, conn.buffered_bytes() as u64);
+                for f in frames {
+                    let Frame::Msg { bytes } = f else { bail!("expected payload, got {f:?}") };
+                    if bytes.len() != 6 + cfg.payload_words * 8 {
+                        bail!("payload size {} unexpected", bytes.len());
+                    }
+                    let round = u32::from_le_bytes([bytes[2], bytes[3], bytes[4], bytes[5]]);
+                    if round != r {
+                        bail!("payload for round {round} during round {r}");
+                    }
+                    for w in bytes[6..].chunks_exact(8) {
+                        checksum = checksum.wrapping_add(u64::from_le_bytes(
+                            w.try_into().expect("exact 8-byte chunk"),
+                        ));
+                    }
+                    bytes_received += bytes.len() as u64;
+                    got += 1;
+                }
+                if let ReadOutcome::Closed(why) = outcome {
+                    bail!("swarm client vanished mid-round: {why}");
+                }
+            }
+        }
+    }
+
+    // -- orderly stop: enqueue Stop everywhere, drain, close
+    for token in 0..conns.len() {
+        enqueue(&mut poller, &mut conns, token, &Frame::Stop, &mut io)?;
+    }
+    let deadline = Instant::now() + STOP_DRAIN;
+    loop {
+        let mut pending = false;
+        for token in 0..conns.len() {
+            match conns[token].as_ref() {
+                Some(c) if c.out.is_empty() => {
+                    let fd = c.fd;
+                    poller.deregister(fd).ok();
+                    conns[token] = None;
+                    live -= 1;
+                }
+                Some(_) => pending = true,
+                None => {}
+            }
+        }
+        if !pending || Instant::now() >= deadline {
+            break;
+        }
+        poller.wait(&mut events, Some(Duration::from_millis(100))).context("poll (drain)")?;
+        for i in 0..events.len() {
+            let ev = events[i];
+            if ev.writable {
+                flush(&mut poller, &mut conns, ev.token, &mut io)?;
+            }
+        }
+    }
+    Ok((io, bytes_received, checksum, name))
+}
+
+/// Localhost connects can transiently fail while thousands of sockets
+/// churn; retry with backoff before giving up.
+fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    let mut delay = Duration::from_millis(5);
+    for _ in 0..40 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return Ok(s);
+        }
+        thread::sleep(delay);
+        delay = (delay * 2).min(Duration::from_millis(200));
+    }
+    TcpStream::connect(addr).with_context(|| format!("connect {addr}"))
+}
+
+/// One worker thread's share of the swarm: connect its client range,
+/// then multiplex them all on one poller — respond to each go frame
+/// with the round's payload, close on Stop.
+fn client_worker(
+    addr: &str,
+    ids: std::ops::Range<usize>,
+    payload_words: usize,
+    kind: PollerKind,
+) -> Result<()> {
+    let mut poller = kind.build().context("build client poller")?;
+    let mut conns: Vec<Option<Conn>> = Vec::with_capacity(ids.len());
+    for c in ids {
+        let mut stream = connect_with_retry(addr)?;
+        stream.set_nodelay(true).ok();
+        // handshake while still blocking: a few bytes, never stalls
+        Frame::Hello { client: c as u16 }.write_to(&mut stream)?;
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        let fd = stream.as_raw_fd();
+        let token = conns.len();
+        poller.register(fd, token, Interest::READ).context("register")?;
+        let mut conn = Conn::new(stream, fd);
+        conn.client = Some(c);
+        conns.push(Some(conn));
+    }
+    let mut remaining = conns.len();
+    let mut events = Vec::new();
+    while remaining > 0 {
+        poller.wait(&mut events, Some(PHASE_TIMEOUT)).context("poll (client)")?;
+        if events.is_empty() {
+            bail!("swarm clients stalled ({remaining} still open, server silent)");
+        }
+        for i in 0..events.len() {
+            let ev = events[i];
+            let token = ev.token;
+            if ev.writable {
+                flush_client(&mut poller, &mut conns, token)?;
+            }
+            if !(ev.readable || ev.hangup) {
+                continue;
+            }
+            let Some(conn) = conns.get_mut(token).and_then(Option::as_mut) else { continue };
+            let mut frames = Vec::new();
+            let outcome = conn.read_ready(&mut frames);
+            let c = conn.client.expect("swarm conns always carry a client id");
+            let mut saw_stop = false;
+            for f in frames {
+                match f {
+                    Frame::Msg { bytes } => {
+                        if bytes.len() != 4 {
+                            bail!("unexpected go frame size {}", bytes.len());
+                        }
+                        let round = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+                        let payload = payload_frame(c, round, payload_words);
+                        conn.out.enqueue(&payload, token)?;
+                    }
+                    Frame::Stop => saw_stop = true,
+                    f => bail!("unexpected frame {f:?}"),
+                }
+            }
+            if saw_stop {
+                poller.deregister(conn.fd).ok();
+                conns[token] = None;
+                remaining -= 1;
+            } else if let ReadOutcome::Closed(why) = outcome {
+                bail!("server dropped swarm client {c}: {why}");
+            } else {
+                flush_client(&mut poller, &mut conns, token)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn flush_client(poller: &mut Poller, conns: &mut [Option<Conn>], token: usize) -> Result<()> {
+    let Some(conn) = conns.get_mut(token).and_then(Option::as_mut) else { return Ok(()) };
+    match conn.write_ready() {
+        Ok(drained) => {
+            let want = if drained { Interest::READ } else { Interest::BOTH };
+            if conn.interest != want {
+                conn.interest = want;
+                poller.reregister(conn.fd, token, want).context("reregister")?;
+            }
+            Ok(())
+        }
+        Err(e) => bail!("swarm client write failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_roundtrips_through_the_checksum() {
+        // the server-side fold of generated payloads equals the
+        // independent expected fold
+        let cfg = SwarmCfg {
+            clients: 5,
+            rounds: 2,
+            payload_words: 3,
+            client_threads: 1,
+            poller: PollerKind::PollFallback,
+        };
+        let mut fold = 0u64;
+        for c in 0..cfg.clients {
+            for r in 0..cfg.rounds {
+                let Frame::Msg { bytes } = payload_frame(c, r, cfg.payload_words) else {
+                    unreachable!()
+                };
+                assert_eq!(bytes.len(), 6 + cfg.payload_words * 8);
+                for w in bytes[6..].chunks_exact(8) {
+                    fold = fold.wrapping_add(u64::from_le_bytes(w.try_into().unwrap()));
+                }
+            }
+        }
+        assert_eq!(fold, expected_checksum(&cfg));
+    }
+
+    #[test]
+    fn word_formula_is_position_sensitive() {
+        // swapping client/round/word indices changes the word — the
+        // checksum can detect cross-wired frames, not just lost ones
+        assert_ne!(word(1, 0, 0), word(0, 1, 0));
+        assert_ne!(word(0, 1, 0), word(0, 0, 1));
+        assert_ne!(word(2, 3, 4), word(4, 3, 2));
+    }
+
+    /// A tiny end-to-end swarm on the poll(2) fallback: every frame
+    /// accounted for, peak connections == clients.
+    #[test]
+    fn small_swarm_end_to_end_on_poll_fallback() {
+        let cfg = SwarmCfg {
+            clients: 24,
+            rounds: 2,
+            payload_words: 8,
+            client_threads: 2,
+            poller: PollerKind::PollFallback,
+        };
+        let report = run(&cfg).unwrap();
+        assert!(report.verified(), "checksum mismatch: {report:?}");
+        assert_eq!(report.peak_live_connections, 24);
+        assert_eq!(
+            report.bytes_received,
+            (24 * 2 * (6 + 8 * 8)) as u64,
+            "every payload frame metered"
+        );
+        assert_eq!(report.poller, "poll");
+        assert!(report.peak_conn_buffered_bytes > 0, "queue depths were metered");
+    }
+}

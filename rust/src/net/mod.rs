@@ -12,23 +12,47 @@
 //! * [`frame`] / [`tcp`] — length-prefixed socket framing (bodies are
 //!   capped at [`frame::MAX_FRAME_LEN`] on both the write and the read
 //!   side, with the typed [`frame::FrameTooLong`] error) and the
-//!   cross-process `serve`/`join` plumbing.
+//!   cross-process `serve`/`join` plumbing, one thread per connection
+//!   with blocking I/O (writes are bounded by
+//!   [`tcp::DEFAULT_WRITE_TIMEOUT`] and surface the typed
+//!   [`tcp::WriteStalled`] error instead of deadlocking).
+//! * [`evloop`] (unix) — [`EvloopTransport`]: the same sockets and
+//!   frames, multiplexed on a *single* readiness-driven event-loop
+//!   thread (epoll on Linux, portable `poll(2)` fallback). No thread
+//!   per client and no blocking writes anywhere, which is what scales
+//!   the aggregator to 10k+ concurrent clients — `vfl-sa swarm`
+//!   demonstrates it live.
 //! * [`faulty`] — deterministic fault injection ([`FaultPlan`],
 //!   [`FaultyTransport`]): seeded crash/drop/delay/corrupt schedules
 //!   applied identically on every transport, the proof harness for the
 //!   dropout-tolerant protocol. Faults count messages, so under the
 //!   chunked streaming pipeline they land on individual chunks.
 //!
+//! # The four-transport story
+//!
+//! All four transports run the *same* party state machines over the
+//! *same* message codec and produce bit-identical reports; they differ
+//! only in who moves the bytes:
+//!
+//! | transport | concurrency | bytes move via | scales to |
+//! |---|---|---|---|
+//! | `SimTransport` | none (deterministic loop) | global FIFO | debugging |
+//! | `ThreadedTransport` | thread per party | channels | tens |
+//! | `tcp` | thread per connection | blocking sockets | hundreds |
+//! | `evloop` | one event-loop thread | nonblocking sockets | 10k+ |
+//!
 //! Every transport carries chunked masked tensors (`Msg::MaskedChunk`
 //! uplink, `Msg::GradientChunk` downlink) exactly like any other
 //! protocol message: the simulator pumps them through its global FIFO,
-//! the threaded transport through per-party channels, TCP inside
-//! [`frame`]s — the per-sender FIFO guarantee each transport already
-//! provides is the only ordering the chunk assembler needs. Whether
-//! the aggregator folds those chunks inline or across `--agg-workers`
-//! shard workers is invisible to the transport (and to every output
-//! bit).
+//! the threaded transport through per-party channels, the socket
+//! transports inside [`frame`]s — the per-sender FIFO guarantee each
+//! transport already provides is the only ordering the chunk assembler
+//! needs. Whether the aggregator folds those chunks inline or across
+//! `--agg-workers` shard workers is invisible to the transport (and to
+//! every output bit).
 
+#[cfg(unix)]
+pub mod evloop;
 pub mod faulty;
 pub mod frame;
 pub mod tcp;
@@ -36,8 +60,11 @@ pub mod threaded;
 pub mod transport;
 pub mod wire;
 
+#[cfg(unix)]
+pub use evloop::EvloopTransport;
 pub use faulty::{Fault, FaultPlan, FaultyParty, FaultyTransport};
 pub use frame::{FrameTooLong, MAX_FRAME_LEN};
+pub use tcp::{WriteStalled, DEFAULT_WRITE_TIMEOUT};
 pub use threaded::ThreadedTransport;
 pub use transport::{Addr, Network, Phase, SimTransport, StallClock, Transport, TransportOutcome};
 pub use wire::{Reader, Writer};

@@ -14,7 +14,22 @@
 //! Every process builds the same deterministic synthetic dataset from
 //! the shared `RunConfig` seed, so no raw features ever cross a
 //! socket that wouldn't in the simulated protocol.
+//!
+//! Blocking writes and the deadlock bound
+//! --------------------------------------
+//! This transport writes frames with blocking `write_all` on both
+//! sides. When the server is mid-broadcast of a large frame while
+//! clients are simultaneously mid-write of large chunked tensors,
+//! both directions' socket buffers can fill and both ends block in
+//! `write` forever — a classic distributed write-write deadlock. All
+//! sockets therefore arm [`DEFAULT_WRITE_TIMEOUT`]: a write stalled
+//! past it fails with the typed [`WriteStalled`] error (the server
+//! marks that client dropped; a client surfaces it as its failure)
+//! instead of hanging the run. The timeout is a bound, not a fix —
+//! the real fix is the [`evloop`](super::evloop) transport, whose
+//! event loop never issues a blocking write at all.
 
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::thread;
@@ -46,6 +61,55 @@ enum Event {
     Gone(usize, String),
 }
 
+/// How long a blocking frame write may stall before it fails with
+/// [`WriteStalled`] instead of deadlocking (see the module docs).
+pub const DEFAULT_WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Typed error for a blocking socket write that exhausted
+/// [`DEFAULT_WRITE_TIMEOUT`]: the peer stopped draining its receive
+/// buffer, the would-be-deadlock case. Callers can downcast an
+/// `anyhow::Error` to this to tell a stalled peer from other
+/// transport failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WriteStalled {
+    /// The exhausted timeout.
+    pub timeout: std::time::Duration,
+}
+
+impl std::fmt::Display for WriteStalled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "socket write stalled past {:?} (peer not draining; the write-write deadlock \
+             the evloop transport avoids by design)",
+            self.timeout
+        )
+    }
+}
+
+impl std::error::Error for WriteStalled {}
+
+/// Write one frame through a socket with a write timeout armed,
+/// converting a timeout (`WouldBlock`/`TimedOut` — platforms differ)
+/// into the typed [`WriteStalled`] error. Every frame write in this
+/// module goes through here; the streams are always blocking, so
+/// those kinds can only mean the timeout fired.
+fn write_frame(w: &mut impl Write, f: &Frame) -> Result<()> {
+    f.write_to(w).map_err(|e| {
+        let stalled = e.root_cause().downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        });
+        if stalled {
+            e.context(WriteStalled { timeout: DEFAULT_WRITE_TIMEOUT })
+        } else {
+            e
+        }
+    })
+}
+
 // The server's quiescence window before probing the aggregator for
 // dropped parties ([`Party::on_stall`]) is the same adaptive
 // [`StallClock`] the threaded transport uses (EWMA of inter-frame
@@ -71,7 +135,7 @@ fn route_server(
         let bytes = msg.encode();
         net.meter(Addr::Aggregator, to, bytes.len());
         if let Some(w) = writers[ci].as_mut() {
-            if let Err(e) = (Frame::Msg { bytes }).write_to(w) {
+            if let Err(e) = write_frame(w, &Frame::Msg { bytes }) {
                 eprintln!("serve: client {ci} write failed ({e:#}), marking dropped");
                 writers[ci] = None;
             }
@@ -121,6 +185,8 @@ pub fn serve_on(
     while connected < n_clients {
         let (stream, peer) = listener.accept().context("accept")?;
         stream.set_nodelay(true).ok();
+        // bound the blocking-write deadlock (see the module docs)
+        stream.set_write_timeout(Some(DEFAULT_WRITE_TIMEOUT)).ok();
         let mut reader = stream.try_clone().context("clone stream")?;
         let hello = Frame::read_from(&mut reader)?;
         let Frame::Hello { client } = hello else { bail!("expected Hello, got {hello:?}") };
@@ -177,7 +243,7 @@ pub fn serve_on(
                 } else {
                     RoundSpec { ids: Vec::new(), ..spec.clone() }
                 };
-                if let Err(e) = Frame::Round(for_client).write_to(sock) {
+                if let Err(e) = write_frame(sock, &Frame::Round(for_client)) {
                     eprintln!("serve: client {ci} write failed ({e:#}), marking dropped");
                     *w = None;
                 }
@@ -275,12 +341,23 @@ pub fn serve_on(
 /// Run one client party against a serving aggregator. Returns the
 /// party's CPU meters once the server signals Stop.
 pub fn join(connect: &str, client: usize, mut party: Box<dyn Party + '_>) -> Result<Metrics> {
+    join_addr(connect, client, &mut *party)?;
+    Ok(party.take_metrics())
+}
+
+/// [`join`] against a *borrowed* party: connect, handshake, run the
+/// client loop. The in-process `EvloopTransport` (`super::evloop`)
+/// reuses this and keeps the boxed party for harvesting its meters
+/// and final parameters afterwards.
+pub(crate) fn join_addr(connect: &str, client: usize, party: &mut dyn Party) -> Result<()> {
     let mut stream = TcpStream::connect(connect).with_context(|| format!("connect {connect}"))?;
     stream.set_nodelay(true).ok();
-    Frame::Hello { client: client as u16 }.write_to(&mut stream)?;
+    // bound the blocking-write deadlock (see the module docs)
+    stream.set_write_timeout(Some(DEFAULT_WRITE_TIMEOUT)).ok();
+    write_frame(&mut stream, &Frame::Hello { client: client as u16 })?;
     eprintln!("join: client {client} connected to {connect}");
 
-    let result = client_loop(&mut *party, &mut stream);
+    let result = client_loop(party, &mut stream);
     if let Err(e) = &result {
         // best-effort: surface the failure to the server before dying
         let _ = Frame::Note(Note::Failed {
@@ -289,8 +366,39 @@ pub fn join(connect: &str, client: usize, mut party: Box<dyn Party + '_>) -> Res
         })
         .write_to(&mut stream);
     }
-    result?;
-    Ok(party.take_metrics())
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A writer that always reports one error kind — the blocking
+    /// socket whose write timeout just fired, or a plain failure.
+    struct Stall(std::io::ErrorKind);
+
+    impl Write for Stall {
+        fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::new(self.0, "stalled"))
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn stalled_write_surfaces_the_typed_error() {
+        // both kinds the platforms use for an expired SO_SNDTIMEO
+        for kind in [std::io::ErrorKind::WouldBlock, std::io::ErrorKind::TimedOut] {
+            let err = write_frame(&mut Stall(kind), &Frame::Stop).unwrap_err();
+            let st = err.downcast_ref::<WriteStalled>().expect("typed WriteStalled");
+            assert_eq!(st.timeout, DEFAULT_WRITE_TIMEOUT);
+        }
+        // an ordinary write failure stays untyped
+        let err =
+            write_frame(&mut Stall(std::io::ErrorKind::BrokenPipe), &Frame::Stop).unwrap_err();
+        assert!(err.downcast_ref::<WriteStalled>().is_none());
+    }
 }
 
 fn client_loop(party: &mut dyn Party, stream: &mut TcpStream) -> Result<()> {
@@ -310,10 +418,10 @@ fn client_loop(party: &mut dyn Party, stream: &mut TcpStream) -> Result<()> {
             if to != Addr::Aggregator {
                 bail!("clients may only address the aggregator");
             }
-            Frame::Msg { bytes: msg.encode() }.write_to(stream)?;
+            write_frame(stream, &Frame::Msg { bytes: msg.encode() })?;
         }
         for n in ob.notes {
-            Frame::Note(n).write_to(stream)?;
+            write_frame(stream, &Frame::Note(n))?;
         }
     }
 }

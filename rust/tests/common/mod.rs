@@ -14,7 +14,8 @@ use vfl::secagg::{setup_all, ClientSession};
 
 /// The standard small experiment: reference backend, 6 training rounds
 /// (crossing one K = 5 key-rotation boundary), one test round. Applies
-/// the `VFL_ROUNDS_IN_FLIGHT` CI axis (see [`apply_env_window`]).
+/// the `VFL_ROUNDS_IN_FLIGHT` and `VFL_TRANSPORT` CI axes (see
+/// [`apply_env_window`] / [`apply_env_transport`]).
 pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> RunConfig {
     let mut c = RunConfig::test(dataset).unwrap();
     c.security = mode;
@@ -22,7 +23,7 @@ pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> R
     c.transport = transport;
     c.train_rounds = 6;
     c.test_rounds = 1;
-    apply_env_window(c)
+    apply_env_transport(apply_env_window(c))
 }
 
 /// CI window-matrix hook: when `VFL_ROUNDS_IN_FLIGHT` is set, every
@@ -39,6 +40,25 @@ pub fn apply_env_window(mut c: RunConfig) -> RunConfig {
             .trim()
             .parse()
             .unwrap_or_else(|e| panic!("bad VFL_ROUNDS_IN_FLIGHT {w:?}: {e}"));
+    }
+    c
+}
+
+/// CI transport-matrix hook: when `VFL_TRANSPORT` is set, every
+/// fixture-built run uses that transport (`sim` | `threaded` |
+/// `evloop`), so the equivalence suites that prove the simulator also
+/// exercise the socket event loop end to end (bit-identity makes the
+/// override invisible to every assertion).
+pub fn apply_env_transport(mut c: RunConfig) -> RunConfig {
+    if let Ok(t) = std::env::var("VFL_TRANSPORT") {
+        // a set-but-unrecognized value must fail the suite, not
+        // silently run a transport CI thinks it is NOT running
+        c.transport = match t.trim() {
+            "sim" => TransportKind::Sim,
+            "threaded" => TransportKind::Threaded,
+            "evloop" => TransportKind::Evloop,
+            other => panic!("bad VFL_TRANSPORT {other:?} (want sim|threaded|evloop)"),
+        };
     }
     c
 }

@@ -255,6 +255,128 @@ fn delay_reordering_is_invisible() {
     assert_table2_identical(&baseline.net, &delayed.net);
 }
 
+/// The evloop path: the same seeded crash schedules, run through the
+/// readiness-driven socket transport end to end, stay bit-identical to
+/// the simulator — quiescence via poll-timeout idle probes instead of
+/// channel timeouts, same declarations, same recovery.
+#[cfg(unix)]
+#[test]
+fn evloop_recovery_matches_sim() {
+    for plan in [
+        FaultPlan::default().with(3, Fault::Crash { round: 1, after_sends: 0 }),
+        FaultPlan::default()
+            .with(2, Fault::Crash { round: 0, after_sends: 2 })
+            .with(3, Fault::Crash { round: 0, after_sends: 3 }),
+    ] {
+        let sim = run(Some(plan.clone()), TransportKind::Sim);
+        let ev = run(Some(plan.clone()), TransportKind::Evloop);
+        assert_reports_identical(&sim, &ev, &format!("evloop recovery: {plan:?}"));
+        assert_table2_identical(&sim.net, &ev.net);
+        assert!(sim.losses.iter().all(|l| l.is_finite()));
+    }
+}
+
+/// A *dead socket* is indistinguishable from a declared dropout: a
+/// client whose TCP connection simply vanishes at round 1 (no Failed
+/// note, no crash fault — the peer just hangs up) is detected by the
+/// evloop server's idle probes, declared dropped, and recovered — and
+/// the run is bit-identical to the simulated run where the same client
+/// runs a declared `Crash {{ round: 1 }}` fault.
+#[cfg(unix)]
+#[test]
+fn evloop_dead_socket_equals_declared_dropout() {
+    use vfl::coordinator::{Outbox, RoundKind};
+    use vfl::net::frame::Frame;
+    use vfl::net::evloop;
+
+    const DEAD: usize = 3;
+    let plan = FaultPlan::default().with(DEAD, Fault::Crash { round: 1, after_sends: 0 });
+    let mut cfg = dropout_cfg(T, Some(plan), TransportKind::Sim);
+    cfg.train_rounds = 2; // keep the socket run short
+    let sim = run_experiment(cfg.clone(), None).unwrap();
+
+    // the socket run injects no fault at all — client DEAD's process
+    // "dies" by dropping its stream when round 1 opens
+    let mut cfg = cfg;
+    cfg.fault_plan = None;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let n_clients = cfg.model.n_clients();
+
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        let built = build(&server_cfg, None).unwrap();
+        let mut parties = built.parties;
+        let aggregator = parties.remove(0);
+        drop(parties);
+        let clock = StallClock::from_config(server_cfg.stall_timeout_ms, server_cfg.stall_cap_ms);
+        let out = evloop::serve_on(
+            listener,
+            aggregator,
+            &built.schedule,
+            n_clients,
+            clock,
+            server_cfg.rounds_in_flight,
+            evloop::PollerKind::Auto,
+        )?;
+        Ok::<_, anyhow::Error>((summarize(&built.schedule, &built.test_labels, &out.notes), out))
+    });
+
+    let mut clients = Vec::new();
+    for client in 0..n_clients {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let built = build(&cfg, None).unwrap();
+            let mut parties = built.parties;
+            let mut party = parties.remove(client + 1);
+            drop(parties);
+            if client != DEAD {
+                vfl::net::tcp::join(&addr, client, party)?;
+                return Ok(());
+            }
+            // client DEAD: a hand-rolled client loop that behaves
+            // normally until training round 1 opens, then hangs up
+            let mut stream = std::net::TcpStream::connect(&addr)?;
+            stream.set_nodelay(true).ok();
+            Frame::Hello { client: client as u16 }.write_to(&mut stream)?;
+            loop {
+                let mut ob = Outbox::default();
+                match Frame::read_from(&mut stream)? {
+                    Frame::Stop => return Ok(()),
+                    Frame::Round(spec) => {
+                        if spec.kind == RoundKind::Train && spec.round == 1 {
+                            return Ok(()); // drop the stream: the "crash"
+                        }
+                        party.on_round_start(&spec, &mut ob)?;
+                    }
+                    Frame::Msg { bytes } => {
+                        let msg = vfl::coordinator::messages::Msg::decode(&bytes)?;
+                        party.on_message(vfl::net::Addr::Aggregator, msg, &mut ob)?;
+                    }
+                    f => anyhow::bail!("unexpected frame {f:?}"),
+                }
+                for (to, msg) in ob.msgs {
+                    assert_eq!(to, vfl::net::Addr::Aggregator);
+                    Frame::Msg { bytes: msg.encode() }.write_to(&mut stream)?;
+                }
+                for n in ob.notes {
+                    Frame::Note(n).write_to(&mut stream)?;
+                }
+            }
+        }));
+    }
+
+    let (summary, _out) = server.join().unwrap().unwrap();
+    for c in clients {
+        c.join().unwrap().unwrap();
+    }
+    assert_eq!(summary.losses, sim.losses, "dead socket must equal declared dropout");
+    assert_eq!(summary.predictions, sim.predictions);
+    assert_eq!(summary.test_accuracy, sim.test_accuracy);
+}
+
 /// The TCP path: a real socket run with a crashing client, detected by
 /// the server's stall timeout, produces the same losses and
 /// predictions as the simulated run of the identical schedule.

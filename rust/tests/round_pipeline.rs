@@ -4,8 +4,9 @@
 //! * **Bit-identity across window widths.** W ∈ {1, 2, 4} produce
 //!   bit-identical predictions, parameters, losses, accuracy, *and*
 //!   per-(phase, node, direction) Table-2 byte counters, on the
-//!   simulator, the threaded transport, and TCP — for the monolithic
-//!   path and the chunked shard-parallel streaming pipeline alike.
+//!   simulator, the threaded transport, TCP, and the socket event
+//!   loop — for the monolithic path and the chunked shard-parallel
+//!   streaming pipeline alike.
 //!   Rounds start in schedule order; setup/rotation rounds and phase
 //!   boundaries are barriers; training rounds chain through the active
 //!   party's SGD data dependency — so a wider window can only shrink
@@ -51,11 +52,12 @@ fn with_chunks(mut c: RunConfig) -> RunConfig {
 }
 
 /// Acceptance criterion: the window sweep is invisible in every report
-/// bit and every Table-2 counter, monolithic and chunked, sim and
-/// threaded. More test rounds than the default so the windowed testing
+/// bit and every Table-2 counter, monolithic and chunked, on the
+/// simulator, the threaded transport, and (on unix) the socket event
+/// loop. More test rounds than the default so the windowed testing
 /// phase genuinely overlaps.
 #[test]
-fn window_sweep_bit_identical_on_sim_and_threaded() {
+fn window_sweep_bit_identical_across_transports() {
     for chunked in [false, true] {
         let mk = |transport| {
             let mut c = secure_cfg(transport);
@@ -69,7 +71,11 @@ fn window_sweep_bit_identical_on_sim_and_threaded() {
             c
         };
         let mut baseline: Option<RunReport> = None;
-        for transport in [TransportKind::Sim, TransportKind::Threaded] {
+        #[cfg(unix)]
+        let transports = [TransportKind::Sim, TransportKind::Threaded, TransportKind::Evloop];
+        #[cfg(not(unix))]
+        let transports = [TransportKind::Sim, TransportKind::Threaded];
+        for transport in transports {
             for width in WIDTHS {
                 let mut c = mk(transport);
                 c.rounds_in_flight = width;

@@ -1,13 +1,14 @@
 //! The tentpole invariant of the Party/Transport redesign: the *same*
 //! party state machines produce **bit-identical** runs whether the
-//! protocol is pumped by the single-threaded byte-metered simulator or
-//! by one OS thread per party.
+//! protocol is pumped by the single-threaded byte-metered simulator,
+//! by one OS thread per party, or by the readiness-driven socket
+//! event loop.
 //!
 //! This holds because (a) every party owns a deterministic RNG keyed
 //! by (seed, client index), (b) the aggregator buffers fan-ins by
 //! sender and sums in client order — so float addition order doesn't
 //! depend on thread scheduling — and (c) rounds are serialized on the
-//! active party's RoundDone note. Byte counters must match too: both
+//! active party's RoundDone note. Byte counters must match too: all
 //! transports meter the same message encodings through `Network`.
 
 mod common;
@@ -46,6 +47,28 @@ fn sim_and_threaded_identical_plain() {
 #[test]
 fn sim_and_threaded_identical_adult() {
     assert_bit_identical("adult", SecurityMode::SecureExact);
+}
+
+/// Sim vs evloop over real localhost sockets: every report field and
+/// Table-2 counter bit-identical, for the float-mask hard case too.
+#[cfg(unix)]
+fn assert_evloop_bit_identical(dataset: &str, mode: SecurityMode) {
+    let sim = run_experiment(cfg(dataset, mode, TransportKind::Sim), None).unwrap();
+    let ev = run_experiment(cfg(dataset, mode, TransportKind::Evloop), None).unwrap();
+    assert_reports_identical(&sim, &ev, &format!("{dataset}/{mode:?}/evloop"));
+    assert_table2_identical(&sim.net, &ev.net);
+}
+
+#[cfg(unix)]
+#[test]
+fn sim_and_evloop_identical_secure_exact() {
+    assert_evloop_bit_identical("banking", SecurityMode::SecureExact);
+}
+
+#[cfg(unix)]
+#[test]
+fn sim_and_evloop_identical_secure_float() {
+    assert_evloop_bit_identical("banking", SecurityMode::SecureFloat);
 }
 
 #[test]
