@@ -4,7 +4,9 @@
 //!
 //!     cargo bench --bench microbench
 
-use vfl::bench::{bench_ms, pm};
+use std::io::Write;
+
+use vfl::bench::{bench_ms, pm, Stats};
 use vfl::crypto::aead;
 use vfl::crypto::bfv::{Bfv, BfvParams};
 use vfl::crypto::paillier::PrivateKey;
@@ -69,6 +71,68 @@ fn main() -> anyhow::Result<()> {
             });
             println!("mask_tensor chunked {cw:>5}w/{shards:>2}s: {} ms", pm(&s));
         }
+    }
+
+    // SIMD hot paths: scalar reference vs the runtime-dispatched
+    // kernels for mask expansion (4-block ChaCha20 core) and the ℤ₂⁶⁴
+    // accumulator fold, recorded to BENCH_simd.json so the words/sec
+    // trajectory has data points. On hardware without a vector ISA
+    // (or under VFL_SIMD=off) both legs are the scalar path and the
+    // recorded speedup is ~1.
+    {
+        const WORDS: usize = 1 << 20;
+        let isa = vfl::crypto::simd::active_isa().name();
+        let mut secret = [0u8; 32];
+        rng.fill(&mut secret);
+        let stream = prg::MaskStream::pairwise(&secret, 0, 1, 3, 0);
+        let mut buf = vec![0u64; WORDS];
+        let expand_scalar = bench_ms(20, || {
+            buf.iter_mut().for_each(|w| *w = 0);
+            stream.add_window_scalar(0, &mut buf);
+            std::hint::black_box(&buf);
+        });
+        let expand_simd = bench_ms(20, || {
+            buf.iter_mut().for_each(|w| *w = 0);
+            stream.add_window(0, &mut buf);
+            std::hint::black_box(&buf);
+        });
+        // the fold the ChunkAssembler shard loops run: lane-chunked
+        // z64 vs the pre-PR per-word zip loop
+        let src: Vec<u64> =
+            (0..WORDS as u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+        let mut acc = vec![0u64; WORDS];
+        let fold_naive = bench_ms(50, || {
+            for (a, b) in acc.iter_mut().zip(&src) {
+                *a = a.wrapping_add(*b);
+            }
+            std::hint::black_box(&acc);
+        });
+        let fold_simd = bench_ms(50, || {
+            vfl::z64::wrap_add(&mut acc, &src);
+            std::hint::black_box(&acc);
+        });
+        let mwords = |s: &Stats| (WORDS as f64 / 1.0e6) / (s.mean / 1.0e3);
+        println!("mask expand 1Mi w  scalar   : {} ms ({:.1} Mwords/s)", pm(&expand_scalar), mwords(&expand_scalar));
+        println!("mask expand 1Mi w  {isa:<8} : {} ms ({:.1} Mwords/s)", pm(&expand_simd), mwords(&expand_simd));
+        println!("accum fold  1Mi w  naive    : {} ms ({:.1} Mwords/s)", pm(&fold_naive), mwords(&fold_naive));
+        println!("accum fold  1Mi w  {isa:<8} : {} ms ({:.1} Mwords/s)", pm(&fold_simd), mwords(&fold_simd));
+        // hand-rolled JSON, same convention as BENCH_fig2/BENCH_streaming
+        let json = format!(
+            "{{\n  \"isa\": \"{isa}\",\n  \"words\": {WORDS},\n  \
+             \"mask_expand\": {{\"scalar_mwords_per_s\": {:.3}, \"dispatch_mwords_per_s\": {:.3}, \"speedup\": {:.3}}},\n  \
+             \"accum_fold\": {{\"naive_mwords_per_s\": {:.3}, \"dispatch_mwords_per_s\": {:.3}, \"speedup\": {:.3}}}\n}}\n",
+            mwords(&expand_scalar),
+            mwords(&expand_simd),
+            mwords(&expand_simd) / mwords(&expand_scalar),
+            mwords(&fold_naive),
+            mwords(&fold_simd),
+            mwords(&fold_simd) / mwords(&fold_naive),
+        );
+        let path = "BENCH_simd.json";
+        std::fs::File::create(path)
+            .and_then(|mut f| f.write_all(json.as_bytes()))
+            .expect("write BENCH_simd.json");
+        println!("wrote {path}");
     }
 
     // AEAD: seal + trial-open of a 512-entry ID batch

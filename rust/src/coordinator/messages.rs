@@ -165,6 +165,10 @@ const T_SURRENDER_SHARES: u8 = 21;
 const T_MASKED_CHUNK: u8 = 22;
 const T_GRADIENT_CHUNK: u8 = 23;
 
+fn blob_list_len(blobs: &[Vec<u8>]) -> usize {
+    4 + blobs.iter().map(|b| 4 + b.len()).sum::<usize>()
+}
+
 fn write_blob_list(w: &mut Writer, blobs: &[Vec<u8>]) {
     w.u32(blobs.len() as u32);
     for b in blobs {
@@ -179,6 +183,10 @@ fn read_blob_list(r: &mut Reader) -> Result<Vec<Vec<u8>>> {
         out.push(r.bytes()?);
     }
     Ok(out)
+}
+
+fn wire_keys_len(k: &WireKeys) -> usize {
+    2 + 4 + k.keys.iter().map(|key| if key.is_some() { 33 } else { 1 }).sum::<usize>()
 }
 
 fn write_wire_keys(w: &mut Writer, k: &WireKeys) {
@@ -210,9 +218,102 @@ fn read_wire_keys(r: &mut Reader) -> Result<WireKeys> {
     Ok(WireKeys { from, keys })
 }
 
+/// Write the full `MaskedChunk` wire header — variant tag through the
+/// payload word-count prefix — into `w`. The caller appends exactly
+/// `count` words with [`Writer::u64s_raw`] and ships the buffer; the
+/// result is byte-identical to
+/// `Msg::MaskedChunk { .. }.encode()` (the frame-encode rule of the
+/// zero-copy chunk path, pinned by `chunk_builders_match_encode`).
+#[allow(clippy::too_many_arguments)]
+pub fn begin_masked_chunk(
+    w: &mut Writer,
+    round: u32,
+    from: u16,
+    tag: u8,
+    shard: u16,
+    offset: u32,
+    total: u32,
+    count: u32,
+) {
+    w.u8(T_MASKED_CHUNK);
+    w.u32(round);
+    w.u16(from);
+    w.u8(tag);
+    w.u16(shard);
+    w.u32(offset);
+    w.u32(total);
+    w.u32(count);
+}
+
+/// `begin_masked_chunk`'s downlink twin: the `GradientChunk` header
+/// through the word-count prefix, byte-identical to
+/// `Msg::GradientChunk { .. }.encode()` once `count` raw words follow.
+pub fn begin_gradient_chunk(
+    w: &mut Writer,
+    round: u32,
+    shard: u16,
+    offset: u32,
+    total: u32,
+    count: u32,
+) {
+    w.u8(T_GRADIENT_CHUNK);
+    w.u32(round);
+    w.u16(shard);
+    w.u32(offset);
+    w.u32(total);
+    w.u32(count);
+}
+
 impl Msg {
+    /// Exact wire size of [`Msg::encode`]'s output, computed without
+    /// encoding. The zero-copy path sizes its single allocation with
+    /// this; `encode` itself debug-asserts the two stay in sync, and
+    /// the roundtrip tests assert it for every variant.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Msg::RequestKeys { .. } => 1 + 8,
+            Msg::PublishKeys(k) => 1 + wire_keys_len(k),
+            Msg::KeyDirectory { all, .. } => {
+                1 + 8 + 4 + all.iter().map(wire_keys_len).sum::<usize>()
+            }
+            Msg::WeightsUpdate { flat, .. } => 1 + 4 + 4 + 4 * flat.len(),
+            Msg::GroupWeights { flat, .. } => 1 + 4 + 1 + 4 + 4 * flat.len(),
+            Msg::BatchSelect { labels, entries, .. } => {
+                1 + 4 + 4 + 4 * labels.len() + blob_list_len(entries)
+            }
+            Msg::BatchRelay { entries, .. } => 1 + 4 + blob_list_len(entries),
+            Msg::PlainBatch { labels, ids, .. } => {
+                1 + 4 + 4 + 4 * labels.len() + 4 + 8 * ids.len()
+            }
+            Msg::PlainBatchRelay { ids, .. } => 1 + 4 + 4 + 8 * ids.len(),
+            Msg::MaskedActivation { words, .. } => 1 + 4 + 2 + 4 + 8 * words.len(),
+            Msg::MaskedChunk { words, .. } => 1 + 4 + 2 + 1 + 2 + 4 + 4 + 4 + 8 * words.len(),
+            Msg::FloatActivation { vals, .. } => 1 + 4 + 2 + 4 + 4 * vals.len(),
+            Msg::DzBroadcast { dz, .. } => 1 + 4 + 4 + 4 * dz.len(),
+            Msg::MaskedGradient { words, .. } => 1 + 4 + 2 + 4 + 8 * words.len(),
+            Msg::FloatGradient { vals, .. } => 1 + 4 + 2 + 4 + 4 * vals.len(),
+            Msg::GradientSum { words, .. } => 1 + 4 + 4 + 8 * words.len(),
+            Msg::GradientChunk { words, .. } => 1 + 4 + 2 + 4 + 4 + 4 + 8 * words.len(),
+            Msg::FloatGradientSum { vals, .. } => 1 + 4 + 4 + 4 * vals.len(),
+            Msg::Predictions { probs, .. } => 1 + 4 + 4 + 4 * probs.len(),
+            Msg::SeedShares { sealed, .. } => 1 + 8 + 2 + 32 + blob_list_len(sealed),
+            Msg::ShareRelay { sealed, .. } => 1 + 8 + blob_list_len(sealed),
+            Msg::DropoutNotice { dropped, .. } => 1 + 4 + 4 + 2 * dropped.len(),
+            Msg::SurrenderShares { bundles, .. } => {
+                1 + 4 + 2 + 4 + bundles.iter().map(|(_, b)| 2 + 4 + b.len()).sum::<usize>()
+            }
+        }
+    }
+
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+        let mut w = Writer::with_capacity(self.encoded_len());
+        self.encode_into(&mut w);
+        debug_assert_eq!(w.buf.len(), self.encoded_len(), "encoded_len out of sync: {self:?}");
+        w.finish()
+    }
+
+    /// Append this message's encoding to an existing [`Writer`].
+    pub fn encode_into(&self, w: &mut Writer) {
         match self {
             Msg::RequestKeys { epoch } => {
                 w.u8(T_REQUEST_KEYS);
@@ -220,14 +321,14 @@ impl Msg {
             }
             Msg::PublishKeys(k) => {
                 w.u8(T_PUBLISH_KEYS);
-                write_wire_keys(&mut w, k);
+                write_wire_keys(w, k);
             }
             Msg::KeyDirectory { epoch, all } => {
                 w.u8(T_KEY_DIRECTORY);
                 w.u64(*epoch);
                 w.u32(all.len() as u32);
                 for k in all {
-                    write_wire_keys(&mut w, k);
+                    write_wire_keys(w, k);
                 }
             }
             Msg::WeightsUpdate { round, flat } => {
@@ -245,12 +346,12 @@ impl Msg {
                 w.u8(T_BATCH_SELECT);
                 w.u32(*round);
                 w.f32s(labels);
-                write_blob_list(&mut w, entries);
+                write_blob_list(w, entries);
             }
             Msg::BatchRelay { round, entries } => {
                 w.u8(T_BATCH_RELAY);
                 w.u32(*round);
-                write_blob_list(&mut w, entries);
+                write_blob_list(w, entries);
             }
             Msg::PlainBatch { round, labels, ids } => {
                 w.u8(T_PLAIN_BATCH);
@@ -330,12 +431,12 @@ impl Msg {
                 w.u64(*epoch);
                 w.u16(*from);
                 w.fixed(commitment);
-                write_blob_list(&mut w, sealed);
+                write_blob_list(w, sealed);
             }
             Msg::ShareRelay { epoch, sealed } => {
                 w.u8(T_SHARE_RELAY);
                 w.u64(*epoch);
-                write_blob_list(&mut w, sealed);
+                write_blob_list(w, sealed);
             }
             Msg::DropoutNotice { round, dropped } => {
                 w.u8(T_DROPOUT_NOTICE);
@@ -356,7 +457,6 @@ impl Msg {
                 }
             }
         }
-        w.finish()
     }
 
     pub fn decode(buf: &[u8]) -> Result<Msg> {
@@ -465,6 +565,7 @@ mod tests {
 
     fn roundtrip(m: Msg) {
         let enc = m.encode();
+        assert_eq!(enc.len(), m.encoded_len(), "encoded_len out of sync: {m:?}");
         let dec = Msg::decode(&enc).unwrap();
         assert_eq!(m, dec);
     }
@@ -566,6 +667,39 @@ mod tests {
         };
         // the documented per-chunk Table-2 accounting constant
         assert_eq!(m.encode().len() as u64, CHUNK_MSG_HEADER_BYTES + 250 * 8);
+    }
+
+    #[test]
+    fn chunk_builders_match_encode() {
+        // the zero-copy senders' frame-encode rule: header builder +
+        // raw payload words must be byte-identical to Msg::encode()
+        for words in [vec![], vec![u64::MAX], vec![7u64, 0, u64::MAX, 0x0102030405060708]] {
+            let m = Msg::MaskedChunk {
+                round: 9,
+                from: 3,
+                tag: 1,
+                shard: 4,
+                offset: 1024,
+                total: 5184,
+                words: words.clone(),
+            };
+            let mut w = Writer::with_capacity(m.encoded_len());
+            begin_masked_chunk(&mut w, 9, 3, 1, 4, 1024, 5184, words.len() as u32);
+            w.u64s_raw(&words);
+            assert_eq!(w.finish(), m.encode(), "masked n={}", words.len());
+
+            let g = Msg::GradientChunk {
+                round: 9,
+                shard: 4,
+                offset: 1024,
+                total: 5184,
+                words: words.clone(),
+            };
+            let mut w = Writer::with_capacity(g.encoded_len());
+            begin_gradient_chunk(&mut w, 9, 4, 1024, 5184, words.len() as u32);
+            w.u64s_raw(&words);
+            assert_eq!(w.finish(), g.encode(), "gradient n={}", words.len());
+        }
     }
 
     #[test]

@@ -46,13 +46,17 @@ use crate::net::wire::Writer;
 use crate::net::{Addr, Phase};
 use crate::secagg::dropout::{self, RobustClientSession};
 use crate::secagg::{ClientSession, DropoutError, FixedPoint, PartySession, PublishedKeys};
+use crate::z64;
 
 use super::backend::Backend;
 use super::config::SecurityMode;
-use super::messages::{Msg, WireKeys};
+use super::messages::{begin_gradient_chunk, begin_masked_chunk, Msg, WireKeys};
 use super::metrics::{client, Metrics, AGGREGATOR};
-use super::party::{Note, Outbox, Party, RoundKind, RoundSpec};
-use super::streaming::{chunk_plan, ChunkAssembler, ShardLayout, StreamCfg, WorkerPool};
+use super::party::{Note, OutMsg, Outbox, Party, RoundKind, RoundSpec};
+use super::streaming::{
+    chunk_plan, ChunkAssembler, ShardLayout, StreamCfg, WorkerPool, CHUNK_MSG_HEADER_BYTES,
+    GRAD_CHUNK_MSG_HEADER_BYTES,
+};
 use super::window::MAX_ROUNDS_IN_FLIGHT;
 
 /// Gradient-vector layout: every party reports a full-length flat
@@ -122,8 +126,13 @@ const TAG_GRADIENT: u32 = 1;
 /// message, or — when the streaming pipeline is on (`chunk_words`
 /// set) — the equivalent `MaskedChunk` stream, masked window by window
 /// through the seekable PRG so no full-tensor mask is ever
-/// materialized. Chunked and monolithic words are bit-identical
-/// element-wise; only the framing differs.
+/// materialized. Chunked windows go out *zero-copy*: the wire header
+/// is built into an exact-capacity [`Writer`] and the masked words are
+/// encoded straight behind it ([`ClientSession::mask_tensor_window_into`]),
+/// so no intermediate `Vec<u64>` or re-encode exists between the PRG
+/// and the transport. The bytes are identical to what
+/// `Msg::MaskedChunk { .. }.encode()` would produce (the frame-encode
+/// rule), so metering and every receiver are unchanged.
 fn masked_exact_msgs(
     session: &ClientSession,
     stream: StreamCfg,
@@ -131,35 +140,43 @@ fn masked_exact_msgs(
     from: u16,
     tag: u32,
     vals: &[f32],
-) -> Vec<Msg> {
+) -> Vec<OutMsg> {
     match stream.chunk_words {
         Some(cw) => {
             let layout = ShardLayout::new(vals.len(), stream.shards);
             let mask = session.total_mask_stream(round as u64, tag);
             chunk_plan(layout, cw)
                 .into_iter()
-                .map(|c| Msg::MaskedChunk {
-                    round,
-                    from,
-                    tag: tag as u8,
-                    shard: c.shard as u16,
-                    offset: c.offset as u32,
-                    total: vals.len() as u32,
-                    words: session.mask_tensor_window(
+                .map(|c| {
+                    let mut w =
+                        Writer::with_capacity(CHUNK_MSG_HEADER_BYTES as usize + 8 * c.len);
+                    begin_masked_chunk(
+                        &mut w,
+                        round,
+                        from,
+                        tag as u8,
+                        c.shard as u16,
+                        c.offset as u32,
+                        vals.len() as u32,
+                        c.len as u32,
+                    );
+                    session.mask_tensor_window_into(
                         &mask,
                         &vals[c.offset..c.offset + c.len],
                         c.offset,
-                    ),
+                        &mut w,
+                    );
+                    OutMsg::Encoded { round: Some(round), bytes: w.finish() }
                 })
                 .collect()
         }
         None => {
             let words = session.mask_tensor(vals, round as u64, tag);
-            vec![if tag == TAG_ACTIVATION {
+            vec![OutMsg::Msg(if tag == TAG_ACTIVATION {
                 Msg::MaskedActivation { round, from, words }
             } else {
                 Msg::MaskedGradient { round, from, words }
-            }]
+            })]
         }
     }
 }
@@ -467,7 +484,7 @@ impl<'e> ActiveParty<'e> {
 
     /// Mask an activation for upload (Eq. 2): one monolithic message,
     /// or the chunked stream when the streaming pipeline is on.
-    pub fn masked_activation(&self, round: u32, z: &Mat) -> Vec<Msg> {
+    pub fn masked_activation(&self, round: u32, z: &Mat) -> Vec<OutMsg> {
         match self.security {
             SecurityMode::SecureExact => masked_exact_msgs(
                 self.sess(),
@@ -479,10 +496,11 @@ impl<'e> ActiveParty<'e> {
             ),
             SecurityMode::SecureFloat => {
                 let vals = self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
-                vec![Msg::FloatActivation { round, from: self.id as u16, vals }]
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals }.into()]
             }
             SecurityMode::Plain => {
-                vec![Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }]
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }
+                    .into()]
             }
         }
     }
@@ -520,9 +538,7 @@ impl<'e> ActiveParty<'e> {
                 }
                 let fp = FixedPoint::default();
                 let mut acc = words;
-                for (a, w) in acc.iter_mut().zip(&own_w) {
-                    *a = a.wrapping_add(*w);
-                }
+                z64::wrap_add(&mut acc, &own_w);
                 fp.decode_vec(&acc)
             }
             (GradSum::Floats(vals), GradSum::Floats(own_f)) => {
@@ -606,7 +622,7 @@ impl<'e> ActiveParty<'e> {
         let msgs = self.masked_activation(round, &za);
         self.rec(t0, self.security.is_secure());
         for msg in msgs {
-            out.send(Addr::Aggregator, msg);
+            out.send_out(Addr::Aggregator, msg);
         }
         Ok(())
     }
@@ -1013,7 +1029,7 @@ impl<'e> PassiveParty<'e> {
 
     /// Mask an activation for upload (Eq. 2): one monolithic message,
     /// or the chunked stream when the streaming pipeline is on.
-    pub fn masked_activation(&self, round: u32, z: &Mat) -> Vec<Msg> {
+    pub fn masked_activation(&self, round: u32, z: &Mat) -> Vec<OutMsg> {
         match self.security {
             SecurityMode::SecureExact => masked_exact_msgs(
                 self.sess(),
@@ -1025,17 +1041,18 @@ impl<'e> PassiveParty<'e> {
             ),
             SecurityMode::SecureFloat => {
                 let vals = self.sess().mask_tensor_f32(&z.data, round as u64, TAG_ACTIVATION);
-                vec![Msg::FloatActivation { round, from: self.id as u16, vals }]
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals }.into()]
             }
             SecurityMode::Plain => {
-                vec![Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }]
+                vec![Msg::FloatActivation { round, from: self.id as u16, vals: z.data.clone() }
+                    .into()]
             }
         }
     }
 
     /// Embed the local weight gradient into the full-length layout and
     /// mask it (Eq. 6), monolithic or chunked.
-    pub fn masked_gradient(&self, round: u32, dw: &Mat) -> Vec<Msg> {
+    pub fn masked_gradient(&self, round: u32, dw: &Mat) -> Vec<OutMsg> {
         let l = self.layout.total;
         let (off, len) = self.layout.groups[self.group];
         assert_eq!(dw.data.len(), len);
@@ -1052,10 +1069,10 @@ impl<'e> PassiveParty<'e> {
             ),
             SecurityMode::SecureFloat => {
                 let vals = self.sess().mask_tensor_f32(&full, round as u64, TAG_GRADIENT);
-                vec![Msg::FloatGradient { round, from: self.id as u16, vals }]
+                vec![Msg::FloatGradient { round, from: self.id as u16, vals }.into()]
             }
             SecurityMode::Plain => {
-                vec![Msg::FloatGradient { round, from: self.id as u16, vals: full }]
+                vec![Msg::FloatGradient { round, from: self.id as u16, vals: full }.into()]
             }
         }
     }
@@ -1089,7 +1106,7 @@ impl<'e> PassiveParty<'e> {
         let msgs = self.masked_activation(round, &z);
         self.rec(t0, self.security.is_secure());
         for msg in msgs {
-            out.send(Addr::Aggregator, msg);
+            out.send_out(Addr::Aggregator, msg);
         }
         Ok(())
     }
@@ -1217,7 +1234,7 @@ impl<'e> Party for PassiveParty<'e> {
                 let msgs = self.masked_gradient(round, &dw);
                 self.rec(t0, self.security.is_secure());
                 for msg in msgs {
-                    out.send(Addr::Aggregator, msg);
+                    out.send_out(Addr::Aggregator, msg);
                 }
                 // the gradient upload is this round's last obligation:
                 // ctx retired (dropped here)
@@ -1569,9 +1586,7 @@ impl<'e> Aggregator<'e> {
         let mut acc = vec![0u64; l];
         for p in parts {
             assert_eq!(p.len(), l, "masked vectors must be equal length");
-            for (a, v) in acc.iter_mut().zip(p) {
-                *a = a.wrapping_add(*v);
-            }
+            z64::wrap_add(&mut acc, p);
         }
         acc
     }
@@ -1598,9 +1613,7 @@ impl<'e> Aggregator<'e> {
         let mut acc = vec![0u64; len];
         for session in self.recovered.values() {
             let m = session.total_mask(round, tag, len);
-            for (a, v) in acc.iter_mut().zip(&m) {
-                *a = a.wrapping_add(*v);
-            }
+            z64::wrap_add(&mut acc, &m);
         }
         Some(acc)
     }
@@ -1697,9 +1710,7 @@ impl<'e> Aggregator<'e> {
                 Some(mut g) => {
                     for p in &exact {
                         assert_eq!(p.len(), g.len(), "masked vectors must be equal length");
-                        for (a, v) in g.iter_mut().zip(p) {
-                            *a = a.wrapping_add(*v);
-                        }
+                        z64::wrap_add(&mut g, p);
                     }
                     g
                 }
@@ -1708,9 +1719,7 @@ impl<'e> Aggregator<'e> {
             if let Some(corr) =
                 self.dropped_mask_correction(round as u64, TAG_ACTIVATION, acc.len())
             {
-                for (a, v) in acc.iter_mut().zip(&corr) {
-                    *a = a.wrapping_add(*v);
-                }
+                z64::wrap_add(&mut acc, &corr);
             }
             Mat::from_vec(batch, self.hidden, self.fp.decode_vec(&acc))
         } else {
@@ -1772,9 +1781,7 @@ impl<'e> Aggregator<'e> {
                 Some(mut g) => {
                     for p in &exact {
                         assert_eq!(p.len(), g.len(), "masked vectors must be equal length");
-                        for (a, v) in g.iter_mut().zip(p) {
-                            *a = a.wrapping_add(*v);
-                        }
+                        z64::wrap_add(&mut g, p);
                     }
                     g
                 }
@@ -1783,9 +1790,7 @@ impl<'e> Aggregator<'e> {
             if let Some(corr) =
                 self.dropped_mask_correction(round as u64, TAG_GRADIENT, acc.len())
             {
-                for (a, v) in acc.iter_mut().zip(&corr) {
-                    *a = a.wrapping_add(*v);
-                }
+                z64::wrap_add(&mut acc, &corr);
             }
             match self.stream.chunk_words {
                 // streaming runs chunk the 1:1 downlink too, so a
@@ -1795,17 +1800,23 @@ impl<'e> Aggregator<'e> {
                 Some(cw) => {
                     let layout = ShardLayout::new(acc.len(), self.stream.shards);
                     self.rec(t0, false);
+                    // zero-copy: each window's header + words go into
+                    // one exact-capacity wire buffer, no per-chunk
+                    // `Vec<u64>` copy of the accumulator slice
                     for c in chunk_plan(layout, cw) {
-                        out.send(
-                            Addr::Client(0),
-                            Msg::GradientChunk {
-                                round,
-                                shard: c.shard as u16,
-                                offset: c.offset as u32,
-                                total: acc.len() as u32,
-                                words: acc[c.offset..c.offset + c.len].to_vec(),
-                            },
+                        let mut w = Writer::with_capacity(
+                            GRAD_CHUNK_MSG_HEADER_BYTES as usize + 8 * c.len,
                         );
+                        begin_gradient_chunk(
+                            &mut w,
+                            round,
+                            c.shard as u16,
+                            c.offset as u32,
+                            acc.len() as u32,
+                            c.len as u32,
+                        );
+                        w.u64s_raw(&acc[c.offset..c.offset + c.len]);
+                        out.send_encoded(Addr::Client(0), Some(round), w.finish());
                     }
                 }
                 None => {
@@ -2305,11 +2316,9 @@ impl<'e> Party for Aggregator<'e> {
     }
 }
 
-/// Helper: serialize a message and return (encoded, byte length).
+/// Helper: serialize a message to its wire bytes.
 pub fn encode_msg(m: &Msg) -> Vec<u8> {
-    let mut w = Writer::new();
-    w.buf = m.encode();
-    w.finish()
+    m.encode()
 }
 
 #[cfg(test)]

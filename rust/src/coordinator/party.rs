@@ -86,18 +86,76 @@ pub enum Note {
     WindowDrain { round: u32 },
 }
 
+/// One outgoing protocol message: either a structured [`Msg`] (encoded
+/// by the transport at send time) or pre-encoded wire bytes from the
+/// zero-copy chunk path.
+///
+/// The frame-encode rule: an `Encoded` payload MUST be byte-identical
+/// to `Msg::encode()` of the message it replaces — transports meter
+/// and frame the bytes without knowing which variant produced them, so
+/// Table-2 counters and every cross-transport bit-identity assertion
+/// hold regardless of which path a sender took.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OutMsg {
+    /// A structured message; the transport calls [`Msg::encode`].
+    Msg(Msg),
+    /// Pre-encoded message bytes (e.g. a `MaskedChunk` whose masked
+    /// words were written straight into the wire buffer), with the
+    /// round tag carried alongside for routing/fault-injection —
+    /// mirroring [`Msg::round`].
+    Encoded { round: Option<u32>, bytes: Vec<u8> },
+}
+
+impl OutMsg {
+    /// The round this message belongs to (`None` for setup-phase
+    /// traffic) — same contract as [`Msg::round`].
+    pub fn round(&self) -> Option<u32> {
+        match self {
+            OutMsg::Msg(m) => m.round(),
+            OutMsg::Encoded { round, .. } => *round,
+        }
+    }
+
+    /// The wire encoding: identical bytes whichever variant carried
+    /// the message.
+    pub fn into_bytes(self) -> Vec<u8> {
+        match self {
+            OutMsg::Msg(m) => m.encode(),
+            OutMsg::Encoded { bytes, .. } => bytes,
+        }
+    }
+}
+
+impl From<Msg> for OutMsg {
+    fn from(m: Msg) -> Self {
+        OutMsg::Msg(m)
+    }
+}
+
 /// Messages and notes a party produced while handling one event.
 #[derive(Default)]
 pub struct Outbox {
     /// Protocol messages to route: (destination, message).
-    pub msgs: Vec<(Addr, Msg)>,
+    pub msgs: Vec<(Addr, OutMsg)>,
     /// Driver notes (loss, predictions, round completion).
     pub notes: Vec<Note>,
 }
 
 impl Outbox {
     pub fn send(&mut self, to: Addr, msg: Msg) {
+        self.msgs.push((to, OutMsg::Msg(msg)));
+    }
+
+    /// Queue an already-wrapped [`OutMsg`] (structured or pre-encoded).
+    pub fn send_out(&mut self, to: Addr, msg: OutMsg) {
         self.msgs.push((to, msg));
+    }
+
+    /// Queue pre-encoded message bytes (the zero-copy chunk path).
+    /// `bytes` must obey the frame-encode rule documented on
+    /// [`OutMsg`].
+    pub fn send_encoded(&mut self, to: Addr, round: Option<u32>, bytes: Vec<u8>) {
+        self.msgs.push((to, OutMsg::Encoded { round, bytes }));
     }
 
     pub fn note(&mut self, n: Note) {

@@ -5,6 +5,33 @@
 //!   encryption during mini-batch selection (§4.0.2), and
 //! * the PRG for pairwise secure-aggregation masks (Eq. 3) via
 //!   [`crate::crypto::prg`].
+//!
+//! Two cores share one test surface:
+//! * the scalar block function [`ChaCha20::block_words`] — the
+//!   reference semantics, and the whole path under `VFL_SIMD=off`, and
+//! * a 4-block-parallel ("vertical") core — AVX2 on x86_64, NEON on
+//!   aarch64, a lane-array portable form elsewhere — selected at
+//!   runtime by [`super::simd::active_isa`]. Bulk keystream requests
+//!   ([`ChaCha20::keystream_u64`], [`ChaCha20::apply_keystream`]) run
+//!   aligned groups of four blocks through it and fall back to single
+//!   scalar blocks for the tail.
+//!
+//! Bit-identity between the cores is a protocol invariant, not a nice-
+//! to-have: pairwise masks expanded on different machines must cancel
+//! word-for-word, so every core is asserted equal to the scalar block
+//! function in the tests below (and the equivalence suites re-run the
+//! whole protocol under `VFL_SIMD=off` in CI).
+
+use super::simd;
+
+/// u64 keystream words per single ChaCha20 block (64 bytes).
+pub(crate) const BLOCK_WORDS_U64: usize = 8;
+
+/// u64 keystream words per 4-block SIMD group.
+pub(crate) const X4_WORDS_U64: usize = 32;
+
+/// Keystream bytes per 4-block SIMD group.
+const X4_BYTES: usize = 256;
 
 /// The ChaCha20 block function state.
 #[derive(Clone)]
@@ -12,22 +39,6 @@ pub struct ChaCha20 {
     key: [u32; 8],
     nonce: [u32; 3],
     counter: u32,
-}
-
-#[inline(always)]
-fn quarter_round(state: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
-    state[a] = state[a].wrapping_add(state[b]);
-    state[d] ^= state[a];
-    state[d] = state[d].rotate_left(16);
-    state[c] = state[c].wrapping_add(state[d]);
-    state[b] ^= state[c];
-    state[b] = state[b].rotate_left(12);
-    state[a] = state[a].wrapping_add(state[b]);
-    state[d] ^= state[a];
-    state[d] = state[d].rotate_left(8);
-    state[c] = state[c].wrapping_add(state[d]);
-    state[b] ^= state[c];
-    state[b] = state[b].rotate_left(7);
 }
 
 impl ChaCha20 {
@@ -47,7 +58,7 @@ impl ChaCha20 {
 
     /// The 16 output words for block index `counter`. Fully unrolled
     /// with named locals (no array bounds checks on the hot path) —
-    /// the PRG that expands every pairwise mask runs through here.
+    /// the scalar reference core every SIMD core is measured against.
     #[inline]
     pub fn block_words(&self, counter: u32) -> [u32; 16] {
         let (i0, i1, i2, i3) = (0x61707865u32, 0x3320646eu32, 0x79622d32u32, 0x6b206574u32);
@@ -98,11 +109,74 @@ impl ChaCha20 {
         out
     }
 
+    /// The four keystream blocks `counter .. counter + 4`, lane-
+    /// interleaved (word-major): `out[i*4 + l]` is output word `i` of
+    /// block `counter + l`. Dispatches to the active SIMD ISA; the
+    /// portable core keeps the identical layout, so the de-interleave
+    /// steps below are shared — and tested — on every architecture.
+    fn four_blocks(&self, counter: u32) -> [u32; 64] {
+        match simd::active_isa() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: active_isa() returns Avx2 only after runtime
+            // detection succeeded on this CPU.
+            simd::SimdIsa::Avx2 => unsafe { avx2::four_blocks(&self.key, &self.nonce, counter) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: likewise, Neon only after runtime detection.
+            simd::SimdIsa::Neon => unsafe { neon::four_blocks(&self.key, &self.nonce, counter) },
+            _ => x4_blocks_portable(&self.key, &self.nonce, counter),
+        }
+    }
+
+    /// De-interleave four blocks straight into u64 mask words. `out`
+    /// must hold exactly [`X4_WORDS_U64`] words; it receives the same
+    /// values as four consecutive [`Self::block_words`] calls packed
+    /// low-word-first (the [`Self::keystream_u64`] layout).
+    pub(crate) fn four_blocks_u64_into(&self, counter: u32, out: &mut [u64]) {
+        assert_eq!(out.len(), X4_WORDS_U64);
+        let st = self.four_blocks(counter);
+        for l in 0..4 {
+            for j in 0..BLOCK_WORDS_U64 {
+                let lo = st[(2 * j) * 4 + l] as u64;
+                let hi = st[(2 * j + 1) * 4 + l] as u64;
+                out[l * BLOCK_WORDS_U64 + j] = lo | (hi << 32);
+            }
+        }
+    }
+
+    /// Panic if a keystream request of `blocks` 64-byte blocks from
+    /// `self.counter` would run the 32-bit block counter past
+    /// `u32::MAX`. The old behaviour was a silent `wrapping_add` —
+    /// keystream reuse after 256 GiB, which for the mask PRG means
+    /// masks stop cancelling and pairs of masked tensors leak their
+    /// difference. Protocol-fatal, hence a documented panic rather
+    /// than a recoverable error.
+    fn check_block_span(&self, blocks: u64) {
+        let avail = u64::from(u32::MAX) - u64::from(self.counter) + 1;
+        assert!(
+            blocks <= avail,
+            "ChaCha20 keystream request of {blocks} blocks from counter {}: keystream would repeat",
+            self.counter
+        );
+    }
+
     /// Fill a `u64` buffer with keystream words directly (the mask-PRG
-    /// fast path: skips the byte-array round-trip).
+    /// fast path: skips the byte-array round-trip). With a SIMD ISA
+    /// active, aligned groups of four blocks (32 words) run through
+    /// the 4-block core; single scalar blocks handle the tail and are
+    /// the whole path under `VFL_SIMD=off`. Output is bit-identical
+    /// either way (asserted in the tests below).
     pub fn keystream_u64(&self, out: &mut [u64]) {
+        self.check_block_span(out.len().div_ceil(BLOCK_WORDS_U64) as u64);
         let mut counter = self.counter;
-        for chunk in out.chunks_mut(8) {
+        let mut done = 0;
+        if simd::active_isa() != simd::SimdIsa::Scalar {
+            while out.len() - done >= X4_WORDS_U64 {
+                self.four_blocks_u64_into(counter, &mut out[done..done + X4_WORDS_U64]);
+                counter = counter.wrapping_add(4);
+                done += X4_WORDS_U64;
+            }
+        }
+        for chunk in out[done..].chunks_mut(BLOCK_WORDS_U64) {
             let w = self.block_words(counter);
             for (j, o) in chunk.iter_mut().enumerate() {
                 *o = (w[2 * j] as u64) | ((w[2 * j + 1] as u64) << 32);
@@ -112,9 +186,31 @@ impl ChaCha20 {
     }
 
     /// XOR the keystream into `data` in place (encrypt == decrypt).
+    /// Same grouped dispatch as [`Self::keystream_u64`]: 256-byte
+    /// groups through the 4-block core, scalar blocks for the tail.
     pub fn apply_keystream(&self, data: &mut [u8]) {
+        self.check_block_span(data.len().div_ceil(64) as u64);
         let mut counter = self.counter;
-        for chunk in data.chunks_mut(64) {
+        let mut done = 0;
+        if simd::active_isa() != simd::SimdIsa::Scalar {
+            while data.len() - done >= X4_BYTES {
+                let st = self.four_blocks(counter);
+                let group = &mut data[done..done + X4_BYTES];
+                for l in 0..4 {
+                    for i in 0..16 {
+                        let k = st[i * 4 + l].to_le_bytes();
+                        let o = l * 64 + i * 4;
+                        group[o] ^= k[0];
+                        group[o + 1] ^= k[1];
+                        group[o + 2] ^= k[2];
+                        group[o + 3] ^= k[3];
+                    }
+                }
+                counter = counter.wrapping_add(4);
+                done += X4_BYTES;
+            }
+        }
+        for chunk in data[done..].chunks_mut(64) {
             let ks = self.block(counter);
             for (b, k) in chunk.iter_mut().zip(ks.iter()) {
                 *b ^= k;
@@ -135,6 +231,217 @@ impl ChaCha20 {
 /// one-time key in the AEAD construction).
 pub fn chacha20_xor(key: &[u8; 32], nonce: &[u8; 12], counter: u32, data: &mut [u8]) {
     ChaCha20::new(key, nonce, counter).apply_keystream(data);
+}
+
+// ---------------------------------------------------------------------------
+// 4-block-parallel cores
+// ---------------------------------------------------------------------------
+//
+// Vertical form: 16 lanes-of-4 registers, register i holding state
+// word i for blocks counter..counter+4, so the 20 rounds run on all
+// four blocks at once with zero shuffles. All cores emit the same
+// word-major staging layout (`out[i*4 + l]` = word i of block
+// counter+l); per-lane counters use RFC wrapping semantics — the
+// *request-span* guard lives in the callers above.
+
+#[inline(always)]
+fn lane_add(a: [u32; 4], b: [u32; 4]) -> [u32; 4] {
+    [
+        a[0].wrapping_add(b[0]),
+        a[1].wrapping_add(b[1]),
+        a[2].wrapping_add(b[2]),
+        a[3].wrapping_add(b[3]),
+    ]
+}
+
+#[inline(always)]
+fn lane_xor_rotl(a: [u32; 4], b: [u32; 4], r: u32) -> [u32; 4] {
+    [
+        (a[0] ^ b[0]).rotate_left(r),
+        (a[1] ^ b[1]).rotate_left(r),
+        (a[2] ^ b[2]).rotate_left(r),
+        (a[3] ^ b[3]).rotate_left(r),
+    ]
+}
+
+/// Portable lane-array form of the 4-block core: the fallback when no
+/// vector ISA is detected, and the layout reference the AVX2/NEON
+/// cores are asserted against on capable hardware.
+fn x4_blocks_portable(key: &[u32; 8], nonce: &[u32; 3], counter: u32) -> [u32; 64] {
+    let splat = |w: u32| [w; 4];
+    let init: [[u32; 4]; 16] = [
+        splat(0x61707865), splat(0x3320646e), splat(0x79622d32), splat(0x6b206574),
+        splat(key[0]), splat(key[1]), splat(key[2]), splat(key[3]),
+        splat(key[4]), splat(key[5]), splat(key[6]), splat(key[7]),
+        [counter, counter.wrapping_add(1), counter.wrapping_add(2), counter.wrapping_add(3)],
+        splat(nonce[0]), splat(nonce[1]), splat(nonce[2]),
+    ];
+    let mut x = init;
+    macro_rules! qr {
+        ($a:literal, $b:literal, $c:literal, $d:literal) => {
+            x[$a] = lane_add(x[$a], x[$b]);
+            x[$d] = lane_xor_rotl(x[$d], x[$a], 16);
+            x[$c] = lane_add(x[$c], x[$d]);
+            x[$b] = lane_xor_rotl(x[$b], x[$c], 12);
+            x[$a] = lane_add(x[$a], x[$b]);
+            x[$d] = lane_xor_rotl(x[$d], x[$a], 8);
+            x[$c] = lane_add(x[$c], x[$d]);
+            x[$b] = lane_xor_rotl(x[$b], x[$c], 7);
+        };
+    }
+    for _ in 0..10 {
+        qr!(0, 4, 8, 12);
+        qr!(1, 5, 9, 13);
+        qr!(2, 6, 10, 14);
+        qr!(3, 7, 11, 15);
+        qr!(0, 5, 10, 15);
+        qr!(1, 6, 11, 12);
+        qr!(2, 7, 8, 13);
+        qr!(3, 4, 9, 14);
+    }
+    let mut out = [0u32; 64];
+    for i in 0..16 {
+        out[i * 4..i * 4 + 4].copy_from_slice(&lane_add(x[i], init[i]));
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// 4-block ChaCha20 core on 128-bit lanes. Gated on AVX2 (not bare
+    /// SSE2) so the xor/shift/or rotate idiom compiles to efficient
+    /// VEX forms.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime (the
+    /// `simd::active_isa` probe) before calling.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn four_blocks(key: &[u32; 8], nonce: &[u32; 3], counter: u32) -> [u32; 64] {
+        macro_rules! splat {
+            ($w:expr) => {
+                _mm_set1_epi32($w as i32)
+            };
+        }
+        // rotate-left via paired literal shifts: `32 - N` as a shift
+        // const would be a generic const expr (unstable on our 1.73
+        // floor), so both counts are spelled out at each call site
+        macro_rules! rotl {
+            ($v:expr, $l:literal, $r:literal) => {{
+                let v = $v;
+                _mm_or_si128(_mm_slli_epi32::<$l>(v), _mm_srli_epi32::<$r>(v))
+            }};
+        }
+        macro_rules! qr {
+            ($a:literal, $b:literal, $c:literal, $d:literal) => {
+                x[$a] = _mm_add_epi32(x[$a], x[$b]);
+                x[$d] = rotl!(_mm_xor_si128(x[$d], x[$a]), 16, 16);
+                x[$c] = _mm_add_epi32(x[$c], x[$d]);
+                x[$b] = rotl!(_mm_xor_si128(x[$b], x[$c]), 12, 20);
+                x[$a] = _mm_add_epi32(x[$a], x[$b]);
+                x[$d] = rotl!(_mm_xor_si128(x[$d], x[$a]), 8, 24);
+                x[$c] = _mm_add_epi32(x[$c], x[$d]);
+                x[$b] = rotl!(_mm_xor_si128(x[$b], x[$c]), 7, 25);
+            };
+        }
+        let init: [__m128i; 16] = [
+            splat!(0x61707865u32), splat!(0x3320646eu32), splat!(0x79622d32u32), splat!(0x6b206574u32),
+            splat!(key[0]), splat!(key[1]), splat!(key[2]), splat!(key[3]),
+            splat!(key[4]), splat!(key[5]), splat!(key[6]), splat!(key[7]),
+            // _mm_set_epi32 is high-to-low: lane 0 (block `counter`)
+            // is the LAST argument
+            _mm_set_epi32(
+                counter.wrapping_add(3) as i32,
+                counter.wrapping_add(2) as i32,
+                counter.wrapping_add(1) as i32,
+                counter as i32,
+            ),
+            splat!(nonce[0]), splat!(nonce[1]), splat!(nonce[2]),
+        ];
+        let mut x = init;
+        for _ in 0..10 {
+            qr!(0, 4, 8, 12);
+            qr!(1, 5, 9, 13);
+            qr!(2, 6, 10, 14);
+            qr!(3, 7, 11, 15);
+            qr!(0, 5, 10, 15);
+            qr!(1, 6, 11, 12);
+            qr!(2, 7, 8, 13);
+            qr!(3, 4, 9, 14);
+        }
+        let mut out = [0u32; 64];
+        for i in 0..16 {
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(i * 4) as *mut __m128i,
+                _mm_add_epi32(x[i], init[i]),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// 4-block ChaCha20 core on NEON 128-bit lanes.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support at runtime (the
+    /// `simd::active_isa` probe) before calling.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn four_blocks(key: &[u32; 8], nonce: &[u32; 3], counter: u32) -> [u32; 64] {
+        macro_rules! splat {
+            ($w:expr) => {
+                vdupq_n_u32($w)
+            };
+        }
+        macro_rules! rotl {
+            ($v:expr, $l:literal, $r:literal) => {{
+                let v = $v;
+                vorrq_u32(vshlq_n_u32::<$l>(v), vshrq_n_u32::<$r>(v))
+            }};
+        }
+        macro_rules! qr {
+            ($a:literal, $b:literal, $c:literal, $d:literal) => {
+                x[$a] = vaddq_u32(x[$a], x[$b]);
+                x[$d] = rotl!(veorq_u32(x[$d], x[$a]), 16, 16);
+                x[$c] = vaddq_u32(x[$c], x[$d]);
+                x[$b] = rotl!(veorq_u32(x[$b], x[$c]), 12, 20);
+                x[$a] = vaddq_u32(x[$a], x[$b]);
+                x[$d] = rotl!(veorq_u32(x[$d], x[$a]), 8, 24);
+                x[$c] = vaddq_u32(x[$c], x[$d]);
+                x[$b] = rotl!(veorq_u32(x[$b], x[$c]), 7, 25);
+            };
+        }
+        // vld1q_u32 loads lane 0 from the lowest address
+        let ctr =
+            [counter, counter.wrapping_add(1), counter.wrapping_add(2), counter.wrapping_add(3)];
+        let init: [uint32x4_t; 16] = [
+            splat!(0x61707865u32), splat!(0x3320646eu32), splat!(0x79622d32u32), splat!(0x6b206574u32),
+            splat!(key[0]), splat!(key[1]), splat!(key[2]), splat!(key[3]),
+            splat!(key[4]), splat!(key[5]), splat!(key[6]), splat!(key[7]),
+            vld1q_u32(ctr.as_ptr()),
+            splat!(nonce[0]), splat!(nonce[1]), splat!(nonce[2]),
+        ];
+        let mut x = init;
+        for _ in 0..10 {
+            qr!(0, 4, 8, 12);
+            qr!(1, 5, 9, 13);
+            qr!(2, 6, 10, 14);
+            qr!(3, 7, 11, 15);
+            qr!(0, 5, 10, 15);
+            qr!(1, 6, 11, 12);
+            qr!(2, 7, 8, 13);
+            qr!(3, 4, 9, 14);
+        }
+        let mut out = [0u32; 64];
+        for i in 0..16 {
+            vst1q_u32(out.as_mut_ptr().add(i * 4), vaddq_u32(x[i], init[i]));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -227,5 +534,130 @@ mod tests {
         ChaCha20::new(&key, &nonce, 1).apply_keystream(&mut hi);
         assert_eq!(&whole[..64], &lo[..]);
         assert_eq!(&whole[64..], &hi[..]);
+    }
+
+    // -- SIMD core bit-identity ------------------------------------------
+
+    #[test]
+    fn portable_x4_matches_scalar_blocks() {
+        // the lane-interleaved portable core must reproduce the scalar
+        // block function exactly — including where the four per-lane
+        // counters straddle u32::MAX (RFC wrapping semantics; the
+        // request-span guard lives in keystream_u64, not here)
+        let key: [u8; 32] = core::array::from_fn(|i| (i * 31 + 5) as u8);
+        let nonce: [u8; 12] = core::array::from_fn(|i| (i * 17 + 1) as u8);
+        let c = ChaCha20::new(&key, &nonce, 0);
+        for counter in [0u32, 1, 7, 1000, u32::MAX - 3, u32::MAX - 1] {
+            let st = x4_blocks_portable(&c.key, &c.nonce, counter);
+            for l in 0..4u32 {
+                let want = c.block_words(counter.wrapping_add(l));
+                for (i, w) in want.iter().enumerate() {
+                    assert_eq!(st[i * 4 + l as usize], *w, "counter={counter} lane={l} word={i}");
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_x4_matches_portable() {
+        // real gate on CI hardware regardless of VFL_SIMD: calls the
+        // intrinsic core directly whenever the CPU has AVX2
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("skipping avx2_x4_matches_portable: no AVX2 on this host");
+            return;
+        }
+        let key: [u8; 32] = core::array::from_fn(|i| (i * 13 + 7) as u8);
+        let nonce: [u8; 12] = core::array::from_fn(|i| (i * 29 + 3) as u8);
+        let c = ChaCha20::new(&key, &nonce, 0);
+        for counter in [0u32, 3, 12345, u32::MAX - 3] {
+            // SAFETY: AVX2 presence checked above.
+            let got = unsafe { avx2::four_blocks(&c.key, &c.nonce, counter) };
+            assert_eq!(got, x4_blocks_portable(&c.key, &c.nonce, counter), "counter={counter}");
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_x4_matches_portable() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            eprintln!("skipping neon_x4_matches_portable: no NEON on this host");
+            return;
+        }
+        let key: [u8; 32] = core::array::from_fn(|i| (i * 13 + 7) as u8);
+        let nonce: [u8; 12] = core::array::from_fn(|i| (i * 29 + 3) as u8);
+        let c = ChaCha20::new(&key, &nonce, 0);
+        for counter in [0u32, 3, 12345, u32::MAX - 3] {
+            // SAFETY: NEON presence checked above.
+            let got = unsafe { neon::four_blocks(&c.key, &c.nonce, counter) };
+            assert_eq!(got, x4_blocks_portable(&c.key, &c.nonce, counter), "counter={counter}");
+        }
+    }
+
+    #[test]
+    fn keystream_u64_grouped_matches_single_blocks() {
+        // whatever ISA dispatched, the grouped path must equal the
+        // single-block reference for lengths on every side of the
+        // 32-word group boundary
+        let key: [u8; 32] = core::array::from_fn(|i| (i * 7 + 2) as u8);
+        let nonce = [6u8; 12];
+        for start in [0u32, 5] {
+            let c = ChaCha20::new(&key, &nonce, start);
+            for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 63, 64, 65, 100, 131] {
+                let mut got = vec![0u64; len];
+                c.keystream_u64(&mut got);
+                let mut want = vec![0u64; len];
+                for (b, chunk) in want.chunks_mut(BLOCK_WORDS_U64).enumerate() {
+                    let w = c.block_words(start + b as u32);
+                    for (j, o) in chunk.iter_mut().enumerate() {
+                        *o = (w[2 * j] as u64) | ((w[2 * j + 1] as u64) << 32);
+                    }
+                }
+                assert_eq!(got, want, "start={start} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_keystream_grouped_matches_single_blocks() {
+        let key = [8u8; 32];
+        let nonce = [1u8; 12];
+        let c = ChaCha20::new(&key, &nonce, 2);
+        let mut grouped: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let mut reference = grouped.clone();
+        c.apply_keystream(&mut grouped);
+        for (b, chunk) in reference.chunks_mut(64).enumerate() {
+            let ks = c.block(2 + b as u32);
+            for (x, k) in chunk.iter_mut().zip(ks.iter()) {
+                *x ^= k;
+            }
+        }
+        assert_eq!(grouped, reference);
+    }
+
+    // -- 32-bit block counter boundary -----------------------------------
+
+    #[test]
+    fn keystream_to_final_block_is_allowed() {
+        let c = ChaCha20::new(&[0u8; 32], &[0u8; 12], u32::MAX);
+        let mut out = [0u64; BLOCK_WORDS_U64]; // exactly the last block
+        c.keystream_u64(&mut out);
+        assert_ne!(out, [0u64; BLOCK_WORDS_U64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "keystream would repeat")]
+    fn keystream_past_final_block_panics() {
+        let c = ChaCha20::new(&[0u8; 32], &[0u8; 12], u32::MAX);
+        let mut out = [0u64; BLOCK_WORDS_U64 + 1]; // needs block u32::MAX + 1
+        c.keystream_u64(&mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "keystream would repeat")]
+    fn apply_keystream_past_final_block_panics() {
+        let c = ChaCha20::new(&[0u8; 32], &[0u8; 12], u32::MAX - 1);
+        let mut data = [0u8; 64 * 2 + 1]; // needs block u32::MAX + 1
+        c.apply_keystream(&mut data);
     }
 }

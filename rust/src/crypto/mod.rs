@@ -4,6 +4,27 @@
 //! protocol (X25519 ECDH, ChaCha20-Poly1305 AEAD, HKDF, mask PRG) and
 //! its baselines (Paillier, BFV) are all implemented here, with RFC /
 //! NIST test vectors in each module's unit tests.
+//!
+//! # SIMD dispatch model
+//!
+//! The compute hot path is ChaCha20 mask expansion ([`prg`] over
+//! [`chacha20`]) and the ℤ₂⁶⁴ folds in [`crate::z64`]. Both dispatch
+//! through one runtime probe ([`simd::active_isa`]): AVX2 on x86_64,
+//! NEON on aarch64, scalar otherwise, with `VFL_SIMD=off` pinning the
+//! scalar reference paths. Three rules keep this safe:
+//!
+//! 1. **Scalar is the semantics.** The single-block
+//!    [`chacha20::ChaCha20::block_words`] core and the plain wrapping
+//!    loops define the protocol; every vector kernel is an
+//!    implementation of *that*, never a variant of it.
+//! 2. **Bit-identity is asserted, not assumed.** Each kernel has
+//!    property tests against its scalar twin across alignments and
+//!    lengths, and CI re-runs the protocol equivalence suites with
+//!    `VFL_SIMD=off` so a divergence fails loudly at both levels.
+//! 3. **Detection is cached and data-independent.** One `OnceLock`
+//!    probe per process; dispatch can change speed, never bytes —
+//!    masks expanded on an AVX2 server cancel against masks from a
+//!    NEON client.
 
 pub mod aead;
 pub mod bfv;
@@ -21,4 +42,5 @@ pub mod rng;
 pub mod sha256;
 pub mod sha512;
 pub mod shamir;
+pub mod simd;
 pub mod x25519;

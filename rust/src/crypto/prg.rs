@@ -19,12 +19,41 @@
 //!   window never expands more keystream than it covers, and chunked
 //!   output is bit-identical to the monolithic expansion (asserted in
 //!   the tests below).
+//!
+//! Mask expansion is the client-side compute hot path, so the window
+//! fold is SIMD-dispatched: aligned interior spans run four ChaCha20
+//! blocks at a time through [`super::chacha20`]'s vector core and fold
+//! with [`crate::z64`] lane adds, while `VFL_SIMD=off` (or a CPU with
+//! no vector ISA) takes the original single-block scalar path. The two
+//! are bit-identical for every `(offset, len)` — a hard requirement,
+//! since masks expanded on different machines must cancel — and the
+//! property tests below sweep exactly that.
+//!
+//! The ChaCha20 block counter is 32-bit: one (round, tensor) stream
+//! yields at most 2³² blocks = 2³⁵ words (256 GiB). Block indices are
+//! converted with a *checked* cast ([`block_counter`]) — the old
+//! unchecked `b as u32` silently wrapped and reused keystream past
+//! that point.
 
-use super::chacha20::ChaCha20;
+use super::chacha20::{ChaCha20, X4_WORDS_U64};
 use super::hkdf;
+use super::simd::{active_isa, SimdIsa};
+use crate::z64;
 
 /// Mask words per ChaCha20 block (64 keystream bytes = 8 × u64).
 const WORDS_PER_BLOCK: usize = 8;
+
+/// Checked block-index → ChaCha20 counter conversion. Past 2³² blocks
+/// the 32-bit counter would wrap and reuse keystream — masks would
+/// stop cancelling AND pairs of masked tensors would leak their
+/// difference. Protocol-fatal, so this is a documented panic rather
+/// than a `Result` on the hot path.
+#[inline]
+fn block_counter(block: usize) -> u32 {
+    u32::try_from(block).unwrap_or_else(|_| {
+        panic!("mask stream exceeded 2^32 ChaCha20 blocks (block index {block}): keystream would repeat")
+    })
+}
 
 /// The ChaCha20 instance behind one (secret, round, tag) mask stream:
 /// key domain-separated from other uses of the shared secret, context
@@ -59,15 +88,19 @@ pub fn pairwise_mask(
     len: usize,
 ) -> Vec<u64> {
     assert_ne!(me, peer);
-    let words = mask_words(shared_secret, round, tensor_tag, len);
-    if peer > me {
-        words
-    } else {
-        words.into_iter().map(|w| w.wrapping_neg()).collect()
+    let mut words = mask_words(shared_secret, round, tensor_tag, len);
+    if peer < me {
+        // in place: the old map/collect allocated a second full
+        // tensor on the client hot path
+        z64::wrap_neg(&mut words);
     }
+    words
 }
 
 /// Accumulate the total mask for client `me` over all peers (Eq. 3).
+/// One output allocation; each peer's stream folds straight into the
+/// accumulator through the SIMD window path (the old form allocated a
+/// full signed mask vector per peer).
 pub fn total_mask(
     secrets: &[(usize, [u8; 32])], // (peer index, shared secret)
     me: usize,
@@ -76,12 +109,7 @@ pub fn total_mask(
     len: usize,
 ) -> Vec<u64> {
     let mut acc = vec![0u64; len];
-    for (peer, ss) in secrets {
-        let delta = pairwise_mask(ss, me, *peer, round, tensor_tag, len);
-        for (a, d) in acc.iter_mut().zip(delta.iter()) {
-            *a = a.wrapping_add(*d);
-        }
-    }
+    TotalMaskStream::new(secrets, me, round, tensor_tag).add_window(0, &mut acc);
     acc
 }
 
@@ -114,28 +142,79 @@ impl MaskStream {
 
     /// Wrap-add the mask words for `[offset, offset + out.len())` into
     /// `out` (already signed, so accumulating windows from several
-    /// streams is the windowed form of [`total_mask`]).
+    /// streams is the windowed form of [`total_mask`]). Dispatches the
+    /// aligned interior through the 4-block SIMD keystream core when
+    /// one is active; bit-identical to [`Self::add_window_scalar`] for
+    /// every `(offset, len)`.
     pub fn add_window(&self, offset: usize, out: &mut [u64]) {
+        self.fold_window(offset, out, active_isa() != SimdIsa::Scalar);
+    }
+
+    /// The original single-block reference path — what `VFL_SIMD=off`
+    /// pins at runtime. Public as the bit-identity anchor for the
+    /// SIMD sweep tests and the scalar leg of the microbench.
+    pub fn add_window_scalar(&self, offset: usize, out: &mut [u64]) {
+        self.fold_window(offset, out, false);
+    }
+
+    /// Shared fold body. `x4 = true` expands aligned interior spans
+    /// four blocks per keystream dispatch: a leading partial block
+    /// aligns `pos` upward through the scalar core, 32-word groups run
+    /// the vector core, the ragged tail is scalar again.
+    fn fold_window(&self, offset: usize, out: &mut [u64], x4: bool) {
         if out.is_empty() {
             return;
         }
         let end = offset + out.len();
-        let first_block = offset / WORDS_PER_BLOCK;
-        let last_block = (end - 1) / WORDS_PER_BLOCK;
+        let mut pos = offset; // absolute word index into the stream
         let mut block = [0u64; WORDS_PER_BLOCK];
-        for b in first_block..=last_block {
-            let words = self.cipher.block_words(b as u32);
-            for (j, w) in block.iter_mut().enumerate() {
-                *w = (words[2 * j] as u64) | ((words[2 * j + 1] as u64) << 32);
+        if pos % WORDS_PER_BLOCK != 0 {
+            let b = pos / WORDS_PER_BLOCK;
+            let lo = pos % WORDS_PER_BLOCK;
+            let hi = end.min((b + 1) * WORDS_PER_BLOCK);
+            self.block_u64(b, &mut block);
+            self.fold(&mut out[..hi - pos], &block[lo..lo + (hi - pos)]);
+            pos = hi;
+        }
+        if x4 {
+            let mut group = [0u64; X4_WORDS_U64];
+            while end - pos >= X4_WORDS_U64 {
+                let b = pos / WORDS_PER_BLOCK;
+                // checked span for the whole group — the old unchecked
+                // `b as u32` is exactly the wrap bug this guards
+                let counter = block_counter(b + 3) - 3;
+                self.cipher.four_blocks_u64_into(counter, &mut group);
+                self.fold(&mut out[pos - offset..pos - offset + X4_WORDS_U64], &group);
+                pos += X4_WORDS_U64;
             }
-            let base = b * WORDS_PER_BLOCK;
-            let lo = offset.max(base);
-            let hi = end.min(base + WORDS_PER_BLOCK);
-            for w in lo..hi {
-                let m = block[w - base];
-                let m = if self.negate { m.wrapping_neg() } else { m };
-                out[w - offset] = out[w - offset].wrapping_add(m);
-            }
+        }
+        while pos < end {
+            let b = pos / WORDS_PER_BLOCK;
+            let n = (end - pos).min(WORDS_PER_BLOCK);
+            self.block_u64(b, &mut block);
+            self.fold(&mut out[pos - offset..pos - offset + n], &block[..n]);
+            pos += n;
+        }
+    }
+
+    /// Fold one keystream span into the output with the stream's sign.
+    /// Sign hoisted out of the word loop (the old code branched per
+    /// word); both directions are lane-chunked in [`crate::z64`].
+    #[inline]
+    fn fold(&self, dst: &mut [u64], src: &[u64]) {
+        if self.negate {
+            z64::wrap_sub(dst, src);
+        } else {
+            z64::wrap_add(dst, src);
+        }
+    }
+
+    /// One scalar keystream block as u64 mask words.
+    #[inline]
+    fn block_u64(&self, block: usize, out: &mut [u64; WORDS_PER_BLOCK]) {
+        let words = self.cipher.block_words(block_counter(block));
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (words[2 * j] as u64) | ((words[2 * j + 1] as u64) << 32);
         }
     }
 
@@ -169,6 +248,15 @@ impl TotalMaskStream {
     pub fn add_window(&self, offset: usize, out: &mut [u64]) {
         for s in &self.streams {
             s.add_window(offset, out);
+        }
+    }
+
+    /// The scalar reference leg of [`Self::add_window`] — the anchor
+    /// the SIMD sweep tests pin dispatch output against, whatever ISA
+    /// the host actually probed.
+    pub fn add_window_scalar(&self, offset: usize, out: &mut [u64]) {
+        for s in &self.streams {
+            s.add_window_scalar(offset, out);
         }
     }
 }
@@ -229,6 +317,25 @@ mod tests {
     fn deterministic_given_secret() {
         let s = ss(1, 2);
         assert_eq!(mask_words(&s, 9, 4, 100), mask_words(&s, 9, 4, 100));
+    }
+
+    #[test]
+    fn total_mask_matches_per_peer_fold() {
+        // total_mask is now windowed + SIMD-grouped internally; pin it
+        // to the original definition — a plain fold of signed per-peer
+        // mask vectors
+        let me = 2usize;
+        let secrets: Vec<(usize, [u8; 32])> =
+            (0..6).filter(|&p| p != me).map(|p| (p, ss(me, p))).collect();
+        for len in [1usize, 7, 8, 33, 100] {
+            let mut want = vec![0u64; len];
+            for (peer, s) in &secrets {
+                for (a, d) in want.iter_mut().zip(pairwise_mask(s, me, *peer, 4, 1, len)) {
+                    *a = a.wrapping_add(d);
+                }
+            }
+            assert_eq!(total_mask(&secrets, me, 4, 1, len), want, "len={len}");
+        }
     }
 
     #[test]
@@ -293,5 +400,92 @@ mod tests {
         }
         let want: Vec<u64> = (0..len).map(|j| (0..n).map(|i| (i * 1000 + j) as u64).sum()).collect();
         assert_eq!(agg, want);
+    }
+
+    // -- SIMD ≡ scalar sweep ---------------------------------------------
+
+    #[test]
+    fn grouped_and_scalar_windows_bit_identical() {
+        // the x4-grouped expansion (portable lane core on scalar-only
+        // hosts, AVX2/NEON where detected) must equal the single-block
+        // scalar path for every alignment: offsets and lengths chosen
+        // to hit empty/partial leading blocks, 0..3 interior groups,
+        // and ragged tails, in both mask directions
+        let s = ss(1, 4);
+        for (me, peer) in [(1usize, 4usize), (4, 1)] {
+            let stream = MaskStream::pairwise(&s, me, peer, 6, 2);
+            for offset in [0usize, 1, 5, 7, 8, 9, 31, 32, 33, 100, 255, 256, 257] {
+                for len in [0usize, 1, 3, 8, 17, 31, 32, 33, 64, 100, 129, 257] {
+                    let mut grouped = vec![0x5a5au64; len];
+                    let mut scalar = grouped.clone();
+                    stream.fold_window(offset, &mut grouped, true);
+                    stream.fold_window(offset, &mut scalar, false);
+                    assert_eq!(grouped, scalar, "me={me} offset={offset} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn public_window_paths_agree() {
+        // whatever the process-level ISA, the public dispatch and the
+        // public scalar anchor must agree
+        let s = ss(0, 3);
+        let stream = MaskStream::pairwise(&s, 3, 0, 2, 1);
+        for (offset, len) in [(0usize, 257usize), (5, 96), (32, 32), (7, 200)] {
+            let mut a = vec![1u64; len];
+            let mut b = vec![1u64; len];
+            stream.add_window(offset, &mut a);
+            stream.add_window_scalar(offset, &mut b);
+            assert_eq!(a, b, "({offset},{len})");
+        }
+    }
+
+    // -- 32-bit block counter boundary (the `b as u32` wrap bug) ---------
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn window_at_final_block_is_allowed() {
+        let s = ss(0, 1);
+        let stream = MaskStream::pairwise(&s, 0, 1, 3, 0);
+        let offset = ((1usize << 32) - 1) * WORDS_PER_BLOCK;
+        let mut out = [0u64; WORDS_PER_BLOCK];
+        stream.add_window(offset, &mut out);
+        assert_ne!(out, [0u64; WORDS_PER_BLOCK]);
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    #[should_panic(expected = "keystream would repeat")]
+    fn window_past_final_block_panics() {
+        let s = ss(0, 1);
+        let stream = MaskStream::pairwise(&s, 0, 1, 3, 0);
+        let mut out = [0u64; 1];
+        stream.add_window((1usize << 32) * WORDS_PER_BLOCK, &mut out);
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn grouped_window_to_final_block_matches_scalar() {
+        let s = ss(0, 1);
+        let stream = MaskStream::pairwise(&s, 0, 1, 3, 0);
+        let offset = ((1usize << 32) - 4) * WORDS_PER_BLOCK;
+        let mut grouped = [0u64; X4_WORDS_U64];
+        stream.fold_window(offset, &mut grouped, true);
+        let mut scalar = [0u64; X4_WORDS_U64];
+        stream.fold_window(offset, &mut scalar, false);
+        assert_eq!(grouped, scalar);
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    #[should_panic(expected = "keystream would repeat")]
+    fn grouped_window_past_final_block_panics() {
+        // the grouped path must check the span of the whole 4-block
+        // group, not just its first block
+        let s = ss(0, 1);
+        let stream = MaskStream::pairwise(&s, 0, 1, 3, 0);
+        let mut out = [0u64; X4_WORDS_U64];
+        stream.fold_window(((1usize << 32) - 3) * WORDS_PER_BLOCK, &mut out, true);
     }
 }

@@ -46,7 +46,14 @@ impl DetRng {
 
     fn refill(&mut self) {
         self.buf = self.cipher.block(self.counter);
-        self.counter = self.counter.wrapping_add(1);
+        // same checked-counter rule as the mask PRG: a wrapped 32-bit
+        // block counter silently repeats the keystream (2^32 blocks =
+        // 256 GiB of output per seed — unreachable in practice, fatal
+        // if reached)
+        self.counter = self
+            .counter
+            .checked_add(1)
+            .expect("DetRng exhausted 2^32 ChaCha20 blocks: keystream would repeat");
         self.pos = 0;
     }
 

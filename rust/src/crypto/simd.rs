@@ -1,0 +1,94 @@
+//! Runtime SIMD ISA selection for the compute hot paths.
+//!
+//! One probe, cached per process: AVX2 on x86_64, NEON on aarch64,
+//! scalar everywhere else. `VFL_SIMD=off` pins the scalar reference
+//! paths — the CI axis that re-proves SIMD ≡ scalar bit-identity, and
+//! the escape hatch if a vector kernel ever misbehaves on exotic
+//! hardware.
+//!
+//! The dispatch contract is that it is *invisible*: every vector
+//! kernel behind this probe (the 4-block ChaCha20 core in
+//! [`super::chacha20`], the ℤ₂⁶⁴ folds in [`crate::z64`]) produces
+//! bit-identical output to its scalar twin, asserted by property tests
+//! next to each kernel. The probe can therefore only change speed,
+//! never protocol bytes — masks expanded on an AVX2 aggregator cancel
+//! against masks expanded on a NEON phone.
+
+use std::sync::OnceLock;
+
+/// The instruction set the vector kernels dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// Portable scalar reference paths (also what `VFL_SIMD=off` pins).
+    Scalar,
+    /// x86_64 AVX2 (128-bit lanes carry the 4-block ChaCha20 core,
+    /// 256-bit lanes the ℤ₂⁶⁴ accumulator folds).
+    Avx2,
+    /// aarch64 NEON (128-bit lanes; baseline on every aarch64 target,
+    /// still probed at runtime for uniformity with x86).
+    Neon,
+}
+
+impl SimdIsa {
+    /// Stable lowercase name for logs and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Neon => "neon",
+        }
+    }
+}
+
+fn probe() -> SimdIsa {
+    if let Ok(v) = std::env::var("VFL_SIMD") {
+        let v = v.trim();
+        // same fail-loud convention as the other VFL_* env hooks: a
+        // set-but-unrecognized value is a config bug, not a default
+        match v.to_ascii_lowercase().as_str() {
+            "off" | "0" | "scalar" => return SimdIsa::Scalar,
+            "" | "on" | "auto" => {}
+            other => panic!("VFL_SIMD must be off|0|scalar|on|auto, got {other:?}"),
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return SimdIsa::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return SimdIsa::Neon;
+    }
+    SimdIsa::Scalar
+}
+
+/// The ISA every vector kernel dispatches to. Probed once per process
+/// (`OnceLock`), so a test or bench that wants the scalar legs must
+/// set `VFL_SIMD=off` before the first dispatch — which is why the CI
+/// scalar axis is a separate process, not a test-local override.
+pub fn active_isa() -> SimdIsa {
+    static ISA: OnceLock<SimdIsa> = OnceLock::new();
+    *ISA.get_or_init(probe)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_is_stable_and_arch_consistent() {
+        let isa = active_isa();
+        assert_eq!(isa, active_isa(), "probe must be cached, not re-run");
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_ne!(isa, SimdIsa::Avx2);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_ne!(isa, SimdIsa::Neon);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(SimdIsa::Scalar.name(), "scalar");
+        assert_eq!(SimdIsa::Avx2.name(), "avx2");
+        assert_eq!(SimdIsa::Neon.name(), "neon");
+    }
+}

@@ -144,6 +144,32 @@
 //! `tests/dropout_recovery.rs` prove recovery bit-exact against the
 //! zero-contribution twin run on every transport.
 //!
+//! ## SIMD dispatch and the zero-copy chunk path
+//!
+//! The per-word compute cost of a round is ChaCha20 mask expansion
+//! plus ℤ₂⁶⁴ wrapping folds, and both are vectorized behind one
+//! runtime probe ([`crypto::simd::active_isa`]): a 4-block-parallel
+//! ChaCha20 core (AVX2 / NEON / portable lanes) in
+//! [`crypto::chacha20`] and lane-chunked accumulator folds in [`z64`].
+//! The scalar single-block core remains the reference semantics and
+//! the `VFL_SIMD=off` escape hatch; every vector kernel is asserted
+//! bit-identical to it (see the [`crypto`] module docs for the full
+//! dispatch contract — a mask expanded on an AVX2 server must cancel
+//! against one expanded on a NEON client).
+//!
+//! Between the mask PRG and the socket, the chunk path is zero-copy:
+//! masked words are fixed-point encoded and folded directly into the
+//! outgoing wire buffer. The **frame-encode rule** is that a
+//! pre-encoded message must be byte-identical to the `Msg` it
+//! replaces: chunk senders build
+//! `coordinator::messages::begin_masked_chunk` /
+//! `begin_gradient_chunk` headers in an exact-capacity
+//! [`net::wire::Writer`], append payload words with `u64s_raw`, and
+//! ship the buffer as an `OutMsg::Encoded` — transports meter and
+//! frame those bytes exactly as if `Msg::encode` had produced them
+//! (asserted by the builder bit-identity tests and the equivalence
+//! suites, whose Table-2 byte counters would shift on any divergence).
+//!
 //! Everything the paper depends on is implemented from scratch in this
 //! crate: the crypto stack ([`crypto`]), the secure-aggregation core
 //! ([`secagg`]), the dataset substrate ([`data`]), the model substrate
@@ -159,6 +185,7 @@ pub mod model;
 pub mod net;
 pub mod runtime;
 pub mod secagg;
+pub mod z64;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

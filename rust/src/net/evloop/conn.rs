@@ -17,7 +17,7 @@ use std::os::unix::io::RawFd;
 
 use anyhow::{bail, Result};
 
-use crate::net::frame::{Frame, FrameTooLong, MAX_FRAME_LEN};
+use crate::net::frame::{msg_frame_header, Frame, FrameTooLong, MAX_FRAME_LEN};
 
 use super::poller::Interest;
 
@@ -154,6 +154,26 @@ impl OutQueue {
         }
         self.queued += bytes.len();
         self.segs.push_back(bytes);
+        Ok(())
+    }
+
+    /// Enqueue one pre-encoded protocol message as a `Msg` frame
+    /// without re-copying the body: the 9-byte frame header and the
+    /// message bytes go in as two segments (the drain loop already
+    /// handles arbitrary segment boundaries, so a segment split inside
+    /// a frame is invisible on the wire). Byte-identical to
+    /// `enqueue(&Frame::Msg { bytes }, ..)` — the frame-encode rule of
+    /// the zero-copy path — including the oversize and cap checks,
+    /// which run against the header+body total before anything queues.
+    pub fn enqueue_msg(&mut self, msg_bytes: Vec<u8>, token: usize) -> Result<()> {
+        let header = msg_frame_header(msg_bytes.len())?; // cap-checked
+        let total = header.len() + msg_bytes.len();
+        if self.queued + total > self.cap {
+            bail!(QueueOverflow { token, queued: self.queued + total, cap: self.cap });
+        }
+        self.queued += total;
+        self.segs.push_back(header.to_vec());
+        self.segs.push_back(msg_bytes);
         Ok(())
     }
 
@@ -349,6 +369,44 @@ mod tests {
         assert_eq!(of.cap, 64);
         assert!(of.queued > of.cap);
         assert_eq!(q.queued_bytes(), before, "rejected frame was not queued");
+    }
+
+    #[test]
+    fn enqueue_msg_drains_bit_identical_to_frame_enqueue() {
+        // the zero-copy two-segment path must put the same bytes on
+        // the wire as encoding a Frame::Msg — including across partial
+        // writes that straddle the header/body segment boundary
+        for len in [0usize, 1, 5, 300] {
+            let bytes: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            let mut via_frame = OutQueue::default();
+            via_frame.enqueue(&Frame::Msg { bytes: bytes.clone() }, 0).unwrap();
+            let mut via_msg = OutQueue::default();
+            via_msg.enqueue_msg(bytes, 0).unwrap();
+            assert_eq!(via_msg.queued_bytes(), via_frame.queued_bytes(), "len={len}");
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            assert!(via_frame.write_some(&mut a).unwrap());
+            let mut w = Throttle { sink: Vec::new(), budget: 0 };
+            while !via_msg.is_empty() {
+                w.budget = 4; // forces splits inside both segments
+                via_msg.write_some(&mut w).unwrap();
+            }
+            b.extend_from_slice(&w.sink);
+            assert_eq!(b, a, "len={len}");
+        }
+    }
+
+    #[test]
+    fn enqueue_msg_overflow_counts_header_plus_body() {
+        let mut q = OutQueue::with_cap(32);
+        // 9-byte header + 30-byte body = 39 > 32: rejected whole
+        let err = q.enqueue_msg(vec![0; 30], 7).unwrap_err();
+        let of = err.downcast_ref::<QueueOverflow>().expect("typed overflow");
+        assert_eq!((of.token, of.cap, of.queued), (7, 32, 39));
+        assert_eq!(q.queued_bytes(), 0, "rejected message was not queued");
+        // 9 + 23 = 32 fits exactly
+        q.enqueue_msg(vec![0; 23], 7).unwrap();
+        assert_eq!(q.queued_bytes(), 32);
     }
 
     /// A writer that accepts a few bytes then reports `WouldBlock`,

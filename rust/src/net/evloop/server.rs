@@ -224,6 +224,22 @@ impl EvServer {
         self.flush(token);
     }
 
+    /// Enqueue pre-encoded `Msg` wire bytes to a client (the
+    /// zero-copy sibling of [`send_to_client`]: same slot lookup, same
+    /// overflow-marks-dropped handling, but the body bytes go straight
+    /// into the out-queue behind a 9-byte frame header instead of
+    /// being re-copied through a `Frame::Msg` encode).
+    fn send_wire_to_client(&mut self, ci: usize, bytes: Vec<u8>) {
+        let Some(token) = self.client_slot[ci] else { return };
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        if let Err(e) = conn.out.enqueue_msg(bytes, token) {
+            eprintln!("serve(evloop): client {ci} send failed ({e:#}), marking dropped");
+            self.close(token);
+            return;
+        }
+        self.flush(token);
+    }
+
     /// Route an aggregator outbox: meter + enqueue every message,
     /// feed scheduler-control notes to the window (tcp parity:
     /// aggregator-outbox notes never trigger `on_round_complete`).
@@ -236,9 +252,9 @@ impl EvServer {
     ) -> Result<()> {
         for (to, msg) in ob.msgs {
             let Addr::Client(ci) = to else { bail!("aggregator addressed itself") };
-            let bytes = msg.encode();
+            let bytes = msg.into_bytes();
             net.meter(Addr::Aggregator, to, bytes.len());
-            self.send_to_client(ci, &Frame::Msg { bytes });
+            self.send_wire_to_client(ci, bytes);
         }
         for n in ob.notes {
             if let Some(n) = win.observe(n) {

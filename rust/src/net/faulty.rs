@@ -22,7 +22,7 @@
 use anyhow::Result;
 
 use crate::coordinator::messages::Msg;
-use crate::coordinator::party::{Outbox, Party, RoundSpec};
+use crate::coordinator::party::{OutMsg, Outbox, Party, RoundSpec};
 use crate::coordinator::Metrics;
 use crate::crypto::rng::DetRng;
 use crate::model::ModelParams;
@@ -260,7 +260,10 @@ impl<'e> FaultyParty<'e> {
                 return; // silence from the crash point on, notes included
             }
             if self.corrupts_shares() {
-                if let Msg::SurrenderShares { bundles, .. } = &mut m {
+                // SurrenderShares always travels structured (never the
+                // pre-encoded chunk path), so matching the Msg variant
+                // still covers every bundle a client can hand over
+                if let OutMsg::Msg(Msg::SurrenderShares { bundles, .. }) = &mut m {
                     for (_, bytes) in bundles.iter_mut() {
                         if let Some(b) = bytes.last_mut() {
                             *b ^= 0x01;
@@ -278,7 +281,7 @@ impl<'e> FaultyParty<'e> {
             }
             self.sent.insert(round, nth + 1);
             if !self.drop_fires(round, nth) {
-                out.send(to, m);
+                out.send_out(to, m);
             }
             // a mid-round crash point fires right *after* its round's
             // `after_sends`-th message — eagerly, so a crash at a
@@ -456,7 +459,7 @@ mod tests {
             .msgs
             .iter()
             .map(|(_, m)| match m {
-                Msg::RequestKeys { epoch } => *epoch,
+                OutMsg::Msg(Msg::RequestKeys { epoch }) => *epoch,
                 _ => unreachable!(),
             })
             .collect();
@@ -474,7 +477,7 @@ mod tests {
             .msgs
             .iter()
             .map(|(_, m)| match m {
-                Msg::RequestKeys { epoch } => *epoch,
+                OutMsg::Msg(Msg::RequestKeys { epoch }) => *epoch,
                 _ => unreachable!(),
             })
             .collect();

@@ -139,6 +139,46 @@ impl Frame {
     }
 }
 
+/// The 9 wire bytes that precede a `Msg` frame's message bytes:
+/// `u32 frame_len ‖ F_MSG ‖ u32 msg_len`. Factored out so the
+/// zero-copy senders (tcp's `write_msg_frame`, the evloop out-queue)
+/// can emit header and message body from separate buffers while
+/// staying bit-identical to `Frame::Msg { bytes }.write_to(..)`.
+/// Oversize bodies get the same typed [`FrameTooLong`] as `write_to`.
+pub fn msg_frame_header(msg_len: usize) -> Result<[u8; 9]> {
+    let body_len = 1 + 4 + msg_len as u64;
+    check_frame_len(body_len)?;
+    let mut h = [0u8; 9];
+    h[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    h[4] = F_MSG;
+    h[5..9].copy_from_slice(&(msg_len as u32).to_le_bytes());
+    Ok(h)
+}
+
+/// One fully-framed `Msg` as a single exact-capacity buffer —
+/// bit-identical to what `Frame::Msg { bytes }.write_to(..)` would put
+/// on the socket. Used where a pre-assembled wire buffer is queued
+/// rather than written (the evloop outbound queue).
+pub fn encode_msg_frame(msg_bytes: &[u8]) -> Result<Vec<u8>> {
+    let h = msg_frame_header(msg_bytes.len())?;
+    let mut wire = Vec::with_capacity(h.len() + msg_bytes.len());
+    wire.extend_from_slice(&h);
+    wire.extend_from_slice(msg_bytes);
+    Ok(wire)
+}
+
+/// Write one `Msg` frame from pre-encoded message bytes: the 9-byte
+/// header then the body, no intermediate frame-body `Vec` (the
+/// zero-copy twin of `Frame::Msg { .. }.write_to`, same byte stream
+/// and the same error contexts).
+pub fn write_msg_to(w: &mut impl Write, msg_bytes: &[u8]) -> Result<()> {
+    let h = msg_frame_header(msg_bytes.len())?;
+    w.write_all(&h).context("frame length")?;
+    w.write_all(msg_bytes).context("frame body")?;
+    w.flush().context("frame flush")?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +225,34 @@ mod tests {
         let err = Frame::read_from(&mut cur).unwrap_err();
         let too_long = err.downcast_ref::<FrameTooLong>().expect("typed frame-length error");
         assert_eq!(*too_long, FrameTooLong { len: u32::MAX as u64, max: MAX_FRAME_LEN });
+    }
+
+    #[test]
+    fn zero_copy_msg_frame_paths_are_bit_identical() {
+        // header-then-body writers must reproduce Frame::Msg.write_to
+        // byte for byte — the frame-encode rule of the zero-copy path
+        for len in [0usize, 1, 4, 100, 70_000] {
+            let bytes: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            let mut want = Vec::new();
+            Frame::Msg { bytes: bytes.clone() }.write_to(&mut want).unwrap();
+            let mut via_write = Vec::new();
+            write_msg_to(&mut via_write, &bytes).unwrap();
+            assert_eq!(via_write, want, "write_msg_to len={len}");
+            assert_eq!(encode_msg_frame(&bytes).unwrap(), want, "encode_msg_frame len={len}");
+            let h = msg_frame_header(bytes.len()).unwrap();
+            assert_eq!(&want[..9], &h[..], "msg_frame_header len={len}");
+        }
+    }
+
+    #[test]
+    fn zero_copy_msg_frame_enforces_length_cap() {
+        // msg_len such that 5 + msg_len > MAX_FRAME_LEN must be the
+        // same typed error write_to raises — checked without
+        // allocating a 256 MiB body
+        let err = msg_frame_header(MAX_FRAME_LEN as usize).unwrap_err();
+        let too_long = err.downcast_ref::<FrameTooLong>().expect("typed frame-length error");
+        assert_eq!(too_long.max, MAX_FRAME_LEN);
+        assert!(msg_frame_header(MAX_FRAME_LEN as usize - 5).is_ok());
     }
 
     #[test]

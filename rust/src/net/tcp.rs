@@ -89,25 +89,36 @@ impl std::fmt::Display for WriteStalled {
 
 impl std::error::Error for WriteStalled {}
 
-/// Write one frame through a socket with a write timeout armed,
-/// converting a timeout (`WouldBlock`/`TimedOut` — platforms differ)
-/// into the typed [`WriteStalled`] error. Every frame write in this
-/// module goes through here; the streams are always blocking, so
-/// those kinds can only mean the timeout fired.
+/// Map a frame-write failure whose root cause is an expired write
+/// timeout (`WouldBlock`/`TimedOut` — platforms differ) to the typed
+/// [`WriteStalled`] error. The streams are always blocking, so those
+/// kinds can only mean the timeout fired.
+fn stall_context(e: anyhow::Error) -> anyhow::Error {
+    let stalled = e.root_cause().downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    });
+    if stalled {
+        e.context(WriteStalled { timeout: DEFAULT_WRITE_TIMEOUT })
+    } else {
+        e
+    }
+}
+
+/// Write one frame through a socket with a write timeout armed. Every
+/// control-frame write in this module goes through here.
 fn write_frame(w: &mut impl Write, f: &Frame) -> Result<()> {
-    f.write_to(w).map_err(|e| {
-        let stalled = e.root_cause().downcast_ref::<std::io::Error>().is_some_and(|io| {
-            matches!(
-                io.kind(),
-                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-            )
-        });
-        if stalled {
-            e.context(WriteStalled { timeout: DEFAULT_WRITE_TIMEOUT })
-        } else {
-            e
-        }
-    })
+    f.write_to(w).map_err(stall_context)
+}
+
+/// Write one `Msg` frame from pre-encoded message bytes — the
+/// zero-copy twin of `write_frame(w, &Frame::Msg { bytes })`, same
+/// byte stream ([`frame::write_msg_to`]) and the same [`WriteStalled`]
+/// mapping, without re-wrapping the bytes in a frame-body `Vec`.
+fn write_msg_frame(w: &mut impl Write, msg_bytes: &[u8]) -> Result<()> {
+    super::frame::write_msg_to(w, msg_bytes).map_err(stall_context)
 }
 
 // The server's quiescence window before probing the aggregator for
@@ -132,10 +143,10 @@ fn route_server(
 ) -> Result<()> {
     for (to, msg) in ob.msgs {
         let Addr::Client(ci) = to else { bail!("aggregator addressed itself") };
-        let bytes = msg.encode();
+        let bytes = msg.into_bytes();
         net.meter(Addr::Aggregator, to, bytes.len());
         if let Some(w) = writers[ci].as_mut() {
-            if let Err(e) = write_frame(w, &Frame::Msg { bytes }) {
+            if let Err(e) = write_msg_frame(w, &bytes) {
                 eprintln!("serve: client {ci} write failed ({e:#}), marking dropped");
                 writers[ci] = None;
             }
@@ -393,6 +404,9 @@ mod tests {
             let err = write_frame(&mut Stall(kind), &Frame::Stop).unwrap_err();
             let st = err.downcast_ref::<WriteStalled>().expect("typed WriteStalled");
             assert_eq!(st.timeout, DEFAULT_WRITE_TIMEOUT);
+            // the zero-copy msg-frame path maps the same way
+            let err = write_msg_frame(&mut Stall(kind), &[1, 2, 3]).unwrap_err();
+            assert!(err.downcast_ref::<WriteStalled>().is_some());
         }
         // an ordinary write failure stays untyped
         let err =
@@ -418,7 +432,7 @@ fn client_loop(party: &mut dyn Party, stream: &mut TcpStream) -> Result<()> {
             if to != Addr::Aggregator {
                 bail!("clients may only address the aggregator");
             }
-            write_frame(stream, &Frame::Msg { bytes: msg.encode() })?;
+            write_msg_frame(stream, &msg.into_bytes())?;
         }
         for n in ob.notes {
             write_frame(stream, &Frame::Note(n))?;

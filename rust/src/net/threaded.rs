@@ -143,7 +143,7 @@ fn run_party(
             }
         }
         for (to, msg) in ob.msgs {
-            let bytes = msg.encode();
+            let bytes = msg.into_bytes();
             net.lock().unwrap().meter(me, to, bytes.len());
             router.send(me, to, bytes)?;
         }

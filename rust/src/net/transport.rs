@@ -362,7 +362,7 @@ impl Transport for SimTransport {
         ) -> Vec<u32> {
             let mut completed = Vec::new();
             for (to, msg) in ob.msgs {
-                net.send(from, to, msg.encode());
+                net.send(from, to, msg.into_bytes());
             }
             for n in ob.notes {
                 if let Some(n) = win.observe(n) {

@@ -18,6 +18,13 @@ impl Writer {
         Writer { buf: Vec::new() }
     }
 
+    /// Encoder with `n` bytes pre-reserved. The zero-copy message path
+    /// sizes the buffer exactly (`Msg::encoded_len`) so one allocation
+    /// carries header + payload all the way to the socket.
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
     pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
@@ -56,6 +63,17 @@ impl Writer {
 
     pub fn u64s(&mut self, v: &[u64]) {
         self.u32(v.len() as u32);
+        self.u64s_raw(v);
+    }
+
+    /// Append `v` as little-endian u64 words with NO count prefix —
+    /// the chunk builders write their own headers. On little-endian
+    /// targets this is a single `memcpy`; the per-word fallback keeps
+    /// big-endian targets bit-identical on the wire.
+    pub fn u64s_raw(&mut self, v: &[u64]) {
+        #[cfg(target_endian = "little")]
+        self.buf.extend_from_slice(u64s_as_le_bytes(v));
+        #[cfg(not(target_endian = "little"))]
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
@@ -64,6 +82,18 @@ impl Writer {
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
+}
+
+/// View a u64 slice as its little-endian wire bytes.
+#[cfg(target_endian = "little")]
+#[inline]
+fn u64s_as_le_bytes(v: &[u64]) -> &[u8] {
+    // SAFETY: u64 has no padding or invalid bit patterns, u8's
+    // alignment of 1 divides u64's, and the returned borrow is tied to
+    // `v`'s lifetime. On a little-endian target the in-memory byte
+    // order IS the wire order (pinned bit-identical to the per-word
+    // `to_le_bytes` path in the tests below).
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 8) }
 }
 
 /// Cursor-based decoder.
@@ -124,7 +154,19 @@ impl<'a> Reader<'a> {
     pub fn u64s(&mut self) -> Result<Vec<u64>> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 8)?;
-        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+        let mut out = vec![0u64; n];
+        #[cfg(target_endian = "little")]
+        // SAFETY: `out` owns n*8 writable bytes, `raw` holds exactly
+        // n*8 bytes (take() checked), and a fresh allocation cannot
+        // overlap the input buffer.
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr().cast::<u8>(), n * 8);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for (o, c) in out.iter_mut().zip(raw.chunks_exact(8)) {
+            *o = u64::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(out)
     }
 
     pub fn done(&self) -> bool {
@@ -183,6 +225,38 @@ mod tests {
         assert!(r.u64s().is_err());
         let mut r2 = Reader::new(&[]);
         assert!(r2.u32().is_err());
+    }
+
+    #[test]
+    fn u64s_raw_matches_per_word_encoding() {
+        // the bulk byte-view path must emit exactly the bytes the
+        // per-word to_le_bytes loop emits (the wire is LE by contract)
+        let vals = [0u64, 1, u64::MAX, 0x0102030405060708, 0xdeadbeefcafebabe];
+        let mut w = Writer::new();
+        w.u64s_raw(&vals);
+        let mut want = Vec::new();
+        for v in vals {
+            want.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(w.finish(), want);
+        // and `u64s` == count prefix + raw body
+        let mut a = Writer::new();
+        a.u64s(&vals);
+        let mut b = Writer::new();
+        b.u32(vals.len() as u32);
+        b.u64s_raw(&vals);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn with_capacity_changes_nothing_on_the_wire() {
+        let mut a = Writer::new();
+        let mut b = Writer::with_capacity(64);
+        for w in [&mut a, &mut b] {
+            w.u8(9);
+            w.u64s(&[7, 8, 9]);
+        }
+        assert_eq!(a.finish(), b.finish());
     }
 
     #[test]

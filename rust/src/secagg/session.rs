@@ -164,6 +164,37 @@ impl ClientSession {
         words
     }
 
+    /// `mask_tensor_window` straight into a wire buffer: encode + mask
+    /// in fixed-size stack groups and append the finished words with
+    /// [`Writer::u64s_raw`], so the chunk sender never materializes a
+    /// temporary full-window `Vec<u64>`. Bytes appended are exactly the
+    /// serialization of `mask_tensor_window(stream, values, offset)`
+    /// (the frame-encode rule; pinned by
+    /// `windowed_masking_into_writer_matches_vec_path`).
+    pub fn mask_tensor_window_into(
+        &self,
+        stream: &prg::TotalMaskStream,
+        values: &[f32],
+        offset: usize,
+        w: &mut crate::net::wire::Writer,
+    ) {
+        // group size in words; cut at absolute 256-word boundaries so
+        // the mask stream's grouped x4 interior stays block-aligned
+        const GROUP: usize = 256;
+        let mut scratch = [0u64; GROUP];
+        let mut done = 0;
+        while done < values.len() {
+            let abs = offset + done;
+            let n = (GROUP - abs % GROUP).min(values.len() - done);
+            for (s, v) in scratch[..n].iter_mut().zip(&values[done..done + n]) {
+                *s = self.fp.encode(*v);
+            }
+            stream.add_window(abs, &mut scratch[..n]);
+            w.u64s_raw(&scratch[..n]);
+            done += n;
+        }
+    }
+
     /// Float-domain masking (SecurityMode::SecureFloat): pairwise ±f32
     /// masks added directly to the values. Payload stays 4 B/element
     /// (size parity with unsecured VFL); cancellation is exact up to
@@ -209,9 +240,7 @@ pub fn aggregate(fp: &FixedPoint, masked: &[Vec<u64>]) -> Vec<f32> {
     let mut acc = vec![0u64; len];
     for m in masked {
         assert_eq!(m.len(), len, "masked vectors must be equal length");
-        for (a, v) in acc.iter_mut().zip(m.iter()) {
-            *a = a.wrapping_add(*v);
-        }
+        crate::z64::wrap_add(&mut acc, m);
     }
     fp.decode_vec(&acc)
 }
@@ -358,6 +387,29 @@ mod tests {
                 }
                 assert_eq!(got, mono, "len={len} chunk={chunk}");
             }
+        }
+    }
+
+    #[test]
+    fn windowed_masking_into_writer_matches_vec_path() {
+        // the zero-copy writer path must append exactly the bytes of
+        // the Vec<u64> path's serialization — window offsets straddling
+        // the 256-word group boundary included
+        use crate::net::wire::Writer;
+        let mut rng = DetRng::from_seed(22);
+        let sessions = setup_all(3, 1, &mut rng);
+        let s = &sessions[1];
+        let stream = s.total_mask_stream(5, 0);
+        for (offset, len) in
+            [(0usize, 1usize), (0, 256), (0, 300), (7, 250), (255, 2), (256, 513), (511, 600)]
+        {
+            let vals: Vec<f32> = (0..len).map(|j| (j as f32) * 0.25 - 31.0).collect();
+            let words = s.mask_tensor_window(&stream, &vals, offset);
+            let mut want = Writer::new();
+            want.u64s_raw(&words);
+            let mut got = Writer::new();
+            s.mask_tensor_window_into(&stream, &vals, offset, &mut got);
+            assert_eq!(got.finish(), want.finish(), "offset={offset} len={len}");
         }
     }
 

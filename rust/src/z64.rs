@@ -1,0 +1,203 @@
+//! ℤ₂⁶⁴ vector arithmetic — the accumulator-fold hot path.
+//!
+//! Every fan-in in the system is element-wise wrapping add/sub over
+//! `u64` slices: masked-chunk shard accumulation
+//! ([`crate::coordinator::streaming`]), the aggregator's wrap-sum and
+//! dropout mask correction, and the mask PRG's window folds
+//! ([`crate::crypto::prg`]). These helpers chunk those loops into
+//! 4-wide lanes the compiler keeps in vector registers on any ISA,
+//! plus an explicit AVX2 leg (4 × u64 per 256-bit op) behind the
+//! shared [`crate::crypto::simd`] probe for when the autovectorizer
+//! refuses. NEON gets no explicit leg: the portable 4-chunk form
+//! compiles to paired `add.2d` already.
+//!
+//! Bit-identity: wrapping add/sub is element-wise and associative, so
+//! lane width and dispatch *cannot* change results — asserted anyway
+//! by the property tests below, and re-proven at protocol level by the
+//! `VFL_SIMD=off` CI axis.
+
+/// `dst[i] = dst[i] ⊞ src[i]` (wrapping add in ℤ₂⁶⁴).
+pub fn wrap_add(dst: &mut [u64], src: &[u64]) {
+    assert_eq!(dst.len(), src.len(), "z64 fold length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if crate::crypto::simd::active_isa() == crate::crypto::simd::SimdIsa::Avx2 {
+        // SAFETY: AVX2 verified at runtime by the probe.
+        unsafe { avx2::wrap_add(dst, src) };
+        return;
+    }
+    wrap_add_portable(dst, src);
+}
+
+/// `dst[i] = dst[i] ⊟ src[i]` (wrapping sub in ℤ₂⁶⁴) — the negated
+/// mask direction (peer < me, Eq. 3) and dropout mask correction.
+pub fn wrap_sub(dst: &mut [u64], src: &[u64]) {
+    assert_eq!(dst.len(), src.len(), "z64 fold length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if crate::crypto::simd::active_isa() == crate::crypto::simd::SimdIsa::Avx2 {
+        // SAFETY: AVX2 verified at runtime by the probe.
+        unsafe { avx2::wrap_sub(dst, src) };
+        return;
+    }
+    wrap_sub_portable(dst, src);
+}
+
+/// `dst[i] = ⊟dst[i]` in place (additive inverse in ℤ₂⁶⁴). Replaces
+/// the old `into_iter().map(wrapping_neg).collect()` pattern that
+/// allocated a second full tensor on the client hot path.
+pub fn wrap_neg(dst: &mut [u64]) {
+    // 0 - x == wrapping_neg(x); the 4-chunk form autovectorizes
+    let mut chunks = dst.chunks_exact_mut(4);
+    for c in &mut chunks {
+        c[0] = c[0].wrapping_neg();
+        c[1] = c[1].wrapping_neg();
+        c[2] = c[2].wrapping_neg();
+        c[3] = c[3].wrapping_neg();
+    }
+    for v in chunks.into_remainder() {
+        *v = v.wrapping_neg();
+    }
+}
+
+fn wrap_add_portable(dst: &mut [u64], src: &[u64]) {
+    let mut d = dst.chunks_exact_mut(4);
+    let mut s = src.chunks_exact(4);
+    for (dc, sc) in (&mut d).zip(&mut s) {
+        dc[0] = dc[0].wrapping_add(sc[0]);
+        dc[1] = dc[1].wrapping_add(sc[1]);
+        dc[2] = dc[2].wrapping_add(sc[2]);
+        dc[3] = dc[3].wrapping_add(sc[3]);
+    }
+    for (dv, sv) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *dv = dv.wrapping_add(*sv);
+    }
+}
+
+fn wrap_sub_portable(dst: &mut [u64], src: &[u64]) {
+    let mut d = dst.chunks_exact_mut(4);
+    let mut s = src.chunks_exact(4);
+    for (dc, sc) in (&mut d).zip(&mut s) {
+        dc[0] = dc[0].wrapping_sub(sc[0]);
+        dc[1] = dc[1].wrapping_sub(sc[1]);
+        dc[2] = dc[2].wrapping_sub(sc[2]);
+        dc[3] = dc[3].wrapping_sub(sc[3]);
+    }
+    for (dv, sv) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *dv = dv.wrapping_sub(*sv);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime. `dst` and
+    /// `src` must have equal length (checked by the public wrappers).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn wrap_add(dst: &mut [u64], src: &[u64]) {
+        let n4 = dst.len() & !3;
+        let d = dst.as_mut_ptr();
+        let s = src.as_ptr();
+        let mut i = 0;
+        while i < n4 {
+            let dv = _mm256_loadu_si256(d.add(i) as *const __m256i);
+            let sv = _mm256_loadu_si256(s.add(i) as *const __m256i);
+            _mm256_storeu_si256(d.add(i) as *mut __m256i, _mm256_add_epi64(dv, sv));
+            i += 4;
+        }
+        for j in n4..dst.len() {
+            dst[j] = dst[j].wrapping_add(src[j]);
+        }
+    }
+
+    /// # Safety
+    /// Same contract as [`wrap_add`].
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn wrap_sub(dst: &mut [u64], src: &[u64]) {
+        let n4 = dst.len() & !3;
+        let d = dst.as_mut_ptr();
+        let s = src.as_ptr();
+        let mut i = 0;
+        while i < n4 {
+            let dv = _mm256_loadu_si256(d.add(i) as *const __m256i);
+            let sv = _mm256_loadu_si256(s.add(i) as *const __m256i);
+            _mm256_storeu_si256(d.add(i) as *mut __m256i, _mm256_sub_epi64(dv, sv));
+            i += 4;
+        }
+        for j in n4..dst.len() {
+            dst[j] = dst[j].wrapping_sub(src[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pattern(len: usize, salt: u64) -> Vec<u64> {
+        // values chosen to force wraparound in both directions
+        (0..len as u64)
+            .map(|i| (u64::MAX - i.wrapping_mul(0x9e3779b97f4a7c15)) ^ salt)
+            .collect()
+    }
+
+    #[test]
+    fn add_and_sub_match_reference_for_all_tail_lengths() {
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let src = pattern(len, 7);
+            let mut add = pattern(len, 99);
+            let mut sub = add.clone();
+            let want_add: Vec<u64> =
+                add.iter().zip(&src).map(|(a, b)| a.wrapping_add(*b)).collect();
+            let want_sub: Vec<u64> =
+                sub.iter().zip(&src).map(|(a, b)| a.wrapping_sub(*b)).collect();
+            wrap_add(&mut add, &src);
+            wrap_sub(&mut sub, &src);
+            assert_eq!(add, want_add, "add len={len}");
+            assert_eq!(sub, want_sub, "sub len={len}");
+        }
+    }
+
+    #[test]
+    fn neg_is_additive_inverse() {
+        for len in [0usize, 1, 3, 4, 5, 63, 64, 65] {
+            let orig = pattern(len, 3);
+            let mut neg = orig.clone();
+            wrap_neg(&mut neg);
+            let mut sum = orig;
+            wrap_add(&mut sum, &neg);
+            assert!(sum.iter().all(|&v| v == 0), "len={len}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_legs_match_portable() {
+        // direct gate on the intrinsic legs whenever the CPU has AVX2,
+        // independent of what VFL_SIMD pinned for the dispatch
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("skipping avx2_legs_match_portable: no AVX2 on this host");
+            return;
+        }
+        for len in [0usize, 1, 4, 5, 100, 257] {
+            let src = pattern(len, 21);
+            let mut a = pattern(len, 8);
+            let mut b = a.clone();
+            wrap_add_portable(&mut a, &src);
+            // SAFETY: AVX2 presence checked above.
+            unsafe { avx2::wrap_add(&mut b, &src) };
+            assert_eq!(a, b, "add len={len}");
+            wrap_sub_portable(&mut a, &src);
+            // SAFETY: AVX2 presence checked above.
+            unsafe { avx2::wrap_sub(&mut b, &src) };
+            assert_eq!(a, b, "sub len={len}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        let mut d = [0u64; 3];
+        wrap_add(&mut d, &[1u64; 4]);
+    }
+}

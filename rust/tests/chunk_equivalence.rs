@@ -29,6 +29,7 @@ mod common;
 
 use common::{
     apply_env_workers, assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg,
+    sessions, simd_isa,
 };
 use vfl::coordinator::metrics::AGGREGATOR;
 use vfl::coordinator::parties::GradLayout;
@@ -349,6 +350,43 @@ fn single_lost_chunk_declares_sender_dropped() {
     let thr = run_experiment(cfg(Some(plan), TransportKind::Threaded), None).unwrap();
     assert_reports_identical(&sim, &thr, "lost chunk sim vs threaded");
     assert!(sim.losses.iter().all(|l| l.is_finite()));
+}
+
+/// The SIMD leg of the gate: mask expansion through the runtime
+/// dispatch (4-block ChaCha20 core + lane-chunked ℤ₂⁶⁴ folds) is
+/// bit-identical to the scalar reference for every chunk shape the
+/// streaming pipeline can produce — ragged offsets, windows straddling
+/// block boundaries, and partitions that must reassemble the
+/// monolithic mask exactly. Under the `VFL_SIMD=off` CI axis both legs
+/// run scalar and the test degenerates to scalar ≡ scalar, which is
+/// why the log line names the active ISA.
+#[test]
+fn simd_mask_expansion_bit_identical_to_scalar_across_chunk_shapes() {
+    eprintln!("simd sweep: dispatch isa = {}", simd_isa());
+    let sess = sessions(5, 0xC0DE);
+    let me = &sess[2];
+    let stream = me.total_mask_stream(7, 1);
+    // windows at awkward offsets/lengths: partial leading block, exact
+    // 4-block groups, straddles, and a long ragged span
+    for (offset, len) in
+        [(0usize, 1usize), (0, 8), (0, 32), (3, 5), (5, 32), (7, 97), (31, 33), (256, 513), (1000, 2048)]
+    {
+        let mut simd = vec![0u64; len];
+        stream.add_window(offset, &mut simd);
+        let mut scalar = vec![0u64; len];
+        stream.add_window_scalar(offset, &mut scalar);
+        assert_eq!(simd, scalar, "window ({offset}, {len})");
+    }
+    // any chunk partition must reassemble the monolithic total mask
+    let total = me.total_mask(7, 1, 5000);
+    for cw in [1usize, 7, 32, 999, 5000] {
+        let mut stitched = vec![0u64; 5000];
+        for start in (0..5000).step_by(cw) {
+            let end = (start + cw).min(5000);
+            stream.add_window(start, &mut stitched[start..end]);
+        }
+        assert_eq!(stitched, total, "partition cw={cw}");
+    }
 }
 
 /// Sharding alone must not change results either: sweep a few

@@ -84,6 +84,14 @@ pub fn apply_env_workers(mut c: RunConfig) -> RunConfig {
     c
 }
 
+/// The SIMD ISA this test process dispatches to — "scalar" under the
+/// `VFL_SIMD=off` CI axis, "avx2"/"neon" where the hardware has them.
+/// Suites that assert SIMD ≡ scalar log it so a CI leg that silently
+/// probed scalar (and therefore proved nothing new) is visible.
+pub fn simd_isa() -> &'static str {
+    vfl::crypto::simd::active_isa().name()
+}
+
 /// A dropout-tolerant banking run (5 clients: 1 active + 4 passive):
 /// SecureExact, Shamir threshold `t`, optional fault plan.
 pub fn dropout_cfg(t: usize, plan: Option<FaultPlan>, transport: TransportKind) -> RunConfig {

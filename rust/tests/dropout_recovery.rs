@@ -359,7 +359,7 @@ fn evloop_dead_socket_equals_declared_dropout() {
                 }
                 for (to, msg) in ob.msgs {
                     assert_eq!(to, vfl::net::Addr::Aggregator);
-                    Frame::Msg { bytes: msg.encode() }.write_to(&mut stream)?;
+                    Frame::Msg { bytes: msg.into_bytes() }.write_to(&mut stream)?;
                 }
                 for n in ob.notes {
                     Frame::Note(n).write_to(&mut stream)?;
