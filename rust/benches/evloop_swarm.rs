@@ -12,6 +12,11 @@
 //! memory is flat because per-connection state is one partial frame
 //! plus one bounded outbound queue, not a thread stack.
 //!
+//! A second sweep holds the client count fixed and scales
+//! `--evloop-threads` 1 → 8 (the token-sharded multi-loop server), so
+//! the multi-core curve of the same checksum-verified workload is
+//! recorded alongside (the `evloop_shards` array in the JSON).
+//!
 //!     cargo bench --bench evloop_swarm
 //!     (VFL_BENCH_QUICK=1 for a 256/1024 sweep,
 //!      VFL_BENCH_POLL=1 to pin the portable poll(2) fallback)
@@ -59,11 +64,40 @@ fn main() -> anyhow::Result<()> {
         reports.push(r);
     }
 
+    // the shard sweep: fixed client count, 1 → 8 server loops
+    // (--evloop-threads), so the multi-core curve of the same checksum-
+    // verified workload lands next to the client-count curve
+    let shard_clients = if quick { 1024 } else { 4096 };
+    let mut shard_reports: Vec<SwarmReport> = Vec::new();
+    println!("\n{:>8} {:>8} {:>10} {:>10} {:>12}", "clients", "loops", "wall_ms", "peak_conn", "peak_buf_B");
+    for server_threads in [1usize, 2, 4, 8] {
+        let cfg =
+            SwarmCfg { clients: shard_clients, server_threads, poller, ..SwarmCfg::default() };
+        let r = swarm::run(&cfg)?;
+        anyhow::ensure!(
+            r.verified(),
+            "swarm checksum mismatch at {server_threads} server loops: got {:#x}, expected {:#x}",
+            r.checksum,
+            r.expected_checksum
+        );
+        println!(
+            "{:>8} {:>8} {:>10.1} {:>10} {:>12}",
+            r.clients, r.server_threads, r.wall_ms, r.peak_live_connections, r.peak_conn_buffered_bytes
+        );
+        shard_reports.push(r);
+    }
+
     let mut json = String::from("{\n  \"evloop_swarm\": [\n");
     for (i, r) in reports.iter().enumerate() {
         json.push_str("    ");
         json.push_str(&r.json());
         json.push_str(if i + 1 < reports.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n  \"evloop_shards\": [\n");
+    for (i, r) in shard_reports.iter().enumerate() {
+        json.push_str("    ");
+        json.push_str(&r.json());
+        json.push_str(if i + 1 < shard_reports.len() { ",\n" } else { "\n" });
     }
     json.push_str("  ]\n}\n");
     let path = "BENCH_evloop.json";

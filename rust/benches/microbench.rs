@@ -116,17 +116,58 @@ fn main() -> anyhow::Result<()> {
         println!("mask expand 1Mi w  {isa:<8} : {} ms ({:.1} Mwords/s)", pm(&expand_simd), mwords(&expand_simd));
         println!("accum fold  1Mi w  naive    : {} ms ({:.1} Mwords/s)", pm(&fold_naive), mwords(&fold_naive));
         println!("accum fold  1Mi w  {isa:<8} : {} ms ({:.1} Mwords/s)", pm(&fold_simd), mwords(&fold_simd));
+        // the multi-core leg: serial TotalMaskStream expansion vs the
+        // ExpandPool at 1/2/4/8 workers over the same 1 Mi-word total
+        // mask (4 peers, the banking federation shape) — the client's
+        // per-round masking bottleneck the pool attacks
+        let total = prg::TotalMaskStream::new(&secrets, 0, 1, 0);
+        let mut tbuf = vec![0u64; WORDS];
+        let pool_serial = bench_ms(10, || {
+            tbuf.iter_mut().for_each(|w| *w = 0);
+            total.add_window(0, &mut tbuf);
+            std::hint::black_box(&tbuf);
+        });
+        let serial_ref = tbuf.clone();
+        let mut pool_rows = String::new();
+        println!(
+            "total mask 1Mi w  serial    : {} ms ({:.1} Mwords/s)",
+            pm(&pool_serial),
+            mwords(&pool_serial)
+        );
+        for workers in [1usize, 2, 4, 8] {
+            let pool = prg::ExpandPool::new(workers);
+            let s = bench_ms(10, || {
+                tbuf.iter_mut().for_each(|w| *w = 0);
+                pool.add_window(&total, 0, &mut tbuf);
+                std::hint::black_box(&tbuf);
+            });
+            assert_eq!(tbuf, serial_ref, "pooled expansion must be bit-identical to serial");
+            println!(
+                "total mask 1Mi w  pool x{workers}   : {} ms ({:.1} Mwords/s, {:.2}x)",
+                pm(&s),
+                mwords(&s),
+                mwords(&s) / mwords(&pool_serial)
+            );
+            pool_rows.push_str(&format!(
+                "    {{\"workers\": {workers}, \"mwords_per_s\": {:.3}, \"speedup\": {:.3}}}{}",
+                mwords(&s),
+                mwords(&s) / mwords(&pool_serial),
+                if workers == 8 { "\n" } else { ",\n" }
+            ));
+        }
         // hand-rolled JSON, same convention as BENCH_fig2/BENCH_streaming
         let json = format!(
             "{{\n  \"isa\": \"{isa}\",\n  \"words\": {WORDS},\n  \
              \"mask_expand\": {{\"scalar_mwords_per_s\": {:.3}, \"dispatch_mwords_per_s\": {:.3}, \"speedup\": {:.3}}},\n  \
-             \"accum_fold\": {{\"naive_mwords_per_s\": {:.3}, \"dispatch_mwords_per_s\": {:.3}, \"speedup\": {:.3}}}\n}}\n",
+             \"accum_fold\": {{\"naive_mwords_per_s\": {:.3}, \"dispatch_mwords_per_s\": {:.3}, \"speedup\": {:.3}}},\n  \
+             \"expand_pool\": {{\"serial_mwords_per_s\": {:.3}, \"sweep\": [\n{pool_rows}  ]}}\n}}\n",
             mwords(&expand_scalar),
             mwords(&expand_simd),
             mwords(&expand_simd) / mwords(&expand_scalar),
             mwords(&fold_naive),
             mwords(&fold_simd),
             mwords(&fold_simd) / mwords(&fold_naive),
+            mwords(&pool_serial),
         );
         let path = "BENCH_simd.json";
         std::fs::File::create(path)

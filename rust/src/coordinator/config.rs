@@ -46,10 +46,12 @@ pub enum TransportKind {
     Sim,
     /// One OS thread per party, channels in between.
     Threaded,
-    /// Real localhost sockets multiplexed on a single readiness-driven
-    /// event-loop thread (`--evloop`; unix only). The aggregator runs
-    /// the nonblocking `net::evloop` server while each client keeps
-    /// one lightweight socket thread — the C10K-capable path.
+    /// Real localhost sockets multiplexed on readiness-driven
+    /// event-loop threads (`--evloop`; unix only). The aggregator runs
+    /// the nonblocking `net::evloop` server — one poller loop by
+    /// default, or `--evloop-threads K` token-sharded loops behind one
+    /// acceptor — while each client keeps one lightweight socket
+    /// thread. The C10K-capable path.
     Evloop,
 }
 
@@ -107,6 +109,17 @@ pub struct RunConfig {
     /// and the merge stitches disjoint shard ranges. Only meaningful
     /// with `chunk_words`.
     pub agg_workers: usize,
+    /// Parallel mask expansion (`--expand-workers`, ≥ 1): the number
+    /// of workers in each party's
+    /// [`ExpandPool`](crate::crypto::prg::ExpandPool). Tensor windows
+    /// are partitioned into disjoint sub-windows, expanded/masked in
+    /// parallel through the seekable PRG, and stitched in offset
+    /// order — bit-identical to serial for any worker count by the
+    /// window-partition property. 1 = the inline serial path, no
+    /// threads. Unlike `agg_workers`, meaningful with and without
+    /// chunking (it also drives the aggregator's dropout total-mask
+    /// correction).
+    pub expand_workers: usize,
     /// Windowed round scheduler (`--rounds-in-flight`, ≥ 1): how many
     /// protocol rounds may be in flight simultaneously. 1 = the
     /// strictly serial pre-pipeline behavior. Any width produces
@@ -125,6 +138,15 @@ pub struct RunConfig {
     /// instead of unbounded temp-file growth. `None` = the default cap
     /// ([`DEFAULT_ROLLBACK_MAX_BYTES`](super::streaming::DEFAULT_ROLLBACK_MAX_BYTES)).
     pub rollback_max_bytes: Option<u64>,
+    /// Sharded event loop (`--evloop-threads`, ≥ 1; Evloop transport
+    /// only): how many poller threads the aggregator-side event loop
+    /// runs. 1 = today's single-loop `serve_on`, byte-identical. K > 1
+    /// accepts on a dedicated acceptor thread and hands sockets to K
+    /// loops round-robin; each loop owns its connections' buffers
+    /// exclusively (no locks on the read/write path), protocol events
+    /// funnel to the one round-window driver, and peak metrics
+    /// max-merge across loops. Any K produces bit-identical reports.
+    pub evloop_threads: usize,
 }
 
 impl RunConfig {
@@ -148,9 +170,11 @@ impl RunConfig {
             chunk_words: None,
             shards: 1,
             agg_workers: 1,
+            expand_workers: 1,
             rounds_in_flight: 1,
             rollback_fsync: false,
             rollback_max_bytes: None,
+            evloop_threads: 1,
         })
     }
 

@@ -72,6 +72,12 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
     if cfg.agg_workers > MAX_AGG_WORKERS {
         bail!("--agg-workers {} exceeds the cap ({MAX_AGG_WORKERS})", cfg.agg_workers);
     }
+    if cfg.expand_workers == 0 {
+        bail!("--expand-workers 0 is invalid (need at least 1 expansion worker)");
+    }
+    if cfg.expand_workers > MAX_EXPAND_WORKERS {
+        bail!("--expand-workers {} exceeds the cap ({MAX_EXPAND_WORKERS})", cfg.expand_workers);
+    }
     if cfg.rollback_max_bytes == Some(0) {
         bail!("--rollback-max-bytes 0 is invalid (a zero-byte rollback log cannot record \
                any committed chunk; omit the flag for the default bound)");
@@ -104,7 +110,9 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
                 cfg.agg_workers
             );
         }
-        return Ok(StreamCfg::monolithic().with_rollback(rollback));
+        return Ok(StreamCfg::monolithic()
+            .with_expand_workers(cfg.expand_workers)
+            .with_rollback(rollback));
     };
     if cw == 0 {
         bail!("--chunk-words 0 is invalid (need at least 1 word per chunk)");
@@ -129,7 +137,10 @@ pub fn validate_streaming(cfg: &RunConfig) -> Result<StreamCfg> {
             cfg.shards
         );
     }
-    Ok(StreamCfg::chunked(cw, cfg.shards).with_workers(cfg.agg_workers).with_rollback(rollback))
+    Ok(StreamCfg::chunked(cw, cfg.shards)
+        .with_workers(cfg.agg_workers)
+        .with_expand_workers(cfg.expand_workers)
+        .with_rollback(rollback))
 }
 
 /// Validate the windowed-scheduler knob. A zero window could never
@@ -152,6 +163,33 @@ pub fn validate_window(cfg: &RunConfig) -> Result<()> {
 /// Hard cap on `--agg-workers`: far above any sensible shard fan-out,
 /// low enough that a typo cannot spawn thousands of OS threads.
 pub const MAX_AGG_WORKERS: usize = 256;
+
+/// Hard cap on `--expand-workers`: far above any core count the mask
+/// expansion could saturate, low enough that a typo cannot spawn
+/// thousands of OS threads per party.
+pub const MAX_EXPAND_WORKERS: usize = 64;
+
+/// Hard cap on `--evloop-threads`: one poller thread per core is
+/// already generous; a typo must not spawn thousands of loops.
+pub const MAX_EVLOOP_THREADS: usize = 64;
+
+/// Validate the sharded-event-loop knob. Zero loops could never poll a
+/// socket, and an absurd count would spawn a thread per typo'd digit;
+/// both fail at configuration time. The knob is inert (but harmless)
+/// on the Sim/Threaded transports, mirroring how `--stall-timeout-ms`
+/// behaves, so no transport cross-check is enforced here.
+pub fn validate_evloop(cfg: &RunConfig) -> Result<()> {
+    if cfg.evloop_threads == 0 {
+        bail!("--evloop-threads 0 is invalid (the event loop needs at least one poller thread)");
+    }
+    if cfg.evloop_threads > MAX_EVLOOP_THREADS {
+        bail!(
+            "--evloop-threads {} exceeds the cap ({MAX_EVLOOP_THREADS})",
+            cfg.evloop_threads
+        );
+    }
+    Ok(())
+}
 
 /// Validate the dropout-detection timing knobs. A zero floor or cap
 /// would produce a zero-width quiescence window that instantly
@@ -191,6 +229,7 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
     let stream = validate_streaming(cfg)?;
     validate_timing(cfg)?;
     validate_window(cfg)?;
+    validate_evloop(cfg)?;
     let (schema, spec, _) = by_name(&cfg.model.dataset).context("unknown dataset")?;
     let data = generate(&schema, cfg.n_rows, cfg.seed);
     let mut vertical = partition(&data, &spec);
@@ -422,7 +461,8 @@ impl<'e> Experiment<'e> {
             }
             #[cfg(unix)]
             (TransportKind::Evloop, plan) => {
-                let mut t = crate::net::EvloopTransport::new(n_clients);
+                let mut t =
+                    crate::net::EvloopTransport::new(n_clients).with_threads(cfg.evloop_threads);
                 if let Some(ms) = cfg.stall_timeout_ms {
                     t = t.with_stall_timeout(std::time::Duration::from_millis(ms));
                 }
@@ -544,6 +584,49 @@ mod tests {
         c.shards = 4;
         c.agg_workers = 3;
         assert_eq!(validate_streaming(&c).unwrap(), StreamCfg::chunked(1024, 4).with_workers(3));
+    }
+
+    #[test]
+    fn expand_worker_flags_validated() {
+        // zero workers rejected
+        let mut c = cfg();
+        c.expand_workers = 0;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("--expand-workers 0"));
+        // a runaway worker count rejected
+        let mut c = cfg();
+        c.expand_workers = MAX_EXPAND_WORKERS + 1;
+        assert!(validate_streaming(&c).unwrap_err().to_string().contains("cap"));
+        // unlike --agg-workers, expansion parallelism does not require
+        // chunking: the count rides into a monolithic StreamCfg…
+        let mut c = cfg();
+        c.expand_workers = 4;
+        assert_eq!(
+            validate_streaming(&c).unwrap(),
+            StreamCfg::monolithic().with_expand_workers(4)
+        );
+        // …and into a chunked one
+        let mut c = cfg();
+        c.chunk_words = Some(1024);
+        c.shards = 4;
+        c.expand_workers = 3;
+        assert_eq!(
+            validate_streaming(&c).unwrap(),
+            StreamCfg::chunked(1024, 4).with_expand_workers(3)
+        );
+    }
+
+    #[test]
+    fn evloop_thread_flag_validated() {
+        assert!(validate_evloop(&cfg()).is_ok(), "default K=1 passes");
+        let mut c = cfg();
+        c.evloop_threads = 0;
+        assert!(validate_evloop(&c).unwrap_err().to_string().contains("--evloop-threads 0"));
+        let mut c = cfg();
+        c.evloop_threads = MAX_EVLOOP_THREADS + 1;
+        assert!(validate_evloop(&c).unwrap_err().to_string().contains("cap"));
+        let mut c = cfg();
+        c.evloop_threads = 4;
+        assert!(validate_evloop(&c).is_ok());
     }
 
     #[test]

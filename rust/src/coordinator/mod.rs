@@ -52,8 +52,9 @@ pub mod window;
 pub use backend::Backend;
 pub use config::{BackendKind, RunConfig, SecurityMode, TransportKind};
 pub use driver::{
-    build, run_experiment, summarize, validate_streaming, validate_timing, validate_window,
-    Built, Experiment, RunReport, Summary, MAX_AGG_WORKERS,
+    build, run_experiment, summarize, validate_evloop, validate_streaming, validate_timing,
+    validate_window, Built, Experiment, RunReport, Summary, MAX_AGG_WORKERS, MAX_EVLOOP_THREADS,
+    MAX_EXPAND_WORKERS,
 };
 pub use messages::Msg;
 pub use metrics::{Metrics, PipelineStats};

@@ -37,6 +37,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::crypto::aead;
+use crate::crypto::prg::ExpandPool;
 use crate::crypto::rng::DetRng;
 use crate::crypto::shamir::Share;
 use crate::data::partition::{ActiveData, PassiveData};
@@ -133,9 +134,17 @@ const TAG_GRADIENT: u32 = 1;
 /// and the transport. The bytes are identical to what
 /// `Msg::MaskedChunk { .. }.encode()` would produce (the frame-encode
 /// rule), so metering and every receiver are unchanged.
+/// With an [`ExpandPool`] (`--expand-workers` > 1) the expansion fans
+/// out across cores: chunked senders mask one chunk per pool job (each
+/// job runs the identical header + [`crate::secagg::mask_window_into`]
+/// encode the serial loop runs, against its own clone of the seekable
+/// stream) and the monolithic path partitions the tensor into
+/// per-worker sub-windows — both stitched in plan/offset order, so the
+/// produced bytes are bit-identical to serial for any worker count.
 fn masked_exact_msgs(
     session: &ClientSession,
     stream: StreamCfg,
+    expand: Option<&ExpandPool>,
     round: u32,
     from: u16,
     tag: u32,
@@ -145,8 +154,43 @@ fn masked_exact_msgs(
         Some(cw) => {
             let layout = ShardLayout::new(vals.len(), stream.shards);
             let mask = session.total_mask_stream(round as u64, tag);
-            chunk_plan(layout, cw)
-                .into_iter()
+            let plan = chunk_plan(layout, cw);
+            if let Some(pool) = expand.filter(|p| p.workers() > 1 && plan.len() > 1) {
+                let total = vals.len() as u32;
+                let fp = session.fp;
+                let jobs: Vec<Box<dyn FnOnce() -> Vec<u8> + Send + 'static>> = plan
+                    .iter()
+                    .map(|&c| {
+                        let mask = mask.clone();
+                        let vals = vals[c.offset..c.offset + c.len].to_vec();
+                        let f: Box<dyn FnOnce() -> Vec<u8> + Send + 'static> =
+                            Box::new(move || {
+                                let mut w = Writer::with_capacity(
+                                    CHUNK_MSG_HEADER_BYTES as usize + 8 * c.len,
+                                );
+                                begin_masked_chunk(
+                                    &mut w,
+                                    round,
+                                    from,
+                                    tag as u8,
+                                    c.shard as u16,
+                                    c.offset as u32,
+                                    total,
+                                    c.len as u32,
+                                );
+                                crate::secagg::mask_window_into(fp, &mask, &vals, c.offset, &mut w);
+                                w.finish()
+                            });
+                        f
+                    })
+                    .collect();
+                return pool
+                    .run(jobs)
+                    .into_iter()
+                    .map(|bytes| OutMsg::Encoded { round: Some(round), bytes })
+                    .collect();
+            }
+            plan.into_iter()
                 .map(|c| {
                     let mut w =
                         Writer::with_capacity(CHUNK_MSG_HEADER_BYTES as usize + 8 * c.len);
@@ -171,7 +215,10 @@ fn masked_exact_msgs(
                 .collect()
         }
         None => {
-            let words = session.mask_tensor(vals, round as u64, tag);
+            let words = match expand {
+                Some(pool) => session.mask_tensor_pooled(pool, vals, round as u64, tag),
+                None => session.mask_tensor(vals, round as u64, tag),
+            };
             vec![OutMsg::Msg(if tag == TAG_ACTIVATION {
                 Msg::MaskedActivation { round, from, words }
             } else {
@@ -179,6 +226,14 @@ fn masked_exact_msgs(
             })]
         }
     }
+}
+
+/// The per-party mask-expansion pool, spawned only when
+/// `--expand-workers` asks for parallelism (1 = today's inline serial
+/// path, no threads). Every party — active, passive, aggregator —
+/// builds its own, since each masks (or corrects) its own tensors.
+fn expand_pool(stream: &StreamCfg) -> Option<ExpandPool> {
+    (stream.expand_workers > 1).then(|| ExpandPool::new(stream.expand_workers))
 }
 
 /// AAD used for sample-ID sealing.
@@ -332,6 +387,8 @@ pub struct ActiveParty<'e> {
     threshold: Option<usize>,
     /// Streaming-pipeline parameters (monolithic when not chunked).
     stream: StreamCfg,
+    /// Parallel mask-expansion pool (`--expand-workers` > 1 only).
+    expand: Option<ExpandPool>,
     backend: Backend<'e>,
     metrics: Metrics,
     rng: DetRng,
@@ -374,6 +431,7 @@ impl<'e> ActiveParty<'e> {
             security,
             layout,
             threshold,
+            expand: expand_pool(&stream),
             stream,
             backend,
             metrics: Metrics::new(),
@@ -489,6 +547,7 @@ impl<'e> ActiveParty<'e> {
             SecurityMode::SecureExact => masked_exact_msgs(
                 self.sess(),
                 self.stream,
+                self.expand.as_ref(),
                 round,
                 self.id as u16,
                 TAG_ACTIVATION,
@@ -517,9 +576,12 @@ impl<'e> ActiveParty<'e> {
         own[self.layout.active_b.0..self.layout.active_b.0 + self.layout.active_b.1]
             .copy_from_slice(own_db);
         match self.security {
-            SecurityMode::SecureExact => {
-                GradSum::Words(self.sess().mask_tensor(&own, round as u64, TAG_GRADIENT))
-            }
+            SecurityMode::SecureExact => GradSum::Words(match &self.expand {
+                Some(pool) => {
+                    self.sess().mask_tensor_pooled(pool, &own, round as u64, TAG_GRADIENT)
+                }
+                None => self.sess().mask_tensor(&own, round as u64, TAG_GRADIENT),
+            }),
             SecurityMode::SecureFloat => {
                 GradSum::Floats(self.sess().mask_tensor_f32(&own, round as u64, TAG_GRADIENT))
             }
@@ -918,6 +980,8 @@ pub struct PassiveParty<'e> {
     threshold: Option<usize>,
     /// Streaming-pipeline parameters (monolithic when not chunked).
     stream: StreamCfg,
+    /// Parallel mask-expansion pool (`--expand-workers` > 1 only).
+    expand: Option<ExpandPool>,
     backend: Backend<'e>,
     metrics: Metrics,
     rng: DetRng,
@@ -956,6 +1020,7 @@ impl<'e> PassiveParty<'e> {
             layout: GradLayout::new(cfg),
             weights: Mat::zeros(dim, cfg.hidden),
             threshold,
+            expand: expand_pool(&stream),
             stream,
             backend,
             metrics: Metrics::new(),
@@ -1034,6 +1099,7 @@ impl<'e> PassiveParty<'e> {
             SecurityMode::SecureExact => masked_exact_msgs(
                 self.sess(),
                 self.stream,
+                self.expand.as_ref(),
                 round,
                 self.id as u16,
                 TAG_ACTIVATION,
@@ -1062,6 +1128,7 @@ impl<'e> PassiveParty<'e> {
             SecurityMode::SecureExact => masked_exact_msgs(
                 self.sess(),
                 self.stream,
+                self.expand.as_ref(),
                 round,
                 self.id as u16,
                 TAG_GRADIENT,
@@ -1352,6 +1419,9 @@ pub struct Aggregator<'e> {
     /// a chunked run): every fan-in assembler of every live round
     /// folds through it, addressed by per-(round, fan-in) slots.
     pool: Option<WorkerPool>,
+    /// Parallel mask-expansion pool (`--expand-workers` > 1 only):
+    /// drives the recovered dropped-client total-mask correction.
+    expand: Option<ExpandPool>,
     // --- event-driven round state ---
     /// Current metering phase (shared by every round in flight — the
     /// scheduler's phase barrier).
@@ -1443,6 +1513,7 @@ impl<'e> Aggregator<'e> {
             stream,
             metrics: Metrics::new(),
             pool,
+            expand: expand_pool(&stream),
             phase: Phase::Setup,
             round: 0,
             ctxs: BTreeMap::new(),
@@ -1605,15 +1676,28 @@ impl<'e> Aggregator<'e> {
     /// The combined total mask of every recovered dropped client for
     /// (round, tag): adding this to a fan-in sum cancels the survivors'
     /// dangling pairwise masks (the Bonawitz'17 recovery step). Zero
-    /// when nothing dropped this epoch.
+    /// when nothing dropped this epoch. With `--expand-workers` > 1
+    /// each session's mask expands across the pool in disjoint
+    /// sub-windows — bit-identical to the serial fold, since
+    /// `total_mask` is exactly the stream's `[0, len)` window.
     fn dropped_mask_correction(&self, round: u64, tag: u32, len: usize) -> Option<Vec<u64>> {
         if self.recovered.is_empty() {
             return None;
         }
         let mut acc = vec![0u64; len];
         for session in self.recovered.values() {
-            let m = session.total_mask(round, tag, len);
-            z64::wrap_add(&mut acc, &m);
+            match &self.expand {
+                Some(pool) => {
+                    // epoch mixing happens inside total_mask_stream,
+                    // exactly as it does inside total_mask
+                    let stream = session.total_mask_stream(round, tag);
+                    pool.add_window(&stream, 0, &mut acc);
+                }
+                None => {
+                    let m = session.total_mask(round, tag, len);
+                    z64::wrap_add(&mut acc, &m);
+                }
+            }
         }
         Some(acc)
     }

@@ -150,6 +150,13 @@ pub struct StreamCfg {
     /// workers (capped at the shard count) that every fan-in
     /// assembler, across all live rounds, folds through.
     pub agg_workers: usize,
+    /// Mask-expansion workers (`--expand-workers`, ≥ 1). 1 = the
+    /// inline serial path (no threads); > 1 makes every party spawn an
+    /// [`ExpandPool`](crate::crypto::prg::ExpandPool) that partitions
+    /// each tensor window into disjoint sub-windows and expands them
+    /// in parallel — bit-identical to serial by the window-partition
+    /// property. Meaningful with and without chunking.
+    pub expand_workers: usize,
     /// Rollback-log durability policy (revocable assemblers only).
     pub rollback: RollbackCfg,
 }
@@ -166,6 +173,7 @@ impl StreamCfg {
             chunk_words: None,
             shards: 1,
             agg_workers: 1,
+            expand_workers: 1,
             rollback: RollbackCfg::default(),
         }
     }
@@ -177,6 +185,12 @@ impl StreamCfg {
     /// Set the aggregator-side worker count.
     pub fn with_workers(mut self, agg_workers: usize) -> Self {
         self.agg_workers = agg_workers;
+        self
+    }
+
+    /// Set the mask-expansion worker count.
+    pub fn with_expand_workers(mut self, expand_workers: usize) -> Self {
+        self.expand_workers = expand_workers;
         self
     }
 

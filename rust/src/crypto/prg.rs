@@ -120,7 +120,9 @@ pub fn total_mask(
 /// One signed pairwise mask stream, addressable by `(offset, len)`
 /// windows. `window` output is bit-identical to the corresponding
 /// slice of [`pairwise_mask`] — ChaCha20 seeks to block `offset / 8`
-/// instead of expanding from word 0.
+/// instead of expanding from word 0. `Clone` hands an [`ExpandPool`]
+/// worker its own seekable view of the same keystream.
+#[derive(Clone)]
 pub struct MaskStream {
     cipher: ChaCha20,
     /// True when this peer's mask is subtracted (peer < me, Eq. 3).
@@ -229,7 +231,10 @@ impl MaskStream {
 /// A client's total mask over all peers (Eq. 3) as a windowed stream:
 /// the chunked twin of [`total_mask`]. Windows are wrap-added, so any
 /// partition of `[0, len)` into windows reproduces the monolithic
-/// vector bit-for-bit.
+/// vector bit-for-bit — the property that makes [`ExpandPool`]'s
+/// disjoint sub-window expansion bit-identical to serial. `Clone` so
+/// each pool worker owns its own seekable view.
+#[derive(Clone)]
 pub struct TotalMaskStream {
     streams: Vec<MaskStream>,
 }
@@ -257,6 +262,153 @@ impl TotalMaskStream {
     pub fn add_window_scalar(&self, offset: usize, out: &mut [u64]) {
         for s in &self.streams {
             s.add_window_scalar(offset, out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel expansion: the multi-core view of the same keystream
+// ---------------------------------------------------------------------------
+
+/// Split the absolute word window `[offset, offset + len)` into at
+/// most `parts` contiguous, disjoint sub-windows, in offset order.
+/// Interior cuts are aligned *up* to absolute [`X4_WORDS_U64`]-word
+/// boundaries so every sub-window's grouped x4 interior stays
+/// block-aligned — a perf choice only: the window-partition property
+/// (`total_stream_windows_reassemble_total_mask`) makes ANY partition
+/// reassemble the monolithic expansion bit-for-bit. Short windows
+/// yield fewer parts (possibly one); the parts always cover the input
+/// window exactly.
+pub fn partition_window(offset: usize, len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1);
+    let end = offset + len;
+    let base = len / parts;
+    let rem = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = offset;
+    for k in 0..parts {
+        // ideal balanced cut, then aligned up to the x4 group boundary
+        let ideal = offset + (k + 1) * base + (k + 1).min(rem);
+        let cut = if k + 1 == parts {
+            end
+        } else {
+            (ideal.div_ceil(X4_WORDS_U64) * X4_WORDS_U64).min(end)
+        };
+        if cut > start {
+            out.push((start, cut - start));
+            start = cut;
+        }
+    }
+    out
+}
+
+/// A type-erased unit of expansion work: runs on one pool worker and
+/// replies through the channel its closure captured.
+type ExpandTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Bounded task-queue depth per expand worker. Fork-join batches are
+/// at most one task per worker, so this never blocks the dispatcher;
+/// the bound exists so a buggy caller fails loudly instead of growing
+/// an unbounded queue.
+const EXPAND_QUEUE_DEPTH: usize = 64;
+
+/// A small hand-rolled fork-join pool for parallel mask expansion
+/// (`--expand-workers`): the multi-core answer to one core's ChaCha20
+/// keystream rate capping client masking throughput. Same std-only
+/// pattern as the aggregator's accumulator
+/// [`WorkerPool`](crate::coordinator::streaming::WorkerPool) — named
+/// detached threads fed over bounded channels, exiting when the pool
+/// drops and the channels close.
+///
+/// Determinism: [`Self::run`] returns results **in job order**
+/// whatever order workers finish in, so a caller that partitions a
+/// window with [`partition_window`], expands each sub-window on a
+/// worker, and stitches the results in order produces bytes
+/// bit-identical to the serial expansion — by the window-partition
+/// property, not by scheduling luck.
+pub struct ExpandPool {
+    txs: Vec<std::sync::mpsc::SyncSender<ExpandTask>>,
+}
+
+impl ExpandPool {
+    /// Spawn `workers` expansion workers (≥ 1). Threads are detached
+    /// on purpose, mirroring the accumulator pool: each worker's loop
+    /// ends when the pool (the only sender) drops, and workers hold
+    /// nothing but transient job state, so exit-by-channel-closure is
+    /// a clean shutdown.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let mut txs = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<ExpandTask>(EXPAND_QUEUE_DEPTH);
+            std::thread::Builder::new()
+                .name(format!("expand-worker-{w}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        task();
+                    }
+                })
+                .expect("spawn expand worker");
+            txs.push(tx);
+        }
+        ExpandPool { txs }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Fork-join: dispatch every job round-robin across the workers,
+    /// wait for all replies, and return the results **in job order**
+    /// (the deterministic stitch). A worker that panics loses its
+    /// reply sender; the join then panics here instead of deadlocking.
+    pub fn run<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let (rtx, rrx) = std::sync::mpsc::channel::<(usize, T)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let reply = rtx.clone();
+            let task: ExpandTask = Box::new(move || {
+                let _ = reply.send((i, job()));
+            });
+            self.txs[i % self.txs.len()].send(task).expect("expand worker alive");
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rrx.recv().expect("expand job lost (worker panicked)");
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|v| v.expect("every expand job replies exactly once")).collect()
+    }
+
+    /// Expand the total-mask window `[offset, offset + out.len())`
+    /// across the pool: partition into per-worker sub-windows, fold
+    /// each on a worker via the seekable window path, stitch in offset
+    /// order. Wrap-adds into `out`, exactly like
+    /// [`TotalMaskStream::add_window`] — and bit-identical to it.
+    pub fn add_window(&self, stream: &TotalMaskStream, offset: usize, out: &mut [u64]) {
+        let parts = partition_window(offset, out.len(), self.workers());
+        if parts.len() <= 1 {
+            stream.add_window(offset, out);
+            return;
+        }
+        let jobs: Vec<Box<dyn FnOnce() -> Vec<u64> + Send + 'static>> = parts
+            .iter()
+            .map(|&(off, len)| {
+                let s = stream.clone();
+                let f: Box<dyn FnOnce() -> Vec<u64> + Send + 'static> = Box::new(move || {
+                    let mut seg = vec![0u64; len];
+                    s.add_window(off, &mut seg);
+                    seg
+                });
+                f
+            })
+            .collect();
+        for (seg, &(off, _)) in self.run(jobs).iter().zip(&parts) {
+            z64::wrap_add(&mut out[off - offset..off - offset + seg.len()], seg);
         }
     }
 }
@@ -400,6 +552,68 @@ mod tests {
         }
         let want: Vec<u64> = (0..len).map(|j| (0..n).map(|i| (i * 1000 + j) as u64).sum()).collect();
         assert_eq!(agg, want);
+    }
+
+    // -- parallel expansion ≡ serial --------------------------------------
+
+    #[test]
+    fn partition_covers_window_disjoint_in_order() {
+        for offset in [0usize, 1, 31, 32, 33, 100, 255, 256] {
+            for len in [0usize, 1, 5, 31, 32, 33, 64, 100, 257, 1000] {
+                for parts in [1usize, 2, 3, 5, 8] {
+                    let p = partition_window(offset, len, parts);
+                    assert!(p.len() <= parts, "({offset},{len},{parts})");
+                    let mut pos = offset;
+                    for &(off, n) in &p {
+                        assert_eq!(off, pos, "contiguous ({offset},{len},{parts})");
+                        assert!(n > 0, "no empty parts ({offset},{len},{parts})");
+                        pos += n;
+                    }
+                    assert_eq!(pos, offset + len, "covers window ({offset},{len},{parts})");
+                    // interior cuts are x4-group aligned (perf contract)
+                    for &(off, _) in p.iter().skip(1) {
+                        assert_eq!(off % X4_WORDS_U64, 0, "({offset},{len},{parts})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_run_returns_results_in_job_order() {
+        let pool = ExpandPool::new(3);
+        let jobs: Vec<Box<dyn FnOnce() -> Vec<u64> + Send>> = (0..17u64)
+            .map(|i| {
+                let f: Box<dyn FnOnce() -> Vec<u64> + Send> = Box::new(move || vec![i, i * i]);
+                f
+            })
+            .collect();
+        let got = pool.run(jobs);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(v, &vec![i as u64, (i * i) as u64]);
+        }
+    }
+
+    #[test]
+    fn pooled_expansion_bit_identical_to_serial() {
+        // the tentpole invariant: any worker count, any (offset, len),
+        // pooled expansion ≡ the serial TotalMaskStream fold
+        let me = 1usize;
+        let secrets: Vec<(usize, [u8; 32])> =
+            (0..5).filter(|&p| p != me).map(|p| (p, ss(me, p))).collect();
+        let stream = TotalMaskStream::new(&secrets, me, 9, 2);
+        for workers in [1usize, 2, 3, 8] {
+            let pool = ExpandPool::new(workers);
+            for (offset, len) in
+                [(0usize, 1usize), (0, 31), (0, 1000), (7, 257), (32, 64), (100, 513)]
+            {
+                let mut serial = vec![0x11u64; len];
+                stream.add_window(offset, &mut serial);
+                let mut pooled = vec![0x11u64; len];
+                pool.add_window(&stream, offset, &mut pooled);
+                assert_eq!(pooled, serial, "workers={workers} ({offset},{len})");
+            }
+        }
     }
 
     // -- SIMD ≡ scalar sweep ---------------------------------------------

@@ -4,7 +4,7 @@
 //! * [`DetRng`] is a deterministic ChaCha20-based generator used for
 //!   reproducible experiments and property-style tests.
 
-use super::chacha20::ChaCha20;
+use super::chacha20::{ChaCha20, X4_WORDS_U64};
 
 /// Fill `buf` with OS entropy from `/dev/urandom`.
 pub fn os_random(buf: &mut [u8]) {
@@ -20,12 +20,25 @@ pub fn os_random32() -> [u8; 32] {
     b
 }
 
+/// Blocks expanded per [`DetRng`] refill: the width of the 4-block
+/// ChaCha20 core, so a full refill is one vector-core dispatch instead
+/// of four scalar block expansions.
+const REFILL_BLOCKS: usize = 4;
+
 /// Deterministic ChaCha20-CTR random generator.
+///
+/// Refills a [`REFILL_BLOCKS`]-block (256-byte) buffer per keystream
+/// dispatch through the same 4-block core the mask PRG uses; the byte
+/// stream is bit-identical to the original one-block-per-refill
+/// generator (asserted below), so every seeded experiment reproduces.
 #[derive(Clone)]
 pub struct DetRng {
     cipher: ChaCha20,
     counter: u32,
-    buf: [u8; 64],
+    buf: [u8; 64 * REFILL_BLOCKS],
+    /// Valid bytes in `buf` (a refill near the counter limit may batch
+    /// fewer than [`REFILL_BLOCKS`] blocks).
+    len: usize,
     pos: usize,
 }
 
@@ -33,7 +46,7 @@ impl DetRng {
     /// Seed from a 32-byte key.
     pub fn new(seed: [u8; 32]) -> Self {
         let cipher = ChaCha20::new(&seed, &[0u8; 12], 0);
-        DetRng { cipher, counter: 0, buf: [0u8; 64], pos: 64 }
+        DetRng { cipher, counter: 0, buf: [0u8; 64 * REFILL_BLOCKS], len: 0, pos: 0 }
     }
 
     /// Seed from a u64 (convenience for tests/experiments).
@@ -45,21 +58,41 @@ impl DetRng {
     }
 
     fn refill(&mut self) {
-        self.buf = self.cipher.block(self.counter);
         // same checked-counter rule as the mask PRG: a wrapped 32-bit
         // block counter silently repeats the keystream (2^32 blocks =
         // 256 GiB of output per seed — unreachable in practice, fatal
-        // if reached)
-        self.counter = self
-            .counter
-            .checked_add(1)
-            .expect("DetRng exhausted 2^32 ChaCha20 blocks: keystream would repeat");
+        // if reached). The original one-block refill served blocks
+        // 0..=u32::MAX-1 and panicked before serving block u32::MAX;
+        // the batch keeps that exact boundary by never batching past
+        // the last servable block.
+        let avail = u32::MAX - self.counter;
+        if avail == 0 {
+            panic!("DetRng exhausted 2^32 ChaCha20 blocks: keystream would repeat");
+        }
+        let n = (avail as usize).min(REFILL_BLOCKS);
+        if n == REFILL_BLOCKS {
+            // full batch: one 4-block vector-core dispatch, de-
+            // interleaved to the documented keystream_u64 layout —
+            // LE-serializing it reproduces 4 consecutive block() calls
+            let mut group = [0u64; X4_WORDS_U64];
+            self.cipher.four_blocks_u64_into(self.counter, &mut group);
+            for (i, w) in group.iter().enumerate() {
+                self.buf[8 * i..8 * i + 8].copy_from_slice(&w.to_le_bytes());
+            }
+        } else {
+            for i in 0..n {
+                let block = self.cipher.block(self.counter + i as u32);
+                self.buf[64 * i..64 * (i + 1)].copy_from_slice(&block);
+            }
+        }
+        self.counter += n as u32;
+        self.len = 64 * n;
         self.pos = 0;
     }
 
     pub fn fill(&mut self, out: &mut [u8]) {
         for b in out.iter_mut() {
-            if self.pos == 64 {
+            if self.pos == self.len {
                 self.refill();
             }
             *b = self.buf[self.pos];
@@ -126,6 +159,104 @@ impl DetRng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The pre-batch generator, reimplemented verbatim: one
+    /// `cipher.block` per 64-byte refill, checked counter increment.
+    /// The batched [`DetRng`] must reproduce this byte stream exactly.
+    struct OneBlockRng {
+        cipher: ChaCha20,
+        counter: u32,
+        buf: [u8; 64],
+        pos: usize,
+    }
+
+    impl OneBlockRng {
+        fn new(seed: [u8; 32], counter: u32) -> Self {
+            OneBlockRng { cipher: ChaCha20::new(&seed, &[0u8; 12], 0), counter, buf: [0u8; 64], pos: 64 }
+        }
+
+        fn fill(&mut self, out: &mut [u8]) {
+            for b in out.iter_mut() {
+                if self.pos == 64 {
+                    self.buf = self.cipher.block(self.counter);
+                    self.counter = self.counter.checked_add(1).expect("keystream would repeat");
+                    self.pos = 0;
+                }
+                *b = self.buf[self.pos];
+                self.pos += 1;
+            }
+        }
+    }
+
+    /// A [`DetRng`] whose counter starts at `counter` (counter-limit
+    /// boundary tests; the public constructors always start at 0).
+    fn rng_at(seed: [u8; 32], counter: u32) -> DetRng {
+        DetRng {
+            cipher: ChaCha20::new(&seed, &[0u8; 12], 0),
+            counter,
+            buf: [0u8; 64 * REFILL_BLOCKS],
+            len: 0,
+            pos: 0,
+        }
+    }
+
+    #[test]
+    fn batched_stream_matches_per_block_reference() {
+        // the ISSUE's identity sweep: every read size 0..=257 (empty
+        // reads, sub-block, block-straddling, one-past-a-full-batch),
+        // issued back to back so refills land at varied offsets
+        let seed = [0xB4u8; 32];
+        let mut batched = DetRng::new(seed);
+        let mut reference = OneBlockRng::new(seed, 0);
+        for size in 0..=257usize {
+            let mut a = vec![0u8; size];
+            let mut b = vec![0u8; size];
+            batched.fill(&mut a);
+            reference.fill(&mut b);
+            assert_eq!(a, b, "read size {size}");
+        }
+        // and the derived draws ride the same stream
+        let mut batched = DetRng::from_seed(42);
+        let mut reference = OneBlockRng::new(
+            {
+                let mut key = [0u8; 32];
+                key[..8].copy_from_slice(&42u64.to_le_bytes());
+                key[8..16].copy_from_slice(&42u64.wrapping_mul(0x9e3779b97f4a7c15).to_le_bytes());
+                key
+            },
+            0,
+        );
+        for _ in 0..100 {
+            let mut b = [0u8; 8];
+            reference.fill(&mut b);
+            assert_eq!(batched.next_u64(), u64::from_le_bytes(b));
+        }
+    }
+
+    #[test]
+    fn short_batch_near_counter_limit_matches_reference() {
+        // 3 servable blocks left: the refill must batch short (scalar
+        // blocks) instead of running the 4-block core past the limit
+        let seed = [0x77u8; 32];
+        let start = u32::MAX - 3;
+        let mut batched = rng_at(seed, start);
+        let mut reference = OneBlockRng::new(seed, start);
+        let mut a = vec![0u8; 3 * 64];
+        let mut b = vec![0u8; 3 * 64];
+        batched.fill(&mut a);
+        reference.fill(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "keystream would repeat")]
+    fn refill_at_final_block_panics() {
+        // block u32::MAX was never servable pre-batch (checked_add
+        // panicked before pos reset); the batch keeps that boundary
+        let mut r = rng_at([1u8; 32], u32::MAX);
+        let mut b = [0u8; 1];
+        r.fill(&mut b);
+    }
 
     #[test]
     fn deterministic() {

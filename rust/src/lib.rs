@@ -170,6 +170,44 @@
 //! (asserted by the builder bit-identity tests and the equivalence
 //! suites, whose Table-2 byte counters would shift on any divergence).
 //!
+//! ## Threading model: the multi-core hot paths
+//!
+//! Every thread pool in the crate is hand-rolled std-only machinery
+//! (no rayon, no tokio), each bounded, each deterministic, and each
+//! **bit-invisible**: any worker/thread count produces the identical
+//! report, so parallelism is purely a wall-clock knob. Four families:
+//!
+//! * **Aggregator accumulator workers** (`--agg-workers N`) — the
+//!   chunked pipeline's per-shard fold fans out across `N` detached
+//!   workers owning disjoint shard sets (`k % N`), fed over bounded
+//!   channels; `take_sum` stitches the disjoint ranges back
+//!   deterministically ([`coordinator::streaming`]).
+//! * **Mask-expansion pool** (`--expand-workers N`) — client masking
+//!   and the aggregator's dropout total-mask correction partition each
+//!   tensor window into disjoint sub-windows
+//!   ([`crypto::prg::partition_window`]), expand each on a pool worker
+//!   via the seekable PRG, and stitch in offset order
+//!   ([`crypto::prg::ExpandPool`]). The window-partition property of
+//!   the wrap-added keystream makes any partition bit-identical to the
+//!   serial expansion.
+//! * **Event-loop shards** (`--evloop-threads K`) — the evloop
+//!   transport's connections are token-sharded at accept time across
+//!   `K` poller threads, each exclusively owning its connections' read
+//!   and write buffers (no lock on any byte path); frames funnel to
+//!   the single `RoundWindow` driver over an order-preserving channel
+//!   ([`net::evloop::shard`]). `K = 1` *is* the classic single loop.
+//! * **Transport/driver threads** — `ThreadedTransport` runs one
+//!   thread per party; the swarm harness multiplexes its simulated
+//!   clients over a few `client_threads` pollers and (with
+//!   `--evloop-threads`) shards its server the same way the protocol
+//!   transport does.
+//!
+//! The CI matrix re-runs the equivalence suites under
+//! `VFL_AGG_WORKERS`, `VFL_EXPAND_WORKERS`, `VFL_ROUNDS_IN_FLIGHT`,
+//! `VFL_TRANSPORT=evloop`, and `VFL_EVLOOP_THREADS`, so every pool's
+//! bit-invisibility claim is continuously enforced, not just
+//! documented.
+//!
 //! Everything the paper depends on is implemented from scratch in this
 //! crate: the crypto stack ([`crypto`]), the secure-aggregation core
 //! ([`secagg`]), the dataset substrate ([`data`]), the model substrate

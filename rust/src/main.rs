@@ -136,6 +136,12 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(w) = flags.get("agg-workers") {
         cfg.agg_workers = w.parse().context("bad --agg-workers")?;
     }
+    if let Some(w) = flags.get("expand-workers") {
+        cfg.expand_workers = w.parse().context("bad --expand-workers")?;
+    }
+    if let Some(k) = flags.get("evloop-threads") {
+        cfg.evloop_threads = k.parse().context("bad --evloop-threads")?;
+    }
     if let Some(w) = flags.get("rounds-in-flight") {
         cfg.rounds_in_flight = w.parse().context("bad --rounds-in-flight")?;
     }
@@ -159,6 +165,7 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     vfl::coordinator::validate_streaming(&cfg)?;
     vfl::coordinator::validate_timing(&cfg)?;
     vfl::coordinator::validate_window(&cfg)?;
+    vfl::coordinator::validate_evloop(&cfg)?;
     if let Some(spec) = flags.get("dropout-schedule") {
         if cfg.shamir_threshold.is_none() {
             bail!("--dropout-schedule needs --shamir-threshold (the run cannot recover otherwise)");
@@ -360,12 +367,18 @@ fn cmd_swarm(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(v) = flags.get("client-threads") {
         cfg.client_threads = v.parse().context("bad --client-threads")?;
     }
+    if let Some(v) = flags.get("evloop-threads") {
+        cfg.server_threads = v.parse().context("bad --evloop-threads")?;
+        if cfg.server_threads == 0 {
+            bail!("--evloop-threads 0 is invalid (the swarm server needs at least one loop)");
+        }
+    }
     if flags.contains_key("poll-fallback") {
         cfg.poller = PollerKind::PollFallback;
     }
     println!(
-        "swarm: {} clients x {} rounds x {} words ({} client threads)...",
-        cfg.clients, cfg.rounds, cfg.payload_words, cfg.client_threads
+        "swarm: {} clients x {} rounds x {} words ({} client threads, {} server loops)...",
+        cfg.clients, cfg.rounds, cfg.payload_words, cfg.client_threads, cfg.server_threads
     );
     let report = swarm::run(&cfg)?;
     println!(
@@ -425,13 +438,15 @@ fn main() -> Result<()> {
             eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded|--evloop]");
             eprintln!("        [--shamir-threshold 3] [--dropout-schedule 2@1,4@3+1]   dropout-tolerant run");
             eprintln!("        [--chunk-words 1024] [--shards 4] [--agg-workers 4]   streaming shard-parallel aggregation");
+            eprintln!("        [--expand-workers 4]                                   parallel mask expansion (1 = serial)");
+            eprintln!("        [--evloop-threads 4]                                   sharded event-loop pollers (evloop only)");
             eprintln!("        [--rounds-in-flight 2]                                 pipelined round window (1 = serial)");
             eprintln!("        [--rollback-fsync] [--rollback-max-bytes N]            rollback-log durability/bound");
             eprintln!("        [--stall-timeout-ms 500] [--stall-cap-ms 10000]       adaptive dropout-window floor/cap");
             eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
             eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
             eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
-            eprintln!("  swarm --clients 10240 [--rounds 3] [--payload-words 32] [--client-threads 4] [--poll-fallback]");
+            eprintln!("  swarm --clients 10240 [--rounds 3] [--payload-words 32] [--client-threads 4] [--evloop-threads 4] [--poll-fallback]");
             Ok(())
         }
     }
@@ -548,6 +563,48 @@ mod tests {
         let mut flags = HashMap::new();
         flags.insert("agg-workers".to_string(), "3".to_string());
         assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("--chunk-words"));
+    }
+
+    #[test]
+    fn expand_workers_flag_wires_into_config_and_zero_rejected() {
+        // meaningful without chunking — a monolithic run accepts it
+        let mut flags = HashMap::new();
+        flags.insert("expand-workers".to_string(), "4".to_string());
+        assert_eq!(cfg_from_flags(&flags).unwrap().expand_workers, 4);
+        // and alongside the chunked pipeline
+        let mut flags = HashMap::new();
+        flags.insert("chunk-words".to_string(), "1024".to_string());
+        flags.insert("shards".to_string(), "4".to_string());
+        flags.insert("expand-workers".to_string(), "2".to_string());
+        assert_eq!(cfg_from_flags(&flags).unwrap().expand_workers, 2);
+        // zero workers fail at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("expand-workers".to_string(), "0".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("invalid"));
+        // a runaway count fails at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("expand-workers".to_string(), "1000".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn evloop_threads_flag_wires_into_config_and_zero_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("evloop".to_string(), "true".to_string());
+        flags.insert("evloop-threads".to_string(), "4".to_string());
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Evloop);
+        assert_eq!(cfg.evloop_threads, 4);
+        // default is one loop
+        assert_eq!(cfg_from_flags(&HashMap::new()).unwrap().evloop_threads, 1);
+        // zero loops fail at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("evloop-threads".to_string(), "0".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("--evloop-threads 0"));
+        // a runaway count fails at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("evloop-threads".to_string(), "1000".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("cap"));
     }
 
     #[test]

@@ -18,10 +18,29 @@
 //!   conn.rs     Conn: per-connection state machine — FrameBuf
 //!               partial-read reassembly + OutQueue bounded
 //!               partial-write queue
-//!   server.rs   serve_on / EvloopTransport: the aggregator protocol
-//!               loop, frame-for-frame equivalent to tcp::serve_on
+//!   shard.rs    ShardLoop/ShardSet: K token-sharded loops behind one
+//!               acceptor (`--evloop-threads K`)
+//!   server.rs   serve_on / serve_sharded / EvloopTransport: the
+//!               aggregator protocol loop, frame-for-frame equivalent
+//!               to tcp::serve_on
 //!   swarm.rs    the C10K load generator (`vfl-sa swarm`)
 //! ```
+//!
+//! # Accept → shard handoff (`--evloop-threads K`)
+//!
+//! With K > 1 loops the driver thread plays acceptor: the `j`-th
+//! accepted socket is dealt round-robin to loop `j % K` *before* the
+//! loops start polling, and is owned by that one loop — its `FrameBuf`
+//! and `OutQueue` — for its whole life. No lock guards the read/write
+//! path; cross-thread traffic is confined to one shared event channel
+//! (loop → driver: frames, joins, dead-connection notices) and a
+//! per-loop control channel + wake socketpair (driver → loop: outbound
+//! frames, routed by the `client → loop` map built from join events).
+//! The one `RoundWindow` driver on the accepting thread runs the same
+//! protocol loop `serve_on` runs; per-loop metrics peaks max-merge at
+//! the end of the run. K = 1 *is* `serve_on`, byte-identical; any K
+//! produces bit-identical reports because per-sender FIFO survives
+//! sharding (one loop per connection, order-preserving channels).
 //!
 //! # The connection state machine
 //!
@@ -59,9 +78,11 @@
 pub mod conn;
 pub mod poller;
 pub mod server;
+pub mod shard;
 pub mod swarm;
 
 pub use conn::{Conn, FrameBuf, OutQueue, QueueOverflow, ReadOutcome, DEFAULT_OUTBOUND_CAP_BYTES};
 pub use poller::{Interest, PollEvent, Poller, PollerKind};
-pub use server::{serve, serve_on, EvloopTransport};
+pub use server::{serve, serve_on, serve_sharded, EvloopTransport};
+pub use shard::shard_of;
 pub use swarm::{SwarmCfg, SwarmReport};

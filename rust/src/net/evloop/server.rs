@@ -30,13 +30,15 @@
 
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::messages::Msg;
-use crate::coordinator::metrics::AGGREGATOR;
+use crate::coordinator::metrics::{PipelineStats, AGGREGATOR};
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
 use crate::coordinator::window::RoundWindow;
 use crate::coordinator::Metrics;
@@ -50,6 +52,7 @@ use super::super::transport::{
 use super::super::{Addr, Network};
 use super::conn::{Conn, ReadOutcome};
 use super::poller::{Interest, Poller, PollerKind};
+use super::shard::{self, LoopEvt, ShardLoop, ShardSet};
 
 /// The listening socket's registration token (connection tokens are
 /// slab indices, so they never reach this).
@@ -483,6 +486,301 @@ pub fn serve_on(
     Ok(ServeOutcome { notes, net, metrics })
 }
 
+/// Route an aggregator outbox through the shard fabric: meter +
+/// enqueue every message (to whichever loop owns the client), feed
+/// scheduler-control notes to the window — the sharded sibling of
+/// [`EvServer::route`], same metering, same note policy.
+fn route_sharded(
+    net: &mut Network,
+    ob: Outbox,
+    notes: &mut Vec<Note>,
+    win: &mut RoundWindow,
+    shards: &mut ShardSet,
+) -> Result<()> {
+    for (to, msg) in ob.msgs {
+        let Addr::Client(ci) = to else { bail!("aggregator addressed itself") };
+        let bytes = msg.into_bytes();
+        net.meter(Addr::Aggregator, to, bytes.len());
+        shards.send_wire(ci, bytes);
+    }
+    for n in ob.notes {
+        if let Some(n) = win.observe(n) {
+            notes.push(n);
+        }
+    }
+    Ok(())
+}
+
+/// The sharded driver: join bookkeeping plus the exact protocol loop
+/// `serve_on` runs, with the shared [`LoopEvt`] channel playing the
+/// role the poller plays there — `recv_timeout(clock.timeout())` is
+/// the quiescence probe, a received burst is an event batch.
+#[allow(clippy::too_many_arguments)]
+fn drive_sharded(
+    aggregator: &mut (dyn Party + '_),
+    schedule: &[RoundSpec],
+    n_clients: usize,
+    clock: &mut StallClock,
+    window: usize,
+    threads: usize,
+    shards: &mut ShardSet,
+    evt_rx: &Receiver<LoopEvt>,
+) -> Result<(Vec<Note>, Network, PipelineStats)> {
+    // -- join phase: every socket is already accepted and dealt; wait
+    // for each loop to report its clients' Hello handshakes. Frames a
+    // fast client sends beyond its Hello are carried into the protocol
+    // loop, as in the single-loop server.
+    let mut frames: Vec<(usize, Frame)> = Vec::new();
+    let mut joined = 0usize;
+    let mut live = n_clients as u64;
+    while joined < n_clients {
+        match evt_rx.recv() {
+            Ok(LoopEvt::Joined { loop_id, client }) => {
+                if shards.client_loop[client].is_some() {
+                    bail!("client {client} connected twice");
+                }
+                shards.client_loop[client] = Some(loop_id);
+                joined += 1;
+            }
+            Ok(LoopEvt::Frame { client, frame }) => frames.push((client, frame)),
+            Ok(LoopEvt::Gone { why, .. }) => bail!("client socket lost during join: {why}"),
+            Ok(LoopEvt::Fatal(e)) => return Err(e),
+            Err(_) => bail!("event loops exited during join"),
+        }
+    }
+    eprintln!("serve(evloop): all {n_clients} client(s) joined across {threads} loop(s)");
+
+    // -- protocol loop: identical structure and semantics to
+    // `serve_on`'s, with channel receives in place of poller waits.
+    let mut net = Network::new(n_clients);
+    let mut notes: Vec<Note> = Vec::new();
+    let mut win = RoundWindow::new(schedule, window);
+    let mut idle_probes = 0u32;
+    let mut processed_since_probe = 0u64;
+    let mut last_event = Instant::now();
+    while !win.done() {
+        while let Some(spec) = win.next_start() {
+            net.phase = spec.phase;
+            for ci in 0..n_clients {
+                let for_client = if ci == 0 {
+                    spec.clone()
+                } else {
+                    RoundSpec { ids: Vec::new(), ..spec.clone() }
+                };
+                shards.send_frame(ci, Frame::Round(for_client));
+            }
+            let mut ob = Outbox::default();
+            aggregator.on_round_start(spec, &mut ob)?;
+            route_sharded(&mut net, ob, &mut notes, &mut win, shards)?;
+        }
+        shards.wake();
+        if frames.is_empty() {
+            match evt_rx.recv_timeout(clock.timeout()) {
+                Err(RecvTimeoutError::Timeout) => {
+                    // quiescent for the stall window: same probe policy
+                    // and gap-anchor reset as the single loop
+                    last_event = Instant::now();
+                    let mut ob = Outbox::default();
+                    if processed_since_probe == 0 {
+                        aggregator.on_stall(&mut ob)?;
+                    }
+                    let acted = !ob.msgs.is_empty() || !ob.notes.is_empty();
+                    route_sharded(&mut net, ob, &mut notes, &mut win, shards)?;
+                    shards.wake();
+                    if acted || processed_since_probe > 0 {
+                        idle_probes = 0;
+                    } else {
+                        idle_probes += 1;
+                        if idle_probes >= MAX_IDLE_PROBES {
+                            bail!(
+                                "protocol stalled: round {} never completed",
+                                win.oldest_in_flight().unwrap_or(0)
+                            );
+                        }
+                    }
+                    processed_since_probe = 0;
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("all event loops exited"),
+                Ok(first) => {
+                    let now = Instant::now();
+                    clock.observe_gap(now - last_event);
+                    last_event = now;
+                    let mut batch = vec![first];
+                    while let Ok(e) = evt_rx.try_recv() {
+                        batch.push(e);
+                    }
+                    for e in batch {
+                        match e {
+                            LoopEvt::Frame { client, frame } => frames.push((client, frame)),
+                            LoopEvt::Gone { client, why } => {
+                                // a vanished client is a dropped party,
+                                // not a server error — the stall probe
+                                // declares it (single-loop parity)
+                                let who = client
+                                    .map(|c| c.to_string())
+                                    .unwrap_or_else(|| "?".into());
+                                eprintln!(
+                                    "serve(evloop): client {who} disconnected ({why}), \
+                                     marking dropped"
+                                );
+                                if let Some(ci) = client {
+                                    shards.client_loop[ci] = None;
+                                }
+                                live -= 1;
+                            }
+                            LoopEvt::Joined { client, .. } => {
+                                bail!("client {client} connected twice")
+                            }
+                            LoopEvt::Fatal(e) => return Err(e),
+                        }
+                    }
+                }
+            }
+            if live == 0 && frames.is_empty() {
+                bail!("all client connections lost");
+            }
+        }
+        // handle every complete frame in arrival order (per-sender
+        // FIFO: one loop owns each conn, and mpsc preserves its order)
+        for (ci, frame) in std::mem::take(&mut frames) {
+            match frame {
+                Frame::Msg { bytes } => {
+                    idle_probes = 0;
+                    processed_since_probe += 1;
+                    net.meter(Addr::Client(ci), Addr::Aggregator, bytes.len());
+                    let msg = Msg::decode(&bytes)?;
+                    let mut ob = Outbox::default();
+                    aggregator.on_message(Addr::Client(ci), msg, &mut ob)?;
+                    route_sharded(&mut net, ob, &mut notes, &mut win, shards)?;
+                }
+                Frame::Note(n) => {
+                    idle_probes = 0;
+                    processed_since_probe += 1;
+                    match n {
+                        Note::Failed { who, error } => bail!("party {who} failed: {error}"),
+                        n => {
+                            if let Some(n) = win.observe(n) {
+                                if let Note::RoundDone { round } = &n {
+                                    aggregator.on_round_complete(*round);
+                                }
+                                notes.push(n);
+                            }
+                        }
+                    }
+                }
+                f => bail!("unexpected frame from client {ci}: {f:?}"),
+            }
+        }
+        shards.wake();
+    }
+    Ok((notes, net, win.stats()))
+}
+
+/// [`serve_on`] across `threads` token-sharded event loops: the driver
+/// thread accepts every connection (dealing socket `j` to loop `j % K`
+/// — see [`shard`]), K loop threads own disjoint connection slabs with
+/// no locks on the read/write path, and protocol events funnel back to
+/// this thread's `RoundWindow` driver. `threads <= 1` is exactly
+/// [`serve_on`]; any K produces bit-identical reports (per-sender
+/// FIFO survives sharding because each connection lives on one loop).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_sharded(
+    listener: TcpListener,
+    mut aggregator: Box<dyn Party + '_>,
+    schedule: &[RoundSpec],
+    n_clients: usize,
+    mut clock: StallClock,
+    window: usize,
+    poller: PollerKind,
+    threads: usize,
+) -> Result<ServeOutcome> {
+    let threads = threads.max(1).min(n_clients.max(1));
+    if threads <= 1 {
+        return serve_on(listener, aggregator, schedule, n_clients, clock, window, poller);
+    }
+    if n_clients > u16::MAX as usize {
+        bail!("{n_clients} clients exceeds the Hello frame's u16 index space");
+    }
+    let listen = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
+    // build every poller first so a backend failure is a clean
+    // configuration-time error, not a half-spawned fleet
+    let mut pollers = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        pollers.push(poller.build().context("build poller")?);
+    }
+    eprintln!(
+        "serve(evloop/{}): listening on {listen}, {threads} loop shards, waiting for \
+         {n_clients} client(s)",
+        pollers[0].name()
+    );
+    // the driver plays acceptor: the connection peak is metered here,
+    // where the whole federation is visible (loops each see 1/K of it)
+    let mut io = Metrics::new();
+    let sockets = shard::accept_shards(&listener, n_clients, threads, &mut io, None)?;
+    drop(listener);
+
+    let (evt_tx, evt_rx) = mpsc::channel();
+    let mut ctls = Vec::with_capacity(threads);
+    let mut wakes = Vec::with_capacity(threads);
+    let mut loops = Vec::with_capacity(threads);
+    for (l, (poller, socks)) in pollers.into_iter().zip(sockets).enumerate() {
+        let (ctl_tx, ctl_rx) = mpsc::channel();
+        let (wake_tx, wake_rx) = UnixStream::pair().context("wake pair")?;
+        wake_tx.set_nonblocking(true).context("nonblocking wake")?;
+        loops.push(ShardLoop::new(l, poller, socks, n_clients, wake_rx, ctl_rx, evt_tx.clone())?);
+        ctls.push(ctl_tx);
+        wakes.push(wake_tx);
+    }
+    drop(evt_tx); // loops hold the only senders: hangup = all loops gone
+
+    thread::scope(|s| -> Result<ServeOutcome> {
+        // shards lives inside the scope so every exit path drops it
+        // (hanging up the loops) before the scope joins their threads
+        let mut shards = ShardSet::new(ctls, wakes, n_clients);
+        let handles: Vec<_> = loops
+            .into_iter()
+            .map(|sl| {
+                thread::Builder::new()
+                    .name(format!("evloop-shard-{}", sl.id()))
+                    .spawn_scoped(s, move || sl.run())
+                    .expect("spawn evloop shard")
+            })
+            .collect();
+        let served = drive_sharded(
+            &mut *aggregator,
+            schedule,
+            n_clients,
+            &mut clock,
+            window,
+            threads,
+            &mut shards,
+            &evt_rx,
+        );
+        if served.is_ok() {
+            for ci in 0..n_clients {
+                shards.send_frame(ci, Frame::Stop);
+            }
+            shards.drain_all(STOP_DRAIN);
+        }
+        shards.wake();
+        drop(shards);
+        let mut loop_io = Metrics::new();
+        for h in handles {
+            match h.join() {
+                Ok(m) => loop_io.merge(m),
+                Err(_) => eprintln!("serve(evloop): a loop shard panicked"),
+            }
+        }
+        let (notes, net, stats) = served?;
+        let mut metrics = aggregator.take_metrics();
+        metrics.record_pipeline(stats);
+        metrics.merge(io);
+        metrics.merge(loop_io);
+        Ok(ServeOutcome { notes, net, metrics })
+    })
+}
+
 /// In-process evloop runs: the aggregator multiplexes every client
 /// over real localhost sockets on *one* event-loop thread, while each
 /// client party runs the ordinary blocking [`tcp`] client loop on its
@@ -498,6 +796,7 @@ pub struct EvloopTransport {
     stall_floor: Duration,
     stall_cap: Duration,
     poller: PollerKind,
+    threads: usize,
 }
 
 impl EvloopTransport {
@@ -507,6 +806,7 @@ impl EvloopTransport {
             stall_floor: DEFAULT_STALL_TIMEOUT,
             stall_cap: DEFAULT_STALL_CAP,
             poller: PollerKind::Auto,
+            threads: 1,
         }
     }
 
@@ -528,6 +828,15 @@ impl EvloopTransport {
     /// without the `VFL_EVLOOP_POLLER` env race).
     pub fn with_poller(mut self, kind: PollerKind) -> Self {
         self.poller = kind;
+        self
+    }
+
+    /// Run the aggregator across `threads` token-sharded event loops
+    /// (reachable from `RunConfig::evloop_threads`; `--evloop-threads`).
+    /// 1 = today's single loop, byte-identical; any K produces
+    /// bit-identical reports (see [`serve_sharded`]).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 }
@@ -553,7 +862,7 @@ impl Transport for EvloopTransport {
         let mut parties = parties;
         let aggregator = parties.remove(0);
         let clock = StallClock::new(self.stall_floor, self.stall_cap);
-        let (n_clients, kind) = (self.n_clients, self.poller);
+        let (n_clients, kind, threads) = (self.n_clients, self.poller, self.threads);
 
         thread::scope(|s| -> Result<TransportOutcome> {
             let mut handles = Vec::with_capacity(parties.len());
@@ -564,7 +873,8 @@ impl Transport for EvloopTransport {
                     (party, r)
                 }));
             }
-            let served = serve_on(listener, aggregator, schedule, n_clients, clock, window, kind);
+            let served =
+                serve_sharded(listener, aggregator, schedule, n_clients, clock, window, kind, threads);
             // join the client threads either way: a server error drops
             // its sockets, which unblocks every client read with EOF
             let mut clients: Vec<Box<dyn Party + 'e>> = Vec::with_capacity(handles.len());

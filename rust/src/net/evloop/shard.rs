@@ -1,0 +1,521 @@
+//! Token-sharded event loops (`--evloop-threads K`): one acceptor
+//! dealing sockets round-robin to K poller threads, each owning its
+//! connections' buffers exclusively.
+//!
+//! # Accept → shard handoff
+//!
+//! The driver thread plays acceptor: it accepts every connection on
+//! the (still-blocking-semantics) listener and deals the `j`-th
+//! accepted socket to loop `j % K` ([`shard_of`]) *before* any loop
+//! thread starts polling. Each socket is then owned by exactly one
+//! [`ShardLoop`] for its whole life — its `FrameBuf`/`OutQueue` are
+//! plain fields of that loop's slab, touched by no lock and no other
+//! thread. Cross-thread traffic happens only at the edges:
+//!
+//! * **loop → driver**: complete frames, `Hello` joins, and dead-
+//!   connection notices funnel over one shared [`LoopEvt`] channel.
+//!   An mpsc channel preserves per-sender order, and each connection
+//!   lives on one loop, so the per-sender FIFO the protocol relies on
+//!   survives sharding — that is the bit-identity argument.
+//! * **driver → loop**: outbound frames ride a per-loop [`Ctl`]
+//!   channel, routed by the `client → loop` map the driver builds from
+//!   `Joined` events. A loop parked in `Poller::wait` is woken by one
+//!   byte on its wake socketpair (registered at [`WAKE_TOKEN`]); the
+//!   driver batches wakes per burst, not per frame.
+//!
+//! Each loop meters its own per-connection queue depths into a private
+//! [`Metrics`] returned when the loop exits; the driver max-merges
+//! them ([`Metrics::merge`]) and meters total live connections itself,
+//! so `peak_connections` reports the federation size at any K.
+//! Dropping the driver-side handles ([`ShardSet`]) hangs up every wake
+//! pair and control channel, which is how loops learn to exit on error
+//! paths — no shared shutdown flag.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::metrics::AGGREGATOR;
+use crate::coordinator::Metrics;
+
+use super::super::frame::Frame;
+use super::conn::{Conn, ReadOutcome};
+use super::poller::{Interest, Poller, PollerKind};
+
+/// The wake socketpair's registration token in each loop's poller
+/// (connection tokens are slab indices, so they never reach this).
+const WAKE_TOKEN: usize = usize::MAX;
+
+/// Which loop the `j`-th accepted connection is dealt to: round-robin
+/// at accept time. Pure so tests can assert the partition is disjoint
+/// and covering without opening sockets.
+pub fn shard_of(accept_index: usize, threads: usize) -> usize {
+    accept_index % threads.max(1)
+}
+
+/// Accept exactly `n_clients` connections, dealing socket `j` to shard
+/// `shard_of(j, threads)` and metering the growing live count into
+/// `io` (the driver owns the connection peak — loops never see the
+/// whole federation). `timeout` bounds each quiet stretch between
+/// accepts (None = wait forever, the protocol server's join
+/// semantics).
+pub(super) fn accept_shards(
+    listener: &TcpListener,
+    n_clients: usize,
+    threads: usize,
+    io: &mut Metrics,
+    timeout: Option<Duration>,
+) -> Result<Vec<Vec<TcpStream>>> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    // a one-fd poll(2) poller: portable accept-with-timeout
+    let mut poller = PollerKind::PollFallback.build().context("build accept poller")?;
+    poller
+        .register(listener.as_raw_fd(), 0, Interest::READ)
+        .context("register listener")?;
+    let mut shards: Vec<Vec<TcpStream>> = (0..threads).map(|_| Vec::new()).collect();
+    let mut accepted = 0usize;
+    let mut events = Vec::new();
+    while accepted < n_clients {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shards[shard_of(accepted, threads)].push(stream);
+                accepted += 1;
+                io.record_connections(AGGREGATOR, accepted as u64);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                poller.wait(&mut events, timeout).context("poll (accept)")?;
+                if events.is_empty() {
+                    bail!("join stalled at {accepted}/{n_clients} accepted connections");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("accept"),
+        }
+    }
+    Ok(shards)
+}
+
+/// Driver → loop control messages.
+pub(super) enum Ctl {
+    /// Enqueue one frame to a client this loop owns.
+    Frame { client: usize, frame: Frame },
+    /// Enqueue pre-encoded `Msg` wire bytes (the zero-copy sibling —
+    /// the body crosses the channel by move, never by copy).
+    Wire { client: usize, bytes: Vec<u8> },
+    /// Flush every remaining outbound byte (bounded by `grace`), then
+    /// exit and return the loop's metrics.
+    Drain { grace: Duration },
+}
+
+/// Loop → driver events. One shared channel: mpsc preserves per-sender
+/// order and every connection lives on exactly one loop, so each
+/// client's frames arrive at the driver in read order.
+pub(super) enum LoopEvt {
+    /// A client's `Hello` landed on this loop — the driver records
+    /// `client → loop_id` for outbound routing.
+    Joined { loop_id: usize, client: usize },
+    /// A complete post-handshake frame from a client.
+    Frame { client: usize, frame: Frame },
+    /// A connection died (EOF, I/O error, queue overflow); `client` is
+    /// None if it never completed its handshake. The loop has already
+    /// closed it — the driver decides whether that is a dropout or a
+    /// join-phase failure.
+    Gone { client: Option<usize>, why: String },
+    /// A protocol violation inside the loop (bad `Hello`) — fatal.
+    Fatal(anyhow::Error),
+}
+
+/// One event-loop shard: a poller plus the slab of connections it
+/// exclusively owns. Built on the driver thread, then moved whole into
+/// its thread — nothing here is shared.
+pub(super) struct ShardLoop {
+    id: usize,
+    poller: Poller,
+    /// Token-indexed slab; closed slots stay `None` (each client
+    /// connects exactly once per run, so tokens are never reused).
+    conns: Vec<Option<Conn>>,
+    /// Client index → live token. Full federation width, but only this
+    /// loop's clients ever fill in.
+    client_slot: Vec<Option<usize>>,
+    /// Per-connection queue-depth meters; the driver max-merges the
+    /// loops' metrics at the end of the run.
+    io: Metrics,
+    /// Wake socketpair read end, registered at [`WAKE_TOKEN`].
+    wake: UnixStream,
+    ctl: Receiver<Ctl>,
+    evt: Sender<LoopEvt>,
+}
+
+impl ShardLoop {
+    /// This loop's shard index (thread naming / diagnostics).
+    pub(super) fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Adopt this shard's pre-accepted sockets: nonblocking, slab
+    /// tokens, read interest — the same setup `serve_on`'s accept path
+    /// performs, minus the accepting.
+    pub(super) fn new(
+        id: usize,
+        mut poller: Poller,
+        sockets: Vec<TcpStream>,
+        n_clients: usize,
+        wake: UnixStream,
+        ctl: Receiver<Ctl>,
+        evt: Sender<LoopEvt>,
+    ) -> Result<ShardLoop> {
+        wake.set_nonblocking(true).context("nonblocking wake")?;
+        poller
+            .register(wake.as_raw_fd(), WAKE_TOKEN, Interest::READ)
+            .context("register wake")?;
+        let mut conns = Vec::with_capacity(sockets.len());
+        for stream in sockets {
+            stream.set_nodelay(true).ok();
+            stream.set_nonblocking(true).context("set_nonblocking")?;
+            let fd = stream.as_raw_fd();
+            let token = conns.len();
+            poller.register(fd, token, Interest::READ).context("register conn")?;
+            conns.push(Some(Conn::new(stream, fd)));
+        }
+        Ok(ShardLoop {
+            id,
+            poller,
+            conns,
+            client_slot: vec![None; n_clients],
+            io: Metrics::new(),
+            wake,
+            ctl,
+            evt,
+        })
+    }
+
+    /// The loop body: park in the poller, service socket readiness,
+    /// then drain the control channel. Exits on `Ctl::Drain` (orderly,
+    /// flushes outbound) or a disconnected driver (error path, just
+    /// returns), either way handing back this loop's metrics.
+    pub(super) fn run(mut self) -> Metrics {
+        let mut events = Vec::new();
+        loop {
+            if self.poller.wait(&mut events, None).is_err() {
+                return self.io;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.token == WAKE_TOKEN {
+                    self.drain_wake();
+                    continue;
+                }
+                if ev.writable {
+                    self.flush(ev.token);
+                }
+                if ev.readable || ev.hangup {
+                    self.handle_read(ev.token);
+                }
+            }
+            // control after I/O, so outbound routing sees fresh slots
+            loop {
+                match self.ctl.try_recv() {
+                    Ok(Ctl::Frame { client, frame }) => self.send_frame(client, &frame),
+                    Ok(Ctl::Wire { client, bytes }) => self.send_wire(client, bytes),
+                    Ok(Ctl::Drain { grace }) => {
+                        self.drain_outbound(Instant::now() + grace);
+                        return self.io;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    // driver gone without Drain: an error path — exit
+                    // without flushing (the run already failed)
+                    Err(TryRecvError::Disconnected) => return self.io,
+                }
+            }
+        }
+    }
+
+    /// Swallow queued wake bytes (EOF here means the driver hung up —
+    /// the control channel's Disconnected handles the actual exit).
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.wake).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return, // WouldBlock or a real error: parked either way
+            }
+        }
+    }
+
+    /// Close one connection: deregister, drop the socket, clear the
+    /// client mapping; `gone` notifies the driver (None for the silent
+    /// closes during the post-Drain flush).
+    fn close(&mut self, token: usize, gone: Option<String>) {
+        if let Some(conn) = self.conns.get_mut(token).and_then(Option::take) {
+            let _ = self.poller.deregister(conn.fd);
+            if let Some(ci) = conn.client {
+                self.client_slot[ci] = None;
+            }
+            if let Some(why) = gone {
+                let _ = self.evt.send(LoopEvt::Gone { client: conn.client, why });
+            }
+        }
+    }
+
+    fn set_interest(&mut self, token: usize, want: Interest) {
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        if conn.interest != want {
+            let fd = conn.fd;
+            conn.interest = want;
+            if let Err(e) = self.poller.reregister(fd, token, want) {
+                self.close(token, Some(format!("reregister failed: {e}")));
+            }
+        }
+    }
+
+    /// Drain a readable socket, forwarding complete frames. The
+    /// `Hello` handshake is handled inline exactly as `serve_on` does:
+    /// frames before it are a protocol error, frames after it carry
+    /// the sender's client index up the event channel.
+    fn handle_read(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else {
+            return; // stale event for an already-closed conn
+        };
+        let mut got = Vec::new();
+        let outcome = conn.read_ready(&mut got);
+        self.io.record_conn_buffered(AGGREGATOR, conn.buffered_bytes() as u64);
+        let mut client = conn.client;
+        for f in got {
+            match client {
+                Some(ci) => {
+                    let _ = self.evt.send(LoopEvt::Frame { client: ci, frame: f });
+                }
+                None => {
+                    let Frame::Hello { client: c } = f else {
+                        let _ = self
+                            .evt
+                            .send(LoopEvt::Fatal(anyhow::anyhow!("expected Hello, got {f:?}")));
+                        self.close(token, None);
+                        return;
+                    };
+                    let ci = c as usize;
+                    let n = self.client_slot.len();
+                    if ci >= n {
+                        let _ = self.evt.send(LoopEvt::Fatal(anyhow::anyhow!(
+                            "client index {ci} out of range (need 0..{n})"
+                        )));
+                        self.close(token, None);
+                        return;
+                    }
+                    if self.client_slot[ci].is_some() {
+                        let _ = self
+                            .evt
+                            .send(LoopEvt::Fatal(anyhow::anyhow!("client {ci} connected twice")));
+                        self.close(token, None);
+                        return;
+                    }
+                    self.client_slot[ci] = Some(token);
+                    if let Some(conn) = self.conns[token].as_mut() {
+                        conn.client = Some(ci);
+                    }
+                    client = Some(ci);
+                    let _ = self.evt.send(LoopEvt::Joined { loop_id: self.id, client: ci });
+                }
+            }
+        }
+        if let ReadOutcome::Closed(why) = outcome {
+            self.close(token, Some(why));
+        }
+    }
+
+    /// Drain a connection's outbound queue as far as the socket
+    /// accepts, keeping writable interest exactly while bytes remain.
+    fn flush(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        match conn.write_ready() {
+            Ok(drained) => {
+                let bytes = conn.buffered_bytes();
+                self.io.record_conn_buffered(AGGREGATOR, bytes as u64);
+                let want = if drained { Interest::READ } else { Interest::BOTH };
+                self.set_interest(token, want);
+            }
+            Err(e) => self.close(token, Some(format!("write failed: {e}"))),
+        }
+    }
+
+    /// Enqueue one frame and opportunistically drain. Dead or dropped
+    /// clients are skipped; a queue overflow marks the client dropped —
+    /// never a blocking wait (same policy as the single loop).
+    fn send_frame(&mut self, ci: usize, frame: &Frame) {
+        let Some(token) = self.client_slot[ci] else { return };
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        if let Err(e) = conn.out.enqueue(frame, token) {
+            self.close(token, Some(format!("send failed: {e:#}")));
+            return;
+        }
+        self.flush(token);
+    }
+
+    /// Enqueue pre-encoded `Msg` wire bytes (zero-copy path).
+    fn send_wire(&mut self, ci: usize, bytes: Vec<u8>) {
+        let Some(token) = self.client_slot[ci] else { return };
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::as_mut) else { return };
+        if let Err(e) = conn.out.enqueue_msg(bytes, token) {
+            self.close(token, Some(format!("send failed: {e:#}")));
+            return;
+        }
+        self.flush(token);
+    }
+
+    /// Best-effort post-Drain flush: push every remaining outbound
+    /// byte (the Stop frames), closing each connection as its queue
+    /// empties so level-triggered EOF readiness from exiting clients
+    /// cannot spin the loop.
+    fn drain_outbound(&mut self, deadline: Instant) {
+        let mut events = Vec::new();
+        loop {
+            let mut pending = false;
+            for token in 0..self.conns.len() {
+                let Some(conn) = self.conns[token].as_ref() else { continue };
+                if conn.out.is_empty() {
+                    self.close(token, None);
+                } else {
+                    pending = true;
+                    self.set_interest(token, Interest::WRITE);
+                }
+            }
+            if !pending {
+                return;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let wait = (deadline - now).min(Duration::from_millis(100));
+            if self.poller.wait(&mut events, Some(wait)).is_err() {
+                return;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.token == WAKE_TOKEN {
+                    self.drain_wake();
+                } else if ev.hangup {
+                    self.close(ev.token, None);
+                } else if ev.writable {
+                    self.flush(ev.token);
+                }
+            }
+        }
+    }
+}
+
+/// The driver's side of the shard fabric: per-loop control senders and
+/// wake handles, plus the `client → loop` routing map. Dropping this
+/// hangs up every loop (their wake reads hit EOF, their control
+/// channels disconnect) — the error-path shutdown.
+pub(super) struct ShardSet {
+    ctls: Vec<Sender<Ctl>>,
+    /// Wake socketpair write ends, nonblocking (a full pipe already
+    /// guarantees a pending wakeup, so a short write is a no-op).
+    wakes: Vec<UnixStream>,
+    /// Client index → owning loop (filled from `Joined` events; None =
+    /// not yet joined, or dropped).
+    pub(super) client_loop: Vec<Option<usize>>,
+    /// Loops with control traffic queued since the last [`wake`] — one
+    /// wake byte per loop per burst, not per frame.
+    touched: Vec<bool>,
+}
+
+impl ShardSet {
+    pub(super) fn new(ctls: Vec<Sender<Ctl>>, wakes: Vec<UnixStream>, n_clients: usize) -> ShardSet {
+        let k = ctls.len();
+        ShardSet { ctls, wakes, client_loop: vec![None; n_clients], touched: vec![false; k] }
+    }
+
+    fn push(&mut self, l: usize, c: Ctl) {
+        if self.ctls[l].send(c).is_ok() {
+            self.touched[l] = true;
+        }
+    }
+
+    /// Route one frame to whichever loop owns the client (dropped
+    /// clients are skipped, matching the single loop's dead-slot
+    /// behavior). Call [`wake`] after the burst.
+    pub(super) fn send_frame(&mut self, client: usize, frame: Frame) {
+        if let Some(l) = self.client_loop[client] {
+            self.push(l, Ctl::Frame { client, frame });
+        }
+    }
+
+    /// Route pre-encoded `Msg` wire bytes (zero-copy path).
+    pub(super) fn send_wire(&mut self, client: usize, bytes: Vec<u8>) {
+        if let Some(l) = self.client_loop[client] {
+            self.push(l, Ctl::Wire { client, bytes });
+        }
+    }
+
+    /// Tell every loop to flush its outbound queues and exit.
+    pub(super) fn drain_all(&mut self, grace: Duration) {
+        for l in 0..self.ctls.len() {
+            self.push(l, Ctl::Drain { grace });
+        }
+    }
+
+    /// Wake every loop with queued control traffic (one byte each).
+    pub(super) fn wake(&mut self) {
+        for (l, touched) in self.touched.iter_mut().enumerate() {
+            if *touched {
+                *touched = false;
+                let _ = (&self.wakes[l]).write(&[1]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_dealing_is_disjoint_and_covering() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            for n_clients in [0usize, 1, 2, 5, 16, 17] {
+                let mut per_loop = vec![0usize; threads];
+                for j in 0..n_clients {
+                    let l = shard_of(j, threads);
+                    assert!(l < threads, "{j} % {threads} in range");
+                    per_loop[l] += 1;
+                }
+                // every connection lands on exactly one loop, and the
+                // deal is balanced to within one socket
+                assert_eq!(per_loop.iter().sum::<usize>(), n_clients);
+                let (min, max) =
+                    (per_loop.iter().min().unwrap(), per_loop.iter().max().unwrap());
+                assert!(max - min <= 1, "balanced deal: {per_loop:?}");
+            }
+        }
+        // zero threads clamp to one loop instead of dividing by zero
+        assert_eq!(shard_of(5, 0), 0);
+    }
+
+    #[test]
+    fn wake_pair_roundtrip() {
+        // the wake mechanism: a byte written on the driver end shows up
+        // readable on the loop end, and dropping the driver end reads
+        // as EOF (the error-path hangup signal)
+        let (driver, looped) = UnixStream::pair().unwrap();
+        driver.set_nonblocking(true).unwrap();
+        looped.set_nonblocking(true).unwrap();
+        (&driver).write_all(&[1]).unwrap();
+        let mut buf = [0u8; 8];
+        assert_eq!((&looped).read(&mut buf).unwrap(), 1);
+        assert_eq!(
+            (&looped).read(&mut buf).unwrap_err().kind(),
+            std::io::ErrorKind::WouldBlock
+        );
+        drop(driver);
+        assert_eq!((&looped).read(&mut buf).unwrap(), 0, "driver hangup reads as EOF");
+    }
+}

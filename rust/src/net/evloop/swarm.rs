@@ -22,6 +22,8 @@
 
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -33,6 +35,7 @@ use crate::coordinator::Metrics;
 use super::super::frame::Frame;
 use super::conn::{Conn, ReadOutcome};
 use super::poller::{Interest, Poller, PollerKind};
+use super::shard::{self, LoopEvt, ShardLoop, ShardSet};
 
 const LISTENER_TOKEN: usize = usize::MAX;
 /// How long a quiescent swarm phase may sit before the run is
@@ -54,6 +57,10 @@ pub struct SwarmCfg {
     pub payload_words: usize,
     /// Worker threads multiplexing the client sockets.
     pub client_threads: usize,
+    /// Aggregator-side event-loop threads (`--evloop-threads`): 1 is
+    /// the classic single loop, K > 1 token-shards the connections
+    /// across K [`ShardLoop`]s behind one acceptor/driver thread.
+    pub server_threads: usize,
     /// Poller backend (tests pin the `poll(2)` fallback).
     pub poller: PollerKind,
 }
@@ -65,6 +72,7 @@ impl Default for SwarmCfg {
             rounds: 3,
             payload_words: 32,
             client_threads: 4,
+            server_threads: 1,
             poller: PollerKind::Auto,
         }
     }
@@ -76,6 +84,8 @@ pub struct SwarmReport {
     pub clients: usize,
     pub rounds: u32,
     pub payload_words: usize,
+    /// Aggregator-side event-loop threads the run used.
+    pub server_threads: usize,
     pub wall_ms: f64,
     /// Peak simultaneously-live connections at the aggregator
     /// (== `clients` when every join landed).
@@ -105,13 +115,15 @@ impl SwarmReport {
     /// `BENCH_streaming.json`).
     pub fn json(&self) -> String {
         format!(
-            "{{\"clients\": {}, \"rounds\": {}, \"payload_words\": {}, \"wall_ms\": {:.3}, \
+            "{{\"clients\": {}, \"rounds\": {}, \"payload_words\": {}, \"server_threads\": {}, \
+             \"wall_ms\": {:.3}, \
              \"peak_live_connections\": {}, \"peak_conn_buffered_bytes\": {}, \
              \"bytes_received\": {}, \"checksum_ok\": {}, \"poller\": \"{}\", \
              \"rss_peak_kb\": {}}}",
             self.clients,
             self.rounds,
             self.payload_words,
+            self.server_threads,
             self.wall_ms,
             self.peak_live_connections,
             self.peak_conn_buffered_bytes,
@@ -214,8 +226,16 @@ mod os {
 /// Run one swarm: returns the report; the caller decides whether an
 /// unverified checksum is fatal (the CLI and tests both treat it so).
 pub fn run(cfg: &SwarmCfg) -> Result<SwarmReport> {
-    if cfg.clients == 0 || cfg.rounds == 0 || cfg.payload_words == 0 || cfg.client_threads == 0 {
-        bail!("swarm needs at least one client, round, payload word, and client thread");
+    if cfg.clients == 0
+        || cfg.rounds == 0
+        || cfg.payload_words == 0
+        || cfg.client_threads == 0
+        || cfg.server_threads == 0
+    {
+        bail!(
+            "swarm needs at least one client, round, payload word, client thread, \
+             and server thread"
+        );
     }
     if cfg.clients > u16::MAX as usize {
         bail!("--clients {} exceeds the Hello frame's u16 index space", cfg.clients);
@@ -247,7 +267,11 @@ pub fn run(cfg: &SwarmCfg) -> Result<SwarmReport> {
             let (words, kind) = (cfg.payload_words, cfg.poller);
             handles.push(s.spawn(move || client_worker(&addr, lo..hi, words, kind)));
         }
-        let served = swarm_serve(listener, cfg);
+        let served = if cfg.server_threads > 1 {
+            swarm_serve_sharded(listener, cfg)
+        } else {
+            swarm_serve(listener, cfg)
+        };
         let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
             match h.join() {
@@ -271,6 +295,7 @@ pub fn run(cfg: &SwarmCfg) -> Result<SwarmReport> {
         clients: cfg.clients,
         rounds: cfg.rounds,
         payload_words: cfg.payload_words,
+        server_threads: cfg.server_threads,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         peak_live_connections: io.peak_connections(AGGREGATOR),
         peak_conn_buffered_bytes: io.peak_conn_buffered_bytes(AGGREGATOR),
@@ -471,6 +496,150 @@ fn swarm_serve(listener: TcpListener, cfg: &SwarmCfg) -> Result<(Metrics, u64, u
     Ok((io, bytes_received, checksum, name))
 }
 
+/// The K > 1 aggregator: the same go-barrier-collect protocol as
+/// [`swarm_serve`], but the sockets are dealt round-robin across
+/// `server_threads` [`ShardLoop`]s and this (driver) thread only talks
+/// channels — payload frames funnel up the shared [`LoopEvt`] channel,
+/// go/Stop frames ride the per-loop control channels. The checksum
+/// fold is commutative (`wrapping_add`), so any arrival interleaving
+/// across loops produces the identical sum.
+fn swarm_serve_sharded(
+    listener: TcpListener,
+    cfg: &SwarmCfg,
+) -> Result<(Metrics, u64, u64, &'static str)> {
+    let threads = cfg.server_threads.min(cfg.clients.max(1));
+    let mut pollers = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        pollers.push(cfg.poller.build().context("build shard poller")?);
+    }
+    let name = pollers[0].name();
+
+    // this thread accepts everything (metering the connection peak),
+    // dealing socket j to loop j % K
+    let mut io = Metrics::new();
+    let sockets =
+        shard::accept_shards(&listener, cfg.clients, threads, &mut io, Some(PHASE_TIMEOUT))?;
+    drop(listener);
+
+    let (evt_tx, evt_rx) = mpsc::channel::<LoopEvt>();
+    let mut ctls = Vec::with_capacity(threads);
+    let mut wakes = Vec::with_capacity(threads);
+    let mut loops = Vec::with_capacity(threads);
+    for (l, (poller, socks)) in pollers.into_iter().zip(sockets).enumerate() {
+        let (ctl_tx, ctl_rx) = mpsc::channel();
+        let (wake_w, wake_r) = UnixStream::pair().context("wake socketpair")?;
+        wake_w.set_nonblocking(true).context("nonblocking wake writer")?;
+        loops.push(ShardLoop::new(l, poller, socks, cfg.clients, wake_r, ctl_rx, evt_tx.clone())?);
+        ctls.push(ctl_tx);
+        wakes.push(wake_w);
+    }
+    drop(evt_tx); // loops hold the only senders: Disconnected == all loops gone
+
+    let (loop_io, bytes_received, checksum) = thread::scope(|s| -> Result<_> {
+        // declared inside the scope so every exit path drops it (hanging
+        // up wake pairs + control channels) before the implicit join
+        let mut shards = ShardSet::new(ctls, wakes, cfg.clients);
+        let mut handles = Vec::with_capacity(threads);
+        for sl in loops {
+            let h = thread::Builder::new()
+                .name(format!("swarm-shard-{}", sl.id()))
+                .spawn_scoped(s, move || sl.run())
+                .expect("spawn swarm shard");
+            handles.push(h);
+        }
+        let driven = swarm_drive_sharded(cfg, &mut shards, &evt_rx);
+        if driven.is_ok() {
+            for c in 0..cfg.clients {
+                shards.send_frame(c, Frame::Stop);
+            }
+            shards.drain_all(STOP_DRAIN);
+        }
+        shards.wake();
+        drop(shards);
+        let mut loop_io = Metrics::new();
+        for h in handles {
+            match h.join() {
+                Ok(m) => loop_io.merge(m),
+                Err(_) => eprintln!("[swarm] shard loop panicked"),
+            }
+        }
+        let (bytes, sum) = driven?;
+        Ok((loop_io, bytes, sum))
+    })?;
+    io.merge(loop_io);
+    Ok((io, bytes_received, checksum, name))
+}
+
+/// The sharded driver's protocol: wait out the joins, pace the rounds,
+/// fold the checksum. Any lost client, stray frame, or stalled phase is
+/// fatal — swarm semantics, identical to the single loop's.
+fn swarm_drive_sharded(
+    cfg: &SwarmCfg,
+    shards: &mut ShardSet,
+    evt_rx: &Receiver<LoopEvt>,
+) -> Result<(u64, u64)> {
+    // -- join: every client index says Hello on some loop
+    let mut joined = 0usize;
+    while joined < cfg.clients {
+        match evt_rx.recv_timeout(PHASE_TIMEOUT) {
+            Ok(LoopEvt::Joined { loop_id, client }) => {
+                if shards.client_loop[client].is_some() {
+                    bail!("client {client} connected twice");
+                }
+                shards.client_loop[client] = Some(loop_id);
+                joined += 1;
+            }
+            Ok(LoopEvt::Frame { client, .. }) => {
+                bail!("swarm client {client} sent a frame before the first go");
+            }
+            Ok(LoopEvt::Gone { why, .. }) => bail!("swarm client lost during join: {why}"),
+            Ok(LoopEvt::Fatal(e)) => return Err(e),
+            Err(RecvTimeoutError::Timeout) => {
+                bail!("swarm join stalled at {joined}/{} clients", cfg.clients)
+            }
+            Err(RecvTimeoutError::Disconnected) => bail!("all swarm shard loops exited"),
+        }
+    }
+
+    // -- rounds: go-barrier-collect, folding every payload word
+    let mut checksum = 0u64;
+    let mut bytes_received = 0u64;
+    for r in 0..cfg.rounds {
+        for c in 0..cfg.clients {
+            shards.send_frame(c, Frame::Msg { bytes: r.to_le_bytes().to_vec() });
+        }
+        shards.wake();
+        let mut got = 0usize;
+        while got < cfg.clients {
+            let f = match evt_rx.recv_timeout(PHASE_TIMEOUT) {
+                Ok(LoopEvt::Frame { frame, .. }) => frame,
+                Ok(LoopEvt::Joined { client, .. }) => bail!("client {client} connected twice"),
+                Ok(LoopEvt::Gone { why, .. }) => bail!("swarm client vanished mid-round: {why}"),
+                Ok(LoopEvt::Fatal(e)) => return Err(e),
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("swarm round {r} stalled at {got}/{} payloads", cfg.clients)
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("all swarm shard loops exited"),
+            };
+            let Frame::Msg { bytes } = f else { bail!("expected payload, got {f:?}") };
+            if bytes.len() != 6 + cfg.payload_words * 8 {
+                bail!("payload size {} unexpected", bytes.len());
+            }
+            let round = u32::from_le_bytes([bytes[2], bytes[3], bytes[4], bytes[5]]);
+            if round != r {
+                bail!("payload for round {round} during round {r}");
+            }
+            for w in bytes[6..].chunks_exact(8) {
+                checksum = checksum
+                    .wrapping_add(u64::from_le_bytes(w.try_into().expect("exact 8-byte chunk")));
+            }
+            bytes_received += bytes.len() as u64;
+            got += 1;
+        }
+    }
+    Ok((bytes_received, checksum))
+}
+
 /// Localhost connects can transiently fail while thousands of sockets
 /// churn; retry with backoff before giving up.
 fn connect_with_retry(addr: &str) -> Result<TcpStream> {
@@ -586,6 +755,7 @@ mod tests {
             rounds: 2,
             payload_words: 3,
             client_threads: 1,
+            server_threads: 1,
             poller: PollerKind::PollFallback,
         };
         let mut fold = 0u64;
@@ -621,6 +791,7 @@ mod tests {
             rounds: 2,
             payload_words: 8,
             client_threads: 2,
+            server_threads: 1,
             poller: PollerKind::PollFallback,
         };
         let report = run(&cfg).unwrap();
@@ -633,5 +804,29 @@ mod tests {
         );
         assert_eq!(report.poller, "poll");
         assert!(report.peak_conn_buffered_bytes > 0, "queue depths were metered");
+    }
+
+    /// The same swarm with the sockets sharded across 3 server loops:
+    /// every frame still accounted for, the checksum identical, and the
+    /// connection peak still the full federation (the acceptor meters
+    /// it — loops only see their ~n/K share).
+    #[test]
+    fn small_swarm_sharded_server_matches_single_loop() {
+        let mk = |server_threads| SwarmCfg {
+            clients: 24,
+            rounds: 2,
+            payload_words: 8,
+            client_threads: 2,
+            server_threads,
+            poller: PollerKind::PollFallback,
+        };
+        let single = run(&mk(1)).unwrap();
+        let sharded = run(&mk(3)).unwrap();
+        assert!(sharded.verified(), "checksum mismatch: {sharded:?}");
+        assert_eq!(sharded.checksum, single.checksum, "K must not change the payload fold");
+        assert_eq!(sharded.bytes_received, single.bytes_received);
+        assert_eq!(sharded.peak_live_connections, 24, "driver meters the full peak at K>1");
+        assert_eq!(sharded.server_threads, 3, "report records the shard count");
+        assert!(sharded.peak_conn_buffered_bytes > 0, "loop queue depths max-merged in");
     }
 }

@@ -17,4 +17,4 @@ pub mod session;
 
 pub use dropout::{DropoutError, PartySession, RobustClientSession};
 pub use fixedpoint::FixedPoint;
-pub use session::{aggregate, setup_all, ClientSession, PublishedKeys};
+pub use session::{aggregate, mask_window_into, setup_all, ClientSession, PublishedKeys};

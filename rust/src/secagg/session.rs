@@ -178,21 +178,48 @@ impl ClientSession {
         offset: usize,
         w: &mut crate::net::wire::Writer,
     ) {
-        // group size in words; cut at absolute 256-word boundaries so
-        // the mask stream's grouped x4 interior stays block-aligned
-        const GROUP: usize = 256;
-        let mut scratch = [0u64; GROUP];
-        let mut done = 0;
-        while done < values.len() {
-            let abs = offset + done;
-            let n = (GROUP - abs % GROUP).min(values.len() - done);
-            for (s, v) in scratch[..n].iter_mut().zip(&values[done..done + n]) {
-                *s = self.fp.encode(*v);
-            }
-            stream.add_window(abs, &mut scratch[..n]);
-            w.u64s_raw(&scratch[..n]);
-            done += n;
+        mask_window_into(self.fp, stream, values, offset, w);
+    }
+
+    /// [`Self::mask_tensor`] expanded across an
+    /// [`ExpandPool`](prg::ExpandPool) (`--expand-workers` > 1): the
+    /// tensor is partitioned into disjoint sub-windows, each worker
+    /// fixed-point-encodes its slice and folds its window of the total
+    /// mask through its own clone of the seekable stream, and the
+    /// segments are stitched in offset order. Bit-identical to the
+    /// serial path: encoding is element-wise and the window-partition
+    /// property makes any partition reassemble the monolithic mask.
+    pub fn mask_tensor_pooled(
+        &self,
+        pool: &prg::ExpandPool,
+        values: &[f32],
+        round: u64,
+        tensor_tag: u32,
+    ) -> Vec<u64> {
+        let parts = prg::partition_window(0, values.len(), pool.workers());
+        if parts.len() <= 1 {
+            return self.mask_tensor(values, round, tensor_tag);
         }
+        let stream = self.total_mask_stream(round, tensor_tag);
+        let fp = self.fp;
+        let jobs: Vec<Box<dyn FnOnce() -> Vec<u64> + Send + 'static>> = parts
+            .iter()
+            .map(|&(off, len)| {
+                let s = stream.clone();
+                let vals = values[off..off + len].to_vec();
+                let f: Box<dyn FnOnce() -> Vec<u64> + Send + 'static> = Box::new(move || {
+                    let mut words = fp.encode_vec(&vals);
+                    s.add_window(off, &mut words);
+                    words
+                });
+                f
+            })
+            .collect();
+        let mut out = Vec::with_capacity(values.len());
+        for seg in pool.run(jobs) {
+            out.extend(seg);
+        }
+        out
     }
 
     /// Float-domain masking (SecurityMode::SecureFloat): pairwise ±f32
@@ -229,6 +256,36 @@ impl ClientSession {
             tensor_tag,
             len,
         )
+    }
+}
+
+/// The session-free body of [`ClientSession::mask_tensor_window_into`]:
+/// encode + mask one window in fixed-size stack groups straight into a
+/// wire buffer. Free-standing (parametrized by the [`FixedPoint`]
+/// codec) so an [`ExpandPool`](prg::ExpandPool) job — which cannot
+/// borrow the session across threads — runs the identical code path
+/// the serial sender runs.
+pub fn mask_window_into(
+    fp: FixedPoint,
+    stream: &prg::TotalMaskStream,
+    values: &[f32],
+    offset: usize,
+    w: &mut crate::net::wire::Writer,
+) {
+    // group size in words; cut at absolute 256-word boundaries so
+    // the mask stream's grouped x4 interior stays block-aligned
+    const GROUP: usize = 256;
+    let mut scratch = [0u64; GROUP];
+    let mut done = 0;
+    while done < values.len() {
+        let abs = offset + done;
+        let n = (GROUP - abs % GROUP).min(values.len() - done);
+        for (s, v) in scratch[..n].iter_mut().zip(&values[done..done + n]) {
+            *s = fp.encode(*v);
+        }
+        stream.add_window(abs, &mut scratch[..n]);
+        w.u64s_raw(&scratch[..n]);
+        done += n;
     }
 }
 
@@ -410,6 +467,25 @@ mod tests {
             let mut got = Writer::new();
             s.mask_tensor_window_into(&stream, &vals, offset, &mut got);
             assert_eq!(got.finish(), want.finish(), "offset={offset} len={len}");
+        }
+    }
+
+    #[test]
+    fn pooled_masking_matches_serial_across_worker_counts() {
+        // mask_tensor_pooled must be bit-identical to mask_tensor for
+        // any worker count and tensor length — including lengths that
+        // collapse to a single partition part
+        let mut rng = DetRng::from_seed(23);
+        let sessions = setup_all(4, 1, &mut rng);
+        let s = &sessions[2];
+        for workers in [1usize, 2, 5] {
+            let pool = crate::crypto::prg::ExpandPool::new(workers);
+            for len in [1usize, 31, 32, 67, 256, 1000] {
+                let vals: Vec<f32> = (0..len).map(|j| (j as f32) * 0.375 - 9.5).collect();
+                let serial = s.mask_tensor(&vals, 13, 1);
+                let pooled = s.mask_tensor_pooled(&pool, &vals, 13, 1);
+                assert_eq!(pooled, serial, "workers={workers} len={len}");
+            }
         }
     }
 

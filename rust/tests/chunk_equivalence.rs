@@ -182,6 +182,56 @@ fn agg_worker_sweep_bit_identical_across_transports() {
     }
 }
 
+/// Acceptance criterion (PR 8): pooled mask expansion is invisible in
+/// every report bit. Sweep `--expand-workers` — the inline path, a
+/// small pool, and more workers than windows are wide — against the
+/// serial baseline and each other, monolithic *and* chunked, on the
+/// simulator and the threaded transport. The window-partition property
+/// (any partition of a tensor window wrap-adds to the monolithic mask)
+/// is what makes the stitched sub-windows bit-identical; this proves
+/// the wiring — client sessions and the aggregator's dropout
+/// correction both route through the pool.
+#[test]
+fn expand_worker_sweep_bit_identical_across_transports() {
+    let serial = run_experiment(secure_cfg(TransportKind::Sim), None).unwrap();
+    let mut reference: Option<RunReport> = None;
+    for workers in [1usize, 2, 5] {
+        for chunked in [false, true] {
+            for transport in [TransportKind::Sim, TransportKind::Threaded] {
+                let mut c = secure_cfg(transport);
+                if chunked {
+                    c = with_chunks(c);
+                }
+                c.expand_workers = workers;
+                let what = format!("expand_workers={workers} chunked={chunked} {transport:?}");
+                let run = run_experiment(c, None).unwrap();
+                assert_reports_identical(&serial, &run, &format!("{what} vs serial"));
+                if !chunked {
+                    // monolithic runs also keep Table-2 byte-identical to
+                    // the serial baseline (chunked runs differ by the
+                    // documented header overheads, proven elsewhere)
+                    assert_table2_identical(&serial.net, &run.net);
+                }
+                match &reference {
+                    None => reference = Some(run),
+                    Some(r) => assert_reports_identical(r, &run, &what),
+                }
+            }
+        }
+    }
+    // the dropout-recovery path routes the aggregator's total-mask
+    // correction through the same pool — a crash run with a pooled
+    // aggregator must match the serial crash run bit for bit
+    let plan = FaultPlan::default().with(2, Fault::Crash { round: 0, after_sends: 2 });
+    let serial_crash =
+        run_experiment(dropout_cfg(3, Some(plan.clone()), TransportKind::Sim), None).unwrap();
+    let mut c = dropout_cfg(3, Some(plan), TransportKind::Sim);
+    c.expand_workers = 4;
+    let pooled_crash = run_experiment(c, None).unwrap();
+    assert_reports_identical(&serial_crash, &pooled_crash, "pooled dropout correction vs serial");
+    assert_table2_identical(&serial_crash.net, &pooled_crash.net);
+}
+
 /// The TCP leg of the acceptance criterion: a real socket run with the
 /// shard-parallel chunked pipeline produces the same losses and
 /// predictions as the simulated run of the identical schedule.

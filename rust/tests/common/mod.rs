@@ -14,8 +14,10 @@ use vfl::secagg::{setup_all, ClientSession};
 
 /// The standard small experiment: reference backend, 6 training rounds
 /// (crossing one K = 5 key-rotation boundary), one test round. Applies
-/// the `VFL_ROUNDS_IN_FLIGHT` and `VFL_TRANSPORT` CI axes (see
-/// [`apply_env_window`] / [`apply_env_transport`]).
+/// the `VFL_ROUNDS_IN_FLIGHT`, `VFL_TRANSPORT`, `VFL_EXPAND_WORKERS`,
+/// and `VFL_EVLOOP_THREADS` CI axes (see [`apply_env_window`] /
+/// [`apply_env_transport`] / [`apply_env_expand_workers`] /
+/// [`apply_env_evloop_threads`]).
 pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> RunConfig {
     let mut c = RunConfig::test(dataset).unwrap();
     c.security = mode;
@@ -23,7 +25,7 @@ pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> R
     c.transport = transport;
     c.train_rounds = 6;
     c.test_rounds = 1;
-    apply_env_transport(apply_env_window(c))
+    apply_env_evloop_threads(apply_env_expand_workers(apply_env_transport(apply_env_window(c))))
 }
 
 /// CI window-matrix hook: when `VFL_ROUNDS_IN_FLIGHT` is set, every
@@ -80,6 +82,43 @@ pub fn apply_env_workers(mut c: RunConfig) -> RunConfig {
                 .parse()
                 .unwrap_or_else(|e| panic!("bad VFL_AGG_WORKERS {w:?}: {e}"));
         }
+    }
+    c
+}
+
+/// CI expand-pool hook: when `VFL_EXPAND_WORKERS` is set, every
+/// fixture-built run expands its masks on that many pool workers, so
+/// the parallel expansion path is exercised by the same equivalence
+/// suites that prove the serial one (bit-identity makes the override
+/// invisible to every assertion). Unlike `VFL_AGG_WORKERS`, this
+/// applies to monolithic and chunked configs alike — mask expansion
+/// exists on both paths.
+pub fn apply_env_expand_workers(mut c: RunConfig) -> RunConfig {
+    if let Ok(w) = std::env::var("VFL_EXPAND_WORKERS") {
+        // a set-but-unparseable value must fail the suite, not
+        // silently run the serial path CI thinks it is NOT running
+        c.expand_workers = w
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("bad VFL_EXPAND_WORKERS {w:?}: {e}"));
+    }
+    c
+}
+
+/// CI evloop-shard hook: when `VFL_EVLOOP_THREADS` is set, every
+/// fixture-built run that ends up on the evloop transport shards its
+/// connections across that many poller threads. Inert on sim/threaded
+/// runs — the knob only reaches `EvloopTransport` — so it composes
+/// with `VFL_TRANSPORT=evloop` to turn the whole equivalence matrix
+/// into a sharded-loop proof.
+pub fn apply_env_evloop_threads(mut c: RunConfig) -> RunConfig {
+    if let Ok(k) = std::env::var("VFL_EVLOOP_THREADS") {
+        // a set-but-unparseable value must fail the suite, not
+        // silently run the single loop CI thinks it is NOT running
+        c.evloop_threads = k
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("bad VFL_EVLOOP_THREADS {k:?}: {e}"));
     }
     c
 }

@@ -53,12 +53,62 @@ fn evloop_transport_bit_identical_to_sim_with_connection_peaks() {
     assert_eq!(sim.metrics.peak_connections(AGGREGATOR), 0);
 }
 
+/// The sharded event loop (`--evloop-threads K`) is the single loop,
+/// bit for bit, at every K: same report, same Table-2 byte counters —
+/// and the connection peak still counts the whole federation, because
+/// the acceptor meters it while each loop only ever owns its ~n/K
+/// share (their queue-depth peaks max-merge in).
+#[test]
+fn evloop_thread_sweep_bit_identical_to_sim() {
+    let sim = run_experiment(
+        run_cfg("banking", SecurityMode::SecureExact, TransportKind::Sim),
+        None,
+    )
+    .unwrap();
+    for k in [1usize, 2, 4] {
+        let mut cfg = run_cfg("banking", SecurityMode::SecureExact, TransportKind::Evloop);
+        cfg.evloop_threads = k;
+        let n_clients = cfg.model.n_clients();
+        let ev = run_experiment(cfg, None).unwrap();
+        assert_reports_identical(&sim, &ev, &format!("evloop K={k} vs sim"));
+        assert_table2_identical(&sim.net, &ev.net);
+        assert_eq!(
+            ev.metrics.peak_connections(AGGREGATOR),
+            n_clients as u64,
+            "K={k}: the acceptor meters the full federation, not one shard's share"
+        );
+        assert!(
+            ev.metrics.peak_conn_buffered_bytes(AGGREGATOR) > 0,
+            "K={k}: per-loop queue depths were max-merged into the report"
+        );
+    }
+}
+
+/// The sharded swarm server receives the identical byte stream: same
+/// checksum and byte count as the single loop at every K, with the
+/// connection peak still the full client count.
+#[test]
+fn swarm_server_thread_sweep_preserves_every_frame() {
+    let single = swarm::run(&swarm_cfg(96)).unwrap();
+    assert!(single.verified());
+    for k in [2usize, 4] {
+        let mut cfg = swarm_cfg(96);
+        cfg.server_threads = k;
+        let sharded = swarm::run(&cfg).unwrap();
+        assert!(sharded.verified(), "K={k}: checksum mismatch");
+        assert_eq!(sharded.checksum, single.checksum, "K={k}: payload fold differs");
+        assert_eq!(sharded.bytes_received, single.bytes_received, "K={k}: bytes differ");
+        assert_eq!(sharded.peak_live_connections, 96, "K={k}: connection peak");
+    }
+}
+
 fn swarm_cfg(clients: usize) -> SwarmCfg {
     SwarmCfg {
         clients,
         rounds: 2,
         payload_words: 8,
         client_threads: 2,
+        server_threads: 1,
         // pin the portable backend: CI proves poll(2) end to end while
         // the swarm CLI/bench default exercises epoll on Linux
         poller: PollerKind::PollFallback,
