@@ -1,0 +1,98 @@
+"""vflint (tools/vflint/vflint.py) must gate the tree: exit 0 on the
+repo as committed, pass its fixture self-test, and actually fail when a
+violation is introduced.  Stdlib-only — the analyzer itself is the
+thing under test, and it must run in toolchain-free containers."""
+
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import unittest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+VFLINT = os.path.join(REPO, "tools", "vflint", "vflint.py")
+
+
+def run_vflint(*args):
+    return subprocess.run(
+        [sys.executable, VFLINT, *args],
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+
+
+class VflintGatesTheTree(unittest.TestCase):
+    def test_repo_tree_is_clean(self):
+        r = run_vflint()
+        self.assertEqual(r.returncode, 0, f"vflint found violations:\n{r.stdout}{r.stderr}")
+        self.assertIn("clean", r.stdout)
+
+    def test_self_test_passes(self):
+        r = run_vflint("--self-test")
+        self.assertEqual(r.returncode, 0, f"fixture self-test failed:\n{r.stdout}{r.stderr}")
+        self.assertIn("PASS", r.stdout)
+
+    def test_list_checks_names_all_seven(self):
+        r = run_vflint("--list-checks")
+        self.assertEqual(r.returncode, 0)
+        checks = r.stdout.split()
+        self.assertEqual(
+            checks,
+            [
+                "unsafe-audit",
+                "no-blocking-io",
+                "bounded-channels",
+                "env-registry",
+                "frame-encode-rule",
+                "panic-discipline",
+                "cfg-coverage",
+            ],
+        )
+
+    def test_detects_injected_violation(self):
+        # copy the tree's configs but plant a single bad file: an
+        # un-inventoried unsafe block must flip the exit code to 1
+        with tempfile.TemporaryDirectory() as root:
+            src = os.path.join(root, "rust", "src")
+            os.makedirs(src)
+            with open(os.path.join(src, "lib.rs"), "w") as f:
+                f.write("pub fn f(p: *const u64) -> u64 { unsafe { *p } }\n")
+            r = run_vflint("--root", root)
+            self.assertEqual(r.returncode, 1, f"expected failure, got:\n{r.stdout}")
+            self.assertIn("unsafe-audit", r.stdout)
+
+    def test_stale_allowlist_entry_fails(self):
+        # an allowlist entry that matches nothing is itself a finding —
+        # suppressions cannot silently outlive the code they excused
+        with tempfile.TemporaryDirectory() as root:
+            os.makedirs(os.path.join(root, "rust", "src"))
+            with open(os.path.join(root, "rust", "src", "lib.rs"), "w") as f:
+                f.write("pub fn ok() {}\n")
+            cfg = os.path.join(root, "tools", "vflint")
+            os.makedirs(cfg)
+            with open(os.path.join(cfg, "allowlist.txt"), "w") as f:
+                f.write("panic-discipline: rust/src/lib.rs: .unwrap() # gone\n")
+            r = run_vflint("--root", root)
+            self.assertEqual(r.returncode, 1, f"expected stale-entry failure, got:\n{r.stdout}")
+            self.assertIn("stale", r.stdout)
+
+    def test_fixture_corpus_covers_every_check(self):
+        fixtures = os.path.join(REPO, "tools", "vflint", "fixtures")
+        trees = {d for d in os.listdir(fixtures) if os.path.isdir(os.path.join(fixtures, d))}
+        for check in [
+            "unsafe-audit",
+            "no-blocking-io",
+            "bounded-channels",
+            "env-registry",
+            "frame-encode-rule",
+            "panic-discipline",
+            "cfg-coverage",
+        ]:
+            self.assertIn(check, trees, f"no fixture tree for {check}")
+        self.assertIn("clean", trees)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -317,67 +317,74 @@ mod avx2 {
     /// # Safety
     /// Caller must have verified AVX2 support at runtime (the
     /// `simd::active_isa` probe) before calling.
+    // vflint: scalar-ref = x4_blocks_portable
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn four_blocks(key: &[u32; 8], nonce: &[u32; 3], counter: u32) -> [u32; 64] {
-        macro_rules! splat {
-            ($w:expr) => {
-                _mm_set1_epi32($w as i32)
-            };
+        // SAFETY: every intrinsic below is AVX2/SSE2 register
+        // arithmetic or unaligned access into the owned `out` array;
+        // the caller guarantees the ISA is present.
+        unsafe {
+            macro_rules! splat {
+                ($w:expr) => {
+                    _mm_set1_epi32($w as i32)
+                };
+            }
+            // rotate-left via paired literal shifts: `32 - N` as a shift
+            // const would be a generic const expr (unstable on our 1.74
+            // floor), so both counts are spelled out at each call site
+            macro_rules! rotl {
+                ($v:expr, $l:literal, $r:literal) => {{
+                    let v = $v;
+                    _mm_or_si128(_mm_slli_epi32::<$l>(v), _mm_srli_epi32::<$r>(v))
+                }};
+            }
+            macro_rules! qr {
+                ($a:literal, $b:literal, $c:literal, $d:literal) => {
+                    x[$a] = _mm_add_epi32(x[$a], x[$b]);
+                    x[$d] = rotl!(_mm_xor_si128(x[$d], x[$a]), 16, 16);
+                    x[$c] = _mm_add_epi32(x[$c], x[$d]);
+                    x[$b] = rotl!(_mm_xor_si128(x[$b], x[$c]), 12, 20);
+                    x[$a] = _mm_add_epi32(x[$a], x[$b]);
+                    x[$d] = rotl!(_mm_xor_si128(x[$d], x[$a]), 8, 24);
+                    x[$c] = _mm_add_epi32(x[$c], x[$d]);
+                    x[$b] = rotl!(_mm_xor_si128(x[$b], x[$c]), 7, 25);
+                };
+            }
+            let init: [__m128i; 16] = [
+                splat!(0x61707865u32), splat!(0x3320646eu32),
+                splat!(0x79622d32u32), splat!(0x6b206574u32),
+                splat!(key[0]), splat!(key[1]), splat!(key[2]), splat!(key[3]),
+                splat!(key[4]), splat!(key[5]), splat!(key[6]), splat!(key[7]),
+                // _mm_set_epi32 is high-to-low: lane 0 (block `counter`)
+                // is the LAST argument
+                _mm_set_epi32(
+                    counter.wrapping_add(3) as i32,
+                    counter.wrapping_add(2) as i32,
+                    counter.wrapping_add(1) as i32,
+                    counter as i32,
+                ),
+                splat!(nonce[0]), splat!(nonce[1]), splat!(nonce[2]),
+            ];
+            let mut x = init;
+            for _ in 0..10 {
+                qr!(0, 4, 8, 12);
+                qr!(1, 5, 9, 13);
+                qr!(2, 6, 10, 14);
+                qr!(3, 7, 11, 15);
+                qr!(0, 5, 10, 15);
+                qr!(1, 6, 11, 12);
+                qr!(2, 7, 8, 13);
+                qr!(3, 4, 9, 14);
+            }
+            let mut out = [0u32; 64];
+            for i in 0..16 {
+                _mm_storeu_si128(
+                    out.as_mut_ptr().add(i * 4) as *mut __m128i,
+                    _mm_add_epi32(x[i], init[i]),
+                );
+            }
+            out
         }
-        // rotate-left via paired literal shifts: `32 - N` as a shift
-        // const would be a generic const expr (unstable on our 1.73
-        // floor), so both counts are spelled out at each call site
-        macro_rules! rotl {
-            ($v:expr, $l:literal, $r:literal) => {{
-                let v = $v;
-                _mm_or_si128(_mm_slli_epi32::<$l>(v), _mm_srli_epi32::<$r>(v))
-            }};
-        }
-        macro_rules! qr {
-            ($a:literal, $b:literal, $c:literal, $d:literal) => {
-                x[$a] = _mm_add_epi32(x[$a], x[$b]);
-                x[$d] = rotl!(_mm_xor_si128(x[$d], x[$a]), 16, 16);
-                x[$c] = _mm_add_epi32(x[$c], x[$d]);
-                x[$b] = rotl!(_mm_xor_si128(x[$b], x[$c]), 12, 20);
-                x[$a] = _mm_add_epi32(x[$a], x[$b]);
-                x[$d] = rotl!(_mm_xor_si128(x[$d], x[$a]), 8, 24);
-                x[$c] = _mm_add_epi32(x[$c], x[$d]);
-                x[$b] = rotl!(_mm_xor_si128(x[$b], x[$c]), 7, 25);
-            };
-        }
-        let init: [__m128i; 16] = [
-            splat!(0x61707865u32), splat!(0x3320646eu32), splat!(0x79622d32u32), splat!(0x6b206574u32),
-            splat!(key[0]), splat!(key[1]), splat!(key[2]), splat!(key[3]),
-            splat!(key[4]), splat!(key[5]), splat!(key[6]), splat!(key[7]),
-            // _mm_set_epi32 is high-to-low: lane 0 (block `counter`)
-            // is the LAST argument
-            _mm_set_epi32(
-                counter.wrapping_add(3) as i32,
-                counter.wrapping_add(2) as i32,
-                counter.wrapping_add(1) as i32,
-                counter as i32,
-            ),
-            splat!(nonce[0]), splat!(nonce[1]), splat!(nonce[2]),
-        ];
-        let mut x = init;
-        for _ in 0..10 {
-            qr!(0, 4, 8, 12);
-            qr!(1, 5, 9, 13);
-            qr!(2, 6, 10, 14);
-            qr!(3, 7, 11, 15);
-            qr!(0, 5, 10, 15);
-            qr!(1, 6, 11, 12);
-            qr!(2, 7, 8, 13);
-            qr!(3, 4, 9, 14);
-        }
-        let mut out = [0u32; 64];
-        for i in 0..16 {
-            _mm_storeu_si128(
-                out.as_mut_ptr().add(i * 4) as *mut __m128i,
-                _mm_add_epi32(x[i], init[i]),
-            );
-        }
-        out
     }
 }
 
@@ -390,57 +397,68 @@ mod neon {
     /// # Safety
     /// Caller must have verified NEON support at runtime (the
     /// `simd::active_isa` probe) before calling.
+    // vflint: scalar-ref = x4_blocks_portable
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn four_blocks(key: &[u32; 8], nonce: &[u32; 3], counter: u32) -> [u32; 64] {
-        macro_rules! splat {
-            ($w:expr) => {
-                vdupq_n_u32($w)
-            };
+        // SAFETY: every intrinsic below is NEON register arithmetic or
+        // unaligned access into the owned `ctr`/`out` arrays; the
+        // caller guarantees the ISA is present.
+        unsafe {
+            macro_rules! splat {
+                ($w:expr) => {
+                    vdupq_n_u32($w)
+                };
+            }
+            macro_rules! rotl {
+                ($v:expr, $l:literal, $r:literal) => {{
+                    let v = $v;
+                    vorrq_u32(vshlq_n_u32::<$l>(v), vshrq_n_u32::<$r>(v))
+                }};
+            }
+            macro_rules! qr {
+                ($a:literal, $b:literal, $c:literal, $d:literal) => {
+                    x[$a] = vaddq_u32(x[$a], x[$b]);
+                    x[$d] = rotl!(veorq_u32(x[$d], x[$a]), 16, 16);
+                    x[$c] = vaddq_u32(x[$c], x[$d]);
+                    x[$b] = rotl!(veorq_u32(x[$b], x[$c]), 12, 20);
+                    x[$a] = vaddq_u32(x[$a], x[$b]);
+                    x[$d] = rotl!(veorq_u32(x[$d], x[$a]), 8, 24);
+                    x[$c] = vaddq_u32(x[$c], x[$d]);
+                    x[$b] = rotl!(veorq_u32(x[$b], x[$c]), 7, 25);
+                };
+            }
+            // vld1q_u32 loads lane 0 from the lowest address
+            let ctr = [
+                counter,
+                counter.wrapping_add(1),
+                counter.wrapping_add(2),
+                counter.wrapping_add(3),
+            ];
+            let init: [uint32x4_t; 16] = [
+                splat!(0x61707865u32), splat!(0x3320646eu32),
+                splat!(0x79622d32u32), splat!(0x6b206574u32),
+                splat!(key[0]), splat!(key[1]), splat!(key[2]), splat!(key[3]),
+                splat!(key[4]), splat!(key[5]), splat!(key[6]), splat!(key[7]),
+                vld1q_u32(ctr.as_ptr()),
+                splat!(nonce[0]), splat!(nonce[1]), splat!(nonce[2]),
+            ];
+            let mut x = init;
+            for _ in 0..10 {
+                qr!(0, 4, 8, 12);
+                qr!(1, 5, 9, 13);
+                qr!(2, 6, 10, 14);
+                qr!(3, 7, 11, 15);
+                qr!(0, 5, 10, 15);
+                qr!(1, 6, 11, 12);
+                qr!(2, 7, 8, 13);
+                qr!(3, 4, 9, 14);
+            }
+            let mut out = [0u32; 64];
+            for i in 0..16 {
+                vst1q_u32(out.as_mut_ptr().add(i * 4), vaddq_u32(x[i], init[i]));
+            }
+            out
         }
-        macro_rules! rotl {
-            ($v:expr, $l:literal, $r:literal) => {{
-                let v = $v;
-                vorrq_u32(vshlq_n_u32::<$l>(v), vshrq_n_u32::<$r>(v))
-            }};
-        }
-        macro_rules! qr {
-            ($a:literal, $b:literal, $c:literal, $d:literal) => {
-                x[$a] = vaddq_u32(x[$a], x[$b]);
-                x[$d] = rotl!(veorq_u32(x[$d], x[$a]), 16, 16);
-                x[$c] = vaddq_u32(x[$c], x[$d]);
-                x[$b] = rotl!(veorq_u32(x[$b], x[$c]), 12, 20);
-                x[$a] = vaddq_u32(x[$a], x[$b]);
-                x[$d] = rotl!(veorq_u32(x[$d], x[$a]), 8, 24);
-                x[$c] = vaddq_u32(x[$c], x[$d]);
-                x[$b] = rotl!(veorq_u32(x[$b], x[$c]), 7, 25);
-            };
-        }
-        // vld1q_u32 loads lane 0 from the lowest address
-        let ctr =
-            [counter, counter.wrapping_add(1), counter.wrapping_add(2), counter.wrapping_add(3)];
-        let init: [uint32x4_t; 16] = [
-            splat!(0x61707865u32), splat!(0x3320646eu32), splat!(0x79622d32u32), splat!(0x6b206574u32),
-            splat!(key[0]), splat!(key[1]), splat!(key[2]), splat!(key[3]),
-            splat!(key[4]), splat!(key[5]), splat!(key[6]), splat!(key[7]),
-            vld1q_u32(ctr.as_ptr()),
-            splat!(nonce[0]), splat!(nonce[1]), splat!(nonce[2]),
-        ];
-        let mut x = init;
-        for _ in 0..10 {
-            qr!(0, 4, 8, 12);
-            qr!(1, 5, 9, 13);
-            qr!(2, 6, 10, 14);
-            qr!(3, 7, 11, 15);
-            qr!(0, 5, 10, 15);
-            qr!(1, 6, 11, 12);
-            qr!(2, 7, 8, 13);
-            qr!(3, 4, 9, 14);
-        }
-        let mut out = [0u32; 64];
-        for i in 0..16 {
-            vst1q_u32(out.as_mut_ptr().add(i * 4), vaddq_u32(x[i], init[i]));
-        }
-        out
     }
 }
 

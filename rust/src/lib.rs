@@ -208,6 +208,45 @@
 //! bit-invisibility claim is continuously enforced, not just
 //! documented.
 //!
+//! ## Enforced invariants (tools/vflint)
+//!
+//! The safety properties above are machine-checked, not just
+//! documented: `tools/vflint/vflint.py` is a zero-dependency static
+//! analyzer that runs as the first step of every CI job (and in
+//! toolchain-free authoring containers) and fails the build on any
+//! unallowlisted violation. Check ↔ invariant:
+//!
+//! * **`unsafe-audit`** — every `unsafe` site carries a `// SAFETY:`
+//!   justification and an entry in the reviewed
+//!   `tools/vflint/unsafe_inventory.txt`; unsafe code cannot appear
+//!   without review.
+//! * **`no-blocking-io`** — no `write_all`/`read_exact`/
+//!   `set_nonblocking(false)` in [`net::evloop`]: poller threads never
+//!   block on a socket (the invariant behind the C10K claim and the
+//!   old TCP write-deadlock fix).
+//! * **`bounded-channels`** — hot-path channels are `sync_channel`
+//!   (bounded, backpressure); the deliberately-unbounded `LoopEvt`
+//!   funnels are allowlisted with their justification.
+//! * **`env-registry`** — every `VFL_*` knob is declared in
+//!   `tools/vflint/env_registry.txt`, and every declared CI axis is
+//!   actually exercised by `.github/workflows/ci.yml` — the
+//!   bit-invisibility matrix cannot silently lose a leg.
+//! * **`frame-encode-rule`** — the tag constants and 22/19-byte chunk
+//!   headers are cross-checked between the `begin_*_chunk` builders,
+//!   `Msg::encode_into`/`encoded_len`, `decode`, and the Table-2
+//!   accounting constants, so the zero-copy path cannot silently
+//!   diverge from `Msg::encode()`.
+//! * **`panic-discipline`** — no `unwrap()`/`expect(` in non-test
+//!   `net/`, `coordinator/`, `secagg/` code except allowlisted sites
+//!   with a stated reason; protocol failures surface as typed errors.
+//! * **`cfg-coverage`** — every `#[target_feature]` intrinsic names
+//!   its scalar reference (`// vflint: scalar-ref = …`) and both are
+//!   exercised by a bit-identity test in the same file.
+//!
+//! The compile-time half lives in `rust/Cargo.toml` `[lints]`
+//! (`unsafe_op_in_unsafe_fn = "deny"`, `undocumented_unsafe_blocks`)
+//! plus gated CI jobs for Miri and the thread/address sanitizers.
+//!
 //! Everything the paper depends on is implemented from scratch in this
 //! crate: the crypto stack ([`crypto`]), the secure-aggregation core
 //! ([`secagg`]), the dataset substrate ([`data`]), the model substrate

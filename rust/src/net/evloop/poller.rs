@@ -196,6 +196,8 @@ pub mod epoll {
 
     impl Epoll {
         pub fn new() -> io::Result<Epoll> {
+            // SAFETY: plain FFI call with no pointer arguments; the
+            // returned fd is validated (< 0 => errno) before use.
             let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if epfd < 0 {
                 return Err(io::Error::last_os_error());
@@ -217,6 +219,8 @@ pub mod epoll {
         pub fn ctl(&mut self, op: i32, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
             let mut ev = EpollEvent { events: Self::mask(interest), data: token as u64 };
             let ep = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            // SAFETY: `ep` is either null (DEL, where the kernel ignores
+            // it) or points at `ev`, which outlives the call.
             let rc = unsafe { epoll_ctl(self.epfd, op, fd, ep) };
             if rc < 0 {
                 return Err(io::Error::last_os_error());
@@ -227,6 +231,8 @@ pub mod epoll {
         pub fn wait(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
             let ms = timeout_ms(timeout);
             loop {
+                // SAFETY: the kernel writes at most `buf.len()` events
+                // into the live, exclusively-borrowed `self.buf`.
                 let n = unsafe {
                     epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, ms)
                 };
@@ -256,6 +262,8 @@ pub mod epoll {
 
     impl Drop for Epoll {
         fn drop(&mut self) {
+            // SAFETY: `epfd` was returned by `epoll_create1`, is owned
+            // exclusively by this struct, and is closed exactly once.
             unsafe { close(self.epfd) };
         }
     }
@@ -328,6 +336,8 @@ impl PollVec {
             .collect();
         let ms = timeout_ms(timeout);
         loop {
+            // SAFETY: `fds` is a live Vec of `#[repr(C)]` PollFd; the
+            // kernel reads/writes exactly `fds.len()` entries.
             let n = unsafe {
                 sys_poll::poll(fds.as_mut_ptr(), fds.len() as sys_poll::NfdsT, ms)
             };

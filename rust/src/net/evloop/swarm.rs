@@ -183,6 +183,9 @@ mod os {
             fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
             fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
         }
+        // SAFETY: both calls take pointers to the stack-owned
+        // `#[repr(C)]` Rlimit structs above, which outlive the calls;
+        // return codes are checked before any value is trusted.
         unsafe {
             let mut r = Rlimit { cur: 0, max: 0 };
             if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {

@@ -40,6 +40,8 @@ pub struct Engine {
 // shared-engine party sets, so the lock is a backstop, not a hot-path
 // serializer.)
 unsafe impl Send for Engine {}
+// SAFETY: see the Send/Sync argument above — shared access is
+// serialized by `ffi_lock`.
 unsafe impl Sync for Engine {}
 
 impl Engine {

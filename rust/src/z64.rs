@@ -93,17 +93,22 @@ mod avx2 {
     /// # Safety
     /// Caller must have verified AVX2 support at runtime. `dst` and
     /// `src` must have equal length (checked by the public wrappers).
+    // vflint: scalar-ref = wrap_add_portable
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn wrap_add(dst: &mut [u64], src: &[u64]) {
         let n4 = dst.len() & !3;
         let d = dst.as_mut_ptr();
         let s = src.as_ptr();
         let mut i = 0;
-        while i < n4 {
-            let dv = _mm256_loadu_si256(d.add(i) as *const __m256i);
-            let sv = _mm256_loadu_si256(s.add(i) as *const __m256i);
-            _mm256_storeu_si256(d.add(i) as *mut __m256i, _mm256_add_epi64(dv, sv));
-            i += 4;
+        // SAFETY: caller guarantees AVX2; the unaligned loads/stores
+        // cover words `[0, n4)` of two live, equal-length slices.
+        unsafe {
+            while i < n4 {
+                let dv = _mm256_loadu_si256(d.add(i) as *const __m256i);
+                let sv = _mm256_loadu_si256(s.add(i) as *const __m256i);
+                _mm256_storeu_si256(d.add(i) as *mut __m256i, _mm256_add_epi64(dv, sv));
+                i += 4;
+            }
         }
         for j in n4..dst.len() {
             dst[j] = dst[j].wrapping_add(src[j]);
@@ -112,17 +117,22 @@ mod avx2 {
 
     /// # Safety
     /// Same contract as [`wrap_add`].
+    // vflint: scalar-ref = wrap_sub_portable
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn wrap_sub(dst: &mut [u64], src: &[u64]) {
         let n4 = dst.len() & !3;
         let d = dst.as_mut_ptr();
         let s = src.as_ptr();
         let mut i = 0;
-        while i < n4 {
-            let dv = _mm256_loadu_si256(d.add(i) as *const __m256i);
-            let sv = _mm256_loadu_si256(s.add(i) as *const __m256i);
-            _mm256_storeu_si256(d.add(i) as *mut __m256i, _mm256_sub_epi64(dv, sv));
-            i += 4;
+        // SAFETY: caller guarantees AVX2; the unaligned loads/stores
+        // cover words `[0, n4)` of two live, equal-length slices.
+        unsafe {
+            while i < n4 {
+                let dv = _mm256_loadu_si256(d.add(i) as *const __m256i);
+                let sv = _mm256_loadu_si256(s.add(i) as *const __m256i);
+                _mm256_storeu_si256(d.add(i) as *mut __m256i, _mm256_sub_epi64(dv, sv));
+                i += 4;
+            }
         }
         for j in n4..dst.len() {
             dst[j] = dst[j].wrapping_sub(src[j]);

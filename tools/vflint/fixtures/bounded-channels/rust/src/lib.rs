@@ -1,0 +1,8 @@
+//! Fixture: an unallowlisted unbounded `mpsc::channel()` in non-test
+//! code — must trigger `bounded-channels` and nothing else.
+
+pub fn spawn_pipeline() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    tx.send(1u64).ok();
+    drop(rx);
+}

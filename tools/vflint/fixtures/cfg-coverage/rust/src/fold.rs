@@ -1,0 +1,22 @@
+//! Fixture: a `#[target_feature]` intrinsic fn with no
+//! `// vflint: scalar-ref = <fn>` annotation — must trigger
+//! `cfg-coverage` and nothing else (the unsafe site itself is
+//! SAFETY-commented and inventoried).
+
+pub fn fold(dst: &mut [u64]) {
+    for v in dst.iter_mut() {
+        *v = v.wrapping_add(1);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    /// # Safety
+    /// SAFETY: caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fold(dst: &mut [u64]) {
+        for v in dst.iter_mut() {
+            *v = v.wrapping_add(1);
+        }
+    }
+}

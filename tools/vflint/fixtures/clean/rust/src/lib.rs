@@ -1,0 +1,15 @@
+//! Fixture: violates nothing — the self-test's zero-findings control.
+
+pub fn wrap_sum(words: &[u64]) -> u64 {
+    words.iter().fold(0u64, |a, &w| a.wrapping_add(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_wraps() {
+        assert_eq!(wrap_sum(&[u64::MAX, 1]), 0);
+    }
+}

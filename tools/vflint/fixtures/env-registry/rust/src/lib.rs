@@ -1,0 +1,6 @@
+//! Fixture: a `VFL_*` env var that is not declared in the registry —
+//! must trigger `env-registry` and nothing else.
+
+pub fn knob() -> bool {
+    std::env::var("VFL_UNREGISTERED_KNOB").is_ok()
+}

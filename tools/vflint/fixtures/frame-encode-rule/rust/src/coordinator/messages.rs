@@ -1,0 +1,82 @@
+//! Fixture: `encoded_len`'s GradientChunk arm forgets the u32
+//! word-count prefix (15 B vs the builder's 19 B header) — must
+//! trigger `frame-encode-rule` and nothing else.
+
+const T_MASKED_CHUNK: u8 = 22;
+const T_GRADIENT_CHUNK: u8 = 23;
+
+pub fn begin_masked_chunk(
+    w: &mut Writer,
+    round: u32,
+    from: u16,
+    tag: u8,
+    shard: u16,
+    offset: u32,
+    total: u32,
+    count: u32,
+) {
+    w.u8(T_MASKED_CHUNK);
+    w.u32(round);
+    w.u16(from);
+    w.u8(tag);
+    w.u16(shard);
+    w.u32(offset);
+    w.u32(total);
+    w.u32(count);
+}
+
+pub fn begin_gradient_chunk(
+    w: &mut Writer,
+    round: u32,
+    shard: u16,
+    offset: u32,
+    total: u32,
+    count: u32,
+) {
+    w.u8(T_GRADIENT_CHUNK);
+    w.u32(round);
+    w.u16(shard);
+    w.u32(offset);
+    w.u32(total);
+    w.u32(count);
+}
+
+impl Msg {
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Msg::MaskedChunk { words, .. } => 1 + 4 + 2 + 1 + 2 + 4 + 4 + 4 + 8 * words.len(),
+            Msg::GradientChunk { words, .. } => 1 + 4 + 2 + 4 + 4 + 8 * words.len(),
+        }
+    }
+
+    pub fn encode_into(&self, w: &mut Writer) {
+        match self {
+            Msg::MaskedChunk { round, from, tag, shard, offset, total, words } => {
+                w.u8(T_MASKED_CHUNK);
+                w.u32(*round);
+                w.u16(*from);
+                w.u8(*tag);
+                w.u16(*shard);
+                w.u32(*offset);
+                w.u32(*total);
+                w.u64s(words);
+            }
+            Msg::GradientChunk { round, shard, offset, total, words } => {
+                w.u8(T_GRADIENT_CHUNK);
+                w.u32(*round);
+                w.u16(*shard);
+                w.u32(*offset);
+                w.u32(*total);
+                w.u64s(words);
+            }
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Option<Msg> {
+        match r.u8() {
+            T_MASKED_CHUNK => None,
+            T_GRADIENT_CHUNK => None,
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Fixture: a blocking write inside `net/evloop/` non-test code —
+//! must trigger `no-blocking-io` and nothing else.
+
+use std::io::Write;
+use std::net::TcpStream;
+
+pub fn send_frame(sock: &mut TcpStream, frame: &[u8]) -> std::io::Result<()> {
+    sock.write_all(frame)
+}

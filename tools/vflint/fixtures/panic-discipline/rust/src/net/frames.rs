@@ -1,0 +1,15 @@
+//! Fixture: an unallowlisted `unwrap()` in non-test `net/` code —
+//! must trigger `panic-discipline` and nothing else.
+
+pub fn header_word(frame: &[u8]) -> u64 {
+    u64::from_le_bytes(frame.get(..8).map(|s| s.try_into().ok()).flatten().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_exempt() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: an unsafe site with no SAFETY comment and no inventory
+//! entry — must trigger `unsafe-audit` (twice) and nothing else.
+
+pub fn first_word(v: &[u64]) -> u64 {
+    unsafe { *v.as_ptr() }
+}

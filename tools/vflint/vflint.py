@@ -1,0 +1,1103 @@
+#!/usr/bin/env python3
+"""vflint — toolchain-free invariant analyzer for the vfl secure-aggregation stack.
+
+Every safety property this reproduction rests on (exact pairwise-mask
+cancellation, the frame-encode rule, the evloop no-blocking-write
+invariant, the bit-invisibility contract of the thread families) lives
+in doc comments and builder discipline.  No Rust toolchain has ever
+been present in the authoring containers, so nothing machine-checks
+them.  This analyzer does: it is hand-rolled, stdlib-only Python 3
+(no rustc, no pip), parses ``rust/src/**``, ``rust/tests/**``,
+``rust/benches/**`` and ``.github/workflows/ci.yml`` with a small
+brace/comment/string-aware line scanner, and enforces seven named
+checks, each with a per-check allowlist:
+
+  unsafe-audit       every `unsafe` site carries a SAFETY justification
+                     (``// SAFETY:`` comment or ``# Safety`` doc
+                     section) AND appears in the reviewed
+                     ``unsafe_inventory.txt``; stale inventory entries
+                     fail too.
+  no-blocking-io     ``write_all`` / ``read_exact`` /
+                     ``set_nonblocking(false)`` are forbidden in
+                     non-test ``net/evloop/`` code — the event loop
+                     must never block on a socket.
+  bounded-channels   unbounded ``mpsc::channel()`` is forbidden in
+                     non-test ``rust/src`` code (``sync_channel`` only);
+                     deliberately-unbounded funnels (the ``LoopEvt``
+                     event channel) must be allowlisted with a
+                     justification.
+  env-registry       every ``VFL_*`` literal in the Rust tree must be
+                     declared in ``env_registry.txt``; every ``ci``-tier
+                     entry must be exercised by ``ci.yml``; drift in any
+                     direction fails (unknown var, stale entry,
+                     unregistered var in CI).
+  frame-encode-rule  the message tag constants and the 22/19-byte chunk
+                     header widths are cross-checked between
+                     ``Msg::encode_into``, ``Msg::encoded_len``, the
+                     ``begin_*_chunk`` zero-copy builders, ``decode``,
+                     and the Table-2 accounting constants in
+                     ``coordinator/streaming.rs`` — the zero-copy path
+                     cannot silently diverge from ``Msg::encode()``.
+  panic-discipline   ``unwrap()`` / ``expect(`` are forbidden in
+                     non-test ``net/``, ``coordinator/``, ``secagg/``
+                     code except allowlisted sites with a stated reason.
+  cfg-coverage       every ``#[target_feature]`` intrinsic fn must name
+                     its scalar reference implementation
+                     (``// vflint: scalar-ref = <fn>`` — defined in the
+                     same file outside arch-gated code) and both must be
+                     referenced by a ``#[cfg(test)]`` bit-identity test
+                     in the same file.
+
+Exit status: 0 when every check is clean (allowlisted findings are
+reported as suppressed counts only), 1 when any unallowlisted finding
+or stale allowlist/inventory/registry entry remains, 2 on usage error.
+
+``--self-test`` runs the analyzer over the fixture corpus in
+``fixtures/`` (each fixture tree violates exactly one check) and exits
+non-zero unless every fixture triggers exactly its intended check and
+the ``clean`` tree triggers none.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from dataclasses import dataclass, field
+
+TOOL_DIR = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_ROOT = os.path.dirname(os.path.dirname(TOOL_DIR))
+
+ALLOWLIST = "allowlist.txt"
+INVENTORY = "unsafe_inventory.txt"
+ENV_REGISTRY = "env_registry.txt"
+CI_YML = os.path.join(".github", "workflows", "ci.yml")
+
+CHECKS = [
+    "unsafe-audit",
+    "no-blocking-io",
+    "bounded-channels",
+    "env-registry",
+    "frame-encode-rule",
+    "panic-discipline",
+    "cfg-coverage",
+]
+
+# ---------------------------------------------------------------------------
+# Rust source scanner: comment/string stripping + test/arch span detection
+# ---------------------------------------------------------------------------
+
+
+def strip_rust(text):
+    """Return (code, code_str) line lists aligned with the input lines.
+
+    ``code``     — comments stripped AND string/char literal contents
+                   blanked (delimiters kept), for keyword/structure
+                   matching without literal false-positives.
+    ``code_str`` — comments stripped, string contents kept, for
+                   scanning literals such as env-var names.
+    Handles line comments, nested block comments, string escapes, raw
+    strings (``r#"..."#``), byte strings, and char literals (vs
+    lifetimes).  Newlines are preserved so line numbers stay aligned.
+    """
+    code = []
+    code_str = []
+    i = 0
+    n = len(text)
+    NORMAL, LINE_COMMENT, BLOCK_COMMENT, STRING, RAW_STRING, CHAR = range(6)
+    state = NORMAL
+    depth = 0  # nested block comments
+    raw_hashes = 0
+    out_c = []  # current code line
+    out_s = []  # current code_str line
+    while i < n:
+        ch = text[i]
+        if ch == "\n":
+            code.append("".join(out_c))
+            code_str.append("".join(out_s))
+            out_c, out_s = [], []
+            if state == LINE_COMMENT:
+                state = NORMAL
+            i += 1
+            continue
+        if state == NORMAL:
+            two = text[i : i + 2]
+            if two == "//":
+                state = LINE_COMMENT
+                i += 2
+                continue
+            if two == "/*":
+                state = BLOCK_COMMENT
+                depth = 1
+                i += 2
+                continue
+            if ch == '"':
+                out_c.append('"')
+                out_s.append('"')
+                state = STRING
+                i += 1
+                continue
+            # raw / byte string openers: r", r#", br", b"
+            m = re.match(r'(?:b?r)(#*)"', text[i:])
+            if m and ch in "rb":
+                # make sure this is not part of an identifier (e.g. `var"`)
+                if i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_"):
+                    raw_hashes = len(m.group(1))
+                    out_c.append(text[i : i + m.end()])
+                    out_s.append(text[i : i + m.end()])
+                    i += m.end()
+                    state = RAW_STRING
+                    continue
+            if ch == "b" and text[i : i + 2] == 'b"':
+                out_c.append('b"')
+                out_s.append('b"')
+                state = STRING
+                i += 2
+                continue
+            if ch == "'":
+                # char literal iff it closes within a couple chars;
+                # otherwise it is a lifetime tick
+                m = re.match(r"'(\\.[^']*|[^'\\])'", text[i:])
+                if m:
+                    out_c.append("' '" if len(m.group(0)) > 2 else "''")
+                    out_s.append(text[i : i + m.end()])
+                    i += m.end()
+                    continue
+                out_c.append("'")
+                out_s.append("'")
+                i += 1
+                continue
+            out_c.append(ch)
+            out_s.append(ch)
+            i += 1
+            continue
+        if state == LINE_COMMENT:
+            i += 1
+            continue
+        if state == BLOCK_COMMENT:
+            two = text[i : i + 2]
+            if two == "/*":
+                depth += 1
+                i += 2
+                continue
+            if two == "*/":
+                depth -= 1
+                i += 2
+                if depth == 0:
+                    state = NORMAL
+                continue
+            i += 1
+            continue
+        if state == STRING:
+            if ch == "\\":
+                # `\` + newline is a string continuation: keep the line
+                # break so numbering stays aligned
+                if text[i + 1 : i + 2] == "\n":
+                    code.append("".join(out_c))
+                    code_str.append("".join(out_s))
+                    out_c, out_s = [], []
+                else:
+                    out_s.append(text[i : i + 2])
+                i += 2
+                continue
+            if ch == '"':
+                out_c.append('"')
+                out_s.append('"')
+                state = NORMAL
+                i += 1
+                continue
+            out_s.append(ch)
+            i += 1
+            continue
+        if state == RAW_STRING:
+            closer = '"' + "#" * raw_hashes
+            if text[i : i + len(closer)] == closer:
+                out_c.append(closer)
+                out_s.append(closer)
+                i += len(closer)
+                state = NORMAL
+                continue
+            out_s.append(ch)
+            i += 1
+            continue
+        if state == CHAR:  # pragma: no cover — folded into NORMAL above
+            i += 1
+    code.append("".join(out_c))
+    code_str.append("".join(out_s))
+    return code, code_str
+
+
+def item_span(code, start):
+    """Brace span (start_line, end_line) of the item whose header begins
+    at 0-based line ``start``: scans forward to the first ``{`` then to
+    its matching close.  Returns (start, start) for brace-less items
+    (``;``-terminated) so callers can treat them as one-liners."""
+    i = start
+    depth = 0
+    opened = False
+    while i < len(code):
+        line = code[i]
+        if not opened and ";" in line.split("{")[0] and "{" not in line:
+            return (start, i)
+        for ch in line:
+            if ch == "{":
+                depth += 1
+                opened = True
+            elif ch == "}":
+                depth -= 1
+                if opened and depth == 0:
+                    return (start, i)
+        i += 1
+    return (start, len(code) - 1)
+
+
+ATTR_RE = re.compile(r"\s*#!?\[")
+COMMENT_RE = re.compile(r"\s*(//|/\*|\*)")
+
+
+@dataclass
+class SourceFile:
+    path: str  # repo-relative, forward slashes
+    raw: list
+    code: list
+    code_str: list
+    test_spans: list = field(default_factory=list)
+    arch_spans: list = field(default_factory=list)
+
+    @classmethod
+    def load(cls, root, relpath):
+        with open(os.path.join(root, relpath), encoding="utf-8") as f:
+            text = f.read()
+        raw = text.split("\n")
+        code, code_str = strip_rust(text)
+        assert len(code) == len(raw), f"scanner lost line alignment in {relpath}"
+        sf = cls(relpath.replace(os.sep, "/"), raw, code, code_str)
+        for i, line in enumerate(code):
+            if re.search(r"#\[cfg\(test\)\]|#\[cfg\(all\([^)]*\btest\b", line):
+                sf.test_spans.append(item_span(code, i))
+            if re.search(r"#\[cfg\([^)]*target_arch", line) or re.search(
+                r"#\[cfg\(all\([^)]*target_arch", line
+            ):
+                sf.arch_spans.append(item_span(code, i))
+        return sf
+
+    def in_test(self, lineno0):
+        return any(a <= lineno0 <= b for a, b in self.test_spans)
+
+    def in_arch_gate(self, lineno0):
+        return any(a <= lineno0 <= b for a, b in self.arch_spans)
+
+    def comment_block_above(self, lineno0):
+        """The contiguous comment/attribute lines directly above
+        ``lineno0`` (raw text, in order).  Attributes are transparent so
+        ``#[target_feature]`` between a doc comment and its fn does not
+        break the block."""
+        block = []
+        i = lineno0 - 1
+        while i >= 0:
+            stripped = self.raw[i].strip()
+            if COMMENT_RE.match(self.raw[i]) or ATTR_RE.match(self.raw[i]):
+                block.append(stripped)
+                i -= 1
+                continue
+            break
+        block.reverse()
+        return block
+
+
+@dataclass
+class Finding:
+    check: str
+    path: str
+    line: int  # 1-based
+    message: str
+    raw_line: str = ""
+
+    def fmt(self):
+        return f"{self.path}:{self.line}: {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Config files: allowlist, unsafe inventory, env registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ConfigEntry:
+    lineno: int
+    fields: tuple
+    justification: str
+    used: int = 0
+
+
+def load_config(path, n_fields):
+    """Parse ``field1: field2[: field3] # justification`` lines.
+    Returns (entries, errors).  Missing file => ([], [])."""
+    entries, errors = [], []
+    if not os.path.exists(path):
+        return entries, errors
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line.strip() or line.lstrip().startswith("#"):
+                continue
+            body, sep, just = line.partition(" # ")
+            if not sep:
+                errors.append((lineno, "entry has no ` # justification` clause"))
+                continue
+            if not just.strip():
+                errors.append((lineno, "empty justification"))
+                continue
+            parts = [p.strip() for p in body.split(":", n_fields - 1)]
+            if len(parts) != n_fields or not all(parts):
+                errors.append((lineno, f"expected {n_fields} `:`-separated fields"))
+                continue
+            entries.append(ConfigEntry(lineno, tuple(parts), just.strip()))
+    return entries, errors
+
+
+class Allowlist:
+    """``check: path: substring # justification`` — suppresses findings
+    of ``check`` in ``path`` whose raw line contains ``substring``."""
+
+    def __init__(self, root):
+        self.path = os.path.join(root, "tools", "vflint", ALLOWLIST)
+        self.entries, self.errors = load_config(self.path, 3)
+
+    def suppress(self, finding):
+        for e in self.entries:
+            check, path, substr = e.fields
+            if check == finding.check and path == finding.path and substr in finding.raw_line:
+                e.used += 1
+                return True
+        return False
+
+    def stale(self):
+        out = []
+        for ln, msg in self.errors:
+            out.append(Finding("allowlist", f"tools/vflint/{ALLOWLIST}", ln, f"malformed entry: {msg}"))
+        for e in self.entries:
+            if e.fields[0] not in CHECKS:
+                out.append(
+                    Finding(
+                        "allowlist",
+                        f"tools/vflint/{ALLOWLIST}",
+                        e.lineno,
+                        f"unknown check {e.fields[0]!r}",
+                    )
+                )
+            elif e.used == 0:
+                out.append(
+                    Finding(
+                        "allowlist",
+                        f"tools/vflint/{ALLOWLIST}",
+                        e.lineno,
+                        f"stale entry (matches nothing): {': '.join(e.fields)}",
+                    )
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Check 1: unsafe-audit
+# ---------------------------------------------------------------------------
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+SAFETY_RE = re.compile(r"SAFETY[:\s]|#\s*Safety")
+
+
+def check_unsafe_audit(files, root):
+    findings = []
+    inv_path = os.path.join(root, "tools", "vflint", INVENTORY)
+    entries, errors = load_config(inv_path, 2)
+    for ln, msg in errors:
+        findings.append(Finding("unsafe-audit", f"tools/vflint/{INVENTORY}", ln, f"malformed entry: {msg}"))
+    for sf in files:
+        for i, line in enumerate(sf.code):
+            if not UNSAFE_RE.search(line):
+                continue
+            raw = sf.raw[i]
+            # SAFETY justification: on the same line, or anywhere in the
+            # contiguous comment/attr block directly above.
+            covered = bool(SAFETY_RE.search(raw))
+            if not covered:
+                covered = any(SAFETY_RE.search(c) for c in sf.comment_block_above(i))
+            if not covered:
+                findings.append(
+                    Finding(
+                        "unsafe-audit",
+                        sf.path,
+                        i + 1,
+                        "unsafe site without a `// SAFETY:` comment or `# Safety` doc section",
+                        raw,
+                    )
+                )
+            matched = False
+            for e in entries:
+                path, substr = e.fields
+                if path == sf.path and substr in raw:
+                    e.used += 1
+                    matched = True
+            if not matched:
+                findings.append(
+                    Finding(
+                        "unsafe-audit",
+                        sf.path,
+                        i + 1,
+                        f"unsafe site not in the reviewed inventory (tools/vflint/{INVENTORY})",
+                        raw,
+                    )
+                )
+    for e in entries:
+        if e.used == 0:
+            findings.append(
+                Finding(
+                    "unsafe-audit",
+                    f"tools/vflint/{INVENTORY}",
+                    e.lineno,
+                    f"stale inventory entry (matches no unsafe site): {': '.join(e.fields)}",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Check 2: no-blocking-io
+# ---------------------------------------------------------------------------
+
+BLOCKING_RE = re.compile(r"\.write_all\s*\(|\.read_exact\s*\(|set_nonblocking\s*\(\s*false")
+
+
+def check_no_blocking_io(files, root):
+    findings = []
+    for sf in files:
+        if "/net/evloop/" not in "/" + sf.path:
+            continue
+        for i, line in enumerate(sf.code):
+            if sf.in_test(i):
+                continue
+            m = BLOCKING_RE.search(line)
+            if m:
+                findings.append(
+                    Finding(
+                        "no-blocking-io",
+                        sf.path,
+                        i + 1,
+                        f"blocking socket call `{m.group(0).strip('(. ')}` inside the event loop "
+                        "(poller threads must never block on a socket)",
+                        sf.raw[i],
+                    )
+                )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Check 3: bounded-channels
+# ---------------------------------------------------------------------------
+
+CHANNEL_RE = re.compile(r"(?<![A-Za-z0-9_])channel\s*(?:::<[^>()]*>)?\s*\(\s*\)")
+
+
+def check_bounded_channels(files, root):
+    findings = []
+    for sf in files:
+        if not sf.path.startswith("rust/src/"):
+            continue
+        for i, line in enumerate(sf.code):
+            if sf.in_test(i):
+                continue
+            for m in CHANNEL_RE.finditer(line):
+                if line[: m.start()].endswith("sync_"):
+                    continue
+                findings.append(
+                    Finding(
+                        "bounded-channels",
+                        sf.path,
+                        i + 1,
+                        "unbounded `mpsc::channel()` on a hot path — use `sync_channel` "
+                        "(bounded, backpressure) or allowlist with a justification",
+                        sf.raw[i],
+                    )
+                )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Check 4: env-registry
+# ---------------------------------------------------------------------------
+
+ENV_RE = re.compile(r"\bVFL_[A-Z0-9_]+\b")
+ENV_TIERS = ("ci", "bench")
+
+
+def check_env_registry(files, root):
+    findings = []
+    reg_path = os.path.join(root, "tools", "vflint", ENV_REGISTRY)
+    entries, errors = load_config(reg_path, 2)
+    for ln, msg in errors:
+        findings.append(Finding("env-registry", f"tools/vflint/{ENV_REGISTRY}", ln, f"malformed entry: {msg}"))
+    reg = {}
+    for e in entries:
+        name, tier = e.fields
+        if tier not in ENV_TIERS:
+            findings.append(
+                Finding(
+                    "env-registry",
+                    f"tools/vflint/{ENV_REGISTRY}",
+                    e.lineno,
+                    f"unknown tier {tier!r} for {name} (want one of {ENV_TIERS})",
+                )
+            )
+            continue
+        reg[name] = e
+    # occurrences in the Rust tree (comment-stripped, strings kept:
+    # env-var names live inside string literals)
+    seen = {}
+    for sf in files:
+        for i, line in enumerate(sf.code_str):
+            for m in ENV_RE.finditer(line):
+                seen.setdefault(m.group(0), (sf.path, i + 1))
+    for name, (path, line) in sorted(seen.items()):
+        if name not in reg:
+            findings.append(
+                Finding(
+                    "env-registry",
+                    path,
+                    line,
+                    f"env var {name} not declared in tools/vflint/{ENV_REGISTRY}",
+                )
+            )
+    for name, e in sorted(reg.items()):
+        if name not in seen:
+            findings.append(
+                Finding(
+                    "env-registry",
+                    f"tools/vflint/{ENV_REGISTRY}",
+                    e.lineno,
+                    f"stale registry entry: {name} appears nowhere in the Rust tree",
+                )
+            )
+    # CI cross-check
+    ci_path = os.path.join(root, CI_YML)
+    ci_vars = {}
+    if os.path.exists(ci_path):
+        with open(ci_path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for m in ENV_RE.finditer(line):
+                    ci_vars.setdefault(m.group(0), lineno)
+        for name, e in sorted(reg.items()):
+            if e.fields[1] == "ci" and name not in ci_vars:
+                findings.append(
+                    Finding(
+                        "env-registry",
+                        f"tools/vflint/{ENV_REGISTRY}",
+                        e.lineno,
+                        f"{name} is registered as a CI axis but never appears in {CI_YML}",
+                    )
+                )
+        for name, lineno in sorted(ci_vars.items()):
+            if name not in reg or reg[name].fields[1] != "ci":
+                findings.append(
+                    Finding(
+                        "env-registry",
+                        CI_YML,
+                        lineno,
+                        f"{name} is exercised by CI but not registered as tier `ci` "
+                        f"in tools/vflint/{ENV_REGISTRY}",
+                    )
+                )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Check 5: frame-encode-rule
+# ---------------------------------------------------------------------------
+
+WIDTHS = {"u8": 1, "u16": 2, "u32": 4, "u64": 8, "f32": 4}
+OP_RE = re.compile(r"\bw\.(u8|u16|u32|u64|f32s|f32|bytes|fixed|u64s_raw|u64s)\s*\(\s*([A-Za-z0-9_*.]*)")
+
+
+def fn_span(sf, name):
+    for i, line in enumerate(sf.code):
+        if re.search(rf"\bfn\s+{name}\b", line):
+            return item_span(sf.code, i)
+    return None
+
+
+def writer_ops(sf, span):
+    """Ordered (op, first_arg) writer calls within ``span``."""
+    ops = []
+    for i in range(span[0], span[1] + 1):
+        for m in OP_RE.finditer(sf.code[i]):
+            ops.append((m.group(1), m.group(2), i + 1))
+    return ops
+
+
+def match_arm_expr(sf, span, variant):
+    """The expression text of a one-line-expression match arm
+    ``Msg::Variant { .. } => <expr>,`` within ``span`` (used on
+    ``encoded_len``)."""
+    text = None
+    for i in range(span[0], span[1] + 1):
+        if re.search(rf"Msg::{variant}\b", sf.code[i]):
+            # accumulate until the arm ends (balanced braces, trailing ,)
+            j = i
+            buf = []
+            depth = 0
+            while j <= span[1]:
+                seg = sf.code[j]
+                buf.append(seg)
+                depth += seg.count("{") - seg.count("}")
+                if j > i or "=>" in seg:
+                    if depth <= 0 and seg.rstrip().endswith(","):
+                        break
+                j += 1
+            text = " ".join(buf)
+            break
+    if text is None:
+        return None
+    _, _, expr = text.partition("=>")
+    return expr
+
+
+def arm_span(sf, fn, variant):
+    """Line span of the ``Msg::Variant { ... } => { ... }`` arm inside
+    fn ``fn``.  Brace counting starts after the ``=>`` so the
+    destructuring pattern's own braces don't close the span early."""
+    fspan = fn_span(sf, fn)
+    if fspan is None:
+        return None
+    for i in range(fspan[0], fspan[1] + 1):
+        if not re.search(rf"Msg::{variant}\b", sf.code[i]):
+            continue
+        # find the line carrying the `=>` (patterns here are one-line,
+        # but tolerate a wrapped pattern)
+        j = i
+        while j <= fspan[1] and "=>" not in sf.code[j]:
+            j += 1
+        if j > fspan[1]:
+            return (i, i)
+        col = sf.code[j].index("=>") + 2
+        depth = 0
+        opened = False
+        k = j
+        while k <= fspan[1]:
+            seg = sf.code[k][col:] if k == j else sf.code[k]
+            for ch in seg:
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth -= 1
+                    if opened and depth == 0:
+                        return (i, k)
+            if k == j and not opened and seg.strip():
+                return (i, j)  # one-line expression arm
+            k += 1
+        return (i, fspan[1])
+    return None
+
+
+def const_sum(expr):
+    """Sum of the constant terms of a ``a + b + c * d.len()`` size
+    expression; dynamic terms (containing ``*`` or an identifier) are
+    skipped."""
+    if expr is None:
+        return None
+    total = 0
+    # strip one level of braces/parens wrapping
+    expr = expr.strip().rstrip(",").strip()
+    while expr.startswith("{") and expr.endswith("}"):
+        expr = expr[1:-1].strip()
+    for term in expr.split("+"):
+        term = term.strip()
+        if re.fullmatch(r"\d+", term):
+            total += int(term)
+    return total
+
+
+def check_frame_encode(files, root):
+    findings = []
+    msgs = next((sf for sf in files if sf.path.endswith("coordinator/messages.rs")), None)
+    if msgs is None:
+        return findings  # fixture trees without a wire layer: nothing to check
+
+    def fail(line, message):
+        findings.append(Finding("frame-encode-rule", msgs.path, line, message))
+
+    # 1. tag constants: unique values, each used by encode_into AND decode
+    tags = {}
+    for i, line in enumerate(msgs.code):
+        m = re.search(r"const\s+(T_[A-Z0-9_]+)\s*:\s*u8\s*=\s*(\d+)\s*;", line)
+        if m:
+            name, val = m.group(1), int(m.group(2))
+            for other, (oval, _) in tags.items():
+                if oval == val:
+                    fail(i + 1, f"duplicate message tag value {val}: {name} collides with {other}")
+            tags[name] = (val, i + 1)
+    enc_span = fn_span(msgs, "encode_into")
+    dec_span = fn_span(msgs, "decode")
+    for name, (_, lineno) in sorted(tags.items(), key=lambda kv: kv[1][1]):
+        for span, what in ((enc_span, "encode_into"), (dec_span, "decode")):
+            if span is None:
+                continue
+            body = "\n".join(msgs.code[span[0] : span[1] + 1])
+            if not re.search(rf"\b{name}\b", body):
+                fail(lineno, f"tag constant {name} never used in `{what}` — dead or drifted arm")
+
+    # 2. chunk builders vs encode arms vs encoded_len vs streaming constants
+    streaming = next((sf for sf in files if sf.path.endswith("coordinator/streaming.rs")), None)
+    stream_consts = {}
+    if streaming is not None:
+        for i, line in enumerate(streaming.code):
+            m = re.search(r"const\s+([A-Z0-9_]+)\s*:\s*u64\s*=\s*(\d+)\s*;", line)
+            if m:
+                stream_consts[m.group(1)] = (int(m.group(2)), i + 1)
+
+    specs = [
+        ("begin_masked_chunk", "MaskedChunk", "T_MASKED_CHUNK", "CHUNK_MSG_HEADER_BYTES"),
+        ("begin_gradient_chunk", "GradientChunk", "T_GRADIENT_CHUNK", "GRAD_CHUNK_MSG_HEADER_BYTES"),
+    ]
+    for builder, variant, tag_const, stream_const in specs:
+        bspan = fn_span(msgs, builder)
+        if bspan is None:
+            fail(1, f"zero-copy builder `{builder}` not found")
+            continue
+        bops = writer_ops(msgs, bspan)
+        if not bops:
+            fail(bspan[0] + 1, f"`{builder}` writes nothing")
+            continue
+        # builder must open with the variant tag byte
+        if bops[0][0] != "u8" or bops[0][1] != tag_const:
+            fail(bops[0][2], f"`{builder}` must start with `w.u8({tag_const})`, got `w.{bops[0][0]}({bops[0][1]})`")
+        # builder header width = sum of fixed-width ops
+        widths = [WIDTHS.get(op) for op, _, _ in bops]
+        if None in widths:
+            bad = bops[widths.index(None)]
+            fail(bad[2], f"`{builder}` uses non-fixed-width writer op `w.{bad[0]}` — header width unverifiable")
+            continue
+        header = sum(widths)
+        # builder must end with the u32 word-count prefix (the `u64s`
+        # encoding = u32 count + raw words)
+        if bops[-1][0] != "u32":
+            fail(bops[-1][2], f"`{builder}` must end with the u32 word-count prefix, got `w.{bops[-1][0]}`")
+        # encode_into arm: same ops with the trailing count+words fused
+        # into one `w.u64s(words)`
+        aspan = arm_span(msgs, "encode_into", variant)
+        if aspan is None:
+            fail(bspan[0] + 1, f"no `encode_into` arm found for Msg::{variant}")
+        else:
+            aops = writer_ops(msgs, aspan)
+
+            def norm(arg):
+                # `*round` / `self.round` / `round` all name the field
+                return arg.lstrip("*").split(".")[-1]
+
+            want = [(op, norm(arg)) for op, arg, _ in bops[:-1]] + [("u64s", "words")]
+            got = [(op, norm(arg)) for op, arg, _ in aops]
+            if got != want:
+                fail(
+                    aspan[0] + 1,
+                    f"encode_into arm for Msg::{variant} diverges from `{builder}`: "
+                    f"builder implies {want}, arm writes {got} — the zero-copy path "
+                    "would not be byte-identical to Msg::encode()",
+                )
+            if aops and (aops[0][0] != "u8" or aops[0][1] != tag_const):
+                fail(aops[0][2], f"encode_into arm for Msg::{variant} does not open with `w.u8({tag_const})`")
+        # encoded_len arm constant part must equal the builder header
+        lspan = fn_span(msgs, "encoded_len")
+        lsum = const_sum(match_arm_expr(msgs, lspan, variant)) if lspan else None
+        if lsum is None:
+            fail(1, f"no `encoded_len` arm found for Msg::{variant}")
+        elif lsum != header:
+            fail(
+                lspan[0] + 1,
+                f"encoded_len constant part for Msg::{variant} is {lsum} B "
+                f"but `{builder}` writes a {header}-byte header",
+            )
+        # Table-2 accounting constant must match
+        if streaming is not None:
+            if stream_const not in stream_consts:
+                fail(1, f"streaming.rs does not define {stream_const}")
+            elif stream_consts[stream_const][0] != header:
+                findings.append(
+                    Finding(
+                        "frame-encode-rule",
+                        streaming.path,
+                        stream_consts[stream_const][1],
+                        f"{stream_const} = {stream_consts[stream_const][0]} but the wire header "
+                        f"written by `{builder}` is {header} B",
+                    )
+                )
+
+    # 3. monolithic accounting constants vs encoded_len
+    mono_specs = [
+        ("MaskedActivation", "MONO_MSG_HEADER_BYTES"),
+        ("GradientSum", "GRAD_SUM_HEADER_BYTES"),
+    ]
+    lspan = fn_span(msgs, "encoded_len")
+    if streaming is not None and lspan is not None:
+        for variant, stream_const in mono_specs:
+            if stream_const not in stream_consts:
+                continue
+            lsum = const_sum(match_arm_expr(msgs, lspan, variant))
+            if lsum is not None and lsum != stream_consts[stream_const][0]:
+                findings.append(
+                    Finding(
+                        "frame-encode-rule",
+                        streaming.path,
+                        stream_consts[stream_const][1],
+                        f"{stream_const} = {stream_consts[stream_const][0]} but Msg::{variant}'s "
+                        f"encoded_len constant part is {lsum} B",
+                    )
+                )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Check 6: panic-discipline
+# ---------------------------------------------------------------------------
+
+PANIC_RE = re.compile(r"\.unwrap\s*\(\s*\)|\.expect\s*\(")
+PANIC_DIRS = ("rust/src/net/", "rust/src/coordinator/", "rust/src/secagg/")
+
+
+def check_panic_discipline(files, root):
+    findings = []
+    for sf in files:
+        if not sf.path.startswith(PANIC_DIRS):
+            continue
+        for i, line in enumerate(sf.code):
+            if sf.in_test(i):
+                continue
+            m = PANIC_RE.search(line)
+            if m:
+                findings.append(
+                    Finding(
+                        "panic-discipline",
+                        sf.path,
+                        i + 1,
+                        f"`{m.group(0).strip('(. ')}` in protocol-path code — convert to a typed "
+                        "error or allowlist with a stated reason",
+                        sf.raw[i],
+                    )
+                )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Check 7: cfg-coverage
+# ---------------------------------------------------------------------------
+
+SCALAR_REF_RE = re.compile(r"vflint:\s*scalar-ref\s*=\s*([A-Za-z0-9_]+)")
+
+
+def check_cfg_coverage(files, root):
+    findings = []
+    for sf in files:
+        if not sf.path.startswith("rust/src/"):
+            continue
+        for i, line in enumerate(sf.code):
+            if "#[target_feature" not in line:
+                continue
+            # the fn header follows the attribute block
+            j = i + 1
+            name = None
+            while j < len(sf.code) and j < i + 5:
+                m = re.search(r"\bfn\s+([A-Za-z0-9_]+)", sf.code[j])
+                if m:
+                    name = m.group(1)
+                    break
+                j += 1
+            if name is None:
+                continue
+            lineno = j + 1
+            block = sf.comment_block_above(j)
+            refm = None
+            for c in block:
+                refm = SCALAR_REF_RE.search(c) or refm
+            if refm is None:
+                findings.append(
+                    Finding(
+                        "cfg-coverage",
+                        sf.path,
+                        lineno,
+                        f"intrinsic fn `{name}` has no `// vflint: scalar-ref = <fn>` annotation "
+                        "naming its scalar reference implementation",
+                    )
+                )
+                continue
+            ref = refm.group(1)
+            # the scalar reference must exist in this file OUTSIDE any
+            # arch-gated region (it is the portable truth the vector leg
+            # is asserted against)
+            ref_def = None
+            for k, l2 in enumerate(sf.code):
+                if re.search(rf"\bfn\s+{ref}\b", l2) and not sf.in_arch_gate(k):
+                    ref_def = k
+                    break
+            if ref_def is None:
+                findings.append(
+                    Finding(
+                        "cfg-coverage",
+                        sf.path,
+                        lineno,
+                        f"scalar reference `{ref}` for `{name}` is not defined outside "
+                        "arch-gated code in this file",
+                    )
+                )
+            # both the intrinsic and its reference must be exercised by a
+            # bit-identity test in the same file
+            test_code = "\n".join(
+                "\n".join(sf.code[a : b + 1]) for a, b in sf.test_spans
+            )
+            for fn in {name, ref}:
+                if not re.search(rf"\b{fn}\b", test_code):
+                    findings.append(
+                        Finding(
+                            "cfg-coverage",
+                            sf.path,
+                            lineno,
+                            f"no `#[cfg(test)]` bit-identity test in this file references `{fn}`",
+                        )
+                    )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+CHECK_FNS = {
+    "unsafe-audit": check_unsafe_audit,
+    "no-blocking-io": check_no_blocking_io,
+    "bounded-channels": check_bounded_channels,
+    "env-registry": check_env_registry,
+    "frame-encode-rule": check_frame_encode,
+    "panic-discipline": check_panic_discipline,
+    "cfg-coverage": check_cfg_coverage,
+}
+
+SCAN_DIRS = (
+    os.path.join("rust", "src"),
+    os.path.join("rust", "tests"),
+    os.path.join("rust", "benches"),
+)
+
+
+def collect_files(root):
+    files = []
+    for base in SCAN_DIRS:
+        top = os.path.join(root, base)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, _, names in os.walk(top):
+            for name in sorted(names):
+                if name.endswith(".rs"):
+                    rel = os.path.relpath(os.path.join(dirpath, name), root)
+                    files.append(SourceFile.load(root, rel))
+    files.sort(key=lambda sf: sf.path)
+    return files
+
+
+def run_checks(root, quiet=False):
+    """Run every check over ``root``.  Returns (findings, suppressed)."""
+    files = collect_files(root)
+    allow = Allowlist(root)
+    findings = []
+    suppressed = 0
+    for check in CHECKS:
+        for f in CHECK_FNS[check](files, root):
+            if allow.suppress(f):
+                suppressed += 1
+            else:
+                findings.append(f)
+    findings.extend(allow.stale())
+    return findings, suppressed
+
+
+def report(findings, suppressed):
+    by_check = {}
+    for f in findings:
+        by_check.setdefault(f.check, []).append(f)
+    for check in CHECKS + ["allowlist"]:
+        group = by_check.get(check)
+        if not group:
+            continue
+        print(f"[{check}] {len(group)} finding(s):")
+        for f in group:
+            print(f"  {f.fmt()}")
+    total = len(findings)
+    print(
+        f"vflint: {total} finding(s) across {len(by_check)} check(s), "
+        f"{suppressed} allowlisted"
+        if total
+        else f"vflint: clean ({suppressed} allowlisted finding(s) suppressed)"
+    )
+    return 1 if total else 0
+
+
+def self_test(fixtures_dir):
+    """Each fixture tree must trigger exactly its intended check; the
+    ``clean`` tree must trigger none."""
+    if not os.path.isdir(fixtures_dir):
+        print(f"vflint --self-test: no fixture dir at {fixtures_dir}", file=sys.stderr)
+        return 2
+    failures = 0
+    names = sorted(os.listdir(fixtures_dir))
+    covered = set()
+    for name in names:
+        tree = os.path.join(fixtures_dir, name)
+        if not os.path.isdir(tree):
+            continue
+        expect_path = os.path.join(tree, "expect.txt")
+        expected = None
+        if os.path.exists(expect_path):
+            with open(expect_path, encoding="utf-8") as f:
+                expected = f.read().strip()
+        findings, _ = run_checks(tree, quiet=True)
+        got = sorted({f.check for f in findings})
+        if name == "clean" or expected == "clean":
+            ok = not findings
+            want_desc = "no findings"
+        else:
+            if expected is None:
+                print(f"  FAIL {name}: fixture tree has no expect.txt")
+                failures += 1
+                continue
+            ok = got == [expected] and len(findings) >= 1
+            covered.add(expected)
+            want_desc = f"only [{expected}]"
+        status = "ok  " if ok else "FAIL"
+        print(f"  {status} {name}: want {want_desc}, got {got or 'none'}")
+        if not ok:
+            failures += 1
+            for f in findings:
+                print(f"         {f.check}: {f.fmt()}")
+    missing = [c for c in CHECKS if c not in covered]
+    if missing:
+        print(f"  FAIL fixture corpus does not cover: {missing}")
+        failures += 1
+    print(f"vflint --self-test: {'PASS' if failures == 0 else f'{failures} failure(s)'}")
+    return 0 if failures == 0 else 1
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(prog="vflint", description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=DEFAULT_ROOT, help="repo root (default: two levels above this script)")
+    ap.add_argument("--self-test", action="store_true", help="run the fixture corpus instead of the repo")
+    ap.add_argument("--list-checks", action="store_true", help="print check ids and exit")
+    args = ap.parse_args(argv)
+    if args.list_checks:
+        for c in CHECKS:
+            print(c)
+        return 0
+    if args.self_test:
+        return self_test(os.path.join(TOOL_DIR, "fixtures"))
+    findings, suppressed = run_checks(args.root)
+    return report(findings, suppressed)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
