@@ -227,10 +227,16 @@ pub fn serve_on(
         connected += 1;
     }
     drop(tx);
+    // The accept loop above only exits once every slot is filled; a
+    // hole here is a bookkeeping bug, surfaced as a typed error rather
+    // than a server panic mid-handshake.
     let mut writers: Vec<Option<TcpStream>> = writers
         .into_iter()
-        .map(|w| Some(w.expect("all clients connected")))
-        .collect();
+        .enumerate()
+        .map(|(ci, w)| {
+            w.map(Some).with_context(|| format!("client {ci} never completed its join"))
+        })
+        .collect::<Result<_>>()?;
 
     let mut net = Network::new(n_clients);
     let mut notes: Vec<Note> = Vec::new();

@@ -428,10 +428,13 @@ impl Transport for SimTransport {
                 parties[0].on_round_complete(r);
             }
             if !progressed {
-                bail!(
-                    "protocol stalled: round {} never completed",
-                    win.oldest_in_flight().expect("an incomplete round is in flight")
-                );
+                // A stall with an empty window would mean `win.done()`
+                // lied; report it as its own typed error instead of
+                // panicking inside the error path.
+                match win.oldest_in_flight() {
+                    Some(r) => bail!("protocol stalled: round {r} never completed"),
+                    None => bail!("protocol stalled with no round in flight (window bug)"),
+                }
             }
         }
 
