@@ -839,8 +839,11 @@ impl<'e> Party for ActiveParty<'e> {
                     // robust setup continues: distribute Shamir seed
                     // shares; the round opens on our ShareRelay
                     let epoch = self.sess().epoch;
-                    let msg =
-                        seed_share_msg(self.session.as_mut().unwrap(), &mut self.rng, epoch)?;
+                    let msg = seed_share_msg(
+                        self.session.as_mut().context("setup started")?,
+                        &mut self.rng,
+                        epoch,
+                    )?;
                     self.rec(t0, true);
                     out.send(Addr::Aggregator, msg);
                 } else {
@@ -1220,8 +1223,11 @@ impl<'e> Party for PassiveParty<'e> {
                 self.finish_setup(&all);
                 if self.threshold.is_some() {
                     let epoch = self.sess().epoch;
-                    let msg =
-                        seed_share_msg(self.session.as_mut().unwrap(), &mut self.rng, epoch)?;
+                    let msg = seed_share_msg(
+                        self.session.as_mut().context("setup started")?,
+                        &mut self.rng,
+                        epoch,
+                    )?;
                     self.rec(t0, true);
                     out.send(Addr::Aggregator, msg);
                 } else {

@@ -264,7 +264,10 @@ pub fn rebuild_session(
 
 /// Aggregator-side recovery: reconstruct the dropped client's seed from
 /// ≥ t shares, rebuild its session, and compute the total mask it would
-/// have added for (round, tag, len) so it can be subtracted.
+/// have added for (round, tag, len) so it can be subtracted. Errors if
+/// the surrendered bundles are empty or reconstruct to a malformed
+/// seed — corrupted shares must surface as a typed failure, never a
+/// panic in the recovery path.
 #[allow(clippy::too_many_arguments)]
 pub fn recover_dropped_mask(
     dropped: usize,
@@ -275,10 +278,10 @@ pub fn recover_dropped_mask(
     round: u64,
     tensor_tag: u32,
     len: usize,
-) -> Vec<u64> {
-    let seed = reconstruct_seed(shares).expect("32-byte seed");
+) -> Result<Vec<u64>> {
+    let seed = reconstruct_seed(shares)?;
     let session = rebuild_session(seed, dropped, n, epoch, all_keys);
-    session.total_mask(round, tensor_tag, len)
+    Ok(session.total_mask(round, tensor_tag, len))
 }
 
 /// Deterministic binding commitment to a session seed. Every client
@@ -354,7 +357,8 @@ mod tests {
             .map(|i| clients[i].surrender_share(dropped).unwrap().clone())
             .collect();
         let missing =
-            recover_dropped_mask(dropped, n, epoch, &surrendered, &keys, round, tag, len);
+            recover_dropped_mask(dropped, n, epoch, &surrendered, &keys, round, tag, len)
+                .unwrap();
 
         // subtract the dropped client's would-be mask: sum now decodes
         for (a, m) in acc.iter_mut().zip(&missing) {
