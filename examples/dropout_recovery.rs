@@ -61,7 +61,8 @@ fn main() {
         .map(|i| clients[i].surrender_share(dropped).unwrap().clone())
         .collect();
     let t0 = std::time::Instant::now();
-    let missing = recover_dropped_mask(dropped, n, 0, &surrendered, &keys, round, tag, len);
+    let missing = recover_dropped_mask(dropped, n, 0, &surrendered, &keys, round, tag, len)
+        .expect("recovery from t valid shares");
     for (a, m) in acc.iter_mut().zip(&missing) {
         *a = a.wrapping_add(*m);
     }

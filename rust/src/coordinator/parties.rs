@@ -473,10 +473,13 @@ impl<'e> ActiveParty<'e> {
         msg
     }
 
-    pub fn finish_setup(&mut self, all: &[WireKeys]) {
-        let s = self.session.as_mut().expect("setup started");
+    /// Errors if no setup epoch is open (a `KeyDirectory` arriving
+    /// before `RequestKeys` is a protocol violation, not a panic).
+    pub fn finish_setup(&mut self, all: &[WireKeys]) -> Result<()> {
+        let s = self.session.as_mut().context("setup started")?;
         let keys = pad_directory(all, s.client().n_clients);
         s.client_mut().derive_secrets(&keys);
+        Ok(())
     }
 
     /// The masking session (post `begin_setup`).
@@ -834,16 +837,13 @@ impl<'e> Party for ActiveParty<'e> {
             }
             Msg::KeyDirectory { all, .. } => {
                 let t0 = Instant::now();
-                self.finish_setup(&all);
+                self.finish_setup(&all)?;
                 if self.threshold.is_some() {
                     // robust setup continues: distribute Shamir seed
                     // shares; the round opens on our ShareRelay
-                    let epoch = self.sess().epoch;
-                    let msg = seed_share_msg(
-                        self.session.as_mut().context("setup started")?,
-                        &mut self.rng,
-                        epoch,
-                    )?;
+                    let sess = self.session.as_mut().context("setup started")?;
+                    let epoch = sess.client().epoch;
+                    let msg = seed_share_msg(sess, &mut self.rng, epoch)?;
                     self.rec(t0, true);
                     out.send(Addr::Aggregator, msg);
                 } else {
@@ -1046,10 +1046,13 @@ impl<'e> PassiveParty<'e> {
         msg
     }
 
-    pub fn finish_setup(&mut self, all: &[WireKeys]) {
-        let s = self.session.as_mut().expect("setup started");
+    /// Errors if no setup epoch is open (a `KeyDirectory` arriving
+    /// before `RequestKeys` is a protocol violation, not a panic).
+    pub fn finish_setup(&mut self, all: &[WireKeys]) -> Result<()> {
+        let s = self.session.as_mut().context("setup started")?;
         let keys = pad_directory(all, s.client().n_clients);
         s.client_mut().derive_secrets(&keys);
+        Ok(())
     }
 
     /// The masking session (post `begin_setup`).
@@ -1220,14 +1223,11 @@ impl<'e> Party for PassiveParty<'e> {
             }
             Msg::KeyDirectory { all, .. } => {
                 let t0 = Instant::now();
-                self.finish_setup(&all);
+                self.finish_setup(&all)?;
                 if self.threshold.is_some() {
-                    let epoch = self.sess().epoch;
-                    let msg = seed_share_msg(
-                        self.session.as_mut().context("setup started")?,
-                        &mut self.rng,
-                        epoch,
-                    )?;
+                    let sess = self.session.as_mut().context("setup started")?;
+                    let epoch = sess.client().epoch;
+                    let msg = seed_share_msg(sess, &mut self.rng, epoch)?;
                     self.rec(t0, true);
                     out.send(Addr::Aggregator, msg);
                 } else {
