@@ -1,0 +1,189 @@
+//! Bench: the hierarchical fan-in tree's per-node load (`--leaves`).
+//!
+//! At a fixed protocol volume (n clients × d ℤ₂⁶⁴ words per round),
+//! the flat topology funnels all n·d words into the one aggregator;
+//! a tree of L leaves caps every node's fan-in at
+//! max((n/L)·d, L·d) — each leaf folds its shard, the root stitches
+//! L partials. This harness drives the *real* fold kernels (the same
+//! [`LeafAggregator`] the transports run, the same `z64` wrap-add the
+//! root stitches with) over synthetic masked words, measures per-node
+//! fan-in bytes and the fold/stitch critical path, verifies the
+//! stitched sum is bit-identical to the flat fold, and emits
+//! `BENCH_tree.json`.
+//!
+//! The run fails if the root's fan-in bytes do not drop below the
+//! flat topology's for every L ≥ 2 — the acceptance criterion, not
+//! just a data point.
+//!
+//!     cargo bench --bench tree_fanin
+
+use std::io::Write;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+use vfl::coordinator::streaming::{MONO_MSG_HEADER_BYTES, PARTIAL_SUM_HEADER_BYTES};
+use vfl::coordinator::{LeafAggregator, Msg, ShardMap, StreamCfg};
+
+/// Fixed protocol volume: 64 clients × 65 536 words (32 MiB of masked
+/// payload per fan-in).
+const N_CLIENTS: usize = 64;
+const WORDS: usize = 65_536;
+
+/// Deterministic synthetic masked words (splitmix64): the bench
+/// measures fold cost, not crypto, and identical inputs across
+/// topologies are what make the bit-identity check meaningful.
+fn synth_words(seed: u64, len: usize) -> Vec<u64> {
+    let mut x = seed;
+    (0..len)
+        .map(|_| {
+            x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        })
+        .collect()
+}
+
+struct Row {
+    leaves: usize,
+    /// Words received by the root (its fan-in).
+    root_words: usize,
+    /// Bytes received by the root, headers included (the Table-2
+    /// accounting rule: 11 B per monolithic tensor, 14 B per partial).
+    root_bytes: u64,
+    /// The busiest node's fan-in words: max(leaf shard volume, root).
+    max_node_words: usize,
+    /// Slowest single leaf fold (the tree's parallel critical path
+    /// assumes one node per leaf).
+    leaf_max_ms: f64,
+    root_ms: f64,
+}
+
+fn flat(tensors: &[Vec<u64>]) -> (Vec<u64>, Row) {
+    let t0 = Instant::now();
+    let mut acc = vec![0u64; WORDS];
+    for t in tensors {
+        vfl::z64::wrap_add(&mut acc, t);
+    }
+    let root_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let words = N_CLIENTS * WORDS;
+    let row = Row {
+        leaves: 1,
+        root_words: words,
+        root_bytes: N_CLIENTS as u64 * (MONO_MSG_HEADER_BYTES + 8 * WORDS as u64),
+        max_node_words: words,
+        leaf_max_ms: 0.0,
+        root_ms,
+    };
+    (acc, row)
+}
+
+fn tree(tensors: &[Vec<u64>], leaves: usize) -> Result<(Vec<u64>, Row)> {
+    let map = ShardMap::new(N_CLIENTS, leaves);
+    let stream = StreamCfg::monolithic();
+    let mut partials = Vec::new();
+    let mut leaf_max_ms: f64 = 0.0;
+    let mut max_shard = 0usize;
+    for k in 0..leaves {
+        let (s, e) = map.range(k);
+        max_shard = max_shard.max((e - s) as usize * WORDS);
+        let mut leaf = LeafAggregator::new(k, s, e, &stream, false, None);
+        let t0 = Instant::now();
+        let mut emitted = None;
+        for c in s..e {
+            if let Some(m) = leaf.on_masked(0, 0, c, tensors[c as usize].clone())? {
+                emitted = Some(m);
+            }
+        }
+        leaf_max_ms = leaf_max_ms.max(t0.elapsed().as_secs_f64() * 1e3);
+        let Some(Msg::PartialSum { words, .. }) = emitted else {
+            anyhow::bail!("leaf {k} never completed its fold");
+        };
+        partials.push(words);
+    }
+    let t0 = Instant::now();
+    let mut acc = vec![0u64; WORDS];
+    for p in &partials {
+        vfl::z64::wrap_add(&mut acc, p);
+    }
+    let root_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let root_words = leaves * WORDS;
+    let row = Row {
+        leaves,
+        root_words,
+        root_bytes: leaves as u64 * (PARTIAL_SUM_HEADER_BYTES + 8 * WORDS as u64),
+        max_node_words: max_shard.max(root_words),
+        leaf_max_ms,
+        root_ms,
+    };
+    Ok((acc, row))
+}
+
+fn json(rows: &[Row]) -> String {
+    let mut out = String::from("{\n  \"tree_fanin\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"topology\": \"{}\", \"leaves\": {}, \"clients\": {}, \
+             \"words_per_client\": {}, \"root_fanin_words\": {}, \"root_fanin_bytes\": {}, \
+             \"max_node_fanin_words\": {}, \"leaf_fold_max_ms\": {:.3}, \
+             \"root_stitch_ms\": {:.3}}}{}\n",
+            if r.leaves == 1 { "flat" } else { "tree" },
+            r.leaves,
+            N_CLIENTS,
+            WORDS,
+            r.root_words,
+            r.root_bytes,
+            r.max_node_words,
+            r.leaf_max_ms,
+            r.root_ms,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() -> Result<()> {
+    let tensors: Vec<Vec<u64>> =
+        (0..N_CLIENTS).map(|i| synth_words(0xc0ffee ^ i as u64, WORDS)).collect();
+
+    let (reference, flat_row) = flat(&tensors);
+    let mut rows = vec![flat_row];
+    for l in [2usize, 4, 8] {
+        let (sum, row) = tree(&tensors, l)?;
+        ensure!(sum == reference, "L={l}: stitched sum must be bit-identical to the flat fold");
+        ensure!(
+            row.root_bytes < rows[0].root_bytes,
+            "L={l}: root fan-in ({} B) must drop below flat ({} B)",
+            row.root_bytes,
+            rows[0].root_bytes,
+        );
+        rows.push(row);
+    }
+
+    println!(
+        "tree fan-in at n={N_CLIENTS} clients x d={WORDS} words ({} MiB payload):",
+        N_CLIENTS * WORDS * 8 / (1 << 20)
+    );
+    println!(
+        "{:<10} {:>16} {:>16} {:>20} {:>14} {:>14}",
+        "topology", "root_words", "root_bytes", "max_node_words", "leaf_max_ms", "root_ms"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>16} {:>16} {:>20} {:>14.3} {:>14.3}",
+            if r.leaves == 1 { "flat".to_string() } else { format!("L={}", r.leaves) },
+            r.root_words,
+            r.root_bytes,
+            r.max_node_words,
+            r.leaf_max_ms,
+            r.root_ms,
+        );
+    }
+
+    let path = "BENCH_tree.json";
+    std::fs::File::create(path)?.write_all(json(&rows).as_bytes())?;
+    println!("\nwrote {path}");
+    Ok(())
+}

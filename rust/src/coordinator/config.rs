@@ -147,6 +147,20 @@ pub struct RunConfig {
     /// funnel to the one round-window driver, and peak metrics
     /// max-merge across loops. Any K produces bit-identical reports.
     pub evloop_threads: usize,
+    /// Hierarchical fan-in tree (`--leaves L`): partition the clients
+    /// into L contiguous shards, each owned by a
+    /// [`LeafAggregator`](super::topology::LeafAggregator) that folds
+    /// its shard's masked fan-in into a partial ℤ₂⁶⁴ sum and forwards
+    /// one [`Msg::PartialSum`](super::messages::Msg) per (round, tag)
+    /// to the root — per-node fan-in drops from O(n·d) to
+    /// O((n/L)·d + L·d). Requires [`SecurityMode::SecureExact`] (only
+    /// ℤ₂⁶⁴ sums are order-independent, and a float partial would
+    /// change addition order). `None` = the flat single-aggregator
+    /// topology. Any L produces bit-identical reports and Table-2
+    /// counters: a leaf partial stays masked by every cross-shard
+    /// pairwise term, so the tree changes *where* words are added,
+    /// never *what* is added.
+    pub leaves: Option<usize>,
 }
 
 impl RunConfig {
@@ -175,6 +189,7 @@ impl RunConfig {
             rollback_fsync: false,
             rollback_max_bytes: None,
             evloop_threads: 1,
+            leaves: None,
         })
     }
 

@@ -28,6 +28,7 @@ use super::metrics::Metrics;
 use super::parties::{ActiveParty, Aggregator, GradLayout, PassiveParty};
 use super::party::{Note, Party, RoundKind, RoundSpec, SETUP_ROUND};
 use super::streaming::{RollbackCfg, StreamCfg, DEFAULT_ROLLBACK_MAX_BYTES};
+use super::topology::{validate_topology, TreeAggregator};
 use super::window::MAX_ROUNDS_IN_FLIGHT;
 
 /// Everything a run produces.
@@ -230,6 +231,7 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
     validate_timing(cfg)?;
     validate_window(cfg)?;
     validate_evloop(cfg)?;
+    let leaves = validate_topology(cfg)?;
     let (schema, spec, _) = by_name(&cfg.model.dataset).context("unknown dataset")?;
     let data = generate(&schema, cfg.n_rows, cfg.seed);
     let mut vertical = partition(&data, &spec);
@@ -279,14 +281,20 @@ pub fn build<'e>(cfg: &RunConfig, engine: Option<&'e Engine>) -> Result<Built<'e
 
     let threshold = cfg.shamir_threshold;
     let mut parties: Vec<Box<dyn Party + 'e>> = Vec::with_capacity(cfg.model.n_clients() + 1);
-    parties.push(Box::new(Aggregator::new(
-        &cfg.model,
-        cfg.seed,
-        backend,
-        groups,
-        threshold,
-        stream,
-    )));
+    let agg = Aggregator::new(&cfg.model, cfg.seed, backend, groups, threshold, stream);
+    match leaves {
+        // in-process tree: the aggregator slot holds the TreeAggregator
+        // wrapper (root + L leaf folds); cross-process TCP trees run
+        // the root unwrapped and put each leaf in a `vfl-sa leaf`
+        // relay process instead
+        Some(l) => parties.push(Box::new(TreeAggregator::new(
+            agg,
+            l,
+            stream,
+            threshold.is_some(),
+        ))),
+        None => parties.push(Box::new(agg)),
+    }
     parties.push(Box::new(ActiveParty::new(
         vertical.active,
         holders,
@@ -627,6 +635,36 @@ mod tests {
         let mut c = cfg();
         c.evloop_threads = 4;
         assert!(validate_evloop(&c).is_ok());
+    }
+
+    #[test]
+    fn topology_flag_validated() {
+        use crate::coordinator::topology::MAX_LEAVES;
+        // default: flat topology passes through as None
+        assert_eq!(validate_topology(&cfg()).unwrap(), None);
+        // zero leaves rejected
+        let mut c = cfg();
+        c.leaves = Some(0);
+        assert!(validate_topology(&c).unwrap_err().to_string().contains("--leaves 0"));
+        // more leaves than clients rejected
+        let mut c = cfg();
+        c.leaves = Some(c.model.n_clients() + 1);
+        assert!(validate_topology(&c).unwrap_err().to_string().contains("client count"));
+        // a runaway leaf count rejected at the cap
+        let mut c = cfg();
+        c.leaves = Some(MAX_LEAVES + 1);
+        assert!(validate_topology(&c).unwrap_err().to_string().contains("cap"));
+        // the tree is exact-masking only
+        let mut c = cfg();
+        c.leaves = Some(2);
+        c.security = SecurityMode::SecureFloat;
+        assert!(validate_topology(&c).unwrap_err().to_string().contains("SecureExact"));
+        // valid leaf counts pass (L = 1 is a legal one-shard tree)
+        for l in [1, 2, c.model.n_clients()] {
+            let mut c = cfg();
+            c.leaves = Some(l);
+            assert_eq!(validate_topology(&c).unwrap(), Some(l));
+        }
     }
 
     #[test]

@@ -79,6 +79,21 @@ pub enum Msg {
     GradientChunk { round: u32, shard: u16, offset: u32, total: u32, words: Vec<u64> },
     FloatGradientSum { round: u32, vals: Vec<f32> },
 
+    // ---- hierarchical fan-in tree (`--leaves`) ----
+    /// Leaf aggregator → root: the folded ℤ₂⁶⁴ partial sum of one
+    /// client shard's masked tensors for `(round, tag)` (`tag` as in
+    /// [`Msg::MaskedChunk`]: 0 = activation, 1 = gradient). The
+    /// half-open client range `[shard_start, shard_end)` names exactly
+    /// which clients the partial covers; the root stitches L disjoint
+    /// partials by plain wrap-addition — the same commuting-sum
+    /// algebra as the shard merge. The words stay masked: pairwise
+    /// masks only telescope to zero in the *full* cross-client sum, so
+    /// every cross-shard pairwise term survives in a leaf's partial
+    /// (the mask-safety argument in `coordinator::topology`). Header
+    /// cost: 14 bytes per partial (the Table-2 accounting rule, see
+    /// `coordinator::streaming::PARTIAL_SUM_HEADER_BYTES`).
+    PartialSum { round: u32, tag: u8, shard_start: u16, shard_end: u16, words: Vec<u64> },
+
     // ---- testing phase (§4.0.3) ----
     /// Aggregator → active: predictions for the requested batch.
     Predictions { round: u32, probs: Vec<f32> },
@@ -134,6 +149,7 @@ impl Msg {
             | Msg::GradientSum { round, .. }
             | Msg::GradientChunk { round, .. }
             | Msg::FloatGradientSum { round, .. }
+            | Msg::PartialSum { round, .. }
             | Msg::Predictions { round, .. }
             | Msg::DropoutNotice { round, .. }
             | Msg::SurrenderShares { round, .. } => Some(*round),
@@ -164,6 +180,7 @@ const T_DROPOUT_NOTICE: u8 = 20;
 const T_SURRENDER_SHARES: u8 = 21;
 const T_MASKED_CHUNK: u8 = 22;
 const T_GRADIENT_CHUNK: u8 = 23;
+const T_PARTIAL_SUM: u8 = 24;
 
 fn blob_list_len(blobs: &[Vec<u8>]) -> usize {
     4 + blobs.iter().map(|b| 4 + b.len()).sum::<usize>()
@@ -264,6 +281,27 @@ pub fn begin_gradient_chunk(
     w.u32(count);
 }
 
+/// The `PartialSum` header — variant tag through the payload
+/// word-count prefix — for the leaf aggregators' zero-copy uplink.
+/// The caller appends exactly `count` words with [`Writer::u64s_raw`];
+/// the result is byte-identical to `Msg::PartialSum { .. }.encode()`
+/// (the frame-encode rule, pinned by `chunk_builders_match_encode`).
+pub fn begin_partial_sum(
+    w: &mut Writer,
+    round: u32,
+    tag: u8,
+    shard_start: u16,
+    shard_end: u16,
+    count: u32,
+) {
+    w.u8(T_PARTIAL_SUM);
+    w.u32(round);
+    w.u8(tag);
+    w.u16(shard_start);
+    w.u16(shard_end);
+    w.u32(count);
+}
+
 impl Msg {
     /// Exact wire size of [`Msg::encode`]'s output, computed without
     /// encoding. The zero-copy path sizes its single allocation with
@@ -295,6 +333,7 @@ impl Msg {
             Msg::GradientSum { words, .. } => 1 + 4 + 4 + 8 * words.len(),
             Msg::GradientChunk { words, .. } => 1 + 4 + 2 + 4 + 4 + 4 + 8 * words.len(),
             Msg::FloatGradientSum { vals, .. } => 1 + 4 + 4 + 4 * vals.len(),
+            Msg::PartialSum { words, .. } => 1 + 4 + 1 + 2 + 2 + 4 + 8 * words.len(),
             Msg::Predictions { probs, .. } => 1 + 4 + 4 + 4 * probs.len(),
             Msg::SeedShares { sealed, .. } => 1 + 8 + 2 + 32 + blob_list_len(sealed),
             Msg::ShareRelay { sealed, .. } => 1 + 8 + blob_list_len(sealed),
@@ -421,6 +460,14 @@ impl Msg {
                 w.u32(*round);
                 w.f32s(vals);
             }
+            Msg::PartialSum { round, tag, shard_start, shard_end, words } => {
+                w.u8(T_PARTIAL_SUM);
+                w.u32(*round);
+                w.u8(*tag);
+                w.u16(*shard_start);
+                w.u16(*shard_end);
+                w.u64s(words);
+            }
             Msg::Predictions { round, probs } => {
                 w.u8(T_PREDICTIONS);
                 w.u32(*round);
@@ -521,6 +568,13 @@ impl Msg {
                 words: r.u64s()?,
             },
             T_FLOAT_GRADIENT_SUM => Msg::FloatGradientSum { round: r.u32()?, vals: r.f32s()? },
+            T_PARTIAL_SUM => Msg::PartialSum {
+                round: r.u32()?,
+                tag: r.u8()?,
+                shard_start: r.u16()?,
+                shard_end: r.u16()?,
+                words: r.u64s()?,
+            },
             T_PREDICTIONS => Msg::Predictions { round: r.u32()?, probs: r.f32s()? },
             T_SEED_SHARES => Msg::SeedShares {
                 epoch: r.u64()?,
@@ -617,6 +671,13 @@ mod tests {
             words: vec![11, 12, u64::MAX],
         });
         roundtrip(Msg::FloatGradientSum { round: 2, vals: vec![3.0] });
+        roundtrip(Msg::PartialSum {
+            round: 2,
+            tag: 1,
+            shard_start: 3,
+            shard_end: 5,
+            words: vec![u64::MAX, 0, 17],
+        });
         roundtrip(Msg::Predictions { round: 5, probs: vec![0.9, 0.1] });
         roundtrip(Msg::SeedShares {
             epoch: 2,
@@ -699,7 +760,33 @@ mod tests {
             begin_gradient_chunk(&mut w, 9, 4, 1024, 5184, words.len() as u32);
             w.u64s_raw(&words);
             assert_eq!(w.finish(), g.encode(), "gradient n={}", words.len());
+
+            let p = Msg::PartialSum {
+                round: 9,
+                tag: 0,
+                shard_start: 2,
+                shard_end: 4,
+                words: words.clone(),
+            };
+            let mut w = Writer::with_capacity(p.encoded_len());
+            begin_partial_sum(&mut w, 9, 0, 2, 4, words.len() as u32);
+            w.u64s_raw(&words);
+            assert_eq!(w.finish(), p.encode(), "partial n={}", words.len());
         }
+    }
+
+    #[test]
+    fn partial_sum_header_is_14_bytes() {
+        use crate::coordinator::streaming::PARTIAL_SUM_HEADER_BYTES;
+        let m = Msg::PartialSum {
+            round: 0,
+            tag: 0,
+            shard_start: 0,
+            shard_end: 3,
+            words: vec![0; 250],
+        };
+        // the documented per-partial Table-2 accounting constant
+        assert_eq!(m.encode().len() as u64, PARTIAL_SUM_HEADER_BYTES + 250 * 8);
     }
 
     #[test]

@@ -26,6 +26,17 @@
 //!   exact dropout purge. Bit-identical reports to the monolithic
 //!   path for any worker count; see the module docs for the memory
 //!   model.
+//! * [`topology`] — the hierarchical fan-in tree (`--leaves L`):
+//!   [`topology::ShardMap`] partitions the clients into L contiguous
+//!   shards, each owned by a [`topology::LeafAggregator`] that folds
+//!   its shard's masked fan-in into a partial ℤ₂⁶⁴ sum and forwards
+//!   one [`Msg::PartialSum`] per (round, tensor) to the root — fan-in
+//!   drops from O(n·d) per node to O((n/L)·d + L·d). A partial stays
+//!   masked by every cross-shard pairwise term, so no intermediate
+//!   node sees plaintext; in-process transports run the tree as the
+//!   [`topology::TreeAggregator`] wrapper, TCP runs as `vfl-sa leaf`
+//!   relay processes. Bit-identical reports and Table-2 counters for
+//!   every L.
 //! * [`driver`] — builds the party set, lays out the static round
 //!   schedule (setup → training with §5.1 key rotation → testing),
 //!   hands it with the configured window width to the
@@ -47,6 +58,7 @@ pub mod metrics;
 pub mod parties;
 pub mod party;
 pub mod streaming;
+pub mod topology;
 pub mod window;
 
 pub use backend::Backend;
@@ -60,4 +72,7 @@ pub use messages::Msg;
 pub use metrics::{Metrics, PipelineStats};
 pub use party::{Note, Outbox, Party, RoundKind, RoundSpec, SETUP_ROUND};
 pub use streaming::StreamCfg;
+pub use topology::{
+    validate_topology, LeafAggregator, ShardMap, TreeAggregator, MAX_LEAVES,
+};
 pub use window::{RoundWindow, MAX_ROUNDS_IN_FLIGHT};

@@ -119,9 +119,10 @@ pub fn party_rng(seed: u64, client_idx: usize) -> DetRng {
 }
 
 /// Tensor tags of the two masked fan-ins (must match what the parties
-/// pass to `mask_tensor`).
-const TAG_ACTIVATION: u32 = 0;
-const TAG_GRADIENT: u32 = 1;
+/// pass to `mask_tensor`). Shared with the tree topology layer, which
+/// tags its leaf [`Msg::PartialSum`]s with the same values.
+pub(crate) const TAG_ACTIVATION: u32 = 0;
+pub(crate) const TAG_GRADIENT: u32 = 1;
 
 /// Build the upload for one masked ℤ₂⁶⁴ tensor: a single monolithic
 /// message, or — when the streaming pipeline is on (`chunk_words`
@@ -1375,6 +1376,19 @@ struct AggRoundCtx {
     /// concurrently without cross-talk).
     acts_asm: ChunkAssembler,
     grads_asm: ChunkAssembler,
+    /// Leaf partial ℤ₂⁶⁴ sums (`--leaves` tree runs): `shard_start` →
+    /// (`shard_end`, words), a half-open client range. Each partial
+    /// folds every live client in its range; the root stitches the
+    /// disjoint partials by wrap-addition exactly like the shard
+    /// merge, so the total is bit-identical to the flat fan-in.
+    acts_partial: BTreeMap<u16, (u16, Vec<u64>)>,
+    grads_partial: BTreeMap<u16, (u16, Vec<u64>)>,
+    /// Clients whose fan-in contribution is buffered at their owning
+    /// leaf (tree runs). Counted for stall diagnosis only — the data
+    /// itself arrives later as a [`Msg::PartialSum`], so completeness
+    /// must never count these.
+    tree_acts_present: BTreeSet<u16>,
+    tree_grads_present: BTreeSet<u16>,
     /// This round's fan-ins were summed and consumed (the buffers
     /// empty out on consumption, so stall diagnosis needs the flags).
     acts_done: bool,
@@ -1392,7 +1406,9 @@ impl AggRoundCtx {
         let mono = self.acts_exact.values().map(|v| v.len() * 8).sum::<usize>()
             + self.acts_float.values().map(|v| v.len() * 4).sum::<usize>()
             + self.grads_exact.values().map(|v| v.len() * 8).sum::<usize>()
-            + self.grads_float.values().map(|v| v.len() * 4).sum::<usize>();
+            + self.grads_float.values().map(|v| v.len() * 4).sum::<usize>()
+            + self.acts_partial.values().map(|(_, v)| v.len() * 8).sum::<usize>()
+            + self.grads_partial.values().map(|(_, v)| v.len() * 8).sum::<usize>();
         (mono as u64, self.acts_asm.buffered_bytes() + self.grads_asm.buffered_bytes())
     }
 
@@ -1582,6 +1598,10 @@ impl<'e> Aggregator<'e> {
             grads_float: BTreeMap::new(),
             acts_asm: asm(0),
             grads_asm: asm(1),
+            acts_partial: BTreeMap::new(),
+            grads_partial: BTreeMap::new(),
+            tree_acts_present: BTreeSet::new(),
+            tree_grads_present: BTreeSet::new(),
             acts_done: false,
             grads_done: false,
             metered: (0, 0, 0),
@@ -1713,6 +1733,49 @@ impl<'e> Aggregator<'e> {
         self.live.iter().filter(|&&c| c != 0).count()
     }
 
+    /// Live clients covered by a round's buffered leaf partials (tree
+    /// runs): each partial's half-open client range is intersected
+    /// with the live set, so a shard that shrank after emission never
+    /// over-counts. `skip_active` excludes client 0 (gradient fan-in).
+    fn partial_cover(
+        live: &BTreeSet<u16>,
+        partials: &BTreeMap<u16, (u16, Vec<u64>)>,
+        skip_active: bool,
+    ) -> usize {
+        partials
+            .iter()
+            .map(|(&s, v)| live.range(s..v.0).filter(|&&c| !skip_active || c != 0).count())
+            .sum()
+    }
+
+    /// Clients still participating — the tree wrapper syncs each
+    /// leaf's shard view off this after every delegated call.
+    pub(crate) fn live_clients(&self) -> &BTreeSet<u16> {
+        &self.live
+    }
+
+    /// Whether `round`'s fan-in context is still live (a retired round
+    /// must not receive a re-emitted leaf partial: its sum already went
+    /// out, exactly as a flat round keeps a pre-drop contribution).
+    pub(crate) fn has_round_ctx(&self, round: u32) -> bool {
+        self.ctxs.contains_key(&round)
+    }
+
+    /// Tree runs: record that `from`'s (`round`, `tag`) fan-in
+    /// contribution is buffered at its owning leaf, so stall diagnosis
+    /// does not declare a client dropped while its shard's partial is
+    /// still folding. Never counted toward completeness — the words
+    /// arrive later as a [`Msg::PartialSum`].
+    pub(crate) fn note_tree_presence(&mut self, round: u32, tag: u8, from: u16) {
+        if let Some(ctx) = self.ctxs.get_mut(&round) {
+            match tag as u32 {
+                TAG_ACTIVATION => ctx.tree_acts_present.insert(from),
+                TAG_GRADIENT => ctx.tree_grads_present.insert(from),
+                _ => false,
+            };
+        }
+    }
+
     /// Apply the global-module SGD update (the aggregator computes
     /// dwg/dbg itself from the clear z — which is legitimately public
     /// to it under the protocol).
@@ -1781,8 +1844,10 @@ impl<'e> Aggregator<'e> {
         ctx: &mut AggRoundCtx,
         out: &mut Outbox,
     ) -> Result<()> {
-        let contributed =
-            ctx.acts_exact.len() + ctx.acts_float.len() + ctx.acts_asm.complete_count();
+        let contributed = ctx.acts_exact.len()
+            + ctx.acts_float.len()
+            + ctx.acts_asm.complete_count()
+            + Self::partial_cover(&self.live, &ctx.acts_partial, false);
         if !self.unrecovered.is_empty() || contributed < self.live.len() {
             return Ok(());
         }
@@ -1790,8 +1855,10 @@ impl<'e> Aggregator<'e> {
         ctx.acts_done = true;
         // BTreeMap order = client order: float addition order (and thus
         // every output bit) is the same on every transport. The chunked
-        // sum is ℤ₂⁶⁴-only, where addition order is immaterial.
-        let exact: Vec<Vec<u64>> = std::mem::take(&mut ctx.acts_exact).into_values().collect();
+        // sum is ℤ₂⁶⁴-only, where addition order is immaterial — and so
+        // are the disjoint leaf partials of a tree run.
+        let mut exact: Vec<Vec<u64>> = std::mem::take(&mut ctx.acts_exact).into_values().collect();
+        exact.extend(std::mem::take(&mut ctx.acts_partial).into_values().map(|(_, w)| w));
         let float: Vec<Vec<f32>> = std::mem::take(&mut ctx.acts_float).into_values().collect();
         let chunked = ctx.acts_asm.take_sum()?;
         let t0 = Instant::now();
@@ -1856,13 +1923,17 @@ impl<'e> Aggregator<'e> {
         out: &mut Outbox,
     ) -> Result<()> {
         let n_passive = self.live_passives();
-        let contributed =
-            ctx.grads_exact.len() + ctx.grads_float.len() + ctx.grads_asm.complete_count();
+        let contributed = ctx.grads_exact.len()
+            + ctx.grads_float.len()
+            + ctx.grads_asm.complete_count()
+            + Self::partial_cover(&self.live, &ctx.grads_partial, true);
         if n_passive == 0 || !self.unrecovered.is_empty() || contributed < n_passive {
             return Ok(());
         }
         ctx.grads_done = true;
-        let exact: Vec<Vec<u64>> = std::mem::take(&mut ctx.grads_exact).into_values().collect();
+        let mut exact: Vec<Vec<u64>> =
+            std::mem::take(&mut ctx.grads_exact).into_values().collect();
+        exact.extend(std::mem::take(&mut ctx.grads_partial).into_values().map(|(_, w)| w));
         let float: Vec<Vec<f32>> = std::mem::take(&mut ctx.grads_float).into_values().collect();
         let chunked = ctx.grads_asm.take_sum()?;
         let t0 = Instant::now();
@@ -1952,6 +2023,15 @@ impl<'e> Aggregator<'e> {
                 ctx.grads_float.remove(g);
                 ctx.acts_asm.purge(*g)?;
                 ctx.grads_asm.purge(*g)?;
+                // a leaf partial that already folded the dropped
+                // client's masked words cannot be corrected here —
+                // discard the whole partial; the owning leaf purges
+                // its fold and re-emits a corrected one (tree runs
+                // only; flat runs buffer no partials)
+                ctx.acts_partial.retain(|&s, v| !(s..v.0).contains(g));
+                ctx.grads_partial.retain(|&s, v| !(s..v.0).contains(g));
+                ctx.tree_acts_present.remove(g);
+                ctx.tree_grads_present.remove(g);
             }
         }
         // the purge mutated every live context's buffers at once:
@@ -2122,13 +2202,19 @@ impl<'e> Aggregator<'e> {
                 // chunk senders count only once complete: a
                 // half-streamed tensor is a stalled sender, exactly
                 // like a missing one
-                let acts: BTreeSet<u16> = ctx
+                let mut acts: BTreeSet<u16> = ctx
                     .acts_exact
                     .keys()
                     .chain(ctx.acts_float.keys())
+                    .chain(ctx.tree_acts_present.iter())
                     .copied()
                     .chain(ctx.acts_asm.complete_senders())
                     .collect();
+                // tree runs: a buffered partial vouches for every live
+                // client in its range
+                for (&s, v) in &ctx.acts_partial {
+                    acts.extend(self.live.range(s..v.0).copied());
+                }
                 if acts.len() < self.live.len() {
                     let gone: BTreeSet<u16> =
                         self.live.iter().copied().filter(|c| !acts.contains(c)).collect();
@@ -2141,13 +2227,17 @@ impl<'e> Aggregator<'e> {
                     Diag::Nothing
                 }
             } else if ctx.kind == RoundKind::Train && !ctx.grads_done {
-                let grads: BTreeSet<u16> = ctx
+                let mut grads: BTreeSet<u16> = ctx
                     .grads_exact
                     .keys()
                     .chain(ctx.grads_float.keys())
+                    .chain(ctx.tree_grads_present.iter())
                     .copied()
                     .chain(ctx.grads_asm.complete_senders())
                     .collect();
+                for (&s, v) in &ctx.grads_partial {
+                    grads.extend(self.live.range(s..v.0).filter(|&&c| c != 0).copied());
+                }
                 if grads.len() < self.live_passives() {
                     let gone: BTreeSet<u16> = self
                         .live
@@ -2263,8 +2353,11 @@ impl<'e> Party for Aggregator<'e> {
         // traffic from a declared-dropped client (e.g. one that was
         // slow rather than dead, or a late message already in flight)
         // is ignored for the rest of the run
+        // (a PartialSum is authored by a leaf on behalf of its whole
+        // shard — the carrying connection's client id is immaterial,
+        // and the root intersects the range with its own live set)
         if let Addr::Client(i) = from {
-            if !self.live.contains(&(i as u16)) {
+            if !self.live.contains(&(i as u16)) && !matches!(msg, Msg::PartialSum { .. }) {
                 return Ok(());
             }
         }
@@ -2373,6 +2466,37 @@ impl<'e> Party for Aggregator<'e> {
                         self.maybe_sum_gradients(round, &mut ctx, out)?;
                     }
                     t => bail!("masked chunk with unknown tensor tag {t}"),
+                }
+                self.park(round, ctx);
+            }
+            Msg::PartialSum { round, tag, shard_start, shard_end, words } => {
+                if shard_start >= shard_end || shard_end as usize > self.n_clients {
+                    bail!("partial sum with invalid client range {shard_start}..{shard_end}");
+                }
+                // a partial for a round the root already retired is the
+                // tree twin of a late message from a declared-dropped
+                // client: the sum went out pre-drop, there is nothing
+                // left to correct. A distributed leaf re-emits without
+                // knowing the root's ring state, so this is tolerance,
+                // not an error (the in-process wrapper filters the same
+                // case before feeding).
+                let Some(mut ctx) = self.ctxs.remove(&round) else {
+                    return Ok(());
+                };
+                // keyed by shard_start: a corrected re-emission after a
+                // post-emission dropout purge replaces its predecessor
+                match tag as u32 {
+                    TAG_ACTIVATION => {
+                        ctx.acts_partial.insert(shard_start, (shard_end, words));
+                        self.note_buffered(&mut ctx);
+                        self.maybe_sum_activations(round, &mut ctx, out)?;
+                    }
+                    TAG_GRADIENT => {
+                        ctx.grads_partial.insert(shard_start, (shard_end, words));
+                        self.note_buffered(&mut ctx);
+                        self.maybe_sum_gradients(round, &mut ctx, out)?;
+                    }
+                    t => bail!("partial sum with unknown tensor tag {t}"),
                 }
                 self.park(round, ctx);
             }

@@ -222,6 +222,11 @@ pub const GRAD_CHUNK_MSG_HEADER_BYTES: u64 = 19;
 /// + word-count(4).
 pub const GRAD_SUM_HEADER_BYTES: u64 = 9;
 
+/// Wire-header bytes of one `PartialSum` (a leaf aggregator's folded
+/// shard uplink in the `--leaves` fan-in tree): tag(1) + round(4) +
+/// tensor-tag(1) + shard_start(2) + shard_end(2) + word-count(4).
+pub const PARTIAL_SUM_HEADER_BYTES: u64 = 14;
+
 /// How a tensor of `total` words is cut into `shards` contiguous
 /// shards: the first `total % shards` shards get one extra word, so
 /// shard sizes differ by at most one and every shard is non-empty
@@ -364,6 +369,12 @@ impl ShardBank {
         std::mem::take(&mut self.accs).into_values().collect()
     }
 
+    /// Non-consuming copy of the current accumulators (the leaf
+    /// aggregators' re-emittable partial sums).
+    fn snapshot(&self) -> Vec<(usize, Vec<u64>)> {
+        self.accs.values().cloned().collect()
+    }
+
     fn reset(&mut self) {
         self.accs.clear();
     }
@@ -380,6 +391,9 @@ enum Job {
     Add { slot: u64, shard: usize, at: usize, words: Vec<u64> },
     Sub { slot: u64, shard: usize, at: usize, words: Vec<u64> },
     Drain { slot: u64, reply: Sender<Vec<(usize, Vec<u64>)>> },
+    /// Copy a slot's accumulators without draining them (the leaf
+    /// aggregators' re-emittable partial snapshot).
+    Snapshot { slot: u64, reply: Sender<Vec<(usize, Vec<u64>)>> },
     /// Free a slot's accumulators without draining them (assembler
     /// reset or drop).
     Retire { slot: u64 },
@@ -406,6 +420,10 @@ fn worker_loop(rx: Receiver<Job>, w: usize, workers: usize) {
             }
             Job::Drain { slot, reply } => {
                 let part = banks.remove(&slot).map(|mut b| b.drain()).unwrap_or_default();
+                let _ = reply.send(part);
+            }
+            Job::Snapshot { slot, reply } => {
+                let part = banks.get(&slot).map(|b| b.snapshot()).unwrap_or_default();
                 let _ = reply.send(part);
             }
             Job::Retire { slot } => {
@@ -524,6 +542,27 @@ impl Exec {
             Exec::Pool { client, slot } => {
                 let (rtx, rrx) = channel();
                 client.to_all(|| Job::Drain { slot: *slot, reply: rtx.clone() });
+                drop(rtx);
+                let mut out = Vec::new();
+                while let Ok(part) = rrx.recv() {
+                    out.extend(part);
+                }
+                out
+            }
+        }
+    }
+
+    /// [`drain`](Exec::drain)'s non-consuming twin: copy every
+    /// executor's (start, accumulator) pairs, leaving the slot intact
+    /// so folding (and purging) can continue afterwards. Same FIFO
+    /// guarantee — the snapshot observes every add/sub dispatched
+    /// before it.
+    fn snapshot(&mut self) -> Vec<(usize, Vec<u64>)> {
+        match self {
+            Exec::Inline(bank) => bank.snapshot(),
+            Exec::Pool { client, slot } => {
+                let (rtx, rrx) = channel();
+                client.to_all(|| Job::Snapshot { slot: *slot, reply: rtx.clone() });
                 drop(rtx);
                 let mut out = Vec::new();
                 while let Ok(part) = rrx.recv() {
@@ -869,6 +908,24 @@ impl ChunkAssembler {
         Ok(Some(global))
     }
 
+    /// [`take_sum`](ChunkAssembler::take_sum)'s non-consuming twin:
+    /// stitch the *current* accumulators into one global vector
+    /// without draining or resetting anything, so the caller can keep
+    /// folding chunks and purging senders afterwards. This is what
+    /// lets a leaf aggregator re-emit a corrected `PartialSum` after a
+    /// post-emission dropout purge. `Ok(None)` when no chunk traffic
+    /// arrived yet.
+    pub fn snapshot_sum(&mut self) -> Result<Option<Vec<u64>>> {
+        let Some(layout) = self.layout else {
+            return Ok(None);
+        };
+        let mut global = vec![0u64; layout.total];
+        for (start, acc) in self.exec.snapshot() {
+            global[start..start + acc.len()].copy_from_slice(&acc);
+        }
+        Ok(Some(global))
+    }
+
     /// Resident bytes of this fan-in's accumulator state — the
     /// quantity behind the streaming pipeline's peak-memory claim
     /// (metered into [`Metrics`](super::Metrics) by the aggregator).
@@ -1174,6 +1231,30 @@ mod tests {
                 "slot {} must see only its own chunks",
                 10 + s
             );
+        }
+    }
+
+    #[test]
+    fn snapshot_sum_is_non_consuming_and_tracks_purges() {
+        let total = 24;
+        let layout = ShardLayout::new(total, 3);
+        let a: Vec<u64> = (0..total as u64).collect();
+        let b: Vec<u64> = (0..total as u64).map(|j| j * 100).collect();
+        let mut want_ab = vec![0u64; total];
+        for (w, (x, y)) in want_ab.iter_mut().zip(a.iter().zip(&b)) {
+            *w = x.wrapping_add(*y);
+        }
+        for workers in [1, 3] {
+            let mut asm = asm(true, 3, workers);
+            assert!(asm.snapshot_sum().unwrap().is_none(), "no traffic yet");
+            feed(&mut asm, 1, layout, 4, &a);
+            feed(&mut asm, 2, layout, 4, &b);
+            assert_eq!(asm.snapshot_sum().unwrap().unwrap(), want_ab, "workers={workers}");
+            // snapshotting consumed nothing: purge + re-snapshot works
+            asm.purge(2).unwrap();
+            assert_eq!(asm.snapshot_sum().unwrap().unwrap(), a, "corrected re-emission");
+            // the consuming merge still agrees afterwards
+            assert_eq!(asm.take_sum().unwrap().unwrap(), a);
         }
     }
 

@@ -1,0 +1,632 @@
+//! Hierarchical fan-in aggregation tree (`--leaves L`).
+//!
+//! The flat protocol funnels every masked fan-in message of every
+//! client into the one aggregator, so its per-round fan-in cost is
+//! O(n·d) however many workers fold the chunks. This module removes
+//! that serial choke point: the clients are partitioned into L
+//! contiguous shards, each owned by a [`LeafAggregator`] that folds
+//! its shard's masked tensors into a partial ℤ₂⁶⁴ sum and forwards a
+//! single [`Msg::PartialSum`] per (round, tensor) up to the root,
+//! which stitches the L disjoint partials by wrap-addition exactly
+//! like the [`ChunkAssembler`](super::streaming::ChunkAssembler)
+//! shard merge. Per-node fan-in drops to O((n/L)·d + L·d).
+//!
+//! **Mask safety needs no new crypto.** Pairwise masks telescope to
+//! zero only in the *full* cross-client sum (Eq. 4-5): a leaf's
+//! partial over shard S still carries every pairwise term between a
+//! member of S and a client outside S, so no intermediate node — leaf
+//! or root before the final stitch — ever sees an unmasked value.
+//! `tests/security_properties.rs` asserts this directly.
+//!
+//! **Bit-identity.** ℤ₂⁶⁴ wrap-addition is commutative and
+//! associative, so regrouping the same summands per shard changes
+//! *where* words are added, never *what* is added: reports and
+//! Table-2 counters are bit-identical to the flat topology for every
+//! L (asserted for L ∈ {1, 2, 4} in `tests/tree_topology.rs` on all
+//! four transports). Float modes would change addition order, which
+//! is why [`validate_topology`] requires
+//! [`SecurityMode::SecureExact`].
+//!
+//! **Dropout routing.** Recovery control traffic (`DropoutNotice`,
+//! `SurrenderShares`, seed reconstruction, mask corrections) stays
+//! between the root and the clients, unchanged. The tree's only new
+//! obligation is the exact-purge invariant: the recovery correction
+//! adds a dropped client's *entire* total mask, which is sound only
+//! if nothing of theirs remains in any buffer. The root therefore
+//! discards every buffered partial whose client range contains a
+//! newly-declared-dropped client, the owning leaf purges the member
+//! from its fold (mono buffers and the revocable assembler's rollback
+//! log), and re-emits a corrected partial for every still-complete
+//! entry — keyed by `shard_start`, so the re-emission replaces its
+//! stale predecessor. The root's `WindowDrain` note reaches the
+//! scheduler exactly as in a flat run, so the pipelined window drains
+//! tree-wide.
+//!
+//! In-process transports (sim/threaded/evloop) run the tree as a
+//! [`TreeAggregator`]: one [`Party`] at `Addr::Aggregator` that
+//! routes fan-in messages to the owning leaf and delegates everything
+//! else to the wrapped root [`Aggregator`]. Cross-process TCP runs
+//! place each leaf in its own `vfl-sa leaf` process, which relays all
+//! non-fan-in frames verbatim (per-sender FIFO preserved) and sends
+//! the folded `PartialSum` upstream; see `net/tcp.rs`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::Addr;
+use crate::z64;
+
+use super::config::{RunConfig, SecurityMode};
+use super::messages::Msg;
+use super::metrics::Metrics;
+use super::parties::{Aggregator, TAG_ACTIVATION, TAG_GRADIENT};
+use super::party::{Outbox, Party, RoundSpec};
+use super::streaming::{ChunkAssembler, PoolClient, RollbackCfg, StreamCfg, WorkerPool};
+use super::window::MAX_ROUNDS_IN_FLIGHT;
+
+/// Hard cap on `--leaves`: a fan-in tree wider than this buys nothing
+/// (the root's O(L·d) stitch would dominate), and a typo must not
+/// spawn dozens of leaf processes or worker pools.
+pub const MAX_LEAVES: usize = 64;
+
+/// Validate the tree-topology knob against the run shape, returning
+/// the leaf count (`None` = the flat topology). Rejecting here means
+/// `--leaves 0`, a leaf count beyond the client count, or a float
+/// security mode fail at configuration time with a clear error
+/// instead of deadlocking mid-round — the same contract as
+/// [`validate_streaming`](super::driver::validate_streaming).
+pub fn validate_topology(cfg: &RunConfig) -> Result<Option<usize>> {
+    let Some(l) = cfg.leaves else {
+        return Ok(None);
+    };
+    if l == 0 {
+        bail!("--leaves 0 is invalid (the fan-in tree needs at least one leaf aggregator)");
+    }
+    if l > MAX_LEAVES {
+        bail!("--leaves {l} exceeds the cap ({MAX_LEAVES})");
+    }
+    let n = cfg.model.n_clients();
+    if l > n {
+        bail!("--leaves {l} exceeds the client count ({n}): every leaf needs a nonempty shard");
+    }
+    if cfg.security != SecurityMode::SecureExact {
+        bail!(
+            "--leaves requires SecureExact: only Z_2^64 partial sums are order-independent, \
+             which is what keeps a tree run bit-identical to the flat topology"
+        );
+    }
+    Ok(Some(l))
+}
+
+/// The static client → leaf partition: L contiguous, disjoint,
+/// nonempty shards covering `[0, n_clients)`, sizes differing by at
+/// most one (the same balanced-split rule as
+/// [`ShardLayout`](super::streaming::ShardLayout)). Static by design:
+/// a dropped client leaves the live set, never its shard, so every
+/// process in a distributed tree derives the identical map from
+/// (n_clients, leaves) alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    n_clients: usize,
+    leaves: usize,
+}
+
+impl ShardMap {
+    pub fn new(n_clients: usize, leaves: usize) -> Self {
+        assert!(leaves >= 1, "need at least one leaf");
+        assert!(leaves <= n_clients, "leaf count {leaves} exceeds client count {n_clients}");
+        ShardMap { n_clients, leaves }
+    }
+
+    pub fn leaves(&self) -> usize {
+        self.leaves
+    }
+
+    /// Half-open client range `[start, end)` owned by leaf `k`.
+    pub fn range(&self, k: usize) -> (u16, u16) {
+        assert!(k < self.leaves);
+        let s = k * self.n_clients / self.leaves;
+        let e = (k + 1) * self.n_clients / self.leaves;
+        (s as u16, e as u16)
+    }
+
+    /// The leaf owning client `c`.
+    pub fn owner(&self, c: u16) -> usize {
+        assert!((c as usize) < self.n_clients, "client {c} out of range");
+        // start from the proportional guess and walk to the owner —
+        // the ranges are monotone, so this terminates in ≤ 1 step
+        let mut k = (c as usize) * self.leaves / self.n_clients;
+        loop {
+            let (s, e) = self.range(k);
+            if c < s {
+                k -= 1;
+            } else if c >= e {
+                k += 1;
+            } else {
+                return k;
+            }
+        }
+    }
+}
+
+/// One leaf's fold state for a single (round, tensor tag) fan-in:
+/// monolithic masked tensors buffered by sender (client order, as at
+/// the root) plus a [`ChunkAssembler`] for the chunked path.
+struct LeafEntry {
+    mono: BTreeMap<u16, Vec<u64>>,
+    asm: ChunkAssembler,
+    /// A partial for this entry already went upstream (purges re-emit
+    /// over it; the root replaces by `shard_start`).
+    emitted: bool,
+}
+
+/// A leaf aggregator: owns the contiguous client shard `[start, end)`,
+/// folds its members' masked fan-in into one partial ℤ₂⁶⁴ sum per
+/// (round, tensor), and hands the [`Msg::PartialSum`] to its caller —
+/// the in-process [`TreeAggregator`] or the `vfl-sa leaf` TCP relay.
+///
+/// The leaf never unmasks anything: it wrap-adds opaque masked words,
+/// reusing the exact [`ChunkAssembler`]/[`z64`] kernels the root uses,
+/// including the rollback log for exact dropout purge in tolerant
+/// runs. Contributions are buffered per sender and kept after
+/// emission so a post-emission dropout can subtract exactly the
+/// dropped member's words and re-emit.
+pub struct LeafAggregator {
+    start: u16,
+    end: u16,
+    /// Shard members still live at the root (the owner syncs this
+    /// through [`LeafAggregator::purge`]).
+    live: BTreeSet<u16>,
+    revocable: bool,
+    shards: usize,
+    rollback: RollbackCfg,
+    /// Shared fold pool (`--agg-workers` > 1 on a chunked run); slots
+    /// are namespaced by leaf index so leaves never cross-talk.
+    pool: Option<PoolClient>,
+    slot_base: u64,
+    entries: BTreeMap<(u32, u8), LeafEntry>,
+}
+
+impl LeafAggregator {
+    pub fn new(
+        idx: usize,
+        start: u16,
+        end: u16,
+        stream: &StreamCfg,
+        revocable: bool,
+        pool: Option<PoolClient>,
+    ) -> Self {
+        assert!(start < end, "leaf shard must be nonempty");
+        LeafAggregator {
+            start,
+            end,
+            live: (start..end).collect(),
+            revocable,
+            shards: stream.shards.max(1),
+            rollback: stream.rollback,
+            pool,
+            // root assembler slots are ((round << 1) | tag) < 2^33;
+            // leaf slots live in disjoint high windows
+            slot_base: ((idx as u64) + 1) << 40,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// The static client range this leaf owns.
+    pub fn shard_range(&self) -> (u16, u16) {
+        (self.start, self.end)
+    }
+
+    fn entry(&mut self, round: u32, tag: u8) -> &mut LeafEntry {
+        if !self.entries.contains_key(&(round, tag))
+            && self.entries.len() >= 2 * MAX_ROUNDS_IN_FLIGHT
+        {
+            // backstop ring bound: entries normally retire through
+            // finish_round, but a driver that never completes rounds
+            // must not grow the fold state without bound
+            self.entries.pop_first();
+        }
+        let slot = self.slot_base | ((round as u64) << 1) | (tag as u64 & 1);
+        let asm = match &self.pool {
+            Some(p) => ChunkAssembler::pooled(
+                self.revocable,
+                self.shards,
+                self.rollback,
+                p.clone(),
+                slot,
+            ),
+            None => ChunkAssembler::inline(self.revocable, self.shards, self.rollback),
+        };
+        self.entries
+            .entry((round, tag))
+            .or_insert(LeafEntry { mono: BTreeMap::new(), asm, emitted: false })
+    }
+
+    /// Expected contributors under the current live view: every live
+    /// shard member, minus the active party for the gradient fan-in.
+    fn expected(&self, tag: u8) -> BTreeSet<u16> {
+        self.live
+            .iter()
+            .copied()
+            .filter(|&c| tag as u32 != TAG_GRADIENT || c != 0)
+            .collect()
+    }
+
+    /// Whether `sender`'s tensor for (round, tag) is fully buffered
+    /// here — the tree's stall-diagnosis presence signal (a
+    /// half-streamed sender counts as missing, exactly as at a flat
+    /// root).
+    pub fn sender_complete(&self, round: u32, tag: u8, sender: u16) -> bool {
+        self.entries.get(&(round, tag)).is_some_and(|e| {
+            e.mono.contains_key(&sender) || e.asm.complete_senders().any(|s| s == sender)
+        })
+    }
+
+    fn complete(&self, round: u32, tag: u8) -> bool {
+        let Some(e) = self.entries.get(&(round, tag)) else {
+            return false;
+        };
+        let expected = self.expected(tag);
+        !expected.is_empty()
+            && expected
+                .iter()
+                .all(|c| e.mono.contains_key(c) || e.asm.complete_senders().any(|s| s == *c))
+    }
+
+    /// A monolithic masked tensor from a shard member. Returns the
+    /// emitted partial once the fold completes.
+    pub fn on_masked(
+        &mut self,
+        round: u32,
+        tag: u8,
+        from: u16,
+        words: Vec<u64>,
+    ) -> Result<Option<Msg>> {
+        if !self.live.contains(&from) {
+            return Ok(None);
+        }
+        self.entry(round, tag).mono.insert(from, words);
+        self.maybe_emit(round, tag)
+    }
+
+    /// One masked chunk from a shard member (the streaming path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_chunk(
+        &mut self,
+        round: u32,
+        tag: u8,
+        from: u16,
+        shard: u16,
+        offset: u32,
+        total: u32,
+        words: &[u64],
+    ) -> Result<Option<Msg>> {
+        if !self.live.contains(&from) {
+            return Ok(None);
+        }
+        self.entry(round, tag).asm.add_chunk(from, shard, offset, total, words)?;
+        self.maybe_emit(round, tag)
+    }
+
+    fn maybe_emit(&mut self, round: u32, tag: u8) -> Result<Option<Msg>> {
+        if !self.complete(round, tag) {
+            return Ok(None);
+        }
+        Ok(Some(self.partial(round, tag)?))
+    }
+
+    /// Build the partial for a complete (round, tag) fold: the
+    /// assembler's non-consuming snapshot plus every buffered
+    /// monolithic tensor, wrap-added in ℤ₂⁶⁴. Non-consuming so a
+    /// post-emission purge can re-emit a corrected partial.
+    fn partial(&mut self, round: u32, tag: u8) -> Result<Msg> {
+        let (start, end) = (self.start, self.end);
+        let e = self
+            .entries
+            .get_mut(&(round, tag))
+            .with_context(|| format!("no leaf fold for round {round} tag {tag}"))?;
+        let mut acc = match e.asm.snapshot_sum()? {
+            Some(a) => a,
+            None => {
+                let len =
+                    e.mono.values().next().map(|v| v.len()).context("empty leaf fold")?;
+                vec![0u64; len]
+            }
+        };
+        for w in e.mono.values() {
+            assert_eq!(w.len(), acc.len(), "masked vectors must be equal length");
+            z64::wrap_add(&mut acc, w);
+        }
+        e.emitted = true;
+        Ok(Msg::PartialSum { round, tag, shard_start: start, shard_end: end, words: acc })
+    }
+
+    /// A shard member was declared dropped: remove it from the live
+    /// view, subtract exactly its contribution from every fold (the
+    /// revocable assembler replays its rollback log), and return
+    /// corrected partials for every fold that is complete under the
+    /// shrunken expectation — including folds the dropped member was
+    /// the last missing contributor of, which become emittable only
+    /// now.
+    pub fn purge(&mut self, gone: u16) -> Result<Vec<Msg>> {
+        if !self.live.remove(&gone) {
+            return Ok(Vec::new());
+        }
+        let keys: Vec<(u32, u8)> = self.entries.keys().copied().collect();
+        let mut msgs = Vec::new();
+        for (round, tag) in keys {
+            if let Some(e) = self.entries.get_mut(&(round, tag)) {
+                e.mono.remove(&gone);
+                e.asm.purge(gone)?;
+            }
+            if self.complete(round, tag) {
+                msgs.push(self.partial(round, tag)?);
+            }
+        }
+        Ok(msgs)
+    }
+
+    /// The driver reported `round` complete: its folds retire (both
+    /// tensor tags), freeing the assemblers' pool slots.
+    pub fn finish_round(&mut self, round: u32) {
+        self.entries.retain(|&(r, _), _| r != round);
+    }
+}
+
+/// The in-process fan-in tree: one [`Party`] at `Addr::Aggregator`
+/// wrapping the root [`Aggregator`] and L [`LeafAggregator`]s.
+///
+/// Masked fan-in traffic from a client routes to its owning leaf;
+/// everything else — setup, batch relays, recovery control — delegates
+/// straight to the root with the same [`Outbox`], so downlink bytes
+/// and Table-2 counters are bit-identical to a flat run. A completed
+/// leaf fold feeds its [`Msg::PartialSum`] to the root as internal
+/// (unmetered) traffic from `Addr::Aggregator`, mirroring what a
+/// `vfl-sa leaf` process sends over its upstream socket.
+///
+/// After every root call the wrapper diffs the root's live set
+/// against its cache: newly-declared-dropped clients are purged from
+/// their owning leaf, and any corrected partials are fed back to the
+/// root — which already discarded the stale ones in its own purge —
+/// before recovery completes, preserving the exact-purge invariant.
+pub struct TreeAggregator<'e> {
+    root: Aggregator<'e>,
+    map: ShardMap,
+    leaves: Vec<LeafAggregator>,
+    /// Cached copy of the root's live set (drop detection).
+    live: BTreeSet<u16>,
+    /// One shared leaf fold pool (`--agg-workers` > 1 on a chunked
+    /// run); kept alive here, handed to leaves as clients.
+    _pool: Option<WorkerPool>,
+}
+
+impl<'e> TreeAggregator<'e> {
+    pub fn new(root: Aggregator<'e>, leaves: usize, stream: StreamCfg, revocable: bool) -> Self {
+        let map = ShardMap::new(root.n_clients, leaves);
+        let pool = if stream.chunk_words.is_some() && stream.agg_workers > 1 {
+            Some(WorkerPool::new(stream.agg_workers.min(stream.shards.max(1))))
+        } else {
+            None
+        };
+        let leaves = (0..leaves)
+            .map(|k| {
+                let (s, e) = map.range(k);
+                LeafAggregator::new(k, s, e, &stream, revocable, pool.as_ref().map(|p| p.client()))
+            })
+            .collect();
+        let live = root.live_clients().clone();
+        TreeAggregator { root, map, leaves, live, _pool: pool }
+    }
+
+    /// Diff the root's live set against the cache; purge newly-gone
+    /// members from their owning leaf and feed corrected partials
+    /// back to the root. Loops until quiescent — a fed partial can in
+    /// principle complete a sum whose handling shrinks the set again.
+    fn sync_live(&mut self, out: &mut Outbox) -> Result<()> {
+        loop {
+            let gone: Vec<u16> = self
+                .live
+                .iter()
+                .copied()
+                .filter(|c| !self.root.live_clients().contains(c))
+                .collect();
+            if gone.is_empty() {
+                return Ok(());
+            }
+            let mut emissions = Vec::new();
+            for g in gone {
+                self.live.remove(&g);
+                emissions.extend(self.leaves[self.map.owner(g)].purge(g)?);
+            }
+            for m in emissions {
+                // a retired round's sum already went out (same
+                // semantics as a flat round completed pre-drop):
+                // nothing to correct there
+                if m.round().is_some_and(|r| !self.root.has_round_ctx(r)) {
+                    continue;
+                }
+                self.root.on_message(Addr::Aggregator, m, out)?;
+            }
+        }
+    }
+
+    /// Route one fan-in contribution to the owning leaf; on fold
+    /// completion feed the partial to the root.
+    fn fold(
+        &mut self,
+        round: u32,
+        tag: u8,
+        sender: u16,
+        msg: Msg,
+        out: &mut Outbox,
+    ) -> Result<()> {
+        // mirror the root's declared-dropped filter and its
+        // unknown-round error, so tree and flat runs fail identically
+        if !self.live.contains(&sender) {
+            return Ok(());
+        }
+        if !self.root.has_round_ctx(round) {
+            bail!("fan-in traffic for unknown round {round}");
+        }
+        let k = self.map.owner(sender);
+        let emission = match msg {
+            Msg::MaskedActivation { round, from, words }
+            | Msg::MaskedGradient { round, from, words } => {
+                self.leaves[k].on_masked(round, tag, from, words)?
+            }
+            Msg::MaskedChunk { round, from, tag, shard, offset, total, words } => {
+                self.leaves[k].on_chunk(round, tag, from, shard, offset, total, &words)?
+            }
+            m => bail!("tree fold on a non-fan-in message {m:?}"),
+        };
+        // presence for the root's stall diagnosis — only once the
+        // sender's tensor is complete at its leaf, so a half-streamed
+        // sender is declared dropped exactly as at a flat root
+        if self.leaves[k].sender_complete(round, tag, sender) {
+            self.root.note_tree_presence(round, tag, sender);
+        }
+        if let Some(m) = emission {
+            self.root.on_message(Addr::Aggregator, m, out)?;
+            self.sync_live(out)?;
+        }
+        Ok(())
+    }
+}
+
+impl<'e> Party for TreeAggregator<'e> {
+    fn addr(&self) -> Addr {
+        Addr::Aggregator
+    }
+
+    fn on_round_start(&mut self, spec: &RoundSpec, out: &mut Outbox) -> Result<()> {
+        self.root.on_round_start(spec, out)
+    }
+
+    fn on_message(&mut self, from: Addr, msg: Msg, out: &mut Outbox) -> Result<()> {
+        match &msg {
+            Msg::MaskedActivation { round, from: sender, .. } => {
+                let (round, sender) = (*round, *sender);
+                self.fold(round, TAG_ACTIVATION as u8, sender, msg, out)
+            }
+            Msg::MaskedGradient { round, from: sender, .. } => {
+                let (round, sender) = (*round, *sender);
+                self.fold(round, TAG_GRADIENT as u8, sender, msg, out)
+            }
+            Msg::MaskedChunk { round, from: sender, tag, .. } => {
+                let (round, tag, sender) = (*round, *tag, *sender);
+                self.fold(round, tag, sender, msg, out)
+            }
+            _ => {
+                self.root.on_message(from, msg, out)?;
+                self.sync_live(out)
+            }
+        }
+    }
+
+    fn on_stall(&mut self, out: &mut Outbox) -> Result<()> {
+        self.root.on_stall(out)?;
+        self.sync_live(out)
+    }
+
+    fn on_round_complete(&mut self, round: u32) {
+        self.root.on_round_complete(round);
+        for leaf in &mut self.leaves {
+            leaf.finish_round(round);
+        }
+    }
+
+    fn concurrent_safe(&self) -> bool {
+        self.root.concurrent_safe()
+    }
+
+    fn take_metrics(&mut self) -> Metrics {
+        self.root.take_metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_map_partitions_exactly() {
+        for (n, l) in [(4, 1), (4, 2), (4, 4), (5, 2), (9, 4), (64, 64)] {
+            let m = ShardMap::new(n, l);
+            let mut covered = Vec::new();
+            for k in 0..l {
+                let (s, e) = m.range(k);
+                assert!(s < e, "shard {k} of ({n},{l}) is empty");
+                for c in s..e {
+                    assert_eq!(m.owner(c), k);
+                    covered.push(c);
+                }
+            }
+            assert_eq!(covered, (0..n as u16).collect::<Vec<_>>(), "({n},{l}) must partition");
+            // balanced: sizes differ by at most one
+            let sizes: Vec<usize> =
+                (0..l).map(|k| { let (s, e) = m.range(k); (e - s) as usize }).collect();
+            let (mn, mx) = (sizes.iter().min().copied(), sizes.iter().max().copied());
+            assert!(mx.zip(mn).is_some_and(|(a, b)| a - b <= 1));
+        }
+    }
+
+    #[test]
+    fn leaf_folds_and_emits_partial() {
+        let stream = StreamCfg::monolithic();
+        let mut leaf = LeafAggregator::new(0, 1, 3, &stream, false, None);
+        assert!(leaf.on_masked(0, 0, 1, vec![1, 2, 3]).unwrap().is_none(), "incomplete");
+        let m = leaf.on_masked(0, 0, 2, vec![10, 20, u64::MAX]).unwrap();
+        match m {
+            Some(Msg::PartialSum { round: 0, tag: 0, shard_start: 1, shard_end: 3, words }) => {
+                assert_eq!(words, vec![11, 22, 3u64.wrapping_add(u64::MAX)]);
+            }
+            other => panic!("expected a PartialSum, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn leaf_gradient_excludes_active_party() {
+        let stream = StreamCfg::monolithic();
+        // shard [0, 2): client 0 is the active party — the gradient
+        // fan-in completes on client 1 alone
+        let mut leaf = LeafAggregator::new(0, 0, 2, &stream, false, None);
+        let m = leaf.on_masked(3, TAG_GRADIENT as u8, 1, vec![7, 8]).unwrap();
+        assert!(matches!(m, Some(Msg::PartialSum { round: 3, tag: 1, .. })));
+    }
+
+    #[test]
+    fn leaf_purge_reemits_corrected_partial() {
+        let stream = StreamCfg::monolithic();
+        let mut leaf = LeafAggregator::new(0, 1, 4, &stream, true, None);
+        leaf.on_masked(0, 0, 1, vec![100]).unwrap();
+        leaf.on_masked(0, 0, 2, vec![10]).unwrap();
+        let full = leaf.on_masked(0, 0, 3, vec![1]).unwrap();
+        assert!(matches!(full, Some(Msg::PartialSum { ref words, .. }) if *words == vec![111]));
+        // post-emission drop of member 2: exact subtraction, re-emit
+        let re = leaf.purge(2).unwrap();
+        assert_eq!(re.len(), 1);
+        assert!(matches!(re[0], Msg::PartialSum { ref words, .. } if *words == vec![101]));
+        // a second drop re-emits every complete fold: round 0 again
+        // (now member 1 alone) and round 1, which member 3's drop
+        // makes emittable only now
+        leaf.on_masked(1, 0, 1, vec![5]).unwrap();
+        let re = leaf.purge(3).unwrap();
+        assert_eq!(re.len(), 2);
+        assert!(matches!(re[0], Msg::PartialSum { round: 0, ref words, .. } if *words == vec![100]));
+        assert!(matches!(re[1], Msg::PartialSum { round: 1, ref words, .. } if *words == vec![5]));
+    }
+
+    #[test]
+    fn leaf_ignores_dead_and_foreign_rounds_retire() {
+        let stream = StreamCfg::monolithic();
+        let mut leaf = LeafAggregator::new(0, 1, 3, &stream, true, None);
+        leaf.purge(2).unwrap();
+        assert!(leaf.on_masked(0, 0, 2, vec![9]).unwrap().is_none(), "dead member ignored");
+        // fold now completes on member 1 alone
+        let m = leaf.on_masked(0, 0, 1, vec![4]).unwrap();
+        assert!(matches!(m, Some(Msg::PartialSum { ref words, .. }) if *words == vec![4]));
+        leaf.finish_round(0);
+        assert!(leaf.entries.is_empty());
+    }
+}

@@ -127,6 +127,47 @@
 //! dropout-path RAM peak is below the monolithic baseline too. The
 //! mechanics are spelled out in [`coordinator::streaming`].
 //!
+//! ## Topology: the hierarchical fan-in tree (`--leaves L`)
+//!
+//! Even streamed, a single aggregator still *receives* all n·d masked
+//! words per round. `--leaves L` splits that fan-in across a static
+//! two-level tree ([`coordinator::topology`]): a
+//! [`ShardMap`](coordinator::ShardMap) partitions the clients into L
+//! contiguous, disjoint shards — derived deterministically from
+//! `(n_clients, L)` alone, so every process computes the identical
+//! partition — and each shard's
+//! [`LeafAggregator`](coordinator::LeafAggregator) folds its members'
+//! masked tensors/chunks into one partial ℤ₂⁶⁴ sum (the same
+//! `ChunkAssembler`/[`z64`] kernels and worker pool the root uses),
+//! forwarded as `Msg::PartialSum { round, tag, shard_range, words }`.
+//! The root stitches the L disjoint partials, so per-node fan-in drops
+//! from O(n·d) to max(O((n/L)·d), O(L·d)) — `benches/tree_fanin.rs`
+//! measures it (`BENCH_tree.json`).
+//!
+//! Mask safety needs no new mechanism: pairwise masks telescope to
+//! zero only in the *full* cross-client sum, so a leaf's partial stays
+//! masked by every cross-shard pairwise term
+//! (`tests/security_properties.rs::leaf_partial_sums_stay_masked`).
+//! And because ℤ₂⁶⁴ wrap-addition commutes, the tree is
+//! **bit-invisible**: any L produces the flat run's exact reports and
+//! Table-2 counters (`tests/tree_topology.rs` pins L ∈ {1, 2, 4} ≡
+//! flat on every transport). Tree mode requires `SecureExact` — float
+//! addition would change with association order. Dropout recovery
+//! routes through the owning leaf unchanged (a leaf purges the
+//! declared sender and re-emits corrected partials; a crashed *leaf*
+//! is exactly a whole-shard dropout), and the root's `WindowDrain`
+//! propagates tree-wide.
+//!
+//! In-process transports (sim/threaded/evloop, and `serve --leaves`)
+//! host the tree inside the aggregator process
+//! ([`TreeAggregator`](coordinator::TreeAggregator) wraps the root),
+//! so the client-visible wire traffic is unchanged. The distributed
+//! deployment runs real leaf processes: `vfl-sa leaf --leaves L
+//! --leaf-index k` ([`net::tcp::leaf`]) owns shard k's client sockets
+//! and relays upstream to a plain `vfl-sa serve` root — there the
+//! root's receive counters *show* the O(L·d) fan-in reduction, which
+//! is the measured win, while reports stay bit-identical.
+//!
 //! ## Dropout tolerance (Bonawitz'17, §5.1)
 //!
 //! With [`RunConfig::shamir_threshold`](coordinator::RunConfig) set,
@@ -204,9 +245,9 @@
 //!
 //! The CI matrix re-runs the equivalence suites under
 //! `VFL_AGG_WORKERS`, `VFL_EXPAND_WORKERS`, `VFL_ROUNDS_IN_FLIGHT`,
-//! `VFL_TRANSPORT=evloop`, and `VFL_EVLOOP_THREADS`, so every pool's
-//! bit-invisibility claim is continuously enforced, not just
-//! documented.
+//! `VFL_TRANSPORT=evloop`, `VFL_EVLOOP_THREADS`, and `VFL_LEAVES`, so
+//! every pool's (and the fan-in tree's) bit-invisibility claim is
+//! continuously enforced, not just documented.
 //!
 //! ## Enforced invariants (tools/vflint)
 //!
@@ -231,11 +272,12 @@
 //!   `tools/vflint/env_registry.txt`, and every declared CI axis is
 //!   actually exercised by `.github/workflows/ci.yml` — the
 //!   bit-invisibility matrix cannot silently lose a leg.
-//! * **`frame-encode-rule`** — the tag constants and 22/19-byte chunk
-//!   headers are cross-checked between the `begin_*_chunk` builders,
-//!   `Msg::encode_into`/`encoded_len`, `decode`, and the Table-2
-//!   accounting constants, so the zero-copy path cannot silently
-//!   diverge from `Msg::encode()`.
+//! * **`frame-encode-rule`** — the tag constants and the 22/19-byte
+//!   chunk and 14-byte partial-sum headers are cross-checked between
+//!   the `begin_masked_chunk`/`begin_gradient_chunk`/
+//!   `begin_partial_sum` builders, `Msg::encode_into`/`encoded_len`,
+//!   `decode`, and the Table-2 accounting constants, so the zero-copy
+//!   path cannot silently diverge from `Msg::encode()`.
 //! * **`panic-discipline`** — no `unwrap()`/`expect(` in non-test
 //!   `net/`, `coordinator/`, `secagg/` code except allowlisted sites
 //!   with a stated reason; protocol failures surface as typed errors.

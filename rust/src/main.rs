@@ -7,6 +7,11 @@
 //!            driver; waits for every client to `join`
 //!   join     --connect HOST:PORT --party I [train flags] — run client
 //!            party I (0 = active) against a serving aggregator
+//!   leaf     --listen HOST:PORT --connect HOST:PORT --leaf-index K
+//!            --leaves L [train flags] — run leaf aggregator K of the
+//!            hierarchical fan-in tree: owns one contiguous client
+//!            shard, folds its masked fan-in into partial ℤ₂⁶⁴ sums,
+//!            relays everything else to the root (`serve`) verbatim
 //!   bench    table1|table2|fig2|scaling [--reps N] [--quick] [--reference]
 //!   swarm    --clients N — C10K load generator: N simulated clients
 //!            against one event-loop aggregator over real sockets
@@ -142,6 +147,9 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(k) = flags.get("evloop-threads") {
         cfg.evloop_threads = k.parse().context("bad --evloop-threads")?;
     }
+    if let Some(l) = flags.get("leaves") {
+        cfg.leaves = Some(l.parse().context("bad --leaves")?);
+    }
     if let Some(w) = flags.get("rounds-in-flight") {
         cfg.rounds_in_flight = w.parse().context("bad --rounds-in-flight")?;
     }
@@ -157,15 +165,17 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(ms) = flags.get("stall-cap-ms") {
         cfg.stall_cap_ms = Some(ms.parse().context("bad --stall-cap-ms")?);
     }
-    // fail the streaming, timing, and window flags here, at parse
-    // time, with the full validation the driver applies —
-    // `--chunk-words 0`, `--shards 0`, `--agg-workers 0`, oversized
-    // shard/worker/window counts, zero-width stall windows, and a
-    // zero-byte rollback bound must never reach a running round
+    // fail the streaming, timing, window, and topology flags here, at
+    // parse time, with the full validation the driver applies —
+    // `--chunk-words 0`, `--shards 0`, `--agg-workers 0`, `--leaves 0`,
+    // oversized shard/worker/window/leaf counts, zero-width stall
+    // windows, and a zero-byte rollback bound must never reach a
+    // running round
     vfl::coordinator::validate_streaming(&cfg)?;
     vfl::coordinator::validate_timing(&cfg)?;
     vfl::coordinator::validate_window(&cfg)?;
     vfl::coordinator::validate_evloop(&cfg)?;
+    vfl::coordinator::validate_topology(&cfg)?;
     if let Some(spec) = flags.get("dropout-schedule") {
         if cfg.shamir_threshold.is_none() {
             bail!("--dropout-schedule needs --shamir-threshold (the run cannot recover otherwise)");
@@ -304,6 +314,40 @@ fn cmd_join(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `vfl-sa leaf`: one leaf aggregator of the hierarchical fan-in tree
+/// (`--leaves`), serving its shard's clients and relaying to the root.
+/// The shard map is derived from (dataset, --leaves, --leaf-index)
+/// alone, so every process of the run computes the identical
+/// partition; the root runs a plain `vfl-sa serve` (no `--leaves`) —
+/// the topology is invisible to it, its aggregator stitches whatever
+/// mix of direct masked tensors and leaf partials arrives.
+fn cmd_leaf(flags: &HashMap<String, String>) -> Result<()> {
+    let listen =
+        flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:7900".to_string());
+    let connect =
+        flags.get("connect").cloned().unwrap_or_else(|| "127.0.0.1:7800".to_string());
+    let index: usize =
+        flags.get("leaf-index").context("--leaf-index <k> required (0-based)")?.parse()?;
+    let cfg = cfg_from_flags(flags)?;
+    let Some(leaves) = vfl::coordinator::validate_topology(&cfg)? else {
+        bail!("leaf needs --leaves <L> (the shard map every process derives)");
+    };
+    if index >= leaves {
+        bail!("--leaf-index {index} out of range (this run has {leaves} leaves)");
+    }
+    let stream = vfl::coordinator::validate_streaming(&cfg)?;
+    let map = vfl::coordinator::ShardMap::new(cfg.model.n_clients(), leaves);
+    let (start, end) = map.range(index);
+    println!(
+        "leaf {index}/{leaves} on {}: clients {start}..{end}, root {connect} — join them with:",
+        cfg.model.dataset
+    );
+    for c in start..end {
+        println!("  vfl-sa join --connect {listen} --party {c} <same train flags>");
+    }
+    tcp::leaf(&listen, &connect, index, start, end, &stream, cfg.shamir_threshold.is_some())
+}
+
 fn cmd_bench(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let which = pos.first().map(String::as_str).unwrap_or("table1");
     let reference = flags.contains_key("reference");
@@ -430,11 +474,12 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&flags),
         Some("serve") => cmd_serve(&flags),
         Some("join") => cmd_join(&flags),
+        Some("leaf") => cmd_leaf(&flags),
         Some("bench") => cmd_bench(&pos[1..], &flags),
         Some("swarm") => cmd_swarm(&flags),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: vfl-sa <train|serve|join|bench|swarm|info> [flags]");
+            eprintln!("usage: vfl-sa <train|serve|join|leaf|bench|swarm|info> [flags]");
             eprintln!("  train --dataset banking [--rounds 5] [--rows 4096] [--plain|--float] [--reference] [--threaded|--evloop]");
             eprintln!("        [--shamir-threshold 3] [--dropout-schedule 2@1,4@3+1]   dropout-tolerant run");
             eprintln!("        [--chunk-words 1024] [--shards 4] [--agg-workers 4]   streaming shard-parallel aggregation");
@@ -443,8 +488,10 @@ fn main() -> Result<()> {
             eprintln!("        [--rounds-in-flight 2]                                 pipelined round window (1 = serial)");
             eprintln!("        [--rollback-fsync] [--rollback-max-bytes N]            rollback-log durability/bound");
             eprintln!("        [--stall-timeout-ms 500] [--stall-cap-ms 10000]       adaptive dropout-window floor/cap");
+            eprintln!("        [--leaves 4]                                           hierarchical fan-in tree (leaf aggregators)");
             eprintln!("  serve --listen 127.0.0.1:7800 [train flags]");
             eprintln!("  join  --connect 127.0.0.1:7800 --party 0 [train flags]");
+            eprintln!("  leaf  --listen 127.0.0.1:7900 --connect 127.0.0.1:7800 --leaf-index 0 --leaves 2 [train flags]");
             eprintln!("  bench <table1|table2|fig2|scaling> [--reps 10] [--quick] [--reference]");
             eprintln!("  swarm --clients 10240 [--rounds 3] [--payload-words 32] [--client-threads 4] [--evloop-threads 4] [--poll-fallback]");
             Ok(())
@@ -605,6 +652,34 @@ mod tests {
         let mut flags = HashMap::new();
         flags.insert("evloop-threads".to_string(), "1000".to_string());
         assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn leaves_flag_wires_into_config_and_invalid_values_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("leaves".to_string(), "2".to_string());
+        assert_eq!(cfg_from_flags(&flags).unwrap().leaves, Some(2));
+        // default is the flat topology
+        assert_eq!(cfg_from_flags(&HashMap::new()).unwrap().leaves, None);
+        // zero leaves fail at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("leaves".to_string(), "0".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("--leaves 0"));
+        // a runaway count fails at flag parsing
+        let mut flags = HashMap::new();
+        flags.insert("leaves".to_string(), "1000".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("cap"));
+        // more leaves than clients fail at flag parsing (every leaf
+        // needs a nonempty shard)
+        let n = RunConfig::paper("banking").unwrap().model.n_clients();
+        let mut flags = HashMap::new();
+        flags.insert("leaves".to_string(), (n + 1).to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("client count"));
+        // the tree is exact-masking only
+        let mut flags = HashMap::new();
+        flags.insert("leaves".to_string(), "2".to_string());
+        flags.insert("float".to_string(), "true".to_string());
+        assert!(cfg_from_flags(&flags).unwrap_err().to_string().contains("SecureExact"));
     }
 
     #[test]

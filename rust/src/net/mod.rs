@@ -15,7 +15,14 @@
 //!   cross-process `serve`/`join` plumbing, one thread per connection
 //!   with blocking I/O (writes are bounded by
 //!   [`tcp::DEFAULT_WRITE_TIMEOUT`] and surface the typed
-//!   [`tcp::WriteStalled`] error instead of deadlocking).
+//!   [`tcp::WriteStalled`] error instead of deadlocking). [`tcp::leaf`]
+//!   is the distributed half of the `--leaves` fan-in tree
+//!   ([`crate::coordinator::topology`]): a relay process that owns one
+//!   client shard's sockets, folds its masked fan-in into
+//!   `Msg::PartialSum` partials upstream, relays everything else
+//!   verbatim on the sender's own uplink (per-sender FIFO preserved),
+//!   and sniffs downstream `DropoutNotice`s to purge and re-emit
+//!   corrected partials.
 //! * [`evloop`] (unix) — [`EvloopTransport`]: the same sockets and
 //!   frames, multiplexed on a *single* readiness-driven event-loop
 //!   thread (epoll on Linux, portable `poll(2)` fallback). No thread
@@ -49,7 +56,13 @@
 //! transport already provides is the only ordering the chunk assembler
 //! needs. Whether the aggregator folds those chunks inline or across
 //! `--agg-workers` shard workers is invisible to the transport (and to
-//! every output bit).
+//! every output bit). The same holds for the `--leaves` fan-in tree:
+//! on every in-process transport the `TreeAggregator` wrapper sits
+//! behind the ordinary [`Party`](crate::coordinator::Party) seam, so
+//! the bytes on the wire are identical to a flat run; only the
+//! distributed `vfl-sa leaf` deployment moves the leaf fold into
+//! separate processes (and there the root's Table-2 receive counters
+//! drop to the L·d partial-sum volume — the point of the tree).
 
 #[cfg(unix)]
 pub mod evloop;

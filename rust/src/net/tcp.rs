@@ -29,6 +29,7 @@
 //! the real fix is the [`evloop`](super::evloop) transport, whose
 //! event loop never issues a blocking write at all.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, RecvTimeoutError};
@@ -37,9 +38,11 @@ use std::thread;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::messages::Msg;
+use crate::coordinator::parties::{TAG_ACTIVATION, TAG_GRADIENT};
 use crate::coordinator::party::{Note, Outbox, Party, RoundSpec};
+use crate::coordinator::topology::LeafAggregator;
 use crate::coordinator::window::RoundWindow;
-use crate::coordinator::Metrics;
+use crate::coordinator::{Metrics, StreamCfg};
 
 use super::frame::Frame;
 use super::transport::{StallClock, MAX_IDLE_PROBES};
@@ -384,6 +387,279 @@ pub(crate) fn join_addr(connect: &str, client: usize, party: &mut dyn Party) -> 
         .write_to(&mut stream);
     }
     result
+}
+
+// ---------------------------------------------------------------------
+// Hierarchical fan-in tree: the `vfl-sa leaf` relay process
+// ---------------------------------------------------------------------
+
+/// Events in a leaf relay's single event loop: a frame (or death) from
+/// one of the shard's client sockets, or from that client's upstream
+/// connection to the root.
+enum LeafEvent {
+    Client(u16, Frame),
+    ClientGone(u16, String),
+    Root(u16, Frame),
+    RootGone(u16),
+}
+
+/// Run one leaf aggregator as a cross-process relay (`vfl-sa leaf`).
+///
+/// The leaf owns the contiguous client shard `[start, end)`: it binds
+/// `listen`, accepts exactly those clients' joins, and opens one
+/// upstream connection per shard member to the root at `connect`
+/// (`Hello { client: i }` each), so the topology is invisible to both
+/// ends — clients speak the ordinary `join` protocol to the leaf, the
+/// root serves what looks like `end - start` ordinary clients.
+///
+/// Per-direction behavior:
+/// * **Upstream** — masked fan-in (`MaskedActivation` /
+///   `MaskedGradient` / `MaskedChunk`) folds into a
+///   [`LeafAggregator`]; a completed fold sends one
+///   [`Msg::PartialSum`] on the lowest-numbered live uplink (which
+///   socket carries it is immaterial: the partial names its own client
+///   range). Everything else relays verbatim on the sender's own
+///   uplink, preserving per-sender FIFO order.
+/// * **Downstream** — frames relay verbatim to the owning client,
+///   after sniffing relayed [`Msg::DropoutNotice`]s: a declared-dropped
+///   shard member is purged from the fold (the exact-purge invariant of
+///   `coordinator::topology`) and every still-complete partial is
+///   re-emitted corrected.
+/// * A dead client socket closes that member's uplink — the root's
+///   reader sees EOF and its stall probe declares the drop, exactly as
+///   if the client had joined directly.
+///
+/// The root's Table-2 receive counters in this deployment reflect the
+/// reduced fan-in — O((n/L)·d) masked words stay on each leaf's
+/// downlink and only O(L·d) partial-sum words reach the root. That is
+/// the measured win; bit-identical Table-2 parity with a flat run is
+/// the in-process [`TreeAggregator`](crate::coordinator::TreeAggregator)
+/// deployment's property, where client↔aggregator wire traffic is
+/// unchanged. Reports (losses, accuracy) are bit-identical in both.
+///
+/// Known limitation: the root diagnoses a silent-but-connected client
+/// behind a leaf at shard granularity (it cannot see which member's
+/// tensor never completed the fold); timeout-based dropout declaration
+/// itself is unaffected.
+#[allow(clippy::too_many_arguments)]
+pub fn leaf(
+    listen: &str,
+    connect: &str,
+    index: usize,
+    start: u16,
+    end: u16,
+    stream: &StreamCfg,
+    revocable: bool,
+) -> Result<()> {
+    let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+    leaf_on(listener, connect, index, start, end, stream, revocable)
+}
+
+/// [`leaf`] on an already-bound listener (lets tests bind port 0 and
+/// learn the real port before clients race to connect).
+#[allow(clippy::too_many_arguments)]
+pub fn leaf_on(
+    listener: TcpListener,
+    connect: &str,
+    index: usize,
+    start: u16,
+    end: u16,
+    stream: &StreamCfg,
+    revocable: bool,
+) -> Result<()> {
+    let listen = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
+    let members: Vec<u16> = (start..end).collect();
+    eprintln!(
+        "leaf {index}: listening on {listen} for clients {start}..{end}, root at {connect}"
+    );
+
+    let (tx, rx) = channel::<LeafEvent>();
+    let mut down: BTreeMap<u16, TcpStream> = BTreeMap::new();
+    while down.len() < members.len() {
+        let (sock, peer) = listener.accept().context("accept")?;
+        sock.set_nodelay(true).ok();
+        sock.set_write_timeout(Some(DEFAULT_WRITE_TIMEOUT)).ok();
+        let mut reader = sock.try_clone().context("clone stream")?;
+        let hello = Frame::read_from(&mut reader)?;
+        let Frame::Hello { client } = hello else { bail!("expected Hello, got {hello:?}") };
+        if !(start..end).contains(&client) {
+            bail!("client {client} joined the wrong leaf (this one owns {start}..{end})");
+        }
+        if down.contains_key(&client) {
+            bail!("client {client} connected twice");
+        }
+        eprintln!("leaf {index}: client {client} joined from {peer}");
+        down.insert(client, sock);
+        let tx = tx.clone();
+        thread::spawn(move || loop {
+            match Frame::read_from(&mut reader) {
+                Ok(f) => {
+                    if tx.send(LeafEvent::Client(client, f)).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(LeafEvent::ClientGone(client, format!("{e:#}")));
+                    break;
+                }
+            }
+        });
+    }
+
+    // one upstream connection per shard member — the root's accept
+    // loop sees ordinary client joins
+    let mut up: BTreeMap<u16, TcpStream> = BTreeMap::new();
+    for &c in &members {
+        let mut sock =
+            TcpStream::connect(connect).with_context(|| format!("connect {connect}"))?;
+        sock.set_nodelay(true).ok();
+        sock.set_write_timeout(Some(DEFAULT_WRITE_TIMEOUT)).ok();
+        write_frame(&mut sock, &Frame::Hello { client: c })?;
+        let mut reader = sock.try_clone().context("clone stream")?;
+        let tx = tx.clone();
+        thread::spawn(move || loop {
+            match Frame::read_from(&mut reader) {
+                Ok(f) => {
+                    if tx.send(LeafEvent::Root(c, f)).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    let _ = tx.send(LeafEvent::RootGone(c));
+                    break;
+                }
+            }
+        });
+        up.insert(c, sock);
+    }
+    drop(tx);
+
+    // the fold itself: the same LeafAggregator the in-process tree
+    // runs, with its own worker pool on a chunked multi-worker config
+    let pool = if stream.chunk_words.is_some() && stream.agg_workers > 1 {
+        Some(crate::coordinator::streaming::WorkerPool::new(
+            stream.agg_workers.min(stream.shards.max(1)),
+        ))
+    } else {
+        None
+    };
+    let mut fold =
+        LeafAggregator::new(index, start, end, stream, revocable, pool.as_ref().map(|p| p.client()));
+
+    let mut stopped: BTreeSet<u16> = BTreeSet::new();
+    // run until every shard member was stopped by the root or lost
+    while !members.iter().all(|m| stopped.contains(m) || !down.contains_key(m)) {
+        let ev = rx.recv().context("leaf event channel closed")?;
+        match ev {
+            LeafEvent::Client(c, Frame::Msg { bytes }) => {
+                let emission = match Msg::decode(&bytes)? {
+                    Msg::MaskedActivation { round, from, words } => {
+                        fold.on_masked(round, TAG_ACTIVATION as u8, from, words)?
+                    }
+                    Msg::MaskedGradient { round, from, words } => {
+                        fold.on_masked(round, TAG_GRADIENT as u8, from, words)?
+                    }
+                    Msg::MaskedChunk { round, from, tag, shard, offset, total, words } => {
+                        fold.on_chunk(round, tag, from, shard, offset, total, &words)?
+                    }
+                    // non-fan-in protocol traffic relays verbatim on
+                    // the sender's own uplink (per-sender FIFO)
+                    _ => {
+                        if let Some(w) = up.get_mut(&c) {
+                            if let Err(e) = write_msg_frame(w, &bytes) {
+                                eprintln!("leaf {index}: uplink {c} write failed ({e:#})");
+                                up.remove(&c);
+                            }
+                        }
+                        None
+                    }
+                };
+                if let Some(m) = emission {
+                    send_partial(index, &mut up, &m)?;
+                }
+            }
+            LeafEvent::Client(c, Frame::Note(n)) => {
+                if let Some(w) = up.get_mut(&c) {
+                    if let Err(e) = write_frame(w, &Frame::Note(n)) {
+                        eprintln!("leaf {index}: uplink {c} write failed ({e:#})");
+                        up.remove(&c);
+                    }
+                }
+            }
+            LeafEvent::Client(c, f) => bail!("unexpected frame from client {c}: {f:?}"),
+            LeafEvent::ClientGone(c, e) => {
+                eprintln!("leaf {index}: client {c} disconnected ({e}), closing its uplink");
+                down.remove(&c);
+                // dropping the uplink is how the root learns: its
+                // reader sees EOF and the stall probe declares the
+                // drop; the DropoutNotice then comes back through the
+                // sniffer below, which purges the fold
+                up.remove(&c);
+            }
+            LeafEvent::Root(c, Frame::Msg { bytes }) => {
+                // sniff recovery declarations before relaying: a
+                // declared-dropped shard member must leave the fold,
+                // and every still-complete partial go up corrected
+                if let Msg::DropoutNotice { ref dropped, .. } = Msg::decode(&bytes)? {
+                    for &d in dropped {
+                        if (start..end).contains(&d) {
+                            for m in fold.purge(d)? {
+                                send_partial(index, &mut up, &m)?;
+                            }
+                        }
+                    }
+                }
+                if let Some(w) = down.get_mut(&c) {
+                    if write_msg_frame(w, &bytes).is_err() {
+                        down.remove(&c);
+                        up.remove(&c);
+                    }
+                }
+            }
+            LeafEvent::Root(c, Frame::Stop) => {
+                if let Some(w) = down.get_mut(&c) {
+                    let _ = Frame::Stop.write_to(w);
+                }
+                stopped.insert(c);
+            }
+            LeafEvent::Root(c, f) => {
+                // round boundaries and any other control frame relay
+                // verbatim to the owning client
+                if let Some(w) = down.get_mut(&c) {
+                    if write_frame(w, &f).is_err() {
+                        down.remove(&c);
+                        up.remove(&c);
+                    }
+                }
+            }
+            LeafEvent::RootGone(c) => {
+                if !stopped.contains(&c) {
+                    bail!("leaf {index}: root connection for client {c} lost");
+                }
+            }
+        }
+    }
+    eprintln!("leaf {index}: run complete");
+    Ok(())
+}
+
+/// Forward a folded partial on the lowest-numbered live uplink,
+/// falling through to the next on a write failure so a half-dead
+/// shard keeps progressing.
+fn send_partial(index: usize, up: &mut BTreeMap<u16, TcpStream>, m: &Msg) -> Result<()> {
+    let bytes = m.encode();
+    let ids: Vec<u16> = up.keys().copied().collect();
+    for c in ids {
+        let Some(w) = up.get_mut(&c) else { continue };
+        match write_msg_frame(w, &bytes) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                eprintln!("leaf {index}: uplink {c} write failed ({e:#}), trying the next");
+                up.remove(&c);
+            }
+        }
+    }
+    bail!("leaf {index}: no live uplink left to carry a partial sum")
 }
 
 #[cfg(test)]

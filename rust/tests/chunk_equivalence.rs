@@ -28,7 +28,7 @@
 mod common;
 
 use common::{
-    apply_env_workers, assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg,
+    apply_env_axes, assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg,
     sessions, simd_isa,
 };
 use vfl::coordinator::metrics::AGGREGATOR;
@@ -45,7 +45,9 @@ const SHARDS: usize = 4;
 fn with_chunks(mut c: RunConfig) -> RunConfig {
     c.chunk_words = Some(CHUNK_WORDS);
     c.shards = SHARDS;
-    apply_env_workers(c)
+    // re-apply after the reshape: the VFL_AGG_WORKERS axis is guarded
+    // on a chunked config, which the fixture's first pass was not
+    apply_env_axes(c)
 }
 
 fn secure_cfg(transport: TransportKind) -> RunConfig {

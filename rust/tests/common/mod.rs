@@ -14,10 +14,7 @@ use vfl::secagg::{setup_all, ClientSession};
 
 /// The standard small experiment: reference backend, 6 training rounds
 /// (crossing one K = 5 key-rotation boundary), one test round. Applies
-/// the `VFL_ROUNDS_IN_FLIGHT`, `VFL_TRANSPORT`, `VFL_EXPAND_WORKERS`,
-/// and `VFL_EVLOOP_THREADS` CI axes (see [`apply_env_window`] /
-/// [`apply_env_transport`] / [`apply_env_expand_workers`] /
-/// [`apply_env_evloop_threads`]).
+/// every CI environment axis (see [`apply_env_axes`]).
 pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> RunConfig {
     let mut c = RunConfig::test(dataset).unwrap();
     c.security = mode;
@@ -25,100 +22,80 @@ pub fn run_cfg(dataset: &str, mode: SecurityMode, transport: TransportKind) -> R
     c.transport = transport;
     c.train_rounds = 6;
     c.test_rounds = 1;
-    apply_env_evloop_threads(apply_env_expand_workers(apply_env_transport(apply_env_window(c))))
+    apply_env_axes(c)
 }
 
-/// CI window-matrix hook: when `VFL_ROUNDS_IN_FLIGHT` is set, every
-/// fixture-built run uses that round-window width, so the pipelined
-/// scheduler is exercised by the same equivalence suites that prove
-/// the serial one (bit-identity makes the override invisible to every
-/// assertion — including the dropout suites, whose crash runs and
-/// blank twins both drain the window identically).
-pub fn apply_env_window(mut c: RunConfig) -> RunConfig {
-    if let Ok(w) = std::env::var("VFL_ROUNDS_IN_FLIGHT") {
-        // a set-but-unparseable value must fail the suite, not
-        // silently run the serial path CI thinks it is NOT running
-        c.rounds_in_flight = w
-            .trim()
-            .parse()
-            .unwrap_or_else(|e| panic!("bad VFL_ROUNDS_IN_FLIGHT {w:?}: {e}"));
-    }
-    c
+/// Parse helper shared by the numeric axes: a set-but-invalid value
+/// must fail the suite, not silently run the default path CI thinks
+/// it is NOT running.
+fn axis_usize(name: &str, v: &str) -> usize {
+    v.trim().parse().unwrap_or_else(|e| panic!("bad {name} {v:?}: {e}"))
 }
 
-/// CI transport-matrix hook: when `VFL_TRANSPORT` is set, every
-/// fixture-built run uses that transport (`sim` | `threaded` |
-/// `evloop`), so the equivalence suites that prove the simulator also
-/// exercise the socket event loop end to end (bit-identity makes the
-/// override invisible to every assertion).
-pub fn apply_env_transport(mut c: RunConfig) -> RunConfig {
-    if let Ok(t) = std::env::var("VFL_TRANSPORT") {
-        // a set-but-unrecognized value must fail the suite, not
-        // silently run a transport CI thinks it is NOT running
-        c.transport = match t.trim() {
+/// The CI environment axes, as one table: variable name → how a set
+/// value lands in the config. Adding an axis means adding a row here
+/// and registering the variable in `tools/vflint/env_registry.txt`
+/// (the lint cross-checks the registry against `ci.yml`).
+///
+/// Guarded rows are inert where the knob cannot apply — and because
+/// config shape can change *after* the fixture runs (a suite that
+/// turns on chunking, say), [`apply_env_axes`] is idempotent and safe
+/// to re-apply to a reshaped config.
+const ENV_AXES: &[(&str, fn(&mut RunConfig, &str))] = &[
+    // pipelined round window: every fixture-built run uses this width;
+    // bit-identity makes the override invisible to every assertion,
+    // including the dropout suites (crash runs and blank twins drain
+    // the window identically)
+    ("VFL_ROUNDS_IN_FLIGHT", |c, v| {
+        c.rounds_in_flight = axis_usize("VFL_ROUNDS_IN_FLIGHT", v);
+    }),
+    // transport matrix: the equivalence suites that prove the
+    // simulator also exercise the threaded channels and the socket
+    // event loop end to end
+    ("VFL_TRANSPORT", |c, v| {
+        c.transport = match v.trim() {
             "sim" => TransportKind::Sim,
             "threaded" => TransportKind::Threaded,
             "evloop" => TransportKind::Evloop,
             other => panic!("bad VFL_TRANSPORT {other:?} (want sim|threaded|evloop)"),
         };
-    }
-    c
-}
-
-/// CI worker-matrix hook: when `VFL_AGG_WORKERS` is set, chunked
-/// configs run their aggregator fan-ins with that many shard workers,
-/// so the parallel path is exercised by the same equivalence suites
-/// that prove the sequential one (bit-identity makes the override
-/// invisible to every assertion). Monolithic configs are unaffected —
-/// worker counts only apply to the chunked pipeline.
-pub fn apply_env_workers(mut c: RunConfig) -> RunConfig {
-    if c.chunk_words.is_some() {
-        if let Ok(w) = std::env::var("VFL_AGG_WORKERS") {
-            // a set-but-unparseable value must fail the suite, not
-            // silently fall back to the inline path CI thinks it is
-            // NOT running
-            c.agg_workers = w
-                .trim()
-                .parse()
-                .unwrap_or_else(|e| panic!("bad VFL_AGG_WORKERS {w:?}: {e}"));
+    }),
+    // shard-parallel aggregation: guarded — worker counts only apply
+    // to the chunked pipeline, so monolithic configs are unaffected
+    ("VFL_AGG_WORKERS", |c, v| {
+        if c.chunk_words.is_some() {
+            c.agg_workers = axis_usize("VFL_AGG_WORKERS", v);
         }
-    }
-    c
-}
+    }),
+    // parallel mask expansion: applies to monolithic and chunked
+    // configs alike — expansion exists on both paths
+    ("VFL_EXPAND_WORKERS", |c, v| {
+        c.expand_workers = axis_usize("VFL_EXPAND_WORKERS", v);
+    }),
+    // sharded event loop: inert on sim/threaded runs (the knob only
+    // reaches `EvloopTransport`), composes with VFL_TRANSPORT=evloop
+    ("VFL_EVLOOP_THREADS", |c, v| {
+        c.evloop_threads = axis_usize("VFL_EVLOOP_THREADS", v);
+    }),
+    // hierarchical fan-in tree: guarded — the tree is exact-masking
+    // only (a float partial would change addition order), so the
+    // Plain/SecureFloat equivalence legs keep their flat topology
+    ("VFL_LEAVES", |c, v| {
+        if c.security == SecurityMode::SecureExact {
+            c.leaves = Some(axis_usize("VFL_LEAVES", v));
+        }
+    }),
+];
 
-/// CI expand-pool hook: when `VFL_EXPAND_WORKERS` is set, every
-/// fixture-built run expands its masks on that many pool workers, so
-/// the parallel expansion path is exercised by the same equivalence
-/// suites that prove the serial one (bit-identity makes the override
-/// invisible to every assertion). Unlike `VFL_AGG_WORKERS`, this
-/// applies to monolithic and chunked configs alike — mask expansion
-/// exists on both paths.
-pub fn apply_env_expand_workers(mut c: RunConfig) -> RunConfig {
-    if let Ok(w) = std::env::var("VFL_EXPAND_WORKERS") {
-        // a set-but-unparseable value must fail the suite, not
-        // silently run the serial path CI thinks it is NOT running
-        c.expand_workers = w
-            .trim()
-            .parse()
-            .unwrap_or_else(|e| panic!("bad VFL_EXPAND_WORKERS {w:?}: {e}"));
-    }
-    c
-}
-
-/// CI evloop-shard hook: when `VFL_EVLOOP_THREADS` is set, every
-/// fixture-built run that ends up on the evloop transport shards its
-/// connections across that many poller threads. Inert on sim/threaded
-/// runs — the knob only reaches `EvloopTransport` — so it composes
-/// with `VFL_TRANSPORT=evloop` to turn the whole equivalence matrix
-/// into a sharded-loop proof.
-pub fn apply_env_evloop_threads(mut c: RunConfig) -> RunConfig {
-    if let Ok(k) = std::env::var("VFL_EVLOOP_THREADS") {
-        // a set-but-unparseable value must fail the suite, not
-        // silently run the single loop CI thinks it is NOT running
-        c.evloop_threads = k
-            .trim()
-            .parse()
-            .unwrap_or_else(|e| panic!("bad VFL_EVLOOP_THREADS {k:?}: {e}"));
+/// Apply every set CI environment axis to a config, in [`ENV_AXES`]
+/// table order. Every fixture-built run flows through this once;
+/// suites that reshape the config afterwards (e.g. turning on
+/// chunking) re-apply it so shape-guarded axes take effect.
+pub fn apply_env_axes(mut c: RunConfig) -> RunConfig {
+    for (name, apply) in ENV_AXES {
+        if let Ok(v) = std::env::var(name) {
+            apply(&mut c, &v);
+        }
     }
     c
 }

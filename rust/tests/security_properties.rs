@@ -53,6 +53,59 @@ fn aggregator_view_reveals_only_the_sum() {
     }
 }
 
+/// The fan-in tree's mask-safety argument (`coordinator::topology`):
+/// a leaf's partial ℤ₂⁶⁴ sum over its client shard stays masked by
+/// every cross-shard pairwise term — pairwise masks telescope to zero
+/// only in the *full* cross-client sum — so neither a leaf aggregator
+/// nor a root holding fewer than all L partials sees plaintext. Only
+/// the complete stitch decodes.
+#[test]
+fn leaf_partial_sums_stay_masked() {
+    let n = 5;
+    let len = 256;
+    let sessions = sessions(n, 1);
+    let tensors: Vec<Vec<f32>> =
+        (0..n).map(|i| (0..len).map(|j| (i * j % 17) as f32 * 0.25).collect()).collect();
+    let masked: Vec<Vec<u64>> =
+        sessions.iter().zip(&tensors).map(|(s, t)| s.mask_tensor(t, 3, 0)).collect();
+
+    let fp = FixedPoint::default();
+    let map = vfl::coordinator::ShardMap::new(n, 2);
+    let mut stitched = vec![0u64; len];
+    for k in 0..2 {
+        let (s, e) = map.range(k);
+        // what leaf k forwards upstream: its shard members' wrap-sum
+        let shard: Vec<Vec<u64>> = masked[s as usize..e as usize].to_vec();
+        let mut partial = vec![0u64; len];
+        for m in &shard {
+            for (acc, w) in partial.iter_mut().zip(m) {
+                *acc = acc.wrapping_add(*w);
+            }
+        }
+        // the partial must not correlate with its shard's plaintext
+        // sum: cross-shard pairwise masks are still dangling
+        let want: Vec<f32> = (0..len)
+            .map(|j| (s as usize..e as usize).map(|i| tensors[i][j]).sum())
+            .collect();
+        let close = fp
+            .decode_vec(&partial)
+            .iter()
+            .zip(&want)
+            .filter(|(d, v)| (*d - *v).abs() < 1.0)
+            .count();
+        assert!(close <= 2, "leaf {k}'s partial correlates with plaintext ({close} hits)");
+        for (acc, w) in stitched.iter_mut().zip(&partial) {
+            *acc = acc.wrapping_add(*w);
+        }
+    }
+    // the root's stitch of all L partials is the full sum: exact
+    let full = fp.decode_vec(&stitched);
+    for (j, v) in full.iter().enumerate() {
+        let want: f32 = (0..n).map(|i| tensors[i][j]).sum();
+        assert!((v - want).abs() < 1e-3, "j={j}");
+    }
+}
+
 /// Mini-batch privacy (§4.0.2): a passive party can decrypt only the
 /// sample IDs it holds; other parties' entries are indistinguishable.
 #[test]

@@ -1,0 +1,302 @@
+//! The hierarchical fan-in tree (`--leaves L`) is bit-invisible:
+//! partitioning the clients into L leaf shards and stitching partial
+//! ℤ₂⁶⁴ sums at the root produces the identical run — every report
+//! field and every Table-2 byte counter — as the flat topology, on
+//! every transport.
+//!
+//! This holds because ℤ₂⁶⁴ wrap-addition commutes and associates
+//! (regrouping the summands per shard changes *where* words are
+//! added, never *what* is added), client↔aggregator wire traffic is
+//! untouched (the leaf→root partials are internal to the aggregator
+//! node in-process), and dropout recovery preserves the exact-purge
+//! invariant tree-wide: the root discards partials covering a
+//! declared-dropped client, the owning leaf subtracts exactly that
+//! member's words and re-emits corrected.
+//!
+//! The dropout twins at the bottom pin the tree's failure semantics:
+//! a leaf crash is indistinguishable from its whole shard crashing
+//! (in-process, the leaf fold lives in the aggregator's address
+//! space — there is no separate process to kill — so the twin is the
+//! flat run under the identical whole-shard fault plan), and a
+//! mid-stream dropout inside a pipelined window drains the window
+//! identically in tree and flat runs.
+
+mod common;
+
+use common::{assert_reports_identical, assert_table2_identical, dropout_cfg, run_cfg};
+use vfl::coordinator::{
+    build, run_experiment, summarize, RunConfig, SecurityMode, TransportKind,
+};
+use vfl::net::{tcp, Fault, FaultPlan, StallClock};
+
+/// A tree run config: the standard fixture with an explicit leaf
+/// count. The flat baseline pins `leaves: None` explicitly so the
+/// comparison stays flat-vs-tree even under the `VFL_LEAVES` CI axis.
+fn tree_cfg(l: usize, transport: TransportKind) -> RunConfig {
+    let mut c = run_cfg("banking", SecurityMode::SecureExact, transport);
+    c.leaves = Some(l);
+    c
+}
+
+fn flat_cfg(transport: TransportKind) -> RunConfig {
+    let mut c = run_cfg("banking", SecurityMode::SecureExact, transport);
+    c.leaves = None;
+    c
+}
+
+/// The acceptance criterion, simulator leg: L ∈ {1, 2, 4} all produce
+/// the flat run bit-for-bit (banking has 5 clients, so L = 4 includes
+/// singleton shards).
+#[test]
+fn tree_identical_to_flat_sim_all_widths() {
+    let flat = run_experiment(flat_cfg(TransportKind::Sim), None).unwrap();
+    assert_eq!(flat.losses.len(), 6, "the baseline did real work");
+    for l in [1, 2, 4] {
+        let tree = run_experiment(tree_cfg(l, TransportKind::Sim), None).unwrap();
+        assert_reports_identical(&flat, &tree, &format!("sim L={l}"));
+        assert_table2_identical(&flat.net, &tree.net);
+    }
+}
+
+#[test]
+fn tree_identical_to_flat_threaded() {
+    let flat = run_experiment(flat_cfg(TransportKind::Threaded), None).unwrap();
+    for l in [2, 4] {
+        let tree = run_experiment(tree_cfg(l, TransportKind::Threaded), None).unwrap();
+        assert_reports_identical(&flat, &tree, &format!("threaded L={l}"));
+        assert_table2_identical(&flat.net, &tree.net);
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn tree_identical_to_flat_evloop() {
+    let flat = run_experiment(flat_cfg(TransportKind::Evloop), None).unwrap();
+    let tree = run_experiment(tree_cfg(2, TransportKind::Evloop), None).unwrap();
+    assert_reports_identical(&flat, &tree, "evloop L=2");
+    assert_table2_identical(&flat.net, &tree.net);
+}
+
+/// The tree composes with the streaming pipeline: leaves fold masked
+/// *chunks* through their own `ChunkAssembler`s (pooled, to exercise
+/// the namespaced worker-pool slots) and still match the flat chunked
+/// run bit-for-bit.
+#[test]
+fn tree_chunked_identical_to_flat() {
+    let chunked = |l: Option<usize>| {
+        let mut c = flat_cfg(TransportKind::Sim);
+        c.chunk_words = Some(1000);
+        c.shards = 4;
+        c.agg_workers = 3;
+        c.leaves = l;
+        c
+    };
+    let flat = run_experiment(chunked(None), None).unwrap();
+    for l in [2, 4] {
+        let tree = run_experiment(chunked(Some(l)), None).unwrap();
+        assert_reports_identical(&flat, &tree, &format!("chunked L={l}"));
+        assert_table2_identical(&flat.net, &tree.net);
+    }
+}
+
+/// The TCP leg: a socket run hosting the tree aggregator produces the
+/// same reports as the flat simulated run, and — because the leaf
+/// partials are internal to the aggregator process, never metered
+/// wire traffic — the identical Table-2 counters.
+#[test]
+fn tree_identical_to_flat_tcp() {
+    let mut cfg = tree_cfg(2, TransportKind::Sim);
+    cfg.train_rounds = 2; // keep the socket run short
+    let mut flat = cfg.clone();
+    flat.leaves = None;
+    let sim = run_experiment(flat, None).unwrap();
+
+    // bind port 0 first so there is no port race: clients connect to
+    // the real port after the listener exists
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let n_clients = cfg.model.n_clients();
+
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        let built = build(&server_cfg, None).unwrap();
+        let mut parties = built.parties;
+        let aggregator = parties.remove(0); // the TreeAggregator
+        drop(parties);
+        let clock = StallClock::from_config(server_cfg.stall_timeout_ms, server_cfg.stall_cap_ms);
+        let out = tcp::serve_on(
+            listener,
+            aggregator,
+            &built.schedule,
+            n_clients,
+            clock,
+            server_cfg.rounds_in_flight,
+        )?;
+        let summary = summarize(&built.schedule, &built.test_labels, &out.notes);
+        Ok::<_, anyhow::Error>((summary, out.net))
+    });
+
+    let mut clients = Vec::new();
+    for client in 0..n_clients {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || {
+            let built = build(&cfg, None).unwrap();
+            let mut parties = built.parties;
+            let party = parties.remove(client + 1);
+            drop(parties);
+            tcp::join(&addr, client, party)
+        }));
+    }
+
+    let (summary, net) = server.join().unwrap().unwrap();
+    for c in clients {
+        c.join().unwrap().unwrap();
+    }
+    assert_eq!(summary.losses, sim.losses, "TCP tree losses must match the flat sim run");
+    assert_eq!(summary.predictions, sim.predictions, "TCP tree predictions must match");
+    assert_eq!(summary.test_accuracy, sim.test_accuracy);
+    assert_table2_identical(&sim.net, &net);
+}
+
+/// A leaf crash is whole-shard loss. In-process the leaf fold lives in
+/// the aggregator's address space, so "the leaf died" and "every
+/// member of its shard died" are the same observable event; the twin
+/// run proves tree recovery from it matches flat recovery bit-for-bit.
+/// Under `ShardMap::new(5, 2)` the second leaf owns clients 2..5 —
+/// crashing all three at one round start is the leaf-crash fault.
+#[test]
+fn leaf_crash_recovers_like_whole_shard_dropout() {
+    let plan = FaultPlan::default()
+        .with(2, Fault::Crash { round: 1, after_sends: 0 })
+        .with(3, Fault::Crash { round: 1, after_sends: 0 })
+        .with(4, Fault::Crash { round: 1, after_sends: 0 });
+    // threshold 2: the survivors {0, 1} can still reconstruct
+    let mut tree = dropout_cfg(2, Some(plan.clone()), TransportKind::Sim);
+    tree.leaves = Some(2);
+    let mut flat = dropout_cfg(2, Some(plan), TransportKind::Sim);
+    flat.leaves = None;
+    let tree = run_experiment(tree, None).unwrap();
+    let flat = run_experiment(flat, None).unwrap();
+    assert_reports_identical(&flat, &tree, "leaf crash vs whole-shard dropout");
+    assert_table2_identical(&flat.net, &tree.net);
+}
+
+/// A mid-stream dropout inside a pipelined window (W = 2): the crash
+/// lands after the client's first send of the round, so one tensor is
+/// already folded into its leaf when the declaration arrives — the
+/// exact-purge re-emission path — and the root's WindowDrain must
+/// drain the tree run's window exactly as the flat run's.
+#[test]
+fn mid_tree_dropout_in_pipelined_window_matches_flat() {
+    let plan =
+        FaultPlan::default().with(3, Fault::Crash { round: 2, after_sends: 1 });
+    let mut tree = dropout_cfg(3, Some(plan.clone()), TransportKind::Sim);
+    tree.leaves = Some(2);
+    tree.rounds_in_flight = 2;
+    let mut flat = dropout_cfg(3, Some(plan), TransportKind::Sim);
+    flat.leaves = None;
+    flat.rounds_in_flight = 2;
+    let tree = run_experiment(tree, None).unwrap();
+    let flat = run_experiment(flat, None).unwrap();
+    assert_reports_identical(&flat, &tree, "mid-tree pipelined dropout");
+    assert_table2_identical(&flat.net, &tree.net);
+}
+
+/// The same twins on the threaded transport, where stall probes come
+/// from real quiescence timeouts rather than simulated ones.
+#[test]
+fn leaf_crash_recovers_like_whole_shard_dropout_threaded() {
+    let plan = FaultPlan::default()
+        .with(2, Fault::Crash { round: 1, after_sends: 0 })
+        .with(3, Fault::Crash { round: 1, after_sends: 0 })
+        .with(4, Fault::Crash { round: 1, after_sends: 0 });
+    let mut tree = dropout_cfg(2, Some(plan.clone()), TransportKind::Threaded);
+    tree.leaves = Some(2);
+    let mut flat = dropout_cfg(2, Some(plan), TransportKind::Threaded);
+    flat.leaves = None;
+    let tree = run_experiment(tree, None).unwrap();
+    let flat = run_experiment(flat, None).unwrap();
+    assert_reports_identical(&flat, &tree, "threaded leaf crash");
+    assert_table2_identical(&flat.net, &tree.net);
+}
+
+/// The distributed deployment: real `leaf` relays between the clients
+/// and a *plain* root server (the topology is invisible to the root —
+/// its aggregator stitches whatever mix of direct tensors and leaf
+/// partials arrives). Reports must match the flat simulated run;
+/// Table-2 is *not* asserted here, deliberately — the root's receive
+/// counters in this deployment reflect the reduced O(L·d) fan-in,
+/// which is the measured win, not a parity bug (`net::tcp::leaf`'s
+/// docs; `benches/tree_fanin.rs` quantifies it).
+#[test]
+fn leaf_processes_match_flat_sim() {
+    let mut cfg = flat_cfg(TransportKind::Sim);
+    cfg.train_rounds = 2; // keep the socket run short
+    let sim = run_experiment(cfg.clone(), None).unwrap();
+
+    let n_clients = cfg.model.n_clients();
+    let leaves = 2usize;
+    let map = vfl::coordinator::ShardMap::new(n_clients, leaves);
+    let stream = vfl::coordinator::validate_streaming(&cfg).unwrap();
+
+    let root_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let root_addr = root_listener.local_addr().unwrap().to_string();
+
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        let built = build(&server_cfg, None).unwrap();
+        let mut parties = built.parties;
+        let aggregator = parties.remove(0); // the plain Aggregator
+        drop(parties);
+        let clock = StallClock::from_config(server_cfg.stall_timeout_ms, server_cfg.stall_cap_ms);
+        let out = tcp::serve_on(
+            root_listener,
+            aggregator,
+            &built.schedule,
+            n_clients,
+            clock,
+            server_cfg.rounds_in_flight,
+        )?;
+        Ok::<_, anyhow::Error>(summarize(&built.schedule, &built.test_labels, &out.notes))
+    });
+
+    // one relay thread per leaf, each on its own port
+    let mut leaf_addrs = Vec::new();
+    let mut leaf_threads = Vec::new();
+    for k in 0..leaves {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        leaf_addrs.push(listener.local_addr().unwrap().to_string());
+        let (start, end) = map.range(k);
+        let root_addr = root_addr.clone();
+        let stream = stream;
+        leaf_threads.push(std::thread::spawn(move || {
+            tcp::leaf_on(listener, &root_addr, k, start, end, &stream, false)
+        }));
+    }
+
+    // every client joins its owning leaf, not the root
+    let mut clients = Vec::new();
+    for client in 0..n_clients {
+        let cfg = cfg.clone();
+        let addr = leaf_addrs[map.owner(client as u16)].clone();
+        clients.push(std::thread::spawn(move || {
+            let built = build(&cfg, None).unwrap();
+            let mut parties = built.parties;
+            let party = parties.remove(client + 1);
+            drop(parties);
+            tcp::join(&addr, client, party)
+        }));
+    }
+
+    let summary = server.join().unwrap().unwrap();
+    for c in clients {
+        c.join().unwrap().unwrap();
+    }
+    for l in leaf_threads {
+        l.join().unwrap().unwrap();
+    }
+    assert_eq!(summary.losses, sim.losses, "leaf-process losses must match the flat sim run");
+    assert_eq!(summary.predictions, sim.predictions, "leaf-process predictions must match");
+    assert_eq!(summary.test_accuracy, sim.test_accuracy);
+}

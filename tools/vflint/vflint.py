@@ -32,12 +32,13 @@ checks, each with a per-check allowlist:
                      direction fails (unknown var, stale entry,
                      unregistered var in CI).
   frame-encode-rule  the message tag constants and the 22/19-byte chunk
-                     header widths are cross-checked between
-                     ``Msg::encode_into``, ``Msg::encoded_len``, the
-                     ``begin_*_chunk`` zero-copy builders, ``decode``,
-                     and the Table-2 accounting constants in
-                     ``coordinator/streaming.rs`` — the zero-copy path
-                     cannot silently diverge from ``Msg::encode()``.
+                     and 14-byte partial-sum header widths are
+                     cross-checked between ``Msg::encode_into``,
+                     ``Msg::encoded_len``, the ``begin_*`` zero-copy
+                     builders, ``decode``, and the Table-2 accounting
+                     constants in ``coordinator/streaming.rs`` — the
+                     zero-copy path cannot silently diverge from
+                     ``Msg::encode()``.
   panic-discipline   ``unwrap()`` / ``expect(`` are forbidden in
                      non-test ``net/``, ``coordinator/``, ``secagg/``
                      code except allowlisted sites with a stated reason.
@@ -758,6 +759,7 @@ def check_frame_encode(files, root):
     specs = [
         ("begin_masked_chunk", "MaskedChunk", "T_MASKED_CHUNK", "CHUNK_MSG_HEADER_BYTES"),
         ("begin_gradient_chunk", "GradientChunk", "T_GRADIENT_CHUNK", "GRAD_CHUNK_MSG_HEADER_BYTES"),
+        ("begin_partial_sum", "PartialSum", "T_PARTIAL_SUM", "PARTIAL_SUM_HEADER_BYTES"),
     ]
     for builder, variant, tag_const, stream_const in specs:
         bspan = fn_span(msgs, builder)
